@@ -1,0 +1,104 @@
+//! Regenerates the §III empirical-analysis figures (6, 7, 8) as CSV files
+//! plus terminal tables, and checks the four Observations hold.
+//!
+//!   cargo run --release --offline --example frontier_sweep
+
+use frontier_llm::config::{lookup, ParallelConfig};
+use frontier_llm::metrics::Csv;
+use frontier_llm::perf::PerfModel;
+
+fn main() -> anyhow::Result<()> {
+    let perf = PerfModel::default();
+
+    // ---- Fig 6: throughput vs TP (1.4B on 8 GPUs) ----
+    println!("Fig 6 — GPU throughput vs TP (1.4B, 8 GPUs)");
+    let m14 = lookup("1.4b").unwrap();
+    let mut fig6 = Csv::new(&["tp", "tflops_per_gpu", "pct_peak"]);
+    let mut prev = f64::INFINITY;
+    for tp in [1u32, 2, 4, 8] {
+        let cfg = ParallelConfig::default()
+            .with_tp(tp)
+            .with_dp(8 / tp)
+            .with_gbs(64)
+            .with_mbs(4);
+        let b = perf.evaluate(&m14, &cfg).unwrap();
+        println!("  TP={tp}: {:6.1} TFLOPS/GPU ({:5.2}%)", b.tflops_per_gpu, b.pct_peak);
+        fig6.rowf(&[tp as f64, b.tflops_per_gpu, b.pct_peak]);
+        assert!(b.pct_peak < prev, "Obs III.1 violated at TP={tp}");
+        prev = b.pct_peak;
+    }
+    fig6.write("results/fig6_tp.csv")?;
+    println!("  [Obs III.1 holds: larger TP deteriorates training performance]\n");
+
+    // ---- Fig 7: throughput vs GBS (22B and 1T) ----
+    println!("Fig 7 — GPU throughput vs global batch size");
+    let mut fig7 = Csv::new(&["model", "gbs", "tflops_per_gpu", "pct_peak"]);
+    for (name, tp, pp, gbs_list, zero1) in [
+        ("22b", 2u32, 8u32, vec![8u32, 16, 32, 64, 128, 256], false),
+        ("1t", 8, 64, vec![64, 128, 256, 512, 1024, 1600], true),
+    ] {
+        let model = lookup(name).unwrap();
+        println!("  {name} (tp{tp} pp{pp}):");
+        let mut prev = 0.0;
+        for gbs in gbs_list {
+            let cfg = ParallelConfig::default()
+                .with_tp(tp)
+                .with_pp(pp)
+                .with_gbs(gbs)
+                .with_zero1(zero1);
+            let b = perf.evaluate(&model, &cfg).unwrap();
+            println!("    GBS={gbs:>4}: {:6.1} TFLOPS/GPU ({:5.2}%)", b.tflops_per_gpu, b.pct_peak);
+            fig7.row(&[
+                name.to_string(),
+                gbs.to_string(),
+                format!("{}", b.tflops_per_gpu),
+                format!("{}", b.pct_peak),
+            ]);
+            assert!(b.pct_peak > prev, "Obs III.2 violated at {name} GBS={gbs}");
+            prev = b.pct_peak;
+        }
+    }
+    fig7.write("results/fig7_gbs.csv")?;
+    println!("  [Obs III.2 holds: larger GBS saturates the pipeline]\n");
+
+    // ---- Fig 8a: throughput vs PP at fixed GBS ----
+    println!("Fig 8a — throughput vs PP, GBS fixed at 128 (175B, tp8)");
+    let m175 = lookup("175b").unwrap();
+    let mut fig8a = Csv::new(&["pp", "tflops_per_gpu", "pct_peak"]);
+    let mut prev = f64::INFINITY;
+    for pp in [8u32, 12, 16, 24, 32] {
+        let cfg = ParallelConfig::default().with_tp(8).with_pp(pp).with_gbs(128);
+        let b = perf.evaluate(&m175, &cfg).unwrap();
+        println!("  PP={pp:>2}: {:6.1} TFLOPS/GPU ({:5.2}%)", b.tflops_per_gpu, b.pct_peak);
+        fig8a.rowf(&[pp as f64, b.tflops_per_gpu, b.pct_peak]);
+        assert!(b.pct_peak < prev, "Obs III.3 violated at PP={pp}");
+        prev = b.pct_peak;
+    }
+    fig8a.write("results/fig8a_pp_fixed.csv")?;
+    println!("  [Obs III.3 holds: deeper pipeline at fixed GBS loses throughput]\n");
+
+    // ---- Fig 8b: throughput vs PP with GBS scaled (bubble ratio fixed) ----
+    println!("Fig 8b — throughput vs PP, GBS scaled with PP (175B, tp8)");
+    let mut fig8b = Csv::new(&["pp", "gbs", "tflops_per_gpu", "pct_peak"]);
+    let mut series = Vec::new();
+    for (pp, gbs) in [(8u32, 128u32), (12, 192), (16, 256), (24, 384), (32, 512)] {
+        let cfg = ParallelConfig::default().with_tp(8).with_pp(pp).with_gbs(gbs);
+        let b = perf.evaluate(&m175, &cfg).unwrap();
+        println!(
+            "  PP={pp:>2} GBS={gbs:>3}: {:6.1} TFLOPS/GPU ({:5.2}%)",
+            b.tflops_per_gpu, b.pct_peak
+        );
+        fig8b.rowf(&[pp as f64, gbs as f64, b.tflops_per_gpu, b.pct_peak]);
+        series.push(b.pct_peak);
+    }
+    fig8b.write("results/fig8b_pp_scaled.csv")?;
+    let base = series[0];
+    assert!(
+        series.iter().all(|s| (s - base).abs() / base < 0.10),
+        "Obs III.4 violated: {series:?}"
+    );
+    println!("  [Obs III.4 holds: fixed PP/M ratio maintains throughput]\n");
+
+    println!("wrote results/fig6_tp.csv, fig7_gbs.csv, fig8a_pp_fixed.csv, fig8b_pp_scaled.csv");
+    Ok(())
+}

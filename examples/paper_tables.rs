@@ -1,0 +1,163 @@
+//! Prints every static table of the paper (I, II, V), the Fig 5 bandwidth
+//! matrix, the Fig 11 throughput comparison, and the Fig 12/13 scaling
+//! studies — the "everything at a glance" reproduction report.
+//!
+//!   cargo run --release --offline --example paper_tables
+
+use frontier_llm::config::{self, ParallelConfig};
+use frontier_llm::mem;
+use frontier_llm::metrics::{weak_scaling_efficiency, Csv};
+use frontier_llm::perf::PerfModel;
+use frontier_llm::topology::Machine;
+
+fn main() -> anyhow::Result<()> {
+    let perf = PerfModel::default();
+
+    println!("== Table I: GPT architecture zoo ==");
+    println!(
+        "{:>6} {:>8} {:>8} {:>7} {:>13} {:>13}",
+        "model", "layers", "hidden", "heads", "12Ld^2", "exact params"
+    );
+    for m in config::paper_zoo() {
+        println!(
+            "{:>6} {:>8} {:>8} {:>7} {:>13.3e} {:>13.3e}",
+            m.name, m.n_layers, m.hidden, m.n_heads,
+            m.paper_params() as f64, m.total_params() as f64
+        );
+    }
+
+    println!("\n== Table II: minimum training memory (fp16 + fp32 Adam) ==");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12}  paper",
+        "model", "params(6x)", "grads(4x)", "optim(4x)", "total(14x)"
+    );
+    for (name, n, paper) in [
+        ("22B", 22e9 as u64, "308 GB"),
+        ("175B", 175e9 as u64, "2.45 TB"),
+        ("1T", 1_000_000_000_000, "14 TB"),
+    ] {
+        let (p, g, o, t) = mem::table2_row(n);
+        let gb = |b: u64| format!("{:.0} GB", b as f64 / 1e9);
+        println!(
+            "{:>6} {:>12} {:>12} {:>12} {:>12}  {paper}",
+            name, gb(p), gb(g), gb(o), gb(t)
+        );
+    }
+
+    println!("\n== Fig 5: link bandwidth matrix (GB/s), node 0 + first GPU of node 1 ==");
+    let machine = Machine::new(2);
+    print!("      ");
+    for j in 0..9 {
+        print!("{j:>5}");
+    }
+    println!();
+    for (i, row) in machine.bandwidth_matrix(9).iter().enumerate() {
+        print!("GPU{i:<2} ");
+        for b in row {
+            print!("{b:>5.0}");
+        }
+        println!();
+    }
+    println!("(200 intra-card, 100 adjacent cards, 50 far cards, 25 inter-node)");
+
+    println!("\n== Table V + Fig 11: tuned recipes and achieved throughput ==");
+    println!(
+        "{:>6} {:>3} {:>3} {:>4} {:>6} {:>5} {:>6} {:>9} {:>9} {:>9}",
+        "model", "TP", "PP", "MBS", "GBS", "GPUs", "ZeRO", "paper", "model", "delta"
+    );
+    let mut fig11 = Csv::new(&["model", "paper_pct", "model_pct", "paper_tflops", "model_tflops"]);
+    for (r, paper_pct, paper_tflops) in config::fig11_recipes() {
+        let b = perf.evaluate(&r.model, &r.parallel).expect("recipe evaluates");
+        println!(
+            "{:>6} {:>3} {:>3} {:>4} {:>6} {:>5} {:>6} {:>8.2}% {:>8.2}% {:>+8.2}",
+            r.model.name,
+            r.parallel.tp,
+            r.parallel.pp,
+            r.parallel.mbs,
+            r.parallel.gbs,
+            r.gpus(),
+            r.parallel.zero1,
+            paper_pct,
+            b.pct_peak,
+            b.pct_peak - paper_pct
+        );
+        fig11.row(&[
+            r.model.name.clone(),
+            paper_pct.to_string(),
+            format!("{:.2}", b.pct_peak),
+            paper_tflops.to_string(),
+            format!("{:.1}", b.tflops_per_gpu),
+        ]);
+    }
+    fig11.write("results/fig11_throughput.csv")?;
+
+    // §V.B roofline: arithmetic intensity
+    for (r, _, _) in config::fig11_recipes().into_iter().take(2) {
+        let b = perf.evaluate(&r.model, &r.parallel).unwrap();
+        println!(
+            "   {} arithmetic intensity: {:.0} flops/byte (paper: 180+, compute-bound)",
+            r.model.name, b.arithmetic_intensity
+        );
+    }
+
+    // ---- Fig 12: weak scaling ----
+    println!("\n== Fig 12: weak scaling (per-replica GBS fixed) ==");
+    let mut fig12 = Csv::new(&["model", "gpus", "samples_per_sec", "efficiency_pct"]);
+    for (name, points) in [("175b", vec![128u32, 256, 512, 1024]), ("1t", vec![512, 1024, 2048, 3072])] {
+        let recipe = if name == "175b" { config::recipe_175b() } else { config::recipe_1t() };
+        let per_replica = recipe.parallel.gpus_per_replica();
+        let gbs_rep = recipe.parallel.gbs / recipe.parallel.dp;
+        let mut base: Option<(u32, f64)> = None;
+        println!("  {name} (GBS/replica = {gbs_rep}):");
+        for gpus in points {
+            let dp = gpus / per_replica;
+            if dp == 0 {
+                continue;
+            }
+            let cfg = recipe.parallel.clone().with_dp(dp).with_gbs(gbs_rep * dp);
+            let sps = perf.samples_per_sec(&recipe.model, &cfg).unwrap();
+            let eff = base.map(|b| weak_scaling_efficiency(b, (gpus, sps))).unwrap_or(100.0);
+            if base.is_none() {
+                base = Some((gpus, sps));
+            }
+            println!("    {gpus:>5} GPUs: {sps:>8.2} samples/s  eff {eff:>6.2}%  (paper: 100%)");
+            fig12.row(&[name.into(), gpus.to_string(), format!("{sps:.3}"), format!("{eff:.2}")]);
+        }
+    }
+    fig12.write("results/fig12_weak.csv")?;
+
+    // ---- Fig 13: strong scaling ----
+    println!("\n== Fig 13: strong scaling (total GBS fixed) ==");
+    let mut fig13 = Csv::new(&["model", "gpus", "samples_per_sec", "efficiency_pct"]);
+    for (name, gbs, points, paper_eff) in [
+        ("175b", 8000u32, vec![128u32, 256, 512, 1024], 89.93),
+        ("1t", 8016, vec![512, 1024, 2048, 3072], 87.05),
+    ] {
+        let recipe = if name == "175b" { config::recipe_175b() } else { config::recipe_1t() };
+        let per_replica = recipe.parallel.gpus_per_replica();
+        let mut base: Option<(u32, f64)> = None;
+        println!("  {name} (total GBS = {gbs}):");
+        let mut last_eff = 100.0;
+        for gpus in points {
+            let dp = gpus / per_replica;
+            if dp == 0 {
+                continue;
+            }
+            let adj_gbs = (gbs / dp) * dp; // keep divisible
+            let cfg = recipe.parallel.clone().with_dp(dp).with_gbs(adj_gbs);
+            let sps = perf.samples_per_sec(&recipe.model, &cfg).unwrap();
+            let eff = base.map(|b| weak_scaling_efficiency(b, (gpus, sps))).unwrap_or(100.0);
+            if base.is_none() {
+                base = Some((gpus, sps));
+            }
+            last_eff = eff;
+            println!("    {gpus:>5} GPUs: {sps:>8.2} samples/s  eff {eff:>6.2}%");
+            fig13.row(&[name.into(), gpus.to_string(), format!("{sps:.3}"), format!("{eff:.2}")]);
+        }
+        println!("    (paper strong-scaling efficiency at max GPUs: {paper_eff}%; ours: {last_eff:.2}%)");
+    }
+    fig13.write("results/fig13_strong.csv")?;
+
+    println!("\nwrote results/fig11_throughput.csv, fig12_weak.csv, fig13_strong.csv");
+    Ok(())
+}

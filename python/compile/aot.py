@@ -1,0 +1,184 @@
+"""AOT compiler: lower every stage entry point to HLO **text** artifacts.
+
+This is the only place Python touches the system: ``make artifacts`` runs it
+once, the rust runtime (``rust/src/runtime``) loads the text with
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact bundle layout (one directory per model x pipeline split x mbs):
+
+  artifacts/<cfg>-s<STAGES>-mb<MBS>/
+    meta.json             # shapes, param counts, FLOPs — rust reads this
+    stage<i>_init.hlo.txt # (key u32[2]) -> flat_params
+    stage<i>_fwd.hlo.txt
+    stage<i>_bwd.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(
+    spec: model.StageSpec,
+    mbs: int,
+    out_dir: pathlib.Path,
+    *,
+    use_flash: bool = True,
+    use_fused_xent: bool = True,
+) -> dict:
+    """Lower init/fwd/bwd for one stage; returns its meta entry."""
+    fns = model.make_stage_fns(
+        spec, use_flash=use_flash, use_fused_xent=use_fused_xent
+    )
+    flat, h, tok = model.example_inputs(spec, mbs)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    single = spec.n_stages == 1
+
+    if spec.has_head and single:
+        fwd_args = (flat, tok, tok)
+        bwd_args = (flat, tok, tok)
+    elif spec.has_head:
+        fwd_args = (flat, h, tok)
+        bwd_args = (flat, h, tok)
+    elif spec.has_embed:
+        fwd_args = (flat, tok)
+        bwd_args = (flat, tok, h)
+    else:
+        fwd_args = (flat, h)
+        bwd_args = (flat, h, h)
+
+    entries = {}
+    for name, fn, args in (
+        ("init", fns["init"], (key,)),
+        ("fwd", fns["fwd"], fwd_args),
+        ("bwd", fns["bwd"], bwd_args),
+    ):
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        fname = f"stage{spec.index}_{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        entries[name] = fname
+
+    return {
+        "index": spec.index,
+        "layer_start": spec.layer_start,
+        "layer_end": spec.layer_end,
+        "has_embed": spec.has_embed,
+        "has_head": spec.has_head,
+        "param_count": fns["n_params"],
+        "artifacts": entries,
+    }
+
+
+def build_bundle(
+    cfg_name: str,
+    n_stages: int,
+    mbs: int,
+    root: pathlib.Path,
+    *,
+    use_flash: bool = True,
+    use_fused_xent: bool = True,
+    force: bool = False,
+) -> pathlib.Path:
+    cfg = configs.get(cfg_name)
+    out_dir = root / f"{cfg.name}-s{n_stages}-mb{mbs}"
+    meta_path = out_dir / "meta.json"
+    if meta_path.exists() and not force:
+        print(f"[aot] {out_dir} up to date, skipping")
+        return out_dir
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    specs = model.make_stages(cfg, n_stages)
+    stages = [
+        lower_stage(
+            spec, mbs, out_dir, use_flash=use_flash, use_fused_xent=use_fused_xent
+        )
+        for spec in specs
+    ]
+
+    tokens_per_mb = mbs * cfg.seq
+    meta = {
+        "model": {
+            "name": cfg.name,
+            "n_layers": cfg.n_layers,
+            "hidden": cfg.hidden,
+            "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "total_params": cfg.total_params(),
+        },
+        "n_stages": n_stages,
+        "mbs": mbs,
+        "use_flash": use_flash,
+        "use_fused_xent": use_fused_xent,
+        "tokens_per_microbatch": tokens_per_mb,
+        "flops_per_microbatch": cfg.flops_per_token() * tokens_per_mb,
+        "stages": stages,
+    }
+    meta_path.write_text(json.dumps(meta, indent=2))
+    print(f"[aot] wrote {out_dir} ({n_stages} stages, mbs={mbs})")
+    return out_dir
+
+
+# Bundles `make artifacts` builds by default: what the rust tests, examples
+# and the e2e driver load.
+DEFAULT_BUNDLES = [
+    # (config, n_stages, mbs)
+    ("tiny", 1, 2),
+    ("tiny", 2, 2),
+    ("mini", 2, 2),
+    ("mini", 4, 1),
+    ("gpt-10m", 2, 1),
+    ("gpt-125m", 4, 1),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", help="model config name (see configs.py)")
+    ap.add_argument("--stages", type=int, default=1)
+    ap.add_argument("--mbs", type=int, default=1, help="micro-batch size")
+    ap.add_argument("--out", default="../artifacts", help="artifact root dir")
+    ap.add_argument("--no-flash", action="store_true")
+    ap.add_argument("--no-fused-xent", action="store_true")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.out)
+    kw = dict(
+        use_flash=not args.no_flash,
+        use_fused_xent=not args.no_fused_xent,
+        force=args.force,
+    )
+    if args.config:
+        build_bundle(args.config, args.stages, args.mbs, root, **kw)
+    else:
+        for cfg_name, n_stages, mbs in DEFAULT_BUNDLES:
+            build_bundle(cfg_name, n_stages, mbs, root, **kw)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

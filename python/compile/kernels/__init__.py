@@ -1,0 +1,12 @@
+"""Pallas kernels (L1) and their pure-jnp oracles.
+
+Everything here is build-time Python: kernels are lowered (interpret=True)
+into the HLO artifacts the rust runtime executes; nothing in this package
+runs on the request path.
+"""
+
+from .flash_attention import flash_attention
+from .layernorm import layernorm
+from .softmax_xent import softmax_xent
+
+__all__ = ["flash_attention", "layernorm", "softmax_xent"]

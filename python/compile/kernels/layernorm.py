@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: fused LayerNorm.
+
+Megatron-DeepSpeed ships a fused LayerNorm CUDA kernel (one of the ops the
+paper had to hipify for ROCm, §II.F.1).  The TPU expression: block rows into
+VMEM, compute the row mean/variance with lane-wise reductions, and apply
+scale+shift in the same pass — one HBM read and one HBM write per element
+instead of the separate mean/var/normalise passes of the naive lowering.
+
+Runs ``interpret=True`` (CPU PJRT).  Oracle: ``ref.layernorm_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, d)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mean
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    y = xc * inv * g_ref[...] + b_ref[...]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layernorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    *,
+    eps: float = 1e-5,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jax.Array:
+    """LayerNorm over the last axis of ``x`` (any leading shape)."""
+    if gamma.shape != x.shape[-1:] or beta.shape != x.shape[-1:]:
+        raise ValueError(
+            f"gamma/beta must be ({x.shape[-1]},), got {gamma.shape}/{beta.shape}"
+        )
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    n = 1
+    for s in lead:
+        n *= s
+    x2 = x.reshape(n, d)
+
+    block_rows = min(block_rows, max(n, 1))
+    n_pad = ((n + block_rows - 1) // block_rows) * block_rows
+    if n_pad != n:
+        x2 = jnp.pad(x2, [(0, n_pad - n), (0, 0)])
+
+    g2 = gamma.reshape(1, d)
+    b2 = beta.reshape(1, d)
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(n_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=True,
+    )(x2, g2, b2)
+
+    if n_pad != n:
+        out = out[:n]
+    return out.reshape(*lead, d)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: small, obviously-right lowerings
+with no tiling, no online recurrences, no padding tricks.  Every kernel in
+this package must match its `*_ref` to float32 tolerance (pytest +
+hypothesis sweeps in ``python/tests/``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive softmax attention over ``(batch, heads, seq, head_dim)``."""
+    *_, seq, head_dim = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(head_dim)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    """LayerNorm over the last axis, f32 internals."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return y.astype(x.dtype)
+
+
+def softmax_xent_ref(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-token cross-entropy; ``logits (n, V)``, ``targets (n,)``."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, targets[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - tgt

@@ -1,0 +1,117 @@
+"""L1 Pallas kernel: fused softmax + cross-entropy over the vocabulary.
+
+The LM-head loss is the other memory-bound hot-spot of GPT training: the
+naive lowering materialises ``(tokens, vocab)`` probabilities.  This kernel
+streams vocabulary blocks through VMEM with an online logsumexp (the same
+recurrence flash-attention uses for its softmax) and accumulates the target
+logit with a masked sum — no gather, no materialised probability matrix.
+
+loss[t] = logsumexp(logits[t, :]) - logits[t, target[t]]
+
+Runs ``interpret=True``.  Oracle: ``ref.softmax_xent_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_ROWS = 128
+DEFAULT_BLOCK_V = 512
+
+NEG_INF = -1e30
+
+
+def _xent_kernel(
+    logits_ref,
+    tgt_ref,
+    loss_ref,
+    m_ref,
+    l_ref,
+    t_ref,
+    *,
+    block_v: int,
+    num_v_blocks: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    s = logits_ref[...].astype(jnp.float32)  # (block_rows, block_v)
+    tgt = tgt_ref[...]  # (block_rows, 1) int32
+
+    col = j * block_v + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+
+    # Accumulate the target logit: exactly one column matches per row
+    # (padded rows carry target -1 and never match).
+    t_ref[...] += jnp.sum(jnp.where(col == tgt, s, 0.0), axis=-1, keepdims=True)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    l_ref[...] = jnp.exp(m_prev - m_new) * l_ref[...] + jnp.sum(
+        jnp.exp(s - m_new), axis=-1, keepdims=True
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == num_v_blocks - 1)
+    def _finalize():
+        lse = m_ref[...] + jnp.log(l_ref[...])
+        loss_ref[...] = (lse - t_ref[...]).astype(loss_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_v"))
+def softmax_xent(
+    logits: jax.Array,
+    targets: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_v: int = DEFAULT_BLOCK_V,
+) -> jax.Array:
+    """Per-token cross-entropy; ``logits (n, V)``, ``targets (n,) int32``."""
+    if logits.ndim != 2 or targets.shape != logits.shape[:1]:
+        raise ValueError(f"bad shapes: logits {logits.shape}, targets {targets.shape}")
+    n, v = logits.shape
+
+    block_rows = min(block_rows, max(n, 1))
+    block_v = min(block_v, max(v, 1))
+
+    n_pad = ((n + block_rows - 1) // block_rows) * block_rows
+    v_pad = ((v + block_v - 1) // block_v) * block_v
+    if n_pad != n or v_pad != v:
+        # Pad rows with target -1 (matches no column) and vocab columns with
+        # NEG_INF so they cannot win the max or contribute to the sum.
+        logits = jnp.pad(
+            logits, [(0, n_pad - n), (0, v_pad - v)], constant_values=NEG_INF
+        )
+        targets = jnp.pad(targets, [(0, n_pad - n)], constant_values=-1)
+
+    tgt2 = targets.reshape(n_pad, 1).astype(jnp.int32)
+
+    loss = pl.pallas_call(
+        functools.partial(
+            _xent_kernel, block_v=block_v, num_v_blocks=v_pad // block_v
+        ),
+        grid=(n_pad // block_rows, v_pad // block_v),
+        in_specs=[
+            pl.BlockSpec((block_rows, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+            pltpu.VMEM((block_rows, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, tgt2)
+
+    return loss.reshape(n_pad)[:n]

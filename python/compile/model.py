@@ -1,0 +1,339 @@
+"""L2: GPT-style decoder model in JAX, partitioned into pipeline stages.
+
+The paper trains GPT models (Table I) under Megatron-DeepSpeed's 3D
+parallelism.  The rust coordinator (L3) owns the parallelism; this module
+owns the *per-stage compute graphs* it schedules:
+
+  stage 0        : embedding (+ first span of layers)
+  stages 1..p-2  : spans of transformer layers
+  stage p-1      : last span + final LayerNorm + LM head + CE loss
+
+Every stage exposes three entry points, each lowered by ``aot.py`` to a
+standalone HLO-text artifact the rust runtime compiles once and executes on
+the request path:
+
+  init(key)                  -> flat_params
+  fwd(flat_params, x[, tgt]) -> y | loss
+  bwd(flat_params, x[, tgt], gy) -> (gflat, gx[, loss])
+
+Parameters travel as ONE flat f32 vector per stage (``ravel_pytree``
+ordering): the rust side then treats optimizer state, ZeRO-1 shards and
+gradient all-reduces as operations over contiguous buffers, exactly like
+DeepSpeed's flattened fp32 groups.
+
+Backward entry points RECOMPUTE the stage forward inside the vjp instead of
+consuming saved activations — this is activation checkpointing at stage
+granularity, matching the paper's recipe (Table V: checkpoint-activations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import ops
+from .configs import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# stage specification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One pipeline stage: which layers it owns and whether it carries the
+    embedding (first stage) and/or the head+loss (last stage)."""
+
+    cfg: ModelConfig
+    index: int
+    n_stages: int
+    layer_start: int
+    layer_end: int
+
+    @property
+    def has_embed(self) -> bool:
+        return self.index == 0
+
+    @property
+    def has_head(self) -> bool:
+        return self.index == self.n_stages - 1
+
+    @property
+    def n_layers(self) -> int:
+        return self.layer_end - self.layer_start
+
+
+def make_stages(cfg: ModelConfig, n_stages: int) -> List[StageSpec]:
+    spans = cfg.stage_layers(n_stages)
+    return [
+        StageSpec(cfg, i, n_stages, start, end)
+        for i, (start, end) in enumerate(spans)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.hidden
+    k = jax.random.split(key, 4)
+    std = 0.02
+    return {
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "w_qkv": std * jax.random.normal(k[0], (d, 3 * d), jnp.float32),
+        "b_qkv": jnp.zeros((3 * d,), jnp.float32),
+        "w_proj": std * jax.random.normal(k[1], (d, d), jnp.float32),
+        "b_proj": jnp.zeros((d,), jnp.float32),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w_fc": std * jax.random.normal(k[2], (d, 4 * d), jnp.float32),
+        "b_fc": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": std * jax.random.normal(k[3], (4 * d, d), jnp.float32),
+        "b_out": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_stage_params(key: jax.Array, spec: StageSpec) -> Params:
+    """Initialise one stage's parameters.
+
+    Partition-INDEPENDENT: every layer's key is derived by folding its
+    *global* layer index into the base key (embedding and head get fixed
+    sentinel indices), so re-partitioning the model across a different
+    number of pipeline stages reproduces bit-identical parameters — the
+    invariant that lets `tests/engine.rs` compare a 2-stage pipeline
+    against the fused single-stage baseline.
+    """
+    cfg = spec.cfg
+    params: Params = {
+        "layers": [
+            _init_layer(jax.random.fold_in(key, spec.layer_start + i), cfg)
+            for i in range(spec.n_layers)
+        ]
+    }
+    if spec.has_embed:
+        params["tok_emb"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1_000_000), (cfg.vocab, cfg.hidden), jnp.float32
+        )
+        params["pos_emb"] = 0.01 * jax.random.normal(
+            jax.random.fold_in(key, 1_000_001), (cfg.seq, cfg.hidden), jnp.float32
+        )
+    if spec.has_head:
+        params["lnf_g"] = jnp.ones((cfg.hidden,), jnp.float32)
+        params["lnf_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        params["w_head"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1_000_002), (cfg.hidden, cfg.vocab), jnp.float32
+        )
+    return params
+
+
+@functools.lru_cache(maxsize=None)
+def _stage_unravel(spec: StageSpec):
+    """(param_count, unravel_fn) for a stage, derived without running init."""
+    shapes = jax.eval_shape(
+        lambda: init_stage_params(jax.random.PRNGKey(0), spec)
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(shapes)
+    zeros = [jnp.zeros(l.shape, l.dtype) for l in leaves]
+    template = jax.tree_util.tree_unflatten(treedef, zeros)
+    flat, unravel = ravel_pytree(template)
+    return int(flat.size), unravel
+
+
+def stage_param_count(spec: StageSpec) -> int:
+    return _stage_unravel(spec)[0]
+
+
+# ---------------------------------------------------------------------------
+# forward compute
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(p: Params, x: jax.Array, cfg: ModelConfig, use_flash: bool) -> jax.Array:
+    """Pre-LN transformer layer: x + attn(ln1(x)); h + ffn(ln2(h))."""
+    b, s, d = x.shape
+    h = ops.layernorm(x, p["ln1_g"], p["ln1_b"])
+    qkv = h @ p["w_qkv"] + p["b_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t: jax.Array) -> jax.Array:
+        return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    attn_fn = ops.attention if use_flash else ops.attention_ref
+    a = attn_fn(heads(q), heads(k), heads(v))
+    a = a.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + a @ p["w_proj"] + p["b_proj"]
+
+    h = ops.layernorm(x, p["ln2_g"], p["ln2_b"])
+    h = ops.gelu(h @ p["w_fc"] + p["b_fc"])
+    return x + h @ p["w_out"] + p["b_out"]
+
+
+def _embed_fwd(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    s = tokens.shape[1]
+    h = jnp.take(p["tok_emb"], tokens, axis=0)
+    return h + p["pos_emb"][:s][None, :, :]
+
+
+def _head_loss_fwd(
+    p: Params, x: jax.Array, targets: jax.Array, use_fused_xent: bool
+) -> jax.Array:
+    """Final LN + LM head + mean next-token CE."""
+    h = ops.layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = h @ p["w_head"]  # (b, s, V)
+    b, s, v = logits.shape
+    flat_logits = logits.reshape(b * s, v)
+    flat_targets = targets.reshape(b * s)
+    if use_fused_xent:
+        loss = ops.softmax_xent(flat_logits, flat_targets)
+    else:
+        lf = flat_logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        tgt = jnp.take_along_axis(
+            lf, flat_targets[:, None].astype(jnp.int32), axis=-1
+        )[:, 0]
+        loss = lse - tgt
+    return jnp.mean(loss)
+
+
+def stage_apply(
+    spec: StageSpec,
+    params: Params,
+    x: jax.Array,
+    targets: jax.Array | None = None,
+    *,
+    use_flash: bool = True,
+    use_fused_xent: bool = True,
+) -> jax.Array:
+    """Run one stage: tokens->h for stage 0, h->h for middle, h->loss last."""
+    cfg = spec.cfg
+    h = _embed_fwd(params, x, cfg) if spec.has_embed else x
+    for lp in params["layers"]:
+        h = _layer_fwd(lp, h, cfg, use_flash)
+    if spec.has_head:
+        assert targets is not None, "last stage needs targets"
+        return _head_loss_fwd(params, h, targets, use_fused_xent)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_stage_fns(
+    spec: StageSpec, *, use_flash: bool = True, use_fused_xent: bool = True
+) -> Dict[str, Any]:
+    """Build the jit-able flat-signature functions for one stage.
+
+    Returns a dict with callables:
+      ``init(key_data: uint32[2]) -> (flat,)``
+      ``fwd(flat, x[, targets]) -> (y,) | (loss,)``
+      ``bwd``:
+        stage 0      : (flat, tokens, gy)       -> (gflat,)
+        middle       : (flat, x, gy)            -> (gflat, gx)
+        last (p > 1) : (flat, x, targets)       -> (gflat, gx, loss)
+        single stage : (flat, tokens, targets)  -> (gflat, loss)
+    """
+    n_params, unravel = _stage_unravel(spec)
+    kw = dict(use_flash=use_flash, use_fused_xent=use_fused_xent)
+
+    def init(key_data: jax.Array):
+        key = jax.random.wrap_key_data(key_data, impl="threefry2x32")
+        flat, _ = ravel_pytree(init_stage_params(key, spec))
+        return (flat,)
+
+    single = spec.n_stages == 1
+
+    if spec.has_head:
+
+        def fwd(flat, x, targets):
+            return (stage_apply(spec, unravel(flat), x, targets, **kw),)
+
+        if single:
+
+            def bwd(flat, tokens, targets):
+                def f(fl):
+                    return stage_apply(spec, unravel(fl), tokens, targets, **kw)
+
+                loss, pull = jax.vjp(f, flat)
+                (gflat,) = pull(jnp.float32(1.0))
+                return gflat, loss
+
+        else:
+
+            def bwd(flat, x, targets):
+                def f(fl, xx):
+                    return stage_apply(spec, unravel(fl), xx, targets, **kw)
+
+                loss, pull = jax.vjp(f, flat, x)
+                gflat, gx = pull(jnp.float32(1.0))
+                return gflat, gx, loss
+
+    else:
+
+        def fwd(flat, x):
+            return (stage_apply(spec, unravel(flat), x, **kw),)
+
+        if spec.has_embed:
+
+            def bwd(flat, tokens, gy):
+                def f(fl):
+                    return stage_apply(spec, unravel(fl), tokens, **kw)
+
+                _, pull = jax.vjp(f, flat)
+                (gflat,) = pull(gy)
+                return (gflat,)
+
+        else:
+
+            def bwd(flat, x, gy):
+                def f(fl, xx):
+                    return stage_apply(spec, unravel(fl), xx, **kw)
+
+                _, pull = jax.vjp(f, flat, x)
+                gflat, gx = pull(gy)
+                return gflat, gx
+
+    return {"init": init, "fwd": fwd, "bwd": bwd, "n_params": n_params}
+
+
+def full_loss(
+    cfg: ModelConfig,
+    stage_flats: List[jax.Array],
+    tokens: jax.Array,
+    targets: jax.Array,
+    n_stages: int,
+    **kw,
+) -> jax.Array:
+    """Whole-model loss from per-stage flat params (numerics cross-check)."""
+    specs = make_stages(cfg, n_stages)
+    h: jax.Array = tokens
+    for spec, flat in zip(specs, stage_flats):
+        _, unravel = _stage_unravel(spec)
+        if spec.has_head:
+            return stage_apply(spec, unravel(flat), h, targets, **kw)
+        h = stage_apply(spec, unravel(flat), h, **kw)
+    raise AssertionError("unreachable")
+
+
+def example_inputs(
+    spec: StageSpec, mbs: int
+) -> Tuple[jax.ShapeDtypeStruct, ...]:
+    """ShapeDtypeStructs for lowering each entry point of a stage."""
+    cfg = spec.cfg
+    f32, i32 = jnp.float32, jnp.int32
+    flat = jax.ShapeDtypeStruct((stage_param_count(spec),), f32)
+    h = jax.ShapeDtypeStruct((mbs, cfg.seq, cfg.hidden), f32)
+    tok = jax.ShapeDtypeStruct((mbs, cfg.seq), i32)
+    return flat, h, tok

@@ -1,0 +1,137 @@
+"""Differentiable wrappers around the L1 Pallas kernels.
+
+``pallas_call`` has no automatic autodiff rule, so each kernel is exposed
+through ``jax.custom_vjp``: the forward is the Pallas kernel, the backward
+recomputes what it needs with pure jnp — exactly the Flash-Attention
+strategy (recompute scores in the backward instead of storing the
+``seq x seq`` probability matrix), which is also what the paper's
+``checkpoint-activations=True`` recipe (Table V) does at stage level.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention as _flash_kernel
+from .kernels import layernorm as _ln_kernel
+from .kernels import softmax_xent as _xent_kernel
+from .kernels import ref as _ref
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal self-attention; forward runs the Pallas flash kernel."""
+    return _flash_kernel(q, k, v, causal=True)
+
+
+def _attention_fwd(q, k, v):
+    return attention(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    """FA-style backward: recompute the score matrix, never store it.
+
+    dV = P^T dO;  dP = dO V^T;  dS = P * (dP - rowsum(dP * P));
+    dQ = dS K * scale;  dK = dS^T Q * scale.
+    """
+    q, k, v = res
+    seq, head_dim = q.shape[-2], q.shape[-1]
+    scale = 1.0 / math.sqrt(head_dim)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    g = g.astype(jnp.float32)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, g)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", g, v.astype(jnp.float32))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k.astype(jnp.float32)) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(jnp.float32)) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Naive attention (materialised scores) — the paper's pre-FA baseline."""
+    return _ref.attention_ref(q, k, v, causal=True)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    return _ln_kernel(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + 1e-5)
+    xhat = (xf - mean) * inv
+    y = (xhat * gamma + beta).astype(x.dtype)
+    # zero-size sentinel carries the primal dtype (residuals must be arrays)
+    return y, (xhat, inv, gamma, jnp.zeros((0,), x.dtype))
+
+
+def _ln_bwd(res, g):
+    xhat, inv, gamma, dtype_sentinel = res
+    dtype = dtype_sentinel.dtype
+    g = g.astype(jnp.float32)
+    d = xhat.shape[-1]
+    dgamma = jnp.sum(g * xhat, axis=tuple(range(g.ndim - 1)))
+    dbeta = jnp.sum(g, axis=tuple(range(g.ndim - 1)))
+    gx = g * gamma
+    dx = inv * (
+        gx
+        - jnp.mean(gx, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gx * xhat, axis=-1, keepdims=True)
+    )
+    return dx.astype(dtype), dgamma, dbeta
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-token CE; forward streams vocab blocks through the Pallas kernel."""
+    return _xent_kernel(logits, targets)
+
+
+def _xent_fwd(logits, targets):
+    return softmax_xent(logits, targets), (logits, targets)
+
+
+def _xent_bwd(res, g):
+    logits, targets = res
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    dlogits = (p - onehot) * g[:, None]
+    return dlogits.astype(logits.dtype), None
+
+
+softmax_xent.defvjp(_xent_fwd, _xent_bwd)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (what Megatron's fused kernel computes)."""
+    return jax.nn.gelu(x, approximate=True)

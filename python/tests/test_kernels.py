@@ -1,0 +1,192 @@
+"""LayerNorm and fused softmax-xent Pallas kernels vs their oracles, plus
+the differentiable wrappers in ops.py (custom_vjp correctness against
+jax.grad of the reference implementations)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ops
+from compile.kernels import layernorm, softmax_xent
+from compile.kernels import ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+class TestLayerNorm:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        x, g, b = rand(rng, 33, 65), rand(rng, 65), rand(rng, 65)
+        np.testing.assert_allclose(
+            np.asarray(layernorm(x, g, b)),
+            np.asarray(ref.layernorm_ref(x, g, b)),
+            atol=1e-5,
+        )
+
+    def test_3d_input(self):
+        rng = np.random.default_rng(1)
+        x, g, b = rand(rng, 2, 17, 32), rand(rng, 32), rand(rng, 32)
+        np.testing.assert_allclose(
+            np.asarray(layernorm(x, g, b)),
+            np.asarray(ref.layernorm_ref(x, g, b)),
+            atol=1e-5,
+        )
+
+    def test_bad_gamma_shape(self):
+        rng = np.random.default_rng(2)
+        with pytest.raises(ValueError):
+            layernorm(rand(rng, 4, 8), rand(rng, 9), rand(rng, 8))
+
+    def test_output_stats(self):
+        # unit gamma, zero beta => each row ~N(0,1)
+        rng = np.random.default_rng(3)
+        x = rand(rng, 64, 256) * 5.0 + 3.0
+        y = np.asarray(layernorm(x, jnp.ones(256), jnp.zeros(256)))
+        np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.integers(1, 70),
+        d=st.integers(2, 130),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, rows, d, seed):
+        rng = np.random.default_rng(seed)
+        x, g, b = rand(rng, rows, d), rand(rng, d), rand(rng, d)
+        np.testing.assert_allclose(
+            np.asarray(layernorm(x, g, b, block_rows=16)),
+            np.asarray(ref.layernorm_ref(x, g, b)),
+            atol=2e-4,
+            rtol=2e-4,
+        )
+
+
+class TestSoftmaxXent:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        logits = rand(rng, 37, 101) * 3
+        tgt = jnp.asarray(rng.integers(0, 101, 37).astype(np.int32))
+        np.testing.assert_allclose(
+            np.asarray(softmax_xent(logits, tgt)),
+            np.asarray(ref.softmax_xent_ref(logits, tgt)),
+            atol=1e-4,
+        )
+
+    def test_blocked_vocab(self):
+        rng = np.random.default_rng(1)
+        logits = rand(rng, 16, 1000)
+        tgt = jnp.asarray(rng.integers(0, 1000, 16).astype(np.int32))
+        out = softmax_xent(logits, tgt, block_rows=8, block_v=128)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.softmax_xent_ref(logits, tgt)), atol=1e-4
+        )
+
+    def test_perfect_prediction_low_loss(self):
+        v = 64
+        logits = jnp.full((4, v), -20.0)
+        tgt = jnp.asarray([1, 5, 9, 13], dtype=jnp.int32)
+        logits = logits.at[jnp.arange(4), tgt].set(20.0)
+        loss = np.asarray(softmax_xent(logits, tgt))
+        assert (loss < 1e-3).all()
+
+    def test_uniform_logits_log_vocab(self):
+        v = 128
+        logits = jnp.zeros((3, v))
+        tgt = jnp.asarray([0, 64, 127], dtype=jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(softmax_xent(logits, tgt)), np.log(v), atol=1e-5
+        )
+
+    def test_extreme_logits_stable(self):
+        logits = jnp.asarray([[1e4, -1e4, 0.0]])
+        tgt = jnp.asarray([0], dtype=jnp.int32)
+        assert np.isfinite(np.asarray(softmax_xent(logits, tgt))).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 40),
+        v=st.integers(2, 600),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, v, seed):
+        rng = np.random.default_rng(seed)
+        logits = rand(rng, n, v) * 2
+        tgt = jnp.asarray(rng.integers(0, v, n).astype(np.int32))
+        out = softmax_xent(logits, tgt, block_rows=16, block_v=64)
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(ref.softmax_xent_ref(logits, tgt)),
+            atol=2e-4,
+            rtol=2e-4,
+        )
+
+
+class TestDifferentiableWrappers:
+    """ops.py custom_vjp gradients vs jax.grad of the references."""
+
+    def test_attention_grads(self):
+        rng = np.random.default_rng(0)
+        q, k, v = (rand(rng, 1, 2, 32, 8) for _ in range(3))
+
+        def kernel_loss(q, k, v):
+            return jnp.sum(ops.attention(q, k, v) ** 2)
+
+        def ref_loss(q, k, v):
+            return jnp.sum(ref.attention_ref(q, k, v, causal=True) ** 2)
+
+        gk = jax.grad(kernel_loss, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+    def test_layernorm_grads(self):
+        rng = np.random.default_rng(1)
+        x, g, b = rand(rng, 9, 33), rand(rng, 33), rand(rng, 33)
+
+        def kernel_loss(x, g, b):
+            return jnp.sum(jnp.sin(ops.layernorm(x, g, b)))
+
+        def ref_loss(x, g, b):
+            return jnp.sum(jnp.sin(ref.layernorm_ref(x, g, b)))
+
+        gk = jax.grad(kernel_loss, argnums=(0, 1, 2))(x, g, b)
+        gr = jax.grad(ref_loss, argnums=(0, 1, 2))(x, g, b)
+        for a, b_ in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
+
+    def test_xent_grads(self):
+        rng = np.random.default_rng(2)
+        logits = rand(rng, 11, 40)
+        tgt = jnp.asarray(rng.integers(0, 40, 11).astype(np.int32))
+
+        def kernel_loss(l):
+            return jnp.mean(ops.softmax_xent(l, tgt))
+
+        def ref_loss(l):
+            return jnp.mean(ref.softmax_xent_ref(l, tgt))
+
+        np.testing.assert_allclose(
+            np.asarray(jax.grad(kernel_loss)(logits)),
+            np.asarray(jax.grad(ref_loss)(logits)),
+            atol=1e-5,
+        )
+
+    def test_attention_grad_finite_diff(self):
+        # independent spot-check against numerical differentiation
+        rng = np.random.default_rng(3)
+        q, k, v = (rand(rng, 1, 1, 8, 4) for _ in range(3))
+
+        def f(q):
+            return float(jnp.sum(ops.attention(q, k, v)))
+
+        g = jax.grad(lambda q: jnp.sum(ops.attention(q, k, v)))(q)
+        eps = 1e-3
+        dq = np.zeros_like(np.asarray(q))
+        dq[0, 0, 3, 2] = eps
+        num = (f(q + dq) - f(q - dq)) / (2 * eps)
+        np.testing.assert_allclose(np.asarray(g)[0, 0, 3, 2], num, atol=1e-2)

@@ -1,0 +1,148 @@
+"""L2 model tests: stage partitioning, flat-parameter round trips,
+pipeline-vs-monolith gradient equality, and partition-independent init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model
+
+
+TINY = configs.get("tiny")
+
+
+def key_data(seed):
+    return jnp.asarray(np.array([0, seed], dtype=np.uint32))
+
+
+def init_stages(cfg, n_stages, seed=7):
+    specs = model.make_stages(cfg, n_stages)
+    fns = [model.make_stage_fns(s) for s in specs]
+    flats = [f["init"](key_data(seed))[0] for f in fns]
+    return specs, fns, flats
+
+
+def sample_batch(cfg, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (b, cfg.seq)).astype(np.int32))
+    tgt = jnp.asarray(rng.integers(0, cfg.vocab, (b, cfg.seq)).astype(np.int32))
+    return tok, tgt
+
+
+class TestConfigs:
+    def test_paper_zoo_matches_table1(self):
+        for name, layers, hidden, heads in [
+            ("22b", 48, 6144, 48),
+            ("175b", 96, 12288, 96),
+            ("1t", 128, 25600, 128),
+        ]:
+            c = configs.get(name)
+            assert (c.n_layers, c.hidden, c.n_heads) == (layers, hidden, heads)
+
+    def test_param_formula_close_to_12ld2(self):
+        for name in ["22b", "175b", "1t"]:
+            c = configs.get(name)
+            rel = abs(c.total_params() - c.paper_params()) / c.paper_params()
+            assert rel < 0.15, name
+
+    def test_stage_layers_partition(self):
+        c = configs.get("175b")
+        for p in [1, 3, 16, 96]:
+            spans = c.stage_layers(p)
+            assert spans[0][0] == 0 and spans[-1][1] == c.n_layers
+            assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+
+    def test_invalid_stage_counts(self):
+        with pytest.raises(ValueError):
+            TINY.stage_layers(0)
+        with pytest.raises(ValueError):
+            TINY.stage_layers(TINY.n_layers + 1)
+
+    def test_heads_divide_hidden(self):
+        with pytest.raises(ValueError):
+            configs.ModelConfig("bad", 2, 65, 2, 100, 32)
+
+
+class TestStageFns:
+    def test_param_counts_sum(self):
+        for n_stages in [1, 2]:
+            specs, fns, flats = init_stages(TINY, n_stages)
+            total = sum(f["n_params"] for f in fns)
+            assert total == TINY.total_params()
+            for f, flat in zip(fns, flats):
+                assert flat.size == f["n_params"]
+
+    def test_forward_shapes(self):
+        specs, fns, flats = init_stages(TINY, 2)
+        tok, tgt = sample_batch(TINY)
+        (h,) = fns[0]["fwd"](flats[0], tok)
+        assert h.shape == (2, TINY.seq, TINY.hidden)
+        (loss,) = fns[1]["fwd"](flats[1], h, tgt)
+        assert loss.shape == ()
+        assert float(loss) > 0
+
+    def test_pipeline_grads_match_monolith(self):
+        specs, fns, flats = init_stages(TINY, 2)
+        tok, tgt = sample_batch(TINY)
+        (h,) = fns[0]["fwd"](flats[0], tok)
+        g1, gh, loss = fns[1]["bwd"](flats[1], h, tgt)
+        (g0,) = fns[0]["bwd"](flats[0], tok, gh)
+
+        def floss(f0, f1):
+            return model.full_loss(TINY, [f0, f1], tok, tgt, 2)
+
+        g0_ref, g1_ref = jax.grad(floss, argnums=(0, 1))(flats[0], flats[1])
+        np.testing.assert_allclose(np.asarray(g0), np.asarray(g0_ref), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g1_ref), atol=1e-6)
+        np.testing.assert_allclose(float(loss), float(floss(flats[0], flats[1])), atol=1e-5)
+
+    def test_partition_independent_init(self):
+        # concatenated stage params must be identical for 1 and 2 stages
+        _, _, flats1 = init_stages(TINY, 1, seed=3)
+        _, _, flats2 = init_stages(TINY, 2, seed=3)
+        # NOTE: ravel order within a stage is embed/head + layers; compare
+        # through the loss instead of raw concatenation
+        tok, tgt = sample_batch(TINY)
+        l1 = model.full_loss(TINY, flats1, tok, tgt, 1)
+        l2 = model.full_loss(TINY, flats2, tok, tgt, 2)
+        np.testing.assert_allclose(float(l1), float(l2), atol=1e-5)
+
+    def test_different_seeds_different_params(self):
+        _, _, a = init_stages(TINY, 1, seed=1)
+        _, _, b = init_stages(TINY, 1, seed=2)
+        assert not np.allclose(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_single_stage_bwd_returns_loss(self):
+        specs, fns, flats = init_stages(TINY, 1)
+        tok, tgt = sample_batch(TINY)
+        gflat, loss = fns[0]["bwd"](flats[0], tok, tgt)
+        assert gflat.shape == flats[0].shape
+        (loss_fwd,) = fns[0]["fwd"](flats[0], tok, tgt)
+        np.testing.assert_allclose(float(loss), float(loss_fwd), atol=1e-5)
+
+    def test_flash_and_ref_attention_agree_in_model(self):
+        specs = model.make_stages(TINY, 1)
+        flat = model.make_stage_fns(specs[0])["init"](key_data(5))[0]
+        tok, tgt = sample_batch(TINY)
+        with_flash = model.make_stage_fns(specs[0], use_flash=True)["fwd"](flat, tok, tgt)
+        without = model.make_stage_fns(specs[0], use_flash=False)["fwd"](flat, tok, tgt)
+        np.testing.assert_allclose(float(with_flash[0]), float(without[0]), atol=1e-3)
+
+    def test_fused_and_naive_xent_agree_in_model(self):
+        specs = model.make_stages(TINY, 1)
+        flat = model.make_stage_fns(specs[0])["init"](key_data(5))[0]
+        tok, tgt = sample_batch(TINY)
+        fused = model.make_stage_fns(specs[0], use_fused_xent=True)["fwd"](flat, tok, tgt)
+        naive = model.make_stage_fns(specs[0], use_fused_xent=False)["fwd"](flat, tok, tgt)
+        np.testing.assert_allclose(float(fused[0]), float(naive[0]), atol=1e-4)
+
+    @settings(max_examples=6, deadline=None)
+    @given(n_stages=st.integers(1, 2), b=st.integers(1, 3), seed=st.integers(0, 1000))
+    def test_hypothesis_loss_reasonable(self, n_stages, b, seed):
+        # fresh params, random batch: loss must sit near log(vocab)
+        specs, fns, flats = init_stages(TINY, n_stages, seed=seed % 50 + 1)
+        tok, tgt = sample_batch(TINY, b=b, seed=seed)
+        loss = float(model.full_loss(TINY, flats, tok, tgt, n_stages))
+        assert 0.5 * np.log(TINY.vocab) < loss < 2.0 * np.log(TINY.vocab)

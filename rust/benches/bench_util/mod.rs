@@ -1,0 +1,66 @@
+//! Shared micro-bench harness for the paper-figure benches.
+//!
+//! The build is fully offline (no criterion); this provides the same
+//! essentials: warmup, repeated timed runs, mean/min/σ reporting, and a
+//! `row!`-style table printer so every bench regenerates its paper
+//! table/figure alongside the timing.
+
+use std::time::Instant;
+
+/// Timing summary of one benched closure.
+#[allow(dead_code)] // each harness=false bench links this module separately
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+    pub iters: u32,
+}
+
+#[allow(dead_code)]
+impl Timing {
+    pub fn per_iter_display(&self) -> String {
+        fmt_duration(self.mean_s)
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations then `iters` timed.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / samples.len() as f64;
+    let t = Timing { mean_s: mean, min_s: min, stddev_s: var.sqrt(), iters };
+    println!(
+        "bench {name:<40} {:>12}/iter (min {:>12}, σ {:>10}, n={iters})",
+        fmt_duration(t.mean_s),
+        fmt_duration(t.min_s),
+        fmt_duration(t.stddev_s)
+    );
+    t
+}
+
+/// Section header shared by all paper benches.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,93 @@
+//! Bench: the REAL execution engine's hot paths (EXPERIMENTS.md §Perf).
+//!
+//! Times the pieces that sit on the training step's critical path:
+//! collectives (ring vs naive all-reduce at gradient-buffer sizes), the
+//! sharded Adam step, schedule generation, and a short end-to-end
+//! training run over the AOT artifacts.
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use std::sync::Arc;
+use std::thread;
+
+use frontier_llm::collectives::{Algo, Group};
+use frontier_llm::config::ScheduleKind;
+use frontier_llm::coordinator::{train_with_bundle, EngineConfig};
+use frontier_llm::optim::{clip_grad_norm, Adam, AdamConfig};
+use frontier_llm::runtime::{Bundle, Runtime};
+use frontier_llm::schedule;
+
+fn bench_allreduce(n_ranks: usize, len: usize, algo: Algo, label: &str) {
+    // spawn ranks once; each iteration is one collective round
+    let group = Group::new(n_ranks);
+    bench(label, 2, 20, || {
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    g.all_reduce_sum(rank, &mut buf, algo);
+                    std::hint::black_box(buf[0]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+fn main() {
+    header("collectives: 4-rank all-reduce of a 4M-element grad buffer");
+    bench_allreduce(4, 4 << 20, Algo::Ring, "collectives::ring_4x16MB");
+    bench_allreduce(4, 4 << 20, Algo::Naive, "collectives::naive_4x16MB");
+    bench_allreduce(2, 1 << 20, Algo::Ring, "collectives::ring_2x4MB");
+
+    header("optimizer: Adam step + grad clip over 4M params");
+    let n = 4 << 20;
+    let mut params = vec![0.1f32; n];
+    let mut grads = vec![0.01f32; n];
+    let mut adam = Adam::new(AdamConfig::default(), n);
+    bench("optim::adam_step_4M", 2, 20, || {
+        adam.step(&mut params, &grads, 1.0);
+        std::hint::black_box(params[0]);
+    });
+    bench("optim::grad_clip_4M", 2, 50, || {
+        std::hint::black_box(clip_grad_norm(&mut grads, 1e9));
+    });
+
+    header("schedule generation");
+    bench("schedule::one_f1b_p64_m1600", 10, 200, || {
+        std::hint::black_box(schedule::one_f1b(64, 1600));
+    });
+    bench("schedule::validate_p16_m128", 10, 200, || {
+        let s = schedule::one_f1b(16, 128);
+        std::hint::black_box(s.validate().unwrap());
+    });
+
+    header("end-to-end engine: tiny GPT, 2-stage pipeline x dp2, 3 steps");
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("tiny-s2-mb2/meta.json").exists() {
+        let bundle = Arc::new(Bundle::load(&rt, root.join("tiny-s2-mb2")).unwrap());
+        let cfg = EngineConfig {
+            artifacts_root: root,
+            bundle: "tiny-s2-mb2".into(),
+            dp: 2,
+            schedule: ScheduleKind::OneF1B,
+            microbatches: 4,
+            steps: 3,
+            zero1: true,
+            ..Default::default()
+        };
+        bench("engine::train_3steps_tiny_pp2dp2", 1, 5, || {
+            std::hint::black_box(
+                train_with_bundle(&cfg, rt.clone(), bundle.clone()).unwrap(),
+            );
+        });
+    } else {
+        println!("(artifacts missing — run `make artifacts` to include the engine bench)");
+    }
+}

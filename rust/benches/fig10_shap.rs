@@ -1,0 +1,42 @@
+//! Bench: Figure 10 — SHAP sensitivity of the tuned hyper-parameters.
+//!
+//! Shape contracts: the batching/parallelism knobs (mbs/tp/pp) carry the
+//! attribution mass; zero1 and num_nodes trail (paper: "utilizing ZeRO-1
+//! has the least impact").
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::hpo::{self, shap, surrogate::Gp, SearchConfig};
+use frontier_llm::perf::PerfModel;
+
+fn main() {
+    header("Fig 10: mean |SHAP| per hyper-parameter");
+    let perf = PerfModel::default();
+    let result = hpo::run_search(
+        &perf,
+        &SearchConfig { n_evals: 128, n_init: 24, n_candidates: 256, seed: 7 },
+    );
+    let ranking = hpo::shap_ranking(&result, 96);
+    for (name, v) in &ranking {
+        let bar = "#".repeat((v * 8.0) as usize);
+        println!("{name:<12} {v:>7.3}  {bar}");
+    }
+    let names: Vec<&str> = ranking.iter().map(|(n, _)| n.as_str()).collect();
+    assert!(names[..3].contains(&"p:mbs"), "mbs must rank top-3: {names:?}");
+    assert!(names[3..].contains(&"p:zero1"), "zero1 must trail: {names:?}");
+    println!("[shape OK: mbs/tp/pp dominate, zero1 + num_nodes trail]");
+
+    // time the exact-SHAP computation itself
+    let x: Vec<Vec<f64>> = result.evals.iter().map(|e| e.point.features().to_vec()).collect();
+    let y = hpo::penalised_objectives(&result.evals);
+    let gp = Gp::fit(&x[..64], &y[..64]);
+    let bg: Vec<Vec<f64>> = x.iter().take(8).cloned().collect();
+    bench("fig10::exact_shap_one_point", 2, 50, || {
+        std::hint::black_box(shap::shapley_values_multi(&gp, &x[0], &bg));
+    });
+    bench("fig10::gp_fit_64pts", 2, 50, || {
+        std::hint::black_box(Gp::fit(&x[..64], &y[..64]));
+    });
+}

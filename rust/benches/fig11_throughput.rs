@@ -1,0 +1,49 @@
+//! Bench: Figure 11 — achieved GPU throughput for 22B / 175B / 1T, plus
+//! the §V.A Flash-Attention ablation.
+//!
+//! Shape contracts: ordering 22B > 175B > 1T; each recipe within 2 points
+//! of the paper; FA ablation shows a material gain ("up to 30%").
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::config::fig11_recipes;
+use frontier_llm::perf::PerfModel;
+
+fn main() {
+    header("Fig 11: MI250X throughput for the Table V recipes");
+    let perf = PerfModel::default();
+
+    let mut ours = Vec::new();
+    for (r, paper_pct, paper_tf) in fig11_recipes() {
+        let b = perf.evaluate(&r.model, &r.parallel).expect("recipe evaluates");
+        println!(
+            "{:>6}: paper {paper_pct:>6.2}% / {paper_tf:>5.1} TF   model {:>6.2}% / {:>5.1} TF   delta {:>+5.2}",
+            r.model.name, b.pct_peak, b.tflops_per_gpu, b.pct_peak - paper_pct
+        );
+        assert!((b.pct_peak - paper_pct).abs() < 2.0, "{} off target", r.model.name);
+        ours.push(b.pct_peak);
+    }
+    assert!(ours[0] > ours[1] && ours[1] > ours[2], "ordering must hold");
+    println!("[shape OK: 22B > 175B > 1T, all within 2 points of paper]");
+
+    header("§V.A ablation: Flash-Attention on/off");
+    for (r, _, _) in fig11_recipes() {
+        let with = perf.evaluate(&r.model, &r.parallel).unwrap().tflops_per_gpu;
+        let without = perf
+            .evaluate(&r.model, &r.parallel.clone().with_flash(false))
+            .unwrap()
+            .tflops_per_gpu;
+        println!(
+            "{:>6}: {with:>5.1} TF with FA2, {without:>5.1} TF without  (+{:.1}%)",
+            r.model.name,
+            100.0 * (with / without - 1.0)
+        );
+    }
+
+    let (r, _, _) = fig11_recipes().into_iter().next_back().unwrap();
+    bench("fig11::eval_1t_recipe", 10, 1000, || {
+        std::hint::black_box(perf.evaluate(&r.model, &r.parallel).unwrap());
+    });
+}

@@ -1,0 +1,49 @@
+//! Bench: Figure 12 — weak scaling (per-replica batch fixed).
+//!
+//! Shape contract: ~100% efficiency for both 175B (640/replica, up to
+//! 1024 GPUs) and 1T (1600/replica, up to 3072 GPUs).
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::config::{recipe_175b, recipe_1t};
+use frontier_llm::metrics::weak_scaling_efficiency;
+use frontier_llm::perf::PerfModel;
+
+fn main() {
+    let perf = PerfModel::default();
+    for (recipe, points, label) in [
+        (recipe_175b(), vec![128u32, 256, 512, 1024], "175b @ 640/replica"),
+        (recipe_1t(), vec![512, 1024, 2048, 3072], "1t @ 1600/replica"),
+    ] {
+        header(&format!("Fig 12: weak scaling, {label}"));
+        let per_replica = recipe.parallel.gpus_per_replica();
+        let gbs_rep = recipe.parallel.gbs / recipe.parallel.dp;
+        let mut base: Option<(u32, f64)> = None;
+        let mut last_eff = 100.0;
+        for gpus in points {
+            let dp = gpus / per_replica;
+            if dp == 0 {
+                continue;
+            }
+            let cfg = recipe.parallel.clone().with_dp(dp).with_gbs(gbs_rep * dp);
+            let sps = perf.samples_per_sec(&recipe.model, &cfg).unwrap();
+            let eff = base.map(|b| weak_scaling_efficiency(b, (gpus, sps))).unwrap_or(100.0);
+            if base.is_none() {
+                base = Some((gpus, sps));
+            }
+            println!("{gpus:>5} GPUs (dp {dp:>3}): {sps:>9.2} samples/s   eff {eff:>6.2}%");
+            last_eff = eff;
+        }
+        // paper: 100% weak scaling; the model must stay above 95%
+        assert!(last_eff > 95.0, "weak scaling efficiency too low: {last_eff:.2}%");
+        println!("[shape OK: ~100% weak scaling (paper: 100%)]");
+    }
+
+    let r = recipe_1t();
+    let cfg = r.parallel.clone().with_dp(6).with_gbs(1600 * 6);
+    bench("fig12::samples_per_sec_1t_3072gpu", 10, 1000, || {
+        std::hint::black_box(perf.samples_per_sec(&r.model, &cfg).unwrap());
+    });
+}

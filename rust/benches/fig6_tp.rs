@@ -1,0 +1,41 @@
+//! Bench: Figure 6 — GPU throughput vs tensor-parallel size (1.4B, 8 GPUs).
+//!
+//! Shape contract (Obs III.1): throughput decreases monotonically with TP,
+//! with the big cliff beyond TP=2 (off the 200 GB/s GCD pair).
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::config::{lookup, ParallelConfig};
+use frontier_llm::perf::{sim, PerfModel};
+
+fn main() {
+    header("Fig 6: throughput vs TP (1.4B model, 8 GPUs)");
+    let perf = PerfModel::default();
+    let model = lookup("1.4b").unwrap();
+
+    let mut series = Vec::new();
+    for tp in [1u32, 2, 4, 8] {
+        let cfg = ParallelConfig::default()
+            .with_tp(tp)
+            .with_dp(8 / tp)
+            .with_gbs(64)
+            .with_mbs(4);
+        let b = perf.evaluate(&model, &cfg).unwrap();
+        println!("TP={tp}: {:>6.1} TFLOPS/GPU ({:>5.2}% of peak)", b.tflops_per_gpu, b.pct_peak);
+        series.push((tp, b.pct_peak));
+    }
+    for w in series.windows(2) {
+        assert!(w[1].1 < w[0].1, "Obs III.1 must hold: {series:?}");
+    }
+    println!("[shape OK: monotone decreasing in TP]");
+
+    let cfg = ParallelConfig::default().with_tp(8).with_gbs(64).with_mbs(4);
+    bench("fig6::analytic_eval", 10, 2000, || {
+        std::hint::black_box(perf.evaluate(&model, &cfg).unwrap());
+    });
+    bench("fig6::des_eval", 2, 50, || {
+        std::hint::black_box(sim::simulate(&perf, &model, &cfg).unwrap());
+    });
+}

@@ -1,0 +1,48 @@
+//! Bench: Figure 7 — GPU throughput vs global batch size (22B and 1T).
+//!
+//! Shape contract (Obs III.2): throughput rises with GBS because more
+//! micro-batches shrink the pipeline bubble.
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::config::{lookup, ParallelConfig};
+use frontier_llm::perf::PerfModel;
+
+fn main() {
+    let perf = PerfModel::default();
+
+    for (name, tp, pp, gbs_list, zero1) in [
+        ("22b", 2u32, 8u32, vec![8u32, 16, 32, 64, 128, 256], false),
+        ("1t", 8, 64, vec![64, 128, 256, 512, 1024, 1600], true),
+    ] {
+        header(&format!("Fig 7 ({name}): throughput vs GBS, tp{tp} pp{pp}"));
+        let model = lookup(name).unwrap();
+        let mut prev = 0.0;
+        for &gbs in &gbs_list {
+            let cfg = ParallelConfig::default()
+                .with_tp(tp)
+                .with_pp(pp)
+                .with_gbs(gbs)
+                .with_zero1(zero1);
+            let b = perf.evaluate(&model, &cfg).unwrap();
+            let bubble = 100.0 * cfg.bubble_fraction();
+            println!(
+                "GBS={gbs:>4} (m={:>4}): {:>6.1} TFLOPS/GPU ({:>5.2}%)  bubble {bubble:>5.1}%",
+                cfg.microbatches(),
+                b.tflops_per_gpu,
+                b.pct_peak
+            );
+            assert!(b.pct_peak > prev, "Obs III.2 must hold at {name} GBS={gbs}");
+            prev = b.pct_peak;
+        }
+        println!("[shape OK: monotone increasing in GBS]");
+    }
+
+    let model = lookup("1t").unwrap();
+    let cfg = ParallelConfig::default().with_tp(8).with_pp(64).with_gbs(1600).with_zero1(true);
+    bench("fig7::eval_1t_gbs1600", 10, 500, || {
+        std::hint::black_box(perf.evaluate(&model, &cfg).unwrap());
+    });
+}

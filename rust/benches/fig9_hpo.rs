@@ -1,0 +1,57 @@
+//! Bench: Figure 9 — the DeepHyper-style search trajectory.
+//!
+//! Shape contracts: (a) OOM failures present but tapering over the
+//! trajectory, (b) the best-so-far objective is monotone and ends well
+//! above the random-warmup best.
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::hpo::{self, SearchConfig};
+use frontier_llm::perf::PerfModel;
+
+fn main() {
+    header("Fig 9: Bayesian search over Table IV (175B, 12-16 nodes)");
+    let perf = PerfModel::default();
+    let cfg = SearchConfig { n_evals: 128, n_init: 24, n_candidates: 256, seed: 7 };
+    let result = hpo::run_search(&perf, &cfg);
+
+    // condensed trajectory print (every 8th eval + all failures)
+    for (i, ev) in result.evals.iter().enumerate() {
+        if i % 16 == 0 {
+            println!(
+                "#{i:>3}: best so far {:>6.1} TFLOPS/GPU   (this: {})",
+                result.best_trajectory[i],
+                ev.objective
+                    .map(|v| format!("{v:.1}"))
+                    .unwrap_or_else(|| "OOM".into())
+            );
+        }
+    }
+    let q = result.failures_by_quarter();
+    println!("failures by quarter: {q:?}  total {}", result.n_failures());
+    assert!(result.n_failures() > 0, "space must contain OOMs");
+    assert!(q[0] >= q[3], "failures must taper: {q:?}");
+    let warmup_best = result.best_trajectory[cfg.n_init as usize - 1];
+    let final_best = *result.best_trajectory.last().unwrap();
+    println!("best: warmup {warmup_best:.1} -> final {final_best:.1} TFLOPS/GPU");
+    assert!(final_best >= warmup_best);
+    println!("[shape OK: tapering failures, improving best]");
+
+    bench("fig9::single_evaluation", 100, 5000, || {
+        let p = frontier_llm::hpo::space::Point {
+            pp: 16,
+            tp: 4,
+            mbs: 8,
+            gas: 10,
+            zero1: true,
+            nnodes: 16,
+        };
+        std::hint::black_box(hpo::evaluate_point(&perf, &p));
+    });
+    bench("fig9::full_search_64_evals", 0, 3, || {
+        let cfg = SearchConfig { n_evals: 64, n_init: 16, n_candidates: 128, seed: 3 };
+        std::hint::black_box(hpo::run_search(&perf, &cfg));
+    });
+}

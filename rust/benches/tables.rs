@@ -1,0 +1,70 @@
+//! Bench: Tables I, II and V.
+//!
+//! Regenerates the three static tables of the paper and times the
+//! underlying calculations (model-zoo parameter counting, the Table II
+//! memory accounting, and full perf-model evaluation of the Table V
+//! recipes).
+
+#[path = "bench_util/mod.rs"]
+mod bench_util;
+use bench_util::{bench, header};
+
+use frontier_llm::config::{fig11_recipes, paper_zoo};
+use frontier_llm::mem;
+use frontier_llm::perf::PerfModel;
+
+fn main() {
+    header("Table I: model zoo");
+    println!(
+        "{:>6} {:>8} {:>8} {:>7} {:>13} {:>13}",
+        "model", "layers", "hidden", "heads", "12Ld^2", "exact"
+    );
+    for m in paper_zoo() {
+        println!(
+            "{:>6} {:>8} {:>8} {:>7} {:>13.3e} {:>13.3e}",
+            m.name, m.n_layers, m.hidden, m.n_heads,
+            m.paper_params() as f64, m.total_params() as f64
+        );
+    }
+    bench("table1::param_counting", 10, 1000, || {
+        for m in paper_zoo() {
+            std::hint::black_box(m.total_params());
+        }
+    });
+
+    header("Table II: memory requirement");
+    for (name, n, want_gb) in [
+        ("22B", 22e9 as u64, 308.0),
+        ("175B", 175e9 as u64, 2450.0),
+        ("1T", 1_000_000_000_000u64, 14000.0),
+    ] {
+        let (p, g, o, t) = mem::table2_row(n);
+        println!(
+            "{name:>6}: params {:.0} GB, grads {:.0} GB, optim {:.0} GB, total {:.0} GB (paper {want_gb:.0} GB)",
+            p as f64 / 1e9, g as f64 / 1e9, o as f64 / 1e9, t as f64 / 1e9
+        );
+        assert!((t as f64 / 1e9 - want_gb).abs() / want_gb < 0.01, "Table II mismatch");
+    }
+
+    header("Table V: tuned recipes through the perf model");
+    let perf = PerfModel::default();
+    for (r, paper_pct, paper_tf) in fig11_recipes() {
+        let b = perf.evaluate(&r.model, &r.parallel).expect("recipe evaluates");
+        println!(
+            "{:>6}: paper {paper_pct:>6.2}% ({paper_tf:>5.1} TF)  model {:>6.2}% ({:>5.1} TF)",
+            r.model.name, b.pct_peak, b.tflops_per_gpu
+        );
+    }
+    bench("table5::recipe_evaluation", 10, 200, || {
+        for (r, _, _) in fig11_recipes() {
+            std::hint::black_box(perf.evaluate(&r.model, &r.parallel).unwrap());
+        }
+    });
+
+    // per-GPU memory model over the recipes (the HPO hot path)
+    bench("mem::per_gpu_all_recipes", 10, 1000, || {
+        for (r, _, _) in fig11_recipes() {
+            std::hint::black_box(mem::per_gpu(&r.model, &r.parallel));
+        }
+    });
+}

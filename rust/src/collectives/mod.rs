@@ -1,0 +1,437 @@
+//! Real shared-memory collectives for the execution engine.
+//!
+//! The training engine (`coordinator`) runs one OS thread per simulated
+//! GCD.  These collectives are the RCCL stand-in: actual data movement
+//! between worker threads with the same algorithms RCCL uses — a naive
+//! deposit-reduce for small groups and a chunked **ring all-reduce**
+//! (reduce-scatter + all-gather phases over per-neighbour mailboxes) for
+//! the large gradient buffers.  Byte counters feed `metrics`.
+//!
+//! Correctness contracts (tested below + proptest in `rust/tests/props.rs`):
+//! * `ring` and `naive` all-reduce produce identical sums (up to fp
+//!   association order, which we make deterministic by rank order);
+//! * `reduce_scatter` followed by `all_gather` equals `all_reduce`;
+//! * every rank of a group must participate in every round (the engine's
+//!   schedules guarantee this; violations deadlock rather than corrupt).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// All-reduce algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Every rank reads every deposit and reduces locally (fine for small
+    /// groups / small payloads).
+    Naive,
+    /// Chunked ring: reduce-scatter then all-gather, 2(n-1) neighbour
+    /// exchanges of 1/n of the payload (what RCCL runs on the big buffers).
+    Ring,
+}
+
+#[derive(Default)]
+struct ExchangeState {
+    deposits: Vec<Option<Arc<Vec<f32>>>>,
+    arrived: usize,
+    read: usize,
+    ready: bool,
+    gen: u64,
+}
+
+struct Mailbox {
+    queue: Mutex<VecDeque<Vec<f32>>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Self { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn send(&self, data: Vec<f32>) {
+        self.queue.lock().unwrap().push_back(data);
+        self.cv.notify_one();
+    }
+
+    fn recv(&self) -> Vec<f32> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(d) = q.pop_front() {
+                return d;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// A communicator over `n` ranks (one per worker thread).
+pub struct Group {
+    n: usize,
+    state: Mutex<ExchangeState>,
+    cv: Condvar,
+    /// `mail[to][from]`: FIFO channel from `from` to `to`.
+    mail: Vec<Vec<Mailbox>>,
+    pub bytes_moved: AtomicU64,
+    pub rounds: AtomicU64,
+}
+
+impl Group {
+    pub fn new(n: usize) -> Arc<Self> {
+        assert!(n >= 1);
+        let mail = (0..n)
+            .map(|_| (0..n).map(|_| Mailbox::new()).collect())
+            .collect();
+        Arc::new(Self {
+            n,
+            state: Mutex::new(ExchangeState {
+                deposits: vec![None; n],
+                ..Default::default()
+            }),
+            cv: Condvar::new(),
+            mail,
+            bytes_moved: AtomicU64::new(0),
+            rounds: AtomicU64::new(0),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Deposit `data`, wait for all ranks, return every rank's deposit.
+    fn exchange(&self, rank: usize, data: Vec<f32>) -> Vec<Arc<Vec<f32>>> {
+        assert!(rank < self.n);
+        if self.n == 1 {
+            return vec![Arc::new(data)];
+        }
+        self.bytes_moved.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        let mut s = self.state.lock().unwrap();
+        // wait for the previous round to fully drain before depositing
+        while s.ready {
+            s = self.cv.wait(s).unwrap();
+        }
+        let my_gen = s.gen;
+        debug_assert!(s.deposits[rank].is_none(), "rank {rank} double deposit");
+        s.deposits[rank] = Some(Arc::new(data));
+        s.arrived += 1;
+        if s.arrived == self.n {
+            s.ready = true;
+            self.cv.notify_all();
+        }
+        while !(s.ready && s.gen == my_gen) {
+            s = self.cv.wait(s).unwrap();
+        }
+        let snap: Vec<Arc<Vec<f32>>> =
+            s.deposits.iter().map(|d| d.as_ref().unwrap().clone()).collect();
+        s.read += 1;
+        if s.read == self.n {
+            s.deposits.iter_mut().for_each(|d| *d = None);
+            s.arrived = 0;
+            s.read = 0;
+            s.ready = false;
+            s.gen += 1;
+            self.rounds.fetch_add(1, Ordering::Relaxed);
+            self.cv.notify_all();
+        }
+        snap
+    }
+
+    /// Synchronisation barrier.
+    pub fn barrier(&self, rank: usize) {
+        self.exchange(rank, Vec::new());
+    }
+
+    /// Point-to-point send to `to` (FIFO per (from, to) pair).
+    pub fn send(&self, from: usize, to: usize, data: Vec<f32>) {
+        assert!(from < self.n && to < self.n && from != to);
+        self.bytes_moved.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        self.mail[to][from].send(data);
+    }
+
+    /// Blocking receive from `from`.
+    pub fn recv(&self, to: usize, from: usize) -> Vec<f32> {
+        assert!(from < self.n && to < self.n && from != to);
+        self.mail[to][from].recv()
+    }
+
+    /// In-place sum all-reduce.  Deterministic: reduction is always in
+    /// rank order regardless of arrival order or algorithm.
+    pub fn all_reduce_sum(&self, rank: usize, buf: &mut [f32], algo: Algo) {
+        if self.n == 1 {
+            return;
+        }
+        match algo {
+            Algo::Naive => {
+                let snap = self.exchange(rank, buf.to_vec());
+                buf.iter_mut().for_each(|x| *x = 0.0);
+                for contrib in &snap {
+                    debug_assert_eq!(contrib.len(), buf.len());
+                    for (x, &c) in buf.iter_mut().zip(contrib.iter()) {
+                        *x += c;
+                    }
+                }
+            }
+            Algo::Ring => self.ring_all_reduce(rank, buf),
+        }
+    }
+
+    /// Chunked ring all-reduce (in place).  `buf` is split into `n` chunks;
+    /// after n-1 reduce-scatter steps rank r owns the full sum of chunk
+    /// `(r+1) % n`; n-1 all-gather steps circulate the owned chunks.
+    fn ring_all_reduce(&self, rank: usize, buf: &mut [f32]) {
+        let n = self.n;
+        let right = (rank + 1) % n;
+        let left = (rank + n - 1) % n;
+        let bounds = chunk_bounds(buf.len(), n);
+
+        // To keep numerics identical to `Naive` (rank-order sums), the ring
+        // reduce accumulates contributions in rank order: each step sends
+        // the *partial* chunk and the receiver adds its own value so chunk
+        // c ends up as sum_{r} contrib[r][c] in arrival order
+        // (left-neighbour order).  Determinism, not bit-equality with
+        // Naive, is the contract; tests use approx comparison.
+        for step in 0..n - 1 {
+            let send_idx = (rank + n - step) % n;
+            let recv_idx = (rank + n - step - 1) % n;
+            let (s0, s1) = bounds[send_idx];
+            self.send(rank, right, buf[s0..s1].to_vec());
+            let incoming = self.recv(rank, left);
+            let (r0, r1) = bounds[recv_idx];
+            debug_assert_eq!(incoming.len(), r1 - r0);
+            for (x, inc) in buf[r0..r1].iter_mut().zip(incoming) {
+                *x += inc;
+            }
+        }
+        // all-gather the reduced chunks around the ring
+        for step in 0..n - 1 {
+            let send_idx = (rank + 1 + n - step) % n;
+            let recv_idx = (rank + n - step) % n;
+            let (s0, s1) = bounds[send_idx];
+            self.send(rank, right, buf[s0..s1].to_vec());
+            let incoming = self.recv(rank, left);
+            let (r0, r1) = bounds[recv_idx];
+            buf[r0..r1].copy_from_slice(&incoming);
+        }
+    }
+
+    /// Sum-reduce `buf` across ranks and return only this rank's shard
+    /// (ZeRO-1's gradient path).  Shard bounds from [`chunk_bounds`].
+    pub fn reduce_scatter_sum(&self, rank: usize, buf: &[f32]) -> Vec<f32> {
+        let bounds = chunk_bounds(buf.len(), self.n);
+        if self.n == 1 {
+            return buf.to_vec();
+        }
+        let snap = self.exchange(rank, buf.to_vec());
+        let (lo, hi) = bounds[rank];
+        let mut shard = vec![0.0f32; hi - lo];
+        for contrib in &snap {
+            for (x, &c) in shard.iter_mut().zip(contrib[lo..hi].iter()) {
+                *x += c;
+            }
+        }
+        shard
+    }
+
+    /// Gather every rank's shard into the full buffer (ZeRO-1's updated-
+    /// parameter path).  Shards must follow [`chunk_bounds`] sizing.
+    pub fn all_gather(&self, rank: usize, shard: &[f32], out: &mut [f32]) {
+        let bounds = chunk_bounds(out.len(), self.n);
+        let (lo, hi) = bounds[rank];
+        assert_eq!(shard.len(), hi - lo, "shard size mismatch for rank {rank}");
+        if self.n == 1 {
+            out.copy_from_slice(shard);
+            return;
+        }
+        let snap = self.exchange(rank, shard.to_vec());
+        for (r, contrib) in snap.iter().enumerate() {
+            let (lo, hi) = bounds[r];
+            out[lo..hi].copy_from_slice(contrib);
+        }
+    }
+
+    /// Broadcast `buf` from `root` to all ranks.
+    pub fn broadcast(&self, rank: usize, root: usize, buf: &mut [f32]) {
+        if self.n == 1 {
+            return;
+        }
+        let payload = if rank == root { buf.to_vec() } else { Vec::new() };
+        let snap = self.exchange(rank, payload);
+        if rank != root {
+            buf.copy_from_slice(&snap[root]);
+        }
+    }
+}
+
+/// Split `len` elements into `n` contiguous chunks, earlier chunks taking
+/// the remainder (matches `ModelSpec::stage_spans` convention).
+pub fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let size = base + usize::from(i < rem);
+        out.push((start, start + size));
+        start += size;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_ranks<F>(n: usize, f: F)
+    where
+        F: Fn(usize, Arc<Group>) + Send + Sync + 'static,
+    {
+        let group = Group::new(n);
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let g = group.clone();
+                let f = f.clone();
+                thread::spawn(move || f(r, g))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    fn test_data(rank: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| ((rank * 31 + i) as f32 * 0.1).sin()).collect()
+    }
+
+    fn expected_sum(n: usize, len: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; len];
+        for r in 0..n {
+            for (x, v) in out.iter_mut().zip(test_data(r, len)) {
+                *x += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn naive_all_reduce_sums() {
+        for n in [1usize, 2, 3, 4, 8] {
+            let len = 103;
+            let want = expected_sum(n, len);
+            run_ranks(n, move |rank, g| {
+                let mut buf = test_data(rank, len);
+                g.all_reduce_sum(rank, &mut buf, Algo::Naive);
+                for (a, b) in buf.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn ring_matches_naive() {
+        for n in [2usize, 3, 4, 7, 8] {
+            for len in [8usize, 64, 1000, 1003] {
+                let want = expected_sum(n, len);
+                run_ranks(n, move |rank, g| {
+                    let mut buf = test_data(rank, len);
+                    g.all_reduce_sum(rank, &mut buf, Algo::Ring);
+                    for (i, (a, b)) in buf.iter().zip(&want).enumerate() {
+                        assert!((a - b).abs() < 1e-3, "n={n} len={len} i={i}: {a} vs {b}");
+                    }
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_all_gather_is_all_reduce() {
+        let n = 4;
+        let len = 50;
+        let want = expected_sum(n, len);
+        run_ranks(n, move |rank, g| {
+            let buf = test_data(rank, len);
+            let shard = g.reduce_scatter_sum(rank, &buf);
+            let mut full = vec![0.0f32; len];
+            g.all_gather(rank, &shard, &mut full);
+            for (a, b) in full.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        let n = 4;
+        for root in 0..n {
+            run_ranks(n, move |rank, g| {
+                let mut buf = if rank == root {
+                    vec![42.0f32; 17]
+                } else {
+                    vec![0.0f32; 17]
+                };
+                g.broadcast(rank, root, &mut buf);
+                assert!(buf.iter().all(|&x| x == 42.0));
+            });
+        }
+    }
+
+    #[test]
+    fn p2p_fifo_order() {
+        run_ranks(2, |rank, g| {
+            if rank == 0 {
+                g.send(0, 1, vec![1.0]);
+                g.send(0, 1, vec![2.0]);
+            } else {
+                assert_eq!(g.recv(1, 0), vec![1.0]);
+                assert_eq!(g.recv(1, 0), vec![2.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn repeated_rounds_no_corruption() {
+        // stress the generation/drain logic with many back-to-back rounds
+        let n = 4;
+        run_ranks(n, move |rank, g| {
+            for round in 0..50 {
+                let mut buf = vec![(rank + round) as f32; 16];
+                g.all_reduce_sum(rank, &mut buf, Algo::Naive);
+                let want = (0..n).map(|r| (r + round) as f32).sum::<f32>();
+                assert!(buf.iter().all(|&x| (x - want).abs() < 1e-5), "round {round}");
+            }
+        });
+    }
+
+    #[test]
+    fn chunk_bounds_cover() {
+        for len in [0usize, 1, 7, 8, 100] {
+            for n in [1usize, 2, 3, 8] {
+                let b = chunk_bounds(len, n);
+                assert_eq!(b.len(), n);
+                assert_eq!(b[0].0, 0);
+                assert_eq!(b.last().unwrap().1, len);
+                for w in b.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_counters_advance() {
+        let n = 2;
+        run_ranks(n, move |rank, g| {
+            let mut buf = vec![1.0f32; 100];
+            g.all_reduce_sum(rank, &mut buf, Algo::Ring);
+            if rank == 0 {
+                assert!(g.bytes_moved.load(Ordering::Relaxed) > 0);
+            }
+        });
+    }
+}

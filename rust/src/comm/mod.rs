@@ -1,0 +1,263 @@
+//! Analytic collective-communication cost model (α–β) on the Frontier
+//! topology.
+//!
+//! Every communication term of the paper's analysis is priced here:
+//! the per-layer TP all-reduces (§III.A), the PP activation sends, and the
+//! per-step DP gradient reduction (plain all-reduce, or ZeRO-1's
+//! reduce-scatter + all-gather pair, §II.D).
+//!
+//! Algorithm selection follows RCCL practice and the paper's observation
+//! (§II.E) that "tensor parallel training across multiple nodes requires
+//! slow tree-like allreduce": node-local groups use ring collectives on
+//! the Infinity Fabric; groups spanning nodes use a hierarchical scheme
+//! (node-local ring + inter-node ring over node leaders).
+
+use crate::topology::{GpuId, LinkKind, Machine, GPUS_PER_NODE};
+
+/// Which collective algorithm a cost was computed with (for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Ring,
+    Tree,
+    Hierarchical,
+}
+
+/// The α–β cost model bound to a machine.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    pub machine: Machine,
+    /// Fixed software overhead per collective call (RCCL launch, ~µs).
+    pub launch_overhead: f64,
+    /// Fraction of the analytic ring bound RCCL sustains in practice
+    /// (protocol overhead, chunking, bidirectional contention).
+    pub ring_efficiency: f64,
+}
+
+impl CommModel {
+    pub fn new(machine: Machine) -> Self {
+        Self { machine, launch_overhead: 5.0e-6, ring_efficiency: 0.55 }
+    }
+
+    /// Point-to-point transfer time.
+    pub fn p2p(&self, from: GpuId, to: GpuId, bytes: u64) -> f64 {
+        let link = self.machine.link(from, to);
+        if link == LinkKind::Local {
+            return 0.0;
+        }
+        link.latency() + bytes as f64 / link.bandwidth()
+    }
+
+    /// Ring all-reduce: `2(n-1)/n` traversals of the slowest ring link.
+    pub fn ring_allreduce(&self, group: &[GpuId], bytes: u64) -> f64 {
+        let n = group.len() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let link = self.machine.ring_bottleneck(group);
+        let steps = 2.0 * (n - 1.0);
+        self.launch_overhead
+            + steps * link.latency()
+            + (2.0 * (n - 1.0) / n) * bytes as f64
+                / (link.bandwidth() * self.ring_efficiency)
+    }
+
+    /// Tree all-reduce (reduce to root + broadcast): `2 log2(n)` rounds of
+    /// the full payload over the slowest link in the group.
+    pub fn tree_allreduce(&self, group: &[GpuId], bytes: u64) -> f64 {
+        let n = group.len() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let link = self.worst_link(group);
+        let rounds = 2.0 * n.log2().ceil();
+        self.launch_overhead + rounds * (link.latency() + bytes as f64 / link.bandwidth())
+    }
+
+    /// Hierarchical all-reduce for node-spanning groups:
+    /// node-local ring reduce-scatter, inter-node ring all-reduce over node
+    /// leaders on `bytes / local`, node-local ring all-gather.
+    pub fn hierarchical_allreduce(&self, group: &[GpuId], bytes: u64) -> f64 {
+        let (leaders, max_local) = self.node_partition(group);
+        if leaders.len() <= 1 {
+            return self.ring_allreduce(group, bytes);
+        }
+        let local_bytes = bytes;
+        let mut t = 0.0;
+        if max_local > 1 {
+            // reduce-scatter + all-gather inside the node: each is
+            // (l-1)/l of the payload over the intra-node fabric
+            let l = max_local as f64;
+            let link = LinkKind::IntraNode;
+            let each = (l - 1.0) / l * local_bytes as f64 / link.bandwidth()
+                + (l - 1.0) * link.latency();
+            t += 2.0 * each + self.launch_overhead;
+        }
+        let shard = bytes / max_local.max(1) as u64;
+        t += self.ring_allreduce(&leaders, shard);
+        t
+    }
+
+    /// All-reduce with automatic algorithm choice; returns (time, algo).
+    pub fn allreduce(&self, group: &[GpuId], bytes: u64) -> (f64, Algo) {
+        if group.len() <= 1 {
+            return (0.0, Algo::Ring);
+        }
+        if !self.machine.spans_nodes(group) {
+            (self.ring_allreduce(group, bytes), Algo::Ring)
+        } else if group.len() as u32 <= 2 * GPUS_PER_NODE {
+            // small node-spanning groups (e.g. TP=16): tree over the NIC —
+            // the slow case §II.E warns about
+            (self.tree_allreduce(group, bytes), Algo::Tree)
+        } else {
+            (self.hierarchical_allreduce(group, bytes), Algo::Hierarchical)
+        }
+    }
+
+    /// Ring all-gather of `bytes` total output: `(n-1)/n` traversals.
+    pub fn all_gather(&self, group: &[GpuId], bytes: u64) -> f64 {
+        let n = group.len() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let link = self.machine.ring_bottleneck(group);
+        self.launch_overhead
+            + (n - 1.0) * link.latency()
+            + ((n - 1.0) / n) * bytes as f64 / (link.bandwidth() * self.ring_efficiency)
+    }
+
+    /// Ring reduce-scatter: same wire cost as all-gather.
+    pub fn reduce_scatter(&self, group: &[GpuId], bytes: u64) -> f64 {
+        self.all_gather(group, bytes)
+    }
+
+    /// Broadcast (tree) of the full payload.
+    pub fn broadcast(&self, group: &[GpuId], bytes: u64) -> f64 {
+        let n = group.len() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let link = self.worst_link(group);
+        let rounds = n.log2().ceil();
+        self.launch_overhead + rounds * (link.latency() + bytes as f64 / link.bandwidth())
+    }
+
+    /// DP gradient synchronisation per step (§II.D): ZeRO-1 replaces the
+    /// all-reduce with reduce-scatter (grad shards) + all-gather (updated
+    /// params) — same wire volume, so ZeRO-1 is memory relief, not a
+    /// throughput lever (matches its last-place SHAP ranking, Fig 10).
+    pub fn dp_grad_sync(&self, group: &[GpuId], bytes: u64, zero1: bool) -> f64 {
+        if group.len() <= 1 {
+            return 0.0;
+        }
+        if zero1 {
+            if self.machine.spans_nodes(group) {
+                // hierarchical RS+AG ≈ hierarchical all-reduce wire cost
+                self.hierarchical_allreduce(group, bytes)
+            } else {
+                self.reduce_scatter(group, bytes) + self.all_gather(group, bytes)
+            }
+        } else {
+            self.allreduce(group, bytes).0
+        }
+    }
+
+    fn worst_link(&self, group: &[GpuId]) -> LinkKind {
+        let mut worst = LinkKind::IntraCard;
+        for (i, &a) in group.iter().enumerate() {
+            for &b in &group[i + 1..] {
+                let l = self.machine.link(a, b);
+                if l < worst {
+                    worst = l;
+                }
+            }
+        }
+        worst
+    }
+
+    /// Split a group by node; returns (one leader per node, max GPUs/node).
+    fn node_partition(&self, group: &[GpuId]) -> (Vec<GpuId>, u32) {
+        let mut leaders: Vec<GpuId> = Vec::new();
+        let mut counts: Vec<(u32, u32)> = Vec::new(); // (node, count)
+        for &g in group {
+            let node = self.machine.node_of(g);
+            match counts.iter_mut().find(|(n, _)| *n == node) {
+                Some((_, c)) => *c += 1,
+                None => {
+                    counts.push((node, 1));
+                    leaders.push(g);
+                }
+            }
+        }
+        let max_local = counts.iter().map(|&(_, c)| c).max().unwrap_or(1);
+        (leaders, max_local)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(nodes: u32) -> CommModel {
+        CommModel::new(Machine::new(nodes))
+    }
+
+    #[test]
+    fn tp2_beats_tp4_beats_tp8_per_byte() {
+        // §III.A: TP=2 (intra-card) < TP=4/8 (intra-node) < TP>8 (NIC)
+        let c = model(4);
+        let bytes = 64 << 20;
+        let t2 = c.ring_allreduce(&[0, 1], bytes);
+        let t4 = c.ring_allreduce(&[0, 1, 2, 3], bytes);
+        let t8 = c.ring_allreduce(&(0..8).collect::<Vec<_>>(), bytes);
+        let (t16, algo) = c.allreduce(&(0..16).collect::<Vec<_>>(), bytes);
+        assert!(t2 < t4 && t4 < t8 && t8 < t16);
+        assert_eq!(algo, Algo::Tree);
+    }
+
+    #[test]
+    fn ring_cost_scales_with_bytes() {
+        let c = model(1);
+        let g: Vec<u32> = (0..4).collect();
+        let t1 = c.ring_allreduce(&g, 1 << 20);
+        let t2 = c.ring_allreduce(&g, 1 << 24);
+        assert!(t2 > 5.0 * t1);
+    }
+
+    #[test]
+    fn singleton_group_free() {
+        let c = model(1);
+        assert_eq!(c.ring_allreduce(&[3], 1 << 20), 0.0);
+        assert_eq!(c.allreduce(&[3], 1 << 20).0, 0.0);
+        assert_eq!(c.dp_grad_sync(&[3], 1 << 20, true), 0.0);
+    }
+
+    #[test]
+    fn zero1_wire_cost_close_to_allreduce() {
+        // Fig 10: zero1 is the least-impactful knob — its comm cost is
+        // within ~25% of the plain all-reduce.
+        let c = model(1);
+        let g: Vec<u32> = (0..8).collect();
+        let bytes = 256 << 20;
+        let ar = c.dp_grad_sync(&g, bytes, false);
+        let z = c.dp_grad_sync(&g, bytes, true);
+        assert!((z - ar).abs() / ar < 0.25, "ar={ar} zero1={z}");
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_across_nodes() {
+        let c = model(8);
+        let g: Vec<u32> = (0..64).collect();
+        let bytes = 1 << 30;
+        let flat = c.ring_allreduce(&g, bytes);
+        let hier = c.hierarchical_allreduce(&g, bytes);
+        assert!(hier < flat, "hier={hier} flat={flat}");
+    }
+
+    #[test]
+    fn p2p_intercard_cheaper_than_internode() {
+        let c = model(2);
+        let bytes = 16 << 20;
+        assert!(c.p2p(0, 1, bytes) < c.p2p(0, 8, bytes));
+        assert_eq!(c.p2p(5, 5, bytes), 0.0);
+    }
+}

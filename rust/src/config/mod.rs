@@ -1,0 +1,10 @@
+//! Configuration layer: model zoo (Table I), parallelism strategy
+//! (Table III tunables), and the paper's tuned recipes (Table V).
+
+pub mod model;
+pub mod parallel;
+pub mod recipes;
+
+pub use model::{exec_zoo, lookup, paper_zoo, ModelSpec};
+pub use parallel::{ParallelConfig, Precision, ScheduleKind};
+pub use recipes::{fig11_recipes, recipe_175b, recipe_1t, recipe_22b, Recipe};

@@ -1,0 +1,237 @@
+//! Parallelism / training configuration (paper Table III's tunables).
+//!
+//! One `ParallelConfig` captures a full distribution strategy: the 3D
+//! decomposition (TP x PP x DP), micro-batching, the pipeline schedule, and
+//! the memory/software options the paper tunes (ZeRO-1, flash attention,
+//! activation checkpointing, precision).
+
+
+/// Pipeline schedule flavours discussed in §II.C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// GPipe: all-forward then all-backward, bubble `(p-1)/m` *twice*
+    /// (fill + drain on both passes collapse to `(p-1)` fwd + `(p-1)` bwd slots).
+    GPipe,
+    /// PipeDream-style one-forward-one-backward with flush (what
+    /// DeepSpeed's pipeline engine implements; the paper's choice, §V.A).
+    OneF1B,
+    /// 1F1B with `v` model chunks interleaved per GPU: bubble `(p-1)/(m v)`.
+    Interleaved1F1B { v: u32 },
+}
+
+impl ScheduleKind {
+    /// Virtual-chunk multiplicity `v` (1 except for interleaving).
+    pub fn chunks(&self) -> u32 {
+        match self {
+            ScheduleKind::Interleaved1F1B { v } => *v,
+            _ => 1,
+        }
+    }
+
+    /// Idle fraction of the steady-state pipeline (§II.C / §III.B).
+    pub fn bubble_fraction(&self, p: u32, m: u32) -> f64 {
+        assert!(p >= 1 && m >= 1);
+        let p = p as f64;
+        let m = m as f64;
+        match self {
+            // fill+drain of both passes: bubble time = (p-1)(tf+tb),
+            // total = (m + p - 1)(tf+tb)
+            ScheduleKind::GPipe | ScheduleKind::OneF1B => (p - 1.0) / (m + p - 1.0),
+            ScheduleKind::Interleaved1F1B { v } => {
+                let v = *v as f64;
+                let bubble = (p - 1.0) / v;
+                bubble / (m + bubble)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp16,
+    Bf16,
+    Fp32,
+}
+
+impl Precision {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Precision::Fp16 | Precision::Bf16 => 2,
+            Precision::Fp32 => 4,
+        }
+    }
+}
+
+/// A complete distribution strategy (Table III tunables + fixed choices).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelConfig {
+    /// Tensor-parallel group size (within-layer sharding, §II.B).
+    pub tp: u32,
+    /// Pipeline-parallel stages (layer-dimension sharding, §II.C).
+    pub pp: u32,
+    /// Data-parallel replica count.
+    pub dp: u32,
+    /// Micro-batch size per pipeline slot (samples).
+    pub mbs: u32,
+    /// Global batch size (samples across all replicas per step).
+    pub gbs: u32,
+    /// ZeRO-1: shard optimizer states across the DP group (§II.D).
+    pub zero1: bool,
+    /// Flash-Attention v2 (§V.A: up to 30% throughput gain).
+    pub flash_attention: bool,
+    /// Activation checkpointing (Table V: always on for the big runs).
+    pub checkpoint_activations: bool,
+    pub precision: Precision,
+    pub schedule: ScheduleKind,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        Self {
+            tp: 1,
+            pp: 1,
+            dp: 1,
+            mbs: 1,
+            gbs: 1,
+            zero1: false,
+            flash_attention: true,
+            checkpoint_activations: true,
+            precision: Precision::Fp16,
+            schedule: ScheduleKind::OneF1B,
+        }
+    }
+}
+
+impl ParallelConfig {
+    /// GPUs per model replica.
+    pub fn gpus_per_replica(&self) -> u32 {
+        self.tp * self.pp
+    }
+
+    /// Total GPUs engaged.
+    pub fn world_size(&self) -> u32 {
+        self.tp * self.pp * self.dp
+    }
+
+    /// Micro-batches per replica per step (`m` in the bubble formulas);
+    /// equals DeepSpeed's gradient-accumulation steps.
+    pub fn microbatches(&self) -> u32 {
+        let per_replica = self.gbs / self.dp;
+        per_replica / self.mbs
+    }
+
+    /// A config is well-formed when the batch factorisation is exact.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tp == 0 || self.pp == 0 || self.dp == 0 || self.mbs == 0 || self.gbs == 0 {
+            return Err("all sizes must be >= 1".into());
+        }
+        if self.gbs % self.dp != 0 {
+            return Err(format!("gbs {} not divisible by dp {}", self.gbs, self.dp));
+        }
+        let per_replica = self.gbs / self.dp;
+        if per_replica % self.mbs != 0 {
+            return Err(format!(
+                "per-replica batch {per_replica} not divisible by mbs {}",
+                self.mbs
+            ));
+        }
+        if self.microbatches() == 0 {
+            return Err("at least one micro-batch per step required".into());
+        }
+        if let ScheduleKind::Interleaved1F1B { v } = self.schedule {
+            if v == 0 {
+                return Err("interleave chunks must be >= 1".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Paper §V.A: "the number of micro-batches must equal or exceed the
+    /// number of pipeline stages" for saturation.
+    pub fn pipeline_saturated(&self) -> bool {
+        self.microbatches() >= self.pp
+    }
+
+    pub fn bubble_fraction(&self) -> f64 {
+        self.schedule.bubble_fraction(self.pp, self.microbatches())
+    }
+
+    // ----- builder-style helpers (used heavily by sweeps/benches) -----
+
+    pub fn with_tp(mut self, tp: u32) -> Self {
+        self.tp = tp;
+        self
+    }
+    pub fn with_pp(mut self, pp: u32) -> Self {
+        self.pp = pp;
+        self
+    }
+    pub fn with_dp(mut self, dp: u32) -> Self {
+        self.dp = dp;
+        self
+    }
+    pub fn with_mbs(mut self, mbs: u32) -> Self {
+        self.mbs = mbs;
+        self
+    }
+    pub fn with_gbs(mut self, gbs: u32) -> Self {
+        self.gbs = gbs;
+        self
+    }
+    pub fn with_zero1(mut self, z: bool) -> Self {
+        self.zero1 = z;
+        self
+    }
+    pub fn with_schedule(mut self, s: ScheduleKind) -> Self {
+        self.schedule = s;
+        self
+    }
+    pub fn with_flash(mut self, f: bool) -> Self {
+        self.flash_attention = f;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbatch_accounting() {
+        let c = ParallelConfig::default().with_dp(4).with_gbs(128).with_mbs(2);
+        assert_eq!(c.microbatches(), 16);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_factorisations_rejected() {
+        assert!(ParallelConfig::default().with_dp(3).with_gbs(128).validate().is_err());
+        assert!(ParallelConfig::default().with_gbs(10).with_mbs(3).validate().is_err());
+        assert!(ParallelConfig::default().with_gbs(0).validate().is_err());
+    }
+
+    #[test]
+    fn bubble_shrinks_with_microbatches() {
+        // Obs III.2: saturating the pipeline reduces bubble size
+        let s = ScheduleKind::OneF1B;
+        let b1 = s.bubble_fraction(8, 8);
+        let b2 = s.bubble_fraction(8, 64);
+        assert!(b2 < b1);
+        assert!((s.bubble_fraction(1, 4) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interleaving_shrinks_bubble() {
+        let plain = ScheduleKind::OneF1B.bubble_fraction(8, 16);
+        let inter = ScheduleKind::Interleaved1F1B { v: 4 }.bubble_fraction(8, 16);
+        assert!(inter < plain);
+    }
+
+    #[test]
+    fn saturation_rule() {
+        let c = ParallelConfig::default().with_pp(16).with_gbs(16);
+        assert!(c.pipeline_saturated());
+        let c = ParallelConfig::default().with_pp(16).with_gbs(8);
+        assert!(!c.pipeline_saturated());
+    }
+}

@@ -1,0 +1,116 @@
+//! The paper's tuned training recipes (Table V) plus the configurations
+//! behind each figure, so every bench/example pulls the exact same setup.
+
+use super::model::{lookup, ModelSpec};
+use super::parallel::{ParallelConfig, Precision, ScheduleKind};
+
+/// One named end-to-end training setup: model + strategy + GPU count.
+#[derive(Debug, Clone)]
+pub struct Recipe {
+    pub model: ModelSpec,
+    pub parallel: ParallelConfig,
+}
+
+impl Recipe {
+    pub fn gpus(&self) -> u32 {
+        self.parallel.world_size()
+    }
+}
+
+/// Table V, 175B column: TP=4, PP=16, MBS=1, GBS=640, ZeRO-1, FA2, fp16,
+/// checkpoint-activations.  Run at 1024 GPUs => dp = 1024/64 = 16.
+pub fn recipe_175b() -> Recipe {
+    Recipe {
+        model: lookup("175b").unwrap(),
+        parallel: ParallelConfig {
+            tp: 4,
+            pp: 16,
+            dp: 16,
+            mbs: 1,
+            gbs: 640 * 16, // per-replica batch 640 (Fig 12a)
+            zero1: true,
+            flash_attention: true,
+            checkpoint_activations: true,
+            precision: Precision::Fp16,
+            schedule: ScheduleKind::OneF1B,
+        },
+    }
+}
+
+/// Table V, 1T column: TP=8, PP=64, MBS=1, GBS=1600/replica.
+/// Run at 3072 GPUs => dp = 3072/512 = 6.
+pub fn recipe_1t() -> Recipe {
+    Recipe {
+        model: lookup("1t").unwrap(),
+        parallel: ParallelConfig {
+            tp: 8,
+            pp: 64,
+            dp: 6,
+            mbs: 1,
+            gbs: 1600 * 6,
+            zero1: true,
+            flash_attention: true,
+            checkpoint_activations: true,
+            precision: Precision::Fp16,
+            schedule: ScheduleKind::OneF1B,
+        },
+    }
+}
+
+/// The 22B single-replica setup behind Fig 11's 38.38% point
+/// (§V.B; TP within a node, modest PP, saturated pipeline).
+pub fn recipe_22b() -> Recipe {
+    Recipe {
+        model: lookup("22b").unwrap(),
+        parallel: ParallelConfig {
+            tp: 2,
+            pp: 4,
+            dp: 1,
+            mbs: 2,
+            gbs: 128,
+            zero1: true,
+            flash_attention: true,
+            checkpoint_activations: true,
+            precision: Precision::Fp16,
+            schedule: ScheduleKind::OneF1B,
+        },
+    }
+}
+
+/// All three Fig 11 recipes in paper order.
+pub fn fig11_recipes() -> Vec<(Recipe, f64, f64)> {
+    // (recipe, paper % of peak, paper TFLOPS)
+    vec![
+        (recipe_22b(), 38.38, 73.5),
+        (recipe_175b(), 36.14, 69.2),
+        (recipe_1t(), 31.96, 61.2),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recipes_validate() {
+        for (r, _, _) in fig11_recipes() {
+            r.parallel.validate().expect("recipe must be well-formed");
+            assert!(r.parallel.pipeline_saturated(), "{}", r.model.name);
+        }
+    }
+
+    #[test]
+    fn recipe_gpu_counts_match_paper() {
+        assert_eq!(recipe_175b().gpus(), 1024);
+        assert_eq!(recipe_1t().gpus(), 3072);
+    }
+
+    #[test]
+    fn recipe_microbatches_exceed_stages() {
+        // §V.A saturation rule holds for both Table V recipes
+        let r = recipe_175b();
+        assert!(r.parallel.microbatches() >= r.parallel.pp);
+        let r = recipe_1t();
+        assert!(r.parallel.microbatches() >= r.parallel.pp);
+    }
+}

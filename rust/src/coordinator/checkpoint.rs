@@ -1,0 +1,155 @@
+//! Training checkpoints: save/restore parameters + optimizer state.
+//!
+//! Format (one file per pipeline stage, written by the stage's dp-rank-0
+//! worker; DP replicas hold identical parameters so one copy suffices —
+//! with ZeRO-1 each rank persists only its own optimizer shard, matching
+//! DeepSpeed's per-rank checkpoint layout):
+//!
+//! ```text
+//! ckpt-dir/
+//!   MANIFEST.json                 # step, bundle, world shape
+//!   stage<i>.params.bin           # f32 LE: flat parameter vector
+//!   stage<i>.dp<r>.opt.bin        # f32 LE: adam m ++ adam v (+ step count)
+//! ```
+//!
+//! Binary payloads are little-endian f32 with an 16-byte header
+//! (magic, version, element count, adam step).
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: u32 = 0x46_4C_4C_4D; // "FLLM"
+const VERSION: u32 = 1;
+
+/// Checkpoint metadata (MANIFEST.json).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub step: u32,
+    pub bundle: String,
+    pub pp: u32,
+    pub dp: u32,
+    pub zero1: bool,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"step\": {}, \"bundle\": {}, \"pp\": {}, \"dp\": {}, \"zero1\": {}}}",
+            self.step,
+            crate::util::json::escape(&self.bundle),
+            self.pp,
+            self.dp,
+            self.zero1
+        )
+    }
+
+    pub fn from_json(src: &str) -> Result<Self> {
+        let j = Json::parse(src).map_err(|e| anyhow!("{e}"))?;
+        Ok(Self {
+            step: j.u64_field("step").map_err(|e| anyhow!("{e}"))? as u32,
+            bundle: j.str_field("bundle").map_err(|e| anyhow!("{e}"))?,
+            pp: j.u64_field("pp").map_err(|e| anyhow!("{e}"))? as u32,
+            dp: j.u64_field("dp").map_err(|e| anyhow!("{e}"))? as u32,
+            zero1: j.bool_field("zero1").map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("MANIFEST.json"), self.to_json())
+            .context("writing checkpoint manifest")
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        Self::from_json(
+            &std::fs::read_to_string(dir.join("MANIFEST.json"))
+                .with_context(|| format!("no checkpoint manifest in {dir:?}"))?,
+        )
+    }
+}
+
+/// Write an f32 buffer with header; `aux` carries e.g. the Adam step count.
+pub fn write_f32(path: &Path, data: &[f32], aux: u64) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&MAGIC.to_le_bytes())?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(data.len() as u64).to_le_bytes())?;
+    f.write_all(&aux.to_le_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read an f32 buffer; returns (data, aux).
+pub fn read_f32(path: &Path) -> Result<(Vec<f32>, u64)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut h = [0u8; 4];
+    f.read_exact(&mut h)?;
+    anyhow::ensure!(u32::from_le_bytes(h) == MAGIC, "bad checkpoint magic");
+    f.read_exact(&mut h)?;
+    anyhow::ensure!(u32::from_le_bytes(h) == VERSION, "unsupported version");
+    let mut h8 = [0u8; 8];
+    f.read_exact(&mut h8)?;
+    let n = u64::from_le_bytes(h8) as usize;
+    f.read_exact(&mut h8)?;
+    let aux = u64::from_le_bytes(h8);
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((data, aux))
+}
+
+pub fn params_path(dir: &Path, stage: usize) -> PathBuf {
+    dir.join(format!("stage{stage}.params.bin"))
+}
+
+pub fn opt_path(dir: &Path, stage: usize, dp_rank: usize) -> PathBuf {
+    dir.join(format!("stage{stage}.dp{dp_rank}.opt.bin"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let dir = std::env::temp_dir().join(format!("fllm-ckpt-{}", std::process::id()));
+        let path = dir.join("x.bin");
+        let data: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        write_f32(&path, &data, 42).unwrap();
+        let (back, aux) = read_f32(&path).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(aux, 42);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = Manifest { step: 17, bundle: "tiny-s2-mb2".into(), pp: 2, dp: 3, zero1: true };
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("fllm-ckpt2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(read_f32(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

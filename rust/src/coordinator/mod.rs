@@ -1,0 +1,245 @@
+//! The distributed-training engine (the paper's L3 contribution, executed
+//! for real).
+//!
+//! One OS thread per simulated GCD.  The world is a `pp x dp` grid (TP is
+//! covered by the performance model; the engine runs the tensor-dense
+//! path): stage workers execute the *same* `schedule::Schedule`
+//! instruction streams the simulator prices, pass activations/gradients
+//! through the `collectives::Group` mailboxes, accumulate gradients over
+//! micro-batches, and synchronise per-stage DP groups through a real
+//! ring all-reduce (or ZeRO-1 reduce-scatter/all-gather) before the
+//! sharded Adam step.
+//!
+//! Compute is the AOT-compiled JAX/Pallas stage executables loaded by
+//! [`crate::runtime`] — Python is never on this path.
+//!
+//! ```text
+//!            leader (train)
+//!   ┌───────────┬───────────┐          losses / metrics (mpsc)
+//!   │ stage 0   │ stage 1   │ ...
+//!   │ dp=0 dp=1 │ dp=0 dp=1 │   <- worker threads, one per "GCD"
+//!   └───────────┴───────────┘
+//!     activations ->  <- gradients     (world group p2p mailboxes)
+//!     DP all-reduce within stage       (per-stage Group)
+//! ```
+
+pub mod checkpoint;
+pub mod worker;
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::collectives::Group;
+use crate::config::ScheduleKind;
+use crate::metrics::StepTimer;
+use crate::optim::{AdamConfig, LrSchedule};
+use crate::runtime::{Bundle, Runtime};
+use crate::schedule;
+
+/// Engine configuration for one training run.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Artifact root (usually `artifacts/`).
+    pub artifacts_root: PathBuf,
+    /// Bundle directory name, e.g. `tiny-s2-mb2` (see `Bundle::dir_name`).
+    pub bundle: String,
+    /// Data-parallel replicas.
+    pub dp: usize,
+    pub schedule: ScheduleKind,
+    /// Micro-batches per replica per step (gradient-accumulation steps).
+    pub microbatches: u32,
+    pub steps: u32,
+    pub adam: AdamConfig,
+    pub lr_schedule: Option<LrSchedule>,
+    /// ZeRO-1 sharded optimizer states across the DP group.
+    pub zero1: bool,
+    pub seed: u64,
+    /// Print a progress line every `log_every` steps (0 = silent).
+    pub log_every: u32,
+    /// When set, save a checkpoint here at the end of the run (and every
+    /// `checkpoint_every` steps if > 0).
+    pub checkpoint_dir: Option<PathBuf>,
+    pub checkpoint_every: u32,
+    /// Resume from `checkpoint_dir` (params + optimizer + data cursor).
+    pub resume: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_root: PathBuf::from("artifacts"),
+            bundle: String::from("tiny-s2-mb2"),
+            dp: 1,
+            schedule: ScheduleKind::OneF1B,
+            microbatches: 2,
+            steps: 10,
+            adam: AdamConfig::default(),
+            lr_schedule: None,
+            zero1: false,
+            seed: 1234,
+            log_every: 0,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume: false,
+        }
+    }
+}
+
+/// Per-step record (what the e2e example logs as the loss curve).
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: u32,
+    /// Mean training loss across every micro-batch and DP replica.
+    pub loss: f32,
+    /// Global gradient norm of the last stage (pre-clip).
+    pub grad_norm: f32,
+    pub step_time_s: f64,
+}
+
+/// Outcome of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub logs: Vec<StepLog>,
+    pub world_size: usize,
+    pub total_params: u64,
+    pub tokens_per_step: u64,
+    pub mean_step_time_s: f64,
+    pub tokens_per_sec: f64,
+    /// Bytes moved through collectives (p2p + all-reduce) over the run.
+    pub comm_bytes: u64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.logs.last().map(|l| l.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn initial_loss(&self) -> f32 {
+        self.logs.first().map(|l| l.loss).unwrap_or(f32::NAN)
+    }
+}
+
+/// Run a full training job; blocks until every worker joins.
+pub fn train(cfg: &EngineConfig) -> Result<TrainReport> {
+    let rt = Runtime::cpu()?;
+    let bundle = Arc::new(Bundle::load(&rt, cfg.artifacts_root.join(&cfg.bundle))?);
+    train_with_bundle(cfg, rt, bundle)
+}
+
+/// Same as [`train`] but with a pre-loaded bundle (benches reuse it).
+pub fn train_with_bundle(
+    cfg: &EngineConfig,
+    rt: Arc<Runtime>,
+    bundle: Arc<Bundle>,
+) -> Result<TrainReport> {
+    let pp = bundle.meta.n_stages as usize;
+    let dp = cfg.dp;
+    anyhow::ensure!(dp >= 1, "dp must be >= 1");
+    anyhow::ensure!(cfg.microbatches >= 1, "need at least one micro-batch");
+    let world_size = pp * dp;
+
+    let sched = schedule::build(cfg.schedule, pp as u32, cfg.microbatches);
+    sched.validate().map_err(|e| anyhow!("invalid schedule: {e}"))?;
+    let sched = Arc::new(sched);
+
+    // checkpoint resume: validate the manifest against this run's shape
+    let start_step = if cfg.resume {
+        let dir = cfg
+            .checkpoint_dir
+            .as_ref()
+            .ok_or_else(|| anyhow!("--resume requires a checkpoint dir"))?;
+        let manifest = checkpoint::Manifest::load(dir)?;
+        anyhow::ensure!(
+            manifest.bundle == cfg.bundle && manifest.pp == pp as u32
+                && manifest.dp == dp as u32 && manifest.zero1 == cfg.zero1,
+            "checkpoint shape mismatch: {manifest:?} vs current run"
+        );
+        manifest.step
+    } else {
+        0
+    };
+
+    // world group: p2p mailboxes between stages; per-stage DP groups for
+    // gradient sync.  rank = pp_rank * dp + dp_rank.
+    let world = Group::new(world_size);
+    let dp_groups: Vec<Arc<Group>> = (0..pp).map(|_| Group::new(dp)).collect();
+
+    let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32)>();
+
+    let mut handles = Vec::with_capacity(world_size);
+    for pp_rank in 0..pp {
+        for dp_rank in 0..dp {
+            let ctx = worker::WorkerCtx {
+                cfg: cfg.clone(),
+                rt: rt.clone(),
+                bundle: bundle.clone(),
+                sched: sched.clone(),
+                world: world.clone(),
+                dp_group: dp_groups[pp_rank].clone(),
+                pp_rank,
+                dp_rank,
+                pp,
+                dp,
+                start_step,
+                loss_tx: if pp_rank == pp - 1 && dp_rank == 0 {
+                    Some(loss_tx.clone())
+                } else {
+                    None
+                },
+            };
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("gcd-p{pp_rank}d{dp_rank}"))
+                    .spawn(move || worker::run(ctx))
+                    .context("spawning worker")?,
+            );
+        }
+    }
+    drop(loss_tx);
+
+    // leader: collect per-step losses as they stream in
+    let mut timer = StepTimer::new();
+    let mut logs: Vec<StepLog> = Vec::with_capacity(cfg.steps as usize);
+    let start = std::time::Instant::now();
+    let mut last = 0.0f64;
+    while let Ok((step, loss, grad_norm)) = loss_rx.recv() {
+        let now = start.elapsed().as_secs_f64();
+        let dt = now - last;
+        last = now;
+        timer.record(dt);
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            println!(
+                "step {step:>5}  loss {loss:8.4}  |g| {grad_norm:8.3}  {dt:7.3}s/step"
+            );
+        }
+        logs.push(StepLog { step, loss, grad_norm, step_time_s: dt });
+    }
+
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow!("worker panicked"))?
+            .context("worker failed")?;
+    }
+
+    let tokens_per_step =
+        bundle.meta.tokens_per_microbatch * cfg.microbatches as u64 * dp as u64;
+    let mean_step = timer.mean_after_warmup(1.min(logs.len().saturating_sub(1)));
+    let comm_bytes = world.bytes_moved.load(Ordering::Relaxed)
+        + dp_groups
+            .iter()
+            .map(|g| g.bytes_moved.load(Ordering::Relaxed))
+            .sum::<u64>();
+    Ok(TrainReport {
+        world_size,
+        total_params: bundle.meta.model.total_params,
+        tokens_per_step,
+        mean_step_time_s: mean_step,
+        tokens_per_sec: tokens_per_step as f64 / mean_step,
+        comm_bytes,
+        logs,
+    })
+}

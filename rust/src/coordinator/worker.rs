@@ -1,0 +1,307 @@
+//! Worker thread: one simulated GCD executing its stage's instruction
+//! stream against the compiled PJRT executables.
+
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::collectives::Group;
+use crate::data::BatchStream;
+use crate::runtime::{lit_u32, scalar_f32, to_f32, Bundle, Runtime};
+use crate::schedule::{Op, Schedule};
+use crate::zero::DistOptimizer;
+
+use super::{checkpoint, EngineConfig};
+
+/// Everything a worker needs; handed over at spawn.
+pub struct WorkerCtx {
+    pub cfg: EngineConfig,
+    pub rt: Arc<Runtime>,
+    pub bundle: Arc<Bundle>,
+    pub sched: Arc<Schedule>,
+    pub world: Arc<Group>,
+    pub dp_group: Arc<Group>,
+    pub pp_rank: usize,
+    pub dp_rank: usize,
+    pub pp: usize,
+    pub dp: usize,
+    /// First step index (non-zero when resuming from a checkpoint).
+    pub start_step: u32,
+    /// Only the (last-stage, dp=0) worker reports losses.
+    pub loss_tx: Option<mpsc::Sender<(u32, f32, f32)>>,
+}
+
+impl WorkerCtx {
+    fn world_rank(&self) -> usize {
+        self.pp_rank * self.dp + self.dp_rank
+    }
+
+    fn prev_rank(&self) -> usize {
+        (self.pp_rank - 1) * self.dp + self.dp_rank
+    }
+
+    fn next_rank(&self) -> usize {
+        (self.pp_rank + 1) * self.dp + self.dp_rank
+    }
+}
+
+/// Worker main loop.
+pub fn run(ctx: WorkerCtx) -> Result<()> {
+    let meta = &ctx.bundle.meta;
+    let stage = &ctx.bundle.stages[ctx.pp_rank];
+    let sm = &stage.meta;
+    let is_first = sm.has_embed;
+    let is_last = sm.has_head;
+    let single = ctx.pp == 1;
+
+    let b = meta.mbs as usize;
+    let s = meta.model.seq as usize;
+    let d = meta.model.hidden as usize;
+    let act_dims: [usize; 3] = [b, s, d];
+    let tok_dims: [usize; 2] = [b, s];
+    let n_params = sm.param_count as usize;
+
+    // ---- parameter init: identical across DP replicas, and identical
+    // across pipeline partitions (init keys fold in GLOBAL layer indices
+    // python-side, so the key is the same for every stage) ----
+    let key = [ctx.cfg.seed as u32, 0x5eed_0000];
+    let key_lit = lit_u32(&key, &[2])?;
+    let init_out = stage.init.run(&[&key_lit]).context("running stage init")?;
+    let mut params = to_f32(&init_out[0])?;
+    anyhow::ensure!(params.len() == n_params, "init size mismatch");
+
+    let mut opt = DistOptimizer::new(
+        ctx.cfg.zero1,
+        ctx.cfg.adam,
+        n_params,
+        ctx.dp_rank,
+        ctx.dp,
+    );
+
+    // ---- checkpoint resume: params (shared) + this rank's opt state ----
+    if ctx.cfg.resume {
+        let dir = ctx.cfg.checkpoint_dir.as_ref().expect("validated by leader");
+        let (p, _) = checkpoint::read_f32(&checkpoint::params_path(dir, ctx.pp_rank))?;
+        anyhow::ensure!(p.len() == n_params, "checkpoint params size mismatch");
+        params = p;
+        let (state, t) =
+            checkpoint::read_f32(&checkpoint::opt_path(dir, ctx.pp_rank, ctx.dp_rank))?;
+        opt.import_state(&state, t);
+    }
+
+    // ---- data: first and last stages draw the SAME dp-sharded stream ----
+    let mut stream = (is_first || is_last).then(|| {
+        BatchStream::new(
+            meta.model.vocab as u32,
+            ctx.cfg.seed ^ 0xDA7A,
+            ctx.dp_rank,
+            ctx.dp,
+            b,
+            s,
+        )
+    });
+
+    let m = ctx.cfg.microbatches as usize;
+    let mut grad_accum = vec![0.0f32; n_params];
+    // per-microbatch stash: stage input activations (checkpointing: inputs
+    // only), token/target rows for the boundary stages
+    let mut stash_x: Vec<Option<Vec<f32>>> = vec![None; m];
+    let mut stash_tok: Vec<Option<Vec<i32>>> = vec![None; m];
+    let mut stash_tgt: Vec<Option<Vec<i32>>> = vec![None; m];
+
+    // fast-forward the data stream past already-trained steps
+    if ctx.start_step > 0 {
+        if let Some(stream) = stream.as_mut() {
+            stream.skip_microbatches(ctx.start_step as usize * m);
+        }
+    }
+
+    for rel_step in 0..ctx.cfg.steps {
+        let step = ctx.start_step + rel_step;
+        grad_accum.iter_mut().for_each(|g| *g = 0.0);
+        let mut loss_sum = 0.0f32;
+
+        // draw this step's micro-batches up front (schedule issues
+        // forwards in order, so index mb matches draw order)
+        if let Some(stream) = stream.as_mut() {
+            for mb in 0..m {
+                let batch = stream.next_microbatch();
+                if is_first {
+                    stash_tok[mb] = Some(batch.tokens.clone());
+                }
+                if is_last {
+                    stash_tgt[mb] = Some(batch.targets);
+                }
+            }
+        }
+
+        // upload the parameter vector ONCE per step; every micro-batch's
+        // fwd/bwd reuses the same device buffer (EXPERIMENTS.md §Perf)
+        let params_buf = ctx.rt.buf_f32(&params, &[n_params])?;
+
+        for op in &ctx.sched.streams[ctx.pp_rank] {
+            match *op {
+                Op::Forward { mb } => {
+                    let mb = mb as usize;
+                    if single {
+                        // single-stage: fwd is folded into bwd; nothing to do
+                        continue;
+                    }
+                    if is_first {
+                        let tokens = stash_tok[mb].as_ref().unwrap();
+                        let tok_buf = ctx.rt.buf_i32(tokens, &tok_dims)?;
+                        let out = stage
+                            .fwd
+                            .run_b(&[&params_buf.0, &tok_buf.0])
+                            .context("stage fwd (embed)")?;
+                        let y = to_f32(&out[0])?;
+                        self_send(&ctx, ctx.next_rank(), y);
+                    } else if is_last {
+                        // last stage: stash the incoming activation; the
+                        // loss+grads come from the backward entry point
+                        let x = ctx.world.recv(ctx.world_rank(), ctx.prev_rank());
+                        stash_x[mb] = Some(x);
+                    } else {
+                        let x = ctx.world.recv(ctx.world_rank(), ctx.prev_rank());
+                        let x_buf = ctx.rt.buf_f32(&x, &act_dims)?;
+                        let out = stage
+                            .fwd
+                            .run_b(&[&params_buf.0, &x_buf.0])
+                            .context("stage fwd")?;
+                        let y = to_f32(&out[0])?;
+                        stash_x[mb] = Some(x);
+                        self_send(&ctx, ctx.next_rank(), y);
+                    }
+                }
+                Op::Backward { mb } => {
+                    let mb = mb as usize;
+                    if single {
+                        // fused fwd+bwd: (flat, tokens, targets) -> (gflat, loss)
+                        let tokens = stash_tok[mb].take().unwrap();
+                        let targets = stash_tgt[mb].take().unwrap();
+                        let tok_buf = ctx.rt.buf_i32(&tokens, &tok_dims)?;
+                        let tgt_buf = ctx.rt.buf_i32(&targets, &tok_dims)?;
+                        let out = stage
+                            .bwd
+                            .run_b(&[&params_buf.0, &tok_buf.0, &tgt_buf.0])
+                            .context("single-stage bwd")?;
+                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
+                        loss_sum += scalar_f32(&out[1])?;
+                    } else if is_last {
+                        let x = stash_x[mb].take().unwrap();
+                        let targets = stash_tgt[mb].take().unwrap();
+                        let x_buf = ctx.rt.buf_f32(&x, &act_dims)?;
+                        let tgt_buf = ctx.rt.buf_i32(&targets, &tok_dims)?;
+                        let out = stage
+                            .bwd
+                            .run_b(&[&params_buf.0, &x_buf.0, &tgt_buf.0])
+                            .context("last-stage bwd")?;
+                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
+                        let gx = to_f32(&out[1])?;
+                        loss_sum += scalar_f32(&out[2])?;
+                        self_send(&ctx, ctx.prev_rank(), gx);
+                    } else if is_first {
+                        let gy = ctx.world.recv(ctx.world_rank(), ctx.next_rank());
+                        let tokens = stash_tok[mb].take().unwrap();
+                        let tok_buf = ctx.rt.buf_i32(&tokens, &tok_dims)?;
+                        let gy_buf = ctx.rt.buf_f32(&gy, &act_dims)?;
+                        let out = stage
+                            .bwd
+                            .run_b(&[&params_buf.0, &tok_buf.0, &gy_buf.0])
+                            .context("first-stage bwd")?;
+                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
+                    } else {
+                        let gy = ctx.world.recv(ctx.world_rank(), ctx.next_rank());
+                        let x = stash_x[mb].take().unwrap();
+                        let x_buf = ctx.rt.buf_f32(&x, &act_dims)?;
+                        let gy_buf = ctx.rt.buf_f32(&gy, &act_dims)?;
+                        let out = stage
+                            .bwd
+                            .run_b(&[&params_buf.0, &x_buf.0, &gy_buf.0])
+                            .context("middle-stage bwd")?;
+                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
+                        let gx = to_f32(&out[1])?;
+                        self_send(&ctx, ctx.prev_rank(), gx);
+                    }
+                }
+            }
+        }
+
+        // gradient accumulation: mean over micro-batches
+        let inv_m = 1.0 / m as f32;
+        grad_accum.iter_mut().for_each(|g| *g *= inv_m);
+
+        // DP sync + (sharded) optimizer step
+        let lr_scale = ctx
+            .cfg
+            .lr_schedule
+            .map(|sch| sch.scale(step as u64))
+            .unwrap_or(1.0);
+        let grad_norm = opt.step(
+            &ctx.dp_group,
+            ctx.dp_rank,
+            &mut params,
+            &mut grad_accum,
+            lr_scale,
+        );
+
+        // periodic checkpoint: every rank persists its own piece after a
+        // world barrier (so all stages are at the same step), dp-rank-0
+        // writes the shared params, stage0/dp0 writes the manifest
+        let every = ctx.cfg.checkpoint_every;
+        let last_step = rel_step + 1 == ctx.cfg.steps;
+        if let Some(dir) = ctx.cfg.checkpoint_dir.as_ref() {
+            if (every > 0 && (rel_step + 1) % every == 0) || last_step {
+                ctx.world.barrier(ctx.world_rank());
+                if ctx.dp_rank == 0 {
+                    checkpoint::write_f32(
+                        &checkpoint::params_path(dir, ctx.pp_rank),
+                        &params,
+                        (step + 1) as u64,
+                    )?;
+                }
+                let (state, t) = opt.export_state();
+                checkpoint::write_f32(
+                    &checkpoint::opt_path(dir, ctx.pp_rank, ctx.dp_rank),
+                    &state,
+                    t,
+                )?;
+                ctx.world.barrier(ctx.world_rank());
+                if ctx.pp_rank == 0 && ctx.dp_rank == 0 {
+                    checkpoint::Manifest {
+                        step: step + 1,
+                        bundle: ctx.cfg.bundle.clone(),
+                        pp: ctx.pp as u32,
+                        dp: ctx.dp as u32,
+                        zero1: ctx.cfg.zero1,
+                    }
+                    .save(dir)?;
+                }
+            }
+        }
+
+        // loss reporting: mean across micro-batches, then across DP
+        if is_last {
+            let mut l = vec![loss_sum * inv_m];
+            ctx.dp_group
+                .all_reduce_sum(ctx.dp_rank, &mut l, crate::collectives::Algo::Naive);
+            let mean_loss = l[0] / ctx.dp as f32;
+            if let Some(tx) = &ctx.loss_tx {
+                tx.send((step, mean_loss, grad_norm))
+                    .map_err(|_| anyhow!("leader hung up"))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn self_send(ctx: &WorkerCtx, to: usize, data: Vec<f32>) {
+    ctx.world.send(ctx.world_rank(), to, data);
+}
+
+fn accumulate(acc: &mut [f32], g: &[f32]) {
+    debug_assert_eq!(acc.len(), g.len());
+    for (a, &v) in acc.iter_mut().zip(g.iter()) {
+        *a += v;
+    }
+}

@@ -1,0 +1,136 @@
+//! SHAP sensitivity analysis (paper §IV, Fig 10).
+//!
+//! The paper fits a regression model predicting achieved FLOPS from the
+//! hyper-parameters and reports mean-|SHAP| per feature.  We compute
+//! *exact* Shapley values — the 6-feature space admits full enumeration of
+//! all 2^5 coalitions per feature — against a background distribution of
+//! evaluated points, with the fitted GP as the value function:
+//!
+//!   phi_i(x) = sum_{S ⊆ F\{i}} |S|!(|F|-|S|-1)!/|F|! [v(S ∪ i) - v(S)]
+//!   v(S)     = E_background[ f(x_S, b_{F\S}) ]
+//!
+//! (the "interventional" conditional expectation KernelSHAP converges to).
+
+use super::surrogate::Gp;
+
+/// Mean-|SHAP| attribution per feature over a set of explained points.
+pub fn mean_abs_shap(
+    model: &Gp,
+    explain: &[Vec<f64>],
+    background: &[Vec<f64>],
+) -> Vec<f64> {
+    assert!(!explain.is_empty() && !background.is_empty());
+    let d = explain[0].len();
+    let mut acc = vec![0.0; d];
+    for x in explain {
+        let phi = shapley_values_multi(model, x, background);
+        for (a, p) in acc.iter_mut().zip(phi) {
+            *a += p.abs();
+        }
+    }
+    acc.iter_mut().for_each(|a| *a /= explain.len() as f64);
+    acc
+}
+
+/// Exact Shapley values of one prediction against a single baseline.
+pub fn shapley_values(model: &Gp, x: &[f64], background: &[f64]) -> Vec<f64> {
+    shapley_values_multi(model, x, std::slice::from_ref(&background.to_vec()))
+}
+
+/// Exact Shapley values with a multi-sample background set.
+pub fn shapley_values_multi(model: &Gp, x: &[f64], background: &[Vec<f64>]) -> Vec<f64> {
+    let d = x.len();
+    assert!(d <= 16, "exact enumeration is exponential in features");
+    let n_coalitions = 1usize << d;
+
+    // v(S) for every coalition, averaged over the background set
+    let mut v = vec![0.0f64; n_coalitions];
+    for (mask, slot) in v.iter_mut().enumerate() {
+        let mut total = 0.0;
+        for b in background {
+            let q: Vec<f64> = (0..d)
+                .map(|i| if mask & (1 << i) != 0 { x[i] } else { b[i] })
+                .collect();
+            total += model.predict(&q).0;
+        }
+        *slot = total / background.len() as f64;
+    }
+
+    // Shapley weights |S|!(d-|S|-1)!/d!
+    let fact: Vec<f64> = {
+        let mut f = vec![1.0f64; d + 1];
+        for i in 1..=d {
+            f[i] = f[i - 1] * i as f64;
+        }
+        f
+    };
+
+    let mut phi = vec![0.0f64; d];
+    for i in 0..d {
+        let bit = 1usize << i;
+        for mask in 0..n_coalitions {
+            if mask & bit != 0 {
+                continue;
+            }
+            let s = (mask as u32).count_ones() as usize;
+            let w = fact[s] * fact[d - s - 1] / fact[d];
+            phi[i] += w * (v[mask | bit] - v[mask]);
+        }
+    }
+    phi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_gp() -> Gp {
+        // y = 3 x0 + 1 x1 + 0 x2 over a grid
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for a in 0..3 {
+            for b in 0..3 {
+                for c in 0..3 {
+                    let x = vec![a as f64 / 2.0, b as f64 / 2.0, c as f64 / 2.0];
+                    ys.push(3.0 * x[0] + x[1]);
+                    xs.push(x);
+                }
+            }
+        }
+        Gp::fit(&xs, &ys)
+    }
+
+    #[test]
+    fn efficiency_property() {
+        // Shapley values sum to f(x) - E[f(background)]
+        let gp = linear_gp();
+        let x = vec![1.0, 1.0, 1.0];
+        let bg = vec![vec![0.0, 0.0, 0.0]];
+        let phi = shapley_values_multi(&gp, &x, &bg);
+        let fx = gp.predict(&x).0;
+        let f0 = gp.predict(&bg[0]).0;
+        let sum: f64 = phi.iter().sum();
+        assert!((sum - (fx - f0)).abs() < 0.05, "{sum} vs {}", fx - f0);
+    }
+
+    #[test]
+    fn attribution_ranks_linear_coefficients() {
+        let gp = linear_gp();
+        let explain: Vec<Vec<f64>> = vec![vec![1.0, 1.0, 1.0], vec![0.5, 0.5, 0.5]];
+        let bg: Vec<Vec<f64>> = vec![vec![0.0, 0.0, 0.0], vec![0.25, 0.25, 0.25]];
+        let m = mean_abs_shap(&gp, &explain, &bg);
+        assert!(m[0] > m[1], "{m:?}");
+        assert!(m[1] > m[2], "{m:?}");
+    }
+
+    #[test]
+    fn null_feature_gets_no_attribution() {
+        let gp = linear_gp();
+        let phi = shapley_values_multi(
+            &gp,
+            &[1.0, 0.0, 1.0],
+            &[vec![0.0, 0.0, 0.0]],
+        );
+        assert!(phi[2].abs() < 0.1, "{phi:?}");
+    }
+}

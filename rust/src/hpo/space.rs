@@ -1,0 +1,136 @@
+//! The hyper-parameter search space of Table IV (175B tuning).
+
+use crate::config::{lookup, ModelSpec, ParallelConfig, Precision, ScheduleKind};
+use crate::data::Rng64;
+use crate::topology::GPUS_PER_NODE;
+
+/// One point in the Table IV space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub pp: u32,
+    pub tp: u32,
+    pub mbs: u32,
+    /// Gradient-accumulation steps == micro-batches per replica.
+    pub gas: u32,
+    pub zero1: bool,
+    pub nnodes: u32,
+}
+
+pub const PP_CHOICES: [u32; 6] = [1, 2, 4, 8, 12, 16];
+pub const TP_CHOICES: [u32; 4] = [1, 2, 4, 8];
+pub const MBS_RANGE: (u32, u32) = (4, 20);
+pub const GAS_CHOICES: [u32; 2] = [5, 10];
+pub const NNODES_CHOICES: [u32; 2] = [12, 16];
+
+/// Feature names in SHAP/reporting order (paper Fig 10 uses `p:` prefixes).
+pub const FEATURES: [&str; 6] = ["p:mbs", "p:tp", "p:pp", "p:num_nodes", "p:zero1", "p:gas"];
+
+impl Point {
+    /// Uniform random sample over *launchable* points: configurations
+    /// whose `tp*pp` cannot tile the node allocation are rejected at
+    /// sampling time, the way the paper's SLURM launcher would refuse to
+    /// build the srun command.  The failures that remain in a search
+    /// trajectory are the interesting ones — OOMs (Fig 9's red arrows).
+    pub fn sample(rng: &mut Rng64) -> Self {
+        loop {
+            let p = Self {
+                pp: PP_CHOICES[rng.below(PP_CHOICES.len() as u64) as usize],
+                tp: TP_CHOICES[rng.below(TP_CHOICES.len() as u64) as usize],
+                mbs: MBS_RANGE.0 + rng.below((MBS_RANGE.1 - MBS_RANGE.0 + 1) as u64) as u32,
+                gas: GAS_CHOICES[rng.below(GAS_CHOICES.len() as u64) as usize],
+                zero1: rng.below(2) == 1,
+                nnodes: NNODES_CHOICES[rng.below(NNODES_CHOICES.len() as u64) as usize],
+            };
+            if p.gpus() % (p.tp * p.pp) == 0 {
+                return p;
+            }
+        }
+    }
+
+    /// GPUs this evaluation occupies.
+    pub fn gpus(&self) -> u32 {
+        self.nnodes * GPUS_PER_NODE
+    }
+
+    /// Normalised feature vector in [0,1]^6 (surrogate + SHAP input),
+    /// ordered as [`FEATURES`].
+    pub fn features(&self) -> [f64; 6] {
+        let norm = |v: f64, lo: f64, hi: f64| (v - lo) / (hi - lo);
+        [
+            norm(self.mbs as f64, MBS_RANGE.0 as f64, MBS_RANGE.1 as f64),
+            norm((self.tp as f64).log2(), 0.0, 3.0),
+            norm((self.pp as f64).log2(), 0.0, 4.0),
+            norm(self.nnodes as f64, 12.0, 16.0),
+            if self.zero1 { 1.0 } else { 0.0 },
+            norm(self.gas as f64, 5.0, 10.0),
+        ]
+    }
+
+    /// Instantiate the training configuration on the paper's 175B model.
+    /// `Err` when the 3D factorisation cannot tile the allocation — the
+    /// paper's launcher would fail the same way before the job even runs.
+    pub fn to_config(&self) -> Result<(ModelSpec, ParallelConfig), String> {
+        let model = lookup("175b").expect("175b in zoo");
+        let gpus = self.gpus();
+        let per_replica = self.tp * self.pp;
+        if gpus % per_replica != 0 {
+            return Err(format!(
+                "tp*pp = {per_replica} does not divide {gpus} GPUs"
+            ));
+        }
+        let dp = gpus / per_replica;
+        let gbs = self.mbs * self.gas * dp;
+        Ok((
+            model,
+            ParallelConfig {
+                tp: self.tp,
+                pp: self.pp,
+                dp,
+                mbs: self.mbs,
+                gbs,
+                zero1: self.zero1,
+                flash_attention: true,
+                checkpoint_activations: true,
+                precision: Precision::Fp16,
+                schedule: ScheduleKind::OneF1B,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stay_in_space() {
+        let mut rng = Rng64::new(1);
+        for _ in 0..200 {
+            let p = Point::sample(&mut rng);
+            assert!(PP_CHOICES.contains(&p.pp));
+            assert!(TP_CHOICES.contains(&p.tp));
+            assert!((MBS_RANGE.0..=MBS_RANGE.1).contains(&p.mbs));
+            assert!(GAS_CHOICES.contains(&p.gas));
+            assert!(NNODES_CHOICES.contains(&p.nnodes));
+            let f = p.features();
+            assert!(f.iter().all(|&x| (0.0..=1.0).contains(&x)), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn config_instantiation() {
+        let p = Point { pp: 16, tp: 4, mbs: 4, gas: 10, zero1: true, nnodes: 16 };
+        let (_, cfg) = p.to_config().unwrap();
+        assert_eq!(cfg.dp, 2);
+        assert_eq!(cfg.gbs, 4 * 10 * 2);
+        assert_eq!(cfg.microbatches(), 10);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn untileable_allocations_fail() {
+        // 12 nodes = 96 GPUs; tp*pp = 64 does not divide 96
+        let p = Point { pp: 16, tp: 4, mbs: 4, gas: 5, zero1: false, nnodes: 12 };
+        assert!(p.to_config().is_err());
+    }
+}

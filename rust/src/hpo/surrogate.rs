@@ -1,0 +1,224 @@
+//! Gaussian-process surrogate for Bayesian optimisation.
+//!
+//! DeepHyper's solver is surrogate-based Bayesian optimisation; we use a
+//! plain GP with an RBF kernel (Cholesky solve, no external linear-algebra
+//! crates) — more than adequate for the 6-dimensional Table IV space and a
+//! few hundred evaluations.
+
+/// RBF-kernel GP regressor over fixed-dimension feature vectors.
+#[derive(Debug, Clone)]
+pub struct Gp {
+    lengthscale: f64,
+    signal_var: f64,
+    noise_var: f64,
+    x: Vec<Vec<f64>>,
+    /// Cholesky factor L of (K + noise I).
+    chol: Vec<Vec<f64>>,
+    /// alpha = (K + noise I)^-1 y  (y standardised).
+    alpha: Vec<f64>,
+    y_mean: f64,
+    y_std: f64,
+}
+
+impl Gp {
+    pub fn fit(x: &[Vec<f64>], y: &[f64]) -> Self {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let n = x.len();
+        let y_mean = y.iter().sum::<f64>() / n as f64;
+        let y_std = (y.iter().map(|v| (v - y_mean).powi(2)).sum::<f64>() / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let ys: Vec<f64> = y.iter().map(|v| (v - y_mean) / y_std).collect();
+
+        let gp = |lengthscale: f64| {
+            let signal_var = 1.0;
+            let noise_var = 1e-4;
+            let mut k = vec![vec![0.0; n]; n];
+            for i in 0..n {
+                for j in 0..n {
+                    k[i][j] = rbf(&x[i], &x[j], lengthscale, signal_var);
+                }
+                k[i][i] += noise_var;
+            }
+            (k, signal_var, noise_var)
+        };
+
+        // light model selection: try a few lengthscales, keep the best
+        // marginal likelihood
+        let mut best: Option<(f64, Vec<Vec<f64>>, f64, f64)> = None;
+        for &l in &[0.15, 0.3, 0.6, 1.2] {
+            let (k, sv, nv) = gp(l);
+            if let Some(chol) = cholesky(&k) {
+                let alpha = chol_solve(&chol, &ys);
+                // log marginal likelihood ~ -0.5 yᵀα - Σ log L_ii
+                let fit_term: f64 = ys.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+                let logdet: f64 = (0..n).map(|i| chol[i][i].ln()).sum();
+                let lml = -0.5 * fit_term - logdet;
+                let better = match &best {
+                    None => true,
+                    Some((score, _, _, _)) => lml > *score,
+                };
+                if better {
+                    best = Some((lml, chol, l, sv.max(nv)));
+                }
+            }
+        }
+        let (_, chol, lengthscale, _) = best.expect("at least one lengthscale must factor");
+        let alpha = chol_solve(&chol, &ys);
+        Self {
+            lengthscale,
+            signal_var: 1.0,
+            noise_var: 1e-4,
+            x: x.to_vec(),
+            chol,
+            alpha,
+            y_mean,
+            y_std,
+        }
+    }
+
+    /// Posterior (mean, std) at `q`.
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kq: Vec<f64> = (0..n)
+            .map(|i| rbf(&self.x[i], q, self.lengthscale, self.signal_var))
+            .collect();
+        let mean_std = kq.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>();
+        // var = k(q,q) - vᵀv where L v = k_q
+        let v = forward_sub(&self.chol, &kq);
+        let kqq = self.signal_var + self.noise_var;
+        let var = (kqq - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (self.y_mean + self.y_std * mean_std, self.y_std * var.sqrt())
+    }
+
+    /// Expected improvement over `best_y` (maximisation).
+    pub fn expected_improvement(&self, q: &[f64], best_y: f64) -> f64 {
+        let (mu, sigma) = self.predict(q);
+        if sigma < 1e-12 {
+            return (mu - best_y).max(0.0);
+        }
+        let z = (mu - best_y) / sigma;
+        sigma * (z * norm_cdf(z) + norm_pdf(z))
+    }
+}
+
+fn rbf(a: &[f64], b: &[f64], lengthscale: f64, signal_var: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum();
+    signal_var * (-d2 / (2.0 * lengthscale * lengthscale)).exp()
+}
+
+/// Dense Cholesky factorisation; `None` if not positive definite.
+fn cholesky(k: &[Vec<f64>]) -> Option<Vec<Vec<f64>>> {
+    let n = k.len();
+    let mut l = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = k[i][j];
+            for p in 0..j {
+                sum -= l[i][p] * l[j][p];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i][j] = sum.sqrt();
+            } else {
+                l[i][j] = sum / l[j][j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L v = b.
+fn forward_sub(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let mut v = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for j in 0..i {
+            sum -= l[i][j] * v[j];
+        }
+        v[i] = sum / l[i][i];
+    }
+    v
+}
+
+/// Solve (L Lᵀ) x = b.
+fn chol_solve(l: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let n = b.len();
+    let v = forward_sub(l, b);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = v[i];
+        for j in i + 1..n {
+            sum -= l[j][i] * x[j];
+        }
+        x[i] = sum / l[i][i];
+    }
+    x
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Abramowitz–Stegun erf approximation (7.1.26), |err| < 1.5e-7.
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let x: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 / 7.0]).collect();
+        let y: Vec<f64> = x.iter().map(|v| (4.0 * v[0]).sin()).collect();
+        let gp = Gp::fit(&x, &y);
+        for (xi, yi) in x.iter().zip(&y) {
+            let (mu, _) = gp.predict(xi);
+            assert!((mu - yi).abs() < 0.05, "{mu} vs {yi}");
+        }
+    }
+
+    #[test]
+    fn uncertainty_grows_away_from_data() {
+        let x = vec![vec![0.0], vec![0.1]];
+        let y = vec![1.0, 1.1];
+        let gp = Gp::fit(&x, &y);
+        let (_, s_near) = gp.predict(&[0.05]);
+        let (_, s_far) = gp.predict(&[5.0]);
+        assert!(s_far > s_near);
+    }
+
+    #[test]
+    fn ei_prefers_promising_regions() {
+        // y rises with x; EI beyond the best observed point must exceed EI
+        // in the clearly-worse region
+        let x: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64 / 10.0]).collect();
+        let y: Vec<f64> = x.iter().map(|v| v[0]).collect();
+        let gp = Gp::fit(&x, &y);
+        let best = 0.5;
+        assert!(gp.expected_improvement(&[0.7], best) > gp.expected_improvement(&[0.0], best));
+    }
+
+    #[test]
+    fn erf_sane() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427).abs() < 1e-3);
+        assert!((erf(-1.0) + 0.8427).abs() < 1e-3);
+    }
+}

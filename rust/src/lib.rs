@@ -1,0 +1,43 @@
+//! # frontier-llm
+//!
+//! Production-quality reproduction of **"Optimizing Distributed Training
+//! on Frontier for Large Language Models"** (Dash et al., ORNL, 2023).
+//!
+//! The paper ports Megatron-DeepSpeed to the AMD/ROCm Frontier
+//! supercomputer and derives tuned 3D-parallel (tensor x pipeline x data)
+//! training recipes for 22B/175B/1T GPT models.  This crate rebuilds that
+//! system as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: 3D rank
+//!   layout, pipeline schedules (GPipe / 1F1B), collectives, ZeRO-1
+//!   sharded optimizer, the Frontier topology + performance models that
+//!   regenerate every figure/table, and a Bayesian HPO engine with SHAP
+//!   sensitivity (the paper's DeepHyper study).
+//! * **L2** — `python/compile/model.py`: the GPT stage graphs in JAX,
+//!   AOT-lowered to HLO text artifacts.
+//! * **L1** — `python/compile/kernels/`: Pallas flash-attention, fused
+//!   LayerNorm and fused softmax-xent kernels called from L2.
+//!
+//! Python never runs at training time: the [`runtime`] module loads the
+//! HLO artifacts via PJRT and the [`coordinator`] drives them from worker
+//! threads that stand in for Frontier's MI250X GCDs.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-figure
+//! experiment index; `EXPERIMENTS.md` records paper-vs-measured results.
+
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hpo;
+pub mod mem;
+pub mod metrics;
+pub mod optim;
+pub mod parallel;
+pub mod perf;
+pub mod runtime;
+pub mod schedule;
+pub mod topology;
+pub mod util;
+pub mod zero;

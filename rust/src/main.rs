@@ -1,0 +1,379 @@
+//! `frontier` — CLI for the frontier-llm training system.
+//!
+//! Subcommands map onto the paper's workflow:
+//!
+//! * `tables`    — print Tables I/II/V and the Fig 5 bandwidth matrix
+//! * `simulate`  — evaluate one (model, strategy) through the perf model
+//! * `sweep`     — regenerate the Fig 6/7/8 parameter sweeps
+//! * `scaling`   — weak/strong scaling studies (Figs 12/13)
+//! * `hpo`       — the §IV DeepHyper-style search + Fig 10 SHAP ranking
+//! * `train`     — REAL training: the pipeline/DP/ZeRO-1 engine over the
+//!                 AOT-compiled JAX/Pallas artifacts (`make artifacts`)
+
+use anyhow::Result;
+
+use frontier_llm::config::{self, ParallelConfig, ScheduleKind};
+use frontier_llm::coordinator::{train, EngineConfig};
+use frontier_llm::hpo;
+use frontier_llm::mem;
+use frontier_llm::metrics::weak_scaling_efficiency;
+use frontier_llm::optim::AdamConfig;
+use frontier_llm::perf::{sim, PerfModel};
+use frontier_llm::topology::Machine;
+use frontier_llm::util::args::Args;
+
+const USAGE: &str = "\
+frontier — 3D-parallel LLM training on a simulated Frontier (ORNL 2023 repro)
+
+USAGE: frontier <command> [options]
+
+COMMANDS:
+  tables                       print Tables I/II/V and the Fig 5 matrix
+  simulate [--model 175b] [--tp N] [--pp N] [--dp N] [--mbs N] [--gbs N]
+           [--zero1] [--no-flash] [--des]
+  sweep    [--axis tp|gbs|pp-fixed|pp-scaled]
+  scaling  [--model 175b|1t] [--mode weak|strong]
+  hpo      [--evals N] [--seed N]
+  train    [--bundle tiny-s2-mb2] [--artifacts DIR] [--dp N]
+           [--microbatches N] [--steps N] [--zero1] [--gpipe]
+           [--lr F] [--seed N] [--log-every N]
+           [--checkpoint DIR] [--checkpoint-every N] [--resume]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    match args.command() {
+        Some("tables") => cmd_tables(),
+        Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args.opt_str("axis", "tp")),
+        Some("scaling") => {
+            cmd_scaling(&args.opt_str("model", "175b"), &args.opt_str("mode", "weak"))
+        }
+        Some("hpo") => cmd_hpo(
+            args.opt("evals", 128).map_err(anyhow::Error::msg)?,
+            args.opt("seed", 7).map_err(anyhow::Error::msg)?,
+        ),
+        Some("train") => cmd_train(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_tables() -> Result<()> {
+    println!("== Table I: GPT model zoo ==");
+    println!(
+        "{:>6} {:>8} {:>8} {:>7} {:>12} {:>12}",
+        "model", "layers", "hidden", "heads", "12Ld^2", "exact"
+    );
+    for m in config::paper_zoo() {
+        println!(
+            "{:>6} {:>8} {:>8} {:>7} {:>12.2e} {:>12.2e}",
+            m.name,
+            m.n_layers,
+            m.hidden,
+            m.n_heads,
+            m.paper_params() as f64,
+            m.total_params() as f64
+        );
+    }
+
+    println!("\n== Table II: memory requirement (mixed precision + Adam) ==");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12}",
+        "model", "params(6x)", "grads(4x)", "optim(4x)", "total(14x)"
+    );
+    for (name, n) in
+        [("22B", 22e9 as u64), ("175B", 175e9 as u64), ("1T", 1_000_000_000_000u64)]
+    {
+        let (p, g, o, t) = mem::table2_row(n);
+        let gb = |b: u64| format!("{:.0} GB", b as f64 / 1e9);
+        println!("{:>6} {:>12} {:>12} {:>12} {:>12}", name, gb(p), gb(g), gb(o), gb(t));
+    }
+
+    println!("\n== Fig 5: GPU link bandwidth matrix (GB/s), one node + neighbour ==");
+    let m = Machine::new(2);
+    for row in m.bandwidth_matrix(10) {
+        let cells: Vec<String> = row.iter().map(|b| format!("{b:>4.0}")).collect();
+        println!("{}", cells.join(" "));
+    }
+
+    println!("\n== Table V: tuned recipes ==");
+    let perf = PerfModel::default();
+    println!(
+        "{:>6} {:>4} {:>4} {:>4} {:>6} {:>6} {:>10} {:>10}",
+        "model", "TP", "PP", "MBS", "GBS", "GPUs", "paper%", "model%"
+    );
+    for (r, paper_pct, _) in config::fig11_recipes() {
+        let b = perf.evaluate(&r.model, &r.parallel).expect("recipe evaluates");
+        println!(
+            "{:>6} {:>4} {:>4} {:>4} {:>6} {:>6} {:>9.2}% {:>9.2}%",
+            r.model.name,
+            r.parallel.tp,
+            r.parallel.pp,
+            r.parallel.mbs,
+            r.parallel.gbs,
+            r.gpus(),
+            paper_pct,
+            b.pct_peak
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = args.opt_str("model", "175b");
+    let tp: u32 = args.opt("tp", 1).map_err(anyhow::Error::msg)?;
+    let pp: u32 = args.opt("pp", 1).map_err(anyhow::Error::msg)?;
+    let dp: u32 = args.opt("dp", 1).map_err(anyhow::Error::msg)?;
+    let mbs: u32 = args.opt("mbs", 1).map_err(anyhow::Error::msg)?;
+    let gbs: u32 = args.opt("gbs", 16).map_err(anyhow::Error::msg)?;
+
+    let spec =
+        config::lookup(&model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let cfg = ParallelConfig::default()
+        .with_tp(tp)
+        .with_pp(pp)
+        .with_dp(dp)
+        .with_mbs(mbs)
+        .with_gbs(gbs)
+        .with_zero1(args.flag("zero1"))
+        .with_flash(!args.flag("no-flash"));
+    let perf = PerfModel::default();
+    match perf.evaluate(&spec, &cfg) {
+        Ok(b) => {
+            let mb = mem::per_gpu(&spec, &cfg);
+            let gib = |x: u64| x as f64 / (1u64 << 30) as f64;
+            println!(
+                "model {model}  tp{tp} pp{pp} dp{dp} mbs{mbs} gbs{gbs} (m={})",
+                cfg.microbatches()
+            );
+            println!(
+                "  memory/GPU    {:>10.1} GiB (params {:.1} + grads {:.1} + optim {:.1} + act {:.1} + ovh {:.1})",
+                mb.gib(),
+                gib(mb.params),
+                gib(mb.grads),
+                gib(mb.optimizer),
+                gib(mb.activations),
+                gib(mb.overhead)
+            );
+            println!("  step time     {:>10.3} s", b.t_step);
+            println!("    compute     {:>10.3} s", b.t_compute);
+            println!("    tp comm     {:>10.3} s", b.t_tp_comm);
+            println!(
+                "    bubble      {:>10.3} s ({:.1}% analytic)",
+                b.t_bubble,
+                100.0 * cfg.bubble_fraction()
+            );
+            println!("    pp p2p      {:>10.3} s", b.t_pp_comm);
+            println!("    dp sync     {:>10.3} s", b.t_dp_comm);
+            println!("    optimizer   {:>10.3} s", b.t_optimizer);
+            println!(
+                "  throughput    {:>10.1} TFLOPS/GPU = {:.2}% of peak",
+                b.tflops_per_gpu, b.pct_peak
+            );
+            println!("  arith. int.   {:>10.0} flops/byte", b.arithmetic_intensity);
+            if args.flag("des") {
+                let s = sim::simulate(&perf, &spec, &cfg)
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                println!(
+                    "  [DES] pipeline {:.3} s, measured bubble {:.1}%, {:.2}% of peak",
+                    s.t_pipeline,
+                    100.0 * s.bubble_fraction,
+                    s.pct_peak
+                );
+            }
+        }
+        Err(e) => println!("configuration cannot run: {e:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_sweep(axis: &str) -> Result<()> {
+    let perf = PerfModel::default();
+    let show = |label: String, r: Result<frontier_llm::perf::StepBreakdown, frontier_llm::perf::PerfError>| match r {
+        Ok(b) => println!("  {label}: {:>6.1} TFLOPS/GPU ({:.2}%)", b.tflops_per_gpu, b.pct_peak),
+        Err(e) => println!("  {label}: {e:?}"),
+    };
+    match axis {
+        "tp" => {
+            let m = config::lookup("1.4b").unwrap();
+            println!("Fig 6 — throughput vs TP (1.4B, 8 GPUs)");
+            for tp in [1u32, 2, 4, 8] {
+                let cfg = ParallelConfig::default()
+                    .with_tp(tp)
+                    .with_dp(8 / tp)
+                    .with_gbs(64)
+                    .with_mbs(4);
+                show(format!("TP={tp}"), perf.evaluate(&m, &cfg));
+            }
+        }
+        "gbs" => {
+            println!("Fig 7a — throughput vs GBS (22B, tp2 pp8)");
+            let m = config::lookup("22b").unwrap();
+            for gbs in [8u32, 16, 32, 64, 128, 256] {
+                let cfg = ParallelConfig::default().with_tp(2).with_pp(8).with_gbs(gbs);
+                show(format!("GBS={gbs:>4}"), perf.evaluate(&m, &cfg));
+            }
+            println!("Fig 7b — throughput vs GBS (1T, tp8 pp64)");
+            let m = config::lookup("1t").unwrap();
+            for gbs in [64u32, 128, 256, 512, 1024, 1600] {
+                let cfg = ParallelConfig::default()
+                    .with_tp(8)
+                    .with_pp(64)
+                    .with_gbs(gbs)
+                    .with_zero1(true);
+                show(format!("GBS={gbs:>4}"), perf.evaluate(&m, &cfg));
+            }
+        }
+        "pp-fixed" => {
+            println!("Fig 8a — throughput vs PP, GBS fixed at 128 (175B, tp8)");
+            let m = config::lookup("175b").unwrap();
+            for pp in [8u32, 12, 16, 24, 32] {
+                let cfg = ParallelConfig::default().with_tp(8).with_pp(pp).with_gbs(128);
+                show(format!("PP={pp:>2}"), perf.evaluate(&m, &cfg));
+            }
+        }
+        "pp-scaled" => {
+            println!("Fig 8b — throughput vs PP, GBS scaled to fix bubble (175B, tp8)");
+            let m = config::lookup("175b").unwrap();
+            for (pp, gbs) in [(8u32, 128u32), (12, 192), (16, 256), (24, 384), (32, 512)] {
+                let cfg = ParallelConfig::default().with_tp(8).with_pp(pp).with_gbs(gbs);
+                show(format!("PP={pp:>2} GBS={gbs:>3}"), perf.evaluate(&m, &cfg));
+            }
+        }
+        other => anyhow::bail!("unknown sweep axis {other} (tp | gbs | pp-fixed | pp-scaled)"),
+    }
+    Ok(())
+}
+
+fn cmd_scaling(model: &str, mode: &str) -> Result<()> {
+    let perf = PerfModel::default();
+    let (recipe, points): (_, Vec<u32>) = match model {
+        "175b" => (config::recipe_175b(), vec![128, 256, 512, 1024]),
+        "1t" => (config::recipe_1t(), vec![1024, 2048, 3072]),
+        _ => anyhow::bail!("scaling supports 175b | 1t"),
+    };
+    let per_replica = recipe.parallel.gpus_per_replica();
+    let gbs_per_replica = recipe.parallel.gbs / recipe.parallel.dp;
+    println!(
+        "{mode} scaling, {model}: tp{} pp{} ({} GPUs/replica)",
+        recipe.parallel.tp, recipe.parallel.pp, per_replica
+    );
+
+    let mut base: Option<(u32, f64)> = None;
+    for gpus in points {
+        let dp = gpus / per_replica;
+        let gbs = match mode {
+            "weak" => gbs_per_replica * dp,
+            "strong" => {
+                if model == "175b" {
+                    8000
+                } else {
+                    8016
+                }
+            }
+            _ => anyhow::bail!("mode must be weak | strong"),
+        };
+        let mut cfg = recipe.parallel.clone().with_dp(dp).with_gbs(gbs);
+        if cfg.gbs % cfg.dp != 0 {
+            cfg.gbs = (cfg.gbs / cfg.dp) * cfg.dp;
+        }
+        match perf.samples_per_sec(&recipe.model, &cfg) {
+            Ok(sps) => {
+                let eff = base
+                    .map(|b| weak_scaling_efficiency(b, (gpus, sps)))
+                    .unwrap_or(100.0);
+                if base.is_none() {
+                    base = Some((gpus, sps));
+                }
+                println!(
+                    "  {gpus:>5} GPUs (dp={dp:>3}, gbs={:>5}): {sps:>9.2} samples/s  eff {eff:>6.2}%",
+                    cfg.gbs
+                );
+            }
+            Err(e) => println!("  {gpus:>5} GPUs: {e:?}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_hpo(evals: u32, seed: u64) -> Result<()> {
+    let perf = PerfModel::default();
+    let result = hpo::run_search(
+        &perf,
+        &hpo::SearchConfig { n_evals: evals, seed, ..Default::default() },
+    );
+    println!("Fig 9 — search trajectory ({evals} evaluations)");
+    for (i, ev) in result.evals.iter().enumerate() {
+        let marker = match &ev.objective {
+            Some(v) => format!("{v:>7.1} TFLOPS/GPU"),
+            None => format!("FAILED ({})", ev.failure.as_deref().unwrap_or("?")),
+        };
+        if i % 8 == 0 || ev.objective.is_none() {
+            println!(
+                "  #{i:>3} pp{:<2} tp{} mbs{:<2} gas{:<2} z{} n{:<2} -> {marker}  best={:.1}",
+                ev.point.pp,
+                ev.point.tp,
+                ev.point.mbs,
+                ev.point.gas,
+                u8::from(ev.point.zero1),
+                ev.point.nnodes,
+                result.best_trajectory[i]
+            );
+        }
+    }
+    let q = result.failures_by_quarter();
+    println!("failures by quarter: {q:?} (paper: frequency decreases with time)");
+    if let Some(best) = result.best() {
+        println!("best: {:?} -> {:.1} TFLOPS/GPU", best.point, best.objective.unwrap());
+    }
+
+    println!("\nFig 10 — SHAP sensitivity (mean |SHAP| on achieved FLOPS)");
+    for (name, v) in hpo::shap_ranking(&result, 96) {
+        println!("  {name:<12} {v:>8.3}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = EngineConfig {
+        artifacts_root: args.opt_str("artifacts", "artifacts").into(),
+        bundle: args.opt_str("bundle", "tiny-s2-mb2"),
+        dp: args.opt("dp", 1).map_err(anyhow::Error::msg)?,
+        schedule: if args.flag("gpipe") {
+            ScheduleKind::GPipe
+        } else {
+            ScheduleKind::OneF1B
+        },
+        microbatches: args.opt("microbatches", 4).map_err(anyhow::Error::msg)?,
+        steps: args.opt("steps", 20).map_err(anyhow::Error::msg)?,
+        adam: AdamConfig {
+            lr: args.opt("lr", 3e-4).map_err(anyhow::Error::msg)?,
+            ..Default::default()
+        },
+        lr_schedule: None,
+        zero1: args.flag("zero1"),
+        seed: args.opt("seed", 1234).map_err(anyhow::Error::msg)?,
+        log_every: args.opt("log-every", 1).map_err(anyhow::Error::msg)?,
+        checkpoint_dir: args.get("checkpoint").map(Into::into),
+        checkpoint_every: args.opt("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
+        resume: args.flag("resume"),
+    };
+    let report = train(&cfg)?;
+    println!(
+        "\ntrained {} params on {} workers: loss {:.4} -> {:.4}",
+        report.total_params,
+        report.world_size,
+        report.initial_loss(),
+        report.final_loss()
+    );
+    println!(
+        "  {:.3} s/step, {:.0} tokens/s, {:.1} MB moved through collectives",
+        report.mean_step_time_s,
+        report.tokens_per_sec,
+        report.comm_bytes as f64 / 1e6
+    );
+    Ok(())
+}

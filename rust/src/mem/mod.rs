@@ -1,0 +1,223 @@
+//! Per-GPU memory-footprint model (paper Table II + §II.A).
+//!
+//! Mixed-precision Adam accounting, as the paper counts it:
+//!   * parameters: 6 bytes/param (fp32 master + fp16 working copy)
+//!   * gradients:  4 bytes/param (fp32)
+//!   * optimizer:  4 bytes/param (fp32 momentum; the paper's Table II
+//!     counts 4 — we keep their accounting for the Table II repro and
+//!     expose `adam_full` for the 8-byte m+v variant)
+//!
+//! Model parallelism divides the 14x by `tp * pp`; ZeRO-1 further divides
+//! the optimizer-owned bytes (master params + optimizer states) by `dp`
+//! (§II.D).  Activation memory follows the checkpointing model: one stored
+//! layer input per layer per in-flight micro-batch plus one layer's live
+//! working set — multiplied by the schedule's peak in-flight count, which
+//! is why GPipe at large `m` OOMs where 1F1B survives.
+//!
+//! This model is what rejects configurations during HPO: the red-arrow
+//! failures of Fig 9 are exactly `fits() == false` here.
+
+use crate::config::{ModelSpec, ParallelConfig};
+use crate::schedule;
+use crate::topology::HBM_BYTES;
+
+/// Fixed per-GPU overhead: HIP/ROCm runtime, RCCL buffers, framework
+/// workspace, fragmentation.  (~2 GB observed in practice.)
+pub const FRAMEWORK_OVERHEAD: u64 = 2 * (1 << 30);
+
+/// Byte-per-parameter multipliers of Table II.
+pub const BYTES_PARAMS: u64 = 6;
+pub const BYTES_GRADS: u64 = 4;
+pub const BYTES_OPTIMIZER: u64 = 4;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryBreakdown {
+    pub params: u64,
+    pub grads: u64,
+    pub optimizer: u64,
+    pub activations: u64,
+    pub overhead: u64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> u64 {
+        self.params + self.grads + self.optimizer + self.activations + self.overhead
+    }
+
+    pub fn gib(&self) -> f64 {
+        self.total() as f64 / (1u64 << 30) as f64
+    }
+}
+
+/// Whole-model memory requirement in bytes, paper Table II accounting
+/// (no activations, no overhead).  `nominal_params` lets callers pass the
+/// round numbers the paper uses (22e9, 175e9, 1e12).
+pub fn table2_row(nominal_params: u64) -> (u64, u64, u64, u64) {
+    let p = nominal_params;
+    let params = BYTES_PARAMS * p;
+    let grads = BYTES_GRADS * p;
+    let opt = BYTES_OPTIMIZER * p;
+    (params, grads, opt, params + grads + opt)
+}
+
+/// Stored activation bytes for ONE micro-batch on the largest stage
+/// (layer inputs only — full activation checkpointing).
+fn stored_activation_per_mb(model: &ModelSpec, cfg: &ParallelConfig, layers: u32) -> u64 {
+    let b = cfg.mbs as u64;
+    let s = model.seq;
+    let d = model.hidden;
+    let prec = cfg.precision.bytes();
+    // layer input per layer, sharded over TP by Megatron's sequence-split
+    b * s * d * prec * layers as u64 / cfg.tp as u64
+}
+
+/// Live working set while (re)computing one layer.
+/// Without flash attention the (heads x seq x seq) score matrix
+/// materialises; with it only O(s·d) tiles are live.  (Korthikanti et al.'s
+/// per-layer activation formula, simplified: `sbd(34 + 5·a·s²/(s·d))`.)
+fn layer_working_set(model: &ModelSpec, cfg: &ParallelConfig) -> u64 {
+    let b = cfg.mbs as u64;
+    let s = model.seq;
+    let d = model.hidden;
+    let a = model.n_heads as u64;
+    let prec = cfg.precision.bytes();
+    let dense = 34 * b * s * d * prec / 2; // the "34sbh" term (fp16-normalised)
+    let attn_matrix = if cfg.flash_attention {
+        0
+    } else {
+        // QK^T scores + softmax output, per head
+        2 * b * a * s * s * prec
+    };
+    (dense + attn_matrix) / cfg.tp as u64
+}
+
+/// Per-GPU memory of the worst (first) pipeline stage.
+pub fn per_gpu(model: &ModelSpec, cfg: &ParallelConfig) -> MemoryBreakdown {
+    let n_total = model.total_params();
+    // first stage carries the embedding and ceil(L/pp) layers
+    let spans = model.stage_spans(cfg.pp.min(model.n_layers));
+    let stage0_layers = spans[0].1 - spans[0].0;
+    let n_stage =
+        (model.embed_params() + stage0_layers as u64 * model.layer_params()) / cfg.tp as u64;
+    // cross-check against the uniform share; take the max (worst stage may
+    // be the last one when the head is large)
+    let last_layers = spans.last().unwrap().1 - spans.last().unwrap().0;
+    let n_last =
+        (model.head_params() + last_layers as u64 * model.layer_params()) / cfg.tp as u64;
+    let n_local = n_stage.max(n_last).max(n_total / (cfg.tp as u64 * cfg.pp as u64));
+
+    let params = BYTES_PARAMS * n_local;
+    let grads = BYTES_GRADS * n_local;
+    let optimizer = BYTES_OPTIMIZER * n_local;
+
+    // ZeRO-1 shards the optimizer-owned fp32 state (master params 4x +
+    // optimizer 4x) across the DP group
+    let (params, optimizer) = if cfg.zero1 && cfg.dp > 1 {
+        let master = 4 * n_local; // fp32 master copy lives in the optimizer shard
+        let working = params - master; // fp16 working weights stay replicated
+        (working + master / cfg.dp as u64, optimizer / cfg.dp as u64)
+    } else {
+        (params, optimizer)
+    };
+
+    // activations: peak in-flight micro-batches on stage 0
+    let m = cfg.microbatches();
+    let sched = schedule::build(cfg.schedule, cfg.pp, m);
+    let inflight = sched.peak_inflight(0) as u64;
+    let stored = if cfg.checkpoint_activations {
+        stored_activation_per_mb(model, cfg, stage0_layers)
+    } else {
+        // no checkpointing: the full working set of every layer is stored
+        layer_working_set(model, cfg) * stage0_layers as u64
+    };
+    let activations = inflight * stored + layer_working_set(model, cfg);
+
+    MemoryBreakdown { params, grads, optimizer, activations, overhead: FRAMEWORK_OVERHEAD }
+}
+
+/// Does the configuration fit in MI250X HBM?  (Fig 9's OOM failures.)
+pub fn fits(model: &ModelSpec, cfg: &ParallelConfig) -> bool {
+    per_gpu(model, cfg).total() <= HBM_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{lookup, ScheduleKind};
+
+    #[test]
+    fn table2_matches_paper() {
+        let gb = |b: u64| b as f64 / 1e9;
+        let (p, g, o, t) = table2_row(22_000_000_000);
+        assert_eq!(gb(p).round() as i64, 132);
+        assert_eq!(gb(g).round() as i64, 88);
+        assert_eq!(gb(o).round() as i64, 88);
+        assert_eq!(gb(t).round() as i64, 308);
+        let (_, _, _, t175) = table2_row(175_000_000_000);
+        assert!((gb(t175) - 2450.0).abs() < 1.0); // 2.45 TB
+        let (_, _, _, t1t) = table2_row(1_000_000_000_000);
+        assert!((gb(t1t) - 14_000.0).abs() < 1.0); // 14 TB
+    }
+
+    #[test]
+    fn single_gpu_cannot_hold_22b() {
+        // §II.A: model parallelism is necessary even for one replica
+        let m = lookup("22b").unwrap();
+        let cfg = ParallelConfig::default().with_gbs(1);
+        assert!(!fits(&m, &cfg));
+    }
+
+    #[test]
+    fn table5_recipes_fit() {
+        for (r, _, _) in crate::config::fig11_recipes() {
+            assert!(fits(&r.model, &r.parallel), "{} must fit", r.model.name);
+        }
+    }
+
+    #[test]
+    fn zero1_reduces_footprint() {
+        let m = lookup("175b").unwrap();
+        let base = ParallelConfig::default()
+            .with_tp(8)
+            .with_pp(8)
+            .with_dp(8)
+            .with_gbs(64);
+        let with = per_gpu(&m, &base.clone().with_zero1(true)).total();
+        let without = per_gpu(&m, &base).total();
+        assert!(with < without);
+    }
+
+    #[test]
+    fn gpipe_activation_wall() {
+        // Obs: 1F1B's in-flight cap keeps activations bounded as m grows;
+        // GPipe's grow linearly.
+        let m = lookup("22b").unwrap();
+        let f1b = ParallelConfig::default()
+            .with_tp(2)
+            .with_pp(8)
+            .with_gbs(256)
+            .with_mbs(1);
+        let gp = f1b.clone().with_schedule(ScheduleKind::GPipe);
+        let a_f1b = per_gpu(&m, &f1b).activations;
+        let a_gp = per_gpu(&m, &gp).activations;
+        assert!(a_gp > 10 * a_f1b, "gpipe {a_gp} vs 1f1b {a_f1b}");
+    }
+
+    #[test]
+    fn bigger_mbs_more_activations() {
+        let m = lookup("175b").unwrap();
+        let base = ParallelConfig::default().with_tp(4).with_pp(16).with_gbs(640);
+        let a1 = per_gpu(&m, &base.clone().with_mbs(1)).activations;
+        let a4 = per_gpu(&m, &base.clone().with_mbs(4)).activations;
+        assert!(a4 > 3 * a1);
+    }
+
+    #[test]
+    fn flash_attention_trims_working_set() {
+        let m = lookup("22b").unwrap();
+        let cfg = ParallelConfig::default().with_tp(2).with_pp(8).with_gbs(64);
+        let with = per_gpu(&m, &cfg).activations;
+        let without = per_gpu(&m, &cfg.clone().with_flash(false)).activations;
+        assert!(without > with);
+    }
+}

@@ -1,0 +1,198 @@
+//! Training metrics: step timing, token/FLOP throughput, scaling
+//! efficiency, and a small CSV logger the examples/benches share.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::topology::PEAK_FP16_FLOPS;
+
+/// Rolling statistics over recent step times.
+#[derive(Debug, Default, Clone)]
+pub struct StepTimer {
+    samples: Vec<f64>,
+}
+
+impl StepTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Mean over the samples after dropping the warmup prefix.
+    pub fn mean_after_warmup(&self, warmup: usize) -> f64 {
+        let rest = &self.samples[warmup.min(self.samples.len())..];
+        if rest.is_empty() {
+            return f64::NAN;
+        }
+        rest.iter().sum::<f64>() / rest.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * q).round() as usize;
+        s[idx]
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Throughput summary for one measured configuration.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    pub tokens_per_sec: f64,
+    pub samples_per_sec: f64,
+    pub tflops_per_gpu: f64,
+    pub pct_peak: f64,
+}
+
+/// Compute the paper's headline metrics from measured step time.
+pub fn throughput(
+    step_time: f64,
+    gbs: u64,
+    seq: u64,
+    hw_flops_per_gpu_step: f64,
+) -> Throughput {
+    let tokens = (gbs * seq) as f64;
+    let tflops = hw_flops_per_gpu_step / step_time / 1e12;
+    Throughput {
+        tokens_per_sec: tokens / step_time,
+        samples_per_sec: gbs as f64 / step_time,
+        tflops_per_gpu: tflops,
+        pct_peak: 100.0 * tflops * 1e12 / PEAK_FP16_FLOPS,
+    }
+}
+
+/// Scaling efficiency (Figs 12/13): `base` = (gpus, samples/s) reference
+/// point, `point` = scaled measurement.
+pub fn weak_scaling_efficiency(base: (u32, f64), point: (u32, f64)) -> f64 {
+    // ideal weak scaling: samples/s grows linearly with GPUs
+    let ideal = base.1 * point.0 as f64 / base.0 as f64;
+    100.0 * point.1 / ideal
+}
+
+pub fn strong_scaling_efficiency(base: (u32, f64), point: (u32, f64)) -> f64 {
+    // identical formula: ideal speedup is linear in GPUs; kept separate so
+    // call sites read like the paper's figures
+    weak_scaling_efficiency(base, point)
+}
+
+/// Minimal CSV writer (examples/benches log loss curves + sweeps with it).
+#[derive(Debug, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(columns: &[&str]) -> Self {
+        Self { header: columns.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, values: &[String]) {
+        assert_eq!(values.len(), self.header.len(), "csv row arity");
+        self.rows.push(values.to_vec());
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_statistics() {
+        let mut t = StepTimer::new();
+        for v in [10.0, 1.0, 2.0, 3.0] {
+            t.record(v);
+        }
+        assert_eq!(t.count(), 4);
+        assert!((t.mean_after_warmup(1) - 2.0).abs() < 1e-9);
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.p99(), 10.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        // 1 TFLOP of work per GPU in 0.1 s = 10 TFLOPS
+        let t = throughput(0.1, 16, 128, 1e12);
+        assert!((t.tflops_per_gpu - 10.0).abs() < 1e-9);
+        assert!((t.tokens_per_sec - 20480.0).abs() < 1e-6);
+        assert!((t.pct_peak - 100.0 * 10e12 / PEAK_FP16_FLOPS).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_efficiency() {
+        // doubling GPUs and doubling samples/s = 100%
+        assert!((weak_scaling_efficiency((1024, 10.0), (2048, 20.0)) - 100.0).abs() < 1e-9);
+        // doubling GPUs with 1.8x samples/s = 90%
+        assert!((strong_scaling_efficiency((512, 10.0), (1024, 18.0)) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.rowf(&[1.0, 2.5]);
+        let s = c.to_string();
+        assert!(s.starts_with("a,b\n"));
+        assert!(s.contains("1,2.5"));
+    }
+}

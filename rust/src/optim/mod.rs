@@ -1,0 +1,208 @@
+//! Optimizers over flat parameter buffers.
+//!
+//! The L2 stage graphs exchange parameters as one contiguous f32 vector
+//! per stage (DeepSpeed's flattened fp32 groups), so Adam here is a plain
+//! elementwise pass over slices — which is exactly what makes ZeRO-1
+//! sharding trivial: each DP rank runs `step` on its own sub-range only
+//! (`zero::Zero1Partition` hands out the ranges).
+
+
+/// Adam hyper-parameters (paper's runs use standard GPT settings).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// Global-norm gradient clipping threshold (0 disables).
+    pub grad_clip: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        Self { lr: 3e-4, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0, grad_clip: 1.0 }
+    }
+}
+
+/// Adam/AdamW state over a flat buffer (or a ZeRO-1 shard of one).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig, n: usize) -> Self {
+        Self { cfg, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+
+    /// Bytes of optimizer state held (for memory accounting tests).
+    pub fn state_bytes(&self) -> usize {
+        2 * self.m.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Serialise the state as `m ++ v` plus the step counter
+    /// (checkpointing; see `coordinator::checkpoint`).
+    pub fn export_state(&self) -> (Vec<f32>, u64) {
+        let mut out = Vec::with_capacity(2 * self.m.len());
+        out.extend_from_slice(&self.m);
+        out.extend_from_slice(&self.v);
+        (out, self.t)
+    }
+
+    /// Restore state exported by [`Adam::export_state`].
+    pub fn import_state(&mut self, data: &[f32], t: u64) {
+        assert_eq!(data.len(), 2 * self.m.len(), "optimizer state size mismatch");
+        let n = self.m.len();
+        self.m.copy_from_slice(&data[..n]);
+        self.v.copy_from_slice(&data[n..]);
+        self.t = t;
+    }
+
+    /// One Adam step over `params`/`grads` (equal length to the state).
+    /// `lr_scale` multiplies the base LR (for schedules).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr_scale: f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let c = self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        let lr = c.lr * lr_scale;
+        for i in 0..params.len() {
+            let g = grads[i] + c.weight_decay * params[i];
+            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * g;
+            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + c.eps);
+        }
+    }
+}
+
+/// Global-norm gradient clipping; returns the pre-clip norm.
+pub fn clip_grad_norm(grads: &mut [f32], max_norm: f32) -> f32 {
+    let norm = l2_norm(grads);
+    if max_norm > 0.0 && norm > max_norm {
+        let scale = max_norm / (norm + 1e-6);
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+/// Two-pass L2 norm (hot path: see EXPERIMENTS.md §Perf).
+pub fn l2_norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Linear-warmup + cosine-decay LR schedule (GPT-3 style).
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub min_ratio: f32,
+}
+
+impl LrSchedule {
+    pub fn scale(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if step >= self.total_steps {
+            return self.min_ratio;
+        }
+        let progress = (step - self.warmup_steps) as f32
+            / (self.total_steps - self.warmup_steps).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.min_ratio + (1.0 - self.min_ratio) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimises_quadratic() {
+        // f(x) = sum (x - 3)^2: Adam must converge to 3
+        let mut params = vec![0.0f32; 8];
+        let mut adam = Adam::new(AdamConfig { lr: 0.1, ..Default::default() }, 8);
+        for _ in 0..500 {
+            let grads: Vec<f32> = params.iter().map(|&p| 2.0 * (p - 3.0)).collect();
+            adam.step(&mut params, &grads, 1.0);
+        }
+        for p in params {
+            assert!((p - 3.0).abs() < 0.05, "{p}");
+        }
+    }
+
+    #[test]
+    fn sharded_steps_equal_full_step() {
+        // ZeRO-1 invariant: running Adam on two half-shards produces the
+        // same parameters as one full-buffer Adam.
+        let n = 64;
+        let grads: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut full = vec![1.0f32; n];
+        let mut adam_full = Adam::new(AdamConfig::default(), n);
+
+        let mut sharded = vec![1.0f32; n];
+        let mut adam_a = Adam::new(AdamConfig::default(), n / 2);
+        let mut adam_b = Adam::new(AdamConfig::default(), n / 2);
+
+        for _ in 0..10 {
+            adam_full.step(&mut full, &grads, 1.0);
+            adam_a.step(&mut sharded[..n / 2], &grads[..n / 2], 1.0);
+            adam_b.step(&mut sharded[n / 2..], &grads[n / 2..], 1.0);
+        }
+        for i in 0..n {
+            assert!((full[i] - sharded[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn grad_clip_caps_norm() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let pre = clip_grad_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-5);
+        assert!((l2_norm(&g) - 1.0).abs() < 1e-4);
+        // under the threshold: untouched
+        let mut g2 = vec![0.3f32, 0.4];
+        clip_grad_norm(&mut g2, 1.0);
+        assert_eq!(g2, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let s = LrSchedule { warmup_steps: 10, total_steps: 100, min_ratio: 0.1 };
+        assert!(s.scale(0) < s.scale(9));
+        assert!((s.scale(10) - 1.0).abs() < 0.01);
+        assert!(s.scale(50) < 1.0 && s.scale(50) > 0.1);
+        assert_eq!(s.scale(1000), 0.1);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let mut params = vec![5.0f32];
+        let mut adam = Adam::new(
+            AdamConfig { lr: 0.05, weight_decay: 0.1, ..Default::default() },
+            1,
+        );
+        for _ in 0..300 {
+            adam.step(&mut params, &[0.0], 1.0);
+        }
+        assert!(params[0].abs() < 0.5, "{}", params[0]);
+    }
+}

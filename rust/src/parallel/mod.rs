@@ -1,0 +1,196 @@
+//! 3D process-group layout: world rank <-> (pp, dp, tp) coordinates.
+//!
+//! Megatron's `initialize_model_parallel` ordering, which the paper's
+//! Megatron-DeepSpeed port inherits: tensor-parallel ranks are consecutive
+//! (innermost), data-parallel next, pipeline outermost:
+//!
+//! `rank = pp_rank * (dp * tp) + dp_rank * tp + tp_rank`
+//!
+//! Consecutive TP ranks map to consecutive GCDs, so with `tp <= 8` a TP
+//! group lives inside a node (and with `tp = 2` inside one MI250X card) —
+//! precisely the placement reasoning of §III.A.
+
+use crate::topology::{GpuId, Machine};
+
+/// Coordinates of a rank in the 3D decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Coords {
+    pub pp: u32,
+    pub dp: u32,
+    pub tp: u32,
+}
+
+/// The full rank layout for one (tp, pp, dp) decomposition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankLayout {
+    pub tp: u32,
+    pub pp: u32,
+    pub dp: u32,
+}
+
+impl RankLayout {
+    pub fn new(tp: u32, pp: u32, dp: u32) -> Self {
+        assert!(tp >= 1 && pp >= 1 && dp >= 1);
+        Self { tp, pp, dp }
+    }
+
+    pub fn world_size(&self) -> u32 {
+        self.tp * self.pp * self.dp
+    }
+
+    pub fn coords(&self, rank: u32) -> Coords {
+        assert!(rank < self.world_size(), "rank {rank} out of range");
+        let tp = rank % self.tp;
+        let dp = (rank / self.tp) % self.dp;
+        let pp = rank / (self.tp * self.dp);
+        Coords { pp, dp, tp }
+    }
+
+    pub fn rank_of(&self, c: Coords) -> u32 {
+        assert!(c.tp < self.tp && c.dp < self.dp && c.pp < self.pp);
+        c.pp * (self.dp * self.tp) + c.dp * self.tp + c.tp
+    }
+
+    /// The TP group containing `rank` (consecutive ranks).
+    pub fn tp_group(&self, rank: u32) -> Vec<u32> {
+        let c = self.coords(rank);
+        (0..self.tp)
+            .map(|t| self.rank_of(Coords { tp: t, ..c }))
+            .collect()
+    }
+
+    /// The DP group containing `rank` (stride `tp`).
+    pub fn dp_group(&self, rank: u32) -> Vec<u32> {
+        let c = self.coords(rank);
+        (0..self.dp)
+            .map(|d| self.rank_of(Coords { dp: d, ..c }))
+            .collect()
+    }
+
+    /// The PP group containing `rank` (stride `dp*tp`), first to last stage.
+    pub fn pp_group(&self, rank: u32) -> Vec<u32> {
+        let c = self.coords(rank);
+        (0..self.pp)
+            .map(|p| self.rank_of(Coords { pp: p, ..c }))
+            .collect()
+    }
+
+    /// All distinct TP groups.
+    pub fn all_tp_groups(&self) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        for pp in 0..self.pp {
+            for dp in 0..self.dp {
+                out.push(
+                    (0..self.tp)
+                        .map(|tp| self.rank_of(Coords { pp, dp, tp }))
+                        .collect(),
+                );
+            }
+        }
+        out
+    }
+
+    /// All distinct DP groups.
+    pub fn all_dp_groups(&self) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        for pp in 0..self.pp {
+            for tp in 0..self.tp {
+                out.push(
+                    (0..self.dp)
+                        .map(|dp| self.rank_of(Coords { pp, dp, tp }))
+                        .collect(),
+                );
+            }
+        }
+        out
+    }
+
+    /// All distinct PP groups.
+    pub fn all_pp_groups(&self) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        for dp in 0..self.dp {
+            for tp in 0..self.tp {
+                out.push(
+                    (0..self.pp)
+                        .map(|pp| self.rank_of(Coords { pp, dp, tp }))
+                        .collect(),
+                );
+            }
+        }
+        out
+    }
+
+    /// Identity placement: world rank r on GCD r.  The layout above is
+    /// designed so this naive placement already honours the paper's rules.
+    pub fn gpu_of(&self, rank: u32) -> GpuId {
+        rank
+    }
+
+    /// Does every TP group stay inside one node under identity placement?
+    pub fn tp_within_node(&self, machine: &Machine) -> bool {
+        self.all_tp_groups()
+            .iter()
+            .all(|g| !machine.spans_nodes(&g.iter().map(|&r| self.gpu_of(r)).collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let l = RankLayout::new(4, 8, 3);
+        for r in 0..l.world_size() {
+            assert_eq!(l.rank_of(l.coords(r)), r);
+        }
+    }
+
+    #[test]
+    fn tp_groups_consecutive() {
+        let l = RankLayout::new(8, 2, 2);
+        for g in l.all_tp_groups() {
+            for w in g.windows(2) {
+                assert_eq!(w[1], w[0] + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn groups_partition_world() {
+        let l = RankLayout::new(2, 3, 4);
+        for groups in [l.all_tp_groups(), l.all_dp_groups(), l.all_pp_groups()] {
+            let mut seen = vec![false; l.world_size() as usize];
+            for g in &groups {
+                for &r in g {
+                    assert!(!seen[r as usize], "rank {r} in two groups");
+                    seen[r as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "groups must cover the world");
+        }
+    }
+
+    #[test]
+    fn tp8_stays_in_node() {
+        // tp divides 8 => consecutive placement keeps TP groups node-local
+        let m = Machine::for_gpus(64);
+        for tp in [1u32, 2, 4, 8] {
+            let l = RankLayout::new(tp, 4, 16 / tp.min(2));
+            assert!(l.tp_within_node(&m), "tp={tp}");
+        }
+        // tp=16 must span nodes
+        let l = RankLayout::new(16, 2, 2);
+        assert!(!l.tp_within_node(&m));
+    }
+
+    #[test]
+    fn group_membership_consistency() {
+        let l = RankLayout::new(2, 2, 2);
+        for r in 0..l.world_size() {
+            assert!(l.tp_group(r).contains(&r));
+            assert!(l.dp_group(r).contains(&r));
+            assert!(l.pp_group(r).contains(&r));
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Discrete-event pipeline simulator.
+//!
+//! Executes the *actual* `schedule::Schedule` instruction streams against
+//! the comm/kernel cost models: each stage is a resource that runs its ops
+//! in stream order, forwards become available to the next stage after the
+//! p2p transfer, backwards flow the other way.  The measured idle time IS
+//! the pipeline bubble — no closed-form `(p-1)/m` assumption — so this
+//! cross-validates the analytic model (`perf::PerfModel`) and exposes
+//! schedule effects the formula hides (e.g. GPipe's fill/drain asymmetry,
+//! unsaturated pipelines).
+
+use crate::comm::CommModel;
+use crate::config::{ModelSpec, ParallelConfig};
+use crate::parallel::RankLayout;
+use crate::schedule::{self, Op};
+use crate::topology::Machine;
+
+use super::{PerfError, PerfModel};
+
+/// Simulated timeline of one training step for a single pipeline replica.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Wall-clock of the pipelined fwd/bwd phase (max over stages).
+    pub t_pipeline: f64,
+    /// Per-stage busy time (compute + folded TP comm).
+    pub busy: Vec<f64>,
+    /// Per-stage idle (bubble) time inside the pipeline phase.
+    pub idle: Vec<f64>,
+    /// Measured bubble fraction on the busiest stage's timeline.
+    pub bubble_fraction: f64,
+    /// End-to-end step time (adds DP sync + optimizer from the cost model).
+    pub t_step: f64,
+    pub pct_peak: f64,
+}
+
+/// Simulate one step of `cfg` on `model`.
+pub fn simulate(
+    perf: &PerfModel,
+    model: &ModelSpec,
+    cfg: &ParallelConfig,
+) -> Result<SimResult, PerfError> {
+    cfg.validate().map_err(PerfError::Invalid)?;
+    let analytic = perf.evaluate(model, cfg)?; // reuses OOM + validity checks
+
+    let p = cfg.pp as usize;
+    let m = cfg.microbatches();
+    let sched = schedule::build(cfg.schedule, cfg.pp, m);
+    sched.validate().map_err(PerfError::Invalid)?;
+
+    let machine = Machine::for_gpus(cfg.world_size());
+    let comm = CommModel::new(machine);
+    let layout = RankLayout::new(cfg.tp, cfg.pp, cfg.dp);
+
+    // per-op durations from the same pricing as the analytic model
+    let (t_fwd, t_bwd) = per_microbatch_times(perf, model, cfg, &comm, &layout);
+    let p2p_bytes = cfg.mbs as u64 * model.seq * model.hidden * cfg.precision.bytes();
+    let stride = (cfg.dp * cfg.tp).min(comm.machine.n_gpus() - 1);
+    let t_hop = comm.p2p(0, stride, p2p_bytes) * (1.0 - perf.pp_overlap);
+
+    // event-driven execution: fixed-point over stage program counters
+    let mut pc = vec![0usize; p];
+    let mut clock = vec![0.0f64; p]; // next free time per stage
+    let mut busy = vec![0.0f64; p];
+    let mut fwd_done = vec![vec![f64::NAN; m as usize]; p];
+    let mut bwd_done = vec![vec![f64::NAN; m as usize]; p];
+
+    loop {
+        let mut progressed = false;
+        for i in 0..p {
+            while pc[i] < sched.streams[i].len() {
+                let op = sched.streams[i][pc[i]];
+                let mb = op.mb() as usize;
+                let ready = match op {
+                    Op::Forward { .. } => {
+                        if i == 0 {
+                            Some(0.0)
+                        } else if fwd_done[i - 1][mb].is_nan() {
+                            None
+                        } else {
+                            Some(fwd_done[i - 1][mb] + t_hop)
+                        }
+                    }
+                    Op::Backward { .. } => {
+                        if i == p - 1 {
+                            // loss is local; backward can start right after
+                            // this stage's own forward of that micro-batch
+                            Some(fwd_done[i][mb])
+                        } else if bwd_done[i + 1][mb].is_nan() {
+                            None
+                        } else {
+                            Some(bwd_done[i + 1][mb] + t_hop)
+                        }
+                    }
+                };
+                let Some(ready) = ready else { break };
+                if ready.is_nan() {
+                    break;
+                }
+                let dur = if op.is_forward() { t_fwd } else { t_bwd };
+                let start = clock[i].max(ready);
+                let done = start + dur;
+                clock[i] = done;
+                busy[i] += dur;
+                match op {
+                    Op::Forward { .. } => fwd_done[i][mb] = done,
+                    Op::Backward { .. } => bwd_done[i][mb] = done,
+                }
+                pc[i] += 1;
+                progressed = true;
+            }
+        }
+        if pc.iter().enumerate().all(|(i, &c)| c == sched.streams[i].len()) {
+            break;
+        }
+        assert!(progressed, "schedule deadlocked in simulation");
+    }
+
+    let t_pipeline = clock.iter().cloned().fold(0.0, f64::max);
+    let idle: Vec<f64> = busy.iter().map(|b| t_pipeline - b).collect();
+    let bubble_fraction = idle.iter().cloned().fold(0.0, f64::max) / t_pipeline;
+
+    // end-of-step terms priced identically to the analytic model
+    let t_step = t_pipeline + analytic.t_pp_comm.min(0.0).max(0.0) // p2p already in timeline
+        + analytic.t_dp_comm
+        + analytic.t_optimizer;
+
+    let pct_peak = analytic.hw_flops_per_gpu / t_step / crate::topology::PEAK_FP16_FLOPS * 100.0;
+
+    Ok(SimResult { t_pipeline, busy, idle, bubble_fraction, t_step, pct_peak })
+}
+
+/// Expose the per-microbatch stage times the analytic model prices
+/// (fwd, bwd), including folded TP all-reduces.
+fn per_microbatch_times(
+    perf: &PerfModel,
+    model: &ModelSpec,
+    cfg: &ParallelConfig,
+    _comm: &CommModel,
+    _layout: &RankLayout,
+) -> (f64, f64) {
+    // recover (t_fwd + t_bwd) from the analytic breakdown of a single
+    // replica with the same per-microbatch pricing
+    let solo = ParallelConfig { dp: 1, gbs: cfg.gbs / cfg.dp, ..cfg.clone() };
+    let b = perf.evaluate(model, &solo).expect("solo replica must evaluate");
+    let m = solo.microbatches() as f64;
+    let t_mb = (b.t_compute + b.t_tp_comm) / m;
+    // forward is 1/(3+r) of a microbatch with recompute r
+    let recompute = if cfg.checkpoint_activations { 1.0 } else { 0.0 };
+    let t_fwd = t_mb / (3.0 + recompute);
+    let t_bwd = t_mb - t_fwd;
+    (t_fwd, t_bwd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{lookup, ParallelConfig, ScheduleKind};
+
+    fn pm() -> PerfModel {
+        PerfModel::default()
+    }
+
+    #[test]
+    fn sim_matches_analytic_bubble() {
+        // measured bubble on stage p-1 ~ (p-1)/(m+p-1) for 1F1B
+        let m = lookup("22b").unwrap();
+        let cfg = ParallelConfig::default().with_tp(2).with_pp(8).with_gbs(32);
+        let sim = simulate(&pm(), &m, &cfg).unwrap();
+        let analytic = cfg.bubble_fraction();
+        assert!(
+            (sim.bubble_fraction - analytic).abs() < 0.12,
+            "sim {:.3} vs analytic {:.3}",
+            sim.bubble_fraction,
+            analytic
+        );
+    }
+
+    #[test]
+    fn sim_and_closed_form_agree_on_throughput() {
+        let m = lookup("175b").unwrap();
+        let cfg = ParallelConfig::default().with_tp(8).with_pp(16).with_gbs(256);
+        let sim = simulate(&pm(), &m, &cfg).unwrap();
+        let ana = pm().evaluate(&m, &cfg).unwrap();
+        let rel = (sim.pct_peak - ana.pct_peak).abs() / ana.pct_peak;
+        assert!(rel < 0.15, "sim {:.2}% vs analytic {:.2}%", sim.pct_peak, ana.pct_peak);
+    }
+
+    #[test]
+    fn gpipe_slower_than_1f1b_when_unsaturated() {
+        let m = lookup("22b").unwrap();
+        let base = ParallelConfig::default().with_tp(2).with_pp(8).with_gbs(16);
+        let f1b = simulate(&pm(), &m, &base).unwrap();
+        let gp = simulate(
+            &pm(),
+            &m,
+            &base.clone().with_schedule(ScheduleKind::GPipe),
+        )
+        .unwrap();
+        // same bubble in time terms, but GPipe can never beat 1F1B
+        assert!(gp.t_pipeline >= f1b.t_pipeline * 0.99);
+    }
+
+    #[test]
+    fn deeper_pipeline_more_measured_bubble() {
+        let m = lookup("22b").unwrap();
+        let b2 = simulate(&pm(), &m, &ParallelConfig::default().with_tp(8).with_pp(2).with_gbs(32))
+            .unwrap();
+        let b8 =
+            simulate(&pm(), &m, &ParallelConfig::default().with_tp(8).with_pp(8).with_gbs(32))
+                .unwrap();
+        assert!(b8.bubble_fraction > b2.bubble_fraction);
+    }
+
+    #[test]
+    fn single_stage_no_bubble() {
+        let m = lookup("22b").unwrap();
+        let cfg = ParallelConfig::default().with_tp(8).with_gbs(8);
+        let sim = simulate(&pm(), &m, &cfg).unwrap();
+        assert!(sim.bubble_fraction < 1e-9);
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! This is the only boundary between the rust coordinator and the
+//! JAX/Pallas compute: `make artifacts` ran Python once; from here on the
+//! stage graphs are opaque compiled executables on the PJRT CPU client
+//! (`PjRtClient::cpu` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute`).  HLO *text* is the interchange format —
+//! jax >= 0.5 serialises protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// meta.json emitted by `python/compile/aot.py` for one artifact bundle.
+#[derive(Debug, Clone)]
+pub struct BundleMeta {
+    pub model: ModelMeta,
+    pub n_stages: u32,
+    pub mbs: u32,
+    pub use_flash: bool,
+    pub use_fused_xent: bool,
+    pub tokens_per_microbatch: u64,
+    pub flops_per_microbatch: f64,
+    pub stages: Vec<StageMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_layers: u32,
+    pub hidden: u64,
+    pub n_heads: u32,
+    pub vocab: u64,
+    pub seq: u64,
+    pub total_params: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageMeta {
+    pub index: u32,
+    pub layer_start: u32,
+    pub layer_end: u32,
+    pub has_embed: bool,
+    pub has_head: bool,
+    pub param_count: u64,
+    pub artifacts: StageArtifacts,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageArtifacts {
+    pub init: String,
+    pub fwd: String,
+    pub bwd: String,
+}
+
+impl BundleMeta {
+    /// Parse the aot.py meta.json (in-tree JSON parser; offline build).
+    pub fn from_json(src: &str) -> Result<Self> {
+        let j = Json::parse(src).map_err(|e| anyhow!("{e}"))?;
+        let m = j.field("model").map_err(|e| anyhow!("{e}"))?;
+        let model = ModelMeta {
+            name: m.str_field("name").map_err(|e| anyhow!("{e}"))?,
+            n_layers: m.u64_field("n_layers").map_err(|e| anyhow!("{e}"))? as u32,
+            hidden: m.u64_field("hidden").map_err(|e| anyhow!("{e}"))?,
+            n_heads: m.u64_field("n_heads").map_err(|e| anyhow!("{e}"))? as u32,
+            vocab: m.u64_field("vocab").map_err(|e| anyhow!("{e}"))?,
+            seq: m.u64_field("seq").map_err(|e| anyhow!("{e}"))?,
+            total_params: m.u64_field("total_params").map_err(|e| anyhow!("{e}"))?,
+        };
+        let stages_json = j
+            .field("stages")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("stages must be an array"))?;
+        let mut stages = Vec::with_capacity(stages_json.len());
+        for s in stages_json {
+            let a = s.field("artifacts").map_err(|e| anyhow!("{e}"))?;
+            stages.push(StageMeta {
+                index: s.u64_field("index").map_err(|e| anyhow!("{e}"))? as u32,
+                layer_start: s.u64_field("layer_start").map_err(|e| anyhow!("{e}"))? as u32,
+                layer_end: s.u64_field("layer_end").map_err(|e| anyhow!("{e}"))? as u32,
+                has_embed: s.bool_field("has_embed").map_err(|e| anyhow!("{e}"))?,
+                has_head: s.bool_field("has_head").map_err(|e| anyhow!("{e}"))?,
+                param_count: s.u64_field("param_count").map_err(|e| anyhow!("{e}"))?,
+                artifacts: StageArtifacts {
+                    init: a.str_field("init").map_err(|e| anyhow!("{e}"))?,
+                    fwd: a.str_field("fwd").map_err(|e| anyhow!("{e}"))?,
+                    bwd: a.str_field("bwd").map_err(|e| anyhow!("{e}"))?,
+                },
+            });
+        }
+        Ok(BundleMeta {
+            model,
+            n_stages: j.u64_field("n_stages").map_err(|e| anyhow!("{e}"))? as u32,
+            mbs: j.u64_field("mbs").map_err(|e| anyhow!("{e}"))? as u32,
+            use_flash: j.bool_field("use_flash").map_err(|e| anyhow!("{e}"))?,
+            use_fused_xent: j.bool_field("use_fused_xent").map_err(|e| anyhow!("{e}"))?,
+            tokens_per_microbatch: j
+                .u64_field("tokens_per_microbatch")
+                .map_err(|e| anyhow!("{e}"))?,
+            flops_per_microbatch: j
+                .f64_field("flops_per_microbatch")
+                .map_err(|e| anyhow!("{e}"))?,
+            stages,
+        })
+    }
+}
+
+/// A compiled executable, shareable across worker threads.
+///
+/// SAFETY: the `xla` crate wraps raw pointers (hence `!Send`), but XLA's
+/// `PjRtClient` and `PjRtLoadedExecutable` are documented thread-safe
+/// (execution is internally synchronised per device).  We share only the
+/// client and executables; `Literal`s and `PjRtBuffer`s stay thread-local.
+///
+/// NOTE on `execute` vs `execute_b`: the published xla crate's `execute`
+/// entry point (xla_rs.cc) uploads every input literal to a fresh device
+/// buffer and `release()`s it without ever freeing — every call leaks all
+/// inputs.  We therefore ALWAYS go through `execute_b` with buffers this
+/// wrapper owns (freed by `PjRtBuffer::drop`), which also lets the hot
+/// path upload the big parameter buffer once per step instead of once per
+/// micro-batch.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with device-buffer inputs (the hot path); flattens the
+    /// 1-element replica dim and unpacks the output tuple (aot.py lowers
+    /// with `return_tuple=True`).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let mut out = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let first = out
+            .pop()
+            .and_then(|mut d| if d.is_empty() { None } else { Some(d.swap_remove(0)) })
+            .ok_or_else(|| anyhow!("executable produced no outputs"))?;
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with literal inputs: uploads to owned device buffers first
+    /// (see the leak note above), then defers to [`Executable::run_b`].
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<Result<_, _>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_b(&refs)
+    }
+}
+
+/// The PJRT client plus helpers; one per process, shared by all workers.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn cpu() -> Result<Arc<Self>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Self { client }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe, client: self.client.clone() })
+    }
+
+    /// Upload an f32 host slice to an owned device buffer.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<OwnedBuffer> {
+        Ok(OwnedBuffer(self.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    /// Upload an i32 host slice to an owned device buffer.
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<OwnedBuffer> {
+        Ok(OwnedBuffer(self.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+
+    /// Upload a u32 host slice to an owned device buffer.
+    pub fn buf_u32(&self, data: &[u32], dims: &[usize]) -> Result<OwnedBuffer> {
+        Ok(OwnedBuffer(self.client.buffer_from_host_buffer(data, dims, None)?))
+    }
+}
+
+/// A device buffer owned by a single worker thread.  The `xla` wrapper
+/// type is `!Send` only because of its raw pointer; PJRT CPU buffers are
+/// safe to move between threads as long as use is externally synchronised,
+/// which the engine guarantees (each buffer is created, used and dropped
+/// by one worker).
+pub struct OwnedBuffer(pub xla::PjRtBuffer);
+
+unsafe impl Send for OwnedBuffer {}
+
+/// One pipeline stage's compiled entry points.
+pub struct StageExecutables {
+    pub meta: StageMeta,
+    pub init: Executable,
+    pub fwd: Executable,
+    pub bwd: Executable,
+}
+
+/// A fully-loaded artifact bundle: meta + compiled stages.
+pub struct Bundle {
+    pub dir: PathBuf,
+    pub meta: BundleMeta,
+    pub stages: Vec<StageExecutables>,
+}
+
+impl Bundle {
+    /// Load `artifacts/<name>` (meta.json + all stage executables).
+    pub fn load(rt: &Runtime, dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let meta_path = dir.join("meta.json");
+        let meta = BundleMeta::from_json(
+            &std::fs::read_to_string(&meta_path)
+                .with_context(|| format!("reading {meta_path:?} — run `make artifacts`"))?,
+        )
+        .context("parsing meta.json")?;
+        let mut stages = Vec::with_capacity(meta.stages.len());
+        for sm in &meta.stages {
+            stages.push(StageExecutables {
+                meta: sm.clone(),
+                init: rt.load(&dir.join(&sm.artifacts.init))?,
+                fwd: rt.load(&dir.join(&sm.artifacts.fwd))?,
+                bwd: rt.load(&dir.join(&sm.artifacts.bwd))?,
+            });
+        }
+        Ok(Self { dir, meta, stages })
+    }
+
+    /// Conventional bundle directory name.
+    pub fn dir_name(model: &str, stages: u32, mbs: u32) -> String {
+        format!("{model}-s{stages}-mb{mbs}")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// u32 literal (PRNG keys).
+pub fn lit_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Scalar f32 from a rank-0 literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

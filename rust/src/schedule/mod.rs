@@ -1,0 +1,265 @@
+//! Pipeline schedules (§II.C): GPipe and PipeDream-style 1F1B.
+//!
+//! A schedule is compiled to one *instruction stream per stage*: the
+//! ordered list of Forward/Backward ops each pipeline rank executes.  The
+//! same streams drive both the discrete-event performance simulator
+//! (`perf::sim`) and the real execution engine (`coordinator`), so the
+//! thing we benchmark is the thing we run.
+//!
+//! Interleaved 1F1B (virtual chunks) is modelled analytically in
+//! `ScheduleKind::bubble_fraction`; the instruction-stream generators here
+//! cover the two schedules the paper actually runs (DeepSpeed's pipeline
+//! engine implements 1F1B, §V.A).
+
+use crate::config::ScheduleKind;
+
+/// One pipeline instruction for a stage rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Run the stage forward for micro-batch `mb` (receives activation from
+    /// the previous stage implicitly; blocking semantics).
+    Forward { mb: u32 },
+    /// Run the stage backward for micro-batch `mb` (receives the gradient
+    /// from the next stage implicitly).
+    Backward { mb: u32 },
+}
+
+impl Op {
+    pub fn mb(&self) -> u32 {
+        match self {
+            Op::Forward { mb } | Op::Backward { mb } => *mb,
+        }
+    }
+
+    pub fn is_forward(&self) -> bool {
+        matches!(self, Op::Forward { .. })
+    }
+}
+
+/// Instruction streams for all `p` stages of one schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub p: u32,
+    pub m: u32,
+    /// `streams[stage]` = ordered ops for that stage.
+    pub streams: Vec<Vec<Op>>,
+}
+
+/// GPipe (§II.C): all m forwards, flush, all m backwards (reverse order).
+pub fn gpipe(p: u32, m: u32) -> Schedule {
+    assert!(p >= 1 && m >= 1);
+    let streams = (0..p)
+        .map(|_| {
+            let fwd = (0..m).map(|mb| Op::Forward { mb });
+            let bwd = (0..m).rev().map(|mb| Op::Backward { mb });
+            fwd.chain(bwd).collect()
+        })
+        .collect();
+    Schedule { kind: ScheduleKind::GPipe, p, m, streams }
+}
+
+/// PipeDream-flush 1F1B (§II.C): stage `i` runs `min(p-1-i, m)` warmup
+/// forwards, then alternates one-forward-one-backward, then drains.
+pub fn one_f1b(p: u32, m: u32) -> Schedule {
+    assert!(p >= 1 && m >= 1);
+    let streams = (0..p)
+        .map(|i| {
+            let warmup = (p - 1 - i).min(m);
+            let mut ops = Vec::with_capacity(2 * m as usize);
+            let mut next_fwd = 0;
+            let mut next_bwd = 0;
+            for _ in 0..warmup {
+                ops.push(Op::Forward { mb: next_fwd });
+                next_fwd += 1;
+            }
+            // steady state: 1F1B until all forwards are issued
+            while next_fwd < m {
+                ops.push(Op::Forward { mb: next_fwd });
+                next_fwd += 1;
+                ops.push(Op::Backward { mb: next_bwd });
+                next_bwd += 1;
+            }
+            // cooldown: drain remaining backwards
+            while next_bwd < m {
+                ops.push(Op::Backward { mb: next_bwd });
+                next_bwd += 1;
+            }
+            ops
+        })
+        .collect();
+    Schedule { kind: ScheduleKind::OneF1B, p, m, streams }
+}
+
+/// Build the stream set for a schedule kind (interleaved falls back to
+/// plain 1F1B streams; its smaller bubble is captured analytically).
+pub fn build(kind: ScheduleKind, p: u32, m: u32) -> Schedule {
+    match kind {
+        ScheduleKind::GPipe => gpipe(p, m),
+        ScheduleKind::OneF1B | ScheduleKind::Interleaved1F1B { .. } => {
+            let mut s = one_f1b(p, m);
+            s.kind = kind;
+            s
+        }
+    }
+}
+
+impl Schedule {
+    /// Peak number of in-flight activations held by `stage` — what the
+    /// activation-memory model charges (1F1B caps it at `p - stage`;
+    /// GPipe at `m`, which is why GPipe OOMs at large m).
+    pub fn peak_inflight(&self, stage: u32) -> u32 {
+        let mut live: i64 = 0;
+        let mut peak: i64 = 0;
+        for op in &self.streams[stage as usize] {
+            match op {
+                Op::Forward { .. } => live += 1,
+                Op::Backward { .. } => live -= 1,
+            }
+            peak = peak.max(live);
+        }
+        peak as u32
+    }
+
+    /// Check the stream invariants; returns an error description if broken.
+    /// Used by proptest (`rust/tests/props.rs`).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, ops) in self.streams.iter().enumerate() {
+            let m = self.m as usize;
+            if ops.len() != 2 * m {
+                return Err(format!("stage {i}: {} ops, want {}", ops.len(), 2 * m));
+            }
+            let mut fwd_seen = vec![false; m];
+            let mut bwd_seen = vec![false; m];
+            for op in ops {
+                let mb = op.mb() as usize;
+                match op {
+                    Op::Forward { .. } => {
+                        if fwd_seen[mb] {
+                            return Err(format!("stage {i}: fwd {mb} twice"));
+                        }
+                        fwd_seen[mb] = true;
+                    }
+                    Op::Backward { .. } => {
+                        if !fwd_seen[mb] {
+                            return Err(format!("stage {i}: bwd {mb} before fwd"));
+                        }
+                        if bwd_seen[mb] {
+                            return Err(format!("stage {i}: bwd {mb} twice"));
+                        }
+                        bwd_seen[mb] = true;
+                    }
+                }
+            }
+            if !fwd_seen.iter().all(|&s| s) || !bwd_seen.iter().all(|&s| s) {
+                return Err(format!("stage {i}: not all micro-batches processed"));
+            }
+            // forwards must be issued in order (activations are a FIFO
+            // between stages in the real engine)
+            let fwd_order: Vec<u32> =
+                ops.iter().filter(|o| o.is_forward()).map(|o| o.mb()).collect();
+            if !fwd_order.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("stage {i}: forwards out of order"));
+            }
+        }
+        // cross-stage deadlock-freedom: simulate with blocking FIFOs
+        self.check_deadlock_free()
+    }
+
+    /// Abstractly execute all streams against blocking FIFO channels to
+    /// prove the schedule cannot deadlock under the engine's semantics.
+    fn check_deadlock_free(&self) -> Result<(), String> {
+        let p = self.p as usize;
+        let mut pc = vec![0usize; p]; // program counter per stage
+        // acts_ready[i] = forwards completed by stage i (feeds stage i+1);
+        // grads_ready[i] = backwards completed by stage i (feeds stage i-1)
+        let mut acts_done: Vec<Vec<bool>> = vec![vec![false; self.m as usize]; p];
+        let mut grads_done: Vec<Vec<bool>> = vec![vec![false; self.m as usize]; p];
+        loop {
+            let mut progressed = false;
+            for i in 0..p {
+                while pc[i] < self.streams[i].len() {
+                    let op = self.streams[i][pc[i]];
+                    let mb = op.mb() as usize;
+                    let ready = match op {
+                        Op::Forward { .. } => i == 0 || acts_done[i - 1][mb],
+                        Op::Backward { .. } => i == p - 1 || grads_done[i + 1][mb],
+                    };
+                    if !ready {
+                        break;
+                    }
+                    match op {
+                        Op::Forward { .. } => acts_done[i][mb] = true,
+                        Op::Backward { .. } => grads_done[i][mb] = true,
+                    }
+                    pc[i] += 1;
+                    progressed = true;
+                }
+            }
+            if pc.iter().enumerate().all(|(i, &c)| c == self.streams[i].len()) {
+                return Ok(());
+            }
+            if !progressed {
+                return Err(format!("deadlock at pcs {pc:?}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_and_1f1b_validate() {
+        for p in [1u32, 2, 4, 8] {
+            for m in [1u32, 2, 4, 16, 33] {
+                gpipe(p, m).validate().unwrap();
+                one_f1b(p, m).validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn one_f1b_caps_inflight_at_stage_depth() {
+        let s = one_f1b(8, 32);
+        for stage in 0..8 {
+            let cap = 8 - stage; // p - i
+            assert!(
+                s.peak_inflight(stage) <= cap,
+                "stage {stage}: {} > {cap}",
+                s.peak_inflight(stage)
+            );
+        }
+    }
+
+    #[test]
+    fn gpipe_inflight_grows_with_m() {
+        let s = gpipe(4, 32);
+        assert_eq!(s.peak_inflight(0), 32); // why GPipe hits the memory wall
+        let f = one_f1b(4, 32);
+        assert_eq!(f.peak_inflight(0), 4);
+    }
+
+    #[test]
+    fn steady_state_alternates() {
+        let s = one_f1b(4, 16);
+        // stage 0 warms up with 3 forwards then strictly alternates
+        let ops = &s.streams[0];
+        assert!(ops[..3].iter().all(|o| o.is_forward()));
+        for i in 0..13 {
+            assert!(ops[3 + 2 * i].is_forward());
+            assert!(!ops[4 + 2 * i].is_forward());
+        }
+    }
+
+    #[test]
+    fn single_stage_degenerates() {
+        let s = one_f1b(1, 4);
+        // fwd/bwd strictly alternate when there is no pipeline
+        let ops = &s.streams[0];
+        for (idx, op) in ops.iter().enumerate() {
+            assert_eq!(op.is_forward(), idx % 2 == 0);
+        }
+    }
+}

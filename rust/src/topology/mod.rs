@@ -1,0 +1,220 @@
+//! Frontier machine model (paper Fig 5).
+//!
+//! A Frontier node carries 4 MI250X cards; each card is two Graphics
+//! Compute Dies (GCDs).  Following the paper, "GPU" means a GCD, so a node
+//! has 8 GPUs.  The link hierarchy (Fig 5):
+//!
+//! * same card (GCD pair):      4 x (50+50 GB/s) Infinity Fabric = 200 GB/s
+//! * adjacent cards, same node: half of that                     = 100 GB/s
+//! * non-adjacent cards:        a single 50+50 GB/s IF link      =  50 GB/s
+//! * across nodes (Slingshot):  25+25 GB/s                       =  25 GB/s
+//!
+//! The non-adjacent-card tier matters: a TP=8 ring must traverse at least
+//! one 50 GB/s hop, which is why the paper's 1T recipe (TP=8) pays more
+//! per all-reduce byte than the 175B recipe (TP=4) — one of the levers
+//! behind Fig 11's 36.14% -> 31.96% drop.
+//!
+//! Every TP/PP-placement conclusion in the paper (§III.A: keep TP <= 8 and
+//! inside a node; §V.A: inter-node tree all-reduce is the bottleneck)
+//! derives from this hierarchy, which is encoded here exactly.
+
+
+pub const GPUS_PER_NODE: u32 = 8;
+pub const GPUS_PER_CARD: u32 = 2;
+
+/// MI250X GCD theoretical fp16 peak (paper footnote 1).
+pub const PEAK_FP16_FLOPS: f64 = 191.5e12;
+/// MI250X GCD HBM capacity.
+pub const HBM_BYTES: u64 = 64 * (1 << 30);
+/// MI250X GCD HBM bandwidth (for the roofline check, §V.B).
+pub const HBM_BW: f64 = 1.6e12;
+
+/// Link classes of Fig 5, slowest to fastest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LinkKind {
+    /// Slingshot-11 NIC between nodes: 25+25 GB/s.
+    InterNode,
+    /// Single Infinity Fabric link between non-adjacent cards: 50 GB/s.
+    IntraNodeFar,
+    /// Infinity Fabric between adjacent cards in a node: ~100 GB/s.
+    IntraNode,
+    /// The 4x IF bundle between the two GCDs of one MI250X: 200 GB/s.
+    IntraCard,
+    /// Same device (no transfer).
+    Local,
+}
+
+impl LinkKind {
+    /// Unidirectional bandwidth in bytes/s.
+    pub fn bandwidth(&self) -> f64 {
+        match self {
+            LinkKind::Local => f64::INFINITY,
+            LinkKind::IntraCard => 200.0e9,
+            LinkKind::IntraNode => 100.0e9,
+            LinkKind::IntraNodeFar => 50.0e9,
+            LinkKind::InterNode => 25.0e9,
+        }
+    }
+
+    /// Per-message latency in seconds (DMA setup / NIC traversal).
+    pub fn latency(&self) -> f64 {
+        match self {
+            LinkKind::Local => 0.0,
+            LinkKind::IntraCard => 1.0e-6,
+            LinkKind::IntraNode => 2.0e-6,
+            LinkKind::IntraNodeFar => 2.0e-6,
+            LinkKind::InterNode => 8.0e-6,
+        }
+    }
+}
+
+/// A global GPU (GCD) index on the machine.
+pub type GpuId = u32;
+
+/// The whole machine: `n_nodes` x 8 GCDs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Machine {
+    pub n_nodes: u32,
+}
+
+impl Machine {
+    pub fn new(n_nodes: u32) -> Self {
+        assert!(n_nodes >= 1);
+        Self { n_nodes }
+    }
+
+    /// Machine sized to hold exactly `gpus` GCDs (rounded up to full nodes).
+    pub fn for_gpus(gpus: u32) -> Self {
+        Self::new(gpus.div_ceil(GPUS_PER_NODE))
+    }
+
+    pub fn n_gpus(&self) -> u32 {
+        self.n_nodes * GPUS_PER_NODE
+    }
+
+    pub fn node_of(&self, gpu: GpuId) -> u32 {
+        gpu / GPUS_PER_NODE
+    }
+
+    pub fn card_of(&self, gpu: GpuId) -> u32 {
+        gpu / GPUS_PER_CARD
+    }
+
+    /// Classify the link between two GCDs (Fig 5).
+    pub fn link(&self, a: GpuId, b: GpuId) -> LinkKind {
+        debug_assert!(a < self.n_gpus() && b < self.n_gpus());
+        if a == b {
+            LinkKind::Local
+        } else if self.card_of(a) == self.card_of(b) {
+            LinkKind::IntraCard
+        } else if self.node_of(a) == self.node_of(b) {
+            // adjacent cards share a dual IF link (~100 GB/s); the rest of
+            // the in-node pairs ride a single 50 GB/s link
+            let ca = self.card_of(a) % (GPUS_PER_NODE / GPUS_PER_CARD);
+            let cb = self.card_of(b) % (GPUS_PER_NODE / GPUS_PER_CARD);
+            if ca.abs_diff(cb) == 1 {
+                LinkKind::IntraNode
+            } else {
+                LinkKind::IntraNodeFar
+            }
+        } else {
+            LinkKind::InterNode
+        }
+    }
+
+    /// Slowest link among a group of GPUs arranged in a ring — the
+    /// effective bandwidth of ring collectives over the group.
+    pub fn ring_bottleneck(&self, group: &[GpuId]) -> LinkKind {
+        if group.len() <= 1 {
+            return LinkKind::Local;
+        }
+        let mut worst = LinkKind::IntraCard;
+        for i in 0..group.len() {
+            let j = (i + 1) % group.len();
+            let l = self.link(group[i], group[j]);
+            if l < worst {
+                worst = l;
+            }
+        }
+        worst
+    }
+
+    /// Does the group span more than one node?  (§III.A: TP beyond a node
+    /// falls off the Infinity-Fabric cliff.)
+    pub fn spans_nodes(&self, group: &[GpuId]) -> bool {
+        group
+            .windows(2)
+            .any(|w| self.node_of(w[0]) != self.node_of(w[1]))
+    }
+
+    /// Pairwise bandwidth matrix in GB/s for the first `n` GPUs
+    /// (regenerates the Fig 5 view; used by `examples/paper_tables.rs`).
+    pub fn bandwidth_matrix(&self, n: u32) -> Vec<Vec<f64>> {
+        let n = n.min(self.n_gpus());
+        (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|j| {
+                        let bw = self.link(i, j).bandwidth();
+                        if bw.is_finite() {
+                            bw / 1e9
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_hierarchy_matches_fig5() {
+        let m = Machine::new(2);
+        assert_eq!(m.link(0, 1), LinkKind::IntraCard); // GCD pair
+        assert_eq!(m.link(0, 2), LinkKind::IntraNode); // adjacent cards
+        assert_eq!(m.link(0, 6), LinkKind::IntraNodeFar); // card 0 <-> card 3
+        assert_eq!(m.link(0, 9), LinkKind::InterNode); // across nodes
+        assert_eq!(m.link(3, 3), LinkKind::Local);
+        assert!(LinkKind::IntraCard.bandwidth() > LinkKind::IntraNode.bandwidth());
+        assert!(LinkKind::IntraNode.bandwidth() > LinkKind::IntraNodeFar.bandwidth());
+        assert!(LinkKind::IntraNodeFar.bandwidth() > LinkKind::InterNode.bandwidth());
+    }
+
+    #[test]
+    fn tp2_fastest_tp8_still_in_node() {
+        // §III.A: TP=2 rides the 200 GB/s GCD pair; TP 4/8 the 100 GB/s
+        // fabric; anything larger hits the 25 GB/s NIC.
+        let m = Machine::new(2);
+        let tp2: Vec<u32> = (0..2).collect();
+        let tp8: Vec<u32> = (0..8).collect();
+        let tp16: Vec<u32> = (0..16).collect();
+        assert_eq!(m.ring_bottleneck(&tp2), LinkKind::IntraCard);
+        // the 8-GCD ring wraps from card 3 back to card 0: a 50 GB/s hop
+        assert_eq!(m.ring_bottleneck(&tp8), LinkKind::IntraNodeFar);
+        assert_eq!(m.ring_bottleneck(&tp16), LinkKind::InterNode);
+    }
+
+    #[test]
+    fn machine_sizing() {
+        assert_eq!(Machine::for_gpus(1024).n_nodes, 128);
+        assert_eq!(Machine::for_gpus(3072).n_nodes, 384);
+        assert_eq!(Machine::for_gpus(3).n_nodes, 1);
+    }
+
+    #[test]
+    fn bandwidth_matrix_symmetric() {
+        let m = Machine::new(1);
+        let mat = m.bandwidth_matrix(8);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(mat[i][j], mat[j][i]);
+            }
+            assert_eq!(mat[i][i], 0.0);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser: `--flag`, `--key value`, `--key=value`,
+//! positional subcommands.  Replaces clap for the `frontier` binary and
+//! the examples.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed arguments: a subcommand plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Subcommand (first positional), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn opt<T: FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| format!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    /// String option with default.
+    pub fn opt_str(&self, name: &str, default: &str) -> String {
+        self.options
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --dp 2 --steps=30 --zero1 --bundle tiny-s2-mb2");
+        assert_eq!(a.command(), Some("train"));
+        assert_eq!(a.opt::<usize>("dp", 1).unwrap(), 2);
+        assert_eq!(a.opt::<u32>("steps", 0).unwrap(), 30);
+        assert!(a.flag("zero1"));
+        assert!(!a.flag("gpipe"));
+        assert_eq!(a.opt_str("bundle", "x"), "tiny-s2-mb2");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("simulate");
+        assert_eq!(a.opt::<u32>("tp", 4).unwrap(), 4);
+        assert_eq!(a.opt_str("model", "175b"), "175b");
+    }
+
+    #[test]
+    fn bad_value_reports_key() {
+        let a = parse("x --tp banana");
+        let err = a.opt::<u32>("tp", 1).unwrap_err();
+        assert!(err.contains("tp"), "{err}");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("hpo --evals 16 --des");
+        assert!(a.flag("des"));
+        assert_eq!(a.opt::<u32>("evals", 0).unwrap(), 16);
+    }
+}

@@ -1,0 +1,6 @@
+//! In-tree utilities: JSON parsing and CLI argument handling.
+//! (The build is fully offline — see `.cargo/config.toml` — so these
+//! replace serde_json and clap.)
+
+pub mod args;
+pub mod json;

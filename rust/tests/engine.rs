@@ -1,0 +1,194 @@
+//! End-to-end tests of the real training engine (coordinator + runtime +
+//! collectives + ZeRO-1 over the AOT artifacts).
+//!
+//! The key invariants mirror what makes distributed training *correct*:
+//! every parallelisation of the same (model, data, optimizer) must walk
+//! the same loss trajectory as the serial baseline.
+
+use std::path::PathBuf;
+
+use frontier_llm::config::ScheduleKind;
+use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
+use frontier_llm::optim::AdamConfig;
+
+fn artifacts_root() -> PathBuf {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        root.join("tiny-s1-mb2/meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    root
+}
+
+fn run(bundle: &str, dp: usize, m: u32, steps: u32, zero1: bool, sched: ScheduleKind) -> TrainReport {
+    train(&EngineConfig {
+        artifacts_root: artifacts_root(),
+        bundle: bundle.into(),
+        dp,
+        schedule: sched,
+        microbatches: m,
+        steps,
+        adam: AdamConfig::default(),
+        lr_schedule: None,
+        zero1,
+        seed: 42,
+        log_every: 0,
+        checkpoint_dir: None,
+        checkpoint_every: 0,
+        resume: false,
+    })
+    .expect("training must succeed")
+}
+
+fn losses(r: &TrainReport) -> Vec<f32> {
+    r.logs.iter().map(|l| l.loss).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * x.abs().max(1.0),
+            "{what}: step {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pipeline_matches_single_stage_trajectory() {
+    // THE pipeline-parallel correctness invariant: a 2-stage 1F1B pipeline
+    // must reproduce the fused single-stage loss trajectory exactly (same
+    // data, same init keys per stage, same optimizer).
+    let single = run("tiny-s1-mb2", 1, 2, 5, false, ScheduleKind::OneF1B);
+    let piped = run("tiny-s2-mb2", 1, 2, 5, false, ScheduleKind::OneF1B);
+    assert_close(&losses(&single), &losses(&piped), 2e-3, "pipeline vs single");
+    // loss must actually move
+    assert!(piped.final_loss() < piped.initial_loss());
+}
+
+#[test]
+fn data_parallel_matches_serial_trajectory() {
+    // dp=2 with m=2 consumes the same 4 samples/step as dp=1 with m=4
+    // (the BatchStream interleaves rows across ranks), so the mean loss
+    // trajectories must match.
+    let serial = run("tiny-s2-mb2", 1, 4, 5, false, ScheduleKind::OneF1B);
+    let dp2 = run("tiny-s2-mb2", 2, 2, 5, false, ScheduleKind::OneF1B);
+    assert_close(&losses(&serial), &losses(&dp2), 2e-3, "dp2 vs serial");
+}
+
+#[test]
+fn zero1_matches_ddp_trajectory_e2e() {
+    // turning ZeRO-1 on must not change the numerics, only the memory
+    let ddp = run("tiny-s2-mb2", 2, 2, 5, false, ScheduleKind::OneF1B);
+    let z1 = run("tiny-s2-mb2", 2, 2, 5, true, ScheduleKind::OneF1B);
+    assert_close(&losses(&ddp), &losses(&z1), 1e-3, "zero1 vs ddp");
+}
+
+#[test]
+fn gpipe_matches_1f1b_numerics() {
+    // schedules reorder compute but cannot change the gradients
+    let f1b = run("tiny-s2-mb2", 1, 4, 4, false, ScheduleKind::OneF1B);
+    let gp = run("tiny-s2-mb2", 1, 4, 4, false, ScheduleKind::GPipe);
+    assert_close(&losses(&f1b), &losses(&gp), 1e-3, "gpipe vs 1f1b");
+}
+
+#[test]
+fn four_stage_pipeline_trains() {
+    // deeper pipeline on the mini model, saturated (m >= p)
+    let r = run("mini-s4-mb1", 1, 4, 6, false, ScheduleKind::OneF1B);
+    assert_eq!(r.world_size, 4);
+    assert!(r.final_loss() < r.initial_loss(), "{:?}", losses(&r));
+    assert!(r.logs.iter().all(|l| l.loss.is_finite() && l.grad_norm.is_finite()));
+}
+
+#[test]
+fn pp2_dp2_zero1_full_stack() {
+    // the full 2x2 grid with sharded optimizer — the paper's layout in
+    // miniature (minus TP, which the perf model covers)
+    let r = run("mini-s2-mb2", 2, 2, 6, true, ScheduleKind::OneF1B);
+    assert_eq!(r.world_size, 4);
+    assert!(r.final_loss() < r.initial_loss());
+    assert!(r.comm_bytes > 0, "DP must move bytes through collectives");
+}
+
+#[test]
+fn report_accounting_sane() {
+    let r = run("tiny-s2-mb2", 2, 4, 3, false, ScheduleKind::OneF1B);
+    // tokens/step = mbs * seq * m * dp = 2*32*4*2
+    assert_eq!(r.tokens_per_step, 2 * 32 * 4 * 2);
+    assert!(r.mean_step_time_s > 0.0);
+    assert!(r.tokens_per_sec > 0.0);
+    assert_eq!(r.logs.len(), 3);
+    assert_eq!(r.total_params, 134_912);
+}
+
+#[test]
+fn unsaturated_pipeline_still_correct() {
+    // m < p: bubble-heavy but numerically identical; engine must not hang
+    let r = run("mini-s4-mb1", 1, 2, 3, false, ScheduleKind::OneF1B);
+    assert!(r.logs.len() == 3 && r.final_loss().is_finite());
+}
+
+#[test]
+fn checkpoint_resume_continues_trajectory() {
+    // 6 straight steps == 3 steps + checkpoint + resume for 3 more, with
+    // ZeRO-1 sharded optimizer state across dp=2 (per-rank shards).
+    let dir = std::env::temp_dir().join(format!("fllm-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let straight = run("tiny-s2-mb2", 2, 2, 6, true, ScheduleKind::OneF1B);
+
+    let mk = |steps: u32, resume: bool| EngineConfig {
+        artifacts_root: artifacts_root(),
+        bundle: "tiny-s2-mb2".into(),
+        dp: 2,
+        schedule: ScheduleKind::OneF1B,
+        microbatches: 2,
+        steps,
+        adam: AdamConfig::default(),
+        lr_schedule: None,
+        zero1: true,
+        seed: 42,
+        log_every: 0,
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 0,
+        resume,
+    };
+    let first = train(&mk(3, false)).unwrap();
+    let second = train(&mk(3, true)).unwrap();
+
+    let mut combined = losses(&first);
+    combined.extend(losses(&second));
+    // resumed steps carry absolute indices
+    assert_eq!(second.logs[0].step, 3);
+    assert_close(&losses(&straight), &combined, 1e-4, "resume vs straight");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_shape_mismatch_rejected() {
+    let dir = std::env::temp_dir().join(format!("fllm-mismatch-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk = |dp: usize, resume: bool| EngineConfig {
+        artifacts_root: artifacts_root(),
+        bundle: "tiny-s2-mb2".into(),
+        dp,
+        microbatches: 2,
+        steps: 2,
+        seed: 42,
+        checkpoint_dir: Some(dir.clone()),
+        resume,
+        ..Default::default()
+    };
+    train(&mk(1, false)).unwrap();
+    // resuming with a different dp must be refused
+    assert!(train(&mk(2, true)).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn determinism_same_seed_same_curve() {
+    let a = run("tiny-s2-mb2", 1, 2, 4, false, ScheduleKind::OneF1B);
+    let b = run("tiny-s2-mb2", 1, 2, 4, false, ScheduleKind::OneF1B);
+    assert_eq!(losses(&a), losses(&b), "engine must be deterministic");
+}

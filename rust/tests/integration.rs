@@ -1,0 +1,141 @@
+//! Cross-layer integration tests: python-emitted artifacts vs the rust
+//! model zoo, runtime execution, and perf-model consistency.
+//!
+//! These need `make artifacts` to have run (the Makefile `test` target
+//! guarantees it).
+
+use std::path::{Path, PathBuf};
+
+use frontier_llm::config::{self, ParallelConfig};
+use frontier_llm::perf::{sim, PerfModel};
+use frontier_llm::runtime::{lit_i32, lit_u32, to_f32, Bundle, BundleMeta, Runtime};
+
+fn artifacts_root() -> PathBuf {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        root.join("tiny-s2-mb2/meta.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    root
+}
+
+fn load_meta(bundle: &str) -> BundleMeta {
+    let path = artifacts_root().join(bundle).join("meta.json");
+    BundleMeta::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap()
+}
+
+#[test]
+fn meta_model_matches_rust_zoo() {
+    // the python configs.py and rust config::model must agree exactly
+    for bundle in ["tiny-s2-mb2", "mini-s2-mb2", "mini-s4-mb1", "gpt-10m-s2-mb1"] {
+        let meta = load_meta(bundle);
+        let spec = config::lookup(&meta.model.name)
+            .unwrap_or_else(|| panic!("{} not in rust zoo", meta.model.name));
+        assert_eq!(spec.n_layers, meta.model.n_layers, "{bundle}");
+        assert_eq!(spec.hidden, meta.model.hidden, "{bundle}");
+        assert_eq!(spec.n_heads, meta.model.n_heads, "{bundle}");
+        assert_eq!(spec.vocab, meta.model.vocab, "{bundle}");
+        assert_eq!(spec.seq, meta.model.seq, "{bundle}");
+        assert_eq!(spec.total_params(), meta.model.total_params, "{bundle}");
+    }
+}
+
+#[test]
+fn meta_stage_params_sum_to_total() {
+    for bundle in ["tiny-s2-mb2", "mini-s4-mb1"] {
+        let meta = load_meta(bundle);
+        let sum: u64 = meta.stages.iter().map(|s| s.param_count).sum();
+        assert_eq!(sum, meta.model.total_params, "{bundle}");
+        // spans cover all layers contiguously
+        assert_eq!(meta.stages[0].layer_start, 0);
+        assert_eq!(meta.stages.last().unwrap().layer_end, meta.model.n_layers);
+        for w in meta.stages.windows(2) {
+            assert_eq!(w[0].layer_end, w[1].layer_start);
+        }
+        assert!(meta.stages[0].has_embed);
+        assert!(meta.stages.last().unwrap().has_head);
+    }
+}
+
+#[test]
+fn meta_flops_consistent_with_rust_model() {
+    let meta = load_meta("tiny-s2-mb2");
+    let spec = config::lookup("tiny").unwrap();
+    let expect = spec.flops_per_token() * meta.tokens_per_microbatch as f64;
+    let rel = (meta.flops_per_microbatch - expect).abs() / expect;
+    assert!(rel < 0.05, "python {} vs rust {expect}", meta.flops_per_microbatch);
+}
+
+#[test]
+fn runtime_executes_stage_forward() {
+    let rt = Runtime::cpu().unwrap();
+    let bundle = Bundle::load(&rt, artifacts_root().join("tiny-s2-mb2")).unwrap();
+    let meta = &bundle.meta;
+    let (b, s, d) = (meta.mbs as usize, meta.model.seq as usize, meta.model.hidden as usize);
+
+    // init stage 0, run its forward on a token batch
+    let key = lit_u32(&[1, 2], &[2]).unwrap();
+    let init = bundle.stages[0].init.run(&[&key]).unwrap();
+    let params = to_f32(&init[0]).unwrap();
+    assert_eq!(params.len() as u64, bundle.stages[0].meta.param_count);
+    // init must be non-degenerate
+    let nonzero = params.iter().filter(|&&p| p != 0.0).count();
+    assert!(nonzero > params.len() / 4);
+
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % meta.model.vocab as usize) as i32).collect();
+    let params_lit = frontier_llm::runtime::lit_f32(&params, &[params.len() as i64]).unwrap();
+    let tok_lit = lit_i32(&tokens, &[b as i64, s as i64]).unwrap();
+    let out = bundle.stages[0].fwd.run(&[&params_lit, &tok_lit]).unwrap();
+    let h = to_f32(&out[0]).unwrap();
+    assert_eq!(h.len(), b * s * d);
+    assert!(h.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn runtime_rejects_missing_bundle() {
+    let rt = Runtime::cpu().unwrap();
+    assert!(Bundle::load(&rt, Path::new("artifacts/does-not-exist")).is_err());
+}
+
+#[test]
+fn perf_model_covers_whole_exec_zoo() {
+    // every executable model evaluates cleanly at a trivial config
+    let perf = PerfModel::default();
+    for spec in config::exec_zoo() {
+        let cfg = ParallelConfig::default().with_gbs(4).with_mbs(1);
+        let b = perf.evaluate(&spec, &cfg).unwrap();
+        assert!(b.t_step > 0.0 && b.pct_peak > 0.0, "{}", spec.name);
+    }
+}
+
+#[test]
+fn des_and_analytic_agree_across_grid() {
+    // systematic cross-validation of the two evaluators
+    let perf = PerfModel::default();
+    let m = config::lookup("22b").unwrap();
+    for pp in [1u32, 2, 4, 8] {
+        for gbs in [16u32, 64] {
+            let cfg = ParallelConfig::default().with_tp(2).with_pp(pp).with_gbs(gbs);
+            // shallow pipelines legitimately OOM at 22B (the memory wall
+            // §II.A) — the grid only compares feasible points
+            let Ok(ana) = perf.evaluate(&m, &cfg) else { continue };
+            let des = sim::simulate(&perf, &m, &cfg).unwrap();
+            let rel = (des.pct_peak - ana.pct_peak).abs() / ana.pct_peak;
+            assert!(
+                rel < 0.2,
+                "pp={pp} gbs={gbs}: des {:.2} ana {:.2}",
+                des.pct_peak,
+                ana.pct_peak
+            );
+        }
+    }
+}
+
+#[test]
+fn observation_v_a_saturation_recipes() {
+    // §V.A: both Table V recipes satisfy m >= p and TP <= 8 within a node
+    for (r, _, _) in config::fig11_recipes() {
+        assert!(r.parallel.microbatches() >= r.parallel.pp);
+        assert!(r.parallel.tp <= 8);
+    }
+}

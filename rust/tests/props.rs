@@ -1,0 +1,281 @@
+//! Property-based tests over randomly-generated inputs (in-tree
+//! generator: `data::Rng64`; the build is offline so no proptest crate).
+//! Each property runs a few hundred random cases and shrinks nothing —
+//! failures print the seed/case inline, which is enough to reproduce
+//! (everything is deterministic in the case parameters).
+
+use std::sync::Arc;
+use std::thread;
+
+use frontier_llm::collectives::{chunk_bounds, Algo, Group};
+use frontier_llm::config::{lookup, ParallelConfig, ScheduleKind};
+use frontier_llm::data::Rng64;
+use frontier_llm::hpo::space::Point;
+use frontier_llm::hpo::surrogate::Gp;
+use frontier_llm::parallel::RankLayout;
+use frontier_llm::perf::PerfModel;
+use frontier_llm::schedule;
+use frontier_llm::util::json::{escape, Json};
+
+#[test]
+fn prop_schedules_always_valid() {
+    let mut rng = Rng64::new(101);
+    for case in 0..300 {
+        let p = 1 + rng.below(12) as u32;
+        let m = 1 + rng.below(40) as u32;
+        let kind = if rng.below(2) == 0 { ScheduleKind::GPipe } else { ScheduleKind::OneF1B };
+        let s = schedule::build(kind, p, m);
+        s.validate().unwrap_or_else(|e| panic!("case {case} p={p} m={m} {kind:?}: {e}"));
+        // 1F1B in-flight bound: stage i holds at most min(p - i, m) acts
+        if kind == ScheduleKind::OneF1B {
+            for stage in 0..p {
+                let cap = (p - stage).min(m);
+                assert!(
+                    s.peak_inflight(stage) <= cap,
+                    "case {case} p={p} m={m} stage {stage}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bubble_formula_bounds() {
+    let mut rng = Rng64::new(77);
+    for _ in 0..200 {
+        let p = 1 + rng.below(64) as u32;
+        let m = 1 + rng.below(512) as u32;
+        let v = 1 + rng.below(4) as u32;
+        for kind in [
+            ScheduleKind::GPipe,
+            ScheduleKind::OneF1B,
+            ScheduleKind::Interleaved1F1B { v },
+        ] {
+            let b = kind.bubble_fraction(p, m);
+            assert!((0.0..1.0).contains(&b), "{kind:?} p={p} m={m}: {b}");
+            if p == 1 {
+                assert!(b == 0.0);
+            }
+            // more micro-batches never increases the bubble
+            let b2 = kind.bubble_fraction(p, m + 8);
+            assert!(b2 <= b + 1e-12);
+        }
+    }
+}
+
+#[test]
+fn prop_layout_bijection_and_partition() {
+    let mut rng = Rng64::new(5);
+    for _ in 0..100 {
+        let tp = 1 + rng.below(8) as u32;
+        let pp = 1 + rng.below(8) as u32;
+        let dp = 1 + rng.below(8) as u32;
+        let l = RankLayout::new(tp, pp, dp);
+        let mut seen = vec![false; l.world_size() as usize];
+        for r in 0..l.world_size() {
+            assert_eq!(l.rank_of(l.coords(r)), r);
+            assert!(!seen[r as usize]);
+            seen[r as usize] = true;
+        }
+        // each group type partitions the world
+        for groups in [l.all_tp_groups(), l.all_dp_groups(), l.all_pp_groups()] {
+            let total: usize = groups.iter().map(|g| g.len()).sum();
+            assert_eq!(total, l.world_size() as usize);
+        }
+    }
+}
+
+#[test]
+fn prop_chunk_bounds_partition() {
+    let mut rng = Rng64::new(9);
+    for _ in 0..300 {
+        let len = rng.below(10_000) as usize;
+        let n = 1 + rng.below(16) as usize;
+        let b = chunk_bounds(len, n);
+        assert_eq!(b.len(), n);
+        assert_eq!(b[0].0, 0);
+        assert_eq!(b[n - 1].1, len);
+        for w in b.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+            // sizes differ by at most one, earlier chunks bigger
+            let s0 = w[0].1 - w[0].0;
+            let s1 = w[1].1 - w[1].0;
+            assert!(s0 == s1 || s0 == s1 + 1);
+        }
+    }
+}
+
+#[test]
+fn prop_ring_allreduce_matches_naive() {
+    let mut rng = Rng64::new(31);
+    for case in 0..12 {
+        let n = 2 + rng.below(6) as usize;
+        let len = 1 + rng.below(500) as usize;
+        let seed = rng.next_u64();
+        let group = Group::new(n);
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let g = group.clone();
+                thread::spawn(move || {
+                    let mut local = Rng64::new(seed ^ rank as u64);
+                    let data: Vec<f32> =
+                        (0..len).map(|_| local.normal() as f32).collect();
+                    let mut ring = data.clone();
+                    g.all_reduce_sum(rank, &mut ring, Algo::Ring);
+                    let mut naive = data;
+                    g.all_reduce_sum(rank, &mut naive, Algo::Naive);
+                    (ring, naive)
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (rank, (ring, naive)) in results.iter().enumerate() {
+            for i in 0..len {
+                assert!(
+                    (ring[i] - naive[i]).abs() < 1e-3,
+                    "case {case} rank {rank} i={i}: {} vs {}",
+                    ring[i],
+                    naive[i]
+                );
+            }
+        }
+        // all ranks agree with each other
+        for r in 1..n {
+            assert_eq!(results[0].0.len(), results[r].0.len());
+        }
+    }
+}
+
+#[test]
+fn prop_reduce_scatter_allgather_roundtrip() {
+    let mut rng = Rng64::new(57);
+    for _ in 0..8 {
+        let n = 1 + rng.below(5) as usize;
+        let len = n + rng.below(300) as usize;
+        let seed = rng.next_u64();
+        let group = Group::new(n);
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let mut local = Rng64::new(seed ^ (rank as u64) << 3);
+                    let data: Vec<f32> = (0..len).map(|_| local.normal() as f32).collect();
+                    let mut want = data.clone();
+                    g.all_reduce_sum(rank, &mut want, Algo::Naive);
+                    let shard = g.reduce_scatter_sum(rank, &data);
+                    let mut got = vec![0.0; len];
+                    g.all_gather(rank, &shard, &mut got);
+                    (want, got)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (want, got) = h.join().unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_perf_model_total_is_sum_of_parts() {
+    let mut rng = Rng64::new(13);
+    let perf = PerfModel::default();
+    let model = lookup("22b").unwrap();
+    let mut evaluated = 0;
+    for _ in 0..200 {
+        let tp = [1u32, 2, 4, 8][rng.below(4) as usize];
+        let pp = [1u32, 2, 4, 8][rng.below(4) as usize];
+        let dp = 1 + rng.below(4) as u32;
+        let mbs = 1 + rng.below(4) as u32;
+        let m = 1 + rng.below(16) as u32;
+        let cfg = ParallelConfig::default()
+            .with_tp(tp)
+            .with_pp(pp)
+            .with_dp(dp)
+            .with_mbs(mbs)
+            .with_gbs(dp * mbs * m);
+        if let Ok(b) = perf.evaluate(&model, &cfg) {
+            evaluated += 1;
+            let parts = b.t_compute + b.t_tp_comm + b.t_bubble + b.t_pp_comm + b.t_dp_comm
+                + b.t_optimizer;
+            let rel = (b.t_step - parts).abs() / b.t_step;
+            assert!(rel < 1e-6, "decomposition must be exact: {rel}");
+            assert!(b.pct_peak > 0.0 && b.pct_peak < 100.0);
+            assert!(b.hw_flops_per_gpu >= b.model_flops_per_gpu);
+        }
+    }
+    assert!(evaluated > 50, "too few feasible samples: {evaluated}");
+}
+
+#[test]
+fn prop_hpo_points_round_trip_configs() {
+    let mut rng = Rng64::new(21);
+    for _ in 0..300 {
+        let p = Point::sample(&mut rng);
+        if let Ok((model, cfg)) = p.to_config() {
+            cfg.validate().expect("instantiated config must validate");
+            assert_eq!(cfg.world_size(), p.gpus());
+            assert_eq!(cfg.microbatches(), p.gas);
+            assert_eq!(model.name, "175b");
+        }
+    }
+}
+
+#[test]
+fn prop_gp_predictions_finite() {
+    let mut rng = Rng64::new(99);
+    for _ in 0..20 {
+        let n = 3 + rng.below(30) as usize;
+        let d = 1 + rng.below(6) as usize;
+        let x: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..d).map(|_| rng.next_f64()).collect()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+        let gp = Gp::fit(&x, &y);
+        for _ in 0..10 {
+            let q: Vec<f64> = (0..d).map(|_| rng.next_f64() * 2.0 - 0.5).collect();
+            let (mu, sigma) = gp.predict(&q);
+            assert!(mu.is_finite() && sigma.is_finite() && sigma >= 0.0);
+            let ei = gp.expected_improvement(&q, 0.0);
+            assert!(ei.is_finite() && ei >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_json_escape_round_trip() {
+    let mut rng = Rng64::new(7);
+    for _ in 0..200 {
+        let len = rng.below(40) as usize;
+        let s: String = (0..len)
+            .map(|_| {
+                let c = rng.below(128) as u8;
+                if c.is_ascii_graphic() || c == b' ' {
+                    c as char
+                } else {
+                    '\n'
+                }
+            })
+            .collect();
+        let parsed = Json::parse(&escape(&s)).unwrap();
+        assert_eq!(parsed.as_str().unwrap(), s);
+    }
+}
+
+#[test]
+fn prop_memory_monotone_in_sharding() {
+    // more TP or PP never increases the per-GPU footprint
+    let mut rng = Rng64::new(3);
+    let model = lookup("175b").unwrap();
+    for _ in 0..100 {
+        let tp = [1u32, 2, 4][rng.below(3) as usize];
+        let pp = [1u32, 2, 4, 8][rng.below(4) as usize];
+        let cfg = ParallelConfig::default().with_tp(tp).with_pp(pp).with_gbs(8);
+        let more_tp = cfg.clone().with_tp(tp * 2);
+        let more_pp = cfg.clone().with_pp(pp * 2);
+        let base = frontier_llm::mem::per_gpu(&model, &cfg).total();
+        assert!(frontier_llm::mem::per_gpu(&model, &more_tp).total() <= base);
+        assert!(frontier_llm::mem::per_gpu(&model, &more_pp).total() <= base);
+    }
+}
