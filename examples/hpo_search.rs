@@ -20,7 +20,8 @@ fn main() -> anyhow::Result<()> {
     let result = hpo::run_search(&perf, &SearchConfig { n_evals: evals, seed, ..Default::default() });
 
     let mut csv = Csv::new(&[
-        "eval", "pp", "tp", "mbs", "gas", "zero1", "nnodes", "objective_tflops", "failed", "best_so_far",
+        "eval", "pp", "tp", "mbs", "gas", "zero1", "nnodes", "interleave",
+        "objective_tflops", "failed", "best_so_far",
     ]);
     for (i, ev) in result.evals.iter().enumerate() {
         csv.row(&[
@@ -31,6 +32,7 @@ fn main() -> anyhow::Result<()> {
             ev.point.gas.to_string(),
             (ev.point.zero1 as u8).to_string(),
             ev.point.nnodes.to_string(),
+            ev.point.interleave.to_string(),
             ev.objective.map(|v| format!("{v:.2}")).unwrap_or_default(),
             (ev.objective.is_none() as u8).to_string(),
             format!("{:.2}", result.best_trajectory[i]),

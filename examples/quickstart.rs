@@ -15,16 +15,25 @@ use frontier_llm::optim::AdamConfig;
 use frontier_llm::perf::PerfModel;
 
 fn main() -> anyhow::Result<()> {
-    // ---- 1. real training on the AOT artifacts ----
-    println!("== training tiny GPT (2-stage pipeline x dp2, ZeRO-1) ==");
+    // ---- 1. real training through the engine ----
+    // AOT artifacts when present; otherwise the pure-Rust builtin stages
+    // (same coordinator, schedules, collectives, ZeRO-1 — zero setup)
+    let have_artifacts = std::path::Path::new("artifacts/tiny-s2-mb2/meta.json").exists();
+    let (bundle, lr) = if have_artifacts {
+        ("tiny-s2-mb2", 1e-3f32)
+    } else {
+        println!("(no AOT artifacts found — using the builtin reference stages)");
+        ("builtin:tiny-s2-mb2", 2e-2f32)
+    };
+    println!("== training tiny model (2-stage pipeline x dp2, ZeRO-1) ==");
     let report = train(&EngineConfig {
-        bundle: "tiny-s2-mb2".into(),
+        bundle: bundle.into(),
         dp: 2,
         schedule: ScheduleKind::OneF1B,
         microbatches: 4,
         steps: 15,
         zero1: true,
-        adam: AdamConfig { lr: 1e-3, ..Default::default() },
+        adam: AdamConfig { lr, ..Default::default() },
         log_every: 5,
         ..Default::default()
     })?;

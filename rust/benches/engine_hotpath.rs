@@ -62,14 +62,45 @@ fn main() {
     bench("schedule::one_f1b_p64_m1600", 10, 200, || {
         std::hint::black_box(schedule::one_f1b(64, 1600));
     });
+    bench("schedule::interleaved_p64_m1600_v4", 10, 200, || {
+        std::hint::black_box(schedule::interleaved_1f1b(64, 1600, 4));
+    });
     bench("schedule::validate_p16_m128", 10, 200, || {
         let s = schedule::one_f1b(16, 128);
         std::hint::black_box(s.validate().unwrap());
     });
+    bench("schedule::validate_interleaved_p16_m128_v4", 10, 100, || {
+        let s = schedule::interleaved_1f1b(16, 128, 4);
+        std::hint::black_box(s.validate().unwrap());
+    });
 
-    header("end-to-end engine: tiny GPT, 2-stage pipeline x dp2, 3 steps");
-    let rt = Runtime::cpu().expect("PJRT CPU client");
+    header("end-to-end engine: builtin tiny model, 4 stages, 3 steps");
+    for (label, sched) in [
+        ("engine::train_builtin_1f1b_pp4", ScheduleKind::OneF1B),
+        ("engine::train_builtin_interleaved_v2", ScheduleKind::Interleaved1F1B { v: 2 }),
+    ] {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s4-mb2".into(),
+            dp: 1,
+            schedule: sched,
+            microbatches: 4,
+            steps: 3,
+            ..Default::default()
+        };
+        bench(label, 1, 5, || {
+            std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
+        });
+    }
+
+    header("end-to-end engine: tiny GPT artifacts, 2-stage pipeline x dp2");
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => {
+            println!("(no PJRT client in this build — artifact engine bench skipped)");
+            return;
+        }
+    };
     if root.join("tiny-s2-mb2/meta.json").exists() {
         let bundle = Arc::new(Bundle::load(&rt, root.join("tiny-s2-mb2")).unwrap());
         let cfg = EngineConfig {

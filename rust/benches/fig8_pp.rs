@@ -3,7 +3,9 @@
 //! 8a (Obs III.3): deeper pipeline at fixed GBS=128 loses throughput.
 //! 8b (Obs III.4): scaling GBS with PP (fixed bubble ratio) holds it flat.
 //! Both are also run through the discrete-event simulator to confirm the
-//! measured bubble matches the analytic `(p-1)/(m+p-1)`.
+//! measured bubble matches the analytic `(p-1)/(m+p-1)`, and an
+//! interleaving sweep tracks the bubble-vs-v trend `(p-1)/(m v + p - 1)`
+//! from the executed virtual-stage streams.
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
@@ -51,8 +53,42 @@ fn main() {
     }
     println!("[shape OK: flat when PP/M is fixed]");
 
+    header("Fig 8c: interleaving sweep at fixed PP=8, m=32 (bubble vs v)");
+    let mut prev_bubble = f64::INFINITY;
+    for v in [1u32, 2, 4, 8] {
+        let cfg = ParallelConfig::default()
+            .with_tp(8)
+            .with_pp(8)
+            .with_gbs(32)
+            .with_interleave(v);
+        let b = perf.evaluate(&model, &cfg).unwrap();
+        let des = sim::simulate(&perf, &model, &cfg).unwrap();
+        let analytic = cfg.bubble_fraction();
+        println!(
+            "v={v}: {:>6.1} TFLOPS/GPU ({:>5.2}%)  analytic bubble {:>5.2}%  measured {:>5.2}%",
+            b.tflops_per_gpu,
+            b.pct_peak,
+            100.0 * analytic,
+            100.0 * des.bubble_fraction
+        );
+        assert!(
+            des.bubble_fraction < prev_bubble,
+            "measured bubble must shrink with v (v={v})"
+        );
+        prev_bubble = des.bubble_fraction;
+    }
+    println!("[shape OK: measured bubble strictly shrinks with interleave depth]");
+
     let cfg = ParallelConfig::default().with_tp(8).with_pp(32).with_gbs(512);
     bench("fig8::des_pp32_m512", 2, 20, || {
         std::hint::black_box(sim::simulate(&perf, &model, &cfg).unwrap());
+    });
+    let icfg = ParallelConfig::default()
+        .with_tp(8)
+        .with_pp(8)
+        .with_gbs(512)
+        .with_interleave(4);
+    bench("fig8::des_interleaved_pp8_v4_m512", 2, 20, || {
+        std::hint::black_box(sim::simulate(&perf, &model, &icfg).unwrap());
     });
 }

@@ -47,6 +47,7 @@ fn main() {
             gas: 10,
             zero1: true,
             nnodes: 16,
+            interleave: 1,
         };
         std::hint::black_box(hpo::evaluate_point(&perf, &p));
     });

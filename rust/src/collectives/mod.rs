@@ -38,8 +38,13 @@ struct ExchangeState {
     gen: u64,
 }
 
+/// Untagged traffic (ring collectives, plain pipeline p2p) uses this tag;
+/// chunked pipeline traffic tags messages so `v` virtual-stage channels
+/// can multiplex one (from, to) mailbox without FIFO interleaving hazards.
+pub const TAG_ANY: u64 = 0;
+
 struct Mailbox {
-    queue: Mutex<VecDeque<Vec<f32>>>,
+    queue: Mutex<VecDeque<(u64, Vec<f32>)>>,
     cv: Condvar,
 }
 
@@ -48,16 +53,18 @@ impl Mailbox {
         Self { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() }
     }
 
-    fn send(&self, data: Vec<f32>) {
-        self.queue.lock().unwrap().push_back(data);
+    fn send(&self, tag: u64, data: Vec<f32>) {
+        self.queue.lock().unwrap().push_back((tag, data));
+        // single consumer per (from, to) mailbox
         self.cv.notify_one();
     }
 
-    fn recv(&self) -> Vec<f32> {
+    /// Pop the oldest message whose tag matches (FIFO within a tag).
+    fn recv(&self, tag: u64) -> Vec<f32> {
         let mut q = self.queue.lock().unwrap();
         loop {
-            if let Some(d) = q.pop_front() {
-                return d;
+            if let Some(pos) = q.iter().position(|(t, _)| *t == tag) {
+                return q.remove(pos).unwrap().1;
             }
             q = self.cv.wait(q).unwrap();
         }
@@ -147,15 +154,27 @@ impl Group {
 
     /// Point-to-point send to `to` (FIFO per (from, to) pair).
     pub fn send(&self, from: usize, to: usize, data: Vec<f32>) {
-        assert!(from < self.n && to < self.n && from != to);
-        self.bytes_moved.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
-        self.mail[to][from].send(data);
+        self.send_tagged(from, to, TAG_ANY, data);
     }
 
     /// Blocking receive from `from`.
     pub fn recv(&self, to: usize, from: usize) -> Vec<f32> {
+        self.recv_tagged(to, from, TAG_ANY)
+    }
+
+    /// Tagged p2p send: the virtual-stage engine multiplexes `v` chunk
+    /// channels over one (from, to) pair by tagging each message with
+    /// (direction, chunk, micro-batch); FIFO order holds within a tag.
+    pub fn send_tagged(&self, from: usize, to: usize, tag: u64, data: Vec<f32>) {
         assert!(from < self.n && to < self.n && from != to);
-        self.mail[to][from].recv()
+        self.bytes_moved.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        self.mail[to][from].send(tag, data);
+    }
+
+    /// Blocking receive of the oldest message from `from` carrying `tag`.
+    pub fn recv_tagged(&self, to: usize, from: usize, tag: u64) -> Vec<f32> {
+        assert!(from < self.n && to < self.n && from != to);
+        self.mail[to][from].recv(tag)
     }
 
     /// In-place sum all-reduce.  Deterministic: reduction is always in
@@ -390,6 +409,23 @@ mod tests {
             } else {
                 assert_eq!(g.recv(1, 0), vec![1.0]);
                 assert_eq!(g.recv(1, 0), vec![2.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn tagged_p2p_matches_out_of_order() {
+        // receiver can drain tags in a different order than they arrived,
+        // and FIFO holds within one tag — the chunked-pipeline contract
+        run_ranks(2, |rank, g| {
+            if rank == 0 {
+                g.send_tagged(0, 1, 7, vec![7.0]);
+                g.send_tagged(0, 1, 9, vec![9.0]);
+                g.send_tagged(0, 1, 7, vec![7.5]);
+            } else {
+                assert_eq!(g.recv_tagged(1, 0, 9), vec![9.0]);
+                assert_eq!(g.recv_tagged(1, 0, 7), vec![7.0]);
+                assert_eq!(g.recv_tagged(1, 0, 7), vec![7.5]);
             }
         });
     }

@@ -15,7 +15,12 @@ pub enum ScheduleKind {
     /// PipeDream-style one-forward-one-backward with flush (what
     /// DeepSpeed's pipeline engine implements; the paper's choice, §V.A).
     OneF1B,
-    /// 1F1B with `v` model chunks interleaved per GPU: bubble `(p-1)/(m v)`.
+    /// Megatron-style 1F1B with `v` model chunks interleaved per GPU.
+    /// `schedule::interleaved_1f1b` emits the real per-chunk instruction
+    /// streams (warmup ramp `2(p-1-rank) + (v-1)p` virtual forwards, then
+    /// virtual 1F1B, then drain); the fill/drain then costs `(p-1)` chunk
+    /// slots instead of full-stage slots, shrinking the bubble to
+    /// `(p-1)/(m v)`.  Requires `m % p == 0` when `v > 1`.
     Interleaved1F1B { v: u32 },
 }
 
@@ -29,6 +34,11 @@ impl ScheduleKind {
     }
 
     /// Idle fraction of the steady-state pipeline (§II.C / §III.B).
+    ///
+    /// For interleaved 1F1B this is `((p-1)/v) / (m + (p-1)/v)` — i.e.
+    /// `(p-1)/(m v + p - 1)` — which the discrete-event simulator's
+    /// measured idle time reproduces from the generated per-chunk streams
+    /// (see `perf::sim::tests::interleaved_bubble_matches_analytic`).
     pub fn bubble_fraction(&self, p: u32, m: u32) -> f64 {
         assert!(p >= 1 && m >= 1);
         let p = p as f64;
@@ -142,6 +152,13 @@ impl ParallelConfig {
             if v == 0 {
                 return Err("interleave chunks must be >= 1".into());
             }
+            if v > 1 && self.microbatches() % self.pp != 0 {
+                return Err(format!(
+                    "interleaved 1F1B (v={v}) needs micro-batches ({}) divisible by pp ({})",
+                    self.microbatches(),
+                    self.pp
+                ));
+            }
         }
         Ok(())
     }
@@ -186,6 +203,12 @@ impl ParallelConfig {
         self.schedule = s;
         self
     }
+    /// Interleaved 1F1B with `v` virtual chunks per rank (`v = 1` is
+    /// plain 1F1B under the interleaved generator).
+    pub fn with_interleave(mut self, v: u32) -> Self {
+        self.schedule = ScheduleKind::Interleaved1F1B { v };
+        self
+    }
     pub fn with_flash(mut self, f: bool) -> Self {
         self.flash_attention = f;
         self
@@ -225,6 +248,18 @@ mod tests {
         let plain = ScheduleKind::OneF1B.bubble_fraction(8, 16);
         let inter = ScheduleKind::Interleaved1F1B { v: 4 }.bubble_fraction(8, 16);
         assert!(inter < plain);
+    }
+
+    #[test]
+    fn interleaved_requires_aligned_microbatches() {
+        // m = 16, pp = 8: aligned, valid
+        let ok = ParallelConfig::default().with_pp(8).with_gbs(16).with_interleave(2);
+        ok.validate().unwrap();
+        // m = 12, pp = 8: 12 % 8 != 0 — rejected for v > 1, fine for v = 1
+        let bad = ParallelConfig::default().with_pp(8).with_gbs(12).with_interleave(2);
+        assert!(bad.validate().is_err());
+        let v1 = ParallelConfig::default().with_pp(8).with_gbs(12).with_interleave(1);
+        v1.validate().unwrap();
     }
 
     #[test]

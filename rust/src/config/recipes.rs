@@ -15,6 +15,18 @@ impl Recipe {
     pub fn gpus(&self) -> u32 {
         self.parallel.world_size()
     }
+
+    /// The same recipe under interleaved 1F1B with `v` virtual chunks —
+    /// the schedule dimension the engine/simulator can now execute for
+    /// real.  Panics if the recipe's micro-batch count cannot align with
+    /// the rank grid (`m % pp != 0`), mirroring Megatron's constraint.
+    pub fn with_interleave(mut self, v: u32) -> Self {
+        self.parallel = self.parallel.with_interleave(v);
+        self.parallel
+            .validate()
+            .expect("recipe must stay valid under interleaving");
+        self
+    }
 }
 
 /// Table V, 175B column: TP=4, PP=16, MBS=1, GBS=640, ZeRO-1, FA2, fp16,
@@ -103,6 +115,19 @@ mod tests {
     fn recipe_gpu_counts_match_paper() {
         assert_eq!(recipe_175b().gpus(), 1024);
         assert_eq!(recipe_1t().gpus(), 3072);
+    }
+
+    #[test]
+    fn interleaved_recipe_variant_shrinks_bubble() {
+        // Table V's 175B recipe has m = 640, pp = 16 — interleave-aligned
+        let base = recipe_175b();
+        let plain_bubble = base.parallel.bubble_fraction();
+        for v in [2u32, 4] {
+            let r = recipe_175b().with_interleave(v);
+            r.parallel.validate().unwrap();
+            assert_eq!(r.parallel.schedule, ScheduleKind::Interleaved1F1B { v });
+            assert!(r.parallel.bubble_fraction() < plain_bubble, "v={v}");
+        }
     }
 
     #[test]

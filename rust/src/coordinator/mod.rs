@@ -1,26 +1,35 @@
 //! The distributed-training engine (the paper's L3 contribution, executed
 //! for real).
 //!
-//! One OS thread per simulated GCD.  The world is a `pp x dp` grid (TP is
+//! One OS thread per simulated GCD.  The world is a `p x dp` grid (TP is
 //! covered by the performance model; the engine runs the tensor-dense
-//! path): stage workers execute the *same* `schedule::Schedule`
+//! path): pipeline workers execute the *same* `schedule::Schedule`
 //! instruction streams the simulator prices, pass activations/gradients
 //! through the `collectives::Group` mailboxes, accumulate gradients over
 //! micro-batches, and synchronise per-stage DP groups through a real
 //! ring all-reduce (or ZeRO-1 reduce-scatter/all-gather) before the
 //! sharded Adam step.
 //!
-//! Compute is the AOT-compiled JAX/Pallas stage executables loaded by
-//! [`crate::runtime`] — Python is never on this path.
+//! **Virtual stages:** with `Interleaved1F1B { v }` the bundle's
+//! `n_stages` stage executables are split `v` per worker — worker `r`
+//! hosts the model chunks with global stages `{r, r+p, ..., r+(v-1)p}`
+//! where `p = n_stages / v` — and chunked activations/gradients are
+//! multiplexed over the worker mailboxes with `(direction, chunk, mb)`
+//! tags.  Plain GPipe/1F1B are the `v = 1` case (one chunk per worker).
+//!
+//! Compute is either the AOT-compiled JAX/Pallas stage executables loaded
+//! by [`crate::runtime`] (Python is never on this path) or the pure-Rust
+//! builtin reference stages (`builtin:*` bundles) — both behind the same
+//! typed stage contract.
 //!
 //! ```text
 //!            leader (train)
 //!   ┌───────────┬───────────┐          losses / metrics (mpsc)
-//!   │ stage 0   │ stage 1   │ ...
-//!   │ dp=0 dp=1 │ dp=0 dp=1 │   <- worker threads, one per "GCD"
-//!   └───────────┴───────────┘
-//!     activations ->  <- gradients     (world group p2p mailboxes)
-//!     DP all-reduce within stage       (per-stage Group)
+//!   │ worker 0  │ worker 1  │ ...
+//!   │ dp=0 dp=1 │ dp=0 dp=1 │   <- worker threads, one per "GCD",
+//!   └───────────┴───────────┘      v chunk slots each
+//!     activations ->  <- gradients     (world group, tagged mailboxes)
+//!     DP all-reduce per chunk          (per-worker-row Group)
 //! ```
 
 pub mod checkpoint;
@@ -37,7 +46,7 @@ use crate::collectives::Group;
 use crate::config::ScheduleKind;
 use crate::metrics::StepTimer;
 use crate::optim::{AdamConfig, LrSchedule};
-use crate::runtime::{Bundle, Runtime};
+use crate::runtime::{Bundle, BuiltinSpec, Runtime};
 use crate::schedule;
 
 /// Engine configuration for one training run.
@@ -45,7 +54,9 @@ use crate::schedule;
 pub struct EngineConfig {
     /// Artifact root (usually `artifacts/`).
     pub artifacts_root: PathBuf,
-    /// Bundle directory name, e.g. `tiny-s2-mb2` (see `Bundle::dir_name`).
+    /// Bundle directory name, e.g. `tiny-s2-mb2` (see `Bundle::dir_name`),
+    /// or a builtin bundle like `builtin:tiny-s4-mb2` (no artifacts, no
+    /// PJRT — the pure-Rust reference stages).
     pub bundle: String,
     /// Data-parallel replicas.
     pub dp: usize,
@@ -95,7 +106,7 @@ pub struct StepLog {
     pub step: u32,
     /// Mean training loss across every micro-batch and DP replica.
     pub loss: f32,
-    /// Global gradient norm of the last stage (pre-clip).
+    /// Global gradient norm of the head chunk (pre-clip).
     pub grad_norm: f32,
     pub step_time_s: f64,
 }
@@ -125,6 +136,17 @@ impl TrainReport {
 
 /// Run a full training job; blocks until every worker joins.
 pub fn train(cfg: &EngineConfig) -> Result<TrainReport> {
+    if cfg.bundle.starts_with("builtin:") {
+        // builtin bundles need no PJRT client and no artifacts on disk
+        let spec = BuiltinSpec::parse(&cfg.bundle).ok_or_else(|| {
+            anyhow!(
+                "malformed builtin bundle name {:?} (expected builtin:<tiny|mini>-s<K>-mb<B>)",
+                cfg.bundle
+            )
+        })?;
+        let bundle = Arc::new(Bundle::builtin(&spec));
+        return train_with_bundle(cfg, Runtime::null(), bundle);
+    }
     let rt = Runtime::cpu()?;
     let bundle = Arc::new(Bundle::load(&rt, cfg.artifacts_root.join(&cfg.bundle))?);
     train_with_bundle(cfg, rt, bundle)
@@ -136,10 +158,25 @@ pub fn train_with_bundle(
     rt: Arc<Runtime>,
     bundle: Arc<Bundle>,
 ) -> Result<TrainReport> {
-    let pp = bundle.meta.n_stages as usize;
+    let n_stages = bundle.meta.n_stages as usize;
     let dp = cfg.dp;
     anyhow::ensure!(dp >= 1, "dp must be >= 1");
     anyhow::ensure!(cfg.microbatches >= 1, "need at least one micro-batch");
+
+    // virtual chunking: v stage executables per worker
+    let v = cfg.schedule.chunks() as usize;
+    anyhow::ensure!(
+        v >= 1 && n_stages % v == 0,
+        "interleave v={v} must divide the bundle's {n_stages} stages"
+    );
+    let pp = n_stages / v;
+    if v > 1 {
+        anyhow::ensure!(
+            cfg.microbatches as usize % pp == 0,
+            "interleaved 1F1B needs micro-batches ({}) divisible by pipeline ranks ({pp})",
+            cfg.microbatches
+        );
+    }
     let world_size = pp * dp;
 
     let sched = schedule::build(cfg.schedule, pp as u32, cfg.microbatches);
@@ -163,8 +200,8 @@ pub fn train_with_bundle(
         0
     };
 
-    // world group: p2p mailboxes between stages; per-stage DP groups for
-    // gradient sync.  rank = pp_rank * dp + dp_rank.
+    // world group: tagged p2p mailboxes between workers; per-worker-row DP
+    // groups for gradient sync.  rank = pp_rank * dp + dp_rank.
     let world = Group::new(world_size);
     let dp_groups: Vec<Arc<Group>> = (0..pp).map(|_| Group::new(dp)).collect();
 
@@ -184,6 +221,7 @@ pub fn train_with_bundle(
                 dp_rank,
                 pp,
                 dp,
+                v,
                 start_step,
                 loss_tx: if pp_rank == pp - 1 && dp_rank == 0 {
                     Some(loss_tx.clone())

@@ -1,13 +1,22 @@
-//! Worker thread: one simulated GCD executing its stage's instruction
-//! stream against the compiled PJRT executables.
+//! Worker thread: one simulated GCD executing its instruction stream over
+//! `v` virtual-stage chunk slots against the stage backends (PJRT
+//! executables or builtin reference stages).
+//!
+//! Chunk `c` of worker `r` is global stage `g = c * pp + r`; activations
+//! flow `g -> g+1` (worker `(r+1) % pp`), gradients `g -> g-1`.  Because
+//! several chunk channels share each (from, to) worker mailbox, every
+//! message is tagged with `(direction, destination chunk, micro-batch)`;
+//! with `pp = 1` the chunk boundary stays worker-local and skips the
+//! mailboxes entirely.
 
+use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use crate::collectives::Group;
 use crate::data::BatchStream;
-use crate::runtime::{lit_u32, scalar_f32, to_f32, Bundle, Runtime};
+use crate::runtime::{Bundle, ParamsHandle, Runtime};
 use crate::schedule::{Op, Schedule};
 use crate::zero::DistOptimizer;
 
@@ -23,12 +32,22 @@ pub struct WorkerCtx {
     pub dp_group: Arc<Group>,
     pub pp_rank: usize,
     pub dp_rank: usize,
+    /// Pipeline ranks (worker grid depth).
     pub pp: usize,
     pub dp: usize,
+    /// Virtual chunks hosted by this worker (global stages = pp * v).
+    pub v: usize,
     /// First step index (non-zero when resuming from a checkpoint).
     pub start_step: u32,
-    /// Only the (last-stage, dp=0) worker reports losses.
+    /// Only the (last-rank, dp=0) worker reports losses.
     pub loss_tx: Option<mpsc::Sender<(u32, f32, f32)>>,
+}
+
+const TAG_FWD: u64 = 1;
+const TAG_BWD: u64 = 2;
+
+fn tag(direction: u64, chunk: usize, mb: usize) -> u64 {
+    (direction << 48) | ((chunk as u64) << 24) | mb as u64
 }
 
 impl WorkerCtx {
@@ -36,78 +55,166 @@ impl WorkerCtx {
         self.pp_rank * self.dp + self.dp_rank
     }
 
-    fn prev_rank(&self) -> usize {
-        (self.pp_rank - 1) * self.dp + self.dp_rank
+    fn world_rank_of(&self, pp_rank: usize) -> usize {
+        pp_rank * self.dp + self.dp_rank
     }
 
-    fn next_rank(&self) -> usize {
-        (self.pp_rank + 1) * self.dp + self.dp_rank
+    /// Total global (virtual) stages.
+    fn k(&self) -> usize {
+        self.pp * self.v
+    }
+
+    /// Global stage of chunk `c` on this worker.
+    fn global(&self, chunk: usize) -> usize {
+        chunk * self.pp + self.pp_rank
+    }
+}
+
+/// Worker-local routing state: in-flight self-delivered chunk boundaries
+/// (only reachable when `pp == 1`).
+#[derive(Default)]
+struct LocalChannels {
+    acts: HashMap<(usize, usize), Vec<f32>>,
+    grads: HashMap<(usize, usize), Vec<f32>>,
+}
+
+/// Send the forward activation of global stage `g` downstream.
+fn send_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, y: Vec<f32>) {
+    let dest_stage = g + 1;
+    let dest_rank = dest_stage % ctx.pp;
+    let dest_chunk = dest_stage / ctx.pp;
+    if dest_rank == ctx.pp_rank {
+        local.acts.insert((dest_chunk, mb), y);
+    } else {
+        ctx.world.send_tagged(
+            ctx.world_rank(),
+            ctx.world_rank_of(dest_rank),
+            tag(TAG_FWD, dest_chunk, mb),
+            y,
+        );
+    }
+}
+
+/// Receive the input activation for this worker's chunk `c` (global `g`).
+fn recv_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize) -> Vec<f32> {
+    let chunk = g / ctx.pp;
+    let src_rank = (g - 1) % ctx.pp;
+    if src_rank == ctx.pp_rank {
+        local.acts.remove(&(chunk, mb)).expect("local activation present")
+    } else {
+        ctx.world.recv_tagged(
+            ctx.world_rank(),
+            ctx.world_rank_of(src_rank),
+            tag(TAG_FWD, chunk, mb),
+        )
+    }
+}
+
+/// Send the input-gradient of global stage `g` upstream.
+fn send_grad(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, gx: Vec<f32>) {
+    let dest_stage = g - 1;
+    let dest_rank = dest_stage % ctx.pp;
+    let dest_chunk = dest_stage / ctx.pp;
+    if dest_rank == ctx.pp_rank {
+        local.grads.insert((dest_chunk, mb), gx);
+    } else {
+        ctx.world.send_tagged(
+            ctx.world_rank(),
+            ctx.world_rank_of(dest_rank),
+            tag(TAG_BWD, dest_chunk, mb),
+            gx,
+        );
+    }
+}
+
+/// Receive the upstream gradient for this worker's chunk `c` (global `g`).
+fn recv_grad(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize) -> Vec<f32> {
+    let chunk = g / ctx.pp;
+    let src_rank = (g + 1) % ctx.pp;
+    if src_rank == ctx.pp_rank {
+        local.grads.remove(&(chunk, mb)).expect("local gradient present")
+    } else {
+        ctx.world.recv_tagged(
+            ctx.world_rank(),
+            ctx.world_rank_of(src_rank),
+            tag(TAG_BWD, chunk, mb),
+        )
     }
 }
 
 /// Worker main loop.
 pub fn run(ctx: WorkerCtx) -> Result<()> {
     let meta = &ctx.bundle.meta;
-    let stage = &ctx.bundle.stages[ctx.pp_rank];
-    let sm = &stage.meta;
-    let is_first = sm.has_embed;
-    let is_last = sm.has_head;
-    let single = ctx.pp == 1;
+    let k = ctx.k();
+    let single = k == 1;
+    let dims = ctx.bundle.dims();
+    // chunk 0 of rank 0 embeds; chunk v-1 of rank pp-1 computes the loss
+    let owns_embed = ctx.pp_rank == 0;
+    let owns_head = ctx.pp_rank == ctx.pp - 1;
 
-    let b = meta.mbs as usize;
-    let s = meta.model.seq as usize;
-    let d = meta.model.hidden as usize;
-    let act_dims: [usize; 3] = [b, s, d];
-    let tok_dims: [usize; 2] = [b, s];
-    let n_params = sm.param_count as usize;
-
-    // ---- parameter init: identical across DP replicas, and identical
-    // across pipeline partitions (init keys fold in GLOBAL layer indices
-    // python-side, so the key is the same for every stage) ----
-    let key = [ctx.cfg.seed as u32, 0x5eed_0000];
-    let key_lit = lit_u32(&key, &[2])?;
-    let init_out = stage.init.run(&[&key_lit]).context("running stage init")?;
-    let mut params = to_f32(&init_out[0])?;
-    anyhow::ensure!(params.len() == n_params, "init size mismatch");
-
-    let mut opt = DistOptimizer::new(
-        ctx.cfg.zero1,
-        ctx.cfg.adam,
-        n_params,
-        ctx.dp_rank,
-        ctx.dp,
-    );
+    // ---- per-chunk slots: stage executables, params, optimizer ----
+    let stages: Vec<_> = (0..ctx.v).map(|c| &ctx.bundle.stages[ctx.global(c)]).collect();
+    let mut params: Vec<Vec<f32>> = Vec::with_capacity(ctx.v);
+    let mut opts: Vec<DistOptimizer> = Vec::with_capacity(ctx.v);
+    for stage in &stages {
+        // parameter init: identical across DP replicas and across pipeline
+        // partitions (init keys fold in GLOBAL layer indices on both
+        // backends, so the key is the same for every partitioning)
+        let p = stage.init_params(ctx.cfg.seed)?;
+        anyhow::ensure!(
+            p.len() as u64 == stage.meta.param_count,
+            "init size mismatch on stage {}",
+            stage.meta.index
+        );
+        opts.push(DistOptimizer::new(
+            ctx.cfg.zero1,
+            ctx.cfg.adam,
+            p.len(),
+            ctx.dp_rank,
+            ctx.dp,
+        ));
+        params.push(p);
+    }
 
     // ---- checkpoint resume: params (shared) + this rank's opt state ----
     if ctx.cfg.resume {
         let dir = ctx.cfg.checkpoint_dir.as_ref().expect("validated by leader");
-        let (p, _) = checkpoint::read_f32(&checkpoint::params_path(dir, ctx.pp_rank))?;
-        anyhow::ensure!(p.len() == n_params, "checkpoint params size mismatch");
-        params = p;
-        let (state, t) =
-            checkpoint::read_f32(&checkpoint::opt_path(dir, ctx.pp_rank, ctx.dp_rank))?;
-        opt.import_state(&state, t);
+        for (c, stage) in stages.iter().enumerate() {
+            let g = ctx.global(c);
+            let (p, _) = checkpoint::read_f32(&checkpoint::params_path(dir, g))?;
+            anyhow::ensure!(
+                p.len() as u64 == stage.meta.param_count,
+                "checkpoint params size mismatch on stage {g}"
+            );
+            params[c] = p;
+            let (state, t) =
+                checkpoint::read_f32(&checkpoint::opt_path(dir, g, ctx.dp_rank))?;
+            opts[c].import_state(&state, t);
+        }
     }
 
-    // ---- data: first and last stages draw the SAME dp-sharded stream ----
-    let mut stream = (is_first || is_last).then(|| {
+    // ---- data: embed and head owners draw the SAME dp-sharded stream ----
+    let mut stream = (owns_embed || owns_head).then(|| {
         BatchStream::new(
             meta.model.vocab as u32,
             ctx.cfg.seed ^ 0xDA7A,
             ctx.dp_rank,
             ctx.dp,
-            b,
-            s,
+            dims.b,
+            dims.s,
         )
     });
 
     let m = ctx.cfg.microbatches as usize;
-    let mut grad_accum = vec![0.0f32; n_params];
-    // per-microbatch stash: stage input activations (checkpointing: inputs
-    // only), token/target rows for the boundary stages
-    let mut stash_x: Vec<Option<Vec<f32>>> = vec![None; m];
+    let mut grad_accum: Vec<Vec<f32>> =
+        params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    // per-(chunk, micro-batch) stash: stage input activations
+    // (checkpointing: inputs only); token/target rows for the boundary
+    // chunks
+    let mut stash_x: Vec<Vec<Option<Vec<f32>>>> = vec![vec![None; m]; ctx.v];
     let mut stash_tok: Vec<Option<Vec<i32>>> = vec![None; m];
     let mut stash_tgt: Vec<Option<Vec<i32>>> = vec![None; m];
+    let mut local = LocalChannels::default();
 
     // fast-forward the data stream past already-trained steps
     if ctx.start_step > 0 {
@@ -118,110 +225,90 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
 
     for rel_step in 0..ctx.cfg.steps {
         let step = ctx.start_step + rel_step;
-        grad_accum.iter_mut().for_each(|g| *g = 0.0);
+        for g in grad_accum.iter_mut() {
+            g.iter_mut().for_each(|x| *x = 0.0);
+        }
         let mut loss_sum = 0.0f32;
 
-        // draw this step's micro-batches up front (schedule issues
-        // forwards in order, so index mb matches draw order)
+        // draw this step's micro-batches up front (the schedule issues
+        // each chunk's forwards in order, so index mb matches draw order)
         if let Some(stream) = stream.as_mut() {
             for mb in 0..m {
                 let batch = stream.next_microbatch();
-                if is_first {
+                if owns_embed {
                     stash_tok[mb] = Some(batch.tokens.clone());
                 }
-                if is_last {
+                if owns_head {
                     stash_tgt[mb] = Some(batch.targets);
                 }
             }
         }
 
-        // upload the parameter vector ONCE per step; every micro-batch's
-        // fwd/bwd reuses the same device buffer (EXPERIMENTS.md §Perf)
-        let params_buf = ctx.rt.buf_f32(&params, &[n_params])?;
+        // upload each chunk's parameter vector ONCE per step; every
+        // micro-batch's fwd/bwd reuses the same handle (EXPERIMENTS.md
+        // §Perf)
+        let mut handles: Vec<ParamsHandle> = Vec::with_capacity(ctx.v);
+        for (stage, p) in stages.iter().zip(&params) {
+            handles.push(stage.prepare_params(&ctx.rt, p)?);
+        }
 
         for op in &ctx.sched.streams[ctx.pp_rank] {
+            let c = op.chunk() as usize;
+            let g = ctx.global(c);
+            let stage = stages[c];
+            let pbuf = &handles[c];
             match *op {
-                Op::Forward { mb } => {
+                Op::Forward { mb, .. } => {
                     let mb = mb as usize;
                     if single {
                         // single-stage: fwd is folded into bwd; nothing to do
                         continue;
                     }
-                    if is_first {
+                    if g == 0 {
                         let tokens = stash_tok[mb].as_ref().unwrap();
-                        let tok_buf = ctx.rt.buf_i32(tokens, &tok_dims)?;
-                        let out = stage
-                            .fwd
-                            .run_b(&[&params_buf.0, &tok_buf.0])
-                            .context("stage fwd (embed)")?;
-                        let y = to_f32(&out[0])?;
-                        self_send(&ctx, ctx.next_rank(), y);
-                    } else if is_last {
-                        // last stage: stash the incoming activation; the
-                        // loss+grads come from the backward entry point
-                        let x = ctx.world.recv(ctx.world_rank(), ctx.prev_rank());
-                        stash_x[mb] = Some(x);
+                        let y = stage.fwd_first(&ctx.rt, pbuf, tokens, dims)?;
+                        send_act(&ctx, &mut local, g, mb, y);
+                    } else if g == k - 1 {
+                        // head chunk: stash the incoming activation; the
+                        // loss + grads come from the backward entry point
+                        let x = recv_act(&ctx, &mut local, g, mb);
+                        stash_x[c][mb] = Some(x);
                     } else {
-                        let x = ctx.world.recv(ctx.world_rank(), ctx.prev_rank());
-                        let x_buf = ctx.rt.buf_f32(&x, &act_dims)?;
-                        let out = stage
-                            .fwd
-                            .run_b(&[&params_buf.0, &x_buf.0])
-                            .context("stage fwd")?;
-                        let y = to_f32(&out[0])?;
-                        stash_x[mb] = Some(x);
-                        self_send(&ctx, ctx.next_rank(), y);
+                        let x = recv_act(&ctx, &mut local, g, mb);
+                        let y = stage.fwd_mid(&ctx.rt, pbuf, &x, dims)?;
+                        stash_x[c][mb] = Some(x);
+                        send_act(&ctx, &mut local, g, mb, y);
                     }
                 }
-                Op::Backward { mb } => {
+                Op::Backward { mb, .. } => {
                     let mb = mb as usize;
                     if single {
                         // fused fwd+bwd: (flat, tokens, targets) -> (gflat, loss)
                         let tokens = stash_tok[mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let tok_buf = ctx.rt.buf_i32(&tokens, &tok_dims)?;
-                        let tgt_buf = ctx.rt.buf_i32(&targets, &tok_dims)?;
-                        let out = stage
-                            .bwd
-                            .run_b(&[&params_buf.0, &tok_buf.0, &tgt_buf.0])
-                            .context("single-stage bwd")?;
-                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
-                        loss_sum += scalar_f32(&out[1])?;
-                    } else if is_last {
-                        let x = stash_x[mb].take().unwrap();
+                        let (gp, loss) =
+                            stage.bwd_single(&ctx.rt, pbuf, &tokens, &targets, dims)?;
+                        accumulate(&mut grad_accum[c], &gp);
+                        loss_sum += loss;
+                    } else if g == k - 1 {
+                        let x = stash_x[c][mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let x_buf = ctx.rt.buf_f32(&x, &act_dims)?;
-                        let tgt_buf = ctx.rt.buf_i32(&targets, &tok_dims)?;
-                        let out = stage
-                            .bwd
-                            .run_b(&[&params_buf.0, &x_buf.0, &tgt_buf.0])
-                            .context("last-stage bwd")?;
-                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
-                        let gx = to_f32(&out[1])?;
-                        loss_sum += scalar_f32(&out[2])?;
-                        self_send(&ctx, ctx.prev_rank(), gx);
-                    } else if is_first {
-                        let gy = ctx.world.recv(ctx.world_rank(), ctx.next_rank());
+                        let (gp, gx, loss) =
+                            stage.bwd_last(&ctx.rt, pbuf, &x, &targets, dims)?;
+                        accumulate(&mut grad_accum[c], &gp);
+                        loss_sum += loss;
+                        send_grad(&ctx, &mut local, g, mb, gx);
+                    } else if g == 0 {
+                        let gy = recv_grad(&ctx, &mut local, g, mb);
                         let tokens = stash_tok[mb].take().unwrap();
-                        let tok_buf = ctx.rt.buf_i32(&tokens, &tok_dims)?;
-                        let gy_buf = ctx.rt.buf_f32(&gy, &act_dims)?;
-                        let out = stage
-                            .bwd
-                            .run_b(&[&params_buf.0, &tok_buf.0, &gy_buf.0])
-                            .context("first-stage bwd")?;
-                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
+                        let gp = stage.bwd_first(&ctx.rt, pbuf, &tokens, &gy, dims)?;
+                        accumulate(&mut grad_accum[c], &gp);
                     } else {
-                        let gy = ctx.world.recv(ctx.world_rank(), ctx.next_rank());
-                        let x = stash_x[mb].take().unwrap();
-                        let x_buf = ctx.rt.buf_f32(&x, &act_dims)?;
-                        let gy_buf = ctx.rt.buf_f32(&gy, &act_dims)?;
-                        let out = stage
-                            .bwd
-                            .run_b(&[&params_buf.0, &x_buf.0, &gy_buf.0])
-                            .context("middle-stage bwd")?;
-                        accumulate(&mut grad_accum, &to_f32(&out[0])?);
-                        let gx = to_f32(&out[1])?;
-                        self_send(&ctx, ctx.prev_rank(), gx);
+                        let gy = recv_grad(&ctx, &mut local, g, mb);
+                        let x = stash_x[c][mb].take().unwrap();
+                        let (gp, gx) = stage.bwd_mid(&ctx.rt, pbuf, &x, &gy, dims)?;
+                        accumulate(&mut grad_accum[c], &gp);
+                        send_grad(&ctx, &mut local, g, mb, gx);
                     }
                 }
             }
@@ -229,43 +316,54 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
 
         // gradient accumulation: mean over micro-batches
         let inv_m = 1.0 / m as f32;
-        grad_accum.iter_mut().for_each(|g| *g *= inv_m);
+        for g in grad_accum.iter_mut() {
+            g.iter_mut().for_each(|x| *x *= inv_m);
+        }
 
-        // DP sync + (sharded) optimizer step
+        // DP sync + (sharded) optimizer step, chunk by chunk (every rank
+        // of a DP row walks its chunks in the same order, so the
+        // per-chunk collective rounds line up)
         let lr_scale = ctx
             .cfg
             .lr_schedule
             .map(|sch| sch.scale(step as u64))
             .unwrap_or(1.0);
-        let grad_norm = opt.step(
-            &ctx.dp_group,
-            ctx.dp_rank,
-            &mut params,
-            &mut grad_accum,
-            lr_scale,
-        );
+        let mut grad_norm = 0.0f32;
+        for c in 0..ctx.v {
+            grad_norm = opts[c].step(
+                &ctx.dp_group,
+                ctx.dp_rank,
+                &mut params[c],
+                &mut grad_accum[c],
+                lr_scale,
+            );
+        }
 
-        // periodic checkpoint: every rank persists its own piece after a
+        // periodic checkpoint: every rank persists its own pieces after a
         // world barrier (so all stages are at the same step), dp-rank-0
-        // writes the shared params, stage0/dp0 writes the manifest
+        // writes the shared params per global stage, rank0/dp0 writes the
+        // manifest
         let every = ctx.cfg.checkpoint_every;
         let last_step = rel_step + 1 == ctx.cfg.steps;
         if let Some(dir) = ctx.cfg.checkpoint_dir.as_ref() {
             if (every > 0 && (rel_step + 1) % every == 0) || last_step {
                 ctx.world.barrier(ctx.world_rank());
-                if ctx.dp_rank == 0 {
+                for c in 0..ctx.v {
+                    let g = ctx.global(c);
+                    if ctx.dp_rank == 0 {
+                        checkpoint::write_f32(
+                            &checkpoint::params_path(dir, g),
+                            &params[c],
+                            (step + 1) as u64,
+                        )?;
+                    }
+                    let (state, t) = opts[c].export_state();
                     checkpoint::write_f32(
-                        &checkpoint::params_path(dir, ctx.pp_rank),
-                        &params,
-                        (step + 1) as u64,
+                        &checkpoint::opt_path(dir, g, ctx.dp_rank),
+                        &state,
+                        t,
                     )?;
                 }
-                let (state, t) = opt.export_state();
-                checkpoint::write_f32(
-                    &checkpoint::opt_path(dir, ctx.pp_rank, ctx.dp_rank),
-                    &state,
-                    t,
-                )?;
                 ctx.world.barrier(ctx.world_rank());
                 if ctx.pp_rank == 0 && ctx.dp_rank == 0 {
                     checkpoint::Manifest {
@@ -281,7 +379,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         }
 
         // loss reporting: mean across micro-batches, then across DP
-        if is_last {
+        if owns_head {
             let mut l = vec![loss_sum * inv_m];
             ctx.dp_group
                 .all_reduce_sum(ctx.dp_rank, &mut l, crate::collectives::Algo::Naive);
@@ -293,10 +391,6 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         }
     }
     Ok(())
-}
-
-fn self_send(ctx: &WorkerCtx, to: usize, data: Vec<f32>) {
-    ctx.world.send(ctx.world_rank(), to, data);
 }
 
 fn accumulate(acc: &mut [f32], g: &[f32]) {

@@ -1,10 +1,12 @@
-//! The hyper-parameter search space of Table IV (175B tuning).
+//! The hyper-parameter search space of Table IV (175B tuning), extended
+//! with the pipeline-schedule interleave factor `v` now that the engine
+//! executes interleaved streams for real.
 
 use crate::config::{lookup, ModelSpec, ParallelConfig, Precision, ScheduleKind};
 use crate::data::Rng64;
 use crate::topology::GPUS_PER_NODE;
 
-/// One point in the Table IV space.
+/// One point in the (extended) Table IV space.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Point {
     pub pp: u32,
@@ -14,6 +16,10 @@ pub struct Point {
     pub gas: u32,
     pub zero1: bool,
     pub nnodes: u32,
+    /// Virtual-chunk interleave factor (1 = plain 1F1B).  Sampling clamps
+    /// to 1 whenever `gas % pp != 0` — the alignment Megatron-style
+    /// interleaving requires — so every sampled point is launchable.
+    pub interleave: u32,
 }
 
 pub const PP_CHOICES: [u32; 6] = [1, 2, 4, 8, 12, 16];
@@ -21,26 +27,35 @@ pub const TP_CHOICES: [u32; 4] = [1, 2, 4, 8];
 pub const MBS_RANGE: (u32, u32) = (4, 20);
 pub const GAS_CHOICES: [u32; 2] = [5, 10];
 pub const NNODES_CHOICES: [u32; 2] = [12, 16];
+pub const INTERLEAVE_CHOICES: [u32; 3] = [1, 2, 4];
 
 /// Feature names in SHAP/reporting order (paper Fig 10 uses `p:` prefixes).
-pub const FEATURES: [&str; 6] = ["p:mbs", "p:tp", "p:pp", "p:num_nodes", "p:zero1", "p:gas"];
+pub const FEATURES: [&str; 7] =
+    ["p:mbs", "p:tp", "p:pp", "p:num_nodes", "p:zero1", "p:gas", "p:interleave"];
 
 impl Point {
     /// Uniform random sample over *launchable* points: configurations
     /// whose `tp*pp` cannot tile the node allocation are rejected at
     /// sampling time, the way the paper's SLURM launcher would refuse to
-    /// build the srun command.  The failures that remain in a search
-    /// trajectory are the interesting ones — OOMs (Fig 9's red arrows).
+    /// build the srun command, and the interleave factor falls back to 1
+    /// when the micro-batch count cannot align with the rank grid.  The
+    /// failures that remain in a search trajectory are the interesting
+    /// ones — OOMs (Fig 9's red arrows).
     pub fn sample(rng: &mut Rng64) -> Self {
         loop {
-            let p = Self {
+            let mut p = Self {
                 pp: PP_CHOICES[rng.below(PP_CHOICES.len() as u64) as usize],
                 tp: TP_CHOICES[rng.below(TP_CHOICES.len() as u64) as usize],
                 mbs: MBS_RANGE.0 + rng.below((MBS_RANGE.1 - MBS_RANGE.0 + 1) as u64) as u32,
                 gas: GAS_CHOICES[rng.below(GAS_CHOICES.len() as u64) as usize],
                 zero1: rng.below(2) == 1,
                 nnodes: NNODES_CHOICES[rng.below(NNODES_CHOICES.len() as u64) as usize],
+                interleave: INTERLEAVE_CHOICES
+                    [rng.below(INTERLEAVE_CHOICES.len() as u64) as usize],
             };
+            if p.gas % p.pp != 0 {
+                p.interleave = 1;
+            }
             if p.gpus() % (p.tp * p.pp) == 0 {
                 return p;
             }
@@ -52,9 +67,9 @@ impl Point {
         self.nnodes * GPUS_PER_NODE
     }
 
-    /// Normalised feature vector in [0,1]^6 (surrogate + SHAP input),
+    /// Normalised feature vector in [0,1]^7 (surrogate + SHAP input),
     /// ordered as [`FEATURES`].
-    pub fn features(&self) -> [f64; 6] {
+    pub fn features(&self) -> [f64; 7] {
         let norm = |v: f64, lo: f64, hi: f64| (v - lo) / (hi - lo);
         [
             norm(self.mbs as f64, MBS_RANGE.0 as f64, MBS_RANGE.1 as f64),
@@ -63,6 +78,7 @@ impl Point {
             norm(self.nnodes as f64, 12.0, 16.0),
             if self.zero1 { 1.0 } else { 0.0 },
             norm(self.gas as f64, 5.0, 10.0),
+            norm((self.interleave as f64).log2(), 0.0, 2.0),
         ]
     }
 
@@ -80,6 +96,11 @@ impl Point {
         }
         let dp = gpus / per_replica;
         let gbs = self.mbs * self.gas * dp;
+        let schedule = if self.interleave > 1 {
+            ScheduleKind::Interleaved1F1B { v: self.interleave }
+        } else {
+            ScheduleKind::OneF1B
+        };
         Ok((
             model,
             ParallelConfig {
@@ -92,7 +113,7 @@ impl Point {
                 flash_attention: true,
                 checkpoint_activations: true,
                 precision: Precision::Fp16,
-                schedule: ScheduleKind::OneF1B,
+                schedule,
             },
         ))
     }
@@ -112,14 +133,36 @@ mod tests {
             assert!((MBS_RANGE.0..=MBS_RANGE.1).contains(&p.mbs));
             assert!(GAS_CHOICES.contains(&p.gas));
             assert!(NNODES_CHOICES.contains(&p.nnodes));
+            assert!(INTERLEAVE_CHOICES.contains(&p.interleave));
+            // interleaving only survives on aligned grids
+            if p.interleave > 1 {
+                assert_eq!(p.gas % p.pp, 0, "{p:?}");
+            }
             let f = p.features();
             assert!(f.iter().all(|&x| (0.0..=1.0).contains(&x)), "{f:?}");
         }
     }
 
     #[test]
+    fn sampler_reaches_interleaved_points() {
+        let mut rng = Rng64::new(2);
+        let n_inter = (0..300)
+            .filter(|_| Point::sample(&mut rng).interleave > 1)
+            .count();
+        assert!(n_inter > 10, "interleave dimension must be explorable: {n_inter}");
+    }
+
+    #[test]
     fn config_instantiation() {
-        let p = Point { pp: 16, tp: 4, mbs: 4, gas: 10, zero1: true, nnodes: 16 };
+        let p = Point {
+            pp: 16,
+            tp: 4,
+            mbs: 4,
+            gas: 10,
+            zero1: true,
+            nnodes: 16,
+            interleave: 1,
+        };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.dp, 2);
         assert_eq!(cfg.gbs, 4 * 10 * 2);
@@ -128,9 +171,36 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_config_instantiation() {
+        let p = Point {
+            pp: 2,
+            tp: 8,
+            mbs: 4,
+            gas: 10,
+            zero1: true,
+            nnodes: 16,
+            interleave: 2,
+        };
+        let (_, cfg) = p.to_config().unwrap();
+        assert_eq!(cfg.schedule, ScheduleKind::Interleaved1F1B { v: 2 });
+        cfg.validate().unwrap();
+        // interleaving strictly shrinks the analytic bubble here
+        let plain = ScheduleKind::OneF1B.bubble_fraction(2, 10);
+        assert!(cfg.bubble_fraction() < plain);
+    }
+
+    #[test]
     fn untileable_allocations_fail() {
         // 12 nodes = 96 GPUs; tp*pp = 64 does not divide 96
-        let p = Point { pp: 16, tp: 4, mbs: 4, gas: 5, zero1: false, nnodes: 12 };
+        let p = Point {
+            pp: 16,
+            tp: 4,
+            mbs: 4,
+            gas: 5,
+            zero1: false,
+            nnodes: 12,
+            interleave: 1,
+        };
         assert!(p.to_config().is_err());
     }
 }

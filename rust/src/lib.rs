@@ -9,7 +9,8 @@
 //! system as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the distributed-training coordinator: 3D rank
-//!   layout, pipeline schedules (GPipe / 1F1B), collectives, ZeRO-1
+//!   layout, pipeline schedules (GPipe / 1F1B / interleaved 1F1B over
+//!   virtual stages, executed for real end-to-end), collectives, ZeRO-1
 //!   sharded optimizer, the Frontier topology + performance models that
 //!   regenerate every figure/table, and a Bayesian HPO engine with SHAP
 //!   sensitivity (the paper's DeepHyper study).

@@ -30,12 +30,13 @@ USAGE: frontier <command> [options]
 COMMANDS:
   tables                       print Tables I/II/V and the Fig 5 matrix
   simulate [--model 175b] [--tp N] [--pp N] [--dp N] [--mbs N] [--gbs N]
-           [--zero1] [--no-flash] [--des]
+           [--interleave V] [--zero1] [--no-flash] [--des]
   sweep    [--axis tp|gbs|pp-fixed|pp-scaled]
   scaling  [--model 175b|1t] [--mode weak|strong]
   hpo      [--evals N] [--seed N]
-  train    [--bundle tiny-s2-mb2] [--artifacts DIR] [--dp N]
-           [--microbatches N] [--steps N] [--zero1] [--gpipe]
+  train    [--bundle tiny-s2-mb2 | --bundle builtin:tiny-s4-mb2]
+           [--artifacts DIR] [--dp N] [--microbatches N] [--steps N]
+           [--zero1] [--gpipe | --interleave V]
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
 ";
@@ -129,10 +130,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let dp: u32 = args.opt("dp", 1).map_err(anyhow::Error::msg)?;
     let mbs: u32 = args.opt("mbs", 1).map_err(anyhow::Error::msg)?;
     let gbs: u32 = args.opt("gbs", 16).map_err(anyhow::Error::msg)?;
+    let interleave: u32 = args.opt("interleave", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(interleave >= 1, "--interleave must be >= 1");
 
     let spec =
         config::lookup(&model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-    let cfg = ParallelConfig::default()
+    let mut cfg = ParallelConfig::default()
         .with_tp(tp)
         .with_pp(pp)
         .with_dp(dp)
@@ -140,6 +143,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .with_gbs(gbs)
         .with_zero1(args.flag("zero1"))
         .with_flash(!args.flag("no-flash"));
+    if interleave > 1 {
+        cfg = cfg.with_interleave(interleave);
+    }
     let perf = PerfModel::default();
     match perf.evaluate(&spec, &cfg) {
         Ok(b) => {
@@ -313,13 +319,14 @@ fn cmd_hpo(evals: u32, seed: u64) -> Result<()> {
         };
         if i % 8 == 0 || ev.objective.is_none() {
             println!(
-                "  #{i:>3} pp{:<2} tp{} mbs{:<2} gas{:<2} z{} n{:<2} -> {marker}  best={:.1}",
+                "  #{i:>3} pp{:<2} tp{} mbs{:<2} gas{:<2} z{} n{:<2} v{} -> {marker}  best={:.1}",
                 ev.point.pp,
                 ev.point.tp,
                 ev.point.mbs,
                 ev.point.gas,
                 u8::from(ev.point.zero1),
                 ev.point.nnodes,
+                ev.point.interleave,
                 result.best_trajectory[i]
             );
         }
@@ -342,10 +349,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         artifacts_root: args.opt_str("artifacts", "artifacts").into(),
         bundle: args.opt_str("bundle", "tiny-s2-mb2"),
         dp: args.opt("dp", 1).map_err(anyhow::Error::msg)?,
-        schedule: if args.flag("gpipe") {
-            ScheduleKind::GPipe
-        } else {
-            ScheduleKind::OneF1B
+        schedule: {
+            let v: u32 = args.opt("interleave", 1).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(v >= 1, "--interleave must be >= 1");
+            if args.flag("gpipe") {
+                anyhow::ensure!(v <= 1, "--gpipe and --interleave are exclusive");
+                ScheduleKind::GPipe
+            } else if v > 1 {
+                ScheduleKind::Interleaved1F1B { v }
+            } else {
+                ScheduleKind::OneF1B
+            }
         },
         microbatches: args.opt("microbatches", 4).map_err(anyhow::Error::msg)?,
         steps: args.opt("steps", 20).map_err(anyhow::Error::msg)?,

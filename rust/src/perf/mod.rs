@@ -201,6 +201,13 @@ impl PerfModel {
                 cfg.pp, model.n_layers
             )));
         }
+        let chunks = cfg.schedule.chunks();
+        if cfg.pp * chunks > model.n_layers {
+            return Err(PerfError::Invalid(format!(
+                "pp {} x interleave {chunks} exceeds layer count {}",
+                cfg.pp, model.n_layers
+            )));
+        }
         let breakdown = mem::per_gpu(model, cfg);
         if breakdown.total() > crate::topology::HBM_BYTES {
             return Err(PerfError::OutOfMemory { required_gib: breakdown.gib() as u64 });

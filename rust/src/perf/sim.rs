@@ -1,13 +1,15 @@
 //! Discrete-event pipeline simulator.
 //!
 //! Executes the *actual* `schedule::Schedule` instruction streams against
-//! the comm/kernel cost models: each stage is a resource that runs its ops
-//! in stream order, forwards become available to the next stage after the
-//! p2p transfer, backwards flow the other way.  The measured idle time IS
-//! the pipeline bubble — no closed-form `(p-1)/m` assumption — so this
-//! cross-validates the analytic model (`perf::PerfModel`) and exposes
-//! schedule effects the formula hides (e.g. GPipe's fill/drain asymmetry,
-//! unsaturated pipelines).
+//! the comm/kernel cost models: each pipeline rank is a resource that runs
+//! its ops in stream order, forwards become available to the next *global*
+//! stage after the p2p transfer, backwards flow the other way.  With
+//! interleaved schedules a rank hosts `v` model chunks and each op costs a
+//! `1/v` share of the stage compute.  The measured idle time IS the
+//! pipeline bubble — no closed-form `(p-1)/m` or `(p-1)/(m v)` assumption
+//! — so this cross-validates the analytic model (`perf::PerfModel`) and
+//! exposes schedule effects the formula hides (GPipe's fill/drain
+//! asymmetry, unsaturated pipelines, interleaving's extra p2p hops).
 
 use crate::comm::CommModel;
 use crate::config::{ModelSpec, ParallelConfig};
@@ -20,13 +22,13 @@ use super::{PerfError, PerfModel};
 /// Simulated timeline of one training step for a single pipeline replica.
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    /// Wall-clock of the pipelined fwd/bwd phase (max over stages).
+    /// Wall-clock of the pipelined fwd/bwd phase (max over ranks).
     pub t_pipeline: f64,
-    /// Per-stage busy time (compute + folded TP comm).
+    /// Per-rank busy time (compute + folded TP comm).
     pub busy: Vec<f64>,
-    /// Per-stage idle (bubble) time inside the pipeline phase.
+    /// Per-rank idle (bubble) time inside the pipeline phase.
     pub idle: Vec<f64>,
-    /// Measured bubble fraction on the busiest stage's timeline.
+    /// Measured bubble fraction on the busiest rank's timeline.
     pub bubble_fraction: f64,
     /// End-to-end step time (adds DP sync + optimizer from the cost model).
     pub t_step: f64,
@@ -46,49 +48,59 @@ pub fn simulate(
     let m = cfg.microbatches();
     let sched = schedule::build(cfg.schedule, cfg.pp, m);
     sched.validate().map_err(PerfError::Invalid)?;
+    let v = sched.v as usize;
+    let k = sched.global_stages() as usize; // global (virtual) stages
 
     let machine = Machine::for_gpus(cfg.world_size());
     let comm = CommModel::new(machine);
     let layout = RankLayout::new(cfg.tp, cfg.pp, cfg.dp);
 
-    // per-op durations from the same pricing as the analytic model
+    // per-op durations from the same pricing as the analytic model;
+    // a chunk is a 1/v slice of the rank's layers
     let (t_fwd, t_bwd) = per_microbatch_times(perf, model, cfg, &comm, &layout);
+    let (t_fwd_c, t_bwd_c) = (t_fwd / v as f64, t_bwd / v as f64);
     let p2p_bytes = cfg.mbs as u64 * model.seq * model.hidden * cfg.precision.bytes();
     let stride = (cfg.dp * cfg.tp).min(comm.machine.n_gpus() - 1);
     let t_hop = comm.p2p(0, stride, p2p_bytes) * (1.0 - perf.pp_overlap);
 
-    // event-driven execution: fixed-point over stage program counters
+    // event-driven execution: fixed-point over rank program counters;
+    // completion times are tracked per *global* stage g = chunk * p + rank
     let mut pc = vec![0usize; p];
-    let mut clock = vec![0.0f64; p]; // next free time per stage
+    let mut clock = vec![0.0f64; p]; // next free time per rank
     let mut busy = vec![0.0f64; p];
-    let mut fwd_done = vec![vec![f64::NAN; m as usize]; p];
-    let mut bwd_done = vec![vec![f64::NAN; m as usize]; p];
+    let mut fwd_done = vec![vec![f64::NAN; m as usize]; k];
+    let mut bwd_done = vec![vec![f64::NAN; m as usize]; k];
 
     loop {
         let mut progressed = false;
         for i in 0..p {
             while pc[i] < sched.streams[i].len() {
                 let op = sched.streams[i][pc[i]];
+                let g = (op.chunk() as usize) * p + i;
                 let mb = op.mb() as usize;
                 let ready = match op {
                     Op::Forward { .. } => {
-                        if i == 0 {
+                        if g == 0 {
                             Some(0.0)
-                        } else if fwd_done[i - 1][mb].is_nan() {
+                        } else if fwd_done[g - 1][mb].is_nan() {
                             None
                         } else {
-                            Some(fwd_done[i - 1][mb] + t_hop)
+                            // the producing chunk sits on rank (g-1) % p;
+                            // a same-rank chunk boundary needs no transfer
+                            let hop = if (g - 1) % p != i { t_hop } else { 0.0 };
+                            Some(fwd_done[g - 1][mb] + hop)
                         }
                     }
                     Op::Backward { .. } => {
-                        if i == p - 1 {
+                        if g == k - 1 {
                             // loss is local; backward can start right after
-                            // this stage's own forward of that micro-batch
-                            Some(fwd_done[i][mb])
-                        } else if bwd_done[i + 1][mb].is_nan() {
+                            // this chunk's own forward of that micro-batch
+                            Some(fwd_done[g][mb])
+                        } else if bwd_done[g + 1][mb].is_nan() {
                             None
                         } else {
-                            Some(bwd_done[i + 1][mb] + t_hop)
+                            let hop = if (g + 1) % p != i { t_hop } else { 0.0 };
+                            Some(bwd_done[g + 1][mb] + hop)
                         }
                     }
                 };
@@ -96,14 +108,14 @@ pub fn simulate(
                 if ready.is_nan() {
                     break;
                 }
-                let dur = if op.is_forward() { t_fwd } else { t_bwd };
+                let dur = if op.is_forward() { t_fwd_c } else { t_bwd_c };
                 let start = clock[i].max(ready);
                 let done = start + dur;
                 clock[i] = done;
                 busy[i] += dur;
                 match op {
-                    Op::Forward { .. } => fwd_done[i][mb] = done,
-                    Op::Backward { .. } => bwd_done[i][mb] = done,
+                    Op::Forward { .. } => fwd_done[g][mb] = done,
+                    Op::Backward { .. } => bwd_done[g][mb] = done,
                 }
                 pc[i] += 1;
                 progressed = true;
@@ -162,7 +174,7 @@ mod tests {
 
     #[test]
     fn sim_matches_analytic_bubble() {
-        // measured bubble on stage p-1 ~ (p-1)/(m+p-1) for 1F1B
+        // measured bubble on rank p-1 ~ (p-1)/(m+p-1) for 1F1B
         let m = lookup("22b").unwrap();
         let cfg = ParallelConfig::default().with_tp(2).with_pp(8).with_gbs(32);
         let sim = simulate(&pm(), &m, &cfg).unwrap();
@@ -176,9 +188,62 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_bubble_matches_analytic() {
+        // THE tentpole cross-validation: executing the real interleaved
+        // streams must reproduce the (p-1)/(m v + p - 1) bubble within 10%
+        // relative error for saturated pipelines (m >= 2p, m % p == 0)
+        let m = lookup("22b").unwrap();
+        for v in [2u32, 4] {
+            let cfg = ParallelConfig::default()
+                .with_tp(2)
+                .with_pp(8)
+                .with_gbs(32) // m = 32 = 4p, 32 % 8 == 0
+                .with_interleave(v);
+            let sim = simulate(&pm(), &m, &cfg).unwrap();
+            let analytic = cfg.bubble_fraction();
+            let rel = (sim.bubble_fraction - analytic).abs() / analytic;
+            assert!(
+                rel < 0.10,
+                "v={v}: sim {:.4} vs analytic {:.4} (rel {rel:.3})",
+                sim.bubble_fraction,
+                analytic
+            );
+        }
+    }
+
+    #[test]
+    fn interleaving_shrinks_measured_bubble_and_step() {
+        let m = lookup("22b").unwrap();
+        let base = ParallelConfig::default().with_tp(2).with_pp(8).with_gbs(32);
+        let plain = simulate(&pm(), &m, &base).unwrap();
+        let inter = simulate(&pm(), &m, &base.clone().with_interleave(4)).unwrap();
+        assert!(
+            inter.bubble_fraction < plain.bubble_fraction,
+            "interleaved {:.4} !< plain {:.4}",
+            inter.bubble_fraction,
+            plain.bubble_fraction
+        );
+        assert!(inter.t_pipeline < plain.t_pipeline);
+    }
+
+    #[test]
     fn sim_and_closed_form_agree_on_throughput() {
         let m = lookup("175b").unwrap();
         let cfg = ParallelConfig::default().with_tp(8).with_pp(16).with_gbs(256);
+        let sim = simulate(&pm(), &m, &cfg).unwrap();
+        let ana = pm().evaluate(&m, &cfg).unwrap();
+        let rel = (sim.pct_peak - ana.pct_peak).abs() / ana.pct_peak;
+        assert!(rel < 0.15, "sim {:.2}% vs analytic {:.2}%", sim.pct_peak, ana.pct_peak);
+    }
+
+    #[test]
+    fn interleaved_sim_agrees_with_analytic_throughput() {
+        let m = lookup("175b").unwrap();
+        let cfg = ParallelConfig::default()
+            .with_tp(8)
+            .with_pp(16)
+            .with_gbs(256)
+            .with_interleave(2);
         let sim = simulate(&pm(), &m, &cfg).unwrap();
         let ana = pm().evaluate(&m, &cfg).unwrap();
         let rel = (sim.pct_peak - ana.pct_peak).abs() / ana.pct_peak;

@@ -1,0 +1,453 @@
+//! Pure-Rust reference stage backend — the XLA-free compute path.
+//!
+//! A deliberately small next-token model with the *same stage contract*
+//! as the AOT-compiled GPT stages (embed on the first global stage, one
+//! tanh-linear layer per stage, softmax-xent head on the last), so the
+//! whole coordinator — schedules, virtual chunks, collectives, ZeRO-1 —
+//! can be exercised end-to-end without PJRT artifacts.  The engine tests
+//! use it to prove schedule equivalence (1F1B vs GPipe vs interleaved
+//! must walk the same loss trajectory); gradients were validated against
+//! finite differences when this module was written.
+//!
+//! Initialisation is keyed per *global* component (embedding, layer
+//! index, head), never per stage, so any partition of the same model —
+//! 1, 2, or `p·v` chunks — materialises bit-identical parameters.
+
+use crate::data::Rng64;
+
+/// Architecture + partition of one builtin bundle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BuiltinSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub seq: usize,
+    pub mbs: usize,
+    /// Global stages (= model layers; one tanh-linear layer per stage).
+    pub n_stages: usize,
+}
+
+impl BuiltinSpec {
+    /// Parse an engine bundle name of the form `builtin:<model>-s<K>-mb<B>`
+    /// (e.g. `builtin:tiny-s4-mb2`).  Returns `None` for artifact bundles.
+    pub fn parse(bundle: &str) -> Option<Self> {
+        let rest = bundle.strip_prefix("builtin:")?;
+        let (model, rest) = rest.split_once("-s")?;
+        let (stages, mbs) = rest.split_once("-mb")?;
+        let n_stages: usize = stages.parse().ok()?;
+        let mbs: usize = mbs.parse().ok()?;
+        if n_stages == 0 || mbs == 0 {
+            return None;
+        }
+        let (vocab, hidden, seq) = match model {
+            "tiny" => (64, 16, 8),
+            "mini" => (128, 32, 16),
+            _ => return None,
+        };
+        Some(Self { name: model.to_string(), vocab, hidden, seq, mbs, n_stages })
+    }
+
+    pub fn embed_params(&self) -> usize {
+        self.vocab * self.hidden
+    }
+
+    pub fn layer_params(&self) -> usize {
+        self.hidden * self.hidden + self.hidden
+    }
+
+    pub fn head_params(&self) -> usize {
+        self.hidden * self.vocab + self.vocab
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.embed_params() + self.n_stages * self.layer_params() + self.head_params()
+    }
+
+    /// Parameters held by global stage `g` (embed on 0, head on last).
+    pub fn stage_params(&self, g: usize) -> usize {
+        let mut n = self.layer_params();
+        if g == 0 {
+            n += self.embed_params();
+        }
+        if g == self.n_stages - 1 {
+            n += self.head_params();
+        }
+        n
+    }
+}
+
+/// One global stage of the builtin model: optional embed, one tanh-linear
+/// layer, optional softmax-xent head.
+#[derive(Debug, Clone)]
+pub struct BuiltinStage {
+    pub spec: BuiltinSpec,
+    /// Global stage index (= global layer index).
+    pub stage: usize,
+}
+
+/// Per-component init streams keyed by (run seed, global component id) so
+/// every partition of the model draws identical values.
+fn component_rng(seed: u64, salt: u64) -> Rng64 {
+    Rng64::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ salt ^ 0x5EED_CAFE)
+}
+
+impl BuiltinStage {
+    fn d(&self) -> usize {
+        self.spec.hidden
+    }
+
+    fn v(&self) -> usize {
+        self.spec.vocab
+    }
+
+    pub fn has_embed(&self) -> bool {
+        self.stage == 0
+    }
+
+    pub fn has_head(&self) -> bool {
+        self.stage == self.spec.n_stages - 1
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.spec.stage_params(self.stage)
+    }
+
+    /// Offsets of (embed, layer W, layer b, head W, head b) in the flat
+    /// parameter vector.
+    fn layout(&self) -> (usize, usize, usize, usize) {
+        let embed = if self.has_embed() { self.spec.embed_params() } else { 0 };
+        let d = self.d();
+        let w = embed;
+        let b = w + d * d;
+        let hw = b + d;
+        let hb = hw + if self.has_head() { d * self.v() } else { 0 };
+        (w, b, hw, hb)
+    }
+
+    /// Deterministic, partition-invariant init of this stage's flat
+    /// parameter vector.
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let d = self.d();
+        let mut out = Vec::with_capacity(self.param_count());
+        if self.has_embed() {
+            let mut rng = component_rng(seed, 0xE0_BED);
+            out.extend((0..self.spec.embed_params()).map(|_| (rng.normal() * 0.5) as f32));
+        }
+        let mut rng = component_rng(seed, 0x1A7E5 + self.stage as u64);
+        let scale = 1.0 / (d as f64).sqrt();
+        out.extend((0..d * d).map(|_| (rng.normal() * scale) as f32));
+        out.extend(std::iter::repeat(0.0f32).take(d)); // layer bias
+        if self.has_head() {
+            let mut rng = component_rng(seed, 0xD_EAD);
+            out.extend((0..d * self.v()).map(|_| (rng.normal() * scale) as f32));
+            out.extend(std::iter::repeat(0.0f32).take(self.v())); // head bias
+        }
+        debug_assert_eq!(out.len(), self.param_count());
+        out
+    }
+
+    /// Embed a token block into the layer input `x` (t-major, d-minor).
+    fn embed(&self, params: &[f32], tokens: &[i32]) -> Vec<f32> {
+        let d = self.d();
+        let mut x = Vec::with_capacity(tokens.len() * d);
+        for &t in tokens {
+            let row = t as usize * d;
+            x.extend_from_slice(&params[row..row + d]);
+        }
+        x
+    }
+
+    /// One tanh-linear layer forward: `h = tanh(x W + b)`.
+    fn layer_fwd(&self, params: &[f32], x: &[f32]) -> Vec<f32> {
+        let d = self.d();
+        let (w0, b0, _, _) = self.layout();
+        let (w, b) = (&params[w0..w0 + d * d], &params[b0..b0 + d]);
+        let t_count = x.len() / d;
+        let mut h = vec![0.0f32; x.len()];
+        for t in 0..t_count {
+            let xi = &x[t * d..(t + 1) * d];
+            let ho = &mut h[t * d..(t + 1) * d];
+            ho.copy_from_slice(b);
+            for (i, &xv) in xi.iter().enumerate() {
+                let wrow = &w[i * d..(i + 1) * d];
+                for (o, &wv) in ho.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+            for o in ho.iter_mut() {
+                *o = o.tanh();
+            }
+        }
+        h
+    }
+
+    /// Layer backward given the stage input `x` and upstream grad `dh`
+    /// (recomputes the forward — checkpointing semantics).  Writes dW/db
+    /// into `gparams` and returns `dx`.
+    fn layer_bwd(&self, params: &[f32], gparams: &mut [f32], x: &[f32], dh: &[f32]) -> Vec<f32> {
+        let d = self.d();
+        let (w0, b0, _, _) = self.layout();
+        let h = self.layer_fwd(params, x);
+        let w = &params[w0..w0 + d * d];
+        let t_count = x.len() / d;
+        let mut dx = vec![0.0f32; x.len()];
+        for t in 0..t_count {
+            let xi = &x[t * d..(t + 1) * d];
+            let hi = &h[t * d..(t + 1) * d];
+            let dhi = &dh[t * d..(t + 1) * d];
+            // dpre = dh * (1 - h^2)
+            let dpre: Vec<f32> = dhi
+                .iter()
+                .zip(hi)
+                .map(|(&g, &hv)| g * (1.0 - hv * hv))
+                .collect();
+            for (j, &dp) in dpre.iter().enumerate() {
+                gparams[b0 + j] += dp;
+            }
+            let dxi = &mut dx[t * d..(t + 1) * d];
+            for (i, &xv) in xi.iter().enumerate() {
+                let grow = &mut gparams[w0 + i * d..w0 + (i + 1) * d];
+                let wrow = &w[i * d..(i + 1) * d];
+                let mut acc = 0.0f32;
+                for ((gw, &dp), &wv) in grow.iter_mut().zip(&dpre).zip(wrow) {
+                    *gw += xv * dp;
+                    acc += dp * wv;
+                }
+                dxi[i] = acc;
+            }
+        }
+        dx
+    }
+
+    /// Head loss + backward: returns (dh into the layer output, mean loss).
+    fn head_bwd(
+        &self,
+        params: &[f32],
+        gparams: &mut [f32],
+        h: &[f32],
+        targets: &[i32],
+    ) -> (Vec<f32>, f32) {
+        let d = self.d();
+        let v = self.v();
+        let (_, _, hw0, hb0) = self.layout();
+        let wh = &params[hw0..hw0 + d * v];
+        let t_count = h.len() / d;
+        let inv_t = 1.0 / t_count as f32;
+        let mut dh = vec![0.0f32; h.len()];
+        let mut loss = 0.0f32;
+        let mut logits = vec![0.0f32; v];
+        for t in 0..t_count {
+            let hi = &h[t * d..(t + 1) * d];
+            logits.copy_from_slice(&params[hb0..hb0 + v]);
+            for (i, &hv) in hi.iter().enumerate() {
+                let wrow = &wh[i * v..(i + 1) * v];
+                for (l, &wv) in logits.iter_mut().zip(wrow) {
+                    *l += hv * wv;
+                }
+            }
+            // stable softmax-xent
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - max).exp();
+                z += *l;
+            }
+            let tgt = targets[t] as usize;
+            loss -= (logits[tgt] / z).max(1e-30).ln() * inv_t;
+            // dlogits = (softmax - onehot) / T, reusing `logits` as probs
+            for (u, l) in logits.iter_mut().enumerate() {
+                *l = (*l / z - f32::from(u == tgt)) * inv_t;
+            }
+            for (u, &dl) in logits.iter().enumerate() {
+                gparams[hb0 + u] += dl;
+            }
+            let dhi = &mut dh[t * d..(t + 1) * d];
+            for (i, &hv) in hi.iter().enumerate() {
+                let grow = &mut gparams[hw0 + i * v..hw0 + (i + 1) * v];
+                let wrow = &wh[i * v..(i + 1) * v];
+                let mut acc = 0.0f32;
+                for ((gw, &dl), &wv) in grow.iter_mut().zip(logits.iter()).zip(wrow) {
+                    *gw += hv * dl;
+                    acc += dl * wv;
+                }
+                dhi[i] = acc;
+            }
+        }
+        (dh, loss)
+    }
+
+    /// Embedding backward: scatter `dx` rows into the table gradient.
+    fn embed_bwd(&self, gparams: &mut [f32], tokens: &[i32], dx: &[f32]) {
+        let d = self.d();
+        for (t, &tok) in tokens.iter().enumerate() {
+            let row = tok as usize * d;
+            for (g, &v) in gparams[row..row + d].iter_mut().zip(&dx[t * d..(t + 1) * d]) {
+                *g += v;
+            }
+        }
+    }
+
+    // ---- the five stage entry points the worker drives ----
+
+    /// First-stage forward: tokens -> activation.
+    pub fn fwd_first(&self, params: &[f32], tokens: &[i32]) -> Vec<f32> {
+        let x = self.embed(params, tokens);
+        self.layer_fwd(params, &x)
+    }
+
+    /// Middle-stage forward: activation -> activation.
+    pub fn fwd_mid(&self, params: &[f32], x: &[f32]) -> Vec<f32> {
+        self.layer_fwd(params, x)
+    }
+
+    /// Last-stage backward: (stage input, targets) -> (gparams, gx, loss).
+    pub fn bwd_last(&self, params: &[f32], x: &[f32], targets: &[i32]) -> (Vec<f32>, Vec<f32>, f32) {
+        let mut g = vec![0.0f32; params.len()];
+        let h = self.layer_fwd(params, x);
+        let (dh, loss) = self.head_bwd(params, &mut g, &h, targets);
+        let dx = self.layer_bwd(params, &mut g, x, &dh);
+        (g, dx, loss)
+    }
+
+    /// Middle-stage backward: (stage input, upstream grad) -> (gparams, gx).
+    pub fn bwd_mid(&self, params: &[f32], x: &[f32], gy: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let mut g = vec![0.0f32; params.len()];
+        let dx = self.layer_bwd(params, &mut g, x, gy);
+        (g, dx)
+    }
+
+    /// First-stage backward: (tokens, upstream grad) -> gparams.
+    pub fn bwd_first(&self, params: &[f32], tokens: &[i32], gy: &[f32]) -> Vec<f32> {
+        let mut g = vec![0.0f32; params.len()];
+        let x = self.embed(params, tokens);
+        let dx = self.layer_bwd(params, &mut g, &x, gy);
+        self.embed_bwd(&mut g, tokens, &dx);
+        g
+    }
+
+    /// Fused single-stage backward (K = 1): (tokens, targets) ->
+    /// (gparams, loss).
+    pub fn bwd_single(&self, params: &[f32], tokens: &[i32], targets: &[i32]) -> (Vec<f32>, f32) {
+        let mut g = vec![0.0f32; params.len()];
+        let x = self.embed(params, tokens);
+        let h = self.layer_fwd(params, &x);
+        let (dh, loss) = self.head_bwd(params, &mut g, &h, targets);
+        let dx = self.layer_bwd(params, &mut g, &x, &dh);
+        self.embed_bwd(&mut g, tokens, &dx);
+        (g, loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(k: usize) -> BuiltinSpec {
+        BuiltinSpec::parse(&format!("builtin:tiny-s{k}-mb2")).unwrap()
+    }
+
+    fn stage(sp: &BuiltinSpec, g: usize) -> BuiltinStage {
+        BuiltinStage { spec: sp.clone(), stage: g }
+    }
+
+    #[test]
+    fn parse_bundle_names() {
+        let sp = BuiltinSpec::parse("builtin:tiny-s4-mb2").unwrap();
+        assert_eq!((sp.n_stages, sp.mbs, sp.hidden), (4, 2, 16));
+        assert!(BuiltinSpec::parse("tiny-s4-mb2").is_none());
+        assert!(BuiltinSpec::parse("builtin:nope-s4-mb2").is_none());
+        assert!(BuiltinSpec::parse("builtin:tiny-s0-mb2").is_none());
+    }
+
+    #[test]
+    fn stage_params_sum_to_total() {
+        for k in [1usize, 2, 4] {
+            let sp = spec(k);
+            let sum: usize = (0..k).map(|g| sp.stage_params(g)).sum();
+            assert_eq!(sum, sp.total_params());
+            for g in 0..k {
+                assert_eq!(stage(&sp, g).init(7).len(), sp.stage_params(g));
+            }
+        }
+    }
+
+    #[test]
+    fn init_is_partition_invariant() {
+        // layer 1's weights must be identical whether the model is cut
+        // into 2 or 4 stages (global component keys)
+        let s2 = stage(&spec(2), 1);
+        let s4 = stage(&spec(4), 1);
+        let p2 = s2.init(42);
+        let p4 = s4.init(42);
+        let d = 16;
+        // s2 stage 1: [W, b, head]; s4 stage 1: [W, b] — same leading W
+        assert_eq!(&p2[..d * d], &p4[..d * d]);
+    }
+
+    #[test]
+    fn gradcheck_single_stage() {
+        // finite differences on the fused path (the multi-stage paths are
+        // compositions of the same layer/head/embed pieces)
+        let sp = spec(1);
+        let st = stage(&sp, 0);
+        let mut params = st.init(3);
+        let t = sp.mbs * sp.seq;
+        let tokens: Vec<i32> = (0..t).map(|i| (i * 7 % sp.vocab) as i32).collect();
+        let targets: Vec<i32> = (0..t).map(|i| ((i * 7 + 1) % sp.vocab) as i32).collect();
+        let (g, _) = st.bwd_single(&params, &tokens, &targets);
+        let eps = 1e-3f32;
+        let mut worst = 0.0f32;
+        for idx in [0usize, 100, 1024, 1024 + 50, 1024 + 272 + 10, params.len() - 1] {
+            let orig = params[idx];
+            params[idx] = orig + eps;
+            let (_, lp) = st.bwd_single(&params, &tokens, &targets);
+            params[idx] = orig - eps;
+            let (_, lm) = st.bwd_single(&params, &tokens, &targets);
+            params[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            worst = worst.max((fd - g[idx]).abs());
+        }
+        assert!(worst < 2e-3, "finite-diff mismatch: {worst}");
+    }
+
+    #[test]
+    fn pipeline_composition_matches_fused() {
+        // chaining stage entry points across a 2-stage cut must produce
+        // the same loss and the same embedding gradient as... two stacked
+        // layers differ from one, so instead check: fwd_first -> bwd_last
+        // over a 2-stage model reproduces bwd_single of the SAME 2-layer
+        // model composed manually
+        let sp = spec(2);
+        let s0 = stage(&sp, 0);
+        let s1 = stage(&sp, 1);
+        let p0 = s0.init(9);
+        let p1 = s1.init(9);
+        let t = sp.mbs * sp.seq;
+        let tokens: Vec<i32> = (0..t).map(|i| (i * 5 % sp.vocab) as i32).collect();
+        let targets: Vec<i32> = (0..t).map(|i| ((i * 5 + 1) % sp.vocab) as i32).collect();
+
+        let y0 = s0.fwd_first(&p0, &tokens);
+        let (g1, gx, loss) = s1.bwd_last(&p1, &y0, &targets);
+        let g0 = s0.bwd_first(&p0, &tokens, &gx);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(g0.iter().any(|&x| x != 0.0));
+        assert!(g1.iter().any(|&x| x != 0.0));
+
+        // numeric spot-check of the cross-stage chain: finite-diff through
+        // the composed forward wrt one weight of stage 0's layer
+        let fwd_loss = |p0: &[f32]| -> f32 {
+            let y0 = s0.fwd_first(p0, &tokens);
+            let (_, _, l) = s1.bwd_last(&p1, &y0, &targets);
+            l
+        };
+        let idx = sp.embed_params() + 3; // a layer-W element
+        let eps = 1e-3f32;
+        let mut pp = p0.clone();
+        pp[idx] += eps;
+        let lp = fwd_loss(&pp);
+        pp[idx] = p0[idx] - eps;
+        let lm = fwd_loss(&pp);
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!((fd - g0[idx]).abs() < 2e-3, "fd {fd} vs analytic {}", g0[idx]);
+    }
+}

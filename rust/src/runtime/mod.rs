@@ -1,12 +1,25 @@
-//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//! Stage-compute runtime: AOT HLO artifacts on PJRT, or the pure-Rust
+//! builtin reference backend.
 //!
-//! This is the only boundary between the rust coordinator and the
-//! JAX/Pallas compute: `make artifacts` ran Python once; from here on the
-//! stage graphs are opaque compiled executables on the PJRT CPU client
-//! (`PjRtClient::cpu` -> `HloModuleProto::from_text_file` ->
-//! `client.compile` -> `execute`).  HLO *text* is the interchange format —
-//! jax >= 0.5 serialises protos with 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! The coordinator drives every pipeline stage through one typed contract
+//! ([`StageExecutables`]): init / forward / backward entry points over
+//! flat `f32` parameter vectors and `(b, s, d)` activations.  Two
+//! backends implement it:
+//!
+//! * **Xla** — the AOT HLO-text artifacts emitted by
+//!   `python/compile/aot.py`, compiled once on the PJRT CPU client
+//!   (`PjRtClient::cpu` -> `HloModuleProto::from_text_file` ->
+//!   `client.compile` -> `execute`).  HLO *text* is the interchange
+//!   format — jax >= 0.5 serialises protos with 64-bit instruction ids
+//!   that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!   Python is never on the training path.
+//! * **Builtin** — `runtime::builtin`, a small tanh-linear next-token
+//!   model with hand-written gradients.  No artifacts, no PJRT: it keeps
+//!   the full distributed engine executable (and testable in CI) on
+//!   machines without the XLA toolchain.  Bundle names of the form
+//!   `builtin:tiny-s4-mb2` select it.
+
+pub mod builtin;
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -14,6 +27,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
+
+pub use builtin::{BuiltinSpec, BuiltinStage};
 
 /// meta.json emitted by `python/compile/aot.py` for one artifact bundle.
 #[derive(Debug, Clone)]
@@ -108,6 +123,44 @@ impl BundleMeta {
             stages,
         })
     }
+
+    /// Synthesise the meta block for a builtin bundle (no files involved).
+    pub fn for_builtin(spec: &BuiltinSpec) -> Self {
+        let stages = (0..spec.n_stages)
+            .map(|g| StageMeta {
+                index: g as u32,
+                layer_start: g as u32,
+                layer_end: g as u32 + 1,
+                has_embed: g == 0,
+                has_head: g == spec.n_stages - 1,
+                param_count: spec.stage_params(g) as u64,
+                artifacts: StageArtifacts {
+                    init: "builtin".into(),
+                    fwd: "builtin".into(),
+                    bwd: "builtin".into(),
+                },
+            })
+            .collect();
+        let total = spec.total_params() as u64;
+        BundleMeta {
+            model: ModelMeta {
+                name: format!("builtin-{}", spec.name),
+                n_layers: spec.n_stages as u32,
+                hidden: spec.hidden as u64,
+                n_heads: 1,
+                vocab: spec.vocab as u64,
+                seq: spec.seq as u64,
+                total_params: total,
+            },
+            n_stages: spec.n_stages as u32,
+            mbs: spec.mbs as u32,
+            use_flash: false,
+            use_fused_xent: true,
+            tokens_per_microbatch: (spec.mbs * spec.seq) as u64,
+            flops_per_microbatch: 6.0 * total as f64 * (spec.mbs * spec.seq) as f64,
+            stages,
+        }
+    }
 }
 
 /// A compiled executable, shareable across worker threads.
@@ -159,8 +212,10 @@ impl Executable {
 }
 
 /// The PJRT client plus helpers; one per process, shared by all workers.
+/// `client` is `None` for builtin-only runtimes ([`Runtime::null`]), where
+/// no device buffers ever exist.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
 }
 
 unsafe impl Send for Runtime {}
@@ -169,40 +224,55 @@ unsafe impl Sync for Runtime {}
 impl Runtime {
     pub fn cpu() -> Result<Arc<Self>> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Arc::new(Self { client }))
+        Ok(Arc::new(Self { client: Some(client) }))
+    }
+
+    /// A runtime with no PJRT client — sufficient for builtin bundles,
+    /// which never touch device buffers.
+    pub fn null() -> Arc<Self> {
+        Arc::new(Self { client: None })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.client {
+            Some(c) => c.platform_name(),
+            None => "builtin".to_string(),
+        }
+    }
+
+    fn client(&self) -> Result<&xla::PjRtClient> {
+        self.client
+            .as_ref()
+            .ok_or_else(|| anyhow!("runtime has no PJRT client (builtin-only)"))
     }
 
     /// Load one HLO-text artifact and compile it.
     pub fn load(&self, path: &Path) -> Result<Executable> {
+        let client = self.client()?;
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )
         .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .with_context(|| format!("compiling {path:?}"))?;
-        Ok(Executable { exe, client: self.client.clone() })
+        Ok(Executable { exe, client: client.clone() })
     }
 
     /// Upload an f32 host slice to an owned device buffer.
     pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<OwnedBuffer> {
-        Ok(OwnedBuffer(self.client.buffer_from_host_buffer(data, dims, None)?))
+        Ok(OwnedBuffer(self.client()?.buffer_from_host_buffer(data, dims, None)?))
     }
 
     /// Upload an i32 host slice to an owned device buffer.
     pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<OwnedBuffer> {
-        Ok(OwnedBuffer(self.client.buffer_from_host_buffer(data, dims, None)?))
+        Ok(OwnedBuffer(self.client()?.buffer_from_host_buffer(data, dims, None)?))
     }
 
     /// Upload a u32 host slice to an owned device buffer.
     pub fn buf_u32(&self, data: &[u32], dims: &[usize]) -> Result<OwnedBuffer> {
-        Ok(OwnedBuffer(self.client.buffer_from_host_buffer(data, dims, None)?))
+        Ok(OwnedBuffer(self.client()?.buffer_from_host_buffer(data, dims, None)?))
     }
 }
 
@@ -215,12 +285,220 @@ pub struct OwnedBuffer(pub xla::PjRtBuffer);
 
 unsafe impl Send for OwnedBuffer {}
 
-/// One pipeline stage's compiled entry points.
+/// Activation/token shapes of one bundle (what the buffer uploads need).
+#[derive(Debug, Clone, Copy)]
+pub struct StageDims {
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+}
+
+impl StageDims {
+    pub fn act(&self) -> [usize; 3] {
+        [self.b, self.s, self.d]
+    }
+
+    pub fn tok(&self) -> [usize; 2] {
+        [self.b, self.s]
+    }
+}
+
+/// Step-scoped parameter handle: uploaded once per step, reused by every
+/// micro-batch of that stage (EXPERIMENTS.md §Perf).
+pub enum ParamsHandle {
+    /// Device buffer on the PJRT client.
+    Xla(OwnedBuffer),
+    /// Host copy for the builtin backend.
+    Host(Vec<f32>),
+}
+
+impl ParamsHandle {
+    fn xla(&self) -> Result<&xla::PjRtBuffer> {
+        match self {
+            ParamsHandle::Xla(b) => Ok(&b.0),
+            ParamsHandle::Host(_) => Err(anyhow!("host params handed to XLA stage")),
+        }
+    }
+
+    fn host(&self) -> Result<&[f32]> {
+        match self {
+            ParamsHandle::Host(p) => Ok(p),
+            ParamsHandle::Xla(_) => Err(anyhow!("device params handed to builtin stage")),
+        }
+    }
+}
+
+/// Compute backend of one stage.
+pub enum StageBackend {
+    Xla { init: Executable, fwd: Executable, bwd: Executable },
+    Builtin(BuiltinStage),
+}
+
+/// One pipeline stage's compiled entry points behind the typed contract
+/// the workers drive.  `(chunk, mb)`-addressed virtual stages are just
+/// multiple `StageExecutables` hosted by one worker.
 pub struct StageExecutables {
     pub meta: StageMeta,
-    pub init: Executable,
-    pub fwd: Executable,
-    pub bwd: Executable,
+    pub backend: StageBackend,
+}
+
+impl StageExecutables {
+    /// Materialise this stage's flat parameter vector (deterministic in
+    /// `seed`; identical across DP replicas and across pipeline
+    /// partitions — init keys fold in GLOBAL layer indices on both
+    /// backends).
+    pub fn init_params(&self, seed: u64) -> Result<Vec<f32>> {
+        match &self.backend {
+            StageBackend::Xla { init, .. } => {
+                let key = [seed as u32, 0x5eed_0000];
+                let key_lit = lit_u32(&key, &[2])?;
+                let out = init.run(&[&key_lit]).context("running stage init")?;
+                let params = to_f32(&out[0])?;
+                anyhow::ensure!(
+                    params.len() as u64 == self.meta.param_count,
+                    "init size mismatch: {} vs {}",
+                    params.len(),
+                    self.meta.param_count
+                );
+                Ok(params)
+            }
+            StageBackend::Builtin(st) => Ok(st.init(seed)),
+        }
+    }
+
+    /// Upload (or stage) the parameter vector for this step's micro-batches.
+    pub fn prepare_params(&self, rt: &Runtime, params: &[f32]) -> Result<ParamsHandle> {
+        match &self.backend {
+            StageBackend::Xla { .. } => {
+                Ok(ParamsHandle::Xla(rt.buf_f32(params, &[params.len()])?))
+            }
+            StageBackend::Builtin(_) => Ok(ParamsHandle::Host(params.to_vec())),
+        }
+    }
+
+    /// First-stage forward: tokens -> activation.
+    pub fn fwd_first(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        tokens: &[i32],
+        dims: StageDims,
+    ) -> Result<Vec<f32>> {
+        match &self.backend {
+            StageBackend::Xla { fwd, .. } => {
+                let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
+                let out = fwd.run_b(&[p.xla()?, &tok_buf.0]).context("stage fwd (embed)")?;
+                to_f32(&out[0])
+            }
+            StageBackend::Builtin(st) => Ok(st.fwd_first(p.host()?, tokens)),
+        }
+    }
+
+    /// Middle-stage forward: activation -> activation.
+    pub fn fwd_mid(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        x: &[f32],
+        dims: StageDims,
+    ) -> Result<Vec<f32>> {
+        match &self.backend {
+            StageBackend::Xla { fwd, .. } => {
+                let x_buf = rt.buf_f32(x, &dims.act())?;
+                let out = fwd.run_b(&[p.xla()?, &x_buf.0]).context("stage fwd")?;
+                to_f32(&out[0])
+            }
+            StageBackend::Builtin(st) => Ok(st.fwd_mid(p.host()?, x)),
+        }
+    }
+
+    /// Fused single-stage backward: (tokens, targets) -> (grads, loss).
+    pub fn bwd_single(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        tokens: &[i32],
+        targets: &[i32],
+        dims: StageDims,
+    ) -> Result<(Vec<f32>, f32)> {
+        match &self.backend {
+            StageBackend::Xla { bwd, .. } => {
+                let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
+                let tgt_buf = rt.buf_i32(targets, &dims.tok())?;
+                let out = bwd
+                    .run_b(&[p.xla()?, &tok_buf.0, &tgt_buf.0])
+                    .context("single-stage bwd")?;
+                Ok((to_f32(&out[0])?, scalar_f32(&out[1])?))
+            }
+            StageBackend::Builtin(st) => Ok(st.bwd_single(p.host()?, tokens, targets)),
+        }
+    }
+
+    /// Last-stage backward: (stage input, targets) -> (grads, gx, loss).
+    pub fn bwd_last(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        x: &[f32],
+        targets: &[i32],
+        dims: StageDims,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        match &self.backend {
+            StageBackend::Xla { bwd, .. } => {
+                let x_buf = rt.buf_f32(x, &dims.act())?;
+                let tgt_buf = rt.buf_i32(targets, &dims.tok())?;
+                let out = bwd
+                    .run_b(&[p.xla()?, &x_buf.0, &tgt_buf.0])
+                    .context("last-stage bwd")?;
+                Ok((to_f32(&out[0])?, to_f32(&out[1])?, scalar_f32(&out[2])?))
+            }
+            StageBackend::Builtin(st) => Ok(st.bwd_last(p.host()?, x, targets)),
+        }
+    }
+
+    /// First-stage backward: (tokens, upstream grad) -> grads.
+    pub fn bwd_first(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        tokens: &[i32],
+        gy: &[f32],
+        dims: StageDims,
+    ) -> Result<Vec<f32>> {
+        match &self.backend {
+            StageBackend::Xla { bwd, .. } => {
+                let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
+                let gy_buf = rt.buf_f32(gy, &dims.act())?;
+                let out = bwd
+                    .run_b(&[p.xla()?, &tok_buf.0, &gy_buf.0])
+                    .context("first-stage bwd")?;
+                to_f32(&out[0])
+            }
+            StageBackend::Builtin(st) => Ok(st.bwd_first(p.host()?, tokens, gy)),
+        }
+    }
+
+    /// Middle-stage backward: (stage input, upstream grad) -> (grads, gx).
+    pub fn bwd_mid(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        x: &[f32],
+        gy: &[f32],
+        dims: StageDims,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        match &self.backend {
+            StageBackend::Xla { bwd, .. } => {
+                let x_buf = rt.buf_f32(x, &dims.act())?;
+                let gy_buf = rt.buf_f32(gy, &dims.act())?;
+                let out = bwd
+                    .run_b(&[p.xla()?, &x_buf.0, &gy_buf.0])
+                    .context("middle-stage bwd")?;
+                Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+            }
+            StageBackend::Builtin(st) => Ok(st.bwd_mid(p.host()?, x, gy)),
+        }
+    }
 }
 
 /// A fully-loaded artifact bundle: meta + compiled stages.
@@ -244,12 +522,40 @@ impl Bundle {
         for sm in &meta.stages {
             stages.push(StageExecutables {
                 meta: sm.clone(),
-                init: rt.load(&dir.join(&sm.artifacts.init))?,
-                fwd: rt.load(&dir.join(&sm.artifacts.fwd))?,
-                bwd: rt.load(&dir.join(&sm.artifacts.bwd))?,
+                backend: StageBackend::Xla {
+                    init: rt.load(&dir.join(&sm.artifacts.init))?,
+                    fwd: rt.load(&dir.join(&sm.artifacts.fwd))?,
+                    bwd: rt.load(&dir.join(&sm.artifacts.bwd))?,
+                },
             });
         }
         Ok(Self { dir, meta, stages })
+    }
+
+    /// Materialise a builtin bundle entirely in memory (no files, no PJRT).
+    pub fn builtin(spec: &BuiltinSpec) -> Self {
+        let meta = BundleMeta::for_builtin(spec);
+        let stages = meta
+            .stages
+            .iter()
+            .map(|sm| StageExecutables {
+                meta: sm.clone(),
+                backend: StageBackend::Builtin(BuiltinStage {
+                    spec: spec.clone(),
+                    stage: sm.index as usize,
+                }),
+            })
+            .collect();
+        Self { dir: PathBuf::from("builtin"), meta, stages }
+    }
+
+    /// Activation/token shapes shared by every stage of this bundle.
+    pub fn dims(&self) -> StageDims {
+        StageDims {
+            b: self.meta.mbs as usize,
+            s: self.meta.model.seq as usize,
+            d: self.meta.model.hidden as usize,
+        }
     }
 
     /// Conventional bundle directory name.
@@ -290,4 +596,56 @@ pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
 /// Scalar f32 from a rank-0 literal.
 pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_bundle_shape() {
+        let spec = BuiltinSpec::parse("builtin:tiny-s4-mb2").unwrap();
+        let b = Bundle::builtin(&spec);
+        assert_eq!(b.meta.n_stages, 4);
+        assert_eq!(b.stages.len(), 4);
+        assert!(b.stages[0].meta.has_embed && !b.stages[0].meta.has_head);
+        assert!(b.stages[3].meta.has_head && !b.stages[3].meta.has_embed);
+        let sum: u64 = b.meta.stages.iter().map(|s| s.param_count).sum();
+        assert_eq!(sum, b.meta.model.total_params);
+        assert_eq!(b.dims().b, 2);
+    }
+
+    #[test]
+    fn builtin_stage_contract_round_trip() {
+        // drive the typed contract end to end on the builtin backend with
+        // a null runtime (no PJRT anywhere)
+        let spec = BuiltinSpec::parse("builtin:tiny-s2-mb1").unwrap();
+        let bundle = Bundle::builtin(&spec);
+        let rt = Runtime::null();
+        assert_eq!(rt.platform(), "builtin");
+        let dims = bundle.dims();
+        let t = dims.b * dims.s;
+        let tokens: Vec<i32> = (0..t).map(|i| (i % spec.vocab) as i32).collect();
+        let targets: Vec<i32> = (0..t).map(|i| ((i + 1) % spec.vocab) as i32).collect();
+
+        let p0 = bundle.stages[0].init_params(1).unwrap();
+        let p1 = bundle.stages[1].init_params(1).unwrap();
+        let h0 = bundle.stages[0].prepare_params(&rt, &p0).unwrap();
+        let h1 = bundle.stages[1].prepare_params(&rt, &p1).unwrap();
+
+        let y = bundle.stages[0].fwd_first(&rt, &h0, &tokens, dims).unwrap();
+        assert_eq!(y.len(), t * dims.d);
+        let (g1, gx, loss) = bundle.stages[1].bwd_last(&rt, &h1, &y, &targets, dims).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(g1.len(), p1.len());
+        let g0 = bundle.stages[0].bwd_first(&rt, &h0, &tokens, &gx, dims).unwrap();
+        assert_eq!(g0.len(), p0.len());
+    }
+
+    #[test]
+    fn null_runtime_rejects_xla_paths() {
+        let rt = Runtime::null();
+        assert!(rt.buf_f32(&[1.0], &[1]).is_err());
+        assert!(rt.load(Path::new("nope.hlo")).is_err());
+    }
 }

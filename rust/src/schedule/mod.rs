@@ -1,33 +1,49 @@
-//! Pipeline schedules (§II.C): GPipe and PipeDream-style 1F1B.
+//! Pipeline schedules (§II.C): GPipe, PipeDream-style 1F1B, and
+//! Megatron-style interleaved 1F1B with virtual model chunks.
 //!
-//! A schedule is compiled to one *instruction stream per stage*: the
-//! ordered list of Forward/Backward ops each pipeline rank executes.  The
-//! same streams drive both the discrete-event performance simulator
-//! (`perf::sim`) and the real execution engine (`coordinator`), so the
-//! thing we benchmark is the thing we run.
+//! A schedule is compiled to one *instruction stream per pipeline rank*:
+//! the ordered list of Forward/Backward ops that rank executes.  Every
+//! instruction names a `(chunk, mb)` pair — `chunk` is the *virtual stage*
+//! (model chunk) index on that rank, `mb` the micro-batch.  Plain GPipe
+//! and 1F1B are the `v = 1` special case where every op runs chunk 0.
 //!
-//! Interleaved 1F1B (virtual chunks) is modelled analytically in
-//! `ScheduleKind::bubble_fraction`; the instruction-stream generators here
-//! cover the two schedules the paper actually runs (DeepSpeed's pipeline
-//! engine implements 1F1B, §V.A).
+//! With `v` chunks per rank the model is cut into `K = p * v` global
+//! stages; rank `r` hosts the global stages `{r, r + p, ..., r + (v-1)p}`
+//! (Megatron's `initialize_model_parallel` chunk assignment), so the
+//! global stage of `(chunk c, rank r)` is `g = c * p + r`.
+//!
+//! The same streams drive all three consumers: the discrete-event
+//! performance simulator (`perf::sim`), the activation-memory model
+//! (`mem`), and the real execution engine (`coordinator`) — the thing we
+//! benchmark is the thing we run, for *all* schedules including
+//! interleaved (no analytic-only fallback).
 
 use crate::config::ScheduleKind;
 
-/// One pipeline instruction for a stage rank.
+/// One pipeline instruction for a rank: which model chunk (virtual stage)
+/// runs which micro-batch in which direction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Op {
-    /// Run the stage forward for micro-batch `mb` (receives activation from
-    /// the previous stage implicitly; blocking semantics).
-    Forward { mb: u32 },
-    /// Run the stage backward for micro-batch `mb` (receives the gradient
-    /// from the next stage implicitly).
-    Backward { mb: u32 },
+    /// Run chunk `chunk` forward for micro-batch `mb` (receives the
+    /// activation from the previous *global* stage implicitly; blocking
+    /// semantics).
+    Forward { chunk: u32, mb: u32 },
+    /// Run chunk `chunk` backward for micro-batch `mb` (receives the
+    /// gradient from the next *global* stage implicitly).
+    Backward { chunk: u32, mb: u32 },
 }
 
 impl Op {
     pub fn mb(&self) -> u32 {
         match self {
-            Op::Forward { mb } | Op::Backward { mb } => *mb,
+            Op::Forward { mb, .. } | Op::Backward { mb, .. } => *mb,
+        }
+    }
+
+    /// Virtual-stage (model chunk) index on the executing rank.
+    pub fn chunk(&self) -> u32 {
+        match self {
+            Op::Forward { chunk, .. } | Op::Backward { chunk, .. } => *chunk,
         }
     }
 
@@ -36,13 +52,16 @@ impl Op {
     }
 }
 
-/// Instruction streams for all `p` stages of one schedule.
+/// Instruction streams for all `p` pipeline ranks of one schedule.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Schedule {
     pub kind: ScheduleKind,
+    /// Pipeline ranks (worker grid depth), NOT global stages.
     pub p: u32,
     pub m: u32,
-    /// `streams[stage]` = ordered ops for that stage.
+    /// Virtual chunks per rank; global stages = `p * v`.
+    pub v: u32,
+    /// `streams[rank]` = ordered ops for that rank.
     pub streams: Vec<Vec<Op>>,
 }
 
@@ -51,15 +70,15 @@ pub fn gpipe(p: u32, m: u32) -> Schedule {
     assert!(p >= 1 && m >= 1);
     let streams = (0..p)
         .map(|_| {
-            let fwd = (0..m).map(|mb| Op::Forward { mb });
-            let bwd = (0..m).rev().map(|mb| Op::Backward { mb });
+            let fwd = (0..m).map(|mb| Op::Forward { chunk: 0, mb });
+            let bwd = (0..m).rev().map(|mb| Op::Backward { chunk: 0, mb });
             fwd.chain(bwd).collect()
         })
         .collect();
-    Schedule { kind: ScheduleKind::GPipe, p, m, streams }
+    Schedule { kind: ScheduleKind::GPipe, p, m, v: 1, streams }
 }
 
-/// PipeDream-flush 1F1B (§II.C): stage `i` runs `min(p-1-i, m)` warmup
+/// PipeDream-flush 1F1B (§II.C): rank `i` runs `min(p-1-i, m)` warmup
 /// forwards, then alternates one-forward-one-backward, then drains.
 pub fn one_f1b(p: u32, m: u32) -> Schedule {
     assert!(p >= 1 && m >= 1);
@@ -70,48 +89,123 @@ pub fn one_f1b(p: u32, m: u32) -> Schedule {
             let mut next_fwd = 0;
             let mut next_bwd = 0;
             for _ in 0..warmup {
-                ops.push(Op::Forward { mb: next_fwd });
+                ops.push(Op::Forward { chunk: 0, mb: next_fwd });
                 next_fwd += 1;
             }
             // steady state: 1F1B until all forwards are issued
             while next_fwd < m {
-                ops.push(Op::Forward { mb: next_fwd });
+                ops.push(Op::Forward { chunk: 0, mb: next_fwd });
                 next_fwd += 1;
-                ops.push(Op::Backward { mb: next_bwd });
+                ops.push(Op::Backward { chunk: 0, mb: next_bwd });
                 next_bwd += 1;
             }
             // cooldown: drain remaining backwards
             while next_bwd < m {
-                ops.push(Op::Backward { mb: next_bwd });
+                ops.push(Op::Backward { chunk: 0, mb: next_bwd });
                 next_bwd += 1;
             }
             ops
         })
         .collect();
-    Schedule { kind: ScheduleKind::OneF1B, p, m, streams }
+    Schedule { kind: ScheduleKind::OneF1B, p, m, v: 1, streams }
 }
 
-/// Build the stream set for a schedule kind (interleaved falls back to
-/// plain 1F1B streams; its smaller bubble is captured analytically).
+/// Megatron-style interleaved 1F1B over `v` model chunks per rank.
+///
+/// The per-rank warmup ramp is `2(p - 1 - rank) + (v - 1)p` virtual
+/// forwards (capped at `m·v`), followed by the 1F1B steady state over
+/// *virtual* micro-batches and a backward drain.  Virtual forward `k`
+/// maps to chunk `(k mod pv) / p` of data micro-batch
+/// `(k div pv)·p + (k mod p)`; virtual backwards run the chunks in
+/// reverse.  Requires `m % p == 0` for `v > 1` (Megatron's constraint:
+/// the interleaving window covers `p` micro-batches per chunk), which
+/// also implies a saturated pipeline (`m >= p`).
+///
+/// The generated streams achieve the `(p-1)/(m·v)` bubble: the fill/drain
+/// ramp costs `(p-1)` *chunk* slots instead of `(p-1)` full-stage slots
+/// (`perf::sim` cross-validates this, and the abstract blocking execution
+/// in [`Schedule::validate`] proves deadlock-freedom).
+pub fn interleaved_1f1b(p: u32, m: u32, v: u32) -> Schedule {
+    assert!(p >= 1 && m >= 1 && v >= 1);
+    if v == 1 {
+        let mut s = one_f1b(p, m);
+        s.kind = ScheduleKind::Interleaved1F1B { v: 1 };
+        return s;
+    }
+    assert!(
+        m % p == 0,
+        "interleaved 1F1B needs m ({m}) divisible by p ({p})"
+    );
+    let total = m * v;
+    let window = p * v;
+    // virtual forward id -> (chunk, mb)
+    let fpos = |k: u32| -> (u32, u32) {
+        let (grp, pos) = (k / window, k % window);
+        (pos / p, grp * p + pos % p)
+    };
+    // virtual backward id -> (chunk, mb): chunks drain in reverse
+    let bpos = |k: u32| -> (u32, u32) {
+        let (grp, pos) = (k / window, k % window);
+        (v - 1 - pos / p, grp * p + pos % p)
+    };
+
+    let streams = (0..p)
+        .map(|rank| {
+            let warmup = (2 * (p - 1 - rank) + (v - 1) * p).min(total);
+            let mut ops = Vec::with_capacity(2 * total as usize);
+            for k in 0..warmup {
+                let (chunk, mb) = fpos(k);
+                ops.push(Op::Forward { chunk, mb });
+            }
+            for j in 0..total - warmup {
+                let (chunk, mb) = fpos(warmup + j);
+                ops.push(Op::Forward { chunk, mb });
+                let (chunk, mb) = bpos(j);
+                ops.push(Op::Backward { chunk, mb });
+            }
+            for j in total - warmup..total {
+                let (chunk, mb) = bpos(j);
+                ops.push(Op::Backward { chunk, mb });
+            }
+            ops
+        })
+        .collect();
+    Schedule { kind: ScheduleKind::Interleaved1F1B { v }, p, m, v, streams }
+}
+
+/// Build the stream set for a schedule kind.  All three schedules emit
+/// genuine instruction streams — interleaved no longer falls back to
+/// plain 1F1B.
 pub fn build(kind: ScheduleKind, p: u32, m: u32) -> Schedule {
     match kind {
         ScheduleKind::GPipe => gpipe(p, m),
-        ScheduleKind::OneF1B | ScheduleKind::Interleaved1F1B { .. } => {
-            let mut s = one_f1b(p, m);
-            s.kind = kind;
-            s
-        }
+        ScheduleKind::OneF1B => one_f1b(p, m),
+        ScheduleKind::Interleaved1F1B { v } => interleaved_1f1b(p, m, v),
     }
 }
 
 impl Schedule {
-    /// Peak number of in-flight activations held by `stage` — what the
-    /// activation-memory model charges (1F1B caps it at `p - stage`;
-    /// GPipe at `m`, which is why GPipe OOMs at large m).
-    pub fn peak_inflight(&self, stage: u32) -> u32 {
+    /// Global stages (`p * v`): what the model is actually cut into.
+    pub fn global_stages(&self) -> u32 {
+        self.p * self.v
+    }
+
+    /// Global stage index of `(chunk, rank)` under the Megatron chunk
+    /// assignment.
+    pub fn global_stage(&self, chunk: u32, rank: u32) -> u32 {
+        chunk * self.p + rank
+    }
+
+    /// Peak number of in-flight *chunk* activations held by `rank` — what
+    /// the activation-memory model charges per stored chunk input.  1F1B
+    /// caps it at `p - rank`; GPipe at `m` (why GPipe OOMs at large m);
+    /// interleaved at `2(p-1-rank) + (v-1)p + 1` chunk slots — a `(v+1)/v`
+    /// overhead over plain 1F1B in full-stage units, the known memory
+    /// price of interleaving.
+    pub fn peak_inflight(&self, rank: u32) -> u32 {
         let mut live: i64 = 0;
         let mut peak: i64 = 0;
-        for op in &self.streams[stage as usize] {
+        for op in &self.streams[rank as usize] {
             match op {
                 Op::Forward { .. } => live += 1,
                 Op::Backward { .. } => live -= 1,
@@ -124,73 +218,88 @@ impl Schedule {
     /// Check the stream invariants; returns an error description if broken.
     /// Used by proptest (`rust/tests/props.rs`).
     pub fn validate(&self) -> Result<(), String> {
+        let m = self.m as usize;
+        let v = self.v as usize;
         for (i, ops) in self.streams.iter().enumerate() {
-            let m = self.m as usize;
-            if ops.len() != 2 * m {
-                return Err(format!("stage {i}: {} ops, want {}", ops.len(), 2 * m));
+            if ops.len() != 2 * m * v {
+                return Err(format!("rank {i}: {} ops, want {}", ops.len(), 2 * m * v));
             }
-            let mut fwd_seen = vec![false; m];
-            let mut bwd_seen = vec![false; m];
+            let mut fwd_seen = vec![false; m * v];
+            let mut bwd_seen = vec![false; m * v];
             for op in ops {
-                let mb = op.mb() as usize;
+                let (c, mb) = (op.chunk() as usize, op.mb() as usize);
+                if c >= v || mb >= m {
+                    return Err(format!("rank {i}: op out of range ({c}, {mb})"));
+                }
+                let slot = c * m + mb;
                 match op {
                     Op::Forward { .. } => {
-                        if fwd_seen[mb] {
-                            return Err(format!("stage {i}: fwd {mb} twice"));
+                        if fwd_seen[slot] {
+                            return Err(format!("rank {i}: fwd ({c},{mb}) twice"));
                         }
-                        fwd_seen[mb] = true;
+                        fwd_seen[slot] = true;
                     }
                     Op::Backward { .. } => {
-                        if !fwd_seen[mb] {
-                            return Err(format!("stage {i}: bwd {mb} before fwd"));
+                        if !fwd_seen[slot] {
+                            return Err(format!("rank {i}: bwd ({c},{mb}) before fwd"));
                         }
-                        if bwd_seen[mb] {
-                            return Err(format!("stage {i}: bwd {mb} twice"));
+                        if bwd_seen[slot] {
+                            return Err(format!("rank {i}: bwd ({c},{mb}) twice"));
                         }
-                        bwd_seen[mb] = true;
+                        bwd_seen[slot] = true;
                     }
                 }
             }
             if !fwd_seen.iter().all(|&s| s) || !bwd_seen.iter().all(|&s| s) {
-                return Err(format!("stage {i}: not all micro-batches processed"));
+                return Err(format!("rank {i}: not all (chunk, mb) pairs processed"));
             }
-            // forwards must be issued in order (activations are a FIFO
-            // between stages in the real engine)
-            let fwd_order: Vec<u32> =
-                ops.iter().filter(|o| o.is_forward()).map(|o| o.mb()).collect();
-            if !fwd_order.windows(2).all(|w| w[0] < w[1]) {
-                return Err(format!("stage {i}: forwards out of order"));
+            // per chunk, forwards must be issued in micro-batch order
+            // (activations are a FIFO per (global stage, global stage + 1)
+            // channel in the real engine)
+            for c in 0..v {
+                let order: Vec<u32> = ops
+                    .iter()
+                    .filter(|o| o.is_forward() && o.chunk() as usize == c)
+                    .map(|o| o.mb())
+                    .collect();
+                if !order.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("rank {i}: chunk {c} forwards out of order"));
+                }
             }
         }
-        // cross-stage deadlock-freedom: simulate with blocking FIFOs
+        // cross-rank deadlock-freedom: simulate with blocking FIFOs
         self.check_deadlock_free()
     }
 
-    /// Abstractly execute all streams against blocking FIFO channels to
-    /// prove the schedule cannot deadlock under the engine's semantics.
+    /// Abstractly execute all streams against blocking channels between
+    /// *global* stages to prove the schedule cannot deadlock under the
+    /// engine's semantics: forward of global stage `g` needs stage `g-1`'s
+    /// forward of the same micro-batch; backward of `g` needs `g+1`'s
+    /// backward.
     fn check_deadlock_free(&self) -> Result<(), String> {
         let p = self.p as usize;
-        let mut pc = vec![0usize; p]; // program counter per stage
-        // acts_ready[i] = forwards completed by stage i (feeds stage i+1);
-        // grads_ready[i] = backwards completed by stage i (feeds stage i-1)
-        let mut acts_done: Vec<Vec<bool>> = vec![vec![false; self.m as usize]; p];
-        let mut grads_done: Vec<Vec<bool>> = vec![vec![false; self.m as usize]; p];
+        let k = self.global_stages() as usize;
+        let m = self.m as usize;
+        let mut pc = vec![0usize; p]; // program counter per rank
+        let mut acts_done = vec![vec![false; m]; k];
+        let mut grads_done = vec![vec![false; m]; k];
         loop {
             let mut progressed = false;
             for i in 0..p {
                 while pc[i] < self.streams[i].len() {
                     let op = self.streams[i][pc[i]];
+                    let g = (op.chunk() as usize) * p + i;
                     let mb = op.mb() as usize;
                     let ready = match op {
-                        Op::Forward { .. } => i == 0 || acts_done[i - 1][mb],
-                        Op::Backward { .. } => i == p - 1 || grads_done[i + 1][mb],
+                        Op::Forward { .. } => g == 0 || acts_done[g - 1][mb],
+                        Op::Backward { .. } => g == k - 1 || grads_done[g + 1][mb],
                     };
                     if !ready {
                         break;
                     }
                     match op {
-                        Op::Forward { .. } => acts_done[i][mb] = true,
-                        Op::Backward { .. } => grads_done[i][mb] = true,
+                        Op::Forward { .. } => acts_done[g][mb] = true,
+                        Op::Backward { .. } => grads_done[g][mb] = true,
                     }
                     pc[i] += 1;
                     progressed = true;
@@ -221,14 +330,86 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_validates_across_grid() {
+        for p in [1u32, 2, 3, 4, 8] {
+            for q in [1u32, 2, 4] {
+                let m = p * q;
+                for v in [1u32, 2, 3, 4, 8] {
+                    let s = interleaved_1f1b(p, m, v);
+                    s.validate()
+                        .unwrap_or_else(|e| panic!("p={p} m={m} v={v}: {e}"));
+                    assert_eq!(s.v, v);
+                    assert_eq!(s.global_stages(), p * v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_warmup_ramp() {
+        // rank r warms up with 2(p-1-r) + (v-1)p forwards; the steady
+        // state's leading forward follows, so the first backward sits at
+        // position warmup + 1
+        let (p, m, v) = (4u32, 8u32, 2u32);
+        let s = interleaved_1f1b(p, m, v);
+        for r in 0..p {
+            let warmup = (2 * (p - 1 - r) + (v - 1) * p) as usize;
+            let got = s.streams[r as usize]
+                .iter()
+                .take_while(|o| o.is_forward())
+                .count();
+            assert_eq!(got, warmup + 1, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn interleaved_inflight_bound() {
+        // peak chunk activations per rank: 2(p-1-r) + (v-1)p + 1, and
+        // always at or below GPipe's all-in-flight m*v bound
+        for (p, q, v) in [(2u32, 2u32, 2u32), (4, 4, 2), (4, 2, 4), (8, 4, 4)] {
+            let m = p * q;
+            let s = interleaved_1f1b(p, m, v);
+            for r in 0..p {
+                let peak = s.peak_inflight(r);
+                let ramp = 2 * (p - 1 - r) + (v - 1) * p + 1;
+                assert!(peak <= ramp.min(m * v), "p={p} m={m} v={v} r={r}: {peak}");
+                assert!(peak <= m * v);
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_v1_degenerates_to_plain_1f1b() {
+        let a = interleaved_1f1b(4, 8, 1);
+        let b = one_f1b(4, 8);
+        assert_eq!(a.streams, b.streams);
+        assert_eq!(a.kind, ScheduleKind::Interleaved1F1B { v: 1 });
+    }
+
+    #[test]
+    fn build_emits_true_interleaved_streams() {
+        // the old analytic-only fallback is gone: interleaved streams must
+        // reference chunk indices beyond 0
+        let s = build(ScheduleKind::Interleaved1F1B { v: 2 }, 4, 8);
+        assert!(s.streams[0].iter().any(|o| o.chunk() == 1));
+        assert_eq!(s.v, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn interleaved_rejects_unaligned_microbatches() {
+        interleaved_1f1b(4, 6, 2);
+    }
+
+    #[test]
     fn one_f1b_caps_inflight_at_stage_depth() {
         let s = one_f1b(8, 32);
-        for stage in 0..8 {
-            let cap = 8 - stage; // p - i
+        for rank in 0..8 {
+            let cap = 8 - rank; // p - i
             assert!(
-                s.peak_inflight(stage) <= cap,
-                "stage {stage}: {} > {cap}",
-                s.peak_inflight(stage)
+                s.peak_inflight(rank) <= cap,
+                "rank {rank}: {} > {cap}",
+                s.peak_inflight(rank)
             );
         }
     }
@@ -244,7 +425,7 @@ mod tests {
     #[test]
     fn steady_state_alternates() {
         let s = one_f1b(4, 16);
-        // stage 0 warms up with 3 forwards then strictly alternates
+        // rank 0 warms up with 3 forwards then strictly alternates
         let ops = &s.streams[0];
         assert!(ops[..3].iter().all(|o| o.is_forward()));
         for i in 0..13 {
@@ -254,12 +435,28 @@ mod tests {
     }
 
     #[test]
-    fn single_stage_degenerates() {
+    fn single_rank_degenerates() {
         let s = one_f1b(1, 4);
         // fwd/bwd strictly alternate when there is no pipeline
         let ops = &s.streams[0];
         for (idx, op) in ops.iter().enumerate() {
             assert_eq!(op.is_forward(), idx % 2 == 0);
         }
+    }
+
+    #[test]
+    fn single_rank_interleaved_chains_chunks() {
+        // p=1, v=3: chunks run 0,1,2 forward then 2,1,0 backward per mb
+        let s = interleaved_1f1b(1, 2, 3);
+        s.validate().unwrap();
+        let first: Vec<(bool, u32, u32)> = s.streams[0]
+            .iter()
+            .take(4)
+            .map(|o| (o.is_forward(), o.chunk(), o.mb()))
+            .collect();
+        assert_eq!(
+            first,
+            vec![(true, 0, 0), (true, 1, 0), (true, 2, 0), (false, 2, 0)]
+        );
     }
 }

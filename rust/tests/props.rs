@@ -40,6 +40,47 @@ fn prop_schedules_always_valid() {
 }
 
 #[test]
+fn prop_interleaved_schedules_valid() {
+    let mut rng = Rng64::new(202);
+    for case in 0..200 {
+        let p = 1 + rng.below(8) as u32;
+        let q = 1 + rng.below(5) as u32;
+        let m = p * q; // interleaving requires m % p == 0
+        let v = [1u32, 2, 3, 4, 8][rng.below(5) as usize];
+        let s = schedule::build(ScheduleKind::Interleaved1F1B { v }, p, m);
+        s.validate()
+            .unwrap_or_else(|e| panic!("case {case} p={p} m={m} v={v}: {e}"));
+        assert_eq!(s.v, v);
+        for rank in 0..p {
+            let ops = &s.streams[rank as usize];
+            assert_eq!(ops.len(), (2 * m * v) as usize, "case {case} rank {rank}");
+            // per-chunk fwd/bwd pairing: every chunk runs exactly m
+            // forwards and m backwards
+            for chunk in 0..v {
+                let fwd = ops
+                    .iter()
+                    .filter(|o| o.is_forward() && o.chunk() == chunk)
+                    .count();
+                let bwd = ops
+                    .iter()
+                    .filter(|o| !o.is_forward() && o.chunk() == chunk)
+                    .count();
+                assert_eq!((fwd, bwd), (m as usize, m as usize), "case {case} chunk {chunk}");
+            }
+            // in-flight chunk activations never exceed GPipe's
+            // all-in-flight m*v bound, nor the warmup-ramp bound
+            let peak = s.peak_inflight(rank);
+            let ramp = 2 * (p - 1 - rank) + (v - 1) * p + 1;
+            assert!(
+                peak <= (m * v).min(ramp),
+                "case {case} rank {rank}: peak {peak} > min({}, {ramp})",
+                m * v
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_bubble_formula_bounds() {
     let mut rng = Rng64::new(77);
     for _ in 0..200 {

@@ -1,0 +1,289 @@
+//! Vendored API stub of the `xla` crate (PJRT bindings).
+//!
+//! This container image has no XLA/PJRT toolchain and no crates.io
+//! access, so the workspace ships this source-compatible stub instead:
+//! the types and signatures `frontier_llm::runtime` compiles against are
+//! all here, but [`PjRtClient::cpu`] reports that no PJRT runtime is
+//! available.  Every device-side type (`PjRtClient`, `PjRtBuffer`,
+//! `PjRtLoadedExecutable`, compiled `XlaComputation`s) is *uninhabited* —
+//! it cannot be constructed at runtime — which both documents and
+//! enforces that no stubbed compute can silently run.  [`Literal`]s are
+//! host-side and fully functional.
+//!
+//! Swapping in the real crate is a one-line change in
+//! `rust/Cargo.toml` (`xla = { path = "vendor/xla" }` -> the real
+//! dependency); the engine's builtin backend
+//! (`frontier_llm::runtime::builtin`) keeps end-to-end training running
+//! either way.
+
+use std::convert::Infallible;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversions.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const NO_RUNTIME: &str = "XLA PJRT runtime is not available in this offline build \
+     (vendored stub; use a `builtin:*` bundle or link the real xla crate)";
+
+/// Element types the runtime moves across the host/device boundary.
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u8 {}
+
+// ---------------------------------------------------------------------------
+// host-side literals (fully functional)
+// ---------------------------------------------------------------------------
+
+/// Typed storage behind a [`Literal`].  Public only so the
+/// [`LiteralElement`] conversion trait can name it; not part of the API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host tensor (or tuple of tensors) with a shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Conversion glue between rust element types and literal payloads
+/// (implemented for exactly the element types literals can hold).
+pub trait LiteralElement: Sized {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Payload;
+    #[doc(hidden)]
+    fn unwrap(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+impl LiteralElement for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(lit: &Literal) -> Option<Vec<f32>> {
+        match &lit.payload {
+            Payload::F32(d) => Some(d.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl LiteralElement for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(lit: &Literal) -> Option<Vec<i32>> {
+        match &lit.payload {
+            Payload::I32(d) => Some(d.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl LiteralElement for u32 {
+    fn wrap(data: Vec<u32>) -> Payload {
+        Payload::U32(data)
+    }
+    fn unwrap(lit: &Literal) -> Option<Vec<u32>> {
+        match &lit.payload {
+            Payload::U32(d) => Some(d.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: LiteralElement + Clone>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal { payload: T::wrap(data.to_vec()), dims }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have: i64 = self.dims.iter().product();
+        if want != have {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: LiteralElement>(&self) -> Result<Vec<T>> {
+        T::unwrap(self).ok_or_else(|| Error::new("literal element type mismatch"))
+    }
+
+    pub fn get_first_element<T: LiteralElement>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        v.into_iter().next().ok_or_else(|| Error::new("empty literal"))
+    }
+
+    /// Unpack a tuple literal; a non-tuple unpacks to itself (mirrors how
+    /// single-output executables behave under `return_tuple=True`).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.payload {
+            Payload::Tuple(parts) => Ok(parts.clone()),
+            _ => Ok(vec![self.clone()]),
+        }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { payload: Payload::Tuple(parts), dims: vec![] }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// device-side types (uninhabited in the stub)
+// ---------------------------------------------------------------------------
+
+/// PJRT client handle.  Uninhabited: [`PjRtClient::cpu`] always errors in
+/// the stub, so no method body below is ever reachable.
+pub struct PjRtClient {
+    never: Infallible,
+}
+
+impl Clone for PjRtClient {
+    fn clone(&self) -> Self {
+        match self.never {}
+    }
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::new(NO_RUNTIME))
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.never {}
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        match self.never {}
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        match self.never {}
+    }
+}
+
+/// Device buffer handle (uninhabited in the stub).
+pub struct PjRtBuffer {
+    never: Infallible,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.never {}
+    }
+}
+
+/// Compiled executable handle (uninhabited in the stub).
+pub struct PjRtLoadedExecutable {
+    never: Infallible,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.never {}
+    }
+}
+
+/// Parsed HLO module (the stub only carries the source path around).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _path: String,
+}
+
+impl HloModuleProto {
+    /// The stub refuses at the earliest boundary: artifacts cannot be
+    /// compiled without a PJRT runtime anyway.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(Error::new(format!("{NO_RUNTIME}; cannot parse {path}")))
+    }
+}
+
+/// Computation wrapper (constructible, but never compilable in the stub).
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+        let t = Literal::tuple(vec![l.clone(), Literal::vec1(&[7i32])]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+        assert_eq!(l.to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn no_runtime_available() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not available"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
