@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         bundle: args.opt_str("bundle", bundle),
         artifacts_root: args.opt_str("artifacts", "artifacts").into(),
         dp,
+        tp: args.opt("tp", 1).map_err(anyhow::Error::msg)?,
         schedule: ScheduleKind::OneF1B,
         microbatches,
         steps,

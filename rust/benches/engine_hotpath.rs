@@ -92,6 +92,22 @@ fn main() {
         });
     }
 
+    header("end-to-end engine: tensor-parallel builtin (tp2 x pp4)");
+    {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s4-mb2".into(),
+            dp: 1,
+            tp: 2,
+            schedule: ScheduleKind::OneF1B,
+            microbatches: 4,
+            steps: 3,
+            ..Default::default()
+        };
+        bench("engine::train_builtin_tp2_pp4", 1, 5, || {
+            std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
+        });
+    }
+
     header("end-to-end engine: tiny GPT artifacts, 2-stage pipeline x dp2");
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let rt = match Runtime::cpu() {

@@ -12,7 +12,19 @@
 //!   association order, which we make deterministic by rank order);
 //! * `reduce_scatter` followed by `all_gather` equals `all_reduce`;
 //! * every rank of a group must participate in every round (the engine's
-//!   schedules guarantee this; violations deadlock rather than corrupt).
+//!   schedules guarantee this; violations deadlock rather than corrupt);
+//! * a [`SubGroup`] all-reduce involves only its members — disjoint
+//!   subgroups of one parent reduce independently and concurrently.
+//!
+//! **Subgroups.**  Tensor-parallel shards need collectives over a *subset*
+//! of the world (the `tp` consecutive ranks of one pipeline×data cell).
+//! [`SubGroup`] builds them over a parent [`Group`]'s tagged mailboxes:
+//! ring reduce-scatter + all-gather between member neighbours, in a tag
+//! namespace that cannot collide with the engine's pipeline p2p traffic.
+//! Each subgroup counts the *payload* f32 bytes entering its all-reduces
+//! (once per collective, not per wire hop) — the instrumentation the TP
+//! perf cross-validation tests compare against `perf`'s analytic comm
+//! term.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -42,6 +54,11 @@ struct ExchangeState {
 /// chunked pipeline traffic tags messages so `v` virtual-stage channels
 /// can multiplex one (from, to) mailbox without FIFO interleaving hazards.
 pub const TAG_ANY: u64 = 0;
+
+/// Tag namespace for subgroup collectives.  The engine's pipeline p2p
+/// uses directions 1 (fwd) and 2 (bwd) in the top tag bits; subgroups
+/// claim direction 3, qualified by a per-subgroup id.
+const TAG_SUBGROUP: u64 = 3 << 48;
 
 struct Mailbox {
     queue: Mutex<VecDeque<(u64, Vec<f32>)>>,
@@ -285,6 +302,161 @@ impl Group {
     }
 }
 
+/// A collective communicator over a *subset* of a parent [`Group`]'s
+/// ranks, built on the parent's tagged mailboxes (the parent's barrier /
+/// `exchange` machinery needs every world rank, so subgroup collectives
+/// run a ring between member neighbours instead).
+///
+/// Members execute SPMD: every member must issue the same sequence of
+/// subgroup collectives in the same order (FIFO holds per tag, so
+/// back-to-back rounds cannot interleave).
+pub struct SubGroup {
+    parent: Arc<Group>,
+    /// Parent ranks, strictly ascending; position in this list is the
+    /// subgroup rank.
+    members: Vec<usize>,
+    tag: u64,
+    /// Payload bytes entering all-reduce calls on this subgroup, counted
+    /// once per collective round (by subgroup rank 0) — i.e. the logical
+    /// reduced volume, not wire traffic.  Wire bytes still land in the
+    /// parent's `bytes_moved`.
+    pub ar_bytes: AtomicU64,
+    /// All-reduce rounds completed on this subgroup.
+    pub ar_rounds: AtomicU64,
+}
+
+impl SubGroup {
+    /// Build a subgroup over `members` (parent ranks, strictly ascending).
+    /// `id` must be unique among subgroups that share a (from, to) member
+    /// pair; disjoint subgroups may reuse ids.
+    pub fn new(parent: &Arc<Group>, members: Vec<usize>, id: u64) -> Arc<Self> {
+        assert!(!members.is_empty(), "subgroup needs at least one member");
+        assert!(
+            members.windows(2).all(|w| w[0] < w[1]),
+            "subgroup members must be strictly ascending"
+        );
+        assert!(members.iter().all(|&r| r < parent.len()), "member out of range");
+        Arc::new(Self {
+            parent: parent.clone(),
+            members,
+            tag: TAG_SUBGROUP | id,
+            ar_bytes: AtomicU64::new(0),
+            ar_rounds: AtomicU64::new(0),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Subgroup rank of a parent rank (panics if not a member).
+    pub fn index_of(&self, parent_rank: usize) -> usize {
+        self.members
+            .iter()
+            .position(|&r| r == parent_rank)
+            .expect("parent rank is not a member of this subgroup")
+    }
+
+    /// Ring all-reduce with an arbitrary commutative/associative fold:
+    /// reduce-scatter then all-gather between member neighbours over the
+    /// parent's tagged mailboxes.  In place; every member ends with
+    /// identical bytes.
+    fn ring_fold<F: Fn(f32, f32) -> f32>(&self, parent_rank: usize, buf: &mut [f32], fold: F) {
+        let n = self.members.len();
+        if n == 1 {
+            return;
+        }
+        let i = self.index_of(parent_rank);
+        if i == 0 {
+            self.ar_bytes.fetch_add(4 * buf.len() as u64, Ordering::Relaxed);
+            self.ar_rounds.fetch_add(1, Ordering::Relaxed);
+        }
+        let right = self.members[(i + 1) % n];
+        let left = self.members[(i + n - 1) % n];
+        let bounds = chunk_bounds(buf.len(), n);
+        for step in 0..n - 1 {
+            let send_idx = (i + n - step) % n;
+            let recv_idx = (i + n - step - 1) % n;
+            let (s0, s1) = bounds[send_idx];
+            self.parent.send_tagged(parent_rank, right, self.tag, buf[s0..s1].to_vec());
+            let incoming = self.parent.recv_tagged(parent_rank, left, self.tag);
+            let (r0, r1) = bounds[recv_idx];
+            debug_assert_eq!(incoming.len(), r1 - r0);
+            for (x, inc) in buf[r0..r1].iter_mut().zip(incoming) {
+                *x = fold(*x, inc);
+            }
+        }
+        for step in 0..n - 1 {
+            let send_idx = (i + 1 + n - step) % n;
+            let recv_idx = (i + n - step) % n;
+            let (s0, s1) = bounds[send_idx];
+            self.parent.send_tagged(parent_rank, right, self.tag, buf[s0..s1].to_vec());
+            let incoming = self.parent.recv_tagged(parent_rank, left, self.tag);
+            let (r0, r1) = bounds[recv_idx];
+            buf[r0..r1].copy_from_slice(&incoming);
+        }
+    }
+
+    /// In-place sum all-reduce across the subgroup members.
+    pub fn all_reduce_sum(&self, parent_rank: usize, buf: &mut [f32]) {
+        self.ring_fold(parent_rank, buf, |a, b| a + b);
+    }
+
+    /// In-place max all-reduce (vocab-parallel softmax stability term).
+    pub fn all_reduce_max(&self, parent_rank: usize, buf: &mut [f32]) {
+        self.ring_fold(parent_rank, buf, f32::max);
+    }
+}
+
+/// One rank's handle on its tensor-parallel subgroup: the subgroup plus
+/// this thread's parent rank.  The tp = 1 case ([`TpComm::solo`]) turns
+/// every collective into a no-op, so the sharded compute paths double as
+/// the dense ones.
+#[derive(Clone)]
+pub struct TpComm {
+    group: Arc<SubGroup>,
+    rank: usize,
+}
+
+impl TpComm {
+    pub fn new(group: Arc<SubGroup>, parent_rank: usize) -> Self {
+        group.index_of(parent_rank); // assert membership
+        Self { group, rank: parent_rank }
+    }
+
+    /// The tp = 1 no-communication communicator.
+    pub fn solo() -> Self {
+        let parent = Group::new(1);
+        Self { group: SubGroup::new(&parent, vec![0], 0), rank: 0 }
+    }
+
+    /// Tensor-parallel group size.
+    pub fn tp(&self) -> usize {
+        self.group.len()
+    }
+
+    /// This shard's rank within the TP group.
+    pub fn tp_rank(&self) -> usize {
+        self.group.index_of(self.rank)
+    }
+
+    pub fn all_reduce_sum(&self, buf: &mut [f32]) {
+        self.group.all_reduce_sum(self.rank, buf);
+    }
+
+    pub fn all_reduce_max(&self, buf: &mut [f32]) {
+        self.group.all_reduce_max(self.rank, buf);
+    }
+}
+
 /// Split `len` elements into `n` contiguous chunks, earlier chunks taking
 /// the remainder (matches `ModelSpec::stage_spans` convention).
 pub fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
@@ -456,6 +628,127 @@ mod tests {
                     assert_eq!(w[0].1, w[1].0);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn subgroup_all_reduce_sums_members_only() {
+        // world of 4; subgroup {1, 3} must reduce only its members while
+        // ranks 0 and 2 stay idle
+        let world = Group::new(4);
+        let sub = SubGroup::new(&world, vec![1, 3], 0);
+        let handles: Vec<_> = [1usize, 3]
+            .into_iter()
+            .map(|rank| {
+                let s = sub.clone();
+                thread::spawn(move || {
+                    let mut buf = test_data(rank, 33);
+                    s.all_reduce_sum(rank, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        let mut want = vec![0.0f32; 33];
+        for r in [1usize, 3] {
+            for (x, v) in want.iter_mut().zip(test_data(r, 33)) {
+                *x += v;
+            }
+        }
+        for h in handles {
+            let got = h.join().unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+        // payload accounting: one round of 33 floats
+        assert_eq!(sub.ar_bytes.load(Ordering::Relaxed), 4 * 33);
+        assert_eq!(sub.ar_rounds.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn disjoint_subgroups_reduce_concurrently() {
+        let world = Group::new(6);
+        let a = SubGroup::new(&world, vec![0, 1, 2], 0);
+        let b = SubGroup::new(&world, vec![3, 4, 5], 1);
+        let mut handles = Vec::new();
+        for rank in 0..6usize {
+            let sub = if rank < 3 { a.clone() } else { b.clone() };
+            handles.push(thread::spawn(move || {
+                let mut buf = vec![rank as f32; 20];
+                for _ in 0..10 {
+                    sub.all_reduce_sum(rank, &mut buf);
+                }
+                buf
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            // after 10 rounds the value is rank-sum * 3^9 within the group
+            let base: f32 = if rank < 3 { 0.0 + 1.0 + 2.0 } else { 3.0 + 4.0 + 5.0 };
+            let want = base * 3.0f32.powi(9);
+            assert!(
+                got.iter().all(|&x| (x - want).abs() / want.max(1.0) < 1e-4),
+                "rank {rank}: {} vs {want}",
+                got[0]
+            );
+        }
+    }
+
+    #[test]
+    fn subgroup_all_reduce_max() {
+        let world = Group::new(3);
+        let sub = SubGroup::new(&world, vec![0, 1, 2], 7);
+        let handles: Vec<_> = (0..3usize)
+            .map(|rank| {
+                let s = sub.clone();
+                thread::spawn(move || {
+                    let mut buf: Vec<f32> =
+                        (0..10).map(|i| ((rank * 17 + i * 3) % 11) as f32 - 5.0).collect();
+                    s.all_reduce_max(rank, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        let mut want = vec![f32::NEG_INFINITY; 10];
+        for rank in 0..3usize {
+            for (i, w) in want.iter_mut().enumerate() {
+                *w = w.max(((rank * 17 + i * 3) % 11) as f32 - 5.0);
+            }
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn tp_comm_solo_is_noop() {
+        let comm = TpComm::solo();
+        assert_eq!(comm.tp(), 1);
+        assert_eq!(comm.tp_rank(), 0);
+        let mut buf = vec![1.0f32, 2.0, 3.0];
+        comm.all_reduce_sum(&mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+        comm.all_reduce_max(&mut buf);
+        assert_eq!(buf, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn subgroup_short_buffer_smaller_than_group() {
+        // len < n leaves some ring chunks empty; must still be exact
+        let world = Group::new(4);
+        let sub = SubGroup::new(&world, vec![0, 1, 2, 3], 0);
+        let handles: Vec<_> = (0..4usize)
+            .map(|rank| {
+                let s = sub.clone();
+                thread::spawn(move || {
+                    let mut buf = vec![rank as f32 + 1.0; 2];
+                    s.all_reduce_sum(rank, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![10.0, 10.0]);
         }
     }
 

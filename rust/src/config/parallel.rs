@@ -163,6 +163,14 @@ impl ParallelConfig {
         Ok(())
     }
 
+    /// TP shards slice the hidden (column/row-parallel linears) and vocab
+    /// (sharded embedding, vocab-parallel head) dimensions; a strategy is
+    /// executable only when `tp` divides both.  `PerfModel::evaluate` and
+    /// the engine both enforce this against their model specs.
+    pub fn tp_divides(&self, hidden: u64, vocab: u64) -> bool {
+        hidden % self.tp as u64 == 0 && vocab % self.tp as u64 == 0
+    }
+
     /// Paper §V.A: "the number of micro-batches must equal or exceed the
     /// number of pipeline stages" for saturation.
     pub fn pipeline_saturated(&self) -> bool {
@@ -260,6 +268,15 @@ mod tests {
         assert!(bad.validate().is_err());
         let v1 = ParallelConfig::default().with_pp(8).with_gbs(12).with_interleave(1);
         v1.validate().unwrap();
+    }
+
+    #[test]
+    fn tp_divisibility_rule() {
+        let c = ParallelConfig::default().with_tp(8);
+        assert!(c.tp_divides(12288, 51200));
+        assert!(!c.tp_divides(12290, 51200));
+        assert!(!c.tp_divides(12288, 51201));
+        assert!(ParallelConfig::default().with_tp(1).tp_divides(7, 13));
     }
 
     #[test]

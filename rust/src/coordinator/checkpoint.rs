@@ -1,16 +1,22 @@
 //! Training checkpoints: save/restore parameters + optimizer state.
 //!
-//! Format (one file per pipeline stage, written by the stage's dp-rank-0
-//! worker; DP replicas hold identical parameters so one copy suffices —
-//! with ZeRO-1 each rank persists only its own optimizer shard, matching
-//! DeepSpeed's per-rank checkpoint layout):
+//! Format — one file per **(global stage, tp rank)**, written by that
+//! shard's dp-rank-0 worker; DP replicas hold identical parameters so one
+//! copy suffices, and with ZeRO-1 each DP rank persists only its own
+//! optimizer shard, matching DeepSpeed's per-rank checkpoint layout:
 //!
 //! ```text
 //! ckpt-dir/
 //!   MANIFEST.json                 # step, bundle, world shape
-//!   stage<i>.params.bin           # f32 LE: flat parameter vector
-//!   stage<i>.dp<r>.opt.bin        # f32 LE: adam m ++ adam v (+ step count)
+//!   stage<g>.tp<t>.params.bin     # f32 LE: flat (sharded) param vector
+//!   stage<g>.tp<t>.dp<r>.opt.bin  # f32 LE: adam m ++ adam v (+ step count)
 //! ```
+//!
+//! Keying by *global* stage (not worker rank) means a run can resume
+//! under a different pipeline chunking (`v`) of the same bundle; keying
+//! by tp rank means every tensor shard round-trips its own slice.  The
+//! manifest pins `(bundle, global stages, tp, dp, zero1)` — resuming with
+//! a different tp or dp is rejected rather than mis-assembled.
 //!
 //! Binary payloads are little-endian f32 with an 16-byte header
 //! (magic, version, element count, adam step).
@@ -30,7 +36,10 @@ const VERSION: u32 = 1;
 pub struct Manifest {
     pub step: u32,
     pub bundle: String,
-    pub pp: u32,
+    /// Global stages (`pp × v`) — NOT worker ranks, so re-chunked resumes
+    /// of the same bundle validate.
+    pub stages: u32,
+    pub tp: u32,
     pub dp: u32,
     pub zero1: bool,
 }
@@ -38,10 +47,11 @@ pub struct Manifest {
 impl Manifest {
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"step\": {}, \"bundle\": {}, \"pp\": {}, \"dp\": {}, \"zero1\": {}}}",
+            "{{\"step\": {}, \"bundle\": {}, \"stages\": {}, \"tp\": {}, \"dp\": {}, \"zero1\": {}}}",
             self.step,
             crate::util::json::escape(&self.bundle),
-            self.pp,
+            self.stages,
+            self.tp,
             self.dp,
             self.zero1
         )
@@ -49,10 +59,24 @@ impl Manifest {
 
     pub fn from_json(src: &str) -> Result<Self> {
         let j = Json::parse(src).map_err(|e| anyhow!("{e}"))?;
+        let stages = match j.u64_field("stages") {
+            Ok(s) => s as u32,
+            // pre-TP manifests carried the worker-rank count as "pp" and
+            // keyed files stage<g>.params.bin — not convertible here
+            Err(_) if j.u64_field("pp").is_ok() => {
+                return Err(anyhow!(
+                    "incompatible checkpoint: pre-tensor-parallel manifest format \
+                     (worker-rank keyed); this build keys checkpoints by \
+                     (global stage, tp rank) — re-train to produce a new checkpoint"
+                ))
+            }
+            Err(e) => return Err(anyhow!("{e}")),
+        };
         Ok(Self {
             step: j.u64_field("step").map_err(|e| anyhow!("{e}"))? as u32,
             bundle: j.str_field("bundle").map_err(|e| anyhow!("{e}"))?,
-            pp: j.u64_field("pp").map_err(|e| anyhow!("{e}"))? as u32,
+            stages,
+            tp: j.u64_field("tp").map_err(|e| anyhow!("{e}"))? as u32,
             dp: j.u64_field("dp").map_err(|e| anyhow!("{e}"))? as u32,
             zero1: j.bool_field("zero1").map_err(|e| anyhow!("{e}"))?,
         })
@@ -112,12 +136,12 @@ pub fn read_f32(path: &Path) -> Result<(Vec<f32>, u64)> {
     Ok((data, aux))
 }
 
-pub fn params_path(dir: &Path, stage: usize) -> PathBuf {
-    dir.join(format!("stage{stage}.params.bin"))
+pub fn params_path(dir: &Path, stage: usize, tp_rank: usize) -> PathBuf {
+    dir.join(format!("stage{stage}.tp{tp_rank}.params.bin"))
 }
 
-pub fn opt_path(dir: &Path, stage: usize, dp_rank: usize) -> PathBuf {
-    dir.join(format!("stage{stage}.dp{dp_rank}.opt.bin"))
+pub fn opt_path(dir: &Path, stage: usize, tp_rank: usize, dp_rank: usize) -> PathBuf {
+    dir.join(format!("stage{stage}.tp{tp_rank}.dp{dp_rank}.opt.bin"))
 }
 
 #[cfg(test)]
@@ -138,9 +162,31 @@ mod tests {
 
     #[test]
     fn manifest_round_trip() {
-        let m = Manifest { step: 17, bundle: "tiny-s2-mb2".into(), pp: 2, dp: 3, zero1: true };
+        let m = Manifest {
+            step: 17,
+            bundle: "tiny-s2-mb2".into(),
+            stages: 2,
+            tp: 4,
+            dp: 3,
+            zero1: true,
+        };
         let back = Manifest::from_json(&m.to_json()).unwrap();
         assert_eq!(m, back);
+    }
+
+    #[test]
+    fn legacy_manifest_gets_targeted_error() {
+        let legacy = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"pp\": 2, \
+                      \"dp\": 1, \"zero1\": false}";
+        let err = Manifest::from_json(legacy).unwrap_err().to_string();
+        assert!(err.contains("pre-tensor-parallel"), "{err}");
+    }
+
+    #[test]
+    fn paths_key_stage_and_tp_rank() {
+        let dir = Path::new("/tmp/x");
+        assert!(params_path(dir, 3, 1).ends_with("stage3.tp1.params.bin"));
+        assert!(opt_path(dir, 3, 1, 2).ends_with("stage3.tp1.dp2.opt.bin"));
     }
 
     #[test]

@@ -1,14 +1,16 @@
 //! The distributed-training engine (the paper's L3 contribution, executed
 //! for real).
 //!
-//! One OS thread per simulated GCD.  The world is a `p x dp` grid (TP is
-//! covered by the performance model; the engine runs the tensor-dense
-//! path): pipeline workers execute the *same* `schedule::Schedule`
-//! instruction streams the simulator prices, pass activations/gradients
-//! through the `collectives::Group` mailboxes, accumulate gradients over
-//! micro-batches, and synchronise per-stage DP groups through a real
-//! ring all-reduce (or ZeRO-1 reduce-scatter/all-gather) before the
-//! sharded Adam step.
+//! One OS thread per simulated GCD.  The world is the full 3-D
+//! `pp × dp × tp` grid (Megatron ordering — TP innermost, so a TP group
+//! is `tp` consecutive ranks, the §III.A placement rule): pipeline
+//! workers execute the *same* `schedule::Schedule` instruction streams
+//! the simulator prices, pass activations/gradients through the
+//! `collectives::Group` mailboxes, run per-layer tensor-parallel
+//! all-reduces through their `collectives::SubGroup`, accumulate
+//! gradients over micro-batches, and synchronise per-stage DP groups
+//! through a real ring all-reduce (or ZeRO-1 reduce-scatter/all-gather)
+//! before the sharded Adam step.
 //!
 //! **Virtual stages:** with `Interleaved1F1B { v }` the bundle's
 //! `n_stages` stage executables are split `v` per worker — worker `r`
@@ -16,6 +18,17 @@
 //! where `p = n_stages / v` — and chunked activations/gradients are
 //! multiplexed over the worker mailboxes with `(direction, chunk, mb)`
 //! tags.  Plain GPipe/1F1B are the `v = 1` case (one chunk per worker).
+//!
+//! **Tensor parallelism:** with `tp > 1` every pipeline worker becomes
+//! `tp` shard threads.  Each shard owns its column/row slice of every
+//! hosted chunk (Megatron §II.B: column-parallel first linear,
+//! row-parallel second linear, vocab-sharded embed, vocab-parallel head)
+//! and replays the *same* instruction stream SPMD; the per-layer forward
+//! and backward all-reduces run inside the stage entry points through
+//! the shard's `TpComm`.  Activations cross pipeline boundaries p2p
+//! between *corresponding* tp ranks (each shard holds the full activation
+//! after its row-parallel all-reduce, exactly like Megatron).  Only
+//! builtin bundles shard; the AOT artifacts stay tensor-dense.
 //!
 //! Compute is either the AOT-compiled JAX/Pallas stage executables loaded
 //! by [`crate::runtime`] (Python is never on this path) or the pure-Rust
@@ -27,9 +40,11 @@
 //!   ┌───────────┬───────────┐          losses / metrics (mpsc)
 //!   │ worker 0  │ worker 1  │ ...
 //!   │ dp=0 dp=1 │ dp=0 dp=1 │   <- worker threads, one per "GCD",
-//!   └───────────┴───────────┘      v chunk slots each
+//!   │ tp0…tpk   │ tp0…tpk   │      v chunk slots each
+//!   └───────────┴───────────┘
 //!     activations ->  <- gradients     (world group, tagged mailboxes)
-//!     DP all-reduce per chunk          (per-worker-row Group)
+//!     TP all-reduce per layer          (per-cell SubGroup of the world)
+//!     DP all-reduce per chunk          (per (pp, tp) row Group)
 //! ```
 
 pub mod checkpoint;
@@ -42,7 +57,7 @@ use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::collectives::Group;
+use crate::collectives::{Group, SubGroup};
 use crate::config::ScheduleKind;
 use crate::metrics::StepTimer;
 use crate::optim::{AdamConfig, LrSchedule};
@@ -60,6 +75,9 @@ pub struct EngineConfig {
     pub bundle: String,
     /// Data-parallel replicas.
     pub dp: usize,
+    /// Tensor-parallel shards per pipeline worker (builtin bundles only;
+    /// the AOT artifacts are compiled tensor-dense).
+    pub tp: usize,
     pub schedule: ScheduleKind,
     /// Micro-batches per replica per step (gradient-accumulation steps).
     pub microbatches: u32,
@@ -85,6 +103,7 @@ impl Default for EngineConfig {
             artifacts_root: PathBuf::from("artifacts"),
             bundle: String::from("tiny-s2-mb2"),
             dp: 1,
+            tp: 1,
             schedule: ScheduleKind::OneF1B,
             microbatches: 2,
             steps: 10,
@@ -106,7 +125,8 @@ pub struct StepLog {
     pub step: u32,
     /// Mean training loss across every micro-batch and DP replica.
     pub loss: f32,
-    /// Global gradient norm of the head chunk (pre-clip).
+    /// Pre-clip gradient norm combined over the reporting worker's
+    /// hosted chunks (per-chunk norms are TP/DP-global; see `zero`).
     pub grad_norm: f32,
     pub step_time_s: f64,
 }
@@ -122,6 +142,12 @@ pub struct TrainReport {
     pub tokens_per_sec: f64,
     /// Bytes moved through collectives (p2p + all-reduce) over the run.
     pub comm_bytes: u64,
+    /// Tensor-parallel all-reduce payload bytes (logical reduced volume,
+    /// summed over every TP subgroup) — cross-validated against the
+    /// analytic TP comm term in `perf` by the engine tests.
+    pub tp_ar_bytes: u64,
+    /// Tensor-parallel all-reduce rounds executed across the run.
+    pub tp_ar_rounds: u64,
 }
 
 impl TrainReport {
@@ -160,8 +186,27 @@ pub fn train_with_bundle(
 ) -> Result<TrainReport> {
     let n_stages = bundle.meta.n_stages as usize;
     let dp = cfg.dp;
+    let tp = cfg.tp;
     anyhow::ensure!(dp >= 1, "dp must be >= 1");
+    anyhow::ensure!(tp >= 1, "tp must be >= 1");
     anyhow::ensure!(cfg.microbatches >= 1, "need at least one micro-batch");
+    if tp > 1 {
+        // only the builtin backend shards; fail fast with a clear message
+        // (tp_shard re-validates per stage)
+        anyhow::ensure!(
+            cfg.bundle.starts_with("builtin:"),
+            "tensor parallelism (tp = {tp}) requires a builtin:* bundle — \
+             AOT artifact stages are compiled tensor-dense"
+        );
+        let spec = BuiltinSpec::parse(&cfg.bundle)
+            .ok_or_else(|| anyhow!("malformed builtin bundle {:?}", cfg.bundle))?;
+        anyhow::ensure!(
+            spec.tp_ok(tp),
+            "tp {tp} must divide hidden {} and vocab {}",
+            spec.hidden,
+            spec.vocab
+        );
+    }
 
     // virtual chunking: v stage executables per worker
     let v = cfg.schedule.chunks() as usize;
@@ -177,13 +222,14 @@ pub fn train_with_bundle(
             cfg.microbatches
         );
     }
-    let world_size = pp * dp;
+    let world_size = pp * dp * tp;
 
     let sched = schedule::build(cfg.schedule, pp as u32, cfg.microbatches);
     sched.validate().map_err(|e| anyhow!("invalid schedule: {e}"))?;
     let sched = Arc::new(sched);
 
     // checkpoint resume: validate the manifest against this run's shape
+    // (global stages, not worker ranks — re-chunked resumes are legal)
     let start_step = if cfg.resume {
         let dir = cfg
             .checkpoint_dir
@@ -191,8 +237,11 @@ pub fn train_with_bundle(
             .ok_or_else(|| anyhow!("--resume requires a checkpoint dir"))?;
         let manifest = checkpoint::Manifest::load(dir)?;
         anyhow::ensure!(
-            manifest.bundle == cfg.bundle && manifest.pp == pp as u32
-                && manifest.dp == dp as u32 && manifest.zero1 == cfg.zero1,
+            manifest.bundle == cfg.bundle
+                && manifest.stages == n_stages as u32
+                && manifest.tp == tp as u32
+                && manifest.dp == dp as u32
+                && manifest.zero1 == cfg.zero1,
             "checkpoint shape mismatch: {manifest:?} vs current run"
         );
         manifest.step
@@ -200,41 +249,55 @@ pub fn train_with_bundle(
         0
     };
 
-    // world group: tagged p2p mailboxes between workers; per-worker-row DP
-    // groups for gradient sync.  rank = pp_rank * dp + dp_rank.
+    // world group: tagged p2p mailboxes between workers.  Megatron rank
+    // order, TP innermost: rank = (pp_rank * dp + dp_rank) * tp + tp_rank.
+    // Per (pp, dp) cell: a TP SubGroup over its tp consecutive world
+    // ranks (layer all-reduces + replicated-grad sync).  Per (pp, tp)
+    // row: a DP Group for gradient sync across replicas.
     let world = Group::new(world_size);
-    let dp_groups: Vec<Arc<Group>> = (0..pp).map(|_| Group::new(dp)).collect();
+    let tp_groups: Vec<Arc<SubGroup>> = (0..pp * dp)
+        .map(|cell| {
+            let base = cell * tp;
+            SubGroup::new(&world, (base..base + tp).collect(), cell as u64)
+        })
+        .collect();
+    let dp_groups: Vec<Arc<Group>> = (0..pp * tp).map(|_| Group::new(dp)).collect();
 
     let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32)>();
 
     let mut handles = Vec::with_capacity(world_size);
     for pp_rank in 0..pp {
         for dp_rank in 0..dp {
-            let ctx = worker::WorkerCtx {
-                cfg: cfg.clone(),
-                rt: rt.clone(),
-                bundle: bundle.clone(),
-                sched: sched.clone(),
-                world: world.clone(),
-                dp_group: dp_groups[pp_rank].clone(),
-                pp_rank,
-                dp_rank,
-                pp,
-                dp,
-                v,
-                start_step,
-                loss_tx: if pp_rank == pp - 1 && dp_rank == 0 {
-                    Some(loss_tx.clone())
-                } else {
-                    None
-                },
-            };
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("gcd-p{pp_rank}d{dp_rank}"))
-                    .spawn(move || worker::run(ctx))
-                    .context("spawning worker")?,
-            );
+            for tp_rank in 0..tp {
+                let ctx = worker::WorkerCtx {
+                    cfg: cfg.clone(),
+                    rt: rt.clone(),
+                    bundle: bundle.clone(),
+                    sched: sched.clone(),
+                    world: world.clone(),
+                    tp_group: tp_groups[pp_rank * dp + dp_rank].clone(),
+                    dp_group: dp_groups[pp_rank * tp + tp_rank].clone(),
+                    pp_rank,
+                    dp_rank,
+                    tp_rank,
+                    pp,
+                    dp,
+                    tp,
+                    v,
+                    start_step,
+                    loss_tx: if pp_rank == pp - 1 && dp_rank == 0 && tp_rank == 0 {
+                        Some(loss_tx.clone())
+                    } else {
+                        None
+                    },
+                };
+                handles.push(
+                    thread::Builder::new()
+                        .name(format!("gcd-p{pp_rank}d{dp_rank}t{tp_rank}"))
+                        .spawn(move || worker::run(ctx))
+                        .context("spawning worker")?,
+                );
+            }
         }
     }
     drop(loss_tx);
@@ -266,11 +329,22 @@ pub fn train_with_bundle(
     let tokens_per_step =
         bundle.meta.tokens_per_microbatch * cfg.microbatches as u64 * dp as u64;
     let mean_step = timer.mean_after_warmup(1.min(logs.len().saturating_sub(1)));
+    // TP subgroup ring traffic flows through the world mailboxes, so
+    // world.bytes_moved already includes its wire bytes; the subgroup
+    // counters track the logical all-reduce payload separately.
     let comm_bytes = world.bytes_moved.load(Ordering::Relaxed)
         + dp_groups
             .iter()
             .map(|g| g.bytes_moved.load(Ordering::Relaxed))
             .sum::<u64>();
+    let tp_ar_bytes = tp_groups
+        .iter()
+        .map(|g| g.ar_bytes.load(Ordering::Relaxed))
+        .sum::<u64>();
+    let tp_ar_rounds = tp_groups
+        .iter()
+        .map(|g| g.ar_rounds.load(Ordering::Relaxed))
+        .sum::<u64>();
     Ok(TrainReport {
         world_size,
         total_params: bundle.meta.model.total_params,
@@ -278,6 +352,8 @@ pub fn train_with_bundle(
         mean_step_time_s: mean_step,
         tokens_per_sec: tokens_per_step as f64 / mean_step,
         comm_bytes,
+        tp_ar_bytes,
+        tp_ar_rounds,
         logs,
     })
 }

@@ -1,6 +1,7 @@
 //! Worker thread: one simulated GCD executing its instruction stream over
 //! `v` virtual-stage chunk slots against the stage backends (PJRT
-//! executables or builtin reference stages).
+//! executables or builtin reference stages), as one shard of its
+//! tensor-parallel group.
 //!
 //! Chunk `c` of worker `r` is global stage `g = c * pp + r`; activations
 //! flow `g -> g+1` (worker `(r+1) % pp`), gradients `g -> g-1`.  Because
@@ -8,15 +9,23 @@
 //! message is tagged with `(direction, destination chunk, micro-batch)`;
 //! with `pp = 1` the chunk boundary stays worker-local and skips the
 //! mailboxes entirely.
+//!
+//! With `tp > 1` the worker is one of `tp` shard threads of a pipeline
+//! cell: it executes the SAME instruction stream as its TP siblings
+//! (SPMD), each op's per-layer all-reduces running inside the sharded
+//! stage entry points through `TpComm`.  Pipeline p2p connects
+//! *corresponding* tp ranks of adjacent cells — every shard holds the
+//! full activation after its row-parallel all-reduce, so the boundary
+//! protocol is unchanged from the dense engine.
 
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, Result};
 
-use crate::collectives::Group;
+use crate::collectives::{Group, SubGroup, TpComm};
 use crate::data::BatchStream;
-use crate::runtime::{Bundle, ParamsHandle, Runtime};
+use crate::runtime::{Bundle, ParamsHandle, Runtime, StageExecutables};
 use crate::schedule::{Op, Schedule};
 use crate::zero::DistOptimizer;
 
@@ -29,17 +38,22 @@ pub struct WorkerCtx {
     pub bundle: Arc<Bundle>,
     pub sched: Arc<Schedule>,
     pub world: Arc<Group>,
+    /// This worker's tensor-parallel subgroup (its pp×dp cell).
+    pub tp_group: Arc<SubGroup>,
     pub dp_group: Arc<Group>,
     pub pp_rank: usize,
     pub dp_rank: usize,
+    pub tp_rank: usize,
     /// Pipeline ranks (worker grid depth).
     pub pp: usize,
     pub dp: usize,
+    /// Tensor-parallel shards per pipeline cell.
+    pub tp: usize,
     /// Virtual chunks hosted by this worker (global stages = pp * v).
     pub v: usize,
     /// First step index (non-zero when resuming from a checkpoint).
     pub start_step: u32,
-    /// Only the (last-rank, dp=0) worker reports losses.
+    /// Only the (last-rank, dp=0, tp=0) worker reports losses.
     pub loss_tx: Option<mpsc::Sender<(u32, f32, f32)>>,
 }
 
@@ -51,12 +65,15 @@ fn tag(direction: u64, chunk: usize, mb: usize) -> u64 {
 }
 
 impl WorkerCtx {
+    /// Megatron rank order, TP innermost.
     fn world_rank(&self) -> usize {
-        self.pp_rank * self.dp + self.dp_rank
+        (self.pp_rank * self.dp + self.dp_rank) * self.tp + self.tp_rank
     }
 
+    /// World rank of the same (dp, tp) coordinates on another pipeline
+    /// cell — the p2p peer for activations/gradients.
     fn world_rank_of(&self, pp_rank: usize) -> usize {
-        pp_rank * self.dp + self.dp_rank
+        (pp_rank * self.dp + self.dp_rank) * self.tp + self.tp_rank
     }
 
     /// Total global (virtual) stages.
@@ -152,14 +169,31 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     let owns_embed = ctx.pp_rank == 0;
     let owns_head = ctx.pp_rank == ctx.pp - 1;
 
+    // this shard's tensor-parallel communicator (no-op when tp = 1)
+    let comm = TpComm::new(ctx.tp_group.clone(), ctx.world_rank());
+
     // ---- per-chunk slots: stage executables, params, optimizer ----
-    let stages: Vec<_> = (0..ctx.v).map(|c| &ctx.bundle.stages[ctx.global(c)]).collect();
+    // tp = 1 borrows the bundle's dense stages; tp > 1 derives this
+    // shard's view of each hosted chunk (builtin backend only)
+    let owned_shards: Vec<StageExecutables> = if ctx.tp > 1 {
+        (0..ctx.v)
+            .map(|c| ctx.bundle.stages[ctx.global(c)].tp_shard(ctx.tp, ctx.tp_rank))
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        Vec::new()
+    };
+    let stages: Vec<&StageExecutables> = if ctx.tp > 1 {
+        owned_shards.iter().collect()
+    } else {
+        (0..ctx.v).map(|c| &ctx.bundle.stages[ctx.global(c)]).collect()
+    };
     let mut params: Vec<Vec<f32>> = Vec::with_capacity(ctx.v);
     let mut opts: Vec<DistOptimizer> = Vec::with_capacity(ctx.v);
     for stage in &stages {
         // parameter init: identical across DP replicas and across pipeline
         // partitions (init keys fold in GLOBAL layer indices on both
-        // backends, so the key is the same for every partitioning)
+        // backends, so the key is the same for every partitioning); TP
+        // shards slice the same dense component streams
         let p = stage.init_params(ctx.cfg.seed)?;
         anyhow::ensure!(
             p.len() as u64 == stage.meta.param_count,
@@ -181,14 +215,19 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         let dir = ctx.cfg.checkpoint_dir.as_ref().expect("validated by leader");
         for (c, stage) in stages.iter().enumerate() {
             let g = ctx.global(c);
-            let (p, _) = checkpoint::read_f32(&checkpoint::params_path(dir, g))?;
+            let (p, _) =
+                checkpoint::read_f32(&checkpoint::params_path(dir, g, ctx.tp_rank))?;
             anyhow::ensure!(
                 p.len() as u64 == stage.meta.param_count,
                 "checkpoint params size mismatch on stage {g}"
             );
             params[c] = p;
-            let (state, t) =
-                checkpoint::read_f32(&checkpoint::opt_path(dir, g, ctx.dp_rank))?;
+            let (state, t) = checkpoint::read_f32(&checkpoint::opt_path(
+                dir,
+                g,
+                ctx.tp_rank,
+                ctx.dp_rank,
+            ))?;
             opts[c].import_state(&state, t);
         }
     }
@@ -266,7 +305,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     }
                     if g == 0 {
                         let tokens = stash_tok[mb].as_ref().unwrap();
-                        let y = stage.fwd_first(&ctx.rt, pbuf, tokens, dims)?;
+                        let y = stage.fwd_first(&ctx.rt, pbuf, &comm, tokens, dims)?;
                         send_act(&ctx, &mut local, g, mb, y);
                     } else if g == k - 1 {
                         // head chunk: stash the incoming activation; the
@@ -275,7 +314,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         stash_x[c][mb] = Some(x);
                     } else {
                         let x = recv_act(&ctx, &mut local, g, mb);
-                        let y = stage.fwd_mid(&ctx.rt, pbuf, &x, dims)?;
+                        let y = stage.fwd_mid(&ctx.rt, pbuf, &comm, &x, dims)?;
                         stash_x[c][mb] = Some(x);
                         send_act(&ctx, &mut local, g, mb, y);
                     }
@@ -287,26 +326,26 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         let tokens = stash_tok[mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
                         let (gp, loss) =
-                            stage.bwd_single(&ctx.rt, pbuf, &tokens, &targets, dims)?;
+                            stage.bwd_single(&ctx.rt, pbuf, &comm, &tokens, &targets, dims)?;
                         accumulate(&mut grad_accum[c], &gp);
                         loss_sum += loss;
                     } else if g == k - 1 {
                         let x = stash_x[c][mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
                         let (gp, gx, loss) =
-                            stage.bwd_last(&ctx.rt, pbuf, &x, &targets, dims)?;
+                            stage.bwd_last(&ctx.rt, pbuf, &comm, &x, &targets, dims)?;
                         accumulate(&mut grad_accum[c], &gp);
                         loss_sum += loss;
                         send_grad(&ctx, &mut local, g, mb, gx);
                     } else if g == 0 {
                         let gy = recv_grad(&ctx, &mut local, g, mb);
                         let tokens = stash_tok[mb].take().unwrap();
-                        let gp = stage.bwd_first(&ctx.rt, pbuf, &tokens, &gy, dims)?;
+                        let gp = stage.bwd_first(&ctx.rt, pbuf, &comm, &tokens, &gy, dims)?;
                         accumulate(&mut grad_accum[c], &gp);
                     } else {
                         let gy = recv_grad(&ctx, &mut local, g, mb);
                         let x = stash_x[c][mb].take().unwrap();
-                        let (gp, gx) = stage.bwd_mid(&ctx.rt, pbuf, &x, &gy, dims)?;
+                        let (gp, gx) = stage.bwd_mid(&ctx.rt, pbuf, &comm, &x, &gy, dims)?;
                         accumulate(&mut grad_accum[c], &gp);
                         send_grad(&ctx, &mut local, g, mb, gx);
                     }
@@ -320,6 +359,21 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             g.iter_mut().for_each(|x| *x *= inv_m);
         }
 
+        // TP grad sync: mean-reduce the replicated-parameter gradients
+        // (the row-parallel bias) across the TP group before the
+        // optimizer step.  They are identical across shards by
+        // construction — the sync pins that invariant against drift.
+        // Sharded parameters are disjoint per shard and need no sync.
+        if ctx.tp > 1 {
+            let inv_tp = 1.0 / ctx.tp as f32;
+            for c in 0..ctx.v {
+                if let Some((lo, hi)) = stages[c].tp_replicated_span() {
+                    comm.all_reduce_sum(&mut grad_accum[c][lo..hi]);
+                    grad_accum[c][lo..hi].iter_mut().for_each(|x| *x *= inv_tp);
+                }
+            }
+        }
+
         // DP sync + (sharded) optimizer step, chunk by chunk (every rank
         // of a DP row walks its chunks in the same order, so the
         // per-chunk collective rounds line up)
@@ -328,21 +382,30 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             .lr_schedule
             .map(|sch| sch.scale(step as u64))
             .unwrap_or(1.0);
-        let mut grad_norm = 0.0f32;
+        // combined pre-clip norm over every chunk this worker hosts (a
+        // single chunk's spike must not be masked by the last chunk's)
+        let mut grad_norm_sq = 0.0f32;
         for c in 0..ctx.v {
-            grad_norm = opts[c].step(
+            // under TP the clip norm combines across the tensor group
+            // (replicated span counted once) — dense-equivalent clipping
+            let tp_ctx = stages[c].tp_replicated_span().map(|span| (&comm, span));
+            let norm = opts[c].step(
                 &ctx.dp_group,
                 ctx.dp_rank,
                 &mut params[c],
                 &mut grad_accum[c],
                 lr_scale,
+                tp_ctx,
             );
+            grad_norm_sq += norm * norm;
         }
+        let grad_norm = grad_norm_sq.sqrt();
 
         // periodic checkpoint: every rank persists its own pieces after a
-        // world barrier (so all stages are at the same step), dp-rank-0
-        // writes the shared params per global stage, rank0/dp0 writes the
-        // manifest
+        // world barrier (so all stages are at the same step).  Files are
+        // keyed (global stage, tp rank): each tensor shard's dp-rank-0
+        // worker writes that shard's params; every rank writes its own
+        // optimizer state; pp0/dp0/tp0 writes the manifest.
         let every = ctx.cfg.checkpoint_every;
         let last_step = rel_step + 1 == ctx.cfg.steps;
         if let Some(dir) = ctx.cfg.checkpoint_dir.as_ref() {
@@ -352,24 +415,25 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     let g = ctx.global(c);
                     if ctx.dp_rank == 0 {
                         checkpoint::write_f32(
-                            &checkpoint::params_path(dir, g),
+                            &checkpoint::params_path(dir, g, ctx.tp_rank),
                             &params[c],
                             (step + 1) as u64,
                         )?;
                     }
                     let (state, t) = opts[c].export_state();
                     checkpoint::write_f32(
-                        &checkpoint::opt_path(dir, g, ctx.dp_rank),
+                        &checkpoint::opt_path(dir, g, ctx.tp_rank, ctx.dp_rank),
                         &state,
                         t,
                     )?;
                 }
                 ctx.world.barrier(ctx.world_rank());
-                if ctx.pp_rank == 0 && ctx.dp_rank == 0 {
+                if ctx.pp_rank == 0 && ctx.dp_rank == 0 && ctx.tp_rank == 0 {
                     checkpoint::Manifest {
                         step: step + 1,
                         bundle: ctx.cfg.bundle.clone(),
-                        pp: ctx.pp as u32,
+                        stages: ctx.k() as u32,
+                        tp: ctx.tp as u32,
                         dp: ctx.dp as u32,
                         zero1: ctx.cfg.zero1,
                     }

@@ -35,10 +35,17 @@ COMMANDS:
   scaling  [--model 175b|1t] [--mode weak|strong]
   hpo      [--evals N] [--seed N]
   train    [--bundle tiny-s2-mb2 | --bundle builtin:tiny-s4-mb2]
-           [--artifacts DIR] [--dp N] [--microbatches N] [--steps N]
+           [--artifacts DIR] [--dp N] [--tp N] [--microbatches N] [--steps N]
            [--zero1] [--gpipe | --interleave V]
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
+
+  --tp N shards every builtin stage across N tensor-parallel worker
+  threads (Megatron column/row-parallel linears, vocab-parallel embed and
+  head, per-layer all-reduces through real collectives).  Builtin bundles
+  only; N must divide the model's hidden and vocab dims.  Quickstart:
+
+    frontier train --bundle builtin:tiny-s4-mb2 --tp 2 --dp 2 --steps 20
 ";
 
 fn main() -> Result<()> {
@@ -349,6 +356,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         artifacts_root: args.opt_str("artifacts", "artifacts").into(),
         bundle: args.opt_str("bundle", "tiny-s2-mb2"),
         dp: args.opt("dp", 1).map_err(anyhow::Error::msg)?,
+        tp: args.opt("tp", 1).map_err(anyhow::Error::msg)?,
         schedule: {
             let v: u32 = args.opt("interleave", 1).map_err(anyhow::Error::msg)?;
             anyhow::ensure!(v >= 1, "--interleave must be >= 1");
@@ -389,5 +397,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.tokens_per_sec,
         report.comm_bytes as f64 / 1e6
     );
+    if report.tp_ar_rounds > 0 {
+        println!(
+            "  TP: {} all-reduce rounds, {:.1} MB reduced payload",
+            report.tp_ar_rounds,
+            report.tp_ar_bytes as f64 / 1e6
+        );
+    }
     Ok(())
 }

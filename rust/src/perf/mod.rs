@@ -24,6 +24,56 @@ use crate::mem;
 use crate::parallel::RankLayout;
 use crate::topology::{Machine, HBM_BW, PEAK_FP16_FLOPS};
 
+// ---------------------------------------------------------------------------
+// The TP communication contract (§II.B), shared between the analytic
+// model below and the execution engine's instrumented `SubGroup`s.
+// ---------------------------------------------------------------------------
+
+/// Payload of ONE tensor-parallel all-reduce of the full activation —
+/// `tokens × hidden` elements at `prec_bytes` each.  This is the quantity
+/// the closed-form model prices per sharded block (1 forward + 1 backward
+/// all-reduce each; a transformer layer has 2 such blocks — attention and
+/// MLP — hence the model's 2-fwd + 2-bwd per layer), and the quantity the
+/// engine's `SubGroup` counters report per collective.
+pub fn tp_allreduce_payload_bytes(tokens: u64, hidden: u64, prec_bytes: u64) -> u64 {
+    tokens * hidden * prec_bytes
+}
+
+/// Sharded blocks per transformer layer (attention + MLP), each costing
+/// one forward and one backward activation all-reduce.
+pub const TP_BLOCKS_PER_TRANSFORMER_LAYER: u64 = 2;
+
+/// Exact all-reduce payload (f32 **elements**) the sharded builtin engine
+/// moves through one TP group per micro-batch, per pipeline (summed over
+/// that replica's stages).  Composition, all of size `tokens × hidden`
+/// unless noted:
+///
+/// * per stage block: 1 forward + 1 backward (input-grad) all-reduce;
+/// * vocab-sharded embedding: 1 forward all-reduce, plus 1 more in the
+///   first-stage backward's checkpointing recompute (absent on the fused
+///   single-stage path, which embeds once);
+/// * vocab-parallel head: 1 all-reduce for the `dy` input gradient, plus
+///   the softmax statistics — `tokens` elements of all-reduce-max and
+///   `2·tokens` of packed (sum-exp, target-logit) all-reduce-sum.
+///
+/// The engine test `tp_comm_bytes_match_analytic` pins the instrumented
+/// `SubGroup` counters to exactly `4 ×` this value (f32) per micro-batch.
+pub fn builtin_tp_ar_floats_per_microbatch(n_stages: u64, tokens: u64, hidden: u64) -> u64 {
+    let td = tokens * hidden;
+    let block_ars = 2 * n_stages; // 1 fwd + 1 bwd per block
+    let embed_ars = if n_stages == 1 { 1 } else { 2 }; // fwd (+ bwd recompute)
+    let head_ars = 1; // dlogits -> dy
+    (block_ars + embed_ars + head_ars) * td + 3 * tokens
+}
+
+/// Per-step, per-TP-group all-reduce payload (f32 elements) of the
+/// engine's optimizer-step synchronisation, per hosted stage: the
+/// replicated-gradient sync (row-parallel bias, `hidden` elements) plus
+/// the 1-float TP-global clip-norm combine.
+pub fn builtin_tp_grad_sync_floats_per_step(stages_hosted: u64, hidden: u64) -> u64 {
+    stages_hosted * (hidden + 1)
+}
+
 /// Kernel-efficiency model: what fraction of peak the GEMMs sustain.
 #[derive(Debug, Clone)]
 pub struct KernelModel {
@@ -173,9 +223,12 @@ impl PerfModel {
         let head_flops = 2.0 * (d * model.vocab) as f64 * tokens / cfg.tp as f64;
         let t_head = head_flops / rate / cfg.pp as f64;
 
-        // ---- TP all-reduce: 2 per layer fwd, 2 per layer bwd ----
+        // ---- TP all-reduce: 2 per layer fwd, 2 per layer bwd (one per
+        // sharded block per direction; TP_BLOCKS_PER_TRANSFORMER_LAYER
+        // blocks per layer) — same payload contract the engine's
+        // instrumented SubGroups are tested against ----
         let tp_group = layout.tp_group(0);
-        let ar_bytes = b * s * d * cfg.precision.bytes();
+        let ar_bytes = tp_allreduce_payload_bytes(b * s, d, cfg.precision.bytes());
         let (t_ar, _) = comm.allreduce(&tp_group, ar_bytes);
 
         let t_fwd = layers_stage as f64 * (t_fwd_layer + 2.0 * t_ar) + t_head;
@@ -195,6 +248,12 @@ impl PerfModel {
         cfg: &ParallelConfig,
     ) -> Result<StepBreakdown, PerfError> {
         cfg.validate().map_err(PerfError::Invalid)?;
+        if !cfg.tp_divides(model.hidden, model.vocab) {
+            return Err(PerfError::Invalid(format!(
+                "tp {} does not divide hidden {} / vocab {}",
+                cfg.tp, model.hidden, model.vocab
+            )));
+        }
         if cfg.pp > model.n_layers {
             return Err(PerfError::Invalid(format!(
                 "pp {} exceeds layer count {}",
@@ -406,6 +465,37 @@ mod tests {
             .tflops_per_gpu;
         let gain = with / without - 1.0;
         assert!(gain > 0.10 && gain < 0.40, "gain {:.1}%", gain * 100.0);
+    }
+
+    #[test]
+    fn tp_comm_contract_composition() {
+        // the closed-form per-layer count (2 blocks × fwd+bwd) and the
+        // builtin per-microbatch composition must agree on the shared
+        // per-all-reduce payload
+        let (t, d) = (16u64, 16u64);
+        assert_eq!(tp_allreduce_payload_bytes(t, d, 4), t * d * 4);
+        assert_eq!(TP_BLOCKS_PER_TRANSFORMER_LAYER * 2, 4); // ARs per layer
+        // builtin (1 block per stage): k-stage pipeline moves 2k block ARs
+        // + 2 embed + 1 head of t·d, plus 3t of softmax statistics
+        for k in [2u64, 4] {
+            assert_eq!(
+                builtin_tp_ar_floats_per_microbatch(k, t, d),
+                (2 * k + 3) * t * d + 3 * t
+            );
+        }
+        // fused single stage embeds once
+        assert_eq!(
+            builtin_tp_ar_floats_per_microbatch(1, t, d),
+            4 * t * d + 3 * t
+        );
+        assert_eq!(builtin_tp_grad_sync_floats_per_step(4, d), 4 * (d + 1));
+    }
+
+    #[test]
+    fn tp_not_dividing_hidden_rejected() {
+        let m = lookup("22b").unwrap(); // hidden 6144, vocab 51200
+        let cfg = ParallelConfig::default().with_tp(7).with_dp(1).with_gbs(16);
+        assert!(matches!(pm().evaluate(&m, &cfg), Err(PerfError::Invalid(_))));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::collectives::TpComm;
 use crate::util::json::Json;
 
 pub use builtin::{BuiltinSpec, BuiltinStage};
@@ -336,13 +337,50 @@ pub enum StageBackend {
 
 /// One pipeline stage's compiled entry points behind the typed contract
 /// the workers drive.  `(chunk, mb)`-addressed virtual stages are just
-/// multiple `StageExecutables` hosted by one worker.
+/// multiple `StageExecutables` hosted by one worker; tensor-parallel
+/// shards are `StageExecutables` derived via [`StageExecutables::tp_shard`]
+/// whose entry points communicate through the [`TpComm`] handed to every
+/// call (`TpComm::solo()` for the dense case — every collective no-ops).
 pub struct StageExecutables {
     pub meta: StageMeta,
     pub backend: StageBackend,
 }
 
 impl StageExecutables {
+    /// Derive the TP shard `(tp, tp_rank)` of this stage.  Only the
+    /// builtin backend shards (the AOT HLO artifacts are compiled dense);
+    /// requesting `tp > 1` on an XLA stage is an error.
+    pub fn tp_shard(&self, tp: usize, tp_rank: usize) -> Result<StageExecutables> {
+        anyhow::ensure!(tp >= 2 && tp_rank < tp, "bad shard coords {tp_rank}/{tp}");
+        match &self.backend {
+            StageBackend::Builtin(st) => {
+                anyhow::ensure!(
+                    st.spec.tp_ok(tp),
+                    "tp {tp} does not divide hidden {} / vocab {}",
+                    st.spec.hidden,
+                    st.spec.vocab
+                );
+                let sharded = BuiltinStage::sharded(st.spec.clone(), st.stage, tp, tp_rank);
+                let mut meta = self.meta.clone();
+                meta.param_count = sharded.param_count() as u64;
+                Ok(StageExecutables { meta, backend: StageBackend::Builtin(sharded) })
+            }
+            StageBackend::Xla { .. } => Err(anyhow!(
+                "tensor parallelism (tp = {tp}) requires a builtin:* bundle — \
+                 AOT artifact stages are compiled tensor-dense"
+            )),
+        }
+    }
+
+    /// Span of the TP-replicated parameters in this shard's flat vector
+    /// (the engine mean-reduces their gradients across the TP group
+    /// before the optimizer step).  `None` for dense stages.
+    pub fn tp_replicated_span(&self) -> Option<(usize, usize)> {
+        match &self.backend {
+            StageBackend::Builtin(st) if st.tp > 1 => Some(st.replicated_span()),
+            _ => None,
+        }
+    }
     /// Materialise this stage's flat parameter vector (deterministic in
     /// `seed`; identical across DP replicas and across pipeline
     /// partitions — init keys fold in GLOBAL layer indices on both
@@ -376,21 +414,32 @@ impl StageExecutables {
         }
     }
 
+    /// The XLA backend runs tensor-dense: reject any sharded communicator.
+    fn ensure_dense(comm: &TpComm, what: &str) -> Result<()> {
+        anyhow::ensure!(
+            comm.tp() == 1,
+            "{what}: tensor parallelism requires the builtin backend"
+        );
+        Ok(())
+    }
+
     /// First-stage forward: tokens -> activation.
     pub fn fwd_first(
         &self,
         rt: &Runtime,
         p: &ParamsHandle,
+        comm: &TpComm,
         tokens: &[i32],
         dims: StageDims,
     ) -> Result<Vec<f32>> {
         match &self.backend {
             StageBackend::Xla { fwd, .. } => {
+                Self::ensure_dense(comm, "fwd_first")?;
                 let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
                 let out = fwd.run_b(&[p.xla()?, &tok_buf.0]).context("stage fwd (embed)")?;
                 to_f32(&out[0])
             }
-            StageBackend::Builtin(st) => Ok(st.fwd_first(p.host()?, tokens)),
+            StageBackend::Builtin(st) => Ok(st.fwd_first(comm, p.host()?, tokens)),
         }
     }
 
@@ -399,16 +448,18 @@ impl StageExecutables {
         &self,
         rt: &Runtime,
         p: &ParamsHandle,
+        comm: &TpComm,
         x: &[f32],
         dims: StageDims,
     ) -> Result<Vec<f32>> {
         match &self.backend {
             StageBackend::Xla { fwd, .. } => {
+                Self::ensure_dense(comm, "fwd_mid")?;
                 let x_buf = rt.buf_f32(x, &dims.act())?;
                 let out = fwd.run_b(&[p.xla()?, &x_buf.0]).context("stage fwd")?;
                 to_f32(&out[0])
             }
-            StageBackend::Builtin(st) => Ok(st.fwd_mid(p.host()?, x)),
+            StageBackend::Builtin(st) => Ok(st.fwd_mid(comm, p.host()?, x)),
         }
     }
 
@@ -417,12 +468,14 @@ impl StageExecutables {
         &self,
         rt: &Runtime,
         p: &ParamsHandle,
+        comm: &TpComm,
         tokens: &[i32],
         targets: &[i32],
         dims: StageDims,
     ) -> Result<(Vec<f32>, f32)> {
         match &self.backend {
             StageBackend::Xla { bwd, .. } => {
+                Self::ensure_dense(comm, "bwd_single")?;
                 let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
                 let tgt_buf = rt.buf_i32(targets, &dims.tok())?;
                 let out = bwd
@@ -430,7 +483,7 @@ impl StageExecutables {
                     .context("single-stage bwd")?;
                 Ok((to_f32(&out[0])?, scalar_f32(&out[1])?))
             }
-            StageBackend::Builtin(st) => Ok(st.bwd_single(p.host()?, tokens, targets)),
+            StageBackend::Builtin(st) => Ok(st.bwd_single(comm, p.host()?, tokens, targets)),
         }
     }
 
@@ -439,12 +492,14 @@ impl StageExecutables {
         &self,
         rt: &Runtime,
         p: &ParamsHandle,
+        comm: &TpComm,
         x: &[f32],
         targets: &[i32],
         dims: StageDims,
     ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
         match &self.backend {
             StageBackend::Xla { bwd, .. } => {
+                Self::ensure_dense(comm, "bwd_last")?;
                 let x_buf = rt.buf_f32(x, &dims.act())?;
                 let tgt_buf = rt.buf_i32(targets, &dims.tok())?;
                 let out = bwd
@@ -452,7 +507,7 @@ impl StageExecutables {
                     .context("last-stage bwd")?;
                 Ok((to_f32(&out[0])?, to_f32(&out[1])?, scalar_f32(&out[2])?))
             }
-            StageBackend::Builtin(st) => Ok(st.bwd_last(p.host()?, x, targets)),
+            StageBackend::Builtin(st) => Ok(st.bwd_last(comm, p.host()?, x, targets)),
         }
     }
 
@@ -461,12 +516,14 @@ impl StageExecutables {
         &self,
         rt: &Runtime,
         p: &ParamsHandle,
+        comm: &TpComm,
         tokens: &[i32],
         gy: &[f32],
         dims: StageDims,
     ) -> Result<Vec<f32>> {
         match &self.backend {
             StageBackend::Xla { bwd, .. } => {
+                Self::ensure_dense(comm, "bwd_first")?;
                 let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
                 let gy_buf = rt.buf_f32(gy, &dims.act())?;
                 let out = bwd
@@ -474,7 +531,7 @@ impl StageExecutables {
                     .context("first-stage bwd")?;
                 to_f32(&out[0])
             }
-            StageBackend::Builtin(st) => Ok(st.bwd_first(p.host()?, tokens, gy)),
+            StageBackend::Builtin(st) => Ok(st.bwd_first(comm, p.host()?, tokens, gy)),
         }
     }
 
@@ -483,12 +540,14 @@ impl StageExecutables {
         &self,
         rt: &Runtime,
         p: &ParamsHandle,
+        comm: &TpComm,
         x: &[f32],
         gy: &[f32],
         dims: StageDims,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         match &self.backend {
             StageBackend::Xla { bwd, .. } => {
+                Self::ensure_dense(comm, "bwd_mid")?;
                 let x_buf = rt.buf_f32(x, &dims.act())?;
                 let gy_buf = rt.buf_f32(gy, &dims.act())?;
                 let out = bwd
@@ -496,7 +555,7 @@ impl StageExecutables {
                     .context("middle-stage bwd")?;
                 Ok((to_f32(&out[0])?, to_f32(&out[1])?))
             }
-            StageBackend::Builtin(st) => Ok(st.bwd_mid(p.host()?, x, gy)),
+            StageBackend::Builtin(st) => Ok(st.bwd_mid(comm, p.host()?, x, gy)),
         }
     }
 }
@@ -540,10 +599,10 @@ impl Bundle {
             .iter()
             .map(|sm| StageExecutables {
                 meta: sm.clone(),
-                backend: StageBackend::Builtin(BuiltinStage {
-                    spec: spec.clone(),
-                    stage: sm.index as usize,
-                }),
+                backend: StageBackend::Builtin(BuiltinStage::dense(
+                    spec.clone(),
+                    sm.index as usize,
+                )),
             })
             .collect();
         Self { dir: PathBuf::from("builtin"), meta, stages }
@@ -622,6 +681,7 @@ mod tests {
         let spec = BuiltinSpec::parse("builtin:tiny-s2-mb1").unwrap();
         let bundle = Bundle::builtin(&spec);
         let rt = Runtime::null();
+        let comm = TpComm::solo();
         assert_eq!(rt.platform(), "builtin");
         let dims = bundle.dims();
         let t = dims.b * dims.s;
@@ -633,13 +693,36 @@ mod tests {
         let h0 = bundle.stages[0].prepare_params(&rt, &p0).unwrap();
         let h1 = bundle.stages[1].prepare_params(&rt, &p1).unwrap();
 
-        let y = bundle.stages[0].fwd_first(&rt, &h0, &tokens, dims).unwrap();
+        let y = bundle.stages[0].fwd_first(&rt, &h0, &comm, &tokens, dims).unwrap();
         assert_eq!(y.len(), t * dims.d);
-        let (g1, gx, loss) = bundle.stages[1].bwd_last(&rt, &h1, &y, &targets, dims).unwrap();
+        let (g1, gx, loss) =
+            bundle.stages[1].bwd_last(&rt, &h1, &comm, &y, &targets, dims).unwrap();
         assert!(loss.is_finite() && loss > 0.0);
         assert_eq!(g1.len(), p1.len());
-        let g0 = bundle.stages[0].bwd_first(&rt, &h0, &tokens, &gx, dims).unwrap();
+        let g0 = bundle.stages[0].bwd_first(&rt, &h0, &comm, &tokens, &gx, dims).unwrap();
         assert_eq!(g0.len(), p0.len());
+    }
+
+    #[test]
+    fn tp_shard_views_builtin_stages() {
+        let spec = BuiltinSpec::parse("builtin:tiny-s2-mb1").unwrap();
+        let bundle = Bundle::builtin(&spec);
+        for tp in [2usize, 4] {
+            let mut total = 0u64;
+            for r in 0..tp {
+                let shard = bundle.stages[0].tp_shard(tp, r).unwrap();
+                assert_eq!(shard.meta.param_count, spec.shard_stage_params(0, tp) as u64);
+                assert!(shard.tp_replicated_span().is_some());
+                total += shard.meta.param_count;
+            }
+            // shards overcount the dense stage by the replicated b2 copies
+            let extra = ((tp - 1) * spec.hidden) as u64;
+            assert_eq!(total, spec.stage_params(0) as u64 + extra);
+        }
+        // tp must slice hidden/vocab
+        assert!(bundle.stages[0].tp_shard(3, 0).is_err());
+        // dense stages report no replicated span
+        assert!(bundle.stages[0].tp_replicated_span().is_none());
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! (`mem`), and the real execution engine (`coordinator`) — the thing we
 //! benchmark is the thing we run, for *all* schedules including
 //! interleaved (no analytic-only fallback).
+//!
+//! **Tensor parallelism is orthogonal to the instruction set.**  Streams
+//! are emitted per *pipeline* rank; with `tp > 1` the engine runs each
+//! stream SPMD on all `tp` shard threads of that pipeline cell — every
+//! op's operands are sharded and its per-layer all-reduces happen inside
+//! the stage entry points, so the schedule (ordering, dataflow, deadlock
+//! proof) is identical for every tp.  Nothing here is tp-aware, by
+//! design: `validate()`'s guarantees transfer to sharded execution
+//! because all shards of a cell block and progress together.
 
 use crate::config::ScheduleKind;
 

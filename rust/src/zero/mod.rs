@@ -11,9 +11,28 @@
 //! paths can be tested for *bitwise-equivalent parameter trajectories* —
 //! the invariant that makes ZeRO "free" to turn on.
 
-use crate::collectives::{chunk_bounds, Algo, Group};
+use crate::collectives::{chunk_bounds, Algo, Group, TpComm};
 use crate::optim::{clip_grad_norm, Adam, AdamConfig};
 use std::sync::Arc;
+
+/// Tensor-parallel context for the optimizer step: this shard's
+/// communicator plus the span of TP-replicated parameters in its flat
+/// buffer.  Gradient clipping then uses the norm over the whole TP
+/// group's logical parameter vector (replicated span counted once) — the
+/// dense-equivalent semantics the tp = 1/2/4 trajectory tests require.
+pub type TpCtx<'a> = Option<(&'a TpComm, (usize, usize))>;
+
+/// Squared-norm contribution of one shard's `grads` to the TP-global
+/// norm: the replicated span's energy is charged at 1/tp per shard
+/// (its gradients are identical across shards after the TP grad sync),
+/// so the cross-shard sum counts it exactly once.  `replicated` is given
+/// in `grads` coordinates and may be clamped empty.
+fn tp_partial_sq(grads: &[f32], replicated: (usize, usize), tp: usize) -> f32 {
+    let full: f32 = grads.iter().map(|&g| g * g).sum();
+    let (lo, hi) = replicated;
+    let rep: f32 = grads[lo..hi].iter().map(|&g| g * g).sum();
+    full - rep * (1.0 - 1.0 / tp as f32)
+}
 
 /// How a DP rank synchronises gradients and steps the optimizer.
 pub enum DistOptimizer {
@@ -34,7 +53,9 @@ impl DistOptimizer {
 
     /// Synchronise `grads` across `group` (mean) and update `params`.
     /// `grads` is consumed as scratch (it holds the averaged gradient for
-    /// Ddp, and is untouched past the shard for Zero1).
+    /// Ddp, and is untouched past the shard for Zero1).  With `tp` set,
+    /// the clip norm is combined across the tensor-parallel group
+    /// (replicated span counted once) via a 1-float subgroup all-reduce.
     pub fn step(
         &mut self,
         group: &Arc<Group>,
@@ -42,17 +63,31 @@ impl DistOptimizer {
         params: &mut [f32],
         grads: &mut [f32],
         lr_scale: f32,
+        tp: TpCtx<'_>,
     ) -> f32 {
         let dp = group.len() as f32;
         match self {
             DistOptimizer::Ddp(adam) => {
                 group.all_reduce_sum(rank, grads, Algo::Ring);
                 grads.iter_mut().for_each(|g| *g /= dp);
-                let norm = clip_grad_norm(grads, adam.cfg.grad_clip);
+                let norm = match tp {
+                    None => clip_grad_norm(grads, adam.cfg.grad_clip),
+                    Some((comm, span)) => {
+                        let mut sq = vec![tp_partial_sq(grads, span, comm.tp())];
+                        comm.all_reduce_sum(&mut sq);
+                        let norm = sq[0].max(0.0).sqrt();
+                        let clip = adam.cfg.grad_clip;
+                        if clip > 0.0 && norm > clip {
+                            let scale = clip / (norm + 1e-6);
+                            grads.iter_mut().for_each(|g| *g *= scale);
+                        }
+                        norm
+                    }
+                };
                 adam.step(params, grads, lr_scale);
                 norm
             }
-            DistOptimizer::Zero1(z) => z.step(group, rank, params, grads, lr_scale),
+            DistOptimizer::Zero1(z) => z.step(group, rank, params, grads, lr_scale, tp),
         }
     }
 
@@ -108,6 +143,7 @@ impl Zero1Optimizer {
         params: &mut [f32],
         grads: &mut [f32],
         lr_scale: f32,
+        tp: TpCtx<'_>,
     ) -> f32 {
         assert_eq!(params.len(), self.n_params);
         assert_eq!(group.len(), self.dp);
@@ -118,11 +154,25 @@ impl Zero1Optimizer {
         shard.iter_mut().for_each(|g| *g /= dp);
 
         // global grad-norm clipping needs the *full* norm: combine shard
-        // norms with a tiny all-reduce (1 float), like DeepSpeed does
-        let local_sq: f32 = shard.iter().map(|&g| g * g).sum();
+        // norms with a tiny all-reduce (1 float), like DeepSpeed does —
+        // first across DP shards, then (under TP) across the tensor
+        // group, discounting this DP shard's overlap with the replicated
+        // span so the cross-shard sum counts it once
+        let (slo, shi) = self.shard_bounds();
+        let local_sq: f32 = match tp {
+            None => shard.iter().map(|&g| g * g).sum(),
+            Some((comm, (rlo, rhi))) => {
+                let lo = rlo.clamp(slo, shi) - slo;
+                let hi = rhi.clamp(slo, shi) - slo;
+                tp_partial_sq(&shard, (lo, hi), comm.tp())
+            }
+        };
         let mut sq = vec![local_sq];
         group.all_reduce_sum(rank, &mut sq, Algo::Naive);
-        let norm = sq[0].sqrt();
+        if let Some((comm, _)) = tp {
+            comm.all_reduce_sum(&mut sq);
+        }
+        let norm = sq[0].max(0.0).sqrt();
         let clip = self.adam.cfg.grad_clip;
         if clip > 0.0 && norm > clip {
             let scale = clip / (norm + 1e-6);
@@ -160,7 +210,7 @@ mod tests {
                         let mut grads: Vec<f32> = (0..n)
                             .map(|i| ((i + rank * 13 + step * 7) as f32 * 0.1).sin())
                             .collect();
-                        opt.step(&g, rank, &mut params, &mut grads, 1.0);
+                        opt.step(&g, rank, &mut params, &mut grads, 1.0, None);
                     }
                     params
                 })
@@ -207,6 +257,40 @@ mod tests {
             covered += hi - lo;
         }
         assert_eq!(covered, n);
+    }
+
+    #[test]
+    fn tp_global_clip_norm_counts_replicated_once() {
+        // two TP shards, dp = 1: the clip norm must be the norm of the
+        // LOGICAL vector — each shard's private elements plus the
+        // replicated span counted once — not the per-shard norms
+        use crate::collectives::SubGroup;
+        let world = Group::new(2);
+        let sub = SubGroup::new(&world, vec![0, 1], 0);
+        let handles: Vec<_> = (0..2usize)
+            .map(|rank| {
+                let sub = sub.clone();
+                thread::spawn(move || {
+                    let comm = TpComm::new(sub, rank);
+                    let dp_group = Group::new(1);
+                    let mut opt = DistOptimizer::new(false, AdamConfig::default(), 4, 0, 1);
+                    let mut params = vec![0.0f32; 4];
+                    // unique elements differ per shard; [2..4) replicated
+                    let mut grads = if rank == 0 {
+                        vec![3.0, 0.0, 1.0, 2.0]
+                    } else {
+                        vec![0.0, 3.0, 1.0, 2.0]
+                    };
+                    opt.step(&dp_group, 0, &mut params, &mut grads, 1.0, Some((&comm, (2, 4))))
+                })
+            })
+            .collect();
+        // logical vector: [3, 0] ++ [0, 3] ++ [1, 2] -> |.|² = 23
+        let want = 23.0f32.sqrt();
+        for h in handles {
+            let norm = h.join().unwrap();
+            assert!((norm - want).abs() < 1e-4, "{norm} vs {want}");
+        }
     }
 
     #[test]

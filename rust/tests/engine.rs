@@ -1,5 +1,5 @@
 //! End-to-end tests of the real training engine (coordinator + runtime +
-//! collectives + ZeRO-1).
+//! collectives + tensor parallelism + ZeRO-1).
 //!
 //! Two tiers:
 //!
@@ -7,15 +7,21 @@
 //!   Always run: no artifacts, no PJRT.  These carry the schedule
 //!   invariants, most importantly that every parallelisation/schedule of
 //!   the same (model, data, optimizer) walks the same loss trajectory —
-//!   including interleaved 1F1B over virtual stages.
+//!   interleaved 1F1B over virtual stages AND tensor-parallel sharding
+//!   (tp = 1/2/4 equivalence, the §II.B pillar executed for real).
 //! * **artifacts** — the AOT JAX/Pallas bundles.  These skip (with a
 //!   note) when `make artifacts` has not run or no PJRT client exists.
+//!
+//! The feature-gated `tp_matrix` module (`--features tp-matrix`) sweeps a
+//! small tp × pp × dp grid so the sharded paths cannot rot behind the
+//! default tp = 1 (CI runs it).
 
 use std::path::PathBuf;
 
 use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
 use frontier_llm::optim::AdamConfig;
+use frontier_llm::perf::{builtin_tp_ar_floats_per_microbatch, builtin_tp_grad_sync_floats_per_step};
 
 /// Artifact root, or `None` (skip) when artifacts are absent.
 fn artifacts_root() -> Option<PathBuf> {
@@ -33,6 +39,7 @@ fn cfg(bundle: &str, dp: usize, m: u32, steps: u32, zero1: bool, sched: Schedule
         artifacts_root: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
         bundle: bundle.into(),
         dp,
+        tp: 1,
         schedule: sched,
         microbatches: m,
         steps,
@@ -49,6 +56,13 @@ fn cfg(bundle: &str, dp: usize, m: u32, steps: u32, zero1: bool, sched: Schedule
 
 fn run(bundle: &str, dp: usize, m: u32, steps: u32, zero1: bool, sched: ScheduleKind) -> TrainReport {
     train(&cfg(bundle, dp, m, steps, zero1, sched)).expect("training must succeed")
+}
+
+/// Like [`run`] but with a tensor-parallel degree.
+fn run_tp(bundle: &str, tp: usize, dp: usize, m: u32, steps: u32, zero1: bool, sched: ScheduleKind) -> TrainReport {
+    let mut c = cfg(bundle, dp, m, steps, zero1, sched);
+    c.tp = tp;
+    train(&c).expect("TP training must succeed")
 }
 
 fn losses(r: &TrainReport) -> Vec<f32> {
@@ -223,6 +237,209 @@ fn builtin_rejects_unaligned_interleave() {
 }
 
 // =========================================================================
+// tensor parallelism: sharded builtin stages, real per-layer all-reduces
+// =========================================================================
+
+#[test]
+fn builtin_tp_matches_dense_trajectory_20_steps() {
+    // THE tensor-parallel correctness invariant (§II.B executed): sharding
+    // every stage column/row-wise and routing per-layer all-reduces
+    // through real collectives cannot change the numerics.  tp = 1/2/4
+    // over >= 20 steps must walk the same loss trajectory within f32
+    // tolerance.
+    let dense = run("builtin:tiny-s2-mb2", 1, 4, 20, false, ScheduleKind::OneF1B);
+    let tp2 = run_tp("builtin:tiny-s2-mb2", 2, 1, 4, 20, false, ScheduleKind::OneF1B);
+    let tp4 = run_tp("builtin:tiny-s2-mb2", 4, 1, 4, 20, false, ScheduleKind::OneF1B);
+    assert_close(&losses(&dense), &losses(&tp2), 5e-3, "tp2 vs dense");
+    assert_close(&losses(&dense), &losses(&tp4), 5e-3, "tp4 vs dense");
+    // the worlds really differ: pp × dp × tp threads
+    assert_eq!(dense.world_size, 2);
+    assert_eq!(tp2.world_size, 4);
+    assert_eq!(tp4.world_size, 8);
+    // and the sharded runs really communicated
+    assert!(tp2.tp_ar_rounds > 0 && tp2.tp_ar_bytes > 0);
+}
+
+#[test]
+fn builtin_tp2_pp2_grid_matches_dense() {
+    // 2-D model grid: tp=2 × pp=2 (via v=2 chunking of 4 stages) against
+    // the dense 4-worker pipeline, >= 20 steps
+    let sched = ScheduleKind::Interleaved1F1B { v: 2 };
+    let dense = run("builtin:tiny-s4-mb2", 1, 4, 20, false, ScheduleKind::OneF1B);
+    let grid = run_tp("builtin:tiny-s4-mb2", 2, 1, 4, 20, false, sched);
+    assert_close(&losses(&dense), &losses(&grid), 5e-3, "tp2×pp2 vs dense");
+    assert_eq!(grid.world_size, 4); // 2 pipeline cells × 2 shards
+}
+
+#[test]
+fn builtin_tp_full_grid_dp_zero1() {
+    // the full 3-D stack in miniature: tp2 × pp2 × dp2 with ZeRO-1
+    let plain = run("builtin:tiny-s2-mb2", 2, 2, 10, false, ScheduleKind::OneF1B);
+    let grid = run_tp("builtin:tiny-s2-mb2", 2, 2, 2, 10, true, ScheduleKind::OneF1B);
+    assert_close(&losses(&plain), &losses(&grid), 5e-3, "tp2×dp2+zero1 vs plain");
+    assert_eq!(grid.world_size, 8);
+    assert!(grid.comm_bytes > 0);
+}
+
+#[test]
+fn builtin_tp_loss_descends() {
+    let mut c = cfg("builtin:tiny-s2-mb2", 1, 4, 8, false, ScheduleKind::OneF1B);
+    c.tp = 2;
+    c.adam.lr = 2e-2;
+    let r = train(&c).unwrap();
+    assert!(
+        r.final_loss() < r.initial_loss(),
+        "loss must descend under TP: {:?}",
+        losses(&r)
+    );
+    assert!(r.logs.iter().all(|l| l.loss.is_finite() && l.grad_norm.is_finite()));
+}
+
+#[test]
+fn builtin_tp_determinism() {
+    let a = run_tp("builtin:tiny-s2-mb2", 2, 1, 4, 5, false, ScheduleKind::OneF1B);
+    let b = run_tp("builtin:tiny-s2-mb2", 2, 1, 4, 5, false, ScheduleKind::OneF1B);
+    assert_eq!(losses(&a), losses(&b), "TP engine must be deterministic");
+}
+
+#[test]
+fn builtin_tp_checkpoint_resume() {
+    // checkpoints are keyed (global stage, tp rank): a sharded run must
+    // resume exactly — 6 straight steps == 3 + checkpoint + 3
+    let dir = std::env::temp_dir().join(format!("fllm-tp-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let straight = run_tp("builtin:tiny-s2-mb2", 2, 1, 4, 6, false, ScheduleKind::OneF1B);
+
+    let mk = |steps: u32, resume: bool| {
+        let mut c = cfg("builtin:tiny-s2-mb2", 1, 4, steps, false, ScheduleKind::OneF1B);
+        c.tp = 2;
+        c.checkpoint_dir = Some(dir.clone());
+        c.resume = resume;
+        c
+    };
+    let first = train(&mk(3, false)).unwrap();
+    let second = train(&mk(3, true)).unwrap();
+    assert_eq!(second.logs[0].step, 3);
+    let mut combined = losses(&first);
+    combined.extend(losses(&second));
+    assert_close(&losses(&straight), &combined, 1e-4, "tp resume vs straight");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn builtin_rechunk_resume_across_v() {
+    // checkpoints are keyed by GLOBAL stage, so the same bundle resumes
+    // under a different pipeline chunking: v=2 checkpoint -> v=1 resume
+    let dir = std::env::temp_dir().join(format!("fllm-rechunk-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let straight = run("builtin:tiny-s4-mb2", 1, 4, 6, false, ScheduleKind::OneF1B);
+
+    let mk = |steps: u32, resume: bool, sched: ScheduleKind| {
+        let mut c = cfg("builtin:tiny-s4-mb2", 1, 4, steps, false, sched);
+        c.checkpoint_dir = Some(dir.clone());
+        c.resume = resume;
+        c
+    };
+    let first = train(&mk(3, false, ScheduleKind::Interleaved1F1B { v: 2 })).unwrap();
+    let second = train(&mk(3, true, ScheduleKind::OneF1B)).unwrap();
+    assert_eq!(second.logs[0].step, 3);
+    let mut combined = losses(&first);
+    combined.extend(losses(&second));
+    assert_close(&losses(&straight), &combined, 2e-3, "re-chunked resume vs straight");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn builtin_tp_rejects_bad_shapes() {
+    // tp must divide hidden (16) and vocab (64)
+    let mut c = cfg("builtin:tiny-s2-mb2", 1, 4, 2, false, ScheduleKind::OneF1B);
+    c.tp = 3;
+    assert!(train(&c).is_err());
+    // artifact bundles cannot shard
+    let mut c = cfg("tiny-s2-mb2", 1, 4, 2, false, ScheduleKind::OneF1B);
+    c.tp = 2;
+    assert!(train(&c).is_err());
+    // resuming a tp=2 checkpoint with tp=1 is a shape mismatch
+    let dir = std::env::temp_dir().join(format!("fllm-tp-mismatch-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut c = cfg("builtin:tiny-s2-mb2", 1, 2, 2, false, ScheduleKind::OneF1B);
+    c.tp = 2;
+    c.checkpoint_dir = Some(dir.clone());
+    train(&c).unwrap();
+    c.tp = 1;
+    c.resume = true;
+    assert!(train(&c).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tp_comm_bytes_match_analytic() {
+    // THE "benchmark = run" contract for TP (the PR-1 treatment of the
+    // pipeline bubble, applied to §II.B): the payload bytes measured by
+    // the instrumented SubGroups must equal perf's analytic TP comm term
+    // EXACTLY — per micro-batch all-reduces plus the per-step replicated-
+    // gradient sync — for tp ∈ {2, 4, 8}.
+    let (tokens, hidden) = (2 * 8, 16); // tiny: mbs×seq, d
+    for tp in [2usize, 4, 8] {
+        let (m, steps, k) = (2u32, 3u32, 2u64);
+        let r = run_tp("builtin:tiny-s2-mb2", tp, 1, m, steps, false, ScheduleKind::OneF1B);
+        let per_mb = builtin_tp_ar_floats_per_microbatch(k, tokens, hidden);
+        let per_step_sync = builtin_tp_grad_sync_floats_per_step(k, hidden);
+        let want = 4 * steps as u64 * (m as u64 * per_mb + per_step_sync);
+        assert_eq!(
+            r.tp_ar_bytes, want,
+            "tp={tp}: measured {} vs analytic {want}",
+            r.tp_ar_bytes
+        );
+    }
+    // the fused single-stage path embeds once (one fewer all-reduce)
+    let r = run_tp("builtin:tiny-s1-mb2", 2, 1, 2, 2, false, ScheduleKind::OneF1B);
+    let want = 4 * 2 * (2 * builtin_tp_ar_floats_per_microbatch(1, tokens, hidden)
+        + builtin_tp_grad_sync_floats_per_step(1, hidden));
+    assert_eq!(r.tp_ar_bytes, want, "fused single-stage");
+    // data parallelism multiplies the moved volume by dp (per-replica
+    // micro-batches each run the full all-reduce set)
+    let r = run_tp("builtin:tiny-s2-mb2", 2, 2, 2, 2, false, ScheduleKind::OneF1B);
+    let want = 2 * 4 * 2 * (2 * builtin_tp_ar_floats_per_microbatch(2, tokens, hidden)
+        + builtin_tp_grad_sync_floats_per_step(2, hidden));
+    assert_eq!(r.tp_ar_bytes, want, "dp=2 doubles TP payload");
+}
+
+// =========================================================================
+// feature-gated tp × pp matrix (CI: `cargo test --features tp-matrix`)
+// =========================================================================
+
+#[cfg(feature = "tp-matrix")]
+mod tp_matrix {
+    use super::*;
+
+    #[test]
+    fn tp_matrix_trajectories_agree() {
+        // every point of the tp × (pp via v) × dp grid must reproduce the
+        // dense serial trajectory on the same 4-stage bundle
+        let reference = run("builtin:tiny-s4-mb2", 1, 4, 8, false, ScheduleKind::OneF1B);
+        for tp in [1usize, 2, 4] {
+            for v in [1u32, 2, 4] {
+                for dp in [1usize, 2] {
+                    let m = 4 / dp as u32; // same 4 samples/step
+                    let sched = ScheduleKind::Interleaved1F1B { v };
+                    if m % (4 / v) != 0 {
+                        continue; // interleave alignment
+                    }
+                    let r = run_tp("builtin:tiny-s4-mb2", tp, dp, m, 8, dp > 1, sched);
+                    assert_close(
+                        &losses(&reference),
+                        &losses(&r),
+                        6e-3,
+                        &format!("tp{tp} v{v} dp{dp}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// =========================================================================
 // AOT artifact bundles: skip without `make artifacts`
 // =========================================================================
 
@@ -344,6 +561,7 @@ fn checkpoint_resume_continues_trajectory() {
         artifacts_root: root.clone(),
         bundle: "tiny-s2-mb2".into(),
         dp: 2,
+        tp: 1,
         schedule: ScheduleKind::OneF1B,
         microbatches: 2,
         steps,

@@ -99,7 +99,8 @@ fn runtime_executes_stage_forward() {
 
     let tokens: Vec<i32> = (0..b * s).map(|i| (i % meta.model.vocab as usize) as i32).collect();
     let handle = bundle.stages[0].prepare_params(&rt, &params).unwrap();
-    let h = bundle.stages[0].fwd_first(&rt, &handle, &tokens, dims).unwrap();
+    let comm = frontier_llm::collectives::TpComm::solo();
+    let h = bundle.stages[0].fwd_first(&rt, &handle, &comm, &tokens, dims).unwrap();
     assert_eq!(h.len(), b * s * d);
     assert!(h.iter().all(|x| x.is_finite()));
 }

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 use std::thread;
 
-use frontier_llm::collectives::{chunk_bounds, Algo, Group};
+use frontier_llm::collectives::{chunk_bounds, Algo, Group, SubGroup};
 use frontier_llm::config::{lookup, ParallelConfig, ScheduleKind};
 use frontier_llm::data::Rng64;
 use frontier_llm::hpo::space::Point;
@@ -142,6 +142,106 @@ fn prop_chunk_bounds_partition() {
             let s0 = w[0].1 - w[0].0;
             let s1 = w[1].1 - w[1].0;
             assert!(s0 == s1 || s0 == s1 + 1);
+        }
+        // partition: sizes sum to len; cover: exactly len % n chunks carry
+        // the +1 remainder, and every size is base or base + 1
+        let total: usize = b.iter().map(|&(lo, hi)| hi - lo).sum();
+        assert_eq!(total, len);
+        let base = len / n;
+        let big = b.iter().filter(|&&(lo, hi)| hi - lo == base + 1).count();
+        assert_eq!(big, len % n);
+        assert!(b.iter().all(|&(lo, hi)| hi - lo == base || hi - lo == base + 1));
+    }
+}
+
+#[test]
+fn prop_allreduce_equals_reduce_scatter_allgather() {
+    // all_reduce_sum ≡ reduce_scatter_sum + all_gather, for BOTH Algo
+    // variants and every group size 2–8 (the ZeRO-1 <-> DDP wire-volume
+    // equivalence the paper leans on in §II.D)
+    let mut rng = Rng64::new(411);
+    for n in 2..=8usize {
+        for algo in [Algo::Naive, Algo::Ring] {
+            let len = n + rng.below(200) as usize;
+            let seed = rng.next_u64();
+            let group = Group::new(n);
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let g = group.clone();
+                    thread::spawn(move || {
+                        let mut local = Rng64::new(seed ^ (rank as u64 + 1) * 0x9E37);
+                        let data: Vec<f32> =
+                            (0..len).map(|_| local.normal() as f32).collect();
+                        let mut ar = data.clone();
+                        g.all_reduce_sum(rank, &mut ar, algo);
+                        let shard = g.reduce_scatter_sum(rank, &data);
+                        let mut rsag = vec![0.0f32; len];
+                        g.all_gather(rank, &shard, &mut rsag);
+                        (ar, rsag)
+                    })
+                })
+                .collect();
+            for (rank, h) in handles.into_iter().enumerate() {
+                let (ar, rsag) = h.join().unwrap();
+                for (i, (a, b)) in ar.iter().zip(&rsag).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-3,
+                        "n={n} {algo:?} rank={rank} i={i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_subgroup_allreduce_independence() {
+    // split a parent world into two disjoint subgroups; each must reduce
+    // exactly its members' data, concurrently, for random splits and
+    // payload lengths — and match a directly-computed per-subgroup sum
+    let mut rng = Rng64::new(733);
+    for case in 0..10 {
+        let n = 4 + rng.below(5) as usize; // 4..8
+        let split = 1 + rng.below(n as u64 - 1) as usize; // 1..n-1
+        let len = 1 + rng.below(120) as usize;
+        let rounds = 1 + rng.below(4) as usize;
+        let seed = rng.next_u64();
+        let world = Group::new(n);
+        let a = SubGroup::new(&world, (0..split).collect(), 0);
+        let b = SubGroup::new(&world, (split..n).collect(), 1);
+        let data = move |rank: usize, round: usize, i: usize| -> f32 {
+            let mut r = Rng64::new(seed ^ ((rank * 31 + round * 7 + i) as u64 + 1));
+            r.normal() as f32
+        };
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let sub = if rank < split { a.clone() } else { b.clone() };
+                thread::spawn(move || {
+                    let mut out = Vec::new();
+                    for round in 0..rounds {
+                        let mut buf: Vec<f32> =
+                            (0..len).map(|i| data(rank, round, i)).collect();
+                        sub.all_reduce_sum(rank, &mut buf);
+                        out.push(buf);
+                    }
+                    out
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for rank in 0..n {
+            let members: Vec<usize> =
+                if rank < split { (0..split).collect() } else { (split..n).collect() };
+            for round in 0..rounds {
+                for i in 0..len {
+                    let want: f32 = members.iter().map(|&m| data(m, round, i)).sum();
+                    let got = results[rank][round][i];
+                    assert!(
+                        (got - want).abs() < 1e-3,
+                        "case {case} rank {rank} round {round} i {i}: {got} vs {want}"
+                    );
+                }
+            }
         }
     }
 }
