@@ -47,11 +47,13 @@ fn main() -> anyhow::Result<()> {
             min_ratio: 0.1,
         }),
         zero1: args.flag("zero1") || dp > 1,
+        overlap_grad_sync: !args.flag("no-overlap"),
         seed: args.opt("seed", 1234).map_err(anyhow::Error::msg)?,
         log_every: args.opt("log-every", 10).map_err(anyhow::Error::msg)?,
         checkpoint_dir: args.get("checkpoint").map(Into::into),
         checkpoint_every: args.opt("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
         resume: args.flag("resume"),
+        ..Default::default()
     };
 
     println!(
@@ -85,6 +87,14 @@ fn main() -> anyhow::Result<()> {
     println!("mean step time    : {:.3} s", report.mean_step_time_s);
     println!("throughput        : {:.0} tokens/s", report.tokens_per_sec);
     println!("collective traffic: {:.1} MB", report.comm_bytes as f64 / 1e6);
+    if report.dp_sync_raw_s() > 0.0 {
+        println!(
+            "dp sync           : {:.1} ms raw, {:.1} ms exposed ({:.0}% overlapped)",
+            report.dp_sync_raw_s() * 1e3,
+            report.dp_sync_exposed_s * 1e3,
+            report.dp_overlap_fraction() * 100.0
+        );
+    }
     println!("loss              : {first:.4} -> {tail_mean:.4} (tail-10 mean)");
     println!("loss curve        : {out}");
     assert!(

@@ -4,7 +4,16 @@
 //! essentials: warmup, repeated timed runs, mean/min/σ reporting, and a
 //! `row!`-style table printer so every bench regenerates its paper
 //! table/figure alongside the timing.
+//!
+//! Every [`bench`] call also registers its timing; [`write_report`]
+//! (called at the end of each bench main) merges the registered
+//! sections into the machine-readable `BENCH_engine.json` at the repo
+//! root (override the path with `BENCH_ENGINE_JSON`), preserving
+//! sections written by other benches — the PR-over-PR perf trajectory
+//! record.
 
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 /// Timing summary of one benched closure.
@@ -57,10 +66,69 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Timin
         fmt_duration(t.min_s),
         fmt_duration(t.stddev_s)
     );
+    registry().lock().unwrap().push((name.to_string(), t));
     t
 }
 
 /// Section header shared by all paper benches.
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+fn registry() -> &'static Mutex<Vec<(String, Timing)>> {
+    static REGISTRY: OnceLock<Mutex<Vec<(String, Timing)>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Default report path: `<repo root>/BENCH_engine.json` (the bench crate
+/// lives in `rust/`), overridable with `BENCH_ENGINE_JSON`.
+#[allow(dead_code)]
+fn report_path() -> String {
+    std::env::var("BENCH_ENGINE_JSON")
+        .unwrap_or_else(|_| format!("{}/../BENCH_engine.json", env!("CARGO_MANIFEST_DIR")))
+}
+
+/// Merge this process's registered sections into `BENCH_engine.json`:
+/// per-section mean/min ns-per-iter, keys sorted, sections from other
+/// benches preserved.  Call once at the end of each bench `main`.
+#[allow(dead_code)]
+pub fn write_report() {
+    use frontier_llm::util::json::{escape, Json};
+
+    let path = report_path();
+    // existing sections survive (fig benches + engine_hotpath compose
+    // one file); unparseable/absent files start fresh
+    let mut sections: BTreeMap<String, (f64, f64, u32)> = BTreeMap::new();
+    if let Ok(src) = std::fs::read_to_string(&path) {
+        if let Ok(Json::Obj(top)) = Json::parse(&src) {
+            if let Some(Json::Obj(benches)) = top.get("benches") {
+                for (name, entry) in benches {
+                    let mean = entry.f64_field("mean_ns").unwrap_or(0.0);
+                    let min = entry.f64_field("min_ns").unwrap_or(0.0);
+                    let iters = entry.u64_field("iters").unwrap_or(0) as u32;
+                    sections.insert(name.clone(), (mean, min, iters));
+                }
+            }
+        }
+    }
+    for (name, t) in registry().lock().unwrap().iter() {
+        sections.insert(name.clone(), (t.mean_s * 1e9, t.min_s * 1e9, t.iters));
+    }
+    let mut out = String::from("{\n  \"benches\": {\n");
+    let mut first = true;
+    for (name, (mean_ns, min_ns, iters)) in &sections {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!(
+            "    {}: {{\"mean_ns\": {mean_ns:.1}, \"min_ns\": {min_ns:.1}, \"iters\": {iters}}}",
+            escape(name)
+        ));
+    }
+    out.push_str("\n  }\n}\n");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("\n[bench report: {} sections -> {path}]", sections.len()),
+        Err(e) => eprintln!("\n[bench report: failed to write {path}: {e}]"),
+    }
 }

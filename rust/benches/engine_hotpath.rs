@@ -1,13 +1,21 @@
 //! Bench: the REAL execution engine's hot paths (EXPERIMENTS.md §Perf).
 //!
 //! Times the pieces that sit on the training step's critical path:
-//! collectives (ring vs naive all-reduce at gradient-buffer sizes), the
-//! sharded Adam step, schedule generation, and a short end-to-end
-//! training run over the AOT artifacts.
+//! the builtin blocked matmul kernels against the naive pre-PR loops
+//! (the ≥3× kernel contract at d=256), collectives (ring vs naive vs
+//! nonblocking-bucketed all-reduce at gradient-buffer sizes), the
+//! sharded Adam step, schedule generation, overlapped-vs-sequential DP
+//! gradient sync through the engine, and a short end-to-end training
+//! run over the AOT artifacts.
+//!
+//! Every section lands in `BENCH_engine.json` (via `bench_util`), so
+//! the kernel baseline (`kernel::*_naive`) and the blocked numbers are
+//! recorded side by side each run.  Set `HOTPATH_SMOKE=1` for the CI
+//! smoke: small collective/engine sizes, few iterations.
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use std::sync::Arc;
 use std::thread;
@@ -16,7 +24,8 @@ use frontier_llm::collectives::{Algo, Group};
 use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train_with_bundle, EngineConfig};
 use frontier_llm::optim::{clip_grad_norm, Adam, AdamConfig};
-use frontier_llm::runtime::{Bundle, Runtime};
+use frontier_llm::runtime::kernels;
+use frontier_llm::runtime::{Bundle, BuiltinSpec, BuiltinStage, Runtime};
 use frontier_llm::schedule;
 
 fn bench_allreduce(n_ranks: usize, len: usize, algo: Algo, label: &str) {
@@ -39,22 +48,126 @@ fn bench_allreduce(n_ranks: usize, len: usize, algo: Algo, label: &str) {
     });
 }
 
-fn main() {
-    header("collectives: 4-rank all-reduce of a 4M-element grad buffer");
-    bench_allreduce(4, 4 << 20, Algo::Ring, "collectives::ring_4x16MB");
-    bench_allreduce(4, 4 << 20, Algo::Naive, "collectives::naive_4x16MB");
-    bench_allreduce(2, 1 << 20, Algo::Ring, "collectives::ring_2x4MB");
+/// Nonblocking bucketed all-reduce: every rank launches `n_buckets`
+/// then drains them — the engine's overlapped grad-sync primitive.
+fn bench_bucketed(n_ranks: usize, len: usize, n_buckets: u64, label: &str) {
+    let group = Group::new(n_ranks);
+    let mut round = 0u64;
+    bench(label, 2, 20, || {
+        round += 1;
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let per = len / n_buckets as usize;
+                    let started: Vec<_> = (0..n_buckets)
+                        .map(|b| g.start_all_reduce(rank, (round << 8) | b, vec![1.0f32; per]))
+                        .collect();
+                    for h in started {
+                        std::hint::black_box(h.wait()[0]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
 
-    header("optimizer: Adam step + grad clip over 4M params");
-    let n = 4 << 20;
+fn fill(seed: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| ((seed * 31 + i) as f32 * 0.05).sin()).collect()
+}
+
+/// THE kernel contract bench: one linear layer's fwd + bwd worth of
+/// matmuls (y = xW, dW = xᵀdy, dx = dyWᵀ) at d≥256, blocked vs the
+/// pre-PR naive loops.  `BENCH_engine.json` records both sections, so
+/// the ≥3× acceptance check is self-contained in one run.
+fn bench_linear_kernels(iters: u32) {
+    let (t, d) = (256usize, 256usize);
+    header("builtin kernels: linear fwd+bwd at t=256, d=256 (blocked vs naive baseline)");
+    let x = fill(1, t * d);
+    let w = fill(2, d * d);
+    let dy = fill(3, t * d);
+    let mut h = vec![0.0f32; t * d];
+    let mut gw = vec![0.0f32; d * d];
+    let mut dx = vec![0.0f32; t * d];
+
+    let naive = bench("kernel::linear_fwdbwd_d256_naive", 1, iters, || {
+        kernels::naive::matmul_acc(&mut h, &x, &w, t, d, d);
+        kernels::naive::matmul_at_acc(&mut gw, &x, &dy, t, d, d);
+        kernels::naive::matmul_bt_acc(&mut dx, &dy, &w, t, d, d);
+        std::hint::black_box((h[0], gw[0], dx[0]));
+    });
+    h.iter_mut().chain(gw.iter_mut()).chain(dx.iter_mut()).for_each(|v| *v = 0.0);
+    let blocked = bench("kernel::linear_fwdbwd_d256_blocked", 1, iters, || {
+        kernels::matmul_acc(&mut h, &x, &w, t, d, d);
+        kernels::matmul_at_acc(&mut gw, &x, &dy, t, d, d);
+        kernels::matmul_bt_acc(&mut dx, &dy, &w, t, d, d);
+        std::hint::black_box((h[0], gw[0], dx[0]));
+    });
+    println!(
+        "[kernel speedup at d=256: {:.2}x (contract: >= 3x)]",
+        naive.mean_s / blocked.mean_s
+    );
+}
+
+/// The same contract through the real stage entry points: a pure MLP
+/// block (no embed/head) of a d=256 builtin model, fwd + bwd.
+fn bench_builtin_block(iters: u32) {
+    header("builtin stage: block fwd+bwd through the stage contract (d=256)");
+    let spec = BuiltinSpec {
+        name: "bench".into(),
+        vocab: 512,
+        hidden: 256,
+        seq: 64,
+        mbs: 4,
+        n_stages: 3,
+    };
+    let st = BuiltinStage::dense(spec, 1); // middle stage: pure block
+    let comm = frontier_llm::collectives::TpComm::solo();
+    let params = st.init(7);
+    let t = 4 * 64;
+    let x = fill(4, t * 256);
+    let gy = fill(5, t * 256);
+    bench("builtin::block_fwd_d256", 1, iters, || {
+        std::hint::black_box(st.fwd_mid(&comm, &params, &x));
+    });
+    bench("builtin::block_bwd_d256", 1, iters, || {
+        std::hint::black_box(st.bwd_mid(&comm, &params, &x, &gy));
+    });
+}
+
+fn main() {
+    // smoke = small collective/optimizer sizes for the CI hotpath check;
+    // size-dependent section names carry the actual size so smoke runs
+    // never masquerade as full-size baselines in BENCH_engine.json
+    let smoke = std::env::var("HOTPATH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let ar_len = if smoke { 1 << 16 } else { 4 << 20 };
+    let sz = if smoke { "256KB" } else { "16MB" };
+    let sz4 = if smoke { "64KB" } else { "4MB" };
+    let kern_iters = if smoke { 5 } else { 20 };
+
+    bench_linear_kernels(kern_iters);
+    bench_builtin_block(kern_iters);
+
+    header("collectives: 4-rank all-reduce of a grad buffer (blocking + bucketed)");
+    bench_allreduce(4, ar_len, Algo::Ring, &format!("collectives::ring_4x{sz}"));
+    bench_allreduce(4, ar_len, Algo::Naive, &format!("collectives::naive_4x{sz}"));
+    bench_allreduce(2, ar_len / 4, Algo::Ring, &format!("collectives::ring_2x{sz4}"));
+    bench_bucketed(4, ar_len, 4, &format!("collectives::nb_bucketed_4x{sz}_b4"));
+
+    header("optimizer: Adam step + grad clip");
+    let n = if smoke { 1 << 16 } else { 4 << 20 };
+    let nm = if smoke { "64K" } else { "4M" };
     let mut params = vec![0.1f32; n];
     let mut grads = vec![0.01f32; n];
     let mut adam = Adam::new(AdamConfig::default(), n);
-    bench("optim::adam_step_4M", 2, 20, || {
+    bench(&format!("optim::adam_step_{nm}"), 2, 20, || {
         adam.step(&mut params, &grads, 1.0);
         std::hint::black_box(params[0]);
     });
-    bench("optim::grad_clip_4M", 2, 50, || {
+    bench(&format!("optim::grad_clip_{nm}"), 2, 50, || {
         std::hint::black_box(clip_grad_norm(&mut grads, 1e9));
     });
 
@@ -92,6 +205,26 @@ fn main() {
         });
     }
 
+    header("end-to-end engine: DP grad sync, overlapped vs sequential (dp=2, v=2)");
+    for (label, overlap) in [
+        ("engine::train_dp2_overlap", true),
+        ("engine::train_dp2_sequential", false),
+    ] {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s4-mb2".into(),
+            dp: 2,
+            schedule: ScheduleKind::Interleaved1F1B { v: 2 },
+            microbatches: 4,
+            steps: 3,
+            overlap_grad_sync: overlap,
+            grad_bucket_floats: 256,
+            ..Default::default()
+        };
+        bench(label, 1, 5, || {
+            std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
+        });
+    }
+
     header("end-to-end engine: tensor-parallel builtin (tp2 x pp4)");
     {
         let cfg = EngineConfig {
@@ -110,31 +243,28 @@ fn main() {
 
     header("end-to-end engine: tiny GPT artifacts, 2-stage pipeline x dp2");
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let rt = match Runtime::cpu() {
-        Ok(rt) => rt,
-        Err(_) => {
-            println!("(no PJRT client in this build — artifact engine bench skipped)");
-            return;
+    match Runtime::cpu() {
+        Ok(rt) if root.join("tiny-s2-mb2/meta.json").exists() => {
+            let bundle = Arc::new(Bundle::load(&rt, root.join("tiny-s2-mb2")).unwrap());
+            let cfg = EngineConfig {
+                artifacts_root: root,
+                bundle: "tiny-s2-mb2".into(),
+                dp: 2,
+                schedule: ScheduleKind::OneF1B,
+                microbatches: 4,
+                steps: 3,
+                zero1: true,
+                ..Default::default()
+            };
+            bench("engine::train_3steps_tiny_pp2dp2", 1, 5, || {
+                std::hint::black_box(
+                    train_with_bundle(&cfg, rt.clone(), bundle.clone()).unwrap(),
+                );
+            });
         }
-    };
-    if root.join("tiny-s2-mb2/meta.json").exists() {
-        let bundle = Arc::new(Bundle::load(&rt, root.join("tiny-s2-mb2")).unwrap());
-        let cfg = EngineConfig {
-            artifacts_root: root,
-            bundle: "tiny-s2-mb2".into(),
-            dp: 2,
-            schedule: ScheduleKind::OneF1B,
-            microbatches: 4,
-            steps: 3,
-            zero1: true,
-            ..Default::default()
-        };
-        bench("engine::train_3steps_tiny_pp2dp2", 1, 5, || {
-            std::hint::black_box(
-                train_with_bundle(&cfg, rt.clone(), bundle.clone()).unwrap(),
-            );
-        });
-    } else {
-        println!("(artifacts missing — run `make artifacts` to include the engine bench)");
+        Ok(_) => println!("(artifacts missing — run `make artifacts` to include the engine bench)"),
+        Err(_) => println!("(no PJRT client in this build — artifact engine bench skipped)"),
     }
+
+    write_report();
 }

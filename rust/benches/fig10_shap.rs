@@ -6,7 +6,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::hpo::{self, shap, surrogate::Gp, SearchConfig};
 use frontier_llm::perf::PerfModel;
@@ -39,4 +39,6 @@ fn main() {
     bench("fig10::gp_fit_64pts", 2, 50, || {
         std::hint::black_box(Gp::fit(&x[..64], &y[..64]));
     });
+
+    write_report();
 }

@@ -6,7 +6,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::config::fig11_recipes;
 use frontier_llm::perf::PerfModel;
@@ -46,4 +46,6 @@ fn main() {
     bench("fig11::eval_1t_recipe", 10, 1000, || {
         std::hint::black_box(perf.evaluate(&r.model, &r.parallel).unwrap());
     });
+
+    write_report();
 }

@@ -5,7 +5,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::config::{recipe_175b, recipe_1t};
 use frontier_llm::metrics::weak_scaling_efficiency;
@@ -46,4 +46,6 @@ fn main() {
     bench("fig12::samples_per_sec_1t_3072gpu", 10, 1000, || {
         std::hint::black_box(perf.samples_per_sec(&r.model, &cfg).unwrap());
     });
+
+    write_report();
 }

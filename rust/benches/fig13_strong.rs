@@ -7,7 +7,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::config::{recipe_175b, recipe_1t};
 use frontier_llm::metrics::strong_scaling_efficiency;
@@ -64,4 +64,6 @@ fn main() {
     bench("fig13::samples_per_sec_175b_1024gpu", 10, 1000, || {
         std::hint::black_box(perf.samples_per_sec(&r.model, &cfg).unwrap());
     });
+
+    write_report();
 }

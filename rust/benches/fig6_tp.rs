@@ -5,7 +5,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::config::{lookup, ParallelConfig};
 use frontier_llm::perf::{sim, PerfModel};
@@ -38,4 +38,6 @@ fn main() {
     bench("fig6::des_eval", 2, 50, || {
         std::hint::black_box(sim::simulate(&perf, &model, &cfg).unwrap());
     });
+
+    write_report();
 }

@@ -5,7 +5,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::config::{lookup, ParallelConfig};
 use frontier_llm::perf::PerfModel;
@@ -45,4 +45,6 @@ fn main() {
     bench("fig7::eval_1t_gbs1600", 10, 500, || {
         std::hint::black_box(perf.evaluate(&model, &cfg).unwrap());
     });
+
+    write_report();
 }

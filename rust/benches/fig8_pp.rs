@@ -9,7 +9,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::config::{lookup, ParallelConfig};
 use frontier_llm::perf::{sim, PerfModel};
@@ -91,4 +91,6 @@ fn main() {
     bench("fig8::des_interleaved_pp8_v4_m512", 2, 20, || {
         std::hint::black_box(sim::simulate(&perf, &model, &icfg).unwrap());
     });
+
+    write_report();
 }

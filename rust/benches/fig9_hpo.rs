@@ -6,7 +6,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::hpo::{self, SearchConfig};
 use frontier_llm::perf::PerfModel;
@@ -55,4 +55,6 @@ fn main() {
         let cfg = SearchConfig { n_evals: 64, n_init: 16, n_candidates: 128, seed: 3 };
         std::hint::black_box(hpo::run_search(&perf, &cfg));
     });
+
+    write_report();
 }

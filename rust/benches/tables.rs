@@ -7,7 +7,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header};
+use bench_util::{bench, header, write_report};
 
 use frontier_llm::config::{fig11_recipes, paper_zoo};
 use frontier_llm::mem;
@@ -67,4 +67,6 @@ fn main() {
             std::hint::black_box(mem::per_gpu(&r.model, &r.parallel));
         }
     });
+
+    write_report();
 }

@@ -7,6 +7,14 @@
 //! (reduce-scatter + all-gather phases over per-neighbour mailboxes) for
 //! the large gradient buffers.  Byte counters feed `metrics`.
 //!
+//! Every mailbox hop and bucket deposit moves a [`Payload`] `Arc`
+//! (zero-copy; fan-out shares one buffer, the single-consumer p2p case
+//! recovers the owned `Vec` for free), and the engine's
+//! backward-overlapped gradient sync rides the **nonblocking bucketed
+//! all-reduce** ([`Group::start_all_reduce`] → [`ReduceHandle::wait`]):
+//! deterministic rank-order reduction, computed once by the round's
+//! completing depositor so the cost hides under backward compute.
+//!
 //! Correctness contracts (tested below + proptest in `rust/tests/props.rs`):
 //! * `ring` and `naive` all-reduce produce identical sums (up to fp
 //!   association order, which we make deterministic by rank order);
@@ -26,9 +34,15 @@
 //! perf cross-validation tests compare against `perf`'s analytic comm
 //! term.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Zero-copy message payload: every mailbox hop and nonblocking-bucket
+/// deposit moves an `Arc`, never a deep copy.  Fan-out paths (a deposit
+/// read by all ranks) share one buffer; the common single-consumer p2p
+/// case recovers the owned `Vec` without copying via `Arc::try_unwrap`.
+pub type Payload = Arc<Vec<f32>>;
 
 /// All-reduce algorithm selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,7 +75,7 @@ pub const TAG_ANY: u64 = 0;
 const TAG_SUBGROUP: u64 = 3 << 48;
 
 struct Mailbox {
-    queue: Mutex<VecDeque<(u64, Vec<f32>)>>,
+    queue: Mutex<VecDeque<(u64, Payload)>>,
     cv: Condvar,
 }
 
@@ -70,14 +84,14 @@ impl Mailbox {
         Self { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() }
     }
 
-    fn send(&self, tag: u64, data: Vec<f32>) {
+    fn send(&self, tag: u64, data: Payload) {
         self.queue.lock().unwrap().push_back((tag, data));
         // single consumer per (from, to) mailbox
         self.cv.notify_one();
     }
 
     /// Pop the oldest message whose tag matches (FIFO within a tag).
-    fn recv(&self, tag: u64) -> Vec<f32> {
+    fn recv(&self, tag: u64) -> Payload {
         let mut q = self.queue.lock().unwrap();
         loop {
             if let Some(pos) = q.iter().position(|(t, _)| *t == tag) {
@@ -88,6 +102,18 @@ impl Mailbox {
     }
 }
 
+/// One in-flight nonblocking bucket round (see [`Group::start_all_reduce`]).
+#[derive(Default)]
+struct NbRound {
+    deposits: Vec<Option<Payload>>,
+    arrived: usize,
+    /// Rank-order sum, produced by whichever rank's deposit completed
+    /// the round (so the reduction cost lands under that rank's compute
+    /// stream, not in anyone's `wait`).
+    result: Option<Payload>,
+    taken: usize,
+}
+
 /// A communicator over `n` ranks (one per worker thread).
 pub struct Group {
     n: usize,
@@ -95,8 +121,20 @@ pub struct Group {
     cv: Condvar,
     /// `mail[to][from]`: FIFO channel from `from` to `to`.
     mail: Vec<Vec<Mailbox>>,
+    /// In-flight nonblocking bucket rounds, addressed by caller tag.
+    nb: Mutex<HashMap<u64, NbRound>>,
+    nb_cv: Condvar,
     pub bytes_moved: AtomicU64,
     pub rounds: AtomicU64,
+    /// Nonblocking bucket rounds completed.
+    pub nb_rounds: AtomicU64,
+    /// Engine-maintained timing of nonblocking grad-sync work *hidden*
+    /// under the backward pass (nanoseconds; the launch site decides
+    /// the classification — see `coordinator::worker`).
+    pub nb_hidden_ns: AtomicU64,
+    /// Engine-maintained timing of *exposed* nonblocking grad-sync work
+    /// (post-backward launches plus drain waits), nanoseconds.
+    pub nb_exposed_ns: AtomicU64,
 }
 
 impl Group {
@@ -113,8 +151,13 @@ impl Group {
             }),
             cv: Condvar::new(),
             mail,
+            nb: Mutex::new(HashMap::new()),
+            nb_cv: Condvar::new(),
             bytes_moved: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
+            nb_rounds: AtomicU64::new(0),
+            nb_hidden_ns: AtomicU64::new(0),
+            nb_exposed_ns: AtomicU64::new(0),
         })
     }
 
@@ -182,14 +225,32 @@ impl Group {
     /// Tagged p2p send: the virtual-stage engine multiplexes `v` chunk
     /// channels over one (from, to) pair by tagging each message with
     /// (direction, chunk, micro-batch); FIFO order holds within a tag.
+    /// The owned `Vec` is wrapped in a [`Payload`] `Arc` — no copy.
     pub fn send_tagged(&self, from: usize, to: usize, tag: u64, data: Vec<f32>) {
+        self.send_shared(from, to, tag, Arc::new(data));
+    }
+
+    /// Zero-copy tagged send of an already-shared payload (fan-out
+    /// senders enqueue `Arc` clones of one buffer).
+    pub fn send_shared(&self, from: usize, to: usize, tag: u64, data: Payload) {
         assert!(from < self.n && to < self.n && from != to);
         self.bytes_moved.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
         self.mail[to][from].send(tag, data);
     }
 
     /// Blocking receive of the oldest message from `from` carrying `tag`.
+    /// Recovers the owned `Vec` without a copy when this receiver is the
+    /// only holder (the p2p case); shared fan-out payloads are cloned.
     pub fn recv_tagged(&self, to: usize, from: usize, tag: u64) -> Vec<f32> {
+        match Arc::try_unwrap(self.recv_shared(to, from, tag)) {
+            Ok(v) => v,
+            Err(shared) => shared.as_slice().to_vec(),
+        }
+    }
+
+    /// Blocking receive returning the shared payload itself (read-only
+    /// consumers — e.g. the ring reduce step — skip even the unwrap).
+    pub fn recv_shared(&self, to: usize, from: usize, tag: u64) -> Payload {
         assert!(from < self.n && to < self.n && from != to);
         self.mail[to][from].recv(tag)
     }
@@ -235,10 +296,10 @@ impl Group {
             let recv_idx = (rank + n - step - 1) % n;
             let (s0, s1) = bounds[send_idx];
             self.send(rank, right, buf[s0..s1].to_vec());
-            let incoming = self.recv(rank, left);
+            let incoming = self.recv_shared(rank, left, TAG_ANY);
             let (r0, r1) = bounds[recv_idx];
             debug_assert_eq!(incoming.len(), r1 - r0);
-            for (x, inc) in buf[r0..r1].iter_mut().zip(incoming) {
+            for (x, &inc) in buf[r0..r1].iter_mut().zip(incoming.iter()) {
                 *x += inc;
             }
         }
@@ -248,7 +309,7 @@ impl Group {
             let recv_idx = (rank + n - step) % n;
             let (s0, s1) = bounds[send_idx];
             self.send(rank, right, buf[s0..s1].to_vec());
-            let incoming = self.recv(rank, left);
+            let incoming = self.recv_shared(rank, left, TAG_ANY);
             let (r0, r1) = bounds[recv_idx];
             buf[r0..r1].copy_from_slice(&incoming);
         }
@@ -298,6 +359,118 @@ impl Group {
         let snap = self.exchange(rank, payload);
         if rank != root {
             buf.copy_from_slice(&snap[root]);
+        }
+    }
+
+    /// Nonblocking bucketed all-reduce, deposit phase.  Returns
+    /// immediately; redeem the sum with [`ReduceHandle::wait`].
+    ///
+    /// Semantics and contracts:
+    ///
+    /// * **Deterministic** — the result is the rank-order sum (identical
+    ///   to [`Algo::Naive`] blocking all-reduce, bit for bit), however
+    ///   deposits interleave in time.  This is what lets the engine
+    ///   overlap gradient sync with backward compute without perturbing
+    ///   the loss trajectory.
+    /// * **Zero-copy** — deposits are [`Payload`] `Arc`s; the reduction
+    ///   reads every rank's buffer in place and is computed exactly once,
+    ///   by whichever rank's deposit completes the round (so its cost
+    ///   hides under that rank's compute stream; everyone else's `wait`
+    ///   just takes the shared result).
+    /// * **Tags are single-use** — concurrent buckets are addressed by
+    ///   caller tag, and a tag may not be reused until every rank has
+    ///   redeemed its handle (the engine folds `(step, chunk, bucket)`
+    ///   into the tag; violations panic as double deposits).
+    pub fn start_all_reduce(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        data: Vec<f32>,
+    ) -> ReduceHandle {
+        assert!(rank < self.n);
+        let len = data.len();
+        if self.n == 1 {
+            return ReduceHandle { group: self.clone(), tag, immediate: Some(data) };
+        }
+        self.bytes_moved.fetch_add(4 * len as u64, Ordering::Relaxed);
+        let mut nb = self.nb.lock().unwrap();
+        let round = nb.entry(tag).or_insert_with(|| NbRound {
+            deposits: vec![None; self.n],
+            ..Default::default()
+        });
+        assert!(round.result.is_none(), "bucket tag {tag:#x} reused before fully drained");
+        assert!(round.deposits[rank].is_none(), "rank {rank} double deposit on bucket {tag:#x}");
+        round.deposits[rank] = Some(Arc::new(data));
+        round.arrived += 1;
+        if round.arrived == self.n {
+            // this deposit completes the round: reduce NOW, outside the
+            // lock, so concurrent buckets keep flowing and the cost lands
+            // on this rank's timeline instead of in anyone's wait()
+            let deps: Vec<Payload> = round
+                .deposits
+                .iter()
+                .map(|d| d.as_ref().expect("deposited").clone())
+                .collect();
+            drop(nb);
+            let mut sum = vec![0.0f32; len];
+            for contrib in &deps {
+                debug_assert_eq!(contrib.len(), len);
+                for (x, &c) in sum.iter_mut().zip(contrib.iter()) {
+                    *x += c;
+                }
+            }
+            let mut nb = self.nb.lock().unwrap();
+            nb.get_mut(&tag).expect("in-flight round").result = Some(Arc::new(sum));
+            self.nb_rounds.fetch_add(1, Ordering::Relaxed);
+            self.nb_cv.notify_all();
+        }
+        ReduceHandle { group: self.clone(), tag, immediate: None }
+    }
+}
+
+/// Handle on one in-flight nonblocking bucket round (see
+/// [`Group::start_all_reduce`]).
+#[must_use = "an unredeemed bucket deadlocks the round's other ranks"]
+pub struct ReduceHandle {
+    group: Arc<Group>,
+    tag: u64,
+    /// Single-rank groups reduce to the deposit itself.
+    immediate: Option<Vec<f32>>,
+}
+
+impl ReduceHandle {
+    /// Block until every rank has deposited, then return an owned copy
+    /// of the rank-order sum.  The last rank to redeem recovers the
+    /// shared buffer without a copy; prefer [`ReduceHandle::wait_shared`]
+    /// when a borrow suffices (the engine's drain copies straight out of
+    /// the shared sum into its gradient buffer — one copy total).
+    pub fn wait(self) -> Vec<f32> {
+        match Arc::try_unwrap(self.wait_shared()) {
+            Ok(sum) => sum,
+            Err(shared) => shared.as_slice().to_vec(),
+        }
+    }
+
+    /// Like [`ReduceHandle::wait`] but zero-copy: returns the shared
+    /// rank-order sum itself.  Redeeming also retires the round once
+    /// every rank has done so (freeing the tag for reuse).
+    pub fn wait_shared(self) -> Payload {
+        if let Some(data) = self.immediate {
+            return Arc::new(data);
+        }
+        let n = self.group.n;
+        let mut nb = self.group.nb.lock().unwrap();
+        loop {
+            let round = nb.get_mut(&self.tag).expect("bucket round vanished");
+            if round.result.is_some() {
+                round.taken += 1;
+                let result = round.result.as_ref().expect("result set").clone();
+                if round.taken == n {
+                    nb.remove(&self.tag);
+                }
+                return result;
+            }
+            nb = self.group.nb_cv.wait(nb).unwrap();
         }
     }
 }
@@ -387,10 +560,10 @@ impl SubGroup {
             let recv_idx = (i + n - step - 1) % n;
             let (s0, s1) = bounds[send_idx];
             self.parent.send_tagged(parent_rank, right, self.tag, buf[s0..s1].to_vec());
-            let incoming = self.parent.recv_tagged(parent_rank, left, self.tag);
+            let incoming = self.parent.recv_shared(parent_rank, left, self.tag);
             let (r0, r1) = bounds[recv_idx];
             debug_assert_eq!(incoming.len(), r1 - r0);
-            for (x, inc) in buf[r0..r1].iter_mut().zip(incoming) {
+            for (x, &inc) in buf[r0..r1].iter_mut().zip(incoming.iter()) {
                 *x = fold(*x, inc);
             }
         }
@@ -399,7 +572,7 @@ impl SubGroup {
             let recv_idx = (i + n - step) % n;
             let (s0, s1) = bounds[send_idx];
             self.parent.send_tagged(parent_rank, right, self.tag, buf[s0..s1].to_vec());
-            let incoming = self.parent.recv_tagged(parent_rank, left, self.tag);
+            let incoming = self.parent.recv_shared(parent_rank, left, self.tag);
             let (r0, r1) = bounds[recv_idx];
             buf[r0..r1].copy_from_slice(&incoming);
         }
@@ -762,5 +935,85 @@ mod tests {
                 assert!(g.bytes_moved.load(Ordering::Relaxed) > 0);
             }
         });
+    }
+
+    #[test]
+    fn shared_payload_fanout_no_reorder() {
+        // one Arc payload sent to two receivers; each sees the same bytes
+        run_ranks(3, |rank, g| {
+            if rank == 0 {
+                let payload: Payload = Arc::new(vec![1.0, 2.0, 3.0]);
+                g.send_shared(0, 1, 5, payload.clone());
+                g.send_shared(0, 2, 5, payload);
+            } else {
+                assert_eq!(g.recv_tagged(rank, 0, 5), vec![1.0, 2.0, 3.0]);
+            }
+        });
+    }
+
+    #[test]
+    fn nonblocking_all_reduce_matches_blocking() {
+        // rank-order sum, bit-identical to Algo::Naive
+        for n in [1usize, 2, 3, 4] {
+            let len = 37;
+            let mut want = vec![0.0f32; len];
+            for r in 0..n {
+                for (x, v) in want.iter_mut().zip(test_data(r, len)) {
+                    *x += v;
+                }
+            }
+            run_ranks(n, move |rank, g| {
+                let h = g.start_all_reduce(rank, 0xB0, test_data(rank, len));
+                assert_eq!(h.wait(), want, "n={n} rank={rank}");
+            });
+        }
+    }
+
+    #[test]
+    fn nonblocking_buckets_interleave() {
+        // several buckets in flight at once, deposited in different
+        // orders per rank, must each reduce independently
+        let n = 4;
+        run_ranks(n, move |rank, g| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|b| {
+                    // ranks deposit buckets in different orders
+                    let bucket = if rank % 2 == 0 { b } else { 3 - b };
+                    let data = vec![(rank + bucket as usize) as f32; 8];
+                    (bucket, g.start_all_reduce(rank, bucket, data))
+                })
+                .collect();
+            for (bucket, h) in handles {
+                let want = (0..n).map(|r| (r + bucket as usize) as f32).sum::<f32>();
+                assert!(h.wait().iter().all(|&x| x == want), "bucket {bucket}");
+            }
+        });
+    }
+
+    #[test]
+    fn nonblocking_round_counter_and_tag_reuse() {
+        let n = 2;
+        let group = Group::new(n);
+        // two sequential rounds on the same tag: legal once fully drained
+        for round in 0..2 {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let g = group.clone();
+                    thread::spawn(move || g.start_all_reduce(rank, 7, vec![rank as f32; 4]).wait())
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), vec![1.0; 4], "round {round}");
+            }
+        }
+        assert_eq!(group.nb_rounds.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn nonblocking_single_rank_is_identity() {
+        let g = Group::new(1);
+        let h = g.start_all_reduce(0, 1, vec![4.0, 5.0]);
+        assert_eq!(h.wait(), vec![4.0, 5.0]);
+        assert_eq!(g.nb_rounds.load(Ordering::Relaxed), 0);
     }
 }

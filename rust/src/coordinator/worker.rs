@@ -17,13 +17,29 @@
 //! *corresponding* tp ranks of adjacent cells — every shard holds the
 //! full activation after its row-parallel all-reduce, so the boundary
 //! protocol is unchanged from the dense engine.
+//!
+//! **Backward-overlapped gradient sync** (the paper's §IV DeepSpeed
+//! lever, executed for real): each chunk counts down its micro-batch
+//! backwards; the moment the last one completes, the chunk's gradient
+//! is finalised (1/m scale + TP replicated-span sync) and split into
+//! nonblocking all-reduce buckets on the DP group, which reduce under
+//! whatever backward compute is still in flight.  The handles drain
+//! just before the optimizer step.  Because the bucketed all-reduce
+//! sums in rank order no matter when deposits land, the overlapped and
+//! sequential paths produce **bit-identical** loss trajectories — the
+//! equivalence the overlap tests pin.  Launch-site timing classifies
+//! every second of sync work as hidden (mid-stream) or exposed
+//! (post-stream / drain); `TrainReport` surfaces the two and `perf`
+//! prices its DP comm term from the same fraction.
 
 use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::collectives::{Group, SubGroup, TpComm};
+use crate::collectives::{Group, ReduceHandle, SubGroup, TpComm};
 use crate::data::BatchStream;
 use crate::runtime::{Bundle, ParamsHandle, Runtime, StageExecutables};
 use crate::schedule::{Op, Schedule};
@@ -62,6 +78,96 @@ const TAG_BWD: u64 = 2;
 
 fn tag(direction: u64, chunk: usize, mb: usize) -> u64 {
     (direction << 48) | ((chunk as u64) << 24) | mb as u64
+}
+
+/// In-flight DP gradient buckets of one chunk: `(span lo, span hi,
+/// nonblocking all-reduce handle)`.
+type ChunkBuckets = Vec<(usize, usize, ReduceHandle)>;
+
+/// Per-chunk gradient finalisation, run the moment the chunk's last
+/// micro-batch backward completes: mean over micro-batches, then the
+/// TP replicated-span mean sync (the row-parallel bias gradient is
+/// identical across shards by construction — the sync pins that
+/// invariant against drift; sharded parameters are disjoint per shard
+/// and need no sync).
+fn finalize_chunk_grads(
+    grads: &mut [f32],
+    inv_m: f32,
+    replicated: Option<(usize, usize)>,
+    comm: &TpComm,
+) {
+    grads.iter_mut().for_each(|x| *x *= inv_m);
+    if let Some((lo, hi)) = replicated {
+        let inv_tp = 1.0 / comm.tp() as f32;
+        comm.all_reduce_sum(&mut grads[lo..hi]);
+        grads[lo..hi].iter_mut().for_each(|x| *x *= inv_tp);
+    }
+}
+
+/// Split a chunk's gradient buffer into `bucket_floats`-sized spans and
+/// launch each as a nonblocking all-reduce on the DP group.  The tag
+/// folds `(step, chunk, bucket)` — 32/8/24 bits — so concurrent rounds
+/// never collide and no tag is reused before its round drains; the
+/// field widths are enforced (not just debug-checked), since an
+/// overflow would alias another chunk's round and abort the run as a
+/// double deposit.
+fn launch_grad_buckets(
+    group: &Arc<Group>,
+    rank: usize,
+    step: u32,
+    chunk: usize,
+    grads: &[f32],
+    bucket_floats: usize,
+) -> ChunkBuckets {
+    let bucket = bucket_floats.max(1);
+    assert!(chunk < (1 << 8), "chunk {chunk} overflows the bucket-tag field");
+    let n_buckets = grads.len().div_ceil(bucket);
+    assert!(
+        n_buckets < (1 << 24),
+        "grad_bucket_floats {bucket_floats} yields {n_buckets} buckets (tag field is 24 bits)"
+    );
+    let mut out = Vec::with_capacity(n_buckets);
+    let mut lo = 0;
+    while lo < grads.len() {
+        let hi = (lo + bucket).min(grads.len());
+        let tag = ((step as u64) << 32) | ((chunk as u64) << 24) | out.len() as u64;
+        out.push((lo, hi, group.start_all_reduce(rank, tag, grads[lo..hi].to_vec())));
+        lo = hi;
+    }
+    out
+}
+
+/// Finalize chunk `c`'s gradient ([`finalize_chunk_grads`]) and launch
+/// its DP buckets, charging the launch time to the hidden (mid-stream)
+/// or exposed (post-stream) timer — the single definition both call
+/// sites share so the hidden/exposed split cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn finalize_and_launch(
+    ctx: &WorkerCtx,
+    comm: &TpComm,
+    stage: &StageExecutables,
+    grads: &mut [f32],
+    inv_m: f32,
+    step: u32,
+    c: usize,
+    hidden: bool,
+) -> ChunkBuckets {
+    finalize_chunk_grads(grads, inv_m, stage.tp_replicated_span(), comm);
+    if ctx.dp == 1 {
+        return Vec::new();
+    }
+    let t0 = Instant::now();
+    let buckets = launch_grad_buckets(
+        &ctx.dp_group,
+        ctx.dp_rank,
+        step,
+        c,
+        grads,
+        ctx.cfg.grad_bucket_floats,
+    );
+    let counter = if hidden { &ctx.dp_group.nb_hidden_ns } else { &ctx.dp_group.nb_exposed_ns };
+    counter.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    buckets
 }
 
 impl WorkerCtx {
@@ -187,7 +293,11 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     } else {
         (0..ctx.v).map(|c| &ctx.bundle.stages[ctx.global(c)]).collect()
     };
-    let mut params: Vec<Vec<f32>> = Vec::with_capacity(ctx.v);
+    // parameters live behind `Arc`s so the per-step handle staging is
+    // zero-copy (the builtin backend clones the Arc, not the buffer);
+    // the optimizer mutates through `Arc::make_mut` after the handles
+    // drop, so no copy-on-write ever triggers
+    let mut params: Vec<Arc<Vec<f32>>> = Vec::with_capacity(ctx.v);
     let mut opts: Vec<DistOptimizer> = Vec::with_capacity(ctx.v);
     for stage in &stages {
         // parameter init: identical across DP replicas and across pipeline
@@ -206,8 +316,9 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             p.len(),
             ctx.dp_rank,
             ctx.dp,
+            ctx.cfg.collective_algo,
         ));
-        params.push(p);
+        params.push(Arc::new(p));
     }
 
     // ---- checkpoint resume: params (shared) + this rank's opt state ----
@@ -221,7 +332,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                 p.len() as u64 == stage.meta.param_count,
                 "checkpoint params size mismatch on stage {g}"
             );
-            params[c] = p;
+            params[c] = Arc::new(p);
             let (state, t) = checkpoint::read_f32(&checkpoint::opt_path(
                 dir,
                 g,
@@ -245,6 +356,9 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     });
 
     let m = ctx.cfg.microbatches as usize;
+    let inv_m = 1.0 / m as f32;
+    // overlap only exists with a DP group to sync against
+    let overlap = ctx.cfg.overlap_grad_sync && ctx.dp > 1;
     let mut grad_accum: Vec<Vec<f32>> =
         params.iter().map(|p| vec![0.0f32; p.len()]).collect();
     // per-(chunk, micro-batch) stash: stage input activations
@@ -268,6 +382,10 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             g.iter_mut().for_each(|x| *x = 0.0);
         }
         let mut loss_sum = 0.0f32;
+        // per-chunk backward countdown + this step's in-flight buckets
+        let mut bwd_left: Vec<usize> = vec![m; ctx.v];
+        let mut buckets: Vec<ChunkBuckets> = (0..ctx.v).map(|_| Vec::new()).collect();
+        let mut finalized = vec![false; ctx.v];
 
         // draw this step's micro-batches up front (the schedule issues
         // each chunk's forwards in order, so index mb matches draw order)
@@ -283,12 +401,12 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             }
         }
 
-        // upload each chunk's parameter vector ONCE per step; every
+        // stage each chunk's parameter vector ONCE per step; every
         // micro-batch's fwd/bwd reuses the same handle (EXPERIMENTS.md
-        // §Perf)
+        // §Perf).  Builtin stages share the Arc — zero bytes copied.
         let mut handles: Vec<ParamsHandle> = Vec::with_capacity(ctx.v);
         for (stage, p) in stages.iter().zip(&params) {
-            handles.push(stage.prepare_params(&ctx.rt, p)?);
+            handles.push(stage.prepare_params_shared(&ctx.rt, p)?);
         }
 
         for op in &ctx.sched.streams[ctx.pp_rank] {
@@ -349,34 +467,54 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         accumulate(&mut grad_accum[c], &gp);
                         send_grad(&ctx, &mut local, g, mb, gx);
                     }
+                    // the chunk's LAST backward just ran: finalize its
+                    // gradient and (overlap mode) launch its DP buckets
+                    // so the sync hides under the remaining backward ops
+                    bwd_left[c] -= 1;
+                    if overlap && bwd_left[c] == 0 {
+                        buckets[c] = finalize_and_launch(
+                            &ctx,
+                            &comm,
+                            stages[c],
+                            &mut grad_accum[c],
+                            inv_m,
+                            step,
+                            c,
+                            true,
+                        );
+                        finalized[c] = true;
+                    }
                 }
             }
         }
 
-        // gradient accumulation: mean over micro-batches
-        let inv_m = 1.0 / m as f32;
-        for g in grad_accum.iter_mut() {
-            g.iter_mut().for_each(|x| *x *= inv_m);
-        }
+        // release the step-scoped parameter handles so the optimizer
+        // can mutate the Arc'd buffers below without copy-on-write
+        drop(handles);
 
-        // TP grad sync: mean-reduce the replicated-parameter gradients
-        // (the row-parallel bias) across the TP group before the
-        // optimizer step.  They are identical across shards by
-        // construction — the sync pins that invariant against drift.
-        // Sharded parameters are disjoint per shard and need no sync.
-        if ctx.tp > 1 {
-            let inv_tp = 1.0 / ctx.tp as f32;
-            for c in 0..ctx.v {
-                if let Some((lo, hi)) = stages[c].tp_replicated_span() {
-                    comm.all_reduce_sum(&mut grad_accum[c][lo..hi]);
-                    grad_accum[c][lo..hi].iter_mut().for_each(|x| *x *= inv_tp);
-                }
+        // chunks whose last backward fell at the very end of the stream
+        // — or every chunk in sequential mode — finalize here, their
+        // bucket launches landing on the exposed timeline
+        for c in 0..ctx.v {
+            if !finalized[c] {
+                buckets[c] = finalize_and_launch(
+                    &ctx,
+                    &comm,
+                    stages[c],
+                    &mut grad_accum[c],
+                    inv_m,
+                    step,
+                    c,
+                    false,
+                );
             }
         }
 
-        // DP sync + (sharded) optimizer step, chunk by chunk (every rank
-        // of a DP row walks its chunks in the same order, so the
-        // per-chunk collective rounds line up)
+        // drain the bucket handles + (sharded) optimizer step, chunk by
+        // chunk in a fixed order (every rank of a DP row walks the same
+        // sequence, so the per-chunk collective rounds line up; bucket
+        // reduction is rank-order deterministic regardless of overlap
+        // timing, so overlapped ≡ sequential bit for bit)
         let lr_scale = ctx
             .cfg
             .lr_schedule
@@ -386,13 +524,26 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // single chunk's spike must not be masked by the last chunk's)
         let mut grad_norm_sq = 0.0f32;
         for c in 0..ctx.v {
+            if ctx.dp > 1 {
+                let t0 = Instant::now();
+                for (lo, hi, h) in buckets[c].drain(..) {
+                    // zero-copy redeem: one copy, shared sum -> grads
+                    let sum = h.wait_shared();
+                    grad_accum[c][lo..hi].copy_from_slice(&sum);
+                }
+                ctx.dp_group
+                    .nb_exposed_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let inv_dp = 1.0 / ctx.dp as f32;
+                grad_accum[c].iter_mut().for_each(|x| *x *= inv_dp);
+            }
             // under TP the clip norm combines across the tensor group
             // (replicated span counted once) — dense-equivalent clipping
             let tp_ctx = stages[c].tp_replicated_span().map(|span| (&comm, span));
-            let norm = opts[c].step(
+            let norm = opts[c].step_reduced(
                 &ctx.dp_group,
                 ctx.dp_rank,
-                &mut params[c],
+                Arc::make_mut(&mut params[c]),
                 &mut grad_accum[c],
                 lr_scale,
                 tp_ctx,
@@ -446,7 +597,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         if owns_head {
             let mut l = vec![loss_sum * inv_m];
             ctx.dp_group
-                .all_reduce_sum(ctx.dp_rank, &mut l, crate::collectives::Algo::Naive);
+                .all_reduce_sum(ctx.dp_rank, &mut l, ctx.cfg.collective_algo);
             let mean_loss = l[0] / ctx.dp as f32;
             if let Some(tx) = &ctx.loss_tx {
                 tx.send((step, mean_loss, grad_norm))

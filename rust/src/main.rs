@@ -37,13 +37,20 @@ COMMANDS:
   train    [--bundle tiny-s2-mb2 | --bundle builtin:tiny-s4-mb2]
            [--artifacts DIR] [--dp N] [--tp N] [--microbatches N] [--steps N]
            [--zero1] [--gpipe | --interleave V]
+           [--no-overlap] [--bucket-floats N] [--collective-algo ring|naive]
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
 
   --tp N shards every builtin stage across N tensor-parallel worker
   threads (Megatron column/row-parallel linears, vocab-parallel embed and
   head, per-layer all-reduces through real collectives).  Builtin bundles
-  only; N must divide the model's hidden and vocab dims.  Quickstart:
+  only; N must divide the model's hidden and vocab dims.
+
+  DP gradient sync overlaps with the backward pass by default (bucketed
+  nonblocking all-reduce, bit-identical trajectories): --no-overlap
+  launches the same buckets sequentially after the step's op stream,
+  --bucket-floats sets the bucket granularity, and --collective-algo
+  picks the algorithm for the small grad-norm/loss syncs.  Quickstart:
 
     frontier train --bundle builtin:tiny-s4-mb2 --tp 2 --dp 2 --steps 20
 ";
@@ -377,6 +384,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
         lr_schedule: None,
         zero1: args.flag("zero1"),
+        overlap_grad_sync: !args.flag("no-overlap"),
+        grad_bucket_floats: args
+            .opt("bucket-floats", 1usize << 15)
+            .map_err(anyhow::Error::msg)?,
+        collective_algo: match args.opt_str("collective-algo", "ring").as_str() {
+            "ring" => frontier_llm::collectives::Algo::Ring,
+            "naive" => frontier_llm::collectives::Algo::Naive,
+            other => anyhow::bail!("--collective-algo must be ring|naive, got {other:?}"),
+        },
         seed: args.opt("seed", 1234).map_err(anyhow::Error::msg)?,
         log_every: args.opt("log-every", 1).map_err(anyhow::Error::msg)?,
         checkpoint_dir: args.get("checkpoint").map(Into::into),
@@ -402,6 +418,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             "  TP: {} all-reduce rounds, {:.1} MB reduced payload",
             report.tp_ar_rounds,
             report.tp_ar_bytes as f64 / 1e6
+        );
+    }
+    if report.dp_sync_raw_s() > 0.0 {
+        println!(
+            "  DP sync: {:.1} ms raw, {:.1} ms exposed ({:.0}% overlapped with backward)",
+            report.dp_sync_raw_s() * 1e3,
+            report.dp_sync_exposed_s * 1e3,
+            report.dp_overlap_fraction() * 100.0
         );
     }
     Ok(())

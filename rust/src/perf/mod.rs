@@ -74,6 +74,34 @@ pub fn builtin_tp_grad_sync_floats_per_step(stages_hosted: u64, hidden: u64) -> 
     stages_hosted * (hidden + 1)
 }
 
+// ---------------------------------------------------------------------------
+// The DP overlap contract (§IV: DeepSpeed hides the gradient all-reduce
+// under backward), shared between the analytic model and the engine's
+// measured hidden/exposed gradient-sync timers.
+// ---------------------------------------------------------------------------
+
+/// Default fraction of the DP gradient reduction hidden under backward,
+/// used absent an engine measurement (the DeepSpeed-style assumption the
+/// paper-figure calibrations were fitted with).
+pub const DEFAULT_DP_OVERLAP: f64 = 0.65;
+
+/// Measured DP overlap fraction from (raw, exposed) gradient-sync
+/// seconds: `1 - exposed / raw`, clamped to `[0, 1]`.
+///
+/// This is THE contract function tying the model to the engine: the
+/// engine's `TrainReport::dp_overlap_fraction` computes it from its
+/// hidden/exposed bucket timers, and [`PerfModel::dp_exposed_comm_time`]
+/// prices the model's exposed DP term as `raw * (1 - fraction)` — so a
+/// model calibrated with the measured fraction reproduces the engine's
+/// exposed comm time exactly (the overlap analogue of PR 2's TP
+/// all-reduce byte pin).
+pub fn dp_overlap_fraction(raw_s: f64, exposed_s: f64) -> f64 {
+    if raw_s <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - exposed_s / raw_s).clamp(0.0, 1.0)
+}
+
 /// Kernel-efficiency model: what fraction of peak the GEMMs sustain.
 #[derive(Debug, Clone)]
 pub struct KernelModel {
@@ -166,18 +194,34 @@ pub struct PerfModel {
     /// Fraction of PP p2p hidden under compute (DeepSpeed overlaps sends).
     pub pp_overlap: f64,
     /// Fraction of the DP gradient reduction hidden under backward.
+    /// Defaults to [`DEFAULT_DP_OVERLAP`]; calibrate from a real run
+    /// with [`PerfModel::with_dp_overlap`] fed by the engine's measured
+    /// `TrainReport::dp_overlap_fraction` (see [`dp_overlap_fraction`]).
     pub dp_overlap: f64,
 }
 
 impl Default for PerfModel {
     fn default() -> Self {
-        Self { kernel: KernelModel::default(), pp_overlap: 0.0, dp_overlap: 0.65 }
+        Self { kernel: KernelModel::default(), pp_overlap: 0.0, dp_overlap: DEFAULT_DP_OVERLAP }
     }
 }
 
 impl PerfModel {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Model with an engine-measured (or hypothesised) DP overlap
+    /// fraction in place of the default.
+    pub fn with_dp_overlap(mut self, fraction: f64) -> Self {
+        self.dp_overlap = fraction.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Exposed (non-hidden) DP gradient-sync time the model prices for
+    /// a raw sync time — the engine-facing half of the overlap contract.
+    pub fn dp_exposed_comm_time(&self, raw_s: f64) -> f64 {
+        raw_s * (1.0 - self.dp_overlap)
     }
 
     /// Per-micro-batch, per-GPU forward compute+TP-comm time for one stage
@@ -308,7 +352,7 @@ impl PerfModel {
         let dp_group = layout.dp_group(0);
         let gpu_group: Vec<u32> = dp_group.iter().map(|&r| layout.gpu_of(r)).collect();
         let t_dp_raw = comm.dp_grad_sync(&gpu_group, grad_bytes, cfg.zero1);
-        let t_dp_comm = t_dp_raw * (1.0 - self.dp_overlap);
+        let t_dp_comm = self.dp_exposed_comm_time(t_dp_raw);
 
         // ---- optimizer (HBM-bound: read/write 14 bytes/param + math) ----
         let opt_bytes = (14 * n_local) as f64 / if cfg.zero1 { cfg.dp as f64 } else { 1.0 };
@@ -489,6 +533,25 @@ mod tests {
             4 * t * d + 3 * t
         );
         assert_eq!(builtin_tp_grad_sync_floats_per_step(4, d), 4 * (d + 1));
+    }
+
+    #[test]
+    fn dp_overlap_contract_round_trips() {
+        // fraction from (raw, exposed) plugged back into the model must
+        // reproduce the exposed time exactly — the measured-overlap pin
+        for (raw, exposed) in [(2.0f64, 0.5f64), (1.0, 1.0), (3.0, 0.0)] {
+            let f = dp_overlap_fraction(raw, exposed);
+            assert!((0.0..=1.0).contains(&f));
+            let m = pm().with_dp_overlap(f);
+            assert!((m.dp_exposed_comm_time(raw) - exposed).abs() < 1e-12);
+        }
+        // degenerate / clamped inputs
+        assert_eq!(dp_overlap_fraction(0.0, 0.0), 0.0);
+        assert_eq!(dp_overlap_fraction(-1.0, 0.5), 0.0);
+        assert_eq!(dp_overlap_fraction(1.0, 2.0), 0.0); // exposed > raw clamps
+        assert_eq!(pm().with_dp_overlap(7.0).dp_overlap, 1.0);
+        // the default stays the calibrated paper assumption
+        assert_eq!(pm().dp_overlap, DEFAULT_DP_OVERLAP);
     }
 
     #[test]

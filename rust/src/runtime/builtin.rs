@@ -27,6 +27,10 @@
 //! gradient).  `tp = 1` ([`crate::collectives::TpComm::solo`]) turns every
 //! all-reduce into a no-op, so the dense path IS the sharded path.
 //!
+//! All dense math runs on the cache-blocked, register-tiled kernels in
+//! [`crate::runtime::kernels`] (bit-identical accumulation order to the
+//! naive loops they replaced, so every equivalence test pins them too).
+//!
 //! Initialisation is keyed per *global* component (embedding, layer
 //! index, head), never per stage or shard: each shard regenerates the
 //! dense component stream and slices its own rows/columns, so any
@@ -42,6 +46,7 @@
 
 use crate::collectives::TpComm;
 use crate::data::Rng64;
+use crate::runtime::kernels;
 
 /// Architecture + partition of one builtin bundle.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -324,7 +329,7 @@ impl BuiltinStage {
     }
 
     /// Column-parallel first linear + tanh: `h_r = tanh(x W1_r + b1_r)`,
-    /// T × f.  Shard-local (no communication).
+    /// T × f.  Shard-local (no communication); blocked GEMM kernel.
     fn first_linear(&self, params: &[f32], x: &[f32]) -> Vec<f32> {
         let d = self.d();
         let f = self.f();
@@ -333,18 +338,11 @@ impl BuiltinStage {
         let t_count = x.len() / d;
         let mut h = vec![0.0f32; t_count * f];
         for t in 0..t_count {
-            let xi = &x[t * d..(t + 1) * d];
-            let ho = &mut h[t * f..(t + 1) * f];
-            ho.copy_from_slice(b1);
-            for (i, &xv) in xi.iter().enumerate() {
-                let wrow = &w1[i * f..(i + 1) * f];
-                for (o, &wv) in ho.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
-            }
-            for o in ho.iter_mut() {
-                *o = o.tanh();
-            }
+            h[t * f..(t + 1) * f].copy_from_slice(b1);
+        }
+        kernels::matmul_acc(&mut h, x, w1, t_count, d, f);
+        for o in h.iter_mut() {
+            *o = o.tanh();
         }
         h
     }
@@ -358,16 +356,7 @@ impl BuiltinStage {
         let (w2, b2) = (&params[l.w2..l.w2 + f * d], &params[l.b2..l.b2 + d]);
         let t_count = h.len() / f;
         let mut y = vec![0.0f32; t_count * d];
-        for t in 0..t_count {
-            let hi = &h[t * f..(t + 1) * f];
-            let yo = &mut y[t * d..(t + 1) * d];
-            for (i, &hv) in hi.iter().enumerate() {
-                let wrow = &w2[i * d..(i + 1) * d];
-                for (o, &wv) in yo.iter_mut().zip(wrow) {
-                    *o += hv * wv;
-                }
-            }
-        }
+        kernels::matmul_acc(&mut y, h, w2, t_count, f, d);
         comm.all_reduce_sum(&mut y);
         for t in 0..t_count {
             for (o, &bv) in y[t * d..(t + 1) * d].iter_mut().zip(b2) {
@@ -394,47 +383,22 @@ impl BuiltinStage {
         let l = self.lay();
         let h = self.first_linear(params, x); // recompute
         let t_count = x.len() / d;
-        let mut dx = vec![0.0f32; x.len()];
-        let mut dh = vec![0.0f32; f];
-        for t in 0..t_count {
-            let xi = &x[t * d..(t + 1) * d];
-            let hi = &h[t * f..(t + 1) * f];
-            let dyi = &dy[t * d..(t + 1) * d];
-            // b2 grad (replicated parameter, dy already full)
-            for (gb, &dv) in g[l.b2..l.b2 + d].iter_mut().zip(dyi) {
-                *gb += dv;
-            }
-            // dW2_r += h_rᵀ dy ;  dh_r = dy W2_rᵀ
-            for (i, &hv) in hi.iter().enumerate() {
-                let wrow = &params[l.w2 + i * d..l.w2 + (i + 1) * d];
-                let grow = &mut g[l.w2 + i * d..l.w2 + (i + 1) * d];
-                let mut acc = 0.0f32;
-                for ((gw, &dv), &wv) in grow.iter_mut().zip(dyi).zip(wrow) {
-                    *gw += hv * dv;
-                    acc += dv * wv;
-                }
-                dh[i] = acc;
-            }
-            // through tanh: dpre = dh ⊙ (1 - h²)
-            for (dp, &hv) in dh.iter_mut().zip(hi) {
-                *dp *= 1.0 - hv * hv;
-            }
-            for (j, &dp) in dh.iter().enumerate() {
-                g[l.b1 + j] += dp;
-            }
-            // dW1_r += xᵀ dpre ;  dx_partial = dpre W1_rᵀ
-            let dxi = &mut dx[t * d..(t + 1) * d];
-            for (i, &xv) in xi.iter().enumerate() {
-                let wrow = &params[l.w1 + i * f..l.w1 + (i + 1) * f];
-                let grow = &mut g[l.w1 + i * f..l.w1 + (i + 1) * f];
-                let mut acc = 0.0f32;
-                for ((gw, &dp), &wv) in grow.iter_mut().zip(dh.iter()).zip(wrow) {
-                    *gw += xv * dp;
-                    acc += dp * wv;
-                }
-                dxi[i] = acc;
-            }
+        let (w1, w2) = (&params[l.w1..l.w1 + d * f], &params[l.w2..l.w2 + f * d]);
+        // b2 grad (replicated parameter, dy already full)
+        kernels::col_sum_acc(&mut g[l.b2..l.b2 + d], dy, t_count, d);
+        // dW2_r += h_rᵀ dy ;  dh_r = dy W2_rᵀ
+        kernels::matmul_at_acc(&mut g[l.w2..l.w2 + f * d], &h, dy, t_count, f, d);
+        let mut dh = vec![0.0f32; t_count * f];
+        kernels::matmul_bt_acc(&mut dh, dy, w2, t_count, f, d);
+        // through tanh: dpre = dh ⊙ (1 - h²)
+        for (dp, &hv) in dh.iter_mut().zip(&h) {
+            *dp *= 1.0 - hv * hv;
         }
+        kernels::col_sum_acc(&mut g[l.b1..l.b1 + f], &dh, t_count, f);
+        // dW1_r += xᵀ dpre ;  dx_partial = dpre W1_rᵀ
+        kernels::matmul_at_acc(&mut g[l.w1..l.w1 + d * f], x, &dh, t_count, d, f);
+        let mut dx = vec![0.0f32; x.len()];
+        kernels::matmul_bt_acc(&mut dx, &dh, w1, t_count, d, f);
         comm.all_reduce_sum(&mut dx);
         dx
     }
@@ -459,19 +423,12 @@ impl BuiltinStage {
         let t_count = y.len() / d;
         let inv_t = 1.0 / t_count as f32;
 
-        // local logit shard, T × vs
+        // local logit shard, T × vs (blocked GEMM)
         let mut logits = vec![0.0f32; t_count * vs];
         for t in 0..t_count {
-            let yi = &y[t * d..(t + 1) * d];
-            let lo = &mut logits[t * vs..(t + 1) * vs];
-            lo.copy_from_slice(&params[l.hb..l.hb + vs]);
-            for (i, &hv) in yi.iter().enumerate() {
-                let wrow = &wh[i * vs..(i + 1) * vs];
-                for (o, &wv) in lo.iter_mut().zip(wrow) {
-                    *o += hv * wv;
-                }
-            }
+            logits[t * vs..(t + 1) * vs].copy_from_slice(&params[l.hb..l.hb + vs]);
         }
+        kernels::matmul_acc(&mut logits, y, wh, t_count, d, vs);
         // global per-token max for the stable softmax
         let mut mx: Vec<f32> = (0..t_count)
             .map(|t| {
@@ -505,7 +462,6 @@ impl BuiltinStage {
             loss -= (stats[t_count + t] - stats[t].max(1e-30).ln()) * inv_t;
         }
         // dlogits = (softmax - onehot) / T ;  dy = all_reduce(dlogits Wᵀ)
-        let mut dy = vec![0.0f32; y.len()];
         for t in 0..t_count {
             let z = stats[t].max(1e-30);
             let tgt = targets[t] as usize;
@@ -514,22 +470,11 @@ impl BuiltinStage {
                 let one = f32::from(tgt >= vlo && tgt < vlo + vs && u == tgt - vlo);
                 *v = (*v / z - one) * inv_t;
             }
-            for (u, &dl) in lo.iter().enumerate() {
-                gparams[l.hb + u] += dl;
-            }
-            let yi = &y[t * d..(t + 1) * d];
-            let dyi = &mut dy[t * d..(t + 1) * d];
-            for (i, &hv) in yi.iter().enumerate() {
-                let wrow = &wh[i * vs..(i + 1) * vs];
-                let grow = &mut gparams[l.hw + i * vs..l.hw + (i + 1) * vs];
-                let mut acc = 0.0f32;
-                for ((gw, &dl), &wv) in grow.iter_mut().zip(lo.iter()).zip(wrow) {
-                    *gw += hv * dl;
-                    acc += dl * wv;
-                }
-                dyi[i] = acc;
-            }
         }
+        kernels::col_sum_acc(&mut gparams[l.hb..l.hb + vs], &logits, t_count, vs);
+        kernels::matmul_at_acc(&mut gparams[l.hw..l.hw + d * vs], y, &logits, t_count, d, vs);
+        let mut dy = vec![0.0f32; y.len()];
+        kernels::matmul_bt_acc(&mut dy, &logits, wh, t_count, d, vs);
         comm.all_reduce_sum(&mut dy);
         (dy, loss)
     }

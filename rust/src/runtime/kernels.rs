@@ -1,0 +1,316 @@
+//! Cache-blocked matmul kernels for the builtin stage backend.
+//!
+//! The builtin stages originally walked every GEMM one token at a time
+//! (a vector–matrix product per row), which re-streams the full weight
+//! panel from memory for every token and leaves the backward's
+//! transposed products as scalar dot-product chains LLVM cannot
+//! vectorise (float addition is not associative).  These kernels fix
+//! both on the training step's critical path:
+//!
+//! * **Register tiling** — [`MR`] output rows are produced per inner
+//!   sweep, so each weight row loaded from cache is reused `MR` times
+//!   and the inner loop carries `MR` independent, unit-stride FMA
+//!   streams the auto-vectoriser can turn into vector code.
+//! * **Transposed weight layout for the backward** — `dx = dy · Wᵀ` is
+//!   computed by materialising `Wᵀ` once per call ([`matmul_bt_acc`])
+//!   and reusing the forward kernel, trading an `O(k·n)` transpose
+//!   (amortised over the `t` output rows) for a unit-stride inner loop
+//!   in place of strided dot products.
+//!
+//! **Numerics contract:** every kernel accumulates each output element
+//! in exactly the same order as the naive one-row-at-a-time loops it
+//! replaces (`k` ascending for [`matmul_acc`], tokens ascending as
+//! separate adds for [`matmul_at_acc`] / [`col_sum_acc`]), so blocked
+//! and naive results are **bit-identical** — for [`matmul_bt_acc`]
+//! given the zeroed output buffer its callers always pass (the naive
+//! loop folds each dot product through a local accumulator before
+//! adding it, which only coincides when the output starts at 0.0) —
+//! and the engine's trajectory and determinism tests hold unchanged.
+//! The `naive` module keeps the original loops as the oracle for the
+//! equality tests below and as the pre-optimisation baseline the
+//! `engine_hotpath` bench records in `BENCH_engine.json`.
+
+/// Output rows per register tile (weight-row reuse factor).
+pub const MR: usize = 4;
+
+/// `out[t×n] += a[t×k] · b[k×n]` (all row-major, `b` in the natural
+/// "input-dim × output-dim" layout with unit-stride output rows).
+pub fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), t * n);
+    debug_assert_eq!(a.len(), t * k);
+    debug_assert_eq!(b.len(), k * n);
+    if t == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut ti = 0;
+    while ti + MR <= t {
+        let (r0, rest) = out[ti * n..(ti + MR) * n].split_at_mut(n);
+        let (r1, rest) = rest.split_at_mut(n);
+        let (r2, r3) = rest.split_at_mut(n);
+        let a0 = &a[ti * k..(ti + 1) * k];
+        let a1 = &a[(ti + 1) * k..(ti + 2) * k];
+        let a2 = &a[(ti + 2) * k..(ti + 3) * k];
+        let a3 = &a[(ti + 3) * k..(ti + 4) * k];
+        for kk in 0..k {
+            let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            let brow = &b[kk * n..(kk + 1) * n];
+            for ((((o0, o1), o2), o3), &w) in r0
+                .iter_mut()
+                .zip(r1.iter_mut())
+                .zip(r2.iter_mut())
+                .zip(r3.iter_mut())
+                .zip(brow)
+            {
+                *o0 += x0 * w;
+                *o1 += x1 * w;
+                *o2 += x2 * w;
+                *o3 += x3 * w;
+            }
+        }
+        ti += MR;
+    }
+    while ti < t {
+        let row = &mut out[ti * n..(ti + 1) * n];
+        let arow = &a[ti * k..(ti + 1) * k];
+        for (kk, &x) in arow.iter().enumerate() {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &w) in row.iter_mut().zip(brow) {
+                *o += x * w;
+            }
+        }
+        ti += 1;
+    }
+}
+
+/// Weight-gradient accumulation `w[k×n] += aᵀ · g` for `a[t×k]`,
+/// `g[t×n]`: rank-1 updates blocked [`MR`] tokens at a time, so each
+/// weight row is read and written once per `MR` tokens instead of once
+/// per token.  Per-element adds stay in token order (separate
+/// statements — the compiler cannot reassociate them), keeping the
+/// result bit-identical to the one-token-at-a-time loop.
+pub fn matmul_at_acc(w: &mut [f32], a: &[f32], g: &[f32], t: usize, k: usize, n: usize) {
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(a.len(), t * k);
+    debug_assert_eq!(g.len(), t * n);
+    if t == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut ti = 0;
+    while ti + MR <= t {
+        let g0 = &g[ti * n..(ti + 1) * n];
+        let g1 = &g[(ti + 1) * n..(ti + 2) * n];
+        let g2 = &g[(ti + 2) * n..(ti + 3) * n];
+        let g3 = &g[(ti + 3) * n..(ti + 4) * n];
+        let a0 = &a[ti * k..(ti + 1) * k];
+        let a1 = &a[(ti + 1) * k..(ti + 2) * k];
+        let a2 = &a[(ti + 2) * k..(ti + 3) * k];
+        let a3 = &a[(ti + 3) * k..(ti + 4) * k];
+        for i in 0..k {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            let wrow = &mut w[i * n..(i + 1) * n];
+            for ((((wv, &v0), &v1), &v2), &v3) in
+                wrow.iter_mut().zip(g0).zip(g1).zip(g2).zip(g3)
+            {
+                *wv += x0 * v0;
+                *wv += x1 * v1;
+                *wv += x2 * v2;
+                *wv += x3 * v3;
+            }
+        }
+        ti += MR;
+    }
+    while ti < t {
+        let grow = &g[ti * n..(ti + 1) * n];
+        let arow = &a[ti * k..(ti + 1) * k];
+        for (i, &x) in arow.iter().enumerate() {
+            let wrow = &mut w[i * n..(i + 1) * n];
+            for (wv, &v) in wrow.iter_mut().zip(grow) {
+                *wv += x * v;
+            }
+        }
+        ti += 1;
+    }
+}
+
+/// Transposed-weight product `out[t×k] += g[t×n] · bᵀ` for `b[k×n]`
+/// (i.e. `out[t][i] += Σ_j g[t][j] · b[i][j]` — the backward data
+/// gradients `dx = dpre · W1ᵀ`, `dh = dy · W2ᵀ`).  Materialises `bᵀ`
+/// once and defers to [`matmul_acc`]; summation stays `j`-ascending,
+/// bit-identical to the scalar dot-product loop it replaces **when
+/// `out` starts zeroed** (as every builtin call site does — the naive
+/// loop sums into a local accumulator before adding it once).
+pub fn matmul_bt_acc(out: &mut [f32], g: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+    debug_assert_eq!(out.len(), t * k);
+    debug_assert_eq!(g.len(), t * n);
+    debug_assert_eq!(b.len(), k * n);
+    if t == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut bt = vec![0.0f32; n * k];
+    for i in 0..k {
+        for (j, &v) in b[i * n..(i + 1) * n].iter().enumerate() {
+            bt[j * k + i] = v;
+        }
+    }
+    matmul_acc(out, g, &bt, t, n, k);
+}
+
+/// Column sums `acc[n] += Σ_t g[t][n]` (bias gradients), token order.
+pub fn col_sum_acc(acc: &mut [f32], g: &[f32], t: usize, n: usize) {
+    debug_assert_eq!(acc.len(), n);
+    debug_assert_eq!(g.len(), t * n);
+    for ti in 0..t {
+        for (av, &v) in acc.iter_mut().zip(&g[ti * n..(ti + 1) * n]) {
+            *av += v;
+        }
+    }
+}
+
+/// The original one-row-at-a-time loops: the correctness oracle for the
+/// equality tests and the pre-optimisation baseline `engine_hotpath`
+/// times against the blocked kernels.
+pub mod naive {
+    /// `out[t×n] += a[t×k] · b[k×n]`, one token per sweep.
+    pub fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+        for ti in 0..t {
+            let row = &mut out[ti * n..(ti + 1) * n];
+            for (kk, &x) in a[ti * k..(ti + 1) * k].iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &w) in row.iter_mut().zip(brow) {
+                    *o += x * w;
+                }
+            }
+        }
+    }
+
+    /// `w[k×n] += aᵀ · g`, one rank-1 update per token.
+    pub fn matmul_at_acc(w: &mut [f32], a: &[f32], g: &[f32], t: usize, k: usize, n: usize) {
+        for ti in 0..t {
+            let grow = &g[ti * n..(ti + 1) * n];
+            for (i, &x) in a[ti * k..(ti + 1) * k].iter().enumerate() {
+                let wrow = &mut w[i * n..(i + 1) * n];
+                for (wv, &v) in wrow.iter_mut().zip(grow) {
+                    *wv += x * v;
+                }
+            }
+        }
+    }
+
+    /// `out[t×k] += g · bᵀ`, scalar dot products along weight rows.
+    pub fn matmul_bt_acc(out: &mut [f32], g: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+        for ti in 0..t {
+            let grow = &g[ti * n..(ti + 1) * n];
+            let orow = &mut out[ti * k..(ti + 1) * k];
+            for (i, o) in orow.iter_mut().enumerate() {
+                let brow = &b[i * n..(i + 1) * n];
+                let mut acc = 0.0f32;
+                for (&gv, &wv) in grow.iter().zip(brow) {
+                    acc += gv * wv;
+                }
+                *o += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(seed: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| ((seed * 31 + i) as f32 * 0.17).sin()).collect()
+    }
+
+    /// Shapes covering the register-tile remainders (t % MR ∈ {0..3}),
+    /// degenerate dims, and larger-than-tile sizes.
+    fn shapes() -> Vec<(usize, usize, usize)> {
+        vec![
+            (1, 1, 1),
+            (2, 3, 5),
+            (3, 8, 8),
+            (4, 16, 16),
+            (5, 7, 9),
+            (7, 16, 4),
+            (8, 4, 16),
+            (16, 16, 16),
+            (9, 33, 17),
+        ]
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise() {
+        for (t, k, n) in shapes() {
+            let a = fill(1, t * k);
+            let b = fill(2, k * n);
+            let mut blocked = fill(3, t * n);
+            let mut reference = blocked.clone();
+            matmul_acc(&mut blocked, &a, &b, t, k, n);
+            naive::matmul_acc(&mut reference, &a, &b, t, k, n);
+            assert_eq!(blocked, reference, "matmul t={t} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn blocked_at_matches_naive_bitwise() {
+        for (t, k, n) in shapes() {
+            let a = fill(4, t * k);
+            let g = fill(5, t * n);
+            let mut blocked = fill(6, k * n);
+            let mut reference = blocked.clone();
+            matmul_at_acc(&mut blocked, &a, &g, t, k, n);
+            naive::matmul_at_acc(&mut reference, &a, &g, t, k, n);
+            assert_eq!(blocked, reference, "at t={t} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn blocked_bt_matches_naive_bitwise() {
+        // zeroed outputs, as every call site passes: the naive loop
+        // folds each dot product through a local accumulator, so the
+        // bit-identity only holds from a 0.0 starting value
+        for (t, k, n) in shapes() {
+            let g = fill(7, t * n);
+            let b = fill(8, k * n);
+            let mut blocked = vec![0.0f32; t * k];
+            let mut reference = vec![0.0f32; t * k];
+            matmul_bt_acc(&mut blocked, &g, &b, t, k, n);
+            naive::matmul_bt_acc(&mut reference, &g, &b, t, k, n);
+            assert_eq!(blocked, reference, "bt t={t} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0.0f32; 4];
+        matmul_acc(&mut out, &a, &b, 2, 2, 2);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+        // bt against the transpose: a · bᵀ where bᵀ = [5 7; 6 8]
+        let mut out = [0.0f32; 4];
+        matmul_bt_acc(&mut out, &a, &b, 2, 2, 2);
+        assert_eq!(out, [17.0, 23.0, 39.0, 53.0]);
+        // aᵀ · b = [1 3; 2 4] · [5 6; 7 8] = [26 30; 38 44]
+        let mut out = [0.0f32; 4];
+        matmul_at_acc(&mut out, &a, &b, 2, 2, 2);
+        assert_eq!(out, [26.0, 30.0, 38.0, 44.0]);
+    }
+
+    #[test]
+    fn col_sum_known_values() {
+        let g = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut acc = [0.5f32, 0.5];
+        col_sum_acc(&mut acc, &g, 3, 2);
+        assert_eq!(acc, [9.5, 12.5]);
+    }
+
+    #[test]
+    fn accumulates_instead_of_overwriting() {
+        let a = [1.0f32];
+        let b = [2.0f32];
+        let mut out = [10.0f32];
+        matmul_acc(&mut out, &a, &b, 1, 1, 1);
+        assert_eq!(out, [12.0]);
+    }
+}

@@ -20,6 +20,7 @@
 //!   `builtin:tiny-s4-mb2` select it.
 
 pub mod builtin;
+pub mod kernels;
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -309,8 +310,11 @@ impl StageDims {
 pub enum ParamsHandle {
     /// Device buffer on the PJRT client.
     Xla(OwnedBuffer),
-    /// Host copy for the builtin backend.
-    Host(Vec<f32>),
+    /// Shared host buffer for the builtin backend — an `Arc` clone of
+    /// the worker's parameter vector, so staging a step's params moves
+    /// no bytes (the worker drops the handle before mutating the
+    /// underlying buffer via `Arc::make_mut`).
+    Host(Arc<Vec<f32>>),
 }
 
 impl ParamsHandle {
@@ -323,7 +327,7 @@ impl ParamsHandle {
 
     fn host(&self) -> Result<&[f32]> {
         match self {
-            ParamsHandle::Host(p) => Ok(p),
+            ParamsHandle::Host(p) => Ok(p.as_slice()),
             ParamsHandle::Xla(_) => Err(anyhow!("device params handed to builtin stage")),
         }
     }
@@ -410,7 +414,24 @@ impl StageExecutables {
             StageBackend::Xla { .. } => {
                 Ok(ParamsHandle::Xla(rt.buf_f32(params, &[params.len()])?))
             }
-            StageBackend::Builtin(_) => Ok(ParamsHandle::Host(params.to_vec())),
+            StageBackend::Builtin(_) => Ok(ParamsHandle::Host(Arc::new(params.to_vec()))),
+        }
+    }
+
+    /// Zero-copy variant of [`StageExecutables::prepare_params`] for
+    /// callers that already hold the parameters behind an `Arc` (the
+    /// engine's hot path): the builtin backend stages an `Arc` clone
+    /// instead of copying the full vector every step.
+    pub fn prepare_params_shared(
+        &self,
+        rt: &Runtime,
+        params: &Arc<Vec<f32>>,
+    ) -> Result<ParamsHandle> {
+        match &self.backend {
+            StageBackend::Xla { .. } => {
+                Ok(ParamsHandle::Xla(rt.buf_f32(params, &[params.len()])?))
+            }
+            StageBackend::Builtin(_) => Ok(ParamsHandle::Host(params.clone())),
         }
     }
 

@@ -10,6 +10,14 @@
 //! The non-sharded baseline (`Ddp`) is implemented alongside so the two
 //! paths can be tested for *bitwise-equivalent parameter trajectories* —
 //! the invariant that makes ZeRO "free" to turn on.
+//!
+//! Two step entry points: [`DistOptimizer::step`] performs the gradient
+//! sync itself (all-reduce / reduce-scatter), while
+//! [`DistOptimizer::step_reduced`] consumes gradients the engine has
+//! already mean-reduced through its backward-overlapped bucketed
+//! nonblocking all-reduce — only the tiny norm combines and the ZeRO-1
+//! parameter all-gather remain.  Both communicate the small syncs with
+//! a configurable [`Algo`] (the engine default is `Ring`).
 
 use crate::collectives::{chunk_bounds, Algo, Group, TpComm};
 use crate::optim::{clip_grad_norm, Adam, AdamConfig};
@@ -34,6 +42,21 @@ fn tp_partial_sq(grads: &[f32], replicated: (usize, usize), tp: usize) -> f32 {
     full - rep * (1.0 - 1.0 / tp as f32)
 }
 
+/// Clip `grads` by the TP-global norm (replicated span counted once via
+/// a 1-float subgroup all-reduce) and return the pre-clip norm — the
+/// DDP clip path under tensor parallelism, shared by both step entry
+/// points.
+fn tp_clip(grads: &mut [f32], clip: f32, comm: &TpComm, span: (usize, usize)) -> f32 {
+    let mut sq = vec![tp_partial_sq(grads, span, comm.tp())];
+    comm.all_reduce_sum(&mut sq);
+    let norm = sq[0].max(0.0).sqrt();
+    if clip > 0.0 && norm > clip {
+        let scale = clip / (norm + 1e-6);
+        grads.iter_mut().for_each(|g| *g *= scale);
+    }
+    norm
+}
+
 /// How a DP rank synchronises gradients and steps the optimizer.
 pub enum DistOptimizer {
     /// Replicated optimizer: all-reduce grads, every rank steps everything.
@@ -43,9 +66,19 @@ pub enum DistOptimizer {
 }
 
 impl DistOptimizer {
-    pub fn new(zero1: bool, cfg: AdamConfig, n_params: usize, dp_rank: usize, dp: usize) -> Self {
+    /// `algo` selects the collective algorithm for the *small* syncs
+    /// (the 1-float grad-norm combine) — the engine threads its
+    /// `EngineConfig::collective_algo` (default `Ring`) through here.
+    pub fn new(
+        zero1: bool,
+        cfg: AdamConfig,
+        n_params: usize,
+        dp_rank: usize,
+        dp: usize,
+        algo: Algo,
+    ) -> Self {
         if zero1 {
-            DistOptimizer::Zero1(Zero1Optimizer::new(cfg, n_params, dp_rank, dp))
+            DistOptimizer::Zero1(Zero1Optimizer::new(cfg, n_params, dp_rank, dp, algo))
         } else {
             DistOptimizer::Ddp(Adam::new(cfg, n_params))
         }
@@ -72,22 +105,41 @@ impl DistOptimizer {
                 grads.iter_mut().for_each(|g| *g /= dp);
                 let norm = match tp {
                     None => clip_grad_norm(grads, adam.cfg.grad_clip),
-                    Some((comm, span)) => {
-                        let mut sq = vec![tp_partial_sq(grads, span, comm.tp())];
-                        comm.all_reduce_sum(&mut sq);
-                        let norm = sq[0].max(0.0).sqrt();
-                        let clip = adam.cfg.grad_clip;
-                        if clip > 0.0 && norm > clip {
-                            let scale = clip / (norm + 1e-6);
-                            grads.iter_mut().for_each(|g| *g *= scale);
-                        }
-                        norm
-                    }
+                    Some((comm, span)) => tp_clip(grads, adam.cfg.grad_clip, comm, span),
                 };
                 adam.step(params, grads, lr_scale);
                 norm
             }
             DistOptimizer::Zero1(z) => z.step(group, rank, params, grads, lr_scale, tp),
+        }
+    }
+
+    /// Optimizer step over gradients that are **already DP-mean-reduced**
+    /// (the engine's bucketed nonblocking all-reduce drains into `grads`
+    /// before calling this).  Only the tiny syncs remain: the TP-global
+    /// clip-norm combine and (ZeRO-1) the per-shard norm combine + the
+    /// updated-parameter all-gather.  Every DP rank holds bit-identical
+    /// `grads` here (rank-order bucket reduction), so DDP ranks step in
+    /// lockstep without further communication.
+    pub fn step_reduced(
+        &mut self,
+        group: &Arc<Group>,
+        rank: usize,
+        params: &mut [f32],
+        grads: &mut [f32],
+        lr_scale: f32,
+        tp: TpCtx<'_>,
+    ) -> f32 {
+        match self {
+            DistOptimizer::Ddp(adam) => {
+                let norm = match tp {
+                    None => clip_grad_norm(grads, adam.cfg.grad_clip),
+                    Some((comm, span)) => tp_clip(grads, adam.cfg.grad_clip, comm, span),
+                };
+                adam.step(params, grads, lr_scale);
+                norm
+            }
+            DistOptimizer::Zero1(z) => z.step_reduced(group, rank, params, grads, lr_scale, tp),
         }
     }
 
@@ -123,13 +175,15 @@ pub struct Zero1Optimizer {
     pub dp_rank: usize,
     pub dp: usize,
     pub n_params: usize,
+    /// Collective algorithm for the 1-float grad-norm combine.
+    pub algo: Algo,
 }
 
 impl Zero1Optimizer {
-    pub fn new(cfg: AdamConfig, n_params: usize, dp_rank: usize, dp: usize) -> Self {
+    pub fn new(cfg: AdamConfig, n_params: usize, dp_rank: usize, dp: usize, algo: Algo) -> Self {
         assert!(dp_rank < dp);
         let (lo, hi) = chunk_bounds(n_params, dp)[dp_rank];
-        Self { adam: Adam::new(cfg, hi - lo), dp_rank, dp, n_params }
+        Self { adam: Adam::new(cfg, hi - lo), dp_rank, dp, n_params, algo }
     }
 
     pub fn shard_bounds(&self) -> (usize, usize) {
@@ -152,23 +206,56 @@ impl Zero1Optimizer {
         // reduce-scatter: my shard of the summed gradient
         let mut shard = group.reduce_scatter_sum(rank, grads);
         shard.iter_mut().for_each(|g| *g /= dp);
+        self.clip_step_gather(group, rank, params, &mut shard, lr_scale, tp)
+    }
 
-        // global grad-norm clipping needs the *full* norm: combine shard
-        // norms with a tiny all-reduce (1 float), like DeepSpeed does —
-        // first across DP shards, then (under TP) across the tensor
-        // group, discounting this DP shard's overlap with the replicated
-        // span so the cross-shard sum counts it once
+    /// ZeRO-1 step over already-DP-mean-reduced gradients: slice my
+    /// shard out of the full buffer (identical to the reduce-scatter
+    /// result — rank-order sums are elementwise, so any sub-span of the
+    /// bucketed all-reduce equals the scattered shard bit for bit).
+    pub fn step_reduced(
+        &mut self,
+        group: &Arc<Group>,
+        rank: usize,
+        params: &mut [f32],
+        grads: &mut [f32],
+        lr_scale: f32,
+        tp: TpCtx<'_>,
+    ) -> f32 {
+        assert_eq!(params.len(), self.n_params);
+        assert_eq!(grads.len(), self.n_params);
+        assert_eq!(group.len(), self.dp);
         let (slo, shi) = self.shard_bounds();
+        self.clip_step_gather(group, rank, params, &mut grads[slo..shi], lr_scale, tp)
+    }
+
+    /// Shared tail of both entry points, from this rank's mean-reduced
+    /// gradient shard onward: combine shard norms with a tiny all-reduce
+    /// (1 float, like DeepSpeed) — first across DP shards, then (under
+    /// TP) across the tensor group, discounting this DP shard's overlap
+    /// with the replicated span so the cross-shard sum counts it once —
+    /// clip, Adam this shard only, and all-gather the updated params.
+    fn clip_step_gather(
+        &mut self,
+        group: &Arc<Group>,
+        rank: usize,
+        params: &mut [f32],
+        shard: &mut [f32],
+        lr_scale: f32,
+        tp: TpCtx<'_>,
+    ) -> f32 {
+        let (slo, shi) = self.shard_bounds();
+        assert_eq!(shard.len(), shi - slo);
         let local_sq: f32 = match tp {
             None => shard.iter().map(|&g| g * g).sum(),
             Some((comm, (rlo, rhi))) => {
                 let lo = rlo.clamp(slo, shi) - slo;
                 let hi = rhi.clamp(slo, shi) - slo;
-                tp_partial_sq(&shard, (lo, hi), comm.tp())
+                tp_partial_sq(shard, (lo, hi), comm.tp())
             }
         };
         let mut sq = vec![local_sq];
-        group.all_reduce_sum(rank, &mut sq, Algo::Naive);
+        group.all_reduce_sum(rank, &mut sq, self.algo);
         if let Some((comm, _)) = tp {
             comm.all_reduce_sum(&mut sq);
         }
@@ -180,11 +267,10 @@ impl Zero1Optimizer {
         }
 
         // Adam on my shard only
-        let (lo, hi) = self.shard_bounds();
-        self.adam.step(&mut params[lo..hi], &shard, lr_scale);
+        self.adam.step(&mut params[slo..shi], shard, lr_scale);
 
         // all-gather the updated parameters
-        let my = params[lo..hi].to_vec();
+        let my = params[slo..shi].to_vec();
         group.all_gather(rank, &my, params);
         norm
     }
@@ -205,7 +291,7 @@ mod tests {
                 thread::spawn(move || {
                     let mut params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
                     let mut opt =
-                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp);
+                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring);
                     for step in 0..steps {
                         let mut grads: Vec<f32> = (0..n)
                             .map(|i| ((i + rank * 13 + step * 7) as f32 * 0.1).sin())
@@ -238,11 +324,11 @@ mod tests {
     fn zero1_state_is_sharded() {
         let n = 100;
         let dp = 4;
-        let z = Zero1Optimizer::new(AdamConfig::default(), n, 1, dp);
+        let z = Zero1Optimizer::new(AdamConfig::default(), n, 1, dp, Algo::Ring);
         assert_eq!(z.adam.len(), 25);
         // DDP holds full state
-        let d = DistOptimizer::new(false, AdamConfig::default(), n, 0, dp);
-        let z = DistOptimizer::new(true, AdamConfig::default(), n, 0, dp);
+        let d = DistOptimizer::new(false, AdamConfig::default(), n, 0, dp, Algo::Ring);
+        let z = DistOptimizer::new(true, AdamConfig::default(), n, 0, dp, Algo::Ring);
         assert_eq!(d.state_bytes(), 4 * z.state_bytes());
     }
 
@@ -252,7 +338,7 @@ mod tests {
         let dp = 4;
         let mut covered = 0;
         for r in 0..dp {
-            let z = Zero1Optimizer::new(AdamConfig::default(), n, r, dp);
+            let z = Zero1Optimizer::new(AdamConfig::default(), n, r, dp, Algo::Ring);
             let (lo, hi) = z.shard_bounds();
             covered += hi - lo;
         }
@@ -273,7 +359,8 @@ mod tests {
                 thread::spawn(move || {
                     let comm = TpComm::new(sub, rank);
                     let dp_group = Group::new(1);
-                    let mut opt = DistOptimizer::new(false, AdamConfig::default(), 4, 0, 1);
+                    let mut opt =
+                        DistOptimizer::new(false, AdamConfig::default(), 4, 0, 1, Algo::Ring);
                     let mut params = vec![0.0f32; 4];
                     // unique elements differ per shard; [2..4) replicated
                     let mut grads = if rank == 0 {
@@ -299,6 +386,66 @@ mod tests {
         let ddp = run(1, false, 3, 16);
         for (a, b) in z1.iter().zip(&ddp) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    /// Like [`run`] but through [`DistOptimizer::step_reduced`]: every
+    /// rank is handed the already-mean-reduced gradient (rank-order sum
+    /// / dp, what the engine's bucketed all-reduce drains).
+    fn run_reduced(dp: usize, zero1: bool, steps: usize, n: usize) -> Vec<f32> {
+        let group = Group::new(dp);
+        let handles: Vec<_> = (0..dp)
+            .map(|rank| {
+                let g = group.clone();
+                thread::spawn(move || {
+                    let mut params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
+                    let mut opt =
+                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring);
+                    for step in 0..steps {
+                        // rank-order mean over every rank's gradient
+                        let mut grads = vec![0.0f32; n];
+                        for r in 0..dp {
+                            for (i, x) in grads.iter_mut().enumerate() {
+                                *x += ((i + r * 13 + step * 7) as f32 * 0.1).sin();
+                            }
+                        }
+                        grads.iter_mut().for_each(|x| *x /= dp as f32);
+                        opt.step_reduced(&g, rank, &mut params, &mut grads, 1.0, None);
+                    }
+                    params
+                })
+            })
+            .collect();
+        let mut results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in 1..results.len() {
+            assert_eq!(results[0], results[r], "rank {r} params diverged (reduced path)");
+        }
+        results.swap_remove(0)
+    }
+
+    #[test]
+    fn step_reduced_matches_step_ddp_and_zero1() {
+        // the overlapped-sync optimizer path must walk the same
+        // trajectory as the classic sync-inside-step path (up to the
+        // all-reduce association order, hence the small tolerance)
+        for zero1 in [false, true] {
+            let classic = run(4, zero1, 5, 37);
+            let reduced = run_reduced(4, zero1, 5, 37);
+            for (a, b) in classic.iter().zip(&reduced) {
+                assert!((a - b).abs() < 2e-5, "zero1={zero1}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_reduced_zero1_shard_slice_equals_scatter() {
+        // the ZeRO-1 reduced path slices its shard out of the full
+        // buffer; single rank degenerates to plain Adam — and the shard
+        // slice of a rank-order sum is bitwise the scattered shard
+        let a = run_reduced(1, true, 3, 16);
+        let b = run(1, false, 3, 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
         }
     }
 }

@@ -51,6 +51,7 @@ fn cfg(bundle: &str, dp: usize, m: u32, steps: u32, zero1: bool, sched: Schedule
         checkpoint_dir: None,
         checkpoint_every: 0,
         resume: false,
+        ..Default::default()
     }
 }
 
@@ -573,6 +574,7 @@ fn checkpoint_resume_continues_trajectory() {
         checkpoint_dir: Some(dir.clone()),
         checkpoint_every: 0,
         resume,
+        ..Default::default()
     };
     let first = train(&mk(3, false)).unwrap();
     let second = train(&mk(3, true)).unwrap();

@@ -1,0 +1,181 @@
+//! Backward-overlapped DP gradient sync: correctness + the measured-
+//! overlap perf contract.
+//!
+//! The engine launches each chunk's gradient buckets (nonblocking
+//! all-reduce) as soon as the chunk's last micro-batch backward
+//! finishes and drains them before the Adam step.  Because the bucketed
+//! all-reduce sums in rank order no matter when deposits arrive, the
+//! overlapped and sequential paths must walk **bit-identical** loss
+//! trajectories — across DDP, ZeRO-1, tensor parallelism and virtual
+//! chunks.  The perf side: the engine's measured hidden/exposed sync
+//! seconds, run through `perf::dp_overlap_fraction`, must price the
+//! model's exposed DP comm term within 10% (the overlap analogue of the
+//! PR-2 TP byte pin).
+
+use frontier_llm::config::ScheduleKind;
+use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
+use frontier_llm::perf::{dp_overlap_fraction, PerfModel};
+use frontier_llm::runtime::BuiltinSpec;
+
+/// 20-step run with the overlap knobs under test; `grad_bucket_floats`
+/// is small enough that every tiny stage splits into many buckets.
+fn run(
+    bundle: &str,
+    tp: usize,
+    dp: usize,
+    m: u32,
+    zero1: bool,
+    sched: ScheduleKind,
+    overlap: bool,
+) -> TrainReport {
+    let cfg = EngineConfig {
+        bundle: bundle.into(),
+        dp,
+        tp,
+        schedule: sched,
+        microbatches: m,
+        steps: 20,
+        zero1,
+        overlap_grad_sync: overlap,
+        grad_bucket_floats: 64,
+        seed: 42,
+        ..Default::default()
+    };
+    train(&cfg).expect("training must succeed")
+}
+
+fn losses(r: &TrainReport) -> Vec<f32> {
+    r.logs.iter().map(|l| l.loss).collect()
+}
+
+fn grad_norms(r: &TrainReport) -> Vec<f32> {
+    r.logs.iter().map(|l| l.grad_norm).collect()
+}
+
+/// THE overlap invariant: bit-identical trajectories, overlapped vs
+/// sequential, for every parallelisation the engine supports.
+#[test]
+fn overlapped_sync_is_bit_identical_to_sequential() {
+    let cases: &[(&str, usize, usize, bool, ScheduleKind)] = &[
+        // plain DDP, 2-stage pipeline × dp2
+        ("builtin:tiny-s2-mb2", 1, 2, false, ScheduleKind::OneF1B),
+        // ZeRO-1 sharded optimizer
+        ("builtin:tiny-s2-mb2", 1, 2, true, ScheduleKind::OneF1B),
+        // tensor parallel × data parallel
+        ("builtin:tiny-s2-mb2", 2, 2, false, ScheduleKind::OneF1B),
+        // virtual chunks (v=2) × dp2 with ZeRO-1
+        ("builtin:tiny-s4-mb2", 1, 2, true, ScheduleKind::Interleaved1F1B { v: 2 }),
+    ];
+    for &(bundle, tp, dp, zero1, sched) in cases {
+        let overlapped = run(bundle, tp, dp, 2, zero1, sched, true);
+        let sequential = run(bundle, tp, dp, 2, zero1, sched, false);
+        assert_eq!(
+            losses(&overlapped),
+            losses(&sequential),
+            "{bundle} tp{tp} dp{dp} zero1={zero1}: loss trajectories must be bit-identical"
+        );
+        assert_eq!(
+            grad_norms(&overlapped),
+            grad_norms(&sequential),
+            "{bundle} tp{tp} dp{dp} zero1={zero1}: grad norms must be bit-identical"
+        );
+    }
+}
+
+#[test]
+fn overlapped_sync_is_deterministic() {
+    let sched = ScheduleKind::Interleaved1F1B { v: 2 };
+    let a = run("builtin:tiny-s4-mb2", 1, 2, 2, false, sched, true);
+    let b = run("builtin:tiny-s4-mb2", 1, 2, 2, false, sched, true);
+    assert_eq!(losses(&a), losses(&b), "overlapped engine must be deterministic");
+}
+
+#[test]
+fn bucket_size_does_not_change_numerics() {
+    // rank-order reduction is elementwise, so bucketing cannot move the
+    // trajectory: one bucket per stage vs dozens must agree exactly
+    let mk = |bucket: usize| {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s2-mb2".into(),
+            dp: 2,
+            microbatches: 2,
+            steps: 10,
+            grad_bucket_floats: bucket,
+            seed: 42,
+            ..Default::default()
+        };
+        train(&cfg).expect("training must succeed")
+    };
+    let coarse = mk(1 << 20);
+    let fine = mk(32);
+    assert_eq!(losses(&coarse), losses(&fine), "bucket size changed the trajectory");
+}
+
+/// The measured-overlap perf contract at dp ∈ {2, 4}, in two halves:
+///
+/// 1. **Hard pin (PR-2 style):** the engine-measured nonblocking
+///    bucket-round count must equal the analytic count derived from the
+///    bundle spec — `steps × Σ_stages ⌈params / grad_bucket_floats⌉` —
+///    EXACTLY, independent of dp and of overlap timing.
+/// 2. **Timing plumbing:** the engine's (raw, exposed) sync seconds
+///    must be structurally sane (exposed ≤ raw, overlap mode hides
+///    work, sequential mode hides none), and feeding the measured
+///    fraction through the shared `perf::dp_overlap_fraction` contract
+///    into `PerfModel` must reprice the engine's exposed term within
+///    10% of raw.
+#[test]
+fn measured_overlap_matches_model_term() {
+    // analytic bucket-round count for builtin:tiny-s4-mb2 at the test's
+    // grad_bucket_floats = 64, summed over the 4 global stages
+    let spec = BuiltinSpec::parse("builtin:tiny-s4-mb2").unwrap();
+    let rounds_per_step: u64 =
+        (0..spec.n_stages).map(|g| spec.stage_params(g).div_ceil(64) as u64).sum();
+
+    for dp in [2usize, 4] {
+        let sched = ScheduleKind::Interleaved1F1B { v: 2 };
+        let r = run("builtin:tiny-s4-mb2", 1, dp, 4, false, sched, true);
+
+        // 1. the hard pin: measured rounds == analytic bucket count
+        assert_eq!(
+            r.dp_bucket_rounds,
+            20 * rounds_per_step,
+            "dp={dp}: engine bucket rounds vs analytic count"
+        );
+
+        // 2. timing plumbing
+        let raw = r.dp_sync_raw_s();
+        let exposed = r.dp_sync_exposed_s;
+        assert!(raw > 0.0, "dp={dp}: DP sync must be measured");
+        assert!(exposed <= raw + 1e-12, "dp={dp}: exposed {exposed} > raw {raw}");
+        assert!(
+            r.dp_sync_hidden_s > 0.0,
+            "dp={dp}: overlap mode must hide some sync work under backward"
+        );
+        let fraction = r.dp_overlap_fraction();
+        assert!((0.0..=1.0).contains(&fraction), "dp={dp}: fraction {fraction}");
+        assert_eq!(fraction, dp_overlap_fraction(raw, exposed), "shared contract fn");
+        let model = PerfModel::default().with_dp_overlap(fraction);
+        let priced = model.dp_exposed_comm_time(raw);
+        assert!(
+            (priced - exposed).abs() <= 0.10 * raw,
+            "dp={dp}: model prices {priced}s exposed vs engine-measured {exposed}s (raw {raw}s)"
+        );
+    }
+
+    // sequential mode launches everything post-stream: nothing hidden,
+    // and the SAME bucket rounds (launch timing cannot change the count)
+    let sched = ScheduleKind::Interleaved1F1B { v: 2 };
+    let r = run("builtin:tiny-s4-mb2", 1, 2, 4, false, sched, false);
+    assert_eq!(r.dp_bucket_rounds, 20 * rounds_per_step, "sequential rounds");
+    assert_eq!(r.dp_sync_hidden_s, 0.0, "sequential sync must hide nothing");
+    assert_eq!(r.dp_overlap_fraction(), 0.0);
+    assert!(r.dp_sync_exposed_s > 0.0);
+}
+
+#[test]
+fn dp1_measures_no_dp_sync() {
+    let r = run("builtin:tiny-s2-mb2", 1, 1, 2, false, ScheduleKind::OneF1B, true);
+    assert_eq!(r.dp_sync_raw_s(), 0.0);
+    assert_eq!(r.dp_overlap_fraction(), 0.0);
+    assert_eq!(r.dp_bucket_rounds, 0, "dp=1 launches no buckets");
+}

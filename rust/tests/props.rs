@@ -288,6 +288,53 @@ fn prop_ring_allreduce_matches_naive() {
 }
 
 #[test]
+fn prop_bucketed_nonblocking_allreduce_matches_blocking() {
+    // the engine's overlapped grad-sync primitive: splitting a buffer
+    // into 1–4 in-flight nonblocking buckets must equal the blocking
+    // naive all-reduce BITWISE (both reduce in rank order), for random
+    // group sizes, lengths and bucket counts
+    let mut rng = Rng64::new(909);
+    for case in 0..12u64 {
+        let n = 1 + rng.below(4) as usize; // 1..4 ranks
+        let len = 4 + rng.below(300) as usize;
+        let n_buckets = 1 + rng.below(4) as usize; // 1..4 in flight
+        let seed = rng.next_u64();
+        let group = Group::new(n);
+        let bounds = chunk_bounds(len, n_buckets);
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let g = group.clone();
+                let bounds = bounds.clone();
+                thread::spawn(move || {
+                    let mut local = Rng64::new(seed ^ (rank as u64 + 7) * 0x51);
+                    let data: Vec<f32> = (0..len).map(|_| local.normal() as f32).collect();
+                    let mut want = data.clone();
+                    g.all_reduce_sum(rank, &mut want, Algo::Naive);
+                    // launch every bucket before waiting on any
+                    let started: Vec<_> = bounds
+                        .iter()
+                        .enumerate()
+                        .map(|(idx, &(lo, hi))| {
+                            let tag = (case << 8) | idx as u64;
+                            (lo, hi, g.start_all_reduce(rank, tag, data[lo..hi].to_vec()))
+                        })
+                        .collect();
+                    let mut got = vec![0.0f32; len];
+                    for (lo, hi, h) in started {
+                        got[lo..hi].copy_from_slice(&h.wait());
+                    }
+                    (want, got)
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (want, got) = h.join().unwrap();
+            assert_eq!(want, got, "case {case} rank {rank}: bucketed != blocking");
+        }
+    }
+}
+
+#[test]
 fn prop_reduce_scatter_allgather_roundtrip() {
     let mut rng = Rng64::new(57);
     for _ in 0..8 {
