@@ -53,10 +53,20 @@ fn main() -> anyhow::Result<()> {
     // `grad_bucket_floats`, `collective_algo` on EngineConfig) — the
     // engine measures how much of it stayed hidden:
     println!(
-        "DP sync {:.2} ms raw, {:.2} ms exposed -> {:.0}% overlapped with backward\n",
+        "DP sync {:.2} ms raw, {:.2} ms exposed -> {:.0}% overlapped with backward",
         report.dp_sync_raw_s() * 1e3,
         report.dp_sync_exposed_s * 1e3,
         report.dp_overlap_fraction() * 100.0,
+    );
+    // active dtype + loss scale + measured wire bytes (set
+    // `precision: Dtype::Bf16` on EngineConfig for the mixed-precision
+    // engine: bf16 storage, fp32 masters, half-width collectives)
+    println!(
+        "precision {}: loss scale {}, {:.1} KB grad-bucket payload, {:.1} KB total collective traffic\n",
+        report.precision.name(),
+        report.final_loss_scale,
+        report.dp_bucket_payload_bytes as f64 / 1e3,
+        report.comm_bytes as f64 / 1e3,
     );
     assert!(report.final_loss() < report.initial_loss(), "loss must decrease");
 

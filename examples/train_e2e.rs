@@ -36,6 +36,15 @@ fn main() -> anyhow::Result<()> {
         bundle: args.opt_str("bundle", bundle),
         artifacts_root: args.opt_str("artifacts", "artifacts").into(),
         dp,
+        precision: {
+            let name = args.opt_str("precision", "fp32");
+            frontier_llm::precision::Dtype::parse(&name)
+                .ok_or_else(|| anyhow::anyhow!("--precision must be fp32|bf16, got {name:?}"))?
+        },
+        loss_scale_init: args.opt("loss-scale", 1.0f32).map_err(anyhow::Error::msg)?,
+        loss_scale_growth_interval: args
+            .opt("loss-scale-growth", 0u32)
+            .map_err(anyhow::Error::msg)?,
         tp: args.opt("tp", 1).map_err(anyhow::Error::msg)?,
         schedule: ScheduleKind::OneF1B,
         microbatches,
@@ -87,6 +96,17 @@ fn main() -> anyhow::Result<()> {
     println!("mean step time    : {:.3} s", report.mean_step_time_s);
     println!("throughput        : {:.0} tokens/s", report.tokens_per_sec);
     println!("collective traffic: {:.1} MB", report.comm_bytes as f64 / 1e6);
+    println!(
+        "precision         : {} (loss scale {}, {} skipped steps)",
+        report.precision.name(),
+        report.final_loss_scale,
+        report.steps_skipped
+    );
+    println!(
+        "dp wire           : {:.1} KB grad buckets + {:.1} KB zero1 all-gather",
+        report.dp_bucket_payload_bytes as f64 / 1e3,
+        report.dp_param_ag_bytes as f64 / 1e3
+    );
     if report.dp_sync_raw_s() > 0.0 {
         println!(
             "dp sync           : {:.1} ms raw, {:.1} ms exposed ({:.0}% overlapped)",

@@ -80,6 +80,18 @@ fn registry() -> &'static Mutex<Vec<(String, Timing)>> {
     REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
 }
 
+fn meta_registry() -> &'static Mutex<BTreeMap<String, String>> {
+    static META: OnceLock<Mutex<BTreeMap<String, String>>> = OnceLock::new();
+    META.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Record a run-level key/value (e.g. the precision modes a bench
+/// covered) into the report's `meta` block; merged like bench sections.
+#[allow(dead_code)]
+pub fn record_meta(key: &str, value: &str) {
+    meta_registry().lock().unwrap().insert(key.to_string(), value.to_string());
+}
+
 /// Default report path: `<repo root>/BENCH_engine.json` (the bench crate
 /// lives in `rust/`), overridable with `BENCH_ENGINE_JSON`.
 #[allow(dead_code)]
@@ -99,6 +111,7 @@ pub fn write_report() {
     // existing sections survive (fig benches + engine_hotpath compose
     // one file); unparseable/absent files start fresh
     let mut sections: BTreeMap<String, (f64, f64, u32)> = BTreeMap::new();
+    let mut meta: BTreeMap<String, String> = BTreeMap::new();
     if let Ok(src) = std::fs::read_to_string(&path) {
         if let Ok(Json::Obj(top)) = Json::parse(&src) {
             if let Some(Json::Obj(benches)) = top.get("benches") {
@@ -109,12 +122,35 @@ pub fn write_report() {
                     sections.insert(name.clone(), (mean, min, iters));
                 }
             }
+            if let Some(Json::Obj(existing)) = top.get("meta") {
+                for (k, v) in existing {
+                    if let Some(s) = v.as_str() {
+                        meta.insert(k.clone(), s.to_string());
+                    }
+                }
+            }
         }
     }
     for (name, t) in registry().lock().unwrap().iter() {
         sections.insert(name.clone(), (t.mean_s * 1e9, t.min_s * 1e9, t.iters));
     }
-    let mut out = String::from("{\n  \"benches\": {\n");
+    for (k, v) in meta_registry().lock().unwrap().iter() {
+        meta.insert(k.clone(), v.clone());
+    }
+    let mut out = String::from("{\n");
+    if !meta.is_empty() {
+        out.push_str("  \"meta\": {\n");
+        let mut first = true;
+        for (k, v) in &meta {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(&format!("    {}: {}", escape(k), escape(v)));
+        }
+        out.push_str("\n  },\n");
+    }
+    out.push_str("  \"benches\": {\n");
     let mut first = true;
     for (name, (mean_ns, min_ns, iters)) in &sections {
         if !first {

@@ -15,7 +15,7 @@
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
-use bench_util::{bench, header, write_report};
+use bench_util::{bench, header, record_meta, write_report};
 
 use std::sync::Arc;
 use std::thread;
@@ -110,6 +110,16 @@ fn bench_linear_kernels(iters: u32) {
         "[kernel speedup at d=256: {:.2}x (contract: >= 3x)]",
         naive.mean_s / blocked.mean_s
     );
+    // bf16-in/f32-acc path: same blocked loops behind an input cast (the
+    // software-emulation overhead is the quantize pass; recorded so the
+    // fp32/bf16 pair rides BENCH_engine.json side by side)
+    h.iter_mut().chain(gw.iter_mut()).chain(dx.iter_mut()).for_each(|v| *v = 0.0);
+    bench("kernel::linear_fwdbwd_d256_bf16", 1, iters, || {
+        kernels::bf16::matmul_acc(&mut h, &x, &w, t, d, d);
+        kernels::bf16::matmul_at_acc(&mut gw, &x, &dy, t, d, d);
+        kernels::bf16::matmul_bt_acc(&mut dx, &dy, &w, t, d, d);
+        std::hint::black_box((h[0], gw[0], dx[0]));
+    });
 }
 
 /// The same contract through the real stage entry points: a pure MLP
@@ -143,6 +153,8 @@ fn main() {
     // size-dependent section names carry the actual size so smoke runs
     // never masquerade as full-size baselines in BENCH_engine.json
     let smoke = std::env::var("HOTPATH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    // precision modes this bench run covers (kernel + engine sections)
+    record_meta("precision", "fp32+bf16");
     let ar_len = if smoke { 1 << 16 } else { 4 << 20 };
     let sz = if smoke { "256KB" } else { "16MB" };
     let sz4 = if smoke { "64KB" } else { "4MB" };
@@ -206,9 +218,11 @@ fn main() {
     }
 
     header("end-to-end engine: DP grad sync, overlapped vs sequential (dp=2, v=2)");
-    for (label, overlap) in [
-        ("engine::train_dp2_overlap", true),
-        ("engine::train_dp2_sequential", false),
+    for (label, overlap, precision) in [
+        ("engine::train_dp2_overlap", true, frontier_llm::precision::Dtype::F32),
+        ("engine::train_dp2_sequential", false, frontier_llm::precision::Dtype::F32),
+        // bf16 bucket sync: packed-u16 deposits, half the wire bytes
+        ("engine::train_dp2_overlap_bf16", true, frontier_llm::precision::Dtype::Bf16),
     ] {
         let cfg = EngineConfig {
             bundle: "builtin:tiny-s4-mb2".into(),
@@ -218,6 +232,7 @@ fn main() {
             steps: 3,
             overlap_grad_sync: overlap,
             grad_bucket_floats: 256,
+            precision,
             ..Default::default()
         };
         bench(label, 1, 5, || {

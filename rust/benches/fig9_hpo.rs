@@ -48,6 +48,7 @@ fn main() {
             zero1: true,
             nnodes: 16,
             interleave: 1,
+            bf16: true,
         };
         std::hint::black_box(hpo::evaluate_point(&perf, &p));
     });

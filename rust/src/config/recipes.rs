@@ -29,7 +29,7 @@ impl Recipe {
     }
 }
 
-/// Table V, 175B column: TP=4, PP=16, MBS=1, GBS=640, ZeRO-1, FA2, fp16,
+/// Table V, 175B column: TP=4, PP=16, MBS=1, GBS=640, ZeRO-1, FA2, bf16
 /// checkpoint-activations.  Run at 1024 GPUs => dp = 1024/64 = 16.
 pub fn recipe_175b() -> Recipe {
     Recipe {
@@ -43,7 +43,7 @@ pub fn recipe_175b() -> Recipe {
             zero1: true,
             flash_attention: true,
             checkpoint_activations: true,
-            precision: Precision::Fp16,
+            precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
         },
     }
@@ -63,7 +63,7 @@ pub fn recipe_1t() -> Recipe {
             zero1: true,
             flash_attention: true,
             checkpoint_activations: true,
-            precision: Precision::Fp16,
+            precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
         },
     }
@@ -83,7 +83,7 @@ pub fn recipe_22b() -> Recipe {
             zero1: true,
             flash_attention: true,
             checkpoint_activations: true,
-            precision: Precision::Fp16,
+            precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
         },
     }

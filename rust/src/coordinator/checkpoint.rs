@@ -42,18 +42,30 @@ pub struct Manifest {
     pub tp: u32,
     pub dp: u32,
     pub zero1: bool,
+    /// Engine precision name ("fp32" / "bf16") — resuming under a
+    /// different precision is rejected (the optimizer state layout and
+    /// the parameter grid both change).
+    pub precision: String,
+    /// Dynamic loss-scaler state at the checkpointed step, so a resumed
+    /// run continues the exact scale schedule.
+    pub loss_scale: f32,
+    pub scale_good_steps: u32,
 }
 
 impl Manifest {
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"step\": {}, \"bundle\": {}, \"stages\": {}, \"tp\": {}, \"dp\": {}, \"zero1\": {}}}",
+            "{{\"step\": {}, \"bundle\": {}, \"stages\": {}, \"tp\": {}, \"dp\": {}, \
+             \"zero1\": {}, \"precision\": {}, \"loss_scale\": {}, \"scale_good_steps\": {}}}",
             self.step,
             crate::util::json::escape(&self.bundle),
             self.stages,
             self.tp,
             self.dp,
-            self.zero1
+            self.zero1,
+            crate::util::json::escape(&self.precision),
+            self.loss_scale,
+            self.scale_good_steps
         )
     }
 
@@ -79,6 +91,10 @@ impl Manifest {
             tp: j.u64_field("tp").map_err(|e| anyhow!("{e}"))? as u32,
             dp: j.u64_field("dp").map_err(|e| anyhow!("{e}"))? as u32,
             zero1: j.bool_field("zero1").map_err(|e| anyhow!("{e}"))?,
+            // pre-mixed-precision checkpoints were all fp32 at scale 1
+            precision: j.str_field("precision").unwrap_or_else(|_| "fp32".to_string()),
+            loss_scale: j.f64_field("loss_scale").unwrap_or(1.0) as f32,
+            scale_good_steps: j.u64_field("scale_good_steps").unwrap_or(0) as u32,
         })
     }
 
@@ -169,9 +185,26 @@ mod tests {
             tp: 4,
             dp: 3,
             zero1: true,
+            precision: "bf16".into(),
+            loss_scale: 2048.0,
+            scale_good_steps: 7,
         };
         let back = Manifest::from_json(&m.to_json()).unwrap();
         assert_eq!(m, back);
+        // fractional scales survive too (post-backoff states)
+        let m2 = Manifest { loss_scale: 0.03125, ..m };
+        assert_eq!(Manifest::from_json(&m2.to_json()).unwrap(), m2);
+    }
+
+    #[test]
+    fn manifest_without_precision_defaults_to_fp32() {
+        // pre-mixed-precision manifests keep loading
+        let legacy = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"stages\": 2, \
+                      \"tp\": 1, \"dp\": 1, \"zero1\": false}";
+        let m = Manifest::from_json(legacy).unwrap();
+        assert_eq!(m.precision, "fp32");
+        assert_eq!(m.loss_scale, 1.0);
+        assert_eq!(m.scale_good_steps, 0);
     }
 
     #[test]

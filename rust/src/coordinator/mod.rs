@@ -61,7 +61,8 @@ use crate::collectives::{Algo, Group, SubGroup};
 use crate::config::ScheduleKind;
 use crate::metrics::StepTimer;
 use crate::optim::{AdamConfig, LrSchedule};
-use crate::runtime::{Bundle, BuiltinSpec, Runtime};
+use crate::precision::{CastPolicy, Dtype};
+use crate::runtime::{Bundle, BuiltinSpec, Runtime, StageBackend};
 use crate::schedule;
 
 /// Engine configuration for one training run.
@@ -98,8 +99,24 @@ pub struct EngineConfig {
     /// all-reduce bucket); DeepSpeed's `allreduce_bucket_size` analogue.
     pub grad_bucket_floats: usize,
     /// Collective algorithm for the small syncs (grad-norm combine,
-    /// loss reduction).
+    /// loss reduction, the loss-scaler's overflow agreement) AND —
+    /// since the wire became dtype-aware — the tensor-parallel
+    /// all-reduces (`Naive` selects the deposit-exchange fold, whose
+    /// f32 association order differs from `Ring`'s; the default `Ring`
+    /// keeps the PR-3 fp32 numerics bit for bit).
     pub collective_algo: Algo,
+    /// Numeric precision of the run.  `F32` is the bitwise-pinned legacy
+    /// engine.  `Bf16` (builtin bundles only) stores params/activations/
+    /// grads on the bf16 grid with f32-accumulating kernels, keeps fp32
+    /// master weights in the optimizer, halves every collective payload
+    /// (packed-u16 wire), and arms the dynamic loss scaler.
+    pub precision: Dtype,
+    /// Initial loss scale (a power of two keeps scaling bitwise-neutral;
+    /// 1.0 + fp32 leaves the scaling machinery fully inert).
+    pub loss_scale_init: f32,
+    /// Consecutive overflow-free steps before the scale doubles
+    /// (0 = static scale, the default).
+    pub loss_scale_growth_interval: u32,
     pub seed: u64,
     /// Print a progress line every `log_every` steps (0 = silent).
     pub log_every: u32,
@@ -127,6 +144,9 @@ impl Default for EngineConfig {
             overlap_grad_sync: true,
             grad_bucket_floats: 1 << 15,
             collective_algo: Algo::Ring,
+            precision: Dtype::F32,
+            loss_scale_init: 1.0,
+            loss_scale_growth_interval: 0,
             seed: 1234,
             log_every: 0,
             checkpoint_dir: None,
@@ -143,9 +163,16 @@ pub struct StepLog {
     /// Mean training loss across every micro-batch and DP replica.
     pub loss: f32,
     /// Pre-clip gradient norm combined over the reporting worker's
-    /// hosted chunks (per-chunk norms are TP/DP-global; see `zero`).
+    /// hosted chunks (per-chunk norms are TP/DP-global; see `zero`);
+    /// `INFINITY` on loss-scaler-skipped steps.
     pub grad_norm: f32,
     pub step_time_s: f64,
+    /// Loss scale after this step's scaler update — what the next step
+    /// will apply (constant 1.0 under fp32; matches the checkpointed
+    /// scaler state at every step boundary).
+    pub loss_scale: f32,
+    /// Whether the optimizer step was skipped by the loss scaler.
+    pub skipped: bool,
 }
 
 /// Outcome of a training run.
@@ -177,6 +204,20 @@ pub struct TrainReport {
     /// (`steps × Σ_stages ⌈params / grad_bucket_floats⌉`) by the
     /// overlap tests, the way PR 2 pinned TP all-reduce bytes.
     pub dp_bucket_rounds: u64,
+    /// Logical DP gradient-bucket payload bytes (element count × wire
+    /// dtype, once per bucket round) — pinned EXACTLY against
+    /// `perf::dp_grad_payload_bytes` per step; exactly halves under bf16.
+    pub dp_bucket_payload_bytes: u64,
+    /// Logical ZeRO-1 updated-parameter all-gather payload bytes (the
+    /// second half of the reduce-scatter + all-gather wire accounting;
+    /// 0 for plain DDP, which never gathers).
+    pub dp_param_ag_bytes: u64,
+    /// Numeric precision the run executed at.
+    pub precision: Dtype,
+    /// Loss scale after the final step.
+    pub final_loss_scale: f32,
+    /// Optimizer steps skipped by the dynamic loss scaler.
+    pub steps_skipped: u64,
 }
 
 impl TrainReport {
@@ -211,9 +252,15 @@ pub fn train(cfg: &EngineConfig) -> Result<TrainReport> {
                 cfg.bundle
             )
         })?;
-        let bundle = Arc::new(Bundle::builtin(&spec));
+        let bundle =
+            Arc::new(Bundle::builtin_with_policy(&spec, CastPolicy::for_dtype(cfg.precision)));
         return train_with_bundle(cfg, Runtime::null(), bundle);
     }
+    anyhow::ensure!(
+        cfg.precision == Dtype::F32,
+        "--precision {} requires a builtin:* bundle — the AOT artifact stages are compiled fp32",
+        cfg.precision.name()
+    );
     let rt = Runtime::cpu()?;
     let bundle = Arc::new(Bundle::load(&rt, cfg.artifacts_root.join(&cfg.bundle))?);
     train_with_bundle(cfg, rt, bundle)
@@ -231,6 +278,25 @@ pub fn train_with_bundle(
     anyhow::ensure!(dp >= 1, "dp must be >= 1");
     anyhow::ensure!(tp >= 1, "tp must be >= 1");
     anyhow::ensure!(cfg.microbatches >= 1, "need at least one micro-batch");
+    anyhow::ensure!(
+        cfg.loss_scale_init.is_finite() && cfg.loss_scale_init > 0.0,
+        "loss scale must be positive and finite"
+    );
+    if cfg.precision != Dtype::F32 {
+        // mixed precision needs stages built under the matching policy
+        // (train() does this for builtin bundles; pre-built bundles from
+        // benches must opt in explicitly via Bundle::builtin_with_policy)
+        let want = CastPolicy::for_dtype(cfg.precision);
+        let ok = bundle.stages.iter().all(
+            |s| matches!(&s.backend, StageBackend::Builtin(st) if st.policy == want),
+        );
+        anyhow::ensure!(
+            ok,
+            "--precision {} requires a builtin:* bundle built with the matching cast \
+             policy (AOT artifact stages are compiled fp32-dense)",
+            cfg.precision.name()
+        );
+    }
     if tp > 1 {
         // only the builtin backend shards; fail fast with a clear message
         // (tp_shard re-validates per stage)
@@ -271,7 +337,8 @@ pub fn train_with_bundle(
 
     // checkpoint resume: validate the manifest against this run's shape
     // (global stages, not worker ranks — re-chunked resumes are legal)
-    let start_step = if cfg.resume {
+    // and pick up the loss-scaler state where the checkpoint left it
+    let (start_step, start_loss_scale, start_scale_good) = if cfg.resume {
         let dir = cfg
             .checkpoint_dir
             .as_ref()
@@ -285,9 +352,16 @@ pub fn train_with_bundle(
                 && manifest.zero1 == cfg.zero1,
             "checkpoint shape mismatch: {manifest:?} vs current run"
         );
-        manifest.step
+        anyhow::ensure!(
+            manifest.precision == cfg.precision.name(),
+            "checkpoint precision {:?} does not match this run's {:?} — the parameter \
+             grid and optimizer-state layout both change with precision",
+            manifest.precision,
+            cfg.precision.name()
+        );
+        (manifest.step, manifest.loss_scale, manifest.scale_good_steps)
     } else {
-        0
+        (0, cfg.loss_scale_init, 0)
     };
 
     // world group: tagged p2p mailboxes between workers.  Megatron rank
@@ -304,7 +378,8 @@ pub fn train_with_bundle(
         .collect();
     let dp_groups: Vec<Arc<Group>> = (0..pp * tp).map(|_| Group::new(dp)).collect();
 
-    let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32)>();
+    // per-step report: (step, loss, grad norm, loss scale, skipped)
+    let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32, f32, bool)>();
 
     let mut handles = Vec::with_capacity(world_size);
     for pp_rank in 0..pp {
@@ -326,6 +401,8 @@ pub fn train_with_bundle(
                     tp,
                     v,
                     start_step,
+                    start_loss_scale,
+                    start_scale_good,
                     loss_tx: if pp_rank == pp - 1 && dp_rank == 0 && tp_rank == 0 {
                         Some(loss_tx.clone())
                     } else {
@@ -348,17 +425,24 @@ pub fn train_with_bundle(
     let mut logs: Vec<StepLog> = Vec::with_capacity(cfg.steps as usize);
     let start = std::time::Instant::now();
     let mut last = 0.0f64;
-    while let Ok((step, loss, grad_norm)) = loss_rx.recv() {
+    let mut steps_skipped = 0u64;
+    let mut final_loss_scale = start_loss_scale;
+    while let Ok((step, loss, grad_norm, loss_scale, skipped)) = loss_rx.recv() {
         let now = start.elapsed().as_secs_f64();
         let dt = now - last;
         last = now;
         timer.record(dt);
+        if skipped {
+            steps_skipped += 1;
+        }
+        final_loss_scale = loss_scale;
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            let skip_note = if skipped { "  [overflow: step skipped]" } else { "" };
             println!(
-                "step {step:>5}  loss {loss:8.4}  |g| {grad_norm:8.3}  {dt:7.3}s/step"
+                "step {step:>5}  loss {loss:8.4}  |g| {grad_norm:8.3}  {dt:7.3}s/step{skip_note}"
             );
         }
-        logs.push(StepLog { step, loss, grad_norm, step_time_s: dt });
+        logs.push(StepLog { step, loss, grad_norm, step_time_s: dt, loss_scale, skipped });
     }
 
     for h in handles {
@@ -400,6 +484,14 @@ pub fn train_with_bundle(
         .iter()
         .map(|g| g.nb_rounds.load(Ordering::Relaxed))
         .sum::<u64>();
+    let dp_bucket_payload_bytes = dp_groups
+        .iter()
+        .map(|g| g.nb_payload_bytes.load(Ordering::Relaxed))
+        .sum::<u64>();
+    let dp_param_ag_bytes = dp_groups
+        .iter()
+        .map(|g| g.ag_payload_bytes.load(Ordering::Relaxed))
+        .sum::<u64>();
     Ok(TrainReport {
         world_size,
         total_params: bundle.meta.model.total_params,
@@ -412,6 +504,11 @@ pub fn train_with_bundle(
         dp_sync_hidden_s,
         dp_sync_exposed_s,
         dp_bucket_rounds,
+        dp_bucket_payload_bytes,
+        dp_param_ag_bytes,
+        precision: cfg.precision,
+        final_loss_scale,
+        steps_skipped,
         logs,
     })
 }

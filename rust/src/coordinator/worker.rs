@@ -41,6 +41,7 @@ use anyhow::{anyhow, Result};
 
 use crate::collectives::{Group, ReduceHandle, SubGroup, TpComm};
 use crate::data::BatchStream;
+use crate::precision::{Dtype, LossScaler};
 use crate::runtime::{Bundle, ParamsHandle, Runtime, StageExecutables};
 use crate::schedule::{Op, Schedule};
 use crate::zero::DistOptimizer;
@@ -69,8 +70,13 @@ pub struct WorkerCtx {
     pub v: usize,
     /// First step index (non-zero when resuming from a checkpoint).
     pub start_step: u32,
-    /// Only the (last-rank, dp=0, tp=0) worker reports losses.
-    pub loss_tx: Option<mpsc::Sender<(u32, f32, f32)>>,
+    /// Loss-scaler state to start from (the checkpointed scale on
+    /// resume, `cfg.loss_scale_init` otherwise).
+    pub start_loss_scale: f32,
+    pub start_scale_good: u32,
+    /// Only the (last-rank, dp=0, tp=0) worker reports losses:
+    /// (step, loss, grad norm, post-update loss scale, skipped).
+    pub loss_tx: Option<mpsc::Sender<(u32, f32, f32, f32, bool)>>,
 }
 
 const TAG_FWD: u64 = 1;
@@ -118,6 +124,7 @@ fn launch_grad_buckets(
     chunk: usize,
     grads: &[f32],
     bucket_floats: usize,
+    wire: Dtype,
 ) -> ChunkBuckets {
     let bucket = bucket_floats.max(1);
     assert!(chunk < (1 << 8), "chunk {chunk} overflows the bucket-tag field");
@@ -131,7 +138,11 @@ fn launch_grad_buckets(
     while lo < grads.len() {
         let hi = (lo + bucket).min(grads.len());
         let tag = ((step as u64) << 32) | ((chunk as u64) << 24) | out.len() as u64;
-        out.push((lo, hi, group.start_all_reduce(rank, tag, grads[lo..hi].to_vec())));
+        out.push((
+            lo,
+            hi,
+            group.start_all_reduce_dtype(rank, tag, grads[lo..hi].to_vec(), wire),
+        ));
         lo = hi;
     }
     out
@@ -164,6 +175,7 @@ fn finalize_and_launch(
         c,
         grads,
         ctx.cfg.grad_bucket_floats,
+        ctx.cfg.precision,
     );
     let counter = if hidden { &ctx.dp_group.nb_hidden_ns } else { &ctx.dp_group.nb_exposed_ns };
     counter.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -275,8 +287,28 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     let owns_embed = ctx.pp_rank == 0;
     let owns_head = ctx.pp_rank == ctx.pp - 1;
 
-    // this shard's tensor-parallel communicator (no-op when tp = 1)
-    let comm = TpComm::new(ctx.tp_group.clone(), ctx.world_rank());
+    // this shard's tensor-parallel communicator (no-op when tp = 1),
+    // carrying the run's wire dtype (bf16 payloads pack half-width) and
+    // collective algorithm for its all-reduces
+    let comm = TpComm::new(ctx.tp_group.clone(), ctx.world_rank())
+        .with_wire(ctx.cfg.precision)
+        .with_algo(ctx.cfg.collective_algo);
+
+    // dynamic loss scaling: live whenever the run is mixed-precision or
+    // an explicit scale was requested — including a non-unit scale
+    // restored from a checkpoint manifest (a resume must keep unscaling
+    // even if the resuming config omitted --loss-scale); fully inert (no
+    // extra collectives, no extra float ops) on the default fp32 path,
+    // which must stay bitwise-identical to the pre-mixed-precision engine
+    let scaling_active = ctx.cfg.precision != Dtype::F32
+        || ctx.cfg.loss_scale_init != 1.0
+        || ctx.start_loss_scale != 1.0
+        || ctx.cfg.loss_scale_growth_interval > 0;
+    let mut scaler = LossScaler::with_state(
+        ctx.start_loss_scale,
+        ctx.cfg.loss_scale_growth_interval,
+        ctx.start_scale_good,
+    );
 
     // ---- per-chunk slots: stage executables, params, optimizer ----
     // tp = 1 borrows the bundle's dense stages; tp > 1 derives this
@@ -317,6 +349,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             ctx.dp_rank,
             ctx.dp,
             ctx.cfg.collective_algo,
+            ctx.cfg.precision,
         ));
         params.push(Arc::new(p));
     }
@@ -382,6 +415,9 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             g.iter_mut().for_each(|x| *x = 0.0);
         }
         let mut loss_sum = 0.0f32;
+        // the loss scale applied to this step's backward (a power of two,
+        // so scaling is exact; 1.0 keeps the multiplies skipped entirely)
+        let scale = scaler.scale();
         // per-chunk backward countdown + this step's in-flight buckets
         let mut bwd_left: Vec<usize> = vec![m; ctx.v];
         let mut buckets: Vec<ChunkBuckets> = (0..ctx.v).map(|_| Vec::new()).collect();
@@ -443,15 +479,26 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         // fused fwd+bwd: (flat, tokens, targets) -> (gflat, loss)
                         let tokens = stash_tok[mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let (gp, loss) =
+                        let (mut gp, loss) =
                             stage.bwd_single(&ctx.rt, pbuf, &comm, &tokens, &targets, dims)?;
+                        if scale != 1.0 {
+                            gp.iter_mut().for_each(|x| *x *= scale);
+                        }
                         accumulate(&mut grad_accum[c], &gp);
                         loss_sum += loss;
                     } else if g == k - 1 {
                         let x = stash_x[c][mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let (gp, gx, loss) =
+                        let (mut gp, mut gx, loss) =
                             stage.bwd_last(&ctx.rt, pbuf, &comm, &x, &targets, dims)?;
+                        // loss scaling enters at the source: the head
+                        // stage's own grads and the gradient it sends
+                        // upstream (everything upstream scales through
+                        // the chain automatically)
+                        if scale != 1.0 {
+                            gp.iter_mut().for_each(|x| *x *= scale);
+                            gx.iter_mut().for_each(|x| *x *= scale);
+                        }
                         accumulate(&mut grad_accum[c], &gp);
                         loss_sum += loss;
                         send_grad(&ctx, &mut local, g, mb, gx);
@@ -510,19 +557,16 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             }
         }
 
-        // drain the bucket handles + (sharded) optimizer step, chunk by
-        // chunk in a fixed order (every rank of a DP row walks the same
-        // sequence, so the per-chunk collective rounds line up; bucket
-        // reduction is rank-order deterministic regardless of overlap
-        // timing, so overlapped ≡ sequential bit for bit)
+        // drain every chunk's bucket handles in a fixed order (every
+        // rank of a DP row walks the same sequence, so the per-chunk
+        // collective rounds line up; bucket reduction is rank-order
+        // deterministic regardless of overlap timing, so overlapped ≡
+        // sequential bit for bit)
         let lr_scale = ctx
             .cfg
             .lr_schedule
             .map(|sch| sch.scale(step as u64))
             .unwrap_or(1.0);
-        // combined pre-clip norm over every chunk this worker hosts (a
-        // single chunk's spike must not be masked by the last chunk's)
-        let mut grad_norm_sq = 0.0f32;
         for c in 0..ctx.v {
             if ctx.dp > 1 {
                 let t0 = Instant::now();
@@ -537,20 +581,54 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                 let inv_dp = 1.0 / ctx.dp as f32;
                 grad_accum[c].iter_mut().for_each(|x| *x *= inv_dp);
             }
-            // under TP the clip norm combines across the tensor group
-            // (replicated span counted once) — dense-equivalent clipping
-            let tp_ctx = stages[c].tp_replicated_span().map(|span| (&comm, span));
-            let norm = opts[c].step_reduced(
-                &ctx.dp_group,
-                ctx.dp_rank,
-                Arc::make_mut(&mut params[c]),
-                &mut grad_accum[c],
-                lr_scale,
-                tp_ctx,
-            );
-            grad_norm_sq += norm * norm;
         }
-        let grad_norm = grad_norm_sq.sqrt();
+
+        // mixed precision: every worker must reach the same skip verdict
+        // (a skipped step leaves every optimizer untouched), so the local
+        // non-finite-gradient flag is agreed across the WHOLE world with
+        // a 1-float all-reduce before the scaler rules.  Then unscale the
+        // surviving gradients (1/scale is a power of two — exact).
+        let mut skipped = false;
+        if scaling_active {
+            let local_overflow =
+                grad_accum.iter().any(|g| g.iter().any(|x| !x.is_finite()));
+            let mut flag = vec![if local_overflow { 1.0f32 } else { 0.0 }];
+            ctx.world
+                .all_reduce_sum(ctx.world_rank(), &mut flag, ctx.cfg.collective_algo);
+            skipped = scaler.update(flag[0] > 0.0);
+            if !skipped && scale != 1.0 {
+                let inv = 1.0 / scale;
+                for g in grad_accum.iter_mut() {
+                    g.iter_mut().for_each(|x| *x *= inv);
+                }
+            }
+        }
+
+        // (sharded) optimizer step, chunk by chunk; combined pre-clip
+        // norm over every chunk this worker hosts (a single chunk's
+        // spike must not be masked by the last chunk's).  A scaler-
+        // skipped step touches no optimizer state at all — Adam's step
+        // count included — and reports an infinite gradient norm.
+        let grad_norm = if skipped {
+            f32::INFINITY
+        } else {
+            let mut grad_norm_sq = 0.0f32;
+            for c in 0..ctx.v {
+                // under TP the clip norm combines across the tensor group
+                // (replicated span counted once) — dense-equivalent clipping
+                let tp_ctx = stages[c].tp_replicated_span().map(|span| (&comm, span));
+                let norm = opts[c].step_reduced(
+                    &ctx.dp_group,
+                    ctx.dp_rank,
+                    Arc::make_mut(&mut params[c]),
+                    &mut grad_accum[c],
+                    lr_scale,
+                    tp_ctx,
+                );
+                grad_norm_sq += norm * norm;
+            }
+            grad_norm_sq.sqrt()
+        };
 
         // periodic checkpoint: every rank persists its own pieces after a
         // world barrier (so all stages are at the same step).  Files are
@@ -587,6 +665,9 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         tp: ctx.tp as u32,
                         dp: ctx.dp as u32,
                         zero1: ctx.cfg.zero1,
+                        precision: ctx.cfg.precision.name().to_string(),
+                        loss_scale: scaler.scale(),
+                        scale_good_steps: scaler.good_steps(),
                     }
                     .save(dir)?;
                 }
@@ -600,7 +681,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                 .all_reduce_sum(ctx.dp_rank, &mut l, ctx.cfg.collective_algo);
             let mean_loss = l[0] / ctx.dp as f32;
             if let Some(tx) = &ctx.loss_tx {
-                tx.send((step, mean_loss, grad_norm))
+                tx.send((step, mean_loss, grad_norm, scaler.scale(), skipped))
                     .map_err(|_| anyhow!("leader hung up"))?;
             }
         }

@@ -20,6 +20,14 @@ pub struct Point {
     /// to 1 whenever `gas % pp != 0` — the alignment Megatron-style
     /// interleaving requires — so every sampled point is launchable.
     pub interleave: u32,
+    /// Mixed precision (bf16 storage + fp32 masters) vs full fp32.  The
+    /// Table IV space pins this `true` when sampling: at 175B a full-fp32
+    /// run cannot fit regardless of the other knobs (its only effect on
+    /// a search would be padding the OOM count), and keeping the sampler
+    /// stream unchanged preserves the calibrated Fig 9/10 behaviour.
+    /// The dimension is still explicit in [`FEATURES`] / [`Point::features`]
+    /// and [`Point::to_config`] honours `bf16 = false`.
+    pub bf16: bool,
 }
 
 pub const PP_CHOICES: [u32; 6] = [1, 2, 4, 8, 12, 16];
@@ -30,8 +38,8 @@ pub const NNODES_CHOICES: [u32; 2] = [12, 16];
 pub const INTERLEAVE_CHOICES: [u32; 3] = [1, 2, 4];
 
 /// Feature names in SHAP/reporting order (paper Fig 10 uses `p:` prefixes).
-pub const FEATURES: [&str; 7] =
-    ["p:mbs", "p:tp", "p:pp", "p:num_nodes", "p:zero1", "p:gas", "p:interleave"];
+pub const FEATURES: [&str; 8] =
+    ["p:mbs", "p:tp", "p:pp", "p:num_nodes", "p:zero1", "p:gas", "p:interleave", "p:bf16"];
 
 impl Point {
     /// Uniform random sample over *launchable* points: configurations
@@ -52,6 +60,7 @@ impl Point {
                 nnodes: NNODES_CHOICES[rng.below(NNODES_CHOICES.len() as u64) as usize],
                 interleave: INTERLEAVE_CHOICES
                     [rng.below(INTERLEAVE_CHOICES.len() as u64) as usize],
+                bf16: true,
             };
             if p.gas % p.pp != 0 {
                 p.interleave = 1;
@@ -67,9 +76,9 @@ impl Point {
         self.nnodes * GPUS_PER_NODE
     }
 
-    /// Normalised feature vector in [0,1]^7 (surrogate + SHAP input),
+    /// Normalised feature vector in [0,1]^8 (surrogate + SHAP input),
     /// ordered as [`FEATURES`].
-    pub fn features(&self) -> [f64; 7] {
+    pub fn features(&self) -> [f64; 8] {
         let norm = |v: f64, lo: f64, hi: f64| (v - lo) / (hi - lo);
         [
             norm(self.mbs as f64, MBS_RANGE.0 as f64, MBS_RANGE.1 as f64),
@@ -79,6 +88,7 @@ impl Point {
             if self.zero1 { 1.0 } else { 0.0 },
             norm(self.gas as f64, 5.0, 10.0),
             norm((self.interleave as f64).log2(), 0.0, 2.0),
+            if self.bf16 { 1.0 } else { 0.0 },
         ]
     }
 
@@ -112,7 +122,7 @@ impl Point {
                 zero1: self.zero1,
                 flash_attention: true,
                 checkpoint_activations: true,
-                precision: Precision::Fp16,
+                precision: if self.bf16 { Precision::Bf16 } else { Precision::Fp32 },
                 schedule,
             },
         ))
@@ -162,6 +172,7 @@ mod tests {
             zero1: true,
             nnodes: 16,
             interleave: 1,
+            bf16: true,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.dp, 2);
@@ -180,6 +191,7 @@ mod tests {
             zero1: true,
             nnodes: 16,
             interleave: 2,
+            bf16: true,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.schedule, ScheduleKind::Interleaved1F1B { v: 2 });
@@ -187,6 +199,28 @@ mod tests {
         // interleaving strictly shrinks the analytic bubble here
         let plain = ScheduleKind::OneF1B.bubble_fraction(2, 10);
         assert!(cfg.bubble_fraction() < plain);
+    }
+
+    #[test]
+    fn precision_dimension_round_trips() {
+        let mut p = Point {
+            pp: 2,
+            tp: 2,
+            mbs: 4,
+            gas: 10,
+            zero1: false,
+            nnodes: 16,
+            interleave: 1,
+            bf16: false,
+        };
+        let (_, cfg) = p.to_config().unwrap();
+        assert_eq!(cfg.precision, Precision::Fp32);
+        assert_eq!(p.features()[7], 0.0);
+        p.bf16 = true;
+        let (_, cfg) = p.to_config().unwrap();
+        assert_eq!(cfg.precision, Precision::Bf16);
+        assert_eq!(p.features()[7], 1.0);
+        assert_eq!(FEATURES[7], "p:bf16");
     }
 
     #[test]
@@ -200,6 +234,7 @@ mod tests {
             zero1: false,
             nnodes: 12,
             interleave: 1,
+            bf16: true,
         };
         assert!(p.to_config().is_err());
     }

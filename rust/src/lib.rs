@@ -37,6 +37,7 @@ pub mod metrics;
 pub mod optim;
 pub mod parallel;
 pub mod perf;
+pub mod precision;
 pub mod runtime;
 pub mod schedule;
 pub mod topology;

@@ -38,6 +38,7 @@ COMMANDS:
            [--artifacts DIR] [--dp N] [--tp N] [--microbatches N] [--steps N]
            [--zero1] [--gpipe | --interleave V]
            [--no-overlap] [--bucket-floats N] [--collective-algo ring|naive]
+           [--precision fp32|bf16] [--loss-scale S] [--loss-scale-growth N]
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
 
@@ -50,9 +51,17 @@ COMMANDS:
   nonblocking all-reduce, bit-identical trajectories): --no-overlap
   launches the same buckets sequentially after the step's op stream,
   --bucket-floats sets the bucket granularity, and --collective-algo
-  picks the algorithm for the small grad-norm/loss syncs.  Quickstart:
+  picks the algorithm for the small grad-norm/loss syncs.
+
+  --precision bf16 (builtin bundles only) stores params/activations/
+  grads in bf16 with f32-accumulating kernels, keeps fp32 master weights
+  in the optimizer (sharded under --zero1), halves every collective
+  payload (packed-u16 wire), and arms the dynamic loss scaler:
+  --loss-scale sets the initial (power-of-two) scale, --loss-scale-growth
+  the clean-step interval before it doubles (0 = static).  Quickstart:
 
     frontier train --bundle builtin:tiny-s4-mb2 --tp 2 --dp 2 --steps 20
+    frontier train --bundle builtin:tiny-s4-mb2 --precision bf16 --dp 2 --steps 20
 ";
 
 fn main() -> Result<()> {
@@ -393,6 +402,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             "naive" => frontier_llm::collectives::Algo::Naive,
             other => anyhow::bail!("--collective-algo must be ring|naive, got {other:?}"),
         },
+        precision: {
+            let name = args.opt_str("precision", "fp32");
+            frontier_llm::precision::Dtype::parse(&name)
+                .ok_or_else(|| anyhow::anyhow!("--precision must be fp32|bf16, got {name:?}"))?
+        },
+        loss_scale_init: args.opt("loss-scale", 1.0f32).map_err(anyhow::Error::msg)?,
+        loss_scale_growth_interval: args
+            .opt("loss-scale-growth", 0u32)
+            .map_err(anyhow::Error::msg)?,
         seed: args.opt("seed", 1234).map_err(anyhow::Error::msg)?,
         log_every: args.opt("log-every", 1).map_err(anyhow::Error::msg)?,
         checkpoint_dir: args.get("checkpoint").map(Into::into),
@@ -412,6 +430,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.mean_step_time_s,
         report.tokens_per_sec,
         report.comm_bytes as f64 / 1e6
+    );
+    println!(
+        "  precision {}: loss scale {} ({} overflow-skipped steps), \
+         {:.1} KB DP grad payload/run{}",
+        report.precision.name(),
+        report.final_loss_scale,
+        report.steps_skipped,
+        report.dp_bucket_payload_bytes as f64 / 1e3,
+        if report.dp_param_ag_bytes > 0 {
+            format!(" + {:.1} KB ZeRO-1 param all-gather", report.dp_param_ag_bytes as f64 / 1e3)
+        } else {
+            String::new()
+        }
     );
     if report.tp_ar_rounds > 0 {
         println!(

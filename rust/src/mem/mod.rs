@@ -16,6 +16,12 @@
 //!
 //! This model is what rejects configurations during HPO: the red-arrow
 //! failures of Fig 9 are exactly `fits() == false` here.
+//!
+//! Two selectable per-parameter layouts ([`Accounting`]): the paper's
+//! Table II 14 bytes/param (the calibrated default above), and the
+//! executed bf16 subsystem's **16 bytes/param** — 2 (bf16 params) +
+//! 2 (bf16 grads) + 12 (fp32 master + Adam m + Adam v, all ZeRO-1
+//! shardable) — the ZeRO-paper accounting `--precision bf16` realises.
 
 use crate::config::{ModelSpec, ParallelConfig};
 use crate::schedule;
@@ -29,6 +35,34 @@ pub const FRAMEWORK_OVERHEAD: u64 = 2 * (1 << 30);
 pub const BYTES_PARAMS: u64 = 6;
 pub const BYTES_GRADS: u64 = 4;
 pub const BYTES_OPTIMIZER: u64 = 4;
+
+/// Byte-per-parameter multipliers of the bf16 mixed-precision subsystem
+/// (the ZeRO-paper 16-bytes/param layout the engine now executes):
+/// 2-byte working params + 2-byte grads + fp32 optimizer trio
+/// (4 master + 4 momentum + 4 variance).
+pub const MIXED_BYTES_PARAMS: u64 = 2;
+pub const MIXED_BYTES_GRADS: u64 = 2;
+pub const MIXED_BYTES_MASTER: u64 = 4;
+pub const MIXED_BYTES_ADAM_M: u64 = 4;
+pub const MIXED_BYTES_ADAM_V: u64 = 4;
+/// Optimizer-owned bytes/param under mixed precision (master + m + v) —
+/// what ZeRO-1 shards across the DP group.
+pub const MIXED_BYTES_OPTIMIZER: u64 =
+    MIXED_BYTES_MASTER + MIXED_BYTES_ADAM_M + MIXED_BYTES_ADAM_V;
+
+/// Which per-parameter byte layout the footprint model charges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Accounting {
+    /// Paper Table II: 6 (fp32 master + fp16 working) + 4 (fp32 grads)
+    /// + 4 (fp32 momentum) = 14 bytes/param — the calibrated default
+    /// every Fig 9/11 number was fitted with.
+    #[default]
+    Table2,
+    /// The executed bf16 subsystem: 2 + 2 + (4+4+4) = 16 bytes/param,
+    /// with ZeRO-1 sharding the whole 12-byte optimizer trio by `dp`
+    /// (master weights live in the optimizer shard).
+    Mixed16,
+}
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MemoryBreakdown {
@@ -57,6 +91,16 @@ pub fn table2_row(nominal_params: u64) -> (u64, u64, u64, u64) {
     let params = BYTES_PARAMS * p;
     let grads = BYTES_GRADS * p;
     let opt = BYTES_OPTIMIZER * p;
+    (params, grads, opt, params + grads + opt)
+}
+
+/// Whole-model requirement under the executed bf16 mixed-precision
+/// layout: `(params, grads, optimizer, total)` = `(2, 2, 12, 16) × p`.
+pub fn mixed16_row(nominal_params: u64) -> (u64, u64, u64, u64) {
+    let p = nominal_params;
+    let params = MIXED_BYTES_PARAMS * p;
+    let grads = MIXED_BYTES_GRADS * p;
+    let opt = MIXED_BYTES_OPTIMIZER * p;
     (params, grads, opt, params + grads + opt)
 }
 
@@ -91,8 +135,17 @@ fn layer_working_set(model: &ModelSpec, cfg: &ParallelConfig) -> u64 {
     (dense + attn_matrix) / cfg.tp as u64
 }
 
-/// Per-GPU memory of the worst (first) pipeline stage.
+/// Per-GPU memory of the worst (first) pipeline stage, Table II
+/// accounting (the calibrated default).
 pub fn per_gpu(model: &ModelSpec, cfg: &ParallelConfig) -> MemoryBreakdown {
+    per_gpu_acct(model, cfg, Accounting::Table2)
+}
+
+/// Per-GPU memory under a selectable byte layout (see [`Accounting`]):
+/// the Table II 14×/param accounting, or the executed bf16 subsystem's
+/// 16×/param layout with its whole 12-byte optimizer trio (incl. fp32
+/// masters) ZeRO-sharded.
+pub fn per_gpu_acct(model: &ModelSpec, cfg: &ParallelConfig, acct: Accounting) -> MemoryBreakdown {
     let n_total = model.total_params();
     // first stage carries the embedding and ceil(L/pp) layers
     let spans = model.stage_spans(cfg.pp.min(model.n_layers));
@@ -106,18 +159,31 @@ pub fn per_gpu(model: &ModelSpec, cfg: &ParallelConfig) -> MemoryBreakdown {
         (model.head_params() + last_layers as u64 * model.layer_params()) / cfg.tp as u64;
     let n_local = n_stage.max(n_last).max(n_total / (cfg.tp as u64 * cfg.pp as u64));
 
-    let params = BYTES_PARAMS * n_local;
-    let grads = BYTES_GRADS * n_local;
-    let optimizer = BYTES_OPTIMIZER * n_local;
-
-    // ZeRO-1 shards the optimizer-owned fp32 state (master params 4x +
-    // optimizer 4x) across the DP group
-    let (params, optimizer) = if cfg.zero1 && cfg.dp > 1 {
-        let master = 4 * n_local; // fp32 master copy lives in the optimizer shard
-        let working = params - master; // fp16 working weights stay replicated
-        (working + master / cfg.dp as u64, optimizer / cfg.dp as u64)
-    } else {
-        (params, optimizer)
+    let (params, grads, optimizer) = match acct {
+        Accounting::Table2 => {
+            let params = BYTES_PARAMS * n_local;
+            let grads = BYTES_GRADS * n_local;
+            let optimizer = BYTES_OPTIMIZER * n_local;
+            // ZeRO-1 shards the optimizer-owned fp32 state (master params
+            // 4x + optimizer 4x) across the DP group
+            if cfg.zero1 && cfg.dp > 1 {
+                let master = 4 * n_local; // fp32 master copy lives in the optimizer shard
+                let working = params - master; // fp16 working weights stay replicated
+                (working + master / cfg.dp as u64, grads, optimizer / cfg.dp as u64)
+            } else {
+                (params, grads, optimizer)
+            }
+        }
+        Accounting::Mixed16 => {
+            let params = MIXED_BYTES_PARAMS * n_local; // bf16 working copy
+            let grads = MIXED_BYTES_GRADS * n_local; // bf16 grads
+            let optimizer = MIXED_BYTES_OPTIMIZER * n_local; // master + m + v
+            if cfg.zero1 && cfg.dp > 1 {
+                (params, grads, optimizer / cfg.dp as u64)
+            } else {
+                (params, grads, optimizer)
+            }
+        }
     };
 
     // activations: peak in-flight *chunk* inputs on rank 0.  With
@@ -177,6 +243,41 @@ mod tests {
         assert!((gb(t175) - 2450.0).abs() < 1.0); // 2.45 TB
         let (_, _, _, t1t) = table2_row(1_000_000_000_000);
         assert!((gb(t1t) - 14_000.0).abs() < 1.0); // 14 TB
+    }
+
+    #[test]
+    fn mixed16_row_matches_the_paper_arithmetic() {
+        let gb = |b: u64| b as f64 / 1e9;
+        let (p, g, o, t) = mixed16_row(22_000_000_000);
+        assert_eq!(gb(p).round() as i64, 44); // 2 bytes/param
+        assert_eq!(gb(g).round() as i64, 44); // 2 bytes/param
+        assert_eq!(gb(o).round() as i64, 264); // 4 + 4 + 4 bytes/param
+        assert_eq!(gb(t).round() as i64, 352); // 16 bytes/param
+        let (_, _, _, t1t) = mixed16_row(1_000_000_000_000);
+        assert!((gb(t1t) - 16_000.0).abs() < 1.0); // 16 TB
+        assert_eq!(MIXED_BYTES_PARAMS + MIXED_BYTES_GRADS + MIXED_BYTES_OPTIMIZER, 16);
+    }
+
+    #[test]
+    fn mixed16_per_gpu_selectable_and_zero1_shards_the_masters() {
+        let m = lookup("175b").unwrap();
+        let base = ParallelConfig::default().with_tp(8).with_pp(8).with_dp(16).with_gbs(64);
+        let t2 = per_gpu_acct(&m, &base, Accounting::Table2);
+        assert_eq!(t2, per_gpu(&m, &base), "Table2 must stay the default, bit for bit");
+        let mx = per_gpu_acct(&m, &base, Accounting::Mixed16);
+        // without ZeRO: 16x > 14x on the parameter-proportional terms
+        assert!(mx.params + mx.grads + mx.optimizer > t2.params + t2.grads + t2.optimizer);
+        assert_eq!(mx.activations, t2.activations, "activations are layout-independent");
+        // with ZeRO-1 at large dp, Mixed16 wins: only 4 unsharded
+        // bytes/param (2 + 2) vs Table II's 6 (2 working + 4 fp32 grads)
+        let z = base.clone().with_zero1(true);
+        let t2z = per_gpu_acct(&m, &z, Accounting::Table2);
+        let mxz = per_gpu_acct(&m, &z, Accounting::Mixed16);
+        assert!(
+            mxz.params + mxz.grads + mxz.optimizer < t2z.params + t2z.grads + t2z.optimizer,
+            "ZeRO-1 must shard the whole 12-byte optimizer trio under Mixed16"
+        );
+        assert!(mxz.optimizer < mx.optimizer);
     }
 
     #[test]

@@ -5,7 +5,16 @@
 //! elementwise pass over slices — which is exactly what makes ZeRO-1
 //! sharding trivial: each DP rank runs `step` on its own sub-range only
 //! (`zero::Zero1Partition` hands out the ranges).
+//!
+//! **Mixed precision** ([`Adam::new_mixed`]): when the working parameters
+//! are bf16, Adam owns the fp32 **master copy** (initialised lazily from
+//! the first step's working params, persisted through checkpoints).  The
+//! update runs entirely on the masters, then re-quantizes each element to
+//! the working grid — so sub-quantum updates accumulate in the masters
+//! instead of vanishing, the property that makes bf16 training converge
+//! (tested below: `masters_escape_the_bf16_plateau`).
 
+use crate::precision::Dtype;
 
 /// Adam hyper-parameters (paper's runs use standard GPT settings).
 #[derive(Debug, Clone, Copy)]
@@ -32,11 +41,25 @@ pub struct Adam {
     m: Vec<f32>,
     v: Vec<f32>,
     t: u64,
+    /// Working-parameter dtype.  `F32` steps the params in place (the
+    /// legacy bitwise path); `Bf16` steps the fp32 `master` copy and
+    /// re-quantizes into the working params.
+    out_dtype: Dtype,
+    /// fp32 master weights (mixed precision only) — lazily captured from
+    /// the working params on the first step, round-tripped by
+    /// [`Adam::export_state`] / [`Adam::import_state`].
+    master: Option<Vec<f32>>,
 }
 
 impl Adam {
     pub fn new(cfg: AdamConfig, n: usize) -> Self {
-        Self { cfg, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+        Self::new_mixed(cfg, n, Dtype::F32)
+    }
+
+    /// Adam with an explicit working-parameter dtype (bf16 keeps fp32
+    /// masters; f32 is identical to [`Adam::new`]).
+    pub fn new_mixed(cfg: AdamConfig, n: usize, out_dtype: Dtype) -> Self {
+        Self { cfg, m: vec![0.0; n], v: vec![0.0; n], t: 0, out_dtype, master: None }
     }
 
     pub fn len(&self) -> usize {
@@ -47,31 +70,51 @@ impl Adam {
         self.m.is_empty()
     }
 
-    /// Bytes of optimizer state held (for memory accounting tests).
+    /// Bytes of optimizer state held (for memory accounting tests):
+    /// m + v, plus the fp32 master copy under mixed precision — the
+    /// paper's 4+4+4 optimizer bytes/param.
     pub fn state_bytes(&self) -> usize {
-        2 * self.m.len() * std::mem::size_of::<f32>()
+        let masters = match self.out_dtype {
+            Dtype::F32 => 0,
+            Dtype::Bf16 => self.m.len(),
+        };
+        (2 * self.m.len() + masters) * std::mem::size_of::<f32>()
     }
 
-    /// Serialise the state as `m ++ v` plus the step counter
-    /// (checkpointing; see `coordinator::checkpoint`).
+    /// Serialise the state as `m ++ v` (`++ master` under mixed
+    /// precision) plus the step counter (checkpointing; see
+    /// `coordinator::checkpoint`).
     pub fn export_state(&self) -> (Vec<f32>, u64) {
-        let mut out = Vec::with_capacity(2 * self.m.len());
+        let n = self.m.len();
+        let mut out = Vec::with_capacity(2 * n + self.master.as_ref().map_or(0, Vec::len));
         out.extend_from_slice(&self.m);
         out.extend_from_slice(&self.v);
+        if let Some(master) = &self.master {
+            out.extend_from_slice(master);
+        }
         (out, self.t)
     }
 
-    /// Restore state exported by [`Adam::export_state`].
+    /// Restore state exported by [`Adam::export_state`] (`2n` floats, or
+    /// `3n` when the checkpoint carries fp32 masters).
     pub fn import_state(&mut self, data: &[f32], t: u64) {
-        assert_eq!(data.len(), 2 * self.m.len(), "optimizer state size mismatch");
         let n = self.m.len();
+        assert!(
+            data.len() == 2 * n || data.len() == 3 * n,
+            "optimizer state size mismatch"
+        );
         self.m.copy_from_slice(&data[..n]);
-        self.v.copy_from_slice(&data[n..]);
+        self.v.copy_from_slice(&data[n..2 * n]);
+        if data.len() == 3 * n {
+            self.master = Some(data[2 * n..].to_vec());
+        }
         self.t = t;
     }
 
     /// One Adam step over `params`/`grads` (equal length to the state).
-    /// `lr_scale` multiplies the base LR (for schedules).
+    /// `lr_scale` multiplies the base LR (for schedules).  Mixed
+    /// precision steps the fp32 masters and re-quantizes the working
+    /// params; the fp32 path below is the original loop, untouched.
     pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr_scale: f32) {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grads.len(), self.m.len());
@@ -80,13 +123,32 @@ impl Adam {
         let bc1 = 1.0 - c.beta1.powi(self.t as i32);
         let bc2 = 1.0 - c.beta2.powi(self.t as i32);
         let lr = c.lr * lr_scale;
+        let dt = self.out_dtype;
+        if dt == Dtype::F32 {
+            for i in 0..params.len() {
+                let g = grads[i] + c.weight_decay * params[i];
+                self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * g;
+                self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * g * g;
+                let mhat = self.m[i] / bc1;
+                let vhat = self.v[i] / bc2;
+                params[i] -= lr * mhat / (vhat.sqrt() + c.eps);
+            }
+            return;
+        }
+        let Adam { m, v, master, .. } = self;
+        if master.is_none() {
+            *master = Some(params.to_vec());
+        }
+        let mw = master.as_mut().expect("masters just initialised");
         for i in 0..params.len() {
-            let g = grads[i] + c.weight_decay * params[i];
-            self.m[i] = c.beta1 * self.m[i] + (1.0 - c.beta1) * g;
-            self.v[i] = c.beta2 * self.v[i] + (1.0 - c.beta2) * g * g;
-            let mhat = self.m[i] / bc1;
-            let vhat = self.v[i] / bc2;
-            params[i] -= lr * mhat / (vhat.sqrt() + c.eps);
+            // weight decay pulls on the master, not the quantized copy
+            let g = grads[i] + c.weight_decay * mw[i];
+            m[i] = c.beta1 * m[i] + (1.0 - c.beta1) * g;
+            v[i] = c.beta2 * v[i] + (1.0 - c.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            mw[i] -= lr * mhat / (vhat.sqrt() + c.eps);
+            params[i] = dt.quantize(mw[i]);
         }
     }
 }
@@ -191,6 +253,61 @@ mod tests {
         assert!((s.scale(10) - 1.0).abs() < 0.01);
         assert!(s.scale(50) < 1.0 && s.scale(50) > 0.1);
         assert_eq!(s.scale(1000), 0.1);
+    }
+
+    #[test]
+    fn mixed_adam_keeps_params_on_grid_and_masters_off_it() {
+        let n = 16;
+        let mut params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
+        Dtype::Bf16.quantize_slice(&mut params);
+        let mut adam = Adam::new_mixed(AdamConfig { lr: 1e-3, ..Default::default() }, n, Dtype::Bf16);
+        for step in 0..20 {
+            let grads: Vec<f32> = (0..n).map(|i| ((i + step) as f32 * 0.3).cos()).collect();
+            adam.step(&mut params, &grads, 1.0);
+            for (i, p) in params.iter().enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    Dtype::Bf16.quantize(*p).to_bits(),
+                    "step {step} param {i} off the bf16 grid"
+                );
+            }
+        }
+        // state accounting now includes the fp32 masters: 12 bytes/param
+        assert_eq!(adam.state_bytes(), 3 * n * 4);
+    }
+
+    #[test]
+    fn masters_escape_the_bf16_plateau() {
+        // THE reason masters exist: updates far below one bf16 quantum
+        // must still accumulate.  A constant gradient with a tiny LR
+        // moves a bf16-quantized parameter not at all without masters,
+        // but the master drifts and eventually crosses a grid step.
+        let mut params = vec![1.0f32]; // bf16 quantum at 1.0 is 2^-8
+        let mut adam = Adam::new_mixed(
+            AdamConfig { lr: 1e-4, eps: 1e-12, ..Default::default() },
+            1,
+            Dtype::Bf16,
+        );
+        let mut moved = false;
+        for _ in 0..100 {
+            adam.step(&mut params, &[1.0], 1.0); // steady descent ~1e-4/step
+            moved |= params[0] != 1.0;
+        }
+        assert!(moved, "1e-4 steps must accumulate in the master and cross the 2^-8 grid");
+        // and the masters round-trip through the checkpoint format
+        let (state, t) = adam.export_state();
+        assert_eq!(state.len(), 3);
+        let mut back = Adam::new_mixed(
+            AdamConfig { lr: 1e-4, eps: 1e-12, ..Default::default() },
+            1,
+            Dtype::Bf16,
+        );
+        back.import_state(&state, t);
+        let mut p2 = params.clone();
+        let mut p1 = params.clone();
+        adam.step(&mut p1, &[1.0], 1.0);
+        back.step(&mut p2, &[1.0], 1.0);
+        assert_eq!(p1, p2, "restored masters must continue the exact trajectory");
     }
 
     #[test]

@@ -74,6 +74,53 @@ pub fn builtin_tp_grad_sync_floats_per_step(stages_hosted: u64, hidden: u64) -> 
     stages_hosted * (hidden + 1)
 }
 
+/// Dtype-aware variant of [`builtin_tp_ar_floats_per_microbatch`]: every
+/// TP collective follows the engine's wire dtype (bf16 payloads pack two
+/// values per f32 lane), so the byte volume is uniformly `wire_bytes ×
+/// elements` — the EXACT pin for the instrumented `SubGroup` counters at
+/// bf16, and exactly half the fp32 measurement.
+pub fn builtin_tp_ar_bytes_per_microbatch(
+    n_stages: u64,
+    tokens: u64,
+    hidden: u64,
+    wire_bytes: u64,
+) -> u64 {
+    wire_bytes * builtin_tp_ar_floats_per_microbatch(n_stages, tokens, hidden)
+}
+
+/// Dtype-aware variant of [`builtin_tp_grad_sync_floats_per_step`].
+pub fn builtin_tp_grad_sync_bytes_per_step(
+    stages_hosted: u64,
+    hidden: u64,
+    wire_bytes: u64,
+) -> u64 {
+    wire_bytes * builtin_tp_grad_sync_floats_per_step(stages_hosted, hidden)
+}
+
+// ---------------------------------------------------------------------------
+// The DP gradient-sync wire contract (§II.D), dtype-aware.  ZeRO-1 moves
+// the same reduce volume as plain DDP (reduce-scatter in, all-gather of
+// the updated parameters out — the equal-wire-volume argument behind its
+// last-place SHAP rank), so the contract splits into the two named
+// halves the engine counters measure.
+// ---------------------------------------------------------------------------
+
+/// Logical per-step DP gradient-reduction payload: every parameter's
+/// gradient crosses the DP group once, at the wire dtype's width.  The
+/// engine's `TrainReport::dp_bucket_payload_bytes` equals
+/// `steps × Σ_stages dp_grad_payload_bytes(params, wire)` EXACTLY
+/// (bucketing and overlap timing cannot change the volume).
+pub fn dp_grad_payload_bytes(n_params: u64, wire_bytes: u64) -> u64 {
+    n_params * wire_bytes
+}
+
+/// Logical per-step ZeRO-1 updated-parameter all-gather payload (the
+/// second half of its RS+AG accounting; plain DDP gathers nothing).
+/// Engine counter: `TrainReport::dp_param_ag_bytes`.
+pub fn zero1_allgather_payload_bytes(n_params: u64, param_bytes: u64) -> u64 {
+    n_params * param_bytes
+}
+
 // ---------------------------------------------------------------------------
 // The DP overlap contract (§IV: DeepSpeed hides the gradient all-reduce
 // under backward), shared between the analytic model and the engine's
@@ -346,9 +393,11 @@ impl PerfModel {
             0.0
         };
 
-        // ---- DP gradient sync ----
+        // ---- DP gradient sync: half-width gradients under mixed
+        // precision, same dtype convention as the TP term above (ZeRO-1's
+        // RS+AG pair moves the same volume inside dp_grad_sync) ----
         let n_local = model.total_params() / (cfg.tp as u64 * cfg.pp as u64);
-        let grad_bytes = 4 * n_local; // fp32 gradients (Table II)
+        let grad_bytes = dp_grad_payload_bytes(n_local, cfg.precision.bytes());
         let dp_group = layout.dp_group(0);
         let gpu_group: Vec<u32> = dp_group.iter().map(|&r| layout.gpu_of(r)).collect();
         let t_dp_raw = comm.dp_grad_sync(&gpu_group, grad_bytes, cfg.zero1);
@@ -533,6 +582,40 @@ mod tests {
             4 * t * d + 3 * t
         );
         assert_eq!(builtin_tp_grad_sync_floats_per_step(4, d), 4 * (d + 1));
+        // the dtype-aware byte variants: width × floats, so bf16 is
+        // exactly half of fp32
+        for k in [1u64, 2, 4] {
+            let floats = builtin_tp_ar_floats_per_microbatch(k, t, d);
+            assert_eq!(builtin_tp_ar_bytes_per_microbatch(k, t, d, 4), 4 * floats);
+            assert_eq!(
+                builtin_tp_ar_bytes_per_microbatch(k, t, d, 2) * 2,
+                builtin_tp_ar_bytes_per_microbatch(k, t, d, 4)
+            );
+        }
+        assert_eq!(builtin_tp_grad_sync_bytes_per_step(4, d, 2), 2 * 4 * (d + 1));
+    }
+
+    #[test]
+    fn dp_wire_contract_dtype_aware() {
+        // reduce + (ZeRO-1) all-gather halves, at both widths
+        assert_eq!(dp_grad_payload_bytes(1000, 4), 4000);
+        assert_eq!(dp_grad_payload_bytes(1000, 2), 2000);
+        assert_eq!(zero1_allgather_payload_bytes(1000, 2), 2000);
+        // the closed-form model prices its DP term from the same fn: a
+        // precision flip halves the raw DP sync volume
+        use crate::config::Precision;
+        let m = lookup("175b").unwrap();
+        let cfg16 = ParallelConfig::default().with_tp(4).with_pp(16).with_dp(4).with_gbs(64);
+        let mut cfg32 = cfg16.clone();
+        cfg32.precision = Precision::Fp32;
+        let b16 = pm().evaluate(&m, &cfg16).unwrap();
+        let b32 = pm().evaluate(&m, &cfg32).unwrap();
+        assert!(
+            b32.t_dp_comm > b16.t_dp_comm,
+            "fp32 grads must cost more DP sync: {} vs {}",
+            b32.t_dp_comm,
+            b16.t_dp_comm
+        );
     }
 
     #[test]

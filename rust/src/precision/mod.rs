@@ -1,0 +1,422 @@
+//! Mixed-precision training subsystem: software-emulated bf16 storage /
+//! compute with fp32 master weights and dynamic loss scaling (the paper's
+//! §II.A/§IV assumption the rest of the repro now executes for real).
+//!
+//! The whole engine keeps moving `f32` buffers; "bf16 storage" means the
+//! stored values are constrained to the bf16 grid by [`Dtype::quantize`]
+//! (deterministic IEEE round-to-nearest-even truncation of the f32 to its
+//! top 16 bits).  That emulation is *exact* in a useful way: the product
+//! of two bf16 values (8-bit significands) fits in an f32 significand, so
+//! running the f32 GEMM kernels over pre-quantized inputs IS a
+//! bf16-in/f32-accumulate GEMM, bit for bit (`runtime::kernels::bf16`).
+//!
+//! The wire side is real, not emulated: [`pack_bf16`] / [`unpack_bf16`]
+//! carry two bf16 values per `f32` lane (bit-exact u16 pack/unpack via
+//! `f32::to_bits`/`from_bits`, never arithmetic on packed lanes), so the
+//! collectives' bf16 payloads genuinely move half the bytes — the
+//! half-width wire contract the dtype-aware `perf` comm terms are pinned
+//! against.
+//!
+//! [`CastPolicy`] names the cast points the builtin stages apply
+//! (parameter storage, activation storage, gradient storage, collective
+//! wire), and [`LossScaler`] is the DeepSpeed-style dynamic loss scaler
+//! the worker loop drives (overflow → skip step + halve; a run of clean
+//! steps → double).  Scales are kept to powers of two, so scaling and
+//! unscaling are bitwise-exact and a bf16 run with any non-overflowing
+//! scale walks the identical trajectory to scale 1.0 (tested in
+//! `tests/precision.rs`).
+
+/// Element dtype of a stored buffer or collective payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    /// IEEE binary32 — the engine's native element type.
+    #[default]
+    F32,
+    /// bfloat16: f32's exponent range, 8-bit significand.  Emulated as
+    /// grid-constrained f32 in storage; packed two-per-lane on the wire.
+    Bf16,
+}
+
+impl Dtype {
+    /// Bytes per element on the wire / in the memory accounting.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 => 2,
+        }
+    }
+
+    /// CLI / manifest name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "fp32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI / manifest name.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "fp32" | "f32" => Some(Dtype::F32),
+            "bf16" => Some(Dtype::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Constrain one value to this dtype's grid (identity for f32;
+    /// round-to-nearest-even bf16 truncation otherwise).  Idempotent and
+    /// monotone (property-tested).
+    pub fn quantize(&self, x: f32) -> f32 {
+        match self {
+            Dtype::F32 => x,
+            Dtype::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+        }
+    }
+
+    /// In-place [`Dtype::quantize`] over a slice.  The f32 case is a
+    /// no-op (no float ops touched), keeping fp32 paths bitwise-unchanged.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        if let Dtype::Bf16 = self {
+            for x in xs.iter_mut() {
+                *x = bf16_to_f32(f32_to_bf16(*x));
+            }
+        }
+    }
+
+    /// Quantized copy of a slice.
+    pub fn quantized(&self, xs: &[f32]) -> Vec<f32> {
+        let mut out = xs.to_vec();
+        self.quantize_slice(&mut out);
+        out
+    }
+}
+
+/// f32 -> bf16 with IEEE round-to-nearest-even (the hardware conversion
+/// MI250X/DeepSpeed perform).  NaNs are quietened but keep their payload
+/// top bits; infinities and signed zeros pass through exactly; values
+/// whose rounded magnitude exceeds the (shared) exponent range round to
+/// infinity, exactly like the hardware.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // truncation alone could turn a NaN into an infinity; force a
+        // quiet NaN with the surviving payload bits
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest even on the 16 dropped bits: add 0x7FFF plus the
+    // keep-lsb, then truncate (carries ripple into the exponent, which is
+    // exactly what RNE overflow to the next binade / infinity requires)
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// bf16 -> f32: exact (bf16 is f32's top half).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Pack a slice as bf16 pairs: two quantized u16 lanes per f32 bit
+/// pattern (low half = even index), `ceil(n/2)` lanes total, odd tails
+/// padded with a +0.0 half.  The packed lanes are opaque bit patterns —
+/// they are moved (memcpy'd) through mailboxes, never used as numbers —
+/// and `f32::from_bits`/`to_bits` are guaranteed lossless.
+pub fn pack_bf16(xs: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(xs.len().div_ceil(2));
+    let mut i = 0;
+    while i < xs.len() {
+        let lo = f32_to_bf16(xs[i]) as u32;
+        let hi = if i + 1 < xs.len() { f32_to_bf16(xs[i + 1]) as u32 } else { 0 };
+        out.push(f32::from_bits(lo | (hi << 16)));
+        i += 2;
+    }
+    out
+}
+
+/// Unpack `n` bf16 values from [`pack_bf16`] lanes (drops the pad half).
+pub fn unpack_bf16(packed: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(packed.len(), n.div_ceil(2), "packed length mismatch for {n} values");
+    let mut out = Vec::with_capacity(n);
+    for (i, p) in packed.iter().enumerate() {
+        let bits = p.to_bits();
+        out.push(bf16_to_f32((bits & 0xFFFF) as u16));
+        if 2 * i + 1 < n {
+            out.push(bf16_to_f32((bits >> 16) as u16));
+        }
+    }
+    out
+}
+
+/// Where the builtin stages cast: one dtype per storage/wire class.
+/// `fp32()` is the identity policy (every cast a no-op — the legacy
+/// bitwise-pinned path); `bf16()` is the paper's mixed-precision regime:
+/// 2-byte parameters, activations and gradients with f32 accumulation,
+/// fp32 master weights living in the optimizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CastPolicy {
+    /// Stored parameter dtype (the working copy the kernels read).
+    pub param: Dtype,
+    /// Stored activation dtype (stage outputs, stashed inputs, the
+    /// gradient activations flowing backward).
+    pub activation: Dtype,
+    /// Stored parameter-gradient dtype (per-micro-batch stage grads;
+    /// accumulation across micro-batches stays f32).
+    pub grad: Dtype,
+    /// Collective payload dtype (TP all-reduces, DP grad buckets,
+    /// ZeRO-1 parameter all-gather).
+    pub wire: Dtype,
+}
+
+impl CastPolicy {
+    pub const fn fp32() -> Self {
+        Self { param: Dtype::F32, activation: Dtype::F32, grad: Dtype::F32, wire: Dtype::F32 }
+    }
+
+    pub const fn bf16() -> Self {
+        Self { param: Dtype::Bf16, activation: Dtype::Bf16, grad: Dtype::Bf16, wire: Dtype::Bf16 }
+    }
+
+    /// The uniform policy for an engine precision setting.
+    pub fn for_dtype(dt: Dtype) -> Self {
+        match dt {
+            Dtype::F32 => Self::fp32(),
+            Dtype::Bf16 => Self::bf16(),
+        }
+    }
+
+    pub fn is_fp32(&self) -> bool {
+        *self == Self::fp32()
+    }
+}
+
+/// Dynamic loss scaler (DeepSpeed/Apex semantics): gradients are scaled
+/// by `scale` during backward; a non-finite gradient anywhere in the
+/// world skips the optimizer step and halves the scale, and
+/// `growth_interval` consecutive clean steps double it.  All factors are
+/// powers of two, so scaling never perturbs the trajectory (power-of-two
+/// multiplication is exact) — it only shifts where overflow happens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LossScaler {
+    scale: f32,
+    /// Consecutive overflow-free steps before the scale doubles
+    /// (0 disables growth — the static-scale mode).
+    growth_interval: u32,
+    good_steps: u32,
+    skipped: u64,
+}
+
+impl LossScaler {
+    pub const GROWTH_FACTOR: f32 = 2.0;
+    pub const BACKOFF_FACTOR: f32 = 0.5;
+    /// Scale floor: repeated overflow cannot drive the scale to zero.
+    pub const MIN_SCALE: f32 = 1.0 / 1048576.0; // 2^-20
+    /// Scale ceiling for growth (2^24 — past any useful gradient range).
+    pub const MAX_SCALE: f32 = 16_777_216.0;
+
+    pub fn new(init: f32, growth_interval: u32) -> Self {
+        assert!(init.is_finite() && init > 0.0, "loss scale must be positive and finite");
+        Self { scale: init, growth_interval, good_steps: 0, skipped: 0 }
+    }
+
+    /// Rebuild from checkpointed state (scale + clean-step counter).
+    pub fn with_state(scale: f32, growth_interval: u32, good_steps: u32) -> Self {
+        let mut s = Self::new(scale, growth_interval);
+        s.good_steps = good_steps;
+        s
+    }
+
+    /// The scale to apply to this step's loss gradient.
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Clean steps since the last scale change (checkpointed).
+    pub fn good_steps(&self) -> u32 {
+        self.good_steps
+    }
+
+    /// Steps skipped over this scaler's lifetime.
+    pub fn steps_skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    /// Feed one step's (world-agreed) overflow verdict.  Returns `true`
+    /// when the optimizer step must be skipped.
+    pub fn update(&mut self, overflow: bool) -> bool {
+        if overflow {
+            self.scale = (self.scale * Self::BACKOFF_FACTOR).max(Self::MIN_SCALE);
+            self.good_steps = 0;
+            self.skipped += 1;
+            return true;
+        }
+        self.good_steps += 1;
+        if self.growth_interval > 0 && self.good_steps >= self.growth_interval {
+            self.scale = (self.scale * Self::GROWTH_FACTOR).min(Self::MAX_SCALE);
+            self.good_steps = 0;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng64;
+
+    #[test]
+    fn bf16_round_trip_exact_for_all_non_nan_patterns() {
+        // every non-NaN bf16 bit pattern survives f32 and back unchanged
+        // (incl. ±0, denormals, ±inf); NaNs come back quiet
+        for h in 0..=u16::MAX {
+            let f = bf16_to_f32(h);
+            let back = f32_to_bf16(f);
+            if f.is_nan() {
+                assert!(bf16_to_f32(back).is_nan(), "{h:#06x}");
+                assert_eq!(back, h | 0x0040, "{h:#06x}: NaN must quieten in place");
+            } else {
+                assert_eq!(back, h, "{h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn rne_known_values() {
+        let q = |x: f32| Dtype::Bf16.quantize(x);
+        assert_eq!(q(1.0), 1.0);
+        assert_eq!(q(-2.5), -2.5);
+        // 1 + 2^-8 is exactly halfway between 1.0 and 1.0078125: ties to
+        // even (mantissa 0) -> 1.0
+        assert_eq!(q(1.00390625), 1.0);
+        // just above the tie rounds up
+        assert_eq!(q(1.005), 1.0078125);
+        // 1 + 3·2^-8 ties between mantissa 1 and 2 -> even (2)
+        assert_eq!(q(1.01171875), 1.015625);
+        // overflow rounds to infinity, like the hardware conversion
+        assert_eq!(q(f32::MAX), f32::INFINITY);
+        assert_eq!(q(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(q(f32::NAN).is_nan());
+        assert_eq!(q(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(q(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn quantize_idempotent_and_monotone() {
+        let mut rng = Rng64::new(17);
+        let mut vals: Vec<f32> = (0..4000)
+            .map(|i| {
+                let mag = 10.0f64.powi((i % 17) as i32 - 8);
+                (rng.normal() * mag) as f32
+            })
+            .collect();
+        vals.extend([0.0, -0.0, 1e-40, -1e-40, 3.4e38, -3.4e38, f32::MIN_POSITIVE]);
+        for &v in &vals {
+            let q = Dtype::Bf16.quantize(v);
+            assert_eq!(
+                Dtype::Bf16.quantize(q).to_bits(),
+                q.to_bits(),
+                "idempotence at {v}"
+            );
+            // quantization moves by at most half a ULP of the bf16 grid
+            if v.is_finite() && q.is_finite() {
+                assert!((q - v).abs() <= v.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE);
+            }
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let qs: Vec<f32> = vals.iter().map(|&v| Dtype::Bf16.quantize(v)).collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1], "monotonicity violated: {} > {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn f32_dtype_is_identity() {
+        let mut xs = vec![1.2345678f32, -9.87e-20, 3.4e38, f32::NAN];
+        let before: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+        Dtype::F32.quantize_slice(&mut xs);
+        let after: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(before, after);
+        assert_eq!(Dtype::F32.bytes(), 4);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip_even_and_odd() {
+        let mut rng = Rng64::new(5);
+        for n in [0usize, 1, 2, 3, 7, 8, 33, 100, 101] {
+            let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+            let packed = pack_bf16(&xs);
+            assert_eq!(packed.len(), n.div_ceil(2));
+            let back = unpack_bf16(&packed, n);
+            let want = Dtype::Bf16.quantized(&xs);
+            assert_eq!(back.len(), n);
+            for (i, (a, b)) in back.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_preserves_special_values() {
+        let xs = [f32::INFINITY, f32::NEG_INFINITY, f32::NAN, -0.0];
+        let back = unpack_bf16(&pack_bf16(&xs), 4);
+        assert_eq!(back[0], f32::INFINITY);
+        assert_eq!(back[1], f32::NEG_INFINITY);
+        assert!(back[2].is_nan());
+        assert_eq!(back[3].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn names_and_policies() {
+        assert_eq!(Dtype::parse("bf16"), Some(Dtype::Bf16));
+        assert_eq!(Dtype::parse("fp32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("fp16"), None);
+        assert_eq!(Dtype::Bf16.name(), "bf16");
+        assert!(CastPolicy::fp32().is_fp32());
+        assert!(!CastPolicy::bf16().is_fp32());
+        assert_eq!(CastPolicy::for_dtype(Dtype::Bf16), CastPolicy::bf16());
+    }
+
+    #[test]
+    fn loss_scaler_skip_and_backoff() {
+        let mut s = LossScaler::new(65536.0, 0);
+        assert!(!s.update(false));
+        assert_eq!(s.scale(), 65536.0, "no growth when interval is 0");
+        for k in 1..=5u32 {
+            assert!(s.update(true), "overflow must skip");
+            assert_eq!(s.scale(), 65536.0 / 2.0f32.powi(k as i32));
+            assert_eq!(s.good_steps(), 0);
+        }
+        assert_eq!(s.steps_skipped(), 5);
+        // the floor holds under unbounded overflow
+        for _ in 0..200 {
+            s.update(true);
+        }
+        assert_eq!(s.scale(), LossScaler::MIN_SCALE);
+    }
+
+    #[test]
+    fn loss_scaler_growth_state_machine() {
+        let mut s = LossScaler::new(1.0, 3);
+        for step in 1..=9u32 {
+            assert!(!s.update(false));
+            assert_eq!(s.scale(), 2.0f32.powi((step / 3) as i32), "step {step}");
+        }
+        // an overflow resets the clean-step run and halves
+        assert!(s.update(true));
+        assert_eq!(s.scale(), 4.0);
+        assert_eq!(s.good_steps(), 0);
+        // growth is capped
+        let mut s = LossScaler::new(LossScaler::MAX_SCALE, 1);
+        s.update(false);
+        assert_eq!(s.scale(), LossScaler::MAX_SCALE);
+    }
+
+    #[test]
+    fn loss_scaler_restores_state() {
+        let s = LossScaler::with_state(256.0, 4, 3);
+        assert_eq!(s.scale(), 256.0);
+        assert_eq!(s.good_steps(), 3);
+        let mut s2 = s.clone();
+        assert!(!s2.update(false)); // 4th clean step -> growth
+        assert_eq!(s2.scale(), 512.0);
+    }
+}

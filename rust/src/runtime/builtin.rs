@@ -46,7 +46,36 @@
 
 use crate::collectives::TpComm;
 use crate::data::Rng64;
+use crate::precision::{CastPolicy, Dtype};
 use crate::runtime::kernels;
+
+// ---------------------------------------------------------------------------
+// GEMM dispatch: the fp32 policy takes the blocked kernels verbatim (the
+// bitwise-pinned legacy path); bf16 routes through the bf16-in/f32-acc
+// variants, which are idempotent over the stages' already-quantized
+// storage (`kernels::bf16`).
+// ---------------------------------------------------------------------------
+
+fn mm(dt: Dtype, out: &mut [f32], a: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+    match dt {
+        Dtype::F32 => kernels::matmul_acc(out, a, b, t, k, n),
+        Dtype::Bf16 => kernels::bf16::matmul_acc(out, a, b, t, k, n),
+    }
+}
+
+fn mm_at(dt: Dtype, w: &mut [f32], a: &[f32], g: &[f32], t: usize, k: usize, n: usize) {
+    match dt {
+        Dtype::F32 => kernels::matmul_at_acc(w, a, g, t, k, n),
+        Dtype::Bf16 => kernels::bf16::matmul_at_acc(w, a, g, t, k, n),
+    }
+}
+
+fn mm_bt(dt: Dtype, out: &mut [f32], g: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+    match dt {
+        Dtype::F32 => kernels::matmul_bt_acc(out, g, b, t, k, n),
+        Dtype::Bf16 => kernels::bf16::matmul_bt_acc(out, g, b, t, k, n),
+    }
+}
 
 /// Architecture + partition of one builtin bundle.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -160,6 +189,12 @@ pub struct BuiltinStage {
     pub tp: usize,
     /// This shard's rank within the TP group.
     pub tp_rank: usize,
+    /// Numeric cast points (`CastPolicy::fp32()` = the legacy path,
+    /// every cast a no-op).  Under bf16 the stage stores parameters,
+    /// activations and per-micro-batch gradients on the bf16 grid and
+    /// runs every GEMM bf16-in/f32-accumulate; the collective wire dtype
+    /// is carried by the [`TpComm`] the engine hands each call.
+    pub policy: CastPolicy,
 }
 
 /// Per-component init streams keyed by (run seed, global component id) so
@@ -181,14 +216,21 @@ struct Lay {
 impl BuiltinStage {
     /// Dense (tp = 1) stage.
     pub fn dense(spec: BuiltinSpec, stage: usize) -> Self {
-        Self { spec, stage, tp: 1, tp_rank: 0 }
+        Self { spec, stage, tp: 1, tp_rank: 0, policy: CastPolicy::fp32() }
     }
 
     /// TP shard `tp_rank`/`tp` of a stage.
     pub fn sharded(spec: BuiltinSpec, stage: usize, tp: usize, tp_rank: usize) -> Self {
         assert!(spec.tp_ok(tp), "tp {tp} does not slice hidden/vocab");
         assert!(tp_rank < tp);
-        Self { spec, stage, tp, tp_rank }
+        Self { spec, stage, tp, tp_rank, policy: CastPolicy::fp32() }
+    }
+
+    /// The same stage under a different cast policy (builder-style; the
+    /// engine sets the bundle-wide policy once at construction).
+    pub fn with_policy(mut self, policy: CastPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     fn d(&self) -> usize {
@@ -290,6 +332,10 @@ impl BuiltinStage {
             out.extend(std::iter::repeat(0.0f32).take(vs)); // head bias shard
         }
         debug_assert_eq!(out.len(), self.param_count());
+        // parameter storage cast: constrain the working copy to the grid
+        // (no-op under fp32); the quantization commutes with the shard
+        // slicing above, so shard inits stay slices of the dense init
+        self.policy.param.quantize_slice(&mut out);
         out
     }
 
@@ -340,10 +386,13 @@ impl BuiltinStage {
         for t in 0..t_count {
             h[t * f..(t + 1) * f].copy_from_slice(b1);
         }
-        kernels::matmul_acc(&mut h, x, w1, t_count, d, f);
+        mm(self.policy.activation, &mut h, x, w1, t_count, d, f);
         for o in h.iter_mut() {
             *o = o.tanh();
         }
+        // activation storage cast (the recomputing backward re-derives
+        // the identical quantized h, so fwd and bwd agree)
+        self.policy.activation.quantize_slice(&mut h);
         h
     }
 
@@ -356,13 +405,15 @@ impl BuiltinStage {
         let (w2, b2) = (&params[l.w2..l.w2 + f * d], &params[l.b2..l.b2 + d]);
         let t_count = h.len() / f;
         let mut y = vec![0.0f32; t_count * d];
-        kernels::matmul_acc(&mut y, h, w2, t_count, f, d);
+        mm(self.policy.activation, &mut y, h, w2, t_count, f, d);
         comm.all_reduce_sum(&mut y);
         for t in 0..t_count {
             for (o, &bv) in y[t * d..(t + 1) * d].iter_mut().zip(b2) {
                 *o += bv;
             }
         }
+        // activation storage cast on the block output
+        self.policy.activation.quantize_slice(&mut y);
         y
     }
 
@@ -383,23 +434,29 @@ impl BuiltinStage {
         let l = self.lay();
         let h = self.first_linear(params, x); // recompute
         let t_count = x.len() / d;
+        let act = self.policy.activation;
         let (w1, w2) = (&params[l.w1..l.w1 + d * f], &params[l.w2..l.w2 + f * d]);
-        // b2 grad (replicated parameter, dy already full)
+        // b2 grad (replicated parameter, dy already full); bias grads
+        // accumulate in f32 on both policies
         kernels::col_sum_acc(&mut g[l.b2..l.b2 + d], dy, t_count, d);
         // dW2_r += h_rᵀ dy ;  dh_r = dy W2_rᵀ
-        kernels::matmul_at_acc(&mut g[l.w2..l.w2 + f * d], &h, dy, t_count, f, d);
+        mm_at(act, &mut g[l.w2..l.w2 + f * d], &h, dy, t_count, f, d);
         let mut dh = vec![0.0f32; t_count * f];
-        kernels::matmul_bt_acc(&mut dh, dy, w2, t_count, f, d);
+        mm_bt(act, &mut dh, dy, w2, t_count, f, d);
         // through tanh: dpre = dh ⊙ (1 - h²)
         for (dp, &hv) in dh.iter_mut().zip(&h) {
             *dp *= 1.0 - hv * hv;
         }
+        // gradient-activation storage cast before dpre feeds two GEMMs
+        act.quantize_slice(&mut dh);
         kernels::col_sum_acc(&mut g[l.b1..l.b1 + f], &dh, t_count, f);
         // dW1_r += xᵀ dpre ;  dx_partial = dpre W1_rᵀ
-        kernels::matmul_at_acc(&mut g[l.w1..l.w1 + d * f], x, &dh, t_count, d, f);
+        mm_at(act, &mut g[l.w1..l.w1 + d * f], x, &dh, t_count, d, f);
         let mut dx = vec![0.0f32; x.len()];
-        kernels::matmul_bt_acc(&mut dx, &dh, w1, t_count, d, f);
+        mm_bt(act, &mut dx, &dh, w1, t_count, d, f);
         comm.all_reduce_sum(&mut dx);
+        // gradient-activation cast on the dx handed upstream
+        act.quantize_slice(&mut dx);
         dx
     }
 
@@ -423,12 +480,13 @@ impl BuiltinStage {
         let t_count = y.len() / d;
         let inv_t = 1.0 / t_count as f32;
 
-        // local logit shard, T × vs (blocked GEMM)
+        // local logit shard, T × vs (blocked GEMM); logits stay f32 —
+        // the softmax statistics path is the numerically fragile one
         let mut logits = vec![0.0f32; t_count * vs];
         for t in 0..t_count {
             logits[t * vs..(t + 1) * vs].copy_from_slice(&params[l.hb..l.hb + vs]);
         }
-        kernels::matmul_acc(&mut logits, y, wh, t_count, d, vs);
+        mm(self.policy.activation, &mut logits, y, wh, t_count, d, vs);
         // global per-token max for the stable softmax
         let mut mx: Vec<f32> = (0..t_count)
             .map(|t| {
@@ -472,10 +530,12 @@ impl BuiltinStage {
             }
         }
         kernels::col_sum_acc(&mut gparams[l.hb..l.hb + vs], &logits, t_count, vs);
-        kernels::matmul_at_acc(&mut gparams[l.hw..l.hw + d * vs], y, &logits, t_count, d, vs);
+        mm_at(self.policy.activation, &mut gparams[l.hw..l.hw + d * vs], y, &logits, t_count, d, vs);
         let mut dy = vec![0.0f32; y.len()];
-        kernels::matmul_bt_acc(&mut dy, &logits, wh, t_count, d, vs);
+        mm_bt(self.policy.activation, &mut dy, &logits, wh, t_count, d, vs);
         comm.all_reduce_sum(&mut dy);
+        // gradient-activation cast on the loss gradient fed to the block
+        self.policy.activation.quantize_slice(&mut dy);
         (dy, loss)
     }
 
@@ -504,6 +564,7 @@ impl BuiltinStage {
         let y = self.block_fwd(comm, params, x);
         let (dy, loss) = self.head_bwd(comm, params, &mut g, &y, targets);
         let dx = self.block_bwd(comm, params, &mut g, x, &dy);
+        self.policy.grad.quantize_slice(&mut g);
         (g, dx, loss)
     }
 
@@ -511,6 +572,7 @@ impl BuiltinStage {
     pub fn bwd_mid(&self, comm: &TpComm, params: &[f32], x: &[f32], gy: &[f32]) -> (Vec<f32>, Vec<f32>) {
         let mut g = vec![0.0f32; params.len()];
         let dx = self.block_bwd(comm, params, &mut g, x, gy);
+        self.policy.grad.quantize_slice(&mut g);
         (g, dx)
     }
 
@@ -520,6 +582,7 @@ impl BuiltinStage {
         let x = self.embed(comm, params, tokens);
         let dx = self.block_bwd(comm, params, &mut g, &x, gy);
         self.embed_bwd(&mut g, tokens, &dx);
+        self.policy.grad.quantize_slice(&mut g);
         g
     }
 
@@ -538,6 +601,7 @@ impl BuiltinStage {
         let (dy, loss) = self.head_bwd(comm, params, &mut g, &y, targets);
         let dx = self.block_bwd(comm, params, &mut g, &x, &dy);
         self.embed_bwd(&mut g, tokens, &dx);
+        self.policy.grad.quantize_slice(&mut g);
         (g, loss)
     }
 }
@@ -921,6 +985,41 @@ mod tests {
         let lm = fwd_loss(&pp);
         let fd = (lp - lm) / (2.0 * eps);
         assert!((fd - g0[idx]).abs() < 2e-3, "fd {fd} vs analytic {}", g0[idx]);
+    }
+
+    #[test]
+    fn bf16_policy_stays_on_grid_and_tracks_fp32() {
+        // the bf16 cast points: init / grads constrained to the grid,
+        // loss and gradients tracking the fp32 stage within bf16 noise
+        let sp = spec(1);
+        let comm = solo();
+        let fp = stage(&sp, 0);
+        let bf = stage(&sp, 0).with_policy(CastPolicy::bf16());
+        let (tokens, targets) = test_tokens(&sp, 7, 1);
+        let p32 = fp.init(3);
+        let p16 = bf.init(3);
+        assert_eq!(p16.len(), p32.len());
+        for (i, (a, b)) in p16.iter().zip(&p32).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                Dtype::Bf16.quantize(*b).to_bits(),
+                "init[{i}] must be the quantized fp32 init"
+            );
+        }
+        let y32 = fp.fwd_first(&comm, &p32, &tokens);
+        let y16 = bf.fwd_first(&comm, &p16, &tokens);
+        for (i, (a, b)) in y16.iter().zip(&y32).enumerate() {
+            assert_eq!(a.to_bits(), Dtype::Bf16.quantize(*a).to_bits(), "act[{i}] off grid");
+            assert!((a - b).abs() < 0.05 * b.abs() + 0.05, "act[{i}]: {a} vs {b}");
+        }
+        let (g32, l32) = fp.bwd_single(&comm, &p32, &tokens, &targets);
+        let (g16, l16) = bf.bwd_single(&comm, &p16, &tokens, &targets);
+        assert!(l16.is_finite());
+        assert!((l16 - l32).abs() < 0.05 * l32.abs().max(1.0), "loss {l16} vs {l32}");
+        for (i, (a, b)) in g16.iter().zip(&g32).enumerate() {
+            assert_eq!(a.to_bits(), Dtype::Bf16.quantize(*a).to_bits(), "grad[{i}] off grid");
+            assert!((a - b).abs() < 0.05 * b.abs() + 5e-3, "grad[{i}]: {a} vs {b}");
+        }
     }
 
     #[test]

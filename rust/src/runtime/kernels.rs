@@ -166,6 +166,38 @@ pub fn col_sum_acc(acc: &mut [f32], g: &[f32], t: usize, n: usize) {
     }
 }
 
+/// bf16-in / f32-accumulate GEMM paths (the MI250X matrix-core contract
+/// the paper's mixed-precision throughput assumes): inputs are
+/// constrained to the bf16 grid, every product and accumulation runs in
+/// f32.  Because a product of two bf16 values (8-bit significands) is
+/// exact in f32, "quantize the operands, then run the blocked f32
+/// kernel" IS the bf16 GEMM, bit for bit — same register tiling, same
+/// accumulation order as the fp32 path, so the fp32/bf16 pair differ
+/// only by the input cast.  Idempotent over already-quantized storage
+/// (the builtin stages' buffers), by [`crate::precision::Dtype`]'s
+/// quantize idempotence.
+pub mod bf16 {
+    use crate::precision::Dtype;
+
+    /// `out[t×n] += bf16(a)[t×k] · bf16(b)[k×n]`, f32 accumulation.
+    pub fn matmul_acc(out: &mut [f32], a: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+        let (aq, bq) = (Dtype::Bf16.quantized(a), Dtype::Bf16.quantized(b));
+        super::matmul_acc(out, &aq, &bq, t, k, n);
+    }
+
+    /// `w[k×n] += bf16(a)ᵀ · bf16(g)`, f32 accumulation.
+    pub fn matmul_at_acc(w: &mut [f32], a: &[f32], g: &[f32], t: usize, k: usize, n: usize) {
+        let (aq, gq) = (Dtype::Bf16.quantized(a), Dtype::Bf16.quantized(g));
+        super::matmul_at_acc(w, &aq, &gq, t, k, n);
+    }
+
+    /// `out[t×k] += bf16(g) · bf16(b)ᵀ`, f32 accumulation.
+    pub fn matmul_bt_acc(out: &mut [f32], g: &[f32], b: &[f32], t: usize, k: usize, n: usize) {
+        let (gq, bq) = (Dtype::Bf16.quantized(g), Dtype::Bf16.quantized(b));
+        super::matmul_bt_acc(out, &gq, &bq, t, k, n);
+    }
+}
+
 /// The original one-row-at-a-time loops: the correctness oracle for the
 /// equality tests and the pre-optimisation baseline `engine_hotpath`
 /// times against the blocked kernels.
@@ -312,5 +344,41 @@ mod tests {
         let mut out = [10.0f32];
         matmul_acc(&mut out, &a, &b, 1, 1, 1);
         assert_eq!(out, [12.0]);
+    }
+
+    #[test]
+    fn bf16_kernels_equal_f32_kernels_over_quantized_inputs() {
+        use crate::precision::Dtype;
+        for (t, k, n) in shapes() {
+            let a = fill(11, t * k);
+            let b = fill(12, k * n);
+            let g = fill(13, t * n);
+            let (aq, bq, gq) =
+                (Dtype::Bf16.quantized(&a), Dtype::Bf16.quantized(&b), Dtype::Bf16.quantized(&g));
+
+            let mut got = vec![0.0f32; t * n];
+            let mut want = vec![0.0f32; t * n];
+            bf16::matmul_acc(&mut got, &a, &b, t, k, n);
+            matmul_acc(&mut want, &aq, &bq, t, k, n);
+            assert_eq!(got, want, "mm t={t} k={k} n={n}");
+
+            let mut got = vec![0.0f32; k * n];
+            let mut want = vec![0.0f32; k * n];
+            bf16::matmul_at_acc(&mut got, &a, &g, t, k, n);
+            matmul_at_acc(&mut want, &aq, &gq, t, k, n);
+            assert_eq!(got, want, "at t={t} k={k} n={n}");
+
+            let mut got = vec![0.0f32; t * k];
+            let mut want = vec![0.0f32; t * k];
+            bf16::matmul_bt_acc(&mut got, &g, &b, t, k, n);
+            matmul_bt_acc(&mut want, &gq, &bq, t, k, n);
+            assert_eq!(got, want, "bt t={t} k={k} n={n}");
+
+            // idempotent over pre-quantized storage: re-running the bf16
+            // kernel on quantized inputs changes nothing
+            let mut again = vec![0.0f32; t * k];
+            bf16::matmul_bt_acc(&mut again, &gq, &bq, t, k, n);
+            assert_eq!(again, got, "idempotence t={t} k={k} n={n}");
+        }
     }
 }

@@ -364,7 +364,8 @@ impl StageExecutables {
                     st.spec.hidden,
                     st.spec.vocab
                 );
-                let sharded = BuiltinStage::sharded(st.spec.clone(), st.stage, tp, tp_rank);
+                let sharded = BuiltinStage::sharded(st.spec.clone(), st.stage, tp, tp_rank)
+                    .with_policy(st.policy);
                 let mut meta = self.meta.clone();
                 meta.param_count = sharded.param_count() as u64;
                 Ok(StageExecutables { meta, backend: StageBackend::Builtin(sharded) })
@@ -614,16 +615,26 @@ impl Bundle {
 
     /// Materialise a builtin bundle entirely in memory (no files, no PJRT).
     pub fn builtin(spec: &BuiltinSpec) -> Self {
+        Self::builtin_with_policy(spec, crate::precision::CastPolicy::fp32())
+    }
+
+    /// Builtin bundle under an explicit cast policy — how the engine
+    /// instantiates mixed-precision runs (`--precision bf16`): every
+    /// stage stores params/activations/grads on the policy's grids; the
+    /// collective wire dtype rides the engine's `TpComm`/bucket config.
+    pub fn builtin_with_policy(
+        spec: &BuiltinSpec,
+        policy: crate::precision::CastPolicy,
+    ) -> Self {
         let meta = BundleMeta::for_builtin(spec);
         let stages = meta
             .stages
             .iter()
             .map(|sm| StageExecutables {
                 meta: sm.clone(),
-                backend: StageBackend::Builtin(BuiltinStage::dense(
-                    spec.clone(),
-                    sm.index as usize,
-                )),
+                backend: StageBackend::Builtin(
+                    BuiltinStage::dense(spec.clone(), sm.index as usize).with_policy(policy),
+                ),
             })
             .collect();
         Self { dir: PathBuf::from("builtin"), meta, stages }

@@ -21,6 +21,7 @@
 
 use crate::collectives::{chunk_bounds, Algo, Group, TpComm};
 use crate::optim::{clip_grad_norm, Adam, AdamConfig};
+use crate::precision::Dtype;
 use std::sync::Arc;
 
 /// Tensor-parallel context for the optimizer step: this shard's
@@ -69,6 +70,11 @@ impl DistOptimizer {
     /// `algo` selects the collective algorithm for the *small* syncs
     /// (the 1-float grad-norm combine) — the engine threads its
     /// `EngineConfig::collective_algo` (default `Ring`) through here.
+    /// `dtype` is the working-parameter dtype: `Bf16` keeps fp32 master
+    /// weights inside Adam (full masters for DDP, shard-only masters
+    /// under ZeRO-1 — the paper's 4-bytes/param master term divided by
+    /// `dp`) and re-quantizes the working copy after every step; it is
+    /// also the ZeRO-1 parameter all-gather wire dtype.
     pub fn new(
         zero1: bool,
         cfg: AdamConfig,
@@ -76,11 +82,12 @@ impl DistOptimizer {
         dp_rank: usize,
         dp: usize,
         algo: Algo,
+        dtype: Dtype,
     ) -> Self {
         if zero1 {
-            DistOptimizer::Zero1(Zero1Optimizer::new(cfg, n_params, dp_rank, dp, algo))
+            DistOptimizer::Zero1(Zero1Optimizer::new(cfg, n_params, dp_rank, dp, algo, dtype))
         } else {
-            DistOptimizer::Ddp(Adam::new(cfg, n_params))
+            DistOptimizer::Ddp(Adam::new_mixed(cfg, n_params, dtype))
         }
     }
 
@@ -177,13 +184,24 @@ pub struct Zero1Optimizer {
     pub n_params: usize,
     /// Collective algorithm for the 1-float grad-norm combine.
     pub algo: Algo,
+    /// Working-parameter dtype — also the updated-parameter all-gather
+    /// wire dtype (bf16 params pack two-per-lane; lossless, since Adam
+    /// just re-quantized them onto the grid).
+    pub dtype: Dtype,
 }
 
 impl Zero1Optimizer {
-    pub fn new(cfg: AdamConfig, n_params: usize, dp_rank: usize, dp: usize, algo: Algo) -> Self {
+    pub fn new(
+        cfg: AdamConfig,
+        n_params: usize,
+        dp_rank: usize,
+        dp: usize,
+        algo: Algo,
+        dtype: Dtype,
+    ) -> Self {
         assert!(dp_rank < dp);
         let (lo, hi) = chunk_bounds(n_params, dp)[dp_rank];
-        Self { adam: Adam::new(cfg, hi - lo), dp_rank, dp, n_params, algo }
+        Self { adam: Adam::new_mixed(cfg, hi - lo, dtype), dp_rank, dp, n_params, algo, dtype }
     }
 
     pub fn shard_bounds(&self) -> (usize, usize) {
@@ -266,12 +284,16 @@ impl Zero1Optimizer {
             shard.iter_mut().for_each(|g| *g *= scale);
         }
 
-        // Adam on my shard only
+        // Adam on my shard only (mixed precision: on the shard's fp32
+        // masters, re-quantized into the working copy)
         self.adam.step(&mut params[slo..shi], shard, lr_scale);
 
-        // all-gather the updated parameters
+        // all-gather the updated parameters at the working dtype (bf16
+        // shards ride packed u16 lanes — half the wire bytes, counted by
+        // the group's ag_payload_bytes; the RS+AG wire accounting's
+        // second half)
         let my = params[slo..shi].to_vec();
-        group.all_gather(rank, &my, params);
+        group.all_gather_dtype(rank, &my, params, self.dtype);
         norm
     }
 }
@@ -291,7 +313,7 @@ mod tests {
                 thread::spawn(move || {
                     let mut params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
                     let mut opt =
-                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring);
+                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring, Dtype::F32);
                     for step in 0..steps {
                         let mut grads: Vec<f32> = (0..n)
                             .map(|i| ((i + rank * 13 + step * 7) as f32 * 0.1).sin())
@@ -324,11 +346,11 @@ mod tests {
     fn zero1_state_is_sharded() {
         let n = 100;
         let dp = 4;
-        let z = Zero1Optimizer::new(AdamConfig::default(), n, 1, dp, Algo::Ring);
+        let z = Zero1Optimizer::new(AdamConfig::default(), n, 1, dp, Algo::Ring, Dtype::F32);
         assert_eq!(z.adam.len(), 25);
         // DDP holds full state
-        let d = DistOptimizer::new(false, AdamConfig::default(), n, 0, dp, Algo::Ring);
-        let z = DistOptimizer::new(true, AdamConfig::default(), n, 0, dp, Algo::Ring);
+        let d = DistOptimizer::new(false, AdamConfig::default(), n, 0, dp, Algo::Ring, Dtype::F32);
+        let z = DistOptimizer::new(true, AdamConfig::default(), n, 0, dp, Algo::Ring, Dtype::F32);
         assert_eq!(d.state_bytes(), 4 * z.state_bytes());
     }
 
@@ -338,7 +360,7 @@ mod tests {
         let dp = 4;
         let mut covered = 0;
         for r in 0..dp {
-            let z = Zero1Optimizer::new(AdamConfig::default(), n, r, dp, Algo::Ring);
+            let z = Zero1Optimizer::new(AdamConfig::default(), n, r, dp, Algo::Ring, Dtype::F32);
             let (lo, hi) = z.shard_bounds();
             covered += hi - lo;
         }
@@ -360,7 +382,7 @@ mod tests {
                     let comm = TpComm::new(sub, rank);
                     let dp_group = Group::new(1);
                     let mut opt =
-                        DistOptimizer::new(false, AdamConfig::default(), 4, 0, 1, Algo::Ring);
+                        DistOptimizer::new(false, AdamConfig::default(), 4, 0, 1, Algo::Ring, Dtype::F32);
                     let mut params = vec![0.0f32; 4];
                     // unique elements differ per shard; [2..4) replicated
                     let mut grads = if rank == 0 {
@@ -400,7 +422,7 @@ mod tests {
                 thread::spawn(move || {
                     let mut params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
                     let mut opt =
-                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring);
+                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring, Dtype::F32);
                     for step in 0..steps {
                         // rank-order mean over every rank's gradient
                         let mut grads = vec![0.0f32; n];
@@ -435,6 +457,64 @@ mod tests {
                 assert!((a - b).abs() < 2e-5, "zero1={zero1}: {a} vs {b}");
             }
         }
+    }
+
+    /// Like [`run`] but under the bf16 working dtype: params start on the
+    /// bf16 grid, grads are bf16-quantized per-microbatch values.
+    fn run_mixed(dp: usize, zero1: bool, steps: usize, n: usize) -> Vec<f32> {
+        let group = Group::new(dp);
+        let handles: Vec<_> = (0..dp)
+            .map(|rank| {
+                let g = group.clone();
+                thread::spawn(move || {
+                    let mut params: Vec<f32> =
+                        (0..n).map(|i| Dtype::Bf16.quantize((i as f32 * 0.01).cos())).collect();
+                    let mut opt = DistOptimizer::new(
+                        zero1,
+                        AdamConfig::default(),
+                        n,
+                        rank,
+                        dp,
+                        Algo::Ring,
+                        Dtype::Bf16,
+                    );
+                    for step in 0..steps {
+                        let mut grads: Vec<f32> = (0..n)
+                            .map(|i| {
+                                Dtype::Bf16
+                                    .quantize(((i + rank * 13 + step * 7) as f32 * 0.1).sin())
+                            })
+                            .collect();
+                        opt.step(&g, rank, &mut params, &mut grads, 1.0, None);
+                    }
+                    params
+                })
+            })
+            .collect();
+        let mut results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in 1..results.len() {
+            assert_eq!(results[0], results[r], "rank {r} bf16 params diverged");
+        }
+        results.swap_remove(0)
+    }
+
+    #[test]
+    fn bf16_zero1_matches_bf16_ddp_and_stays_on_grid() {
+        // the ZeRO-1 ≡ DDP invariant survives mixed precision: sharded
+        // masters + packed parameter all-gather walk the DDP trajectory
+        // (up to the norm-combine association order, which the bf16 grid
+        // can amplify to one quantum)
+        let ddp = run_mixed(4, false, 5, 37);
+        let z1 = run_mixed(4, true, 5, 37);
+        for (i, (a, b)) in ddp.iter().zip(&z1).enumerate() {
+            assert!((a - b).abs() <= 0.008 * a.abs().max(1.0), "param {i}: {a} vs {b}");
+            assert_eq!(a.to_bits(), Dtype::Bf16.quantize(*a).to_bits(), "ddp[{i}] off grid");
+            assert_eq!(b.to_bits(), Dtype::Bf16.quantize(*b).to_bits(), "z1[{i}] off grid");
+        }
+        // mixed-precision state accounting: masters add 4 bytes/param,
+        // sharded 1/dp under ZeRO-1 (after one step materialises them)
+        let z = Zero1Optimizer::new(AdamConfig::default(), 100, 0, 4, Algo::Ring, Dtype::Bf16);
+        assert_eq!(z.adam.state_bytes(), 3 * 25 * 4);
     }
 
     #[test]

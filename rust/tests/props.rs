@@ -14,6 +14,7 @@ use frontier_llm::hpo::space::Point;
 use frontier_llm::hpo::surrogate::Gp;
 use frontier_llm::parallel::RankLayout;
 use frontier_llm::perf::PerfModel;
+use frontier_llm::precision::{pack_bf16, unpack_bf16, Dtype, LossScaler};
 use frontier_llm::schedule;
 use frontier_llm::util::json::{escape, Json};
 
@@ -448,6 +449,175 @@ fn prop_json_escape_round_trip() {
             .collect();
         let parsed = Json::parse(&escape(&s)).unwrap();
         assert_eq!(parsed.as_str().unwrap(), s);
+    }
+}
+
+#[test]
+fn prop_bf16_quantize_round_trip_idempotent_monotone() {
+    // random magnitudes across the whole exponent range: quantization is
+    // idempotent, monotone, sign-preserving, and pack/unpack is bit-exact
+    let mut rng = Rng64::new(4242);
+    for case in 0..50 {
+        let len = 1 + rng.below(97) as usize; // odd lengths exercise the pad
+        let xs: Vec<f32> = (0..len)
+            .map(|i| {
+                let mag = 10.0f64.powi((i % 21) as i32 - 10);
+                (rng.normal() * mag) as f32
+            })
+            .collect();
+        let q = Dtype::Bf16.quantized(&xs);
+        for (i, (&x, &qx)) in xs.iter().zip(&q).enumerate() {
+            assert_eq!(
+                Dtype::Bf16.quantize(qx).to_bits(),
+                qx.to_bits(),
+                "case {case} i {i}: idempotence"
+            );
+            assert_eq!(qx.signum(), x.signum(), "case {case} i {i}: sign");
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let qs: Vec<f32> = sorted.iter().map(|&v| Dtype::Bf16.quantize(v)).collect();
+        for (i, w) in qs.windows(2).enumerate() {
+            assert!(w[0] <= w[1], "case {case} i {i}: monotonicity");
+        }
+        let back = unpack_bf16(&pack_bf16(&xs), len);
+        for (i, (a, b)) in back.iter().zip(&q).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} i {i}: pack round trip");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_bucket_allreduce_equals_f32_allreduce_of_quantized() {
+    // THE packed-wire contract: a bf16 nonblocking all-reduce is bitwise
+    // the blocking Naive f32 all-reduce of the quantized inputs (both
+    // reduce in rank order), for random group sizes / lengths / bucket
+    // splits — so halving the wire cannot perturb the trajectory beyond
+    // the input quantization itself
+    let mut rng = Rng64::new(616);
+    for case in 0..12u64 {
+        let n = 1 + rng.below(4) as usize;
+        let len = 1 + rng.below(301) as usize;
+        let n_buckets = 1 + rng.below(4) as usize;
+        let seed = rng.next_u64();
+        let group = Group::new(n);
+        let bounds = chunk_bounds(len, n_buckets);
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let g = group.clone();
+                let bounds = bounds.clone();
+                thread::spawn(move || {
+                    let mut local = Rng64::new(seed ^ (rank as u64 + 3) * 0x77);
+                    let data: Vec<f32> = (0..len).map(|_| local.normal() as f32).collect();
+                    let mut want = Dtype::Bf16.quantized(&data);
+                    g.all_reduce_sum(rank, &mut want, Algo::Naive);
+                    let started: Vec<_> = bounds
+                        .iter()
+                        .enumerate()
+                        .map(|(idx, &(lo, hi))| {
+                            let tag = (case << 8) | idx as u64;
+                            (
+                                lo,
+                                hi,
+                                g.start_all_reduce_dtype(
+                                    rank,
+                                    tag,
+                                    data[lo..hi].to_vec(),
+                                    Dtype::Bf16,
+                                ),
+                            )
+                        })
+                        .collect();
+                    let mut got = vec![0.0f32; len];
+                    for (lo, hi, h) in started {
+                        got[lo..hi].copy_from_slice(&h.wait());
+                    }
+                    (want, got)
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (want, got) = h.join().unwrap();
+            assert_eq!(want, got, "case {case} rank {rank}: packed != quantized f32");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_subgroup_allreduce_equals_quantized_rank_order_sum() {
+    // same contract for the TP subgroup exchange, over threads
+    let mut rng = Rng64::new(929);
+    for case in 0..8 {
+        let tp = 2 + rng.below(3) as usize; // 2..4
+        let len = 1 + rng.below(120) as usize;
+        let seed = rng.next_u64();
+        let world = Group::new(tp);
+        let sub = SubGroup::new(&world, (0..tp).collect(), 0);
+        let data = move |rank: usize, i: usize| -> f32 {
+            let mut r = Rng64::new(seed ^ ((rank * 131 + i) as u64 + 1));
+            r.normal() as f32
+        };
+        let handles: Vec<_> = (0..tp)
+            .map(|rank| {
+                let s = sub.clone();
+                thread::spawn(move || {
+                    let mut buf: Vec<f32> = (0..len).map(|i| data(rank, i)).collect();
+                    s.all_reduce_sum_cfg(rank, &mut buf, Algo::Ring, Dtype::Bf16);
+                    buf
+                })
+            })
+            .collect();
+        let mut want = vec![0.0f32; len];
+        for r in 0..tp {
+            for (i, w) in want.iter_mut().enumerate() {
+                *w += Dtype::Bf16.quantize(data(r, i));
+            }
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            for i in 0..len {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "case {case} tp {tp} rank {rank} i {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_loss_scaler_state_machine() {
+    // random overflow sequences: the scale is always init × 2^k with the
+    // exponent fully determined by the (overflow, growth) history, skips
+    // are counted exactly, and the floor/ceiling hold
+    let mut rng = Rng64::new(303);
+    for case in 0..50 {
+        let interval = rng.below(5) as u32; // 0 disables growth
+        let mut s = LossScaler::new(256.0, interval);
+        let mut scale = 256.0f32;
+        let mut good = 0u32;
+        let mut skips = 0u64;
+        for step in 0..200 {
+            let overflow = rng.below(4) == 0;
+            let skipped = s.update(overflow);
+            assert_eq!(skipped, overflow, "case {case} step {step}");
+            if overflow {
+                scale = (scale * 0.5).max(LossScaler::MIN_SCALE);
+                good = 0;
+                skips += 1;
+            } else {
+                good += 1;
+                if interval > 0 && good >= interval {
+                    scale = (scale * 2.0).min(LossScaler::MAX_SCALE);
+                    good = 0;
+                }
+            }
+            assert_eq!(s.scale(), scale, "case {case} step {step}");
+            assert_eq!(s.good_steps(), good);
+            assert!(s.scale() >= LossScaler::MIN_SCALE && s.scale() <= LossScaler::MAX_SCALE);
+        }
+        assert_eq!(s.steps_skipped(), skips);
     }
 }
 
