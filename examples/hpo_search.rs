@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     let result = hpo::run_search(&perf, &SearchConfig { n_evals: evals, seed, ..Default::default() });
 
     let mut csv = Csv::new(&[
-        "eval", "pp", "tp", "mbs", "gas", "zero1", "nnodes", "interleave",
+        "eval", "pp", "tp", "mbs", "gas", "zero_stage", "nnodes", "interleave",
         "objective_tflops", "failed", "best_so_far",
     ]);
     for (i, ev) in result.evals.iter().enumerate() {
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
             ev.point.tp.to_string(),
             ev.point.mbs.to_string(),
             ev.point.gas.to_string(),
-            (ev.point.zero1 as u8).to_string(),
+            ev.point.zero_stage.index().to_string(),
             ev.point.nnodes.to_string(),
             ev.point.interleave.to_string(),
             ev.objective.map(|v| format!("{v:.2}")).unwrap_or_default(),
@@ -46,12 +46,12 @@ fn main() -> anyhow::Result<()> {
     println!("  (paper: failures mostly OOM, frequency decreasing over time)");
     let best = result.best().expect("search must find a feasible config");
     println!(
-        "  best        : pp{} tp{} mbs{} gas{} zero1={} nodes{} -> {:.1} TFLOPS/GPU",
+        "  best        : pp{} tp{} mbs{} gas{} zero-stage={} nodes{} -> {:.1} TFLOPS/GPU",
         best.point.pp,
         best.point.tp,
         best.point.mbs,
         best.point.gas,
-        best.point.zero1,
+        best.point.zero_stage,
         best.point.nnodes,
         best.objective.unwrap()
     );
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     }
     csv.write("results/fig10_shap.csv")?;
     println!(
-        "  (paper ranking: mbs > tp > pp > num_nodes > zero1; ours: {})",
+        "  (paper ranking: mbs > tp > pp > num_nodes > zero_stage; ours: {})",
         ranking.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(" > ")
     );
     Ok(())

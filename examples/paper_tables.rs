@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
             r.parallel.mbs,
             r.parallel.gbs,
             r.gpus(),
-            r.parallel.zero1,
+            r.parallel.zero_stage.index(),
             paper_pct,
             b.pct_peak,
             b.pct_peak - paper_pct

@@ -16,6 +16,7 @@ use frontier_llm::config::{recipe_175b, ScheduleKind};
 use frontier_llm::coordinator::{train, EngineConfig};
 use frontier_llm::optim::AdamConfig;
 use frontier_llm::perf::PerfModel;
+use frontier_llm::zero::ShardingStage;
 
 fn main() -> anyhow::Result<()> {
     // ---- 1. real training through the engine ----
@@ -35,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         schedule: ScheduleKind::OneF1B,
         microbatches: 4,
         steps: 15,
-        zero1: true,
+        zero_stage: ShardingStage::OptimizerStates,
         adam: AdamConfig { lr, ..Default::default() },
         log_every: 5,
         ..Default::default()
@@ -62,11 +63,22 @@ fn main() -> anyhow::Result<()> {
     // `precision: Dtype::Bf16` on EngineConfig for the mixed-precision
     // engine: bf16 storage, fp32 masters, half-width collectives)
     println!(
-        "precision {}: loss scale {}, {:.1} KB grad-bucket payload, {:.1} KB total collective traffic\n",
+        "precision {}: loss scale {}, {:.1} KB grad-bucket payload, {:.1} KB total collective traffic",
         report.precision.name(),
         report.final_loss_scale,
         report.dp_bucket_payload_bytes as f64 / 1e3,
         report.comm_bytes as f64 / 1e3,
+    );
+    // the active sharding stage and this run's measured shard bytes
+    // (set `zero_stage: ShardingStage::Gradients` / `::Parameters` on
+    // EngineConfig for the ZeRO-2/3 reduce-scatter + on-demand-gather
+    // dataflow — same loss trajectory, sharded residency)
+    println!(
+        "zero stage {} ({}): {:.1} KB optimizer state/rank, {:.1} KB param all-gather payload\n",
+        report.zero_stage.index(),
+        report.zero_stage.name(),
+        report.opt_state_bytes_per_rank as f64 / 1e3,
+        report.dp_param_ag_bytes as f64 / 1e3,
     );
     assert!(report.final_loss() < report.initial_loss(), "loss must decrease");
 
@@ -81,7 +93,7 @@ fn main() -> anyhow::Result<()> {
         schedule: ScheduleKind::OneF1B,
         microbatches: 4,
         steps: 15,
-        zero1: true,
+        zero_stage: ShardingStage::OptimizerStates,
         adam: AdamConfig { lr: 2e-2, ..Default::default() },
         log_every: 5,
         ..Default::default()

@@ -11,7 +11,7 @@
 //! stands in for Frontier here, so large runs are budgeted in steps.
 //!
 //!   cargo run --release --offline --example train_e2e -- \
-//!       [--steps N] [--dp N] [--microbatches N] [--large] [--zero1]
+//!       [--steps N] [--dp N] [--microbatches N] [--large] [--zero-stage 0|1|2|3]
 
 use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train, EngineConfig};
@@ -55,7 +55,17 @@ fn main() -> anyhow::Result<()> {
             total_steps: steps as u64,
             min_ratio: 0.1,
         }),
-        zero1: args.flag("zero1") || dp > 1,
+        zero_stage: {
+            use frontier_llm::zero::ShardingStage;
+            match args.get("zero-stage") {
+                Some(s) => ShardingStage::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("--zero-stage must be 0|1|2|3, got {s:?}"))?,
+                // legacy default: shard optimizer states whenever there is
+                // a DP group to shard across (--zero1 stays as the alias)
+                None if args.flag("zero1") || dp > 1 => ShardingStage::OptimizerStates,
+                None => ShardingStage::Ddp,
+            }
+        },
         overlap_grad_sync: !args.flag("no-overlap"),
         seed: args.opt("seed", 1234).map_err(anyhow::Error::msg)?,
         log_every: args.opt("log-every", 10).map_err(anyhow::Error::msg)?,
@@ -66,8 +76,8 @@ fn main() -> anyhow::Result<()> {
     };
 
     println!(
-        "e2e: bundle={} dp={} m={} steps={} zero1={}",
-        cfg.bundle, cfg.dp, cfg.microbatches, cfg.steps, cfg.zero1
+        "e2e: bundle={} dp={} m={} steps={} zero-stage={}",
+        cfg.bundle, cfg.dp, cfg.microbatches, cfg.steps, cfg.zero_stage
     );
     let report = train(&cfg)?;
 
@@ -103,9 +113,23 @@ fn main() -> anyhow::Result<()> {
         report.steps_skipped
     );
     println!(
-        "dp wire           : {:.1} KB grad buckets + {:.1} KB zero1 all-gather",
+        "dp wire           : {:.1} KB grad buckets + {:.1} KB param all-gather",
         report.dp_bucket_payload_bytes as f64 / 1e3,
         report.dp_param_ag_bytes as f64 / 1e3
+    );
+    println!(
+        "zero stage        : {} ({}); {:.1} KB optimizer state/rank{}",
+        report.zero_stage.index(),
+        report.zero_stage.name(),
+        report.opt_state_bytes_per_rank as f64 / 1e3,
+        if report.zero3_peak_gathered_floats > 0 {
+            format!(
+                ", peak gathered params {:.1} KB",
+                4.0 * report.zero3_peak_gathered_floats as f64 / 1e3
+            )
+        } else {
+            String::new()
+        }
     );
     if report.dp_sync_raw_s() > 0.0 {
         println!(

@@ -20,13 +20,15 @@ use bench_util::{bench, header, record_meta, write_report};
 use std::sync::Arc;
 use std::thread;
 
-use frontier_llm::collectives::{Algo, Group};
+use frontier_llm::collectives::{chunk_bounds, Algo, Group};
 use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train_with_bundle, EngineConfig};
 use frontier_llm::optim::{clip_grad_norm, Adam, AdamConfig};
+use frontier_llm::precision::Dtype;
 use frontier_llm::runtime::kernels;
 use frontier_llm::runtime::{Bundle, BuiltinSpec, BuiltinStage, Runtime};
 use frontier_llm::schedule;
+use frontier_llm::zero::ShardingStage;
 
 fn bench_allreduce(n_ranks: usize, len: usize, algo: Algo, label: &str) {
     // spawn ranks once; each iteration is one collective round
@@ -39,6 +41,73 @@ fn bench_allreduce(n_ranks: usize, len: usize, algo: Algo, label: &str) {
                     let mut buf = vec![1.0f32; len];
                     g.all_reduce_sum(rank, &mut buf, algo);
                     std::hint::black_box(buf[0]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// Partition-aligned nonblocking reduce-scatter: every rank launches one
+/// bucket per owner partition and drains them, the owner alone
+/// materialising its reduced shard — the ZeRO-2/3 gradient primitive.
+fn bench_reduce_scatter(n_ranks: usize, len: usize, label: &str) {
+    let group = Group::new(n_ranks);
+    let mut round = 0u64;
+    bench(label, 2, 20, || {
+        round += 1;
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let bounds = chunk_bounds(len, g.len());
+                    let started: Vec<_> = bounds
+                        .iter()
+                        .enumerate()
+                        .map(|(owner, &(lo, hi))| {
+                            g.start_reduce_scatter_dtype(
+                                rank,
+                                (round << 8) | owner as u64,
+                                vec![1.0f32; hi - lo],
+                                owner,
+                                Dtype::F32,
+                            )
+                        })
+                        .collect();
+                    for h in started {
+                        std::hint::black_box(h.wait());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// Nonblocking parameter all-gather: every rank deposits its shard and
+/// redeems the assembled full buffer — ZeRO-3's on-demand gather.
+fn bench_all_gather(n_ranks: usize, total: usize, label: &str) {
+    let group = Group::new(n_ranks);
+    let mut round = 0u64;
+    bench(label, 2, 20, || {
+        round += 1;
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let (lo, hi) = chunk_bounds(total, g.len())[rank];
+                    let h = g.start_all_gather_dtype(
+                        rank,
+                        round,
+                        vec![1.0f32; hi - lo],
+                        total,
+                        Dtype::F32,
+                    );
+                    std::hint::black_box(h.wait()[0]);
                 })
             })
             .collect();
@@ -169,6 +238,10 @@ fn main() {
     bench_allreduce(2, ar_len / 4, Algo::Ring, &format!("collectives::ring_2x{sz4}"));
     bench_bucketed(4, ar_len, 4, &format!("collectives::nb_bucketed_4x{sz}_b4"));
 
+    header("collectives: ZeRO wire primitives (reduce-scatter + param all-gather)");
+    bench_reduce_scatter(4, ar_len, &format!("collectives::reduce_scatter_4x{sz}"));
+    bench_all_gather(4, ar_len, &format!("collectives::param_all_gather_4x{sz}"));
+
     header("optimizer: Adam step + grad clip");
     let n = if smoke { 1 << 16 } else { 4 << 20 };
     let nm = if smoke { "64K" } else { "4M" };
@@ -240,6 +313,26 @@ fn main() {
         });
     }
 
+    header("end-to-end engine: sharded DP stages (zero2 reduce-scatter, zero3 gather)");
+    for (label, stage) in [
+        ("engine::train_dp2_zero2", ShardingStage::Gradients),
+        ("engine::train_dp2_zero3", ShardingStage::Parameters),
+    ] {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s4-mb2".into(),
+            dp: 2,
+            schedule: ScheduleKind::Interleaved1F1B { v: 2 },
+            microbatches: 4,
+            steps: 3,
+            zero_stage: stage,
+            grad_bucket_floats: 256,
+            ..Default::default()
+        };
+        bench(label, 1, 5, || {
+            std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
+        });
+    }
+
     header("end-to-end engine: tensor-parallel builtin (tp2 x pp4)");
     {
         let cfg = EngineConfig {
@@ -268,7 +361,7 @@ fn main() {
                 schedule: ScheduleKind::OneF1B,
                 microbatches: 4,
                 steps: 3,
-                zero1: true,
+                zero_stage: ShardingStage::OptimizerStates,
                 ..Default::default()
             };
             bench("engine::train_3steps_tiny_pp2dp2", 1, 5, || {

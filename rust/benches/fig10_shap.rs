@@ -1,8 +1,8 @@
 //! Bench: Figure 10 — SHAP sensitivity of the tuned hyper-parameters.
 //!
 //! Shape contracts: the batching/parallelism knobs (mbs/tp/pp) carry the
-//! attribution mass; zero1 and num_nodes trail (paper: "utilizing ZeRO-1
-//! has the least impact").
+//! attribution mass; zero_stage and num_nodes trail (paper: "utilizing
+//! ZeRO-1 has the least impact").
 
 #[path = "bench_util/mod.rs"]
 mod bench_util;
@@ -25,8 +25,8 @@ fn main() {
     }
     let names: Vec<&str> = ranking.iter().map(|(n, _)| n.as_str()).collect();
     assert!(names[..3].contains(&"p:mbs"), "mbs must rank top-3: {names:?}");
-    assert!(names[3..].contains(&"p:zero1"), "zero1 must trail: {names:?}");
-    println!("[shape OK: mbs/tp/pp dominate, zero1 + num_nodes trail]");
+    assert!(names[3..].contains(&"p:zero_stage"), "zero_stage must trail: {names:?}");
+    println!("[shape OK: mbs/tp/pp dominate, zero_stage + num_nodes trail]");
 
     // time the exact-SHAP computation itself
     let x: Vec<Vec<f64>> = result.evals.iter().map(|e| e.point.features().to_vec()).collect();

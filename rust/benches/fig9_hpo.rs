@@ -45,7 +45,7 @@ fn main() {
             tp: 4,
             mbs: 8,
             gas: 10,
-            zero1: true,
+            zero_stage: frontier_llm::zero::ShardingStage::OptimizerStates,
             nnodes: 16,
             interleave: 1,
             bf16: true,

@@ -104,6 +104,24 @@ impl Mailbox {
     }
 }
 
+/// One in-flight nonblocking all-gather round (see
+/// [`Group::start_all_gather_dtype`]): per-rank shard deposits assembled
+/// into one shared full buffer by whichever rank's deposit completes the
+/// round — pure placement, no reduction, so the result is exact at any
+/// arrival order.
+#[derive(Default)]
+struct AgRound {
+    deposits: Vec<Option<Payload>>,
+    arrived: usize,
+    /// The assembled full buffer, produced by the completing depositor.
+    result: Option<Payload>,
+    taken: usize,
+    /// Unpacked element count of the assembled buffer.
+    total: usize,
+    /// Wire dtype every rank of the round must agree on.
+    wire: Dtype,
+}
+
 /// One in-flight nonblocking bucket round (see [`Group::start_all_reduce`]).
 #[derive(Default)]
 struct NbRound {
@@ -130,6 +148,10 @@ pub struct Group {
     /// In-flight nonblocking bucket rounds, addressed by caller tag.
     nb: Mutex<HashMap<u64, NbRound>>,
     nb_cv: Condvar,
+    /// In-flight nonblocking all-gather rounds (ZeRO-3's on-demand
+    /// parameter gathers), in their own tag namespace.
+    ag: Mutex<HashMap<u64, AgRound>>,
+    ag_cv: Condvar,
     pub bytes_moved: AtomicU64,
     pub rounds: AtomicU64,
     /// Nonblocking bucket rounds completed.
@@ -139,10 +161,21 @@ pub struct Group {
     /// reduce-scatter-input volume, NOT per-deposit wire traffic).  The
     /// dtype-aware perf DP comm term is pinned EXACTLY against this.
     pub nb_payload_bytes: AtomicU64,
-    /// Logical payload bytes of `all_gather` rounds (element count ×
-    /// dtype width, once per round) — ZeRO-1's updated-parameter
-    /// all-gather volume, the second half of its RS+AG wire accounting.
+    /// Logical payload bytes of `all_gather` rounds — blocking AND
+    /// nonblocking — (element count × dtype width, once per round): the
+    /// stage-1/2 updated-parameter gathers plus ZeRO-3's on-demand
+    /// per-layer gathers, the AG half of the RS+AG wire accounting.
     pub ag_payload_bytes: AtomicU64,
+    /// High-water mark of full-parameter floats a single rank held live
+    /// through ZeRO-3's gather-use-drop lifecycle (engine-maintained;
+    /// max over the group's ranks) — the per-layer-residency contract
+    /// the mem tests validate.
+    pub ag_peak_floats: AtomicU64,
+    /// Logical pipeline p2p activation payload bytes (element count ×
+    /// wire dtype, once per boundary send; engine-maintained) — pinned
+    /// EXACTLY against the analytic PP p2p term, and exactly halved by
+    /// the packed-bf16 activation wire.
+    pub pp_payload_bytes: AtomicU64,
     /// Engine-maintained timing of nonblocking grad-sync work *hidden*
     /// under the backward pass (nanoseconds; the launch site decides
     /// the classification — see `coordinator::worker`).
@@ -168,11 +201,15 @@ impl Group {
             mail,
             nb: Mutex::new(HashMap::new()),
             nb_cv: Condvar::new(),
+            ag: Mutex::new(HashMap::new()),
+            ag_cv: Condvar::new(),
             bytes_moved: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
             nb_rounds: AtomicU64::new(0),
             nb_payload_bytes: AtomicU64::new(0),
             ag_payload_bytes: AtomicU64::new(0),
+            ag_peak_floats: AtomicU64::new(0),
+            pp_payload_bytes: AtomicU64::new(0),
             nb_hidden_ns: AtomicU64::new(0),
             nb_exposed_ns: AtomicU64::new(0),
         })
@@ -364,16 +401,29 @@ impl Group {
     /// round's logical payload (`out.len() × dtype`) into
     /// `ag_payload_bytes`.
     pub fn all_gather_dtype(&self, rank: usize, shard: &[f32], out: &mut [f32], dtype: Dtype) {
+        if rank == 0 && self.n > 1 {
+            self.ag_payload_bytes
+                .fetch_add(dtype.bytes() * out.len() as u64, Ordering::Relaxed);
+        }
+        self.all_gather_dtype_uncounted(rank, shard, out, dtype);
+    }
+
+    /// [`Group::all_gather_dtype`] without advancing `ag_payload_bytes` —
+    /// for out-of-band assemblies (the ZeRO-3 checkpoint save) that must
+    /// not perturb the EXACT parameter-gather wire pins.
+    pub fn all_gather_dtype_uncounted(
+        &self,
+        rank: usize,
+        shard: &[f32],
+        out: &mut [f32],
+        dtype: Dtype,
+    ) {
         let bounds = chunk_bounds(out.len(), self.n);
         let (lo, hi) = bounds[rank];
         assert_eq!(shard.len(), hi - lo, "shard size mismatch for rank {rank}");
         if self.n == 1 {
             out.copy_from_slice(shard);
             return;
-        }
-        if rank == 0 {
-            self.ag_payload_bytes
-                .fetch_add(dtype.bytes() * out.len() as u64, Ordering::Relaxed);
         }
         let payload = match dtype {
             Dtype::F32 => shard.to_vec(),
@@ -510,6 +560,124 @@ impl Group {
         }
         ReduceHandle { group: self.clone(), tag, immediate: None }
     }
+
+    /// Nonblocking **partition-aligned reduce-scatter** bucket: every rank
+    /// deposits its contribution over one span of the gradient buffer
+    /// that lies wholly inside `owner`'s DP partition, and only `owner`'s
+    /// [`ScatterHandle::wait`] materialises the reduced span — the
+    /// ZeRO-2/3 gradient dataflow.
+    ///
+    /// Rides the same deterministic rank-order machinery as
+    /// [`Group::start_all_reduce_dtype`] (the completing depositor folds
+    /// every wire-cast deposit in rank order, exactly once), so the shard
+    /// the owner receives is bit-for-bit the slice a bucketed all-reduce
+    /// would have produced — the invariant that keeps every sharding
+    /// stage on the DDP trajectory, overlapped or not.  Payload counters
+    /// advance identically (`nb_payload_bytes` counts the bucket's
+    /// reduce-scatter-input volume once per round), so the per-step DP
+    /// gradient wire volume is the same `params × dtype` under every
+    /// stage.
+    pub fn start_reduce_scatter_dtype(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        data: Vec<f32>,
+        owner: usize,
+        wire: Dtype,
+    ) -> ScatterHandle {
+        assert!(owner < self.n, "bucket owner {owner} out of range");
+        ScatterHandle {
+            owner: rank == owner,
+            inner: self.start_all_reduce_dtype(rank, tag, data, wire),
+        }
+    }
+
+    /// Nonblocking all-gather, deposit phase (ZeRO-3's prefetchable
+    /// on-demand parameter gather).  `shard` must be this rank's
+    /// [`chunk_bounds`] slice of a `total`-element buffer; deposits are
+    /// wire-cast (bf16 shards pack two-per-lane — half the bytes, and
+    /// lossless whenever the shards already sit on the bf16 grid, the
+    /// optimizer-maintained invariant).  The completing depositor
+    /// assembles the shared full buffer — pure placement, no reduction,
+    /// exact at any arrival order — and counts the round's logical
+    /// payload (`total × dtype`) into `ag_payload_bytes`.  Redeem with
+    /// [`GatherHandle::wait_shared`]; tags live in their own namespace
+    /// and may not be reused until every rank has redeemed.
+    pub fn start_all_gather_dtype(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        shard: Vec<f32>,
+        total: usize,
+        wire: Dtype,
+    ) -> GatherHandle {
+        self.start_all_gather_shared(rank, tag, Arc::new(shard), total, wire)
+    }
+
+    /// Zero-copy deposit variant of [`Group::start_all_gather_dtype`]:
+    /// an f32-wire deposit is the shared buffer itself (the engine hands
+    /// its parameter-shard `Arc` straight in — no shard-sized copy per
+    /// gather); bf16 still packs (which is itself the copy).
+    pub fn start_all_gather_shared(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        shard: Payload,
+        total: usize,
+        wire: Dtype,
+    ) -> GatherHandle {
+        assert!(rank < self.n);
+        let bounds = chunk_bounds(total, self.n);
+        let (lo, hi) = bounds[rank];
+        assert_eq!(shard.len(), hi - lo, "gather shard size mismatch for rank {rank}");
+        if self.n == 1 {
+            return GatherHandle { group: self.clone(), tag, immediate: Some(shard) };
+        }
+        let deposit: Payload = match wire {
+            Dtype::F32 => shard,
+            Dtype::Bf16 => Arc::new(pack_bf16(&shard)),
+        };
+        self.bytes_moved.fetch_add(4 * deposit.len() as u64, Ordering::Relaxed);
+        let mut ag = self.ag.lock().unwrap();
+        let round = ag.entry(tag).or_insert_with(|| AgRound {
+            deposits: vec![None; self.n],
+            total,
+            wire,
+            ..Default::default()
+        });
+        assert!(round.result.is_none(), "gather tag {tag:#x} reused before fully drained");
+        assert!(round.deposits[rank].is_none(), "rank {rank} double deposit on gather {tag:#x}");
+        assert!(
+            round.total == total && round.wire == wire,
+            "gather {tag:#x}: rank {rank} deposited into a {}×{:?} round as {total}×{wire:?}",
+            round.total,
+            round.wire
+        );
+        round.deposits[rank] = Some(deposit);
+        round.arrived += 1;
+        if round.arrived == self.n {
+            let deps: Vec<Payload> = round
+                .deposits
+                .iter()
+                .map(|d| d.as_ref().expect("deposited").clone())
+                .collect();
+            drop(ag);
+            let mut out = vec![0.0f32; total];
+            for (r, contrib) in deps.iter().enumerate() {
+                let (lo, hi) = bounds[r];
+                match wire {
+                    Dtype::F32 => out[lo..hi].copy_from_slice(contrib),
+                    Dtype::Bf16 => out[lo..hi].copy_from_slice(&unpack_bf16(contrib, hi - lo)),
+                }
+            }
+            let mut ag = self.ag.lock().unwrap();
+            ag.get_mut(&tag).expect("in-flight gather").result = Some(Arc::new(out));
+            self.ag_payload_bytes
+                .fetch_add(wire.bytes() * total as u64, Ordering::Relaxed);
+            self.ag_cv.notify_all();
+        }
+        GatherHandle { group: self.clone(), tag, immediate: None }
+    }
 }
 
 /// Handle on one in-flight nonblocking bucket round (see
@@ -555,6 +723,85 @@ impl ReduceHandle {
                 return result;
             }
             nb = self.group.nb_cv.wait(nb).unwrap();
+        }
+    }
+}
+
+/// Handle on one in-flight reduce-scatter bucket (see
+/// [`Group::start_reduce_scatter_dtype`]).  Every rank must redeem its
+/// handle (that is what retires the round and frees the tag), but only
+/// the bucket's owner receives — and therefore materialises — the
+/// reduced span.
+#[must_use = "an unredeemed reduce-scatter bucket deadlocks the round's other ranks"]
+pub struct ScatterHandle {
+    inner: ReduceHandle,
+    owner: bool,
+}
+
+impl ScatterHandle {
+    /// Block until every rank has deposited.  The owner gets an owned
+    /// copy of the bucket's rank-order sum; every other rank gets `None`
+    /// without copying a byte of the result.  Prefer
+    /// [`ScatterHandle::wait_shared`] when a borrow suffices (the
+    /// engine's drain copies straight out of the shared sum into its
+    /// gradient shard — one copy total).
+    pub fn wait(self) -> Option<Vec<f32>> {
+        self.wait_shared().map(|shared| match Arc::try_unwrap(shared) {
+            Ok(v) => v,
+            Err(s) => s.as_slice().to_vec(),
+        })
+    }
+
+    /// Zero-copy redeem: the shared rank-order sum itself for the owner,
+    /// `None` for everyone else.  Redeeming retires the round once every
+    /// rank has done so.
+    pub fn wait_shared(self) -> Option<Payload> {
+        let shared = self.inner.wait_shared();
+        self.owner.then_some(shared)
+    }
+}
+
+/// Handle on one in-flight nonblocking all-gather round (see
+/// [`Group::start_all_gather_dtype`]).
+#[must_use = "an unredeemed gather deadlocks the round's other ranks"]
+pub struct GatherHandle {
+    group: Arc<Group>,
+    tag: u64,
+    /// Single-rank groups gather to the deposit itself.
+    immediate: Option<Payload>,
+}
+
+impl GatherHandle {
+    /// Block until every rank has deposited, then return an owned copy of
+    /// the assembled buffer.
+    pub fn wait(self) -> Vec<f32> {
+        match Arc::try_unwrap(self.wait_shared()) {
+            Ok(v) => v,
+            Err(shared) => shared.as_slice().to_vec(),
+        }
+    }
+
+    /// Zero-copy redeem: the shared assembled buffer itself (ZeRO-3 hands
+    /// this straight to the stage entry points as the step's parameter
+    /// view).  Redeeming also retires the round once every rank has done
+    /// so, freeing the tag.
+    pub fn wait_shared(self) -> Payload {
+        if let Some(data) = self.immediate {
+            return data;
+        }
+        let n = self.group.n;
+        let mut ag = self.group.ag.lock().unwrap();
+        loop {
+            let round = ag.get_mut(&self.tag).expect("gather round vanished");
+            if round.result.is_some() {
+                round.taken += 1;
+                let result = round.result.as_ref().expect("result set").clone();
+                if round.taken == n {
+                    ag.remove(&self.tag);
+                }
+                return result;
+            }
+            ag = self.group.ag_cv.wait(ag).unwrap();
         }
     }
 }
@@ -1331,6 +1578,138 @@ mod tests {
             assert_eq!(got, &results[0].0, "rank {rank} diverged");
             assert_eq!(mx, &results[0].1, "rank {rank} max diverged");
         }
+    }
+
+    #[test]
+    fn reduce_scatter_buckets_owner_gets_rank_order_sum() {
+        // partition-aligned RS buckets: each owner's shard is bitwise the
+        // slice of the rank-order sum a bucketed all-reduce would produce
+        for n in [2usize, 3, 4] {
+            let len = 37;
+            let want = expected_sum(n, len);
+            run_ranks(n, move |rank, g| {
+                let bounds = chunk_bounds(len, n);
+                let data = test_data(rank, len);
+                let handles: Vec<_> = bounds
+                    .iter()
+                    .enumerate()
+                    .map(|(owner, &(lo, hi))| {
+                        (
+                            owner,
+                            lo,
+                            g.start_reduce_scatter_dtype(
+                                rank,
+                                0xC0 + owner as u64,
+                                data[lo..hi].to_vec(),
+                                owner,
+                                Dtype::F32,
+                            ),
+                        )
+                    })
+                    .collect();
+                for (owner, lo, h) in handles {
+                    match h.wait() {
+                        Some(shard) => {
+                            assert_eq!(owner, rank, "non-owner got a shard");
+                            for (i, v) in shard.iter().enumerate() {
+                                assert_eq!(
+                                    v.to_bits(),
+                                    want[lo + i].to_bits(),
+                                    "n={n} owner={owner} i={i}"
+                                );
+                            }
+                        }
+                        None => assert_ne!(owner, rank, "owner got nothing"),
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_counts_the_same_payload_as_all_reduce() {
+        let n = 2;
+        let len = 64usize;
+        run_ranks(n, move |rank, g| {
+            let bounds = chunk_bounds(len, n);
+            let handles: Vec<_> = bounds
+                .iter()
+                .enumerate()
+                .map(|(owner, &(lo, hi))| {
+                    g.start_reduce_scatter_dtype(
+                        rank,
+                        owner as u64,
+                        vec![1.0f32; hi - lo],
+                        owner,
+                        Dtype::Bf16,
+                    )
+                })
+                .collect();
+            for h in handles {
+                std::hint::black_box(h.wait());
+            }
+            g.barrier(rank);
+            if rank == 0 {
+                // one bf16 round per owner span: Σ span × 2 bytes = len × 2
+                assert_eq!(g.nb_payload_bytes.load(Ordering::Relaxed), 2 * len as u64);
+                assert_eq!(g.nb_rounds.load(Ordering::Relaxed), n as u64);
+            }
+        });
+    }
+
+    #[test]
+    fn nonblocking_all_gather_assembles_and_counts() {
+        for n in [1usize, 2, 4] {
+            let total = 53usize;
+            run_ranks(n, move |rank, g| {
+                let bounds = chunk_bounds(total, n);
+                let (lo, hi) = bounds[rank];
+                // shard values on the bf16 grid (the ZeRO-3 case)
+                let shard = Dtype::Bf16.quantized(&test_data(rank, hi - lo));
+                let h32 = g.start_all_gather_dtype(rank, 1, shard.clone(), total, Dtype::F32);
+                let f32_out = h32.wait();
+                let h16 = g.start_all_gather_dtype(rank, 2, shard, total, Dtype::Bf16);
+                let bf16_out = h16.wait();
+                assert_eq!(f32_out.len(), total);
+                assert_eq!(f32_out, bf16_out, "packed gather of grid values must be exact");
+                // every rank's span equals its deposit
+                for r in 0..n {
+                    let (lo, hi) = bounds[r];
+                    let want = Dtype::Bf16.quantized(&test_data(r, hi - lo));
+                    assert_eq!(&f32_out[lo..hi], want.as_slice(), "n={n} span {r}");
+                }
+                g.barrier(rank);
+                if rank == 0 && n > 1 {
+                    // one f32 round (4·total) + one bf16 round (2·total)
+                    assert_eq!(g.ag_payload_bytes.load(Ordering::Relaxed), 6 * total as u64);
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn nonblocking_gathers_prefetch_interleaved() {
+        // several gather rounds in flight at once (the prefetch pattern),
+        // redeemed in launch order while deposits interleave across ranks
+        let n = 3;
+        let total = 24usize;
+        run_ranks(n, move |rank, g| {
+            let bounds = chunk_bounds(total, n);
+            let (lo, hi) = bounds[rank];
+            let handles: Vec<_> = (0..4u64)
+                .map(|t| {
+                    let shard: Vec<f32> =
+                        (lo..hi).map(|i| (i as f32) + 100.0 * t as f32).collect();
+                    g.start_all_gather_dtype(rank, t, shard, total, Dtype::F32)
+                })
+                .collect();
+            for (t, h) in handles.into_iter().enumerate() {
+                let full = h.wait();
+                for (i, v) in full.iter().enumerate() {
+                    assert_eq!(*v, i as f32 + 100.0 * t as f32, "round {t} elem {i}");
+                }
+            }
+        });
     }
 
     #[test]

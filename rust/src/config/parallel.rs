@@ -2,9 +2,10 @@
 //!
 //! One `ParallelConfig` captures a full distribution strategy: the 3D
 //! decomposition (TP x PP x DP), micro-batching, the pipeline schedule, and
-//! the memory/software options the paper tunes (ZeRO-1, flash attention,
-//! activation checkpointing, precision).
+//! the memory/software options the paper tunes (the ZeRO sharding stage,
+//! flash attention, activation checkpointing, precision).
 
+use crate::zero::ShardingStage;
 
 /// Pipeline schedule flavours discussed in §II.C.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -85,8 +86,10 @@ pub struct ParallelConfig {
     pub mbs: u32,
     /// Global batch size (samples across all replicas per step).
     pub gbs: u32,
-    /// ZeRO-1: shard optimizer states across the DP group (§II.D).
-    pub zero1: bool,
+    /// ZeRO sharding stage across the DP group (§II.D): 0 = DDP, 1 =
+    /// optimizer states sharded (the paper's knob), 2 = + gradient
+    /// shards, 3 = + parameter shards with on-demand gathering.
+    pub zero_stage: ShardingStage,
     /// Flash-Attention v2 (§V.A: up to 30% throughput gain).
     pub flash_attention: bool,
     /// Activation checkpointing (Table V: always on for the big runs).
@@ -103,7 +106,7 @@ impl Default for ParallelConfig {
             dp: 1,
             mbs: 1,
             gbs: 1,
-            zero1: false,
+            zero_stage: ShardingStage::Ddp,
             flash_attention: true,
             checkpoint_activations: true,
             precision: Precision::Fp16,
@@ -203,8 +206,15 @@ impl ParallelConfig {
         self.gbs = gbs;
         self
     }
+    /// Deprecated boolean alias: `true` selects sharding stage 1 (the
+    /// paper's ZeRO-1 knob), `false` plain DDP.  New call sites should
+    /// use [`ParallelConfig::with_zero_stage`].
     pub fn with_zero1(mut self, z: bool) -> Self {
-        self.zero1 = z;
+        self.zero_stage = if z { ShardingStage::OptimizerStates } else { ShardingStage::Ddp };
+        self
+    }
+    pub fn with_zero_stage(mut self, s: ShardingStage) -> Self {
+        self.zero_stage = s;
         self
     }
     pub fn with_schedule(mut self, s: ScheduleKind) -> Self {

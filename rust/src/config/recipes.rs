@@ -1,6 +1,8 @@
 //! The paper's tuned training recipes (Table V) plus the configurations
 //! behind each figure, so every bench/example pulls the exact same setup.
 
+use crate::zero::ShardingStage;
+
 use super::model::{lookup, ModelSpec};
 use super::parallel::{ParallelConfig, Precision, ScheduleKind};
 
@@ -40,7 +42,7 @@ pub fn recipe_175b() -> Recipe {
             dp: 16,
             mbs: 1,
             gbs: 640 * 16, // per-replica batch 640 (Fig 12a)
-            zero1: true,
+            zero_stage: ShardingStage::OptimizerStates,
             flash_attention: true,
             checkpoint_activations: true,
             precision: Precision::Bf16,
@@ -60,7 +62,7 @@ pub fn recipe_1t() -> Recipe {
             dp: 6,
             mbs: 1,
             gbs: 1600 * 6,
-            zero1: true,
+            zero_stage: ShardingStage::OptimizerStates,
             flash_attention: true,
             checkpoint_activations: true,
             precision: Precision::Bf16,
@@ -80,7 +82,7 @@ pub fn recipe_22b() -> Recipe {
             dp: 1,
             mbs: 2,
             gbs: 128,
-            zero1: true,
+            zero_stage: ShardingStage::OptimizerStates,
             flash_attention: true,
             checkpoint_activations: true,
             precision: Precision::Bf16,

@@ -2,8 +2,8 @@
 //!
 //! Format — one file per **(global stage, tp rank)**, written by that
 //! shard's dp-rank-0 worker; DP replicas hold identical parameters so one
-//! copy suffices, and with ZeRO-1 each DP rank persists only its own
-//! optimizer shard, matching DeepSpeed's per-rank checkpoint layout:
+//! copy suffices, and under ZeRO stages 1+ each DP rank persists only its
+//! own optimizer shard, matching DeepSpeed's per-rank checkpoint layout:
 //!
 //! ```text
 //! ckpt-dir/
@@ -15,8 +15,13 @@
 //! Keying by *global* stage (not worker rank) means a run can resume
 //! under a different pipeline chunking (`v`) of the same bundle; keying
 //! by tp rank means every tensor shard round-trips its own slice.  The
-//! manifest pins `(bundle, global stages, tp, dp, zero1)` — resuming with
-//! a different tp or dp is rejected rather than mis-assembled.
+//! manifest pins `(bundle, global stages, tp, dp, zero_stage)` —
+//! resuming with a different tp or dp is rejected rather than
+//! mis-assembled, and sharding stages resume only into themselves or
+//! across the layout-identical 1 ↔ 2 pair (`ShardingStage::
+//! resume_compatible`).  Parameter files always hold the FULL (tp-shard)
+//! vector — ZeRO-3 runs assemble it with a blocking DP all-gather at
+//! save time and re-slice their shard on resume.
 //!
 //! Binary payloads are little-endian f32 with an 16-byte header
 //! (magic, version, element count, adam step).
@@ -41,7 +46,9 @@ pub struct Manifest {
     pub stages: u32,
     pub tp: u32,
     pub dp: u32,
-    pub zero1: bool,
+    /// ZeRO sharding stage (0..=3) the checkpoint was written at; legacy
+    /// manifests carried a `zero1` bool, parsed as stage 0/1.
+    pub zero_stage: u32,
     /// Engine precision name ("fp32" / "bf16") — resuming under a
     /// different precision is rejected (the optimizer state layout and
     /// the parameter grid both change).
@@ -56,13 +63,13 @@ impl Manifest {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"step\": {}, \"bundle\": {}, \"stages\": {}, \"tp\": {}, \"dp\": {}, \
-             \"zero1\": {}, \"precision\": {}, \"loss_scale\": {}, \"scale_good_steps\": {}}}",
+             \"zero_stage\": {}, \"precision\": {}, \"loss_scale\": {}, \"scale_good_steps\": {}}}",
             self.step,
             crate::util::json::escape(&self.bundle),
             self.stages,
             self.tp,
             self.dp,
-            self.zero1,
+            self.zero_stage,
             crate::util::json::escape(&self.precision),
             self.loss_scale,
             self.scale_good_steps
@@ -90,7 +97,11 @@ impl Manifest {
             stages,
             tp: j.u64_field("tp").map_err(|e| anyhow!("{e}"))? as u32,
             dp: j.u64_field("dp").map_err(|e| anyhow!("{e}"))? as u32,
-            zero1: j.bool_field("zero1").map_err(|e| anyhow!("{e}"))?,
+            zero_stage: match j.u64_field("zero_stage") {
+                Ok(s) => s as u32,
+                // pre-staged manifests carried a zero1 bool: stage 0 or 1
+                Err(_) => u32::from(j.bool_field("zero1").map_err(|e| anyhow!("{e}"))?),
+            },
             // pre-mixed-precision checkpoints were all fp32 at scale 1
             precision: j.str_field("precision").unwrap_or_else(|_| "fp32".to_string()),
             loss_scale: j.f64_field("loss_scale").unwrap_or(1.0) as f32,
@@ -178,33 +189,40 @@ mod tests {
 
     #[test]
     fn manifest_round_trip() {
-        let m = Manifest {
-            step: 17,
-            bundle: "tiny-s2-mb2".into(),
-            stages: 2,
-            tp: 4,
-            dp: 3,
-            zero1: true,
-            precision: "bf16".into(),
-            loss_scale: 2048.0,
-            scale_good_steps: 7,
-        };
-        let back = Manifest::from_json(&m.to_json()).unwrap();
-        assert_eq!(m, back);
-        // fractional scales survive too (post-backoff states)
-        let m2 = Manifest { loss_scale: 0.03125, ..m };
-        assert_eq!(Manifest::from_json(&m2.to_json()).unwrap(), m2);
+        for stage in 0..4u32 {
+            let m = Manifest {
+                step: 17,
+                bundle: "tiny-s2-mb2".into(),
+                stages: 2,
+                tp: 4,
+                dp: 3,
+                zero_stage: stage,
+                precision: "bf16".into(),
+                loss_scale: 2048.0,
+                scale_good_steps: 7,
+            };
+            let back = Manifest::from_json(&m.to_json()).unwrap();
+            assert_eq!(m, back);
+            // fractional scales survive too (post-backoff states)
+            let m2 = Manifest { loss_scale: 0.03125, ..m };
+            assert_eq!(Manifest::from_json(&m2.to_json()).unwrap(), m2);
+        }
     }
 
     #[test]
     fn manifest_without_precision_defaults_to_fp32() {
-        // pre-mixed-precision manifests keep loading
+        // pre-mixed-precision manifests keep loading, and their zero1
+        // bool parses onto the stage ladder
         let legacy = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"stages\": 2, \
                       \"tp\": 1, \"dp\": 1, \"zero1\": false}";
         let m = Manifest::from_json(legacy).unwrap();
         assert_eq!(m.precision, "fp32");
         assert_eq!(m.loss_scale, 1.0);
         assert_eq!(m.scale_good_steps, 0);
+        assert_eq!(m.zero_stage, 0);
+        let legacy_z1 = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"stages\": 2, \
+                         \"tp\": 1, \"dp\": 2, \"zero1\": true}";
+        assert_eq!(Manifest::from_json(legacy_z1).unwrap().zero_stage, 1);
     }
 
     #[test]

@@ -9,8 +9,9 @@
 //! `collectives::Group` mailboxes, run per-layer tensor-parallel
 //! all-reduces through their `collectives::SubGroup`, accumulate
 //! gradients over micro-batches, and synchronise per-stage DP groups
-//! through a real ring all-reduce (or ZeRO-1 reduce-scatter/all-gather)
-//! before the sharded Adam step.
+//! through a real ring all-reduce (or, under sharding stages 2+, a
+//! partition-aligned reduce-scatter whose shards are all each rank ever
+//! materialises) before the sharded Adam step.
 //!
 //! **Virtual stages:** with `Interleaved1F1B { v }` the bundle's
 //! `n_stages` stage executables are split `v` per worker — worker `r`
@@ -51,7 +52,7 @@ pub mod checkpoint;
 pub mod worker;
 
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 
@@ -64,6 +65,7 @@ use crate::optim::{AdamConfig, LrSchedule};
 use crate::precision::{CastPolicy, Dtype};
 use crate::runtime::{Bundle, BuiltinSpec, Runtime, StageBackend};
 use crate::schedule;
+use crate::zero::ShardingStage;
 
 /// Engine configuration for one training run.
 #[derive(Debug, Clone)]
@@ -85,8 +87,12 @@ pub struct EngineConfig {
     pub steps: u32,
     pub adam: AdamConfig,
     pub lr_schedule: Option<LrSchedule>,
-    /// ZeRO-1 sharded optimizer states across the DP group.
-    pub zero1: bool,
+    /// ZeRO sharding stage across the DP group: 0 = plain DDP, 1 =
+    /// optimizer states sharded, 2 = + reduce-scattered gradient shards,
+    /// 3 = + on-demand-gathered parameter shards (builtin bundles only —
+    /// the gathered views are host buffers).  CLI: `--zero-stage`
+    /// (`--zero1` survives as a deprecated alias for stage 1).
+    pub zero_stage: ShardingStage,
     /// Overlap DP gradient sync with the backward pass: each chunk's
     /// gradient buckets launch (nonblocking) as soon as its last
     /// micro-batch backward finishes, and drain just before the
@@ -140,7 +146,7 @@ impl Default for EngineConfig {
             steps: 10,
             adam: AdamConfig::default(),
             lr_schedule: None,
-            zero1: false,
+            zero_stage: ShardingStage::Ddp,
             overlap_grad_sync: true,
             grad_bucket_floats: 1 << 15,
             collective_algo: Algo::Ring,
@@ -208,10 +214,28 @@ pub struct TrainReport {
     /// dtype, once per bucket round) — pinned EXACTLY against
     /// `perf::dp_grad_payload_bytes` per step; exactly halves under bf16.
     pub dp_bucket_payload_bytes: u64,
-    /// Logical ZeRO-1 updated-parameter all-gather payload bytes (the
-    /// second half of the reduce-scatter + all-gather wire accounting;
-    /// 0 for plain DDP, which never gathers).
+    /// Logical parameter all-gather payload bytes: the stage-1/2
+    /// updated-parameter gathers (the second half of the reduce-scatter
+    /// + all-gather wire accounting) or ZeRO-3's on-demand per-use
+    /// gathers; 0 for plain DDP, which never gathers.
     pub dp_param_ag_bytes: u64,
+    /// Logical pipeline p2p activation payload bytes (boundary
+    /// activations down + boundary gradients up, element count × wire
+    /// dtype) — pinned EXACTLY against `perf`'s PP p2p term; exactly
+    /// halves under the packed-bf16 activation wire.
+    pub pp_p2p_payload_bytes: u64,
+    /// Sharding stage the run executed at.
+    pub zero_stage: ShardingStage,
+    /// ZeRO-3 gather-use-drop residency: the high-water mark of
+    /// full-parameter floats any single rank held gathered at once
+    /// (current op + one prefetch) — the engine-measured bound the mem
+    /// model's per-layer transient term is validated against.  0 unless
+    /// stage 3 ran with dp > 1.
+    pub zero3_peak_gathered_floats: u64,
+    /// Resident optimizer-state bytes on the heaviest rank (Adam moments
+    /// + fp32 masters; shard-sized under stages 1+) — the measured
+    /// shard-bytes figure.
+    pub opt_state_bytes_per_rank: u64,
     /// Numeric precision the run executed at.
     pub precision: Dtype,
     /// Loss scale after the final step.
@@ -297,6 +321,15 @@ pub fn train_with_bundle(
             cfg.precision.name()
         );
     }
+    if cfg.zero_stage.shards_params() {
+        // ZeRO-3 hands each op a host-buffer gathered parameter view;
+        // the XLA artifact stages stage device buffers instead
+        anyhow::ensure!(
+            cfg.bundle.starts_with("builtin:"),
+            "--zero-stage 3 requires a builtin:* bundle — the AOT artifact stages \
+             stage device parameter buffers, not on-demand gathered host views"
+        );
+    }
     if tp > 1 {
         // only the builtin backend shards; fail fast with a clear message
         // (tp_shard re-validates per stage)
@@ -348,9 +381,19 @@ pub fn train_with_bundle(
             manifest.bundle == cfg.bundle
                 && manifest.stages == n_stages as u32
                 && manifest.tp == tp as u32
-                && manifest.dp == dp as u32
-                && manifest.zero1 == cfg.zero1,
+                && manifest.dp == dp as u32,
             "checkpoint shape mismatch: {manifest:?} vs current run"
+        );
+        let ckpt_stage = ShardingStage::from_index(manifest.zero_stage)
+            .ok_or_else(|| anyhow!("manifest carries unknown zero_stage {}", manifest.zero_stage))?;
+        anyhow::ensure!(
+            ckpt_stage.resume_compatible(cfg.zero_stage),
+            "checkpoint sharding stage {} cannot resume as stage {}: only the identical \
+             stage, or the reshard-compatible 1 <-> 2 pair (same 1/dp optimizer-shard \
+             layout, full on-disk params), round-trips — stages 0 and 3 change the \
+             optimizer-state or parameter residency layout",
+            ckpt_stage.index(),
+            cfg.zero_stage.index()
         );
         anyhow::ensure!(
             manifest.precision == cfg.precision.name(),
@@ -381,6 +424,9 @@ pub fn train_with_bundle(
     // per-step report: (step, loss, grad norm, loss scale, skipped)
     let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32, f32, bool)>();
 
+    // measured per-rank optimizer residency (max over workers)
+    let opt_state_bytes = Arc::new(AtomicU64::new(0));
+
     let mut handles = Vec::with_capacity(world_size);
     for pp_rank in 0..pp {
         for dp_rank in 0..dp {
@@ -403,6 +449,7 @@ pub fn train_with_bundle(
                     start_step,
                     start_loss_scale,
                     start_scale_good,
+                    opt_state_bytes: opt_state_bytes.clone(),
                     loss_tx: if pp_rank == pp - 1 && dp_rank == 0 && tp_rank == 0 {
                         Some(loss_tx.clone())
                     } else {
@@ -492,6 +539,12 @@ pub fn train_with_bundle(
         .iter()
         .map(|g| g.ag_payload_bytes.load(Ordering::Relaxed))
         .sum::<u64>();
+    let zero3_peak_gathered_floats = dp_groups
+        .iter()
+        .map(|g| g.ag_peak_floats.load(Ordering::Relaxed))
+        .max()
+        .unwrap_or(0);
+    let pp_p2p_payload_bytes = world.pp_payload_bytes.load(Ordering::Relaxed);
     Ok(TrainReport {
         world_size,
         total_params: bundle.meta.model.total_params,
@@ -506,6 +559,10 @@ pub fn train_with_bundle(
         dp_bucket_rounds,
         dp_bucket_payload_bytes,
         dp_param_ag_bytes,
+        pp_p2p_payload_bytes,
+        zero_stage: cfg.zero_stage,
+        zero3_peak_gathered_floats,
+        opt_state_bytes_per_rank: opt_state_bytes.load(Ordering::Relaxed),
         precision: cfg.precision,
         final_loss_scale,
         steps_skipped,

@@ -8,40 +8,53 @@
 //! several chunk channels share each (from, to) worker mailbox, every
 //! message is tagged with `(direction, destination chunk, micro-batch)`;
 //! with `pp = 1` the chunk boundary stays worker-local and skips the
-//! mailboxes entirely.
+//! mailboxes entirely.  Cross-worker boundary payloads ride the engine's
+//! wire dtype: under bf16 the (grid-constrained) activations pack two
+//! values per lane — half the p2p bytes, bit-lossless, counted into
+//! `pp_payload_bytes` and pinned against the analytic PP p2p term.
 //!
 //! With `tp > 1` the worker is one of `tp` shard threads of a pipeline
 //! cell: it executes the SAME instruction stream as its TP siblings
 //! (SPMD), each op's per-layer all-reduces running inside the sharded
-//! stage entry points through `TpComm`.  Pipeline p2p connects
-//! *corresponding* tp ranks of adjacent cells — every shard holds the
-//! full activation after its row-parallel all-reduce, so the boundary
-//! protocol is unchanged from the dense engine.
+//! stage entry points through `TpComm`.
 //!
 //! **Backward-overlapped gradient sync** (the paper's §IV DeepSpeed
 //! lever, executed for real): each chunk counts down its micro-batch
 //! backwards; the moment the last one completes, the chunk's gradient
 //! is finalised (1/m scale + TP replicated-span sync) and split into
-//! nonblocking all-reduce buckets on the DP group, which reduce under
-//! whatever backward compute is still in flight.  The handles drain
-//! just before the optimizer step.  Because the bucketed all-reduce
-//! sums in rank order no matter when deposits land, the overlapped and
-//! sequential paths produce **bit-identical** loss trajectories — the
-//! equivalence the overlap tests pin.  Launch-site timing classifies
-//! every second of sync work as hidden (mid-stream) or exposed
-//! (post-stream / drain); `TrainReport` surfaces the two and `perf`
-//! prices its DP comm term from the same fraction.
+//! nonblocking buckets on the DP group, which reduce under whatever
+//! backward compute is still in flight.  The handles drain just before
+//! the optimizer step.  Under sharding stages 0/1 the buckets are
+//! all-reduces (every rank drains the full reduced buffer); under
+//! stages 2/3 they are **partition-aligned reduce-scatter** buckets —
+//! each bucket's span lies wholly inside one rank's `chunk_bounds`
+//! partition, and only that owner materialises the reduced span, so the
+//! persistent reduced gradient on a rank is its `1/dp` shard.  Both
+//! shapes reduce in rank order no matter when deposits land, so
+//! overlapped ≡ sequential stays **bit-identical** across every stage.
+//!
+//! **ZeRO-3 parameter lifecycle** (stage 3): each rank stores only its
+//! flat parameter shard of every hosted chunk.  Around each op that
+//! needs parameters, the full vector is assembled by a nonblocking DP
+//! all-gather — launched one param-using op ahead (prefetch), redeemed
+//! zero-copy as the op's parameter view, and dropped right after the op
+//! — so peak full-parameter residency is ~2 gathered chunks, never the
+//! worker's whole model share (`ag_peak_floats` records the high-water
+//! mark the mem tests validate).  The optimizer then steps the shard in
+//! place; no post-step gather exists.
 
-use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::collectives::{Group, ReduceHandle, SubGroup, TpComm};
+use crate::collectives::{
+    chunk_bounds, GatherHandle, Group, ReduceHandle, ScatterHandle, SubGroup, TpComm,
+};
 use crate::data::BatchStream;
-use crate::precision::{Dtype, LossScaler};
+use crate::precision::{pack_bf16, unpack_bf16, Dtype, LossScaler};
 use crate::runtime::{Bundle, ParamsHandle, Runtime, StageExecutables};
 use crate::schedule::{Op, Schedule};
 use crate::zero::DistOptimizer;
@@ -74,6 +87,10 @@ pub struct WorkerCtx {
     /// resume, `cfg.loss_scale_init` otherwise).
     pub start_loss_scale: f32,
     pub start_scale_good: u32,
+    /// Per-rank resident optimizer-state bytes, reported back to the
+    /// leader (max over workers) — the measured shard-bytes figure the
+    /// examples print.
+    pub opt_state_bytes: Arc<AtomicU64>,
     /// Only the (last-rank, dp=0, tp=0) worker reports losses:
     /// (step, loss, grad norm, post-update loss scale, skipped).
     pub loss_tx: Option<mpsc::Sender<(u32, f32, f32, f32, bool)>>,
@@ -86,9 +103,14 @@ fn tag(direction: u64, chunk: usize, mb: usize) -> u64 {
     (direction << 48) | ((chunk as u64) << 24) | mb as u64
 }
 
-/// In-flight DP gradient buckets of one chunk: `(span lo, span hi,
-/// nonblocking all-reduce handle)`.
-type ChunkBuckets = Vec<(usize, usize, ReduceHandle)>;
+/// In-flight DP gradient sync of one chunk, `(span lo, span hi, handle)`
+/// per bucket: all-reduce buckets under stages 0/1 (every rank redeems
+/// the full reduced span), partition-aligned reduce-scatter buckets
+/// under stages 2/3 (only the span's owner materialises it).
+enum ChunkSync {
+    AllReduce(Vec<(usize, usize, ReduceHandle)>),
+    ReduceScatter(Vec<(usize, usize, ScatterHandle)>),
+}
 
 /// Per-chunk gradient finalisation, run the moment the chunk's last
 /// micro-batch backward completes: mean over micro-batches, then the
@@ -125,7 +147,7 @@ fn launch_grad_buckets(
     grads: &[f32],
     bucket_floats: usize,
     wire: Dtype,
-) -> ChunkBuckets {
+) -> Vec<(usize, usize, ReduceHandle)> {
     let bucket = bucket_floats.max(1);
     assert!(chunk < (1 << 8), "chunk {chunk} overflows the bucket-tag field");
     let n_buckets = grads.len().div_ceil(bucket);
@@ -148,10 +170,51 @@ fn launch_grad_buckets(
     out
 }
 
+/// The stage-2/3 counterpart of [`launch_grad_buckets`]: split the
+/// buffer along the DP partition FIRST (`chunk_bounds`), then bucket
+/// within each owner's range, so every bucket has exactly one owner and
+/// the drained shards tile this rank's partition.  Same tag layout,
+/// bucket index counted across owners.
+fn launch_rs_buckets(
+    group: &Arc<Group>,
+    rank: usize,
+    step: u32,
+    chunk: usize,
+    grads: &[f32],
+    bucket_floats: usize,
+    wire: Dtype,
+) -> Vec<(usize, usize, ScatterHandle)> {
+    let bucket = bucket_floats.max(1);
+    assert!(chunk < (1 << 8), "chunk {chunk} overflows the bucket-tag field");
+    let bounds = chunk_bounds(grads.len(), group.len());
+    let n_buckets: usize = bounds.iter().map(|(lo, hi)| (hi - lo).div_ceil(bucket)).sum();
+    assert!(
+        n_buckets < (1 << 24),
+        "grad_bucket_floats {bucket_floats} yields {n_buckets} buckets (tag field is 24 bits)"
+    );
+    let mut out = Vec::with_capacity(n_buckets);
+    for (owner, &(olo, ohi)) in bounds.iter().enumerate() {
+        let mut lo = olo;
+        while lo < ohi {
+            let hi = (lo + bucket).min(ohi);
+            let tag = ((step as u64) << 32) | ((chunk as u64) << 24) | out.len() as u64;
+            out.push((
+                lo,
+                hi,
+                group.start_reduce_scatter_dtype(rank, tag, grads[lo..hi].to_vec(), owner, wire),
+            ));
+            lo = hi;
+        }
+    }
+    out
+}
+
 /// Finalize chunk `c`'s gradient ([`finalize_chunk_grads`]) and launch
-/// its DP buckets, charging the launch time to the hidden (mid-stream)
-/// or exposed (post-stream) timer — the single definition both call
-/// sites share so the hidden/exposed split cannot drift.
+/// its DP buckets — all-reduce or partition-aligned reduce-scatter,
+/// per the run's sharding stage — charging the launch time to the
+/// hidden (mid-stream) or exposed (post-stream) timer; the single
+/// definition both call sites share so the hidden/exposed split cannot
+/// drift.
 #[allow(clippy::too_many_arguments)]
 fn finalize_and_launch(
     ctx: &WorkerCtx,
@@ -162,24 +225,36 @@ fn finalize_and_launch(
     step: u32,
     c: usize,
     hidden: bool,
-) -> ChunkBuckets {
+) -> ChunkSync {
     finalize_chunk_grads(grads, inv_m, stage.tp_replicated_span(), comm);
     if ctx.dp == 1 {
-        return Vec::new();
+        return ChunkSync::AllReduce(Vec::new());
     }
     let t0 = Instant::now();
-    let buckets = launch_grad_buckets(
-        &ctx.dp_group,
-        ctx.dp_rank,
-        step,
-        c,
-        grads,
-        ctx.cfg.grad_bucket_floats,
-        ctx.cfg.precision,
-    );
+    let sync = if ctx.cfg.zero_stage.shards_grads() {
+        ChunkSync::ReduceScatter(launch_rs_buckets(
+            &ctx.dp_group,
+            ctx.dp_rank,
+            step,
+            c,
+            grads,
+            ctx.cfg.grad_bucket_floats,
+            ctx.cfg.precision,
+        ))
+    } else {
+        ChunkSync::AllReduce(launch_grad_buckets(
+            &ctx.dp_group,
+            ctx.dp_rank,
+            step,
+            c,
+            grads,
+            ctx.cfg.grad_bucket_floats,
+            ctx.cfg.precision,
+        ))
+    };
     let counter = if hidden { &ctx.dp_group.nb_hidden_ns } else { &ctx.dp_group.nb_exposed_ns };
     counter.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-    buckets
+    sync
 }
 
 impl WorkerCtx {
@@ -213,6 +288,32 @@ struct LocalChannels {
     grads: HashMap<(usize, usize), Vec<f32>>,
 }
 
+/// Wire-cast a boundary activation/gradient for a cross-worker p2p send:
+/// bf16 packs the (grid-constrained) values two per lane — half the
+/// bytes, bit-lossless on unpack.  Counts the send's logical payload
+/// (`elements × wire width`) into the world group's `pp_payload_bytes`.
+fn p2p_pack(ctx: &WorkerCtx, data: Vec<f32>) -> Vec<f32> {
+    ctx.world
+        .pp_payload_bytes
+        .fetch_add(ctx.cfg.precision.bytes() * data.len() as u64, Ordering::Relaxed);
+    match ctx.cfg.precision {
+        Dtype::F32 => data,
+        Dtype::Bf16 => pack_bf16(&data),
+    }
+}
+
+/// Inverse of [`p2p_pack`] on the receive side; boundary payloads are
+/// always full `b × s × d` activations, so the unpacked length is fixed.
+fn p2p_unpack(ctx: &WorkerCtx, data: Vec<f32>) -> Vec<f32> {
+    match ctx.cfg.precision {
+        Dtype::F32 => data,
+        Dtype::Bf16 => {
+            let dims = ctx.bundle.dims();
+            unpack_bf16(&data, dims.b * dims.s * dims.d)
+        }
+    }
+}
+
 /// Send the forward activation of global stage `g` downstream.
 fn send_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, y: Vec<f32>) {
     let dest_stage = g + 1;
@@ -221,11 +322,12 @@ fn send_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, y: 
     if dest_rank == ctx.pp_rank {
         local.acts.insert((dest_chunk, mb), y);
     } else {
+        let payload = p2p_pack(ctx, y);
         ctx.world.send_tagged(
             ctx.world_rank(),
             ctx.world_rank_of(dest_rank),
             tag(TAG_FWD, dest_chunk, mb),
-            y,
+            payload,
         );
     }
 }
@@ -237,11 +339,12 @@ fn recv_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize) -> 
     if src_rank == ctx.pp_rank {
         local.acts.remove(&(chunk, mb)).expect("local activation present")
     } else {
-        ctx.world.recv_tagged(
+        let raw = ctx.world.recv_tagged(
             ctx.world_rank(),
             ctx.world_rank_of(src_rank),
             tag(TAG_FWD, chunk, mb),
-        )
+        );
+        p2p_unpack(ctx, raw)
     }
 }
 
@@ -253,11 +356,12 @@ fn send_grad(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, gx
     if dest_rank == ctx.pp_rank {
         local.grads.insert((dest_chunk, mb), gx);
     } else {
+        let payload = p2p_pack(ctx, gx);
         ctx.world.send_tagged(
             ctx.world_rank(),
             ctx.world_rank_of(dest_rank),
             tag(TAG_BWD, dest_chunk, mb),
-            gx,
+            payload,
         );
     }
 }
@@ -269,11 +373,124 @@ fn recv_grad(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize) ->
     if src_rank == ctx.pp_rank {
         local.grads.remove(&(chunk, mb)).expect("local gradient present")
     } else {
-        ctx.world.recv_tagged(
+        let raw = ctx.world.recv_tagged(
             ctx.world_rank(),
             ctx.world_rank_of(src_rank),
             tag(TAG_BWD, chunk, mb),
-        )
+        );
+        p2p_unpack(ctx, raw)
+    }
+}
+
+/// Does this op drive a stage's compute with its parameter vector?  The
+/// head chunk's Forward only stashes its incoming activation, and the
+/// fused single-stage path folds Forward into Backward — neither touches
+/// params.  THE single source of truth for the ZeRO-3 gather plan and
+/// the op loop's gathered-view acquisition (and the predicate
+/// `perf::builtin_zero3_ag_floats_per_step` mirrors analytically).
+fn op_uses_params(op: &Op, single: bool, g: usize, k: usize) -> bool {
+    match op {
+        Op::Forward { .. } => !single && g != k - 1,
+        Op::Backward { .. } => true,
+    }
+}
+
+/// ZeRO-3 gather plan entry: `(chunk, direction, micro-batch)` of one
+/// param-using op, in stream order.
+type GatherPlanEntry = (usize, u64, u64);
+
+/// Tag of one ZeRO-3 on-demand gather round: `(step, dir, chunk, mb)` —
+/// 32/2/8/20 bits, in the gathers' own tag namespace (the `ag` map), so
+/// the in-flight prefetch window can never collide across steps, chunks
+/// or directions.
+fn gather_tag(step: u32, dir: u64, chunk: usize, mb: u64) -> u64 {
+    assert!(chunk < (1 << 8) && mb < (1 << 20), "gather tag field overflow");
+    ((step as u64) << 32) | (dir << 28) | ((chunk as u64) << 20) | mb
+}
+
+/// The ZeRO-3 gather-use-drop driver for one step's op stream: walks the
+/// per-step plan of param-using ops, keeps at most ONE prefetched gather
+/// in flight beyond the op being executed, and tracks the full-parameter
+/// float residency high-water mark (gathered buffers count from launch —
+/// the assembled buffer may exist any time after — until release).
+struct Zero3Gathers {
+    plan: Vec<GatherPlanEntry>,
+    next_launch: usize,
+    next_use: usize,
+    pending: VecDeque<GatherHandle>,
+    live_floats: u64,
+    peak_floats: u64,
+}
+
+impl Zero3Gathers {
+    fn new(plan: Vec<GatherPlanEntry>) -> Self {
+        Self {
+            plan,
+            next_launch: 0,
+            next_use: 0,
+            pending: VecDeque::new(),
+            live_floats: 0,
+            peak_floats: 0,
+        }
+    }
+
+    /// Reset the per-step cursors (the plan itself is step-invariant;
+    /// only the tags fold the step index).
+    fn begin_step(&mut self) {
+        debug_assert!(self.pending.is_empty(), "gathers leaked across steps");
+        self.next_launch = 0;
+        self.next_use = 0;
+    }
+
+    fn launch_through(
+        &mut self,
+        ctx: &WorkerCtx,
+        params: &[Arc<Vec<f32>>],
+        full_len: &[usize],
+        step: u32,
+        upto: usize,
+    ) {
+        while self.next_launch < self.plan.len() && self.next_launch <= upto {
+            let (c, dir, mb) = self.plan[self.next_launch];
+            // the f32 deposit is the shard Arc itself — no copy (bf16
+            // packs, which is itself the wire cast)
+            let h = ctx.dp_group.start_all_gather_shared(
+                ctx.dp_rank,
+                gather_tag(step, dir, c, mb),
+                params[c].clone(),
+                full_len[c],
+                ctx.cfg.precision,
+            );
+            self.pending.push_back(h);
+            self.live_floats += full_len[c] as u64;
+            self.peak_floats = self.peak_floats.max(self.live_floats);
+            self.next_launch += 1;
+        }
+    }
+
+    /// Full parameter view for the next param-using op (must be chunk
+    /// `c`): launches up through the NEXT plan entry (the one-ahead
+    /// prefetch) and redeems this op's gather zero-copy.
+    fn acquire(
+        &mut self,
+        ctx: &WorkerCtx,
+        params: &[Arc<Vec<f32>>],
+        full_len: &[usize],
+        step: u32,
+        c: usize,
+    ) -> Arc<Vec<f32>> {
+        // hard assert: a plan/loop divergence here would hand the op
+        // another chunk's parameters — fail loudly in release too
+        assert_eq!(self.plan[self.next_use].0, c, "gather plan out of sync");
+        self.launch_through(ctx, params, full_len, step, self.next_use + 1);
+        let h = self.pending.pop_front().expect("gather launched before use");
+        self.next_use += 1;
+        h.wait_shared()
+    }
+
+    /// Drop accounting for a gathered buffer after its op retires.
+    fn release(&mut self, floats: usize) {
+        self.live_floats -= floats as u64;
     }
 }
 
@@ -286,6 +503,11 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     // chunk 0 of rank 0 embeds; chunk v-1 of rank pp-1 computes the loss
     let owns_embed = ctx.pp_rank == 0;
     let owns_head = ctx.pp_rank == ctx.pp - 1;
+
+    // sharding-stage dataflow switches (both degenerate at dp = 1, where
+    // a rank's partition IS the full buffer and no wire moves)
+    let rs_flow = ctx.cfg.zero_stage.shards_grads() && ctx.dp > 1;
+    let z3_flow = ctx.cfg.zero_stage.shards_params() && ctx.dp > 1;
 
     // this shard's tensor-parallel communicator (no-op when tp = 1),
     // carrying the run's wire dtype (bf16 payloads pack half-width) and
@@ -325,25 +547,38 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     } else {
         (0..ctx.v).map(|c| &ctx.bundle.stages[ctx.global(c)]).collect()
     };
+    // FULL (TP-shard) parameter counts per hosted chunk, and this rank's
+    // DP-partition range of each — the flat ownership map every sharded
+    // stage slices by
+    let full_len: Vec<usize> = stages.iter().map(|s| s.meta.param_count as usize).collect();
+    let shard_bounds: Vec<(usize, usize)> =
+        full_len.iter().map(|&n| chunk_bounds(n, ctx.dp)[ctx.dp_rank]).collect();
+
     // parameters live behind `Arc`s so the per-step handle staging is
     // zero-copy (the builtin backend clones the Arc, not the buffer);
     // the optimizer mutates through `Arc::make_mut` after the handles
-    // drop, so no copy-on-write ever triggers
+    // drop, so copy-on-write never triggers on stages 0-2.  Under
+    // ZeRO-3 the stored vector is this rank's shard, deposited by Arc
+    // into the gather rounds — a lagging peer's un-retired round can
+    // briefly pin the old buffer, in which case make_mut copies the
+    // shard once (values stay correct either way: assembly reads the
+    // pre-step deposits).
     let mut params: Vec<Arc<Vec<f32>>> = Vec::with_capacity(ctx.v);
     let mut opts: Vec<DistOptimizer> = Vec::with_capacity(ctx.v);
-    for stage in &stages {
+    for (c, stage) in stages.iter().enumerate() {
         // parameter init: identical across DP replicas and across pipeline
         // partitions (init keys fold in GLOBAL layer indices on both
         // backends, so the key is the same for every partitioning); TP
-        // shards slice the same dense component streams
+        // shards slice the same dense component streams; ZeRO-3 keeps
+        // only this rank's flat range of the (transient) full init
         let p = stage.init_params(ctx.cfg.seed)?;
         anyhow::ensure!(
-            p.len() as u64 == stage.meta.param_count,
+            p.len() == full_len[c],
             "init size mismatch on stage {}",
             stage.meta.index
         );
         opts.push(DistOptimizer::new(
-            ctx.cfg.zero1,
+            ctx.cfg.zero_stage,
             ctx.cfg.adam,
             p.len(),
             ctx.dp_rank,
@@ -351,21 +586,32 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             ctx.cfg.collective_algo,
             ctx.cfg.precision,
         ));
-        params.push(Arc::new(p));
+        let stored = if z3_flow {
+            let (lo, hi) = shard_bounds[c];
+            p[lo..hi].to_vec()
+        } else {
+            p
+        };
+        params.push(Arc::new(stored));
     }
 
     // ---- checkpoint resume: params (shared) + this rank's opt state ----
     if ctx.cfg.resume {
         let dir = ctx.cfg.checkpoint_dir.as_ref().expect("validated by leader");
-        for (c, stage) in stages.iter().enumerate() {
+        for c in 0..ctx.v {
             let g = ctx.global(c);
             let (p, _) =
                 checkpoint::read_f32(&checkpoint::params_path(dir, g, ctx.tp_rank))?;
             anyhow::ensure!(
-                p.len() as u64 == stage.meta.param_count,
+                p.len() == full_len[c],
                 "checkpoint params size mismatch on stage {g}"
             );
-            params[c] = Arc::new(p);
+            params[c] = Arc::new(if z3_flow {
+                let (lo, hi) = shard_bounds[c];
+                p[lo..hi].to_vec()
+            } else {
+                p
+            });
             let (state, t) = checkpoint::read_f32(&checkpoint::opt_path(
                 dir,
                 g,
@@ -392,8 +638,17 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     let inv_m = 1.0 / m as f32;
     // overlap only exists with a DP group to sync against
     let overlap = ctx.cfg.overlap_grad_sync && ctx.dp > 1;
+    // full-length local accumulation buffers (backward always produces
+    // full local gradients; sharding bites at the REDUCED gradient)
     let mut grad_accum: Vec<Vec<f32>> =
-        params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        full_len.iter().map(|&n| vec![0.0f32; n]).collect();
+    // stages 2/3: the reduce-scattered shard each drain deposits into —
+    // the only reduced gradient this rank ever materialises
+    let mut red_grads: Vec<Vec<f32>> = if rs_flow {
+        shard_bounds.iter().map(|&(lo, hi)| vec![0.0f32; hi - lo]).collect()
+    } else {
+        Vec::new()
+    };
     // per-(chunk, micro-batch) stash: stage input activations
     // (checkpointing: inputs only); token/target rows for the boundary
     // chunks
@@ -401,6 +656,23 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
     let mut stash_tok: Vec<Option<Vec<i32>>> = vec![None; m];
     let mut stash_tgt: Vec<Option<Vec<i32>>> = vec![None; m];
     let mut local = LocalChannels::default();
+
+    // ZeRO-3: the step-invariant plan of param-using ops, in stream
+    // order — the head chunk's Forward only stashes its input and the
+    // fused single-stage path folds Forward into Backward, so neither
+    // gathers
+    let mut z3 = z3_flow.then(|| {
+        let plan: Vec<GatherPlanEntry> = ctx.sched.streams[ctx.pp_rank]
+            .iter()
+            .filter_map(|op| {
+                let c = op.chunk() as usize;
+                let g = ctx.global(c);
+                let dir = if op.is_forward() { TAG_FWD } else { TAG_BWD };
+                op_uses_params(op, single, g, k).then_some((c, dir, op.mb() as u64))
+            })
+            .collect();
+        Zero3Gathers::new(plan)
+    });
 
     // fast-forward the data stream past already-trained steps
     if ctx.start_step > 0 {
@@ -420,8 +692,12 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         let scale = scaler.scale();
         // per-chunk backward countdown + this step's in-flight buckets
         let mut bwd_left: Vec<usize> = vec![m; ctx.v];
-        let mut buckets: Vec<ChunkBuckets> = (0..ctx.v).map(|_| Vec::new()).collect();
+        let mut syncs: Vec<ChunkSync> =
+            (0..ctx.v).map(|_| ChunkSync::AllReduce(Vec::new())).collect();
         let mut finalized = vec![false; ctx.v];
+        if let Some(z) = z3.as_mut() {
+            z.begin_step();
+        }
 
         // draw this step's micro-batches up front (the schedule issues
         // each chunk's forwards in order, so index mb matches draw order)
@@ -440,6 +716,8 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // stage each chunk's parameter vector ONCE per step; every
         // micro-batch's fwd/bwd reuses the same handle (EXPERIMENTS.md
         // §Perf).  Builtin stages share the Arc — zero bytes copied.
+        // Under ZeRO-3 these hold the (never-computed-on) shard; every
+        // param-using op overrides them with its on-demand gathered view.
         let mut handles: Vec<ParamsHandle> = Vec::with_capacity(ctx.v);
         for (stage, p) in stages.iter().zip(&params) {
             handles.push(stage.prepare_params_shared(&ctx.rt, p)?);
@@ -449,14 +727,25 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             let c = op.chunk() as usize;
             let g = ctx.global(c);
             let stage = stages[c];
-            let pbuf = &handles[c];
+            if single && op.is_forward() {
+                // single-stage: fwd is folded into bwd; nothing to do
+                continue;
+            }
+            // ZeRO-3: assemble this op's full parameter view (prefetched
+            // one param-using op ahead; dropped right after the op)
+            let uses_params = op_uses_params(op, single, g, k);
+            let gathered_view: ParamsHandle;
+            let pbuf: &ParamsHandle = match z3.as_mut() {
+                Some(z) if uses_params => {
+                    gathered_view =
+                        ParamsHandle::Host(z.acquire(&ctx, &params, &full_len, step, c));
+                    &gathered_view
+                }
+                _ => &handles[c],
+            };
             match *op {
                 Op::Forward { mb, .. } => {
                     let mb = mb as usize;
-                    if single {
-                        // single-stage: fwd is folded into bwd; nothing to do
-                        continue;
-                    }
                     if g == 0 {
                         let tokens = stash_tok[mb].as_ref().unwrap();
                         let y = stage.fwd_first(&ctx.rt, pbuf, &comm, tokens, dims)?;
@@ -519,7 +808,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     // so the sync hides under the remaining backward ops
                     bwd_left[c] -= 1;
                     if overlap && bwd_left[c] == 0 {
-                        buckets[c] = finalize_and_launch(
+                        syncs[c] = finalize_and_launch(
                             &ctx,
                             &comm,
                             stages[c],
@@ -533,6 +822,12 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     }
                 }
             }
+            // ZeRO-3: this op's gathered view retires with the op
+            if uses_params {
+                if let Some(z) = z3.as_mut() {
+                    z.release(full_len[c]);
+                }
+            }
         }
 
         // release the step-scoped parameter handles so the optimizer
@@ -544,7 +839,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // bucket launches landing on the exposed timeline
         for c in 0..ctx.v {
             if !finalized[c] {
-                buckets[c] = finalize_and_launch(
+                syncs[c] = finalize_and_launch(
                     &ctx,
                     &comm,
                     stages[c],
@@ -561,7 +856,10 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // rank of a DP row walks the same sequence, so the per-chunk
         // collective rounds line up; bucket reduction is rank-order
         // deterministic regardless of overlap timing, so overlapped ≡
-        // sequential bit for bit)
+        // sequential bit for bit).  All-reduce buckets land the full
+        // reduced buffer in grad_accum; reduce-scatter buckets tile
+        // exactly this rank's partition into red_grads — the identical
+        // elementwise values, shard-resident.
         let lr_scale = ctx
             .cfg
             .lr_schedule
@@ -569,17 +867,35 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             .unwrap_or(1.0);
         for c in 0..ctx.v {
             if ctx.dp > 1 {
-                let t0 = Instant::now();
-                for (lo, hi, h) in buckets[c].drain(..) {
-                    // zero-copy redeem: one copy, shared sum -> grads
-                    let sum = h.wait_shared();
-                    grad_accum[c][lo..hi].copy_from_slice(&sum);
-                }
-                ctx.dp_group
-                    .nb_exposed_ns
-                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 let inv_dp = 1.0 / ctx.dp as f32;
-                grad_accum[c].iter_mut().for_each(|x| *x *= inv_dp);
+                let t0 = Instant::now();
+                match &mut syncs[c] {
+                    ChunkSync::AllReduce(buckets) => {
+                        for (lo, hi, h) in buckets.drain(..) {
+                            // zero-copy redeem: one copy, shared sum -> grads
+                            let sum = h.wait_shared();
+                            grad_accum[c][lo..hi].copy_from_slice(&sum);
+                        }
+                        ctx.dp_group
+                            .nb_exposed_ns
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        grad_accum[c].iter_mut().for_each(|x| *x *= inv_dp);
+                    }
+                    ChunkSync::ReduceScatter(buckets) => {
+                        let (slo, _shi) = shard_bounds[c];
+                        for (lo, hi, h) in buckets.drain(..) {
+                            // zero-copy redeem: one copy, shared sum -> shard
+                            if let Some(sum) = h.wait_shared() {
+                                debug_assert_eq!(sum.len(), hi - lo);
+                                red_grads[c][lo - slo..hi - slo].copy_from_slice(&sum);
+                            }
+                        }
+                        ctx.dp_group
+                            .nb_exposed_ns
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        red_grads[c].iter_mut().for_each(|x| *x *= inv_dp);
+                    }
+                }
             }
         }
 
@@ -587,18 +903,25 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // (a skipped step leaves every optimizer untouched), so the local
         // non-finite-gradient flag is agreed across the WHOLE world with
         // a 1-float all-reduce before the scaler rules.  Then unscale the
-        // surviving gradients (1/scale is a power of two — exact).
+        // surviving gradients (1/scale is a power of two — exact).  The
+        // sharded stages inspect only their reduced shard — the union
+        // over ranks covers the full buffer, so the world-agreed verdict
+        // is identical to DDP's.
         let mut skipped = false;
         if scaling_active {
-            let local_overflow =
-                grad_accum.iter().any(|g| g.iter().any(|x| !x.is_finite()));
+            let local_overflow = if rs_flow {
+                red_grads.iter().any(|g| g.iter().any(|x| !x.is_finite()))
+            } else {
+                grad_accum.iter().any(|g| g.iter().any(|x| !x.is_finite()))
+            };
             let mut flag = vec![if local_overflow { 1.0f32 } else { 0.0 }];
             ctx.world
                 .all_reduce_sum(ctx.world_rank(), &mut flag, ctx.cfg.collective_algo);
             skipped = scaler.update(flag[0] > 0.0);
             if !skipped && scale != 1.0 {
                 let inv = 1.0 / scale;
-                for g in grad_accum.iter_mut() {
+                let bufs = if rs_flow { &mut red_grads } else { &mut grad_accum };
+                for g in bufs.iter_mut() {
                     g.iter_mut().for_each(|x| *x *= inv);
                 }
             }
@@ -617,11 +940,13 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                 // under TP the clip norm combines across the tensor group
                 // (replicated span counted once) — dense-equivalent clipping
                 let tp_ctx = stages[c].tp_replicated_span().map(|span| (&comm, span));
+                let step_grads: &mut Vec<f32> =
+                    if rs_flow { &mut red_grads[c] } else { &mut grad_accum[c] };
                 let norm = opts[c].step_reduced(
                     &ctx.dp_group,
                     ctx.dp_rank,
                     Arc::make_mut(&mut params[c]),
-                    &mut grad_accum[c],
+                    step_grads,
                     lr_scale,
                     tp_ctx,
                 );
@@ -633,8 +958,11 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // periodic checkpoint: every rank persists its own pieces after a
         // world barrier (so all stages are at the same step).  Files are
         // keyed (global stage, tp rank): each tensor shard's dp-rank-0
-        // worker writes that shard's params; every rank writes its own
-        // optimizer state; pp0/dp0/tp0 writes the manifest.
+        // worker writes that shard's params — assembled by a blocking DP
+        // all-gather under ZeRO-3, so the on-disk format is stage-
+        // independent for stages 0-2 resumes of each other's shape class;
+        // every rank writes its own optimizer state; pp0/dp0/tp0 writes
+        // the manifest.
         let every = ctx.cfg.checkpoint_every;
         let last_step = rel_step + 1 == ctx.cfg.steps;
         if let Some(dir) = ctx.cfg.checkpoint_dir.as_ref() {
@@ -642,7 +970,24 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                 ctx.world.barrier(ctx.world_rank());
                 for c in 0..ctx.v {
                     let g = ctx.global(c);
-                    if ctx.dp_rank == 0 {
+                    if z3_flow {
+                        // out-of-band assembly: must not advance the
+                        // ag_payload counter the on-demand pin measures
+                        let mut full = vec![0.0f32; full_len[c]];
+                        ctx.dp_group.all_gather_dtype_uncounted(
+                            ctx.dp_rank,
+                            &params[c],
+                            &mut full,
+                            ctx.cfg.precision,
+                        );
+                        if ctx.dp_rank == 0 {
+                            checkpoint::write_f32(
+                                &checkpoint::params_path(dir, g, ctx.tp_rank),
+                                &full,
+                                (step + 1) as u64,
+                            )?;
+                        }
+                    } else if ctx.dp_rank == 0 {
                         checkpoint::write_f32(
                             &checkpoint::params_path(dir, g, ctx.tp_rank),
                             &params[c],
@@ -664,7 +1009,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         stages: ctx.k() as u32,
                         tp: ctx.tp as u32,
                         dp: ctx.dp as u32,
-                        zero1: ctx.cfg.zero1,
+                        zero_stage: ctx.cfg.zero_stage.index(),
                         precision: ctx.cfg.precision.name().to_string(),
                         loss_scale: scaler.scale(),
                         scale_good_steps: scaler.good_steps(),
@@ -686,6 +1031,15 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             }
         }
     }
+
+    // per-rank measured residency, reported through the leader: the
+    // ZeRO-3 gather high-water mark and this rank's resident optimizer
+    // shard bytes
+    if let Some(z) = &z3 {
+        ctx.dp_group.ag_peak_floats.fetch_max(z.peak_floats, Ordering::Relaxed);
+    }
+    let opt_bytes: usize = opts.iter().map(|o| o.state_bytes()).sum();
+    ctx.opt_state_bytes.fetch_max(opt_bytes as u64, Ordering::Relaxed);
     Ok(())
 }
 

@@ -5,6 +5,7 @@
 use crate::config::{lookup, ModelSpec, ParallelConfig, Precision, ScheduleKind};
 use crate::data::Rng64;
 use crate::topology::GPUS_PER_NODE;
+use crate::zero::ShardingStage;
 
 /// One point in the (extended) Table IV space.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -14,7 +15,14 @@ pub struct Point {
     pub mbs: u32,
     /// Gradient-accumulation steps == micro-batches per replica.
     pub gas: u32,
-    pub zero1: bool,
+    /// ZeRO sharding stage.  The sampled Table-IV space draws only
+    /// {0, 1} — the paper's search toggled ZeRO-1 and nothing else, and
+    /// keeping the draw binary keeps the sampler stream AND the feature
+    /// values bit-stable with the calibrated Fig 9/10 behaviour — but
+    /// the dimension itself spans the whole ladder: explicit points (and
+    /// the engine's `--zero-stage`) reach stages 2/3, and
+    /// [`Point::features`] / [`Point::to_config`] honour them.
+    pub zero_stage: ShardingStage,
     pub nnodes: u32,
     /// Virtual-chunk interleave factor (1 = plain 1F1B).  Sampling clamps
     /// to 1 whenever `gas % pp != 0` — the alignment Megatron-style
@@ -38,8 +46,16 @@ pub const NNODES_CHOICES: [u32; 2] = [12, 16];
 pub const INTERLEAVE_CHOICES: [u32; 3] = [1, 2, 4];
 
 /// Feature names in SHAP/reporting order (paper Fig 10 uses `p:` prefixes).
-pub const FEATURES: [&str; 8] =
-    ["p:mbs", "p:tp", "p:pp", "p:num_nodes", "p:zero1", "p:gas", "p:interleave", "p:bf16"];
+pub const FEATURES: [&str; 8] = [
+    "p:mbs",
+    "p:tp",
+    "p:pp",
+    "p:num_nodes",
+    "p:zero_stage",
+    "p:gas",
+    "p:interleave",
+    "p:bf16",
+];
 
 impl Point {
     /// Uniform random sample over *launchable* points: configurations
@@ -56,7 +72,11 @@ impl Point {
                 tp: TP_CHOICES[rng.below(TP_CHOICES.len() as u64) as usize],
                 mbs: MBS_RANGE.0 + rng.below((MBS_RANGE.1 - MBS_RANGE.0 + 1) as u64) as u32,
                 gas: GAS_CHOICES[rng.below(GAS_CHOICES.len() as u64) as usize],
-                zero1: rng.below(2) == 1,
+                zero_stage: if rng.below(2) == 1 {
+                    ShardingStage::OptimizerStates
+                } else {
+                    ShardingStage::Ddp
+                },
                 nnodes: NNODES_CHOICES[rng.below(NNODES_CHOICES.len() as u64) as usize],
                 interleave: INTERLEAVE_CHOICES
                     [rng.below(INTERLEAVE_CHOICES.len() as u64) as usize],
@@ -85,7 +105,10 @@ impl Point {
             norm((self.tp as f64).log2(), 0.0, 3.0),
             norm((self.pp as f64).log2(), 0.0, 4.0),
             norm(self.nnodes as f64, 12.0, 16.0),
-            if self.zero1 { 1.0 } else { 0.0 },
+            // stage index as-is: the sampled {0, 1} values reproduce the
+            // legacy boolean feature bit for bit (stages 2/3 extend the
+            // axis for explicitly-constructed points)
+            self.zero_stage.index() as f64,
             norm(self.gas as f64, 5.0, 10.0),
             norm((self.interleave as f64).log2(), 0.0, 2.0),
             if self.bf16 { 1.0 } else { 0.0 },
@@ -119,7 +142,7 @@ impl Point {
                 dp,
                 mbs: self.mbs,
                 gbs,
-                zero1: self.zero1,
+                zero_stage: self.zero_stage,
                 flash_attention: true,
                 checkpoint_activations: true,
                 precision: if self.bf16 { Precision::Bf16 } else { Precision::Fp32 },
@@ -169,7 +192,7 @@ mod tests {
             tp: 4,
             mbs: 4,
             gas: 10,
-            zero1: true,
+            zero_stage: ShardingStage::OptimizerStates,
             nnodes: 16,
             interleave: 1,
             bf16: true,
@@ -188,7 +211,7 @@ mod tests {
             tp: 8,
             mbs: 4,
             gas: 10,
-            zero1: true,
+            zero_stage: ShardingStage::OptimizerStates,
             nnodes: 16,
             interleave: 2,
             bf16: true,
@@ -208,7 +231,7 @@ mod tests {
             tp: 2,
             mbs: 4,
             gas: 10,
-            zero1: false,
+            zero_stage: ShardingStage::Ddp,
             nnodes: 16,
             interleave: 1,
             bf16: false,
@@ -224,6 +247,29 @@ mod tests {
     }
 
     #[test]
+    fn zero_stage_dimension_round_trips() {
+        let mut p = Point {
+            pp: 2,
+            tp: 2,
+            mbs: 4,
+            gas: 10,
+            zero_stage: ShardingStage::Ddp,
+            nnodes: 16,
+            interleave: 1,
+            bf16: true,
+        };
+        assert_eq!(p.features()[4], 0.0);
+        p.zero_stage = ShardingStage::OptimizerStates;
+        // the legacy boolean feature value, bit for bit
+        assert_eq!(p.features()[4], 1.0);
+        p.zero_stage = ShardingStage::Parameters;
+        let (_, cfg) = p.to_config().unwrap();
+        assert_eq!(cfg.zero_stage, ShardingStage::Parameters);
+        assert_eq!(p.features()[4], 3.0);
+        assert_eq!(FEATURES[4], "p:zero_stage");
+    }
+
+    #[test]
     fn untileable_allocations_fail() {
         // 12 nodes = 96 GPUs; tp*pp = 64 does not divide 96
         let p = Point {
@@ -231,7 +277,7 @@ mod tests {
             tp: 4,
             mbs: 4,
             gas: 5,
-            zero1: false,
+            zero_stage: ShardingStage::Ddp,
             nnodes: 12,
             interleave: 1,
             bf16: true,

@@ -30,13 +30,13 @@ USAGE: frontier <command> [options]
 COMMANDS:
   tables                       print Tables I/II/V and the Fig 5 matrix
   simulate [--model 175b] [--tp N] [--pp N] [--dp N] [--mbs N] [--gbs N]
-           [--interleave V] [--zero1] [--no-flash] [--des]
+           [--interleave V] [--zero-stage 0|1|2|3] [--no-flash] [--des]
   sweep    [--axis tp|gbs|pp-fixed|pp-scaled]
   scaling  [--model 175b|1t] [--mode weak|strong]
   hpo      [--evals N] [--seed N]
   train    [--bundle tiny-s2-mb2 | --bundle builtin:tiny-s4-mb2]
            [--artifacts DIR] [--dp N] [--tp N] [--microbatches N] [--steps N]
-           [--zero1] [--gpipe | --interleave V]
+           [--zero-stage 0|1|2|3] [--gpipe | --interleave V]
            [--no-overlap] [--bucket-floats N] [--collective-algo ring|naive]
            [--precision fp32|bf16] [--loss-scale S] [--loss-scale-growth N]
            [--lr F] [--seed N] [--log-every N]
@@ -53,9 +53,18 @@ COMMANDS:
   --bucket-floats sets the bucket granularity, and --collective-algo
   picks the algorithm for the small grad-norm/loss syncs.
 
+  --zero-stage selects the ZeRO sharding ladder: 0 = plain DDP, 1 =
+  optimizer states sharded 1/dp, 2 = + true reduce-scatter gradient
+  shards (the overlapped buckets become partition-aligned reduce-
+  scatters; each rank materialises only its own reduced shard), 3 = +
+  parameter shards with on-demand per-layer all-gathers (prefetched one
+  use ahead, dropped after use; builtin bundles only).  Every stage
+  walks the stage-0 loss trajectory bitwise at fp32.  --zero1 survives
+  as a deprecated alias for --zero-stage 1.
+
   --precision bf16 (builtin bundles only) stores params/activations/
   grads in bf16 with f32-accumulating kernels, keeps fp32 master weights
-  in the optimizer (sharded under --zero1), halves every collective
+  in the optimizer (sharded under --zero-stage 1+), halves every collective
   payload (packed-u16 wire), and arms the dynamic loss scaler:
   --loss-scale sets the initial (power-of-two) scale, --loss-scale-growth
   the clean-step interval before it doubles (0 = static).  Quickstart:
@@ -63,6 +72,18 @@ COMMANDS:
     frontier train --bundle builtin:tiny-s4-mb2 --tp 2 --dp 2 --steps 20
     frontier train --bundle builtin:tiny-s4-mb2 --precision bf16 --dp 2 --steps 20
 ";
+
+/// `--zero-stage {0..3}` with `--zero1` as the deprecated stage-1 alias
+/// (an explicit `--zero-stage` wins when both are given).
+fn parse_zero_stage(args: &Args) -> Result<frontier_llm::zero::ShardingStage> {
+    use frontier_llm::zero::ShardingStage;
+    match args.get("zero-stage") {
+        Some(s) => ShardingStage::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--zero-stage must be 0|1|2|3, got {s:?}")),
+        None if args.flag("zero1") => Ok(ShardingStage::OptimizerStates),
+        None => Ok(ShardingStage::Ddp),
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
@@ -164,7 +185,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .with_dp(dp)
         .with_mbs(mbs)
         .with_gbs(gbs)
-        .with_zero1(args.flag("zero1"))
+        .with_zero_stage(parse_zero_stage(args)?)
         .with_flash(!args.flag("no-flash"));
     if interleave > 1 {
         cfg = cfg.with_interleave(interleave);
@@ -347,7 +368,7 @@ fn cmd_hpo(evals: u32, seed: u64) -> Result<()> {
                 ev.point.tp,
                 ev.point.mbs,
                 ev.point.gas,
-                u8::from(ev.point.zero1),
+                ev.point.zero_stage.index(),
                 ev.point.nnodes,
                 ev.point.interleave,
                 result.best_trajectory[i]
@@ -392,7 +413,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             ..Default::default()
         },
         lr_schedule: None,
-        zero1: args.flag("zero1"),
+        zero_stage: parse_zero_stage(args)?,
         overlap_grad_sync: !args.flag("no-overlap"),
         grad_bucket_floats: args
             .opt("bucket-floats", 1usize << 15)
@@ -444,6 +465,27 @@ fn cmd_train(args: &Args) -> Result<()> {
             String::new()
         }
     );
+    println!(
+        "  zero stage {} ({}): {:.1} KB optimizer state/rank{}",
+        report.zero_stage.index(),
+        report.zero_stage.name(),
+        report.opt_state_bytes_per_rank as f64 / 1e3,
+        if report.zero3_peak_gathered_floats > 0 {
+            format!(
+                ", peak gathered params {:.1} KB (gather-use-drop)",
+                4.0 * report.zero3_peak_gathered_floats as f64 / 1e3
+            )
+        } else {
+            String::new()
+        }
+    );
+    if report.pp_p2p_payload_bytes > 0 {
+        println!(
+            "  PP p2p: {:.1} KB boundary activation payload ({} wire)",
+            report.pp_p2p_payload_bytes as f64 / 1e3,
+            report.precision.name()
+        );
+    }
     if report.tp_ar_rounds > 0 {
         println!(
             "  TP: {} all-reduce rounds, {:.1} MB reduced payload",

@@ -7,9 +7,15 @@
 //!     counts 4 — we keep their accounting for the Table II repro and
 //!     expose `adam_full` for the 8-byte m+v variant)
 //!
-//! Model parallelism divides the 14x by `tp * pp`; ZeRO-1 further divides
-//! the optimizer-owned bytes (master params + optimizer states) by `dp`
-//! (§II.D).  Activation memory follows the checkpointing model: one stored
+//! Model parallelism divides the 14x by `tp * pp`; the ZeRO sharding
+//! stage further divides per-parameter state by `dp` (§II.D), one state
+//! class per stage: optimizer-owned bytes (master params + optimizer
+//! states) under stages 1+, gradients under stages 2+, and the working
+//! parameters themselves under stage 3 — which then also charges the
+//! transient gather buffer of the engine's gather-use-drop lifecycle
+//! (two layers' full parameters: current + one prefetched; validated
+//! against the engine-measured `zero3_peak_gathered_floats` high-water
+//! mark).  Activation memory follows the checkpointing model: one stored
 //! layer input per layer per in-flight micro-batch plus one layer's live
 //! working set — multiplied by the schedule's peak in-flight count, which
 //! is why GPipe at large `m` OOMs where 1F1B survives.
@@ -159,30 +165,39 @@ pub fn per_gpu_acct(model: &ModelSpec, cfg: &ParallelConfig, acct: Accounting) -
         (model.head_params() + last_layers as u64 * model.layer_params()) / cfg.tp as u64;
     let n_local = n_stage.max(n_last).max(n_total / (cfg.tp as u64 * cfg.pp as u64));
 
+    // per-stage `1/dp` sharding of one state class (no-op at dp = 1,
+    // where a rank's partition is the whole buffer)
+    let stage = cfg.zero_stage;
+    let shard = |bytes: u64, sharded: bool| {
+        if sharded && cfg.dp > 1 {
+            bytes / cfg.dp as u64
+        } else {
+            bytes
+        }
+    };
+    // ZeRO-3 gather-use-drop transient: two layers' full (working-width)
+    // parameters live at once — current + one prefetched
+    let gather = if stage.shards_params() && cfg.dp > 1 {
+        zero3_gather_transient_bytes(model, cfg)
+    } else {
+        0
+    };
     let (params, grads, optimizer) = match acct {
         Accounting::Table2 => {
-            let params = BYTES_PARAMS * n_local;
-            let grads = BYTES_GRADS * n_local;
-            let optimizer = BYTES_OPTIMIZER * n_local;
-            // ZeRO-1 shards the optimizer-owned fp32 state (master params
-            // 4x + optimizer 4x) across the DP group
-            if cfg.zero1 && cfg.dp > 1 {
-                let master = 4 * n_local; // fp32 master copy lives in the optimizer shard
-                let working = params - master; // fp16 working weights stay replicated
-                (working + master / cfg.dp as u64, grads, optimizer / cfg.dp as u64)
-            } else {
-                (params, grads, optimizer)
-            }
+            let master = 4 * n_local; // fp32 master copy lives in the optimizer shard
+            let working = BYTES_PARAMS * n_local - master; // fp16 working weights
+            let params = shard(working, stage.shards_params())
+                + shard(master, stage.shards_optimizer())
+                + gather;
+            let grads = shard(BYTES_GRADS * n_local, stage.shards_grads());
+            let optimizer = shard(BYTES_OPTIMIZER * n_local, stage.shards_optimizer());
+            (params, grads, optimizer)
         }
         Accounting::Mixed16 => {
-            let params = MIXED_BYTES_PARAMS * n_local; // bf16 working copy
-            let grads = MIXED_BYTES_GRADS * n_local; // bf16 grads
-            let optimizer = MIXED_BYTES_OPTIMIZER * n_local; // master + m + v
-            if cfg.zero1 && cfg.dp > 1 {
-                (params, grads, optimizer / cfg.dp as u64)
-            } else {
-                (params, grads, optimizer)
-            }
+            let params = shard(MIXED_BYTES_PARAMS * n_local, stage.shards_params()) + gather;
+            let grads = shard(MIXED_BYTES_GRADS * n_local, stage.shards_grads());
+            let optimizer = shard(MIXED_BYTES_OPTIMIZER * n_local, stage.shards_optimizer());
+            (params, grads, optimizer)
         }
     };
 
@@ -224,6 +239,20 @@ pub fn per_gpu_acct(model: &ModelSpec, cfg: &ParallelConfig, acct: Accounting) -
 /// Does the configuration fit in MI250X HBM?  (Fig 9's OOM failures.)
 pub fn fits(model: &ModelSpec, cfg: &ParallelConfig) -> bool {
     per_gpu(model, cfg).total() <= HBM_BYTES
+}
+
+/// Working-parameter bytes/param of both accountings (fp16/bf16 working
+/// copy — Table II's 6x splits as 4 master + 2 working).
+const WORKING_PARAM_BYTES: u64 = 2;
+
+/// Transient full-parameter residency of ZeRO-3's gather-use-drop
+/// lifecycle: at most TWO layers' gathered working-width parameters are
+/// live at once — the layer in use plus the one prefetched gather — the
+/// bound the engine's measured `zero3_peak_gathered_floats` high-water
+/// mark validates (its per-chunk granularity is this model's per-layer
+/// granularity).
+pub fn zero3_gather_transient_bytes(model: &ModelSpec, cfg: &ParallelConfig) -> u64 {
+    2 * (model.layer_params() / cfg.tp as u64) * WORKING_PARAM_BYTES
 }
 
 #[cfg(test)]
@@ -306,6 +335,61 @@ mod tests {
         let with = per_gpu(&m, &base.clone().with_zero1(true)).total();
         let without = per_gpu(&m, &base).total();
         assert!(with < without);
+    }
+
+    #[test]
+    fn stage_ladder_monotonically_shrinks_state() {
+        use crate::zero::ShardingStage;
+        // each rung shards one more state class: strictly smaller
+        // parameter-proportional footprint at every step up the ladder,
+        // under both accountings
+        let m = lookup("175b").unwrap();
+        let base = ParallelConfig::default().with_tp(8).with_pp(8).with_dp(16).with_gbs(64);
+        for acct in [Accounting::Table2, Accounting::Mixed16] {
+            let mut last = u64::MAX;
+            for i in 0..4u32 {
+                let cfg = base.clone().with_zero_stage(ShardingStage::from_index(i).unwrap());
+                let b = per_gpu_acct(&m, &cfg, acct);
+                let state = b.params + b.grads + b.optimizer;
+                assert!(state < last, "{acct:?} stage {i}: {state} !< {last}");
+                last = state;
+            }
+        }
+    }
+
+    #[test]
+    fn mixed16_stage3_approaches_16_over_d_plus_gather() {
+        use crate::zero::ShardingStage;
+        // the ZeRO-paper budget: at stage 3 every one of the 16
+        // bytes/param is /d; what remains beyond that is exactly the
+        // two-layer gather transient
+        let m = lookup("175b").unwrap();
+        let dp = 16;
+        let cfg = ParallelConfig::default()
+            .with_tp(8)
+            .with_pp(8)
+            .with_dp(dp)
+            .with_gbs(64)
+            .with_zero_stage(ShardingStage::Parameters);
+        let b = per_gpu_acct(&m, &cfg, Accounting::Mixed16);
+        let full = per_gpu_acct(
+            &m,
+            &cfg.clone().with_zero_stage(ShardingStage::Ddp),
+            Accounting::Mixed16,
+        );
+        let gather = zero3_gather_transient_bytes(&m, &cfg);
+        assert_eq!(b.params, full.params / dp as u64 + gather, "2/d params + 2-layer gather");
+        assert_eq!(b.grads, full.grads / dp as u64, "2/d grads");
+        assert_eq!(b.optimizer, full.optimizer / dp as u64, "12/d optimizer trio");
+        // stage 2 shards grads but keeps working params replicated
+        let s2 = per_gpu_acct(
+            &m,
+            &cfg.clone().with_zero_stage(ShardingStage::Gradients),
+            Accounting::Mixed16,
+        );
+        assert_eq!(s2.grads, full.grads / dp as u64);
+        assert_eq!(s2.params, full.params);
+        assert_eq!(s2.optimizer, full.optimizer / dp as u64);
     }
 
     #[test]

@@ -114,11 +114,58 @@ pub fn dp_grad_payload_bytes(n_params: u64, wire_bytes: u64) -> u64 {
     n_params * wire_bytes
 }
 
-/// Logical per-step ZeRO-1 updated-parameter all-gather payload (the
-/// second half of its RS+AG accounting; plain DDP gathers nothing).
-/// Engine counter: `TrainReport::dp_param_ag_bytes`.
+/// Logical per-step updated-parameter all-gather payload of sharding
+/// stages 1/2 (the second half of the RS+AG accounting; plain DDP
+/// gathers nothing, and stage 3 replaces this with the on-demand
+/// per-use gathers below).  Engine counter:
+/// `TrainReport::dp_param_ag_bytes`.
 pub fn zero1_allgather_payload_bytes(n_params: u64, param_bytes: u64) -> u64 {
     n_params * param_bytes
+}
+
+/// ZeRO-3 on-demand parameter all-gather payload (f32 **elements**) per
+/// DP replica per step for the builtin engine: every param-using op
+/// gathers its stage's full (TP-shard) parameter vector.  Per stage
+/// that is `m` forward visits (except the head chunk, whose forward
+/// only stashes its input, and the fused single-stage path, whose
+/// forward is folded into backward) plus `m` backward visits:
+///
+/// `Σ_g (m·[g uses fwd params] + m) × params(g)`
+///
+/// The engine pin: `TrainReport::dp_param_ag_bytes` equals
+/// `steps × wire_bytes ×` this, summed over the grid's (pp × tp) DP
+/// groups.
+pub fn builtin_zero3_ag_floats_per_step(stage_params: &[u64], m: u64) -> u64 {
+    let k = stage_params.len();
+    stage_params
+        .iter()
+        .enumerate()
+        .map(|(g, &p)| {
+            let fwd = if k == 1 || g == k - 1 { 0 } else { m };
+            (fwd + m) * p
+        })
+        .sum()
+}
+
+/// Pipeline p2p activation payload (f32 **elements**) per DP replica
+/// per TP shard per step: one boundary activation down + one boundary
+/// gradient up per micro-batch per stage boundary, each `tokens ×
+/// hidden` elements.  With `pp == 1` every boundary is worker-local and
+/// never touches the wire.  The engine pin:
+/// `TrainReport::pp_p2p_payload_bytes == steps × dp × tp × wire_bytes ×`
+/// this — and the packed-bf16 activation wire makes the bf16 measurement
+/// exactly half the fp32 one.
+pub fn builtin_pp_p2p_floats_per_step(
+    n_stages: u64,
+    pp: u64,
+    m: u64,
+    tokens: u64,
+    hidden: u64,
+) -> u64 {
+    if pp <= 1 {
+        return 0;
+    }
+    2 * m * (n_stages - 1) * tokens * hidden
 }
 
 // ---------------------------------------------------------------------------
@@ -394,17 +441,29 @@ impl PerfModel {
         };
 
         // ---- DP gradient sync: half-width gradients under mixed
-        // precision, same dtype convention as the TP term above (ZeRO-1's
-        // RS+AG pair moves the same volume inside dp_grad_sync) ----
+        // precision, same dtype convention as the TP term above (the
+        // sharded stages' RS+AG pair moves the same volume inside
+        // dp_grad_sync — ZeRO's equal-wire-volume argument) ----
         let n_local = model.total_params() / (cfg.tp as u64 * cfg.pp as u64);
         let grad_bytes = dp_grad_payload_bytes(n_local, cfg.precision.bytes());
         let dp_group = layout.dp_group(0);
         let gpu_group: Vec<u32> = dp_group.iter().map(|&r| layout.gpu_of(r)).collect();
-        let t_dp_raw = comm.dp_grad_sync(&gpu_group, grad_bytes, cfg.zero1);
-        let t_dp_comm = self.dp_exposed_comm_time(t_dp_raw);
+        let t_dp_raw =
+            comm.dp_grad_sync(&gpu_group, grad_bytes, cfg.zero_stage.shards_optimizer());
+        let mut t_dp_comm = self.dp_exposed_comm_time(t_dp_raw);
+        if cfg.zero_stage.shards_params() {
+            // ZeRO-3's on-demand parameter gathers: the replica's local
+            // params cross the DP group once per forward and once per
+            // backward pass of every micro-batch (the per-layer gathers
+            // of one pass amortise to one aggregated gather; prefetch
+            // hides latency, not bandwidth, so the term stays exposed)
+            let ag_bytes = n_local * cfg.precision.bytes();
+            t_dp_comm += 2.0 * m * comm.all_gather(&gpu_group, ag_bytes);
+        }
 
         // ---- optimizer (HBM-bound: read/write 14 bytes/param + math) ----
-        let opt_bytes = (14 * n_local) as f64 / if cfg.zero1 { cfg.dp as f64 } else { 1.0 };
+        let opt_bytes = (14 * n_local) as f64
+            / if cfg.zero_stage.shards_optimizer() { cfg.dp as f64 } else { 1.0 };
         let t_optimizer = opt_bytes / HBM_BW + 50.0e-6;
 
         let t_step = t_pipe + t_pp_comm + t_dp_comm + t_optimizer;
@@ -616,6 +675,48 @@ mod tests {
             b32.t_dp_comm,
             b16.t_dp_comm
         );
+    }
+
+    #[test]
+    fn zero3_and_pp_p2p_contract_composition() {
+        // ZeRO-3 AG floats: mid/first stages gather 2m× their params
+        // (fwd + bwd), the head chunk m× (its forward only stashes), the
+        // fused single stage m×
+        assert_eq!(builtin_zero3_ag_floats_per_step(&[10, 20], 3), 2 * 3 * 10 + 3 * 20);
+        assert_eq!(builtin_zero3_ag_floats_per_step(&[10], 3), 3 * 10);
+        assert_eq!(
+            builtin_zero3_ag_floats_per_step(&[5, 7, 9], 2),
+            4 * 5 + 4 * 7 + 2 * 9
+        );
+        // PP p2p floats: 2m(k-1)·t·d across the wire, nothing at pp = 1
+        assert_eq!(builtin_pp_p2p_floats_per_step(4, 4, 2, 16, 8), 2 * 2 * 3 * 16 * 8);
+        assert_eq!(builtin_pp_p2p_floats_per_step(4, 2, 2, 16, 8), 2 * 2 * 3 * 16 * 8);
+        assert_eq!(builtin_pp_p2p_floats_per_step(4, 1, 2, 16, 8), 0);
+    }
+
+    #[test]
+    fn sharding_stage_pricing_ladder() {
+        use crate::zero::ShardingStage;
+        // stages 1 and 2 price identically (same RS+AG wire volume, same
+        // sharded optimizer walk); stage 3 adds the per-micro-batch
+        // parameter gathers to the DP term; stage 0 pays the full
+        // optimizer walk
+        let model = lookup("175b").unwrap();
+        let base = ParallelConfig::default().with_tp(4).with_pp(16).with_dp(4).with_gbs(64);
+        let eval = |s: ShardingStage| {
+            pm().evaluate(&model, &base.clone().with_zero_stage(s)).unwrap()
+        };
+        let s0 = eval(ShardingStage::Ddp);
+        let s1 = eval(ShardingStage::OptimizerStates);
+        let s2 = eval(ShardingStage::Gradients);
+        let s3 = eval(ShardingStage::Parameters);
+        assert_eq!(s1.t_dp_comm, s2.t_dp_comm, "stage 1 and 2 move the same wire volume");
+        assert_eq!(s1.t_optimizer, s2.t_optimizer);
+        assert!(s3.t_dp_comm > s2.t_dp_comm, "stage 3 pays the on-demand param gathers");
+        assert!(s0.t_optimizer > s1.t_optimizer, "stage 0 walks the full optimizer state");
+        // the boolean alias still lands on stage 1 exactly
+        let alias = pm().evaluate(&model, &base.clone().with_zero1(true)).unwrap();
+        assert_eq!(alias.t_step, s1.t_step);
     }
 
     #[test]

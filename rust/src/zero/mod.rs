@@ -1,28 +1,143 @@
-//! ZeRO-1 sharded data parallelism (§II.D).
+//! Staged sharded data parallelism (§II.D, grown into the full ZeRO
+//! ladder).
 //!
-//! ZeRO stage 1 shards the *optimizer states* (and the fp32 master copy
-//! they act on) across the DP group: each rank reduce-scatters the step's
-//! gradients, applies Adam to its own contiguous parameter shard only, and
-//! all-gathers the updated parameters.  Wire volume matches a plain
-//! all-reduce (so no throughput change — Fig 10's last-place SHAP rank)
-//! while optimizer memory drops by `1/dp` (the `mem` model's accounting).
+//! One [`ShardingStage`] contract covers the whole family:
 //!
-//! The non-sharded baseline (`Ddp`) is implemented alongside so the two
-//! paths can be tested for *bitwise-equivalent parameter trajectories* —
-//! the invariant that makes ZeRO "free" to turn on.
+//! * **Stage 0 (DDP)** — everything replicated; gradients all-reduced.
+//! * **Stage 1 (ZeRO-1)** — optimizer states (and the fp32 masters they
+//!   act on) sharded `1/dp`; gradients reduce-scattered logically but
+//!   every rank still materialises the full reduced buffer; updated
+//!   parameters all-gathered after the step.
+//! * **Stage 2 (ZeRO-2)** — gradients sharded for real: the engine's
+//!   backward-overlapped buckets become **partition-aligned
+//!   reduce-scatter** buckets, each rank redeeming only the buckets whose
+//!   span it owns, so the reduced gradient a rank holds is its `1/dp`
+//!   shard and nothing more.  Wire volume is unchanged from stage 1
+//!   (RS in, AG of updated params out).
+//! * **Stage 3 (ZeRO-3)** — the working parameters themselves sharded:
+//!   each rank stores only its flat `1/dp` range of every stage's
+//!   parameter vector and all-gathers the full vector **on demand**, one
+//!   layer at a time, around each forward/backward use (prefetched one
+//!   use ahead, dropped after use — peak full-parameter residency is
+//!   per-layer, not per-model; see `coordinator::worker`).  No post-step
+//!   parameter all-gather: updated shards stay sharded.
+//!
+//! The correctness invariant the whole ladder hangs on: **every stage
+//! walks the DDP parameter trajectory bitwise at fp32**.  Rank-order
+//! bucket reduction makes the reduce-scattered shard the exact slice of
+//! the all-reduced buffer, Adam is elementwise, and the gradient-clip
+//! norm is combined with one deterministic recipe shared by every stage
+//! ([`shard_sq`] per DP-partition span, folded in rank order, then the
+//! 1-float TP combine) — so stage 0 computes locally exactly what stages
+//! 1–3 assemble over the wire.
 //!
 //! Two step entry points: [`DistOptimizer::step`] performs the gradient
 //! sync itself (all-reduce / reduce-scatter), while
 //! [`DistOptimizer::step_reduced`] consumes gradients the engine has
-//! already mean-reduced through its backward-overlapped bucketed
-//! nonblocking all-reduce — only the tiny norm combines and the ZeRO-1
-//! parameter all-gather remain.  Both communicate the small syncs with
-//! a configurable [`Algo`] (the engine default is `Ring`).
+//! already mean-reduced — full-buffer under stages 0/1, shard-only under
+//! stages 2/3.
 
 use crate::collectives::{chunk_bounds, Algo, Group, TpComm};
-use crate::optim::{clip_grad_norm, Adam, AdamConfig};
+use crate::optim::{Adam, AdamConfig};
 use crate::precision::Dtype;
 use std::sync::Arc;
+
+/// Which training state is sharded `1/dp` across the data-parallel
+/// group — the ZeRO stage ladder (each stage includes the previous).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum ShardingStage {
+    /// Stage 0: plain DDP, everything replicated.
+    #[default]
+    Ddp,
+    /// Stage 1: optimizer states (incl. fp32 masters) sharded.
+    OptimizerStates,
+    /// Stage 2: + reduced gradients sharded (true reduce-scatter
+    /// dataflow).
+    Gradients,
+    /// Stage 3: + working parameters sharded (on-demand gather).
+    Parameters,
+}
+
+impl ShardingStage {
+    /// Parse a CLI / manifest spelling (`0`..`3`, or the ZeRO names).
+    pub fn parse(s: &str) -> Option<ShardingStage> {
+        match s {
+            "0" | "ddp" => Some(ShardingStage::Ddp),
+            "1" | "zero1" => Some(ShardingStage::OptimizerStates),
+            "2" | "zero2" => Some(ShardingStage::Gradients),
+            "3" | "zero3" => Some(ShardingStage::Parameters),
+            _ => None,
+        }
+    }
+
+    /// Numeric stage (0..=3) — the manifest / CLI encoding.
+    pub fn index(self) -> u32 {
+        match self {
+            ShardingStage::Ddp => 0,
+            ShardingStage::OptimizerStates => 1,
+            ShardingStage::Gradients => 2,
+            ShardingStage::Parameters => 3,
+        }
+    }
+
+    /// Inverse of [`ShardingStage::index`].
+    pub fn from_index(i: u32) -> Option<ShardingStage> {
+        match i {
+            0 => Some(ShardingStage::Ddp),
+            1 => Some(ShardingStage::OptimizerStates),
+            2 => Some(ShardingStage::Gradients),
+            3 => Some(ShardingStage::Parameters),
+            _ => None,
+        }
+    }
+
+    /// Short name ("ddp" / "zero1" / "zero2" / "zero3").
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardingStage::Ddp => "ddp",
+            ShardingStage::OptimizerStates => "zero1",
+            ShardingStage::Gradients => "zero2",
+            ShardingStage::Parameters => "zero3",
+        }
+    }
+
+    /// Optimizer states (and fp32 masters) live sharded (stages 1+).
+    pub fn shards_optimizer(self) -> bool {
+        self >= ShardingStage::OptimizerStates
+    }
+
+    /// Reduced gradients live sharded (stages 2+): the DP sync is a
+    /// partition-aligned reduce-scatter, not an all-reduce.
+    pub fn shards_grads(self) -> bool {
+        self >= ShardingStage::Gradients
+    }
+
+    /// Working parameters live sharded (stage 3).
+    pub fn shards_params(self) -> bool {
+        self == ShardingStage::Parameters
+    }
+
+    /// Can a checkpoint written at `self` resume at `other`?  Identical
+    /// stages always; the 1 ↔ 2 pair reshards trivially (both keep the
+    /// same `1/dp` optimizer-shard layout and full checkpointed params —
+    /// only the runtime gradient dataflow differs).  Everything touching
+    /// stage 0 or 3 changes the on-disk optimizer-state or parameter
+    /// residency layout and is rejected.
+    pub fn resume_compatible(self, other: ShardingStage) -> bool {
+        use ShardingStage::*;
+        self == other
+            || matches!(
+                (self, other),
+                (OptimizerStates, Gradients) | (Gradients, OptimizerStates)
+            )
+    }
+}
+
+impl std::fmt::Display for ShardingStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.index())
+    }
+}
 
 /// Tensor-parallel context for the optimizer step: this shard's
 /// communicator plus the span of TP-replicated parameters in its flat
@@ -31,30 +146,81 @@ use std::sync::Arc;
 /// dense-equivalent semantics the tp = 1/2/4 trajectory tests require.
 pub type TpCtx<'a> = Option<(&'a TpComm, (usize, usize))>;
 
-/// Squared-norm contribution of one shard's `grads` to the TP-global
-/// norm: the replicated span's energy is charged at 1/tp per shard
-/// (its gradients are identical across shards after the TP grad sync),
-/// so the cross-shard sum counts it exactly once.  `replicated` is given
-/// in `grads` coordinates and may be clamped empty.
-fn tp_partial_sq(grads: &[f32], replicated: (usize, usize), tp: usize) -> f32 {
-    let full: f32 = grads.iter().map(|&g| g * g).sum();
+/// Squared-norm contribution of one DP-partition span to the global clip
+/// norm, as the f32 every stage folds: f64-accumulated sum of squares
+/// (with the TP-replicated overlap charged at `1/tp`, so the cross-shard
+/// sum counts it once), rounded once to f32.  THE shared brick of the
+/// deterministic norm recipe — stage 0 computes it locally per span,
+/// stages 1–3 compute exactly the same value on the span's owner, so the
+/// rank-order fold below is bitwise identical either way.
+/// `replicated` is given in `grads` coordinates and may be empty.
+fn shard_sq(grads: &[f32], replicated: (usize, usize), tp: usize) -> f32 {
+    let full: f64 = grads.iter().map(|&g| (g as f64) * (g as f64)).sum();
     let (lo, hi) = replicated;
-    let rep: f32 = grads[lo..hi].iter().map(|&g| g * g).sum();
-    full - rep * (1.0 - 1.0 / tp as f32)
+    let rep: f64 = grads[lo..hi].iter().map(|&g| (g as f64) * (g as f64)).sum();
+    (full - rep * (1.0 - 1.0 / tp as f64)) as f32
 }
 
-/// Clip `grads` by the TP-global norm (replicated span counted once via
-/// a 1-float subgroup all-reduce) and return the pre-clip norm — the
-/// DDP clip path under tensor parallelism, shared by both step entry
-/// points.
-fn tp_clip(grads: &mut [f32], clip: f32, comm: &TpComm, span: (usize, usize)) -> f32 {
-    let mut sq = vec![tp_partial_sq(grads, span, comm.tp())];
-    comm.all_reduce_sum(&mut sq);
-    let norm = sq[0].max(0.0).sqrt();
+/// [`shard_sq`] of the sub-span `[lo, hi)` of a full gradient buffer,
+/// with the TP-replicated span clamped into it.
+fn span_sq(grads: &[f32], lo: usize, hi: usize, tp: TpCtx<'_>) -> f32 {
+    match tp {
+        None => shard_sq(&grads[lo..hi], (0, 0), 1),
+        Some((comm, (rlo, rhi))) => {
+            let l = rlo.clamp(lo, hi) - lo;
+            let h = rhi.clamp(lo, hi) - lo;
+            shard_sq(&grads[lo..hi], (l, h), comm.tp())
+        }
+    }
+}
+
+/// Rank-order fold of every DP rank's [`shard_sq`] partial.  Sharded
+/// ranks each hold one partial: slot-exchange it (every slot receives
+/// exactly one non-zero contribution, so the collective is exact at any
+/// association order) and fold the slots `0..dp` locally.
+fn dp_combine_sq(group: &Arc<Group>, rank: usize, algo: Algo, partial: f32) -> f32 {
+    let dp = group.len();
+    if dp == 1 {
+        return partial;
+    }
+    let mut slots = vec![0.0f32; dp];
+    slots[rank] = partial;
+    group.all_reduce_sum(rank, &mut slots, algo);
+    // sequential left-to-right sum = the rank-order fold
+    slots.iter().copied().sum()
+}
+
+/// Finish the norm from the DP-combined sum of squares: the 1-float TP
+/// combine (replicated span already discounted per shard), then sqrt.
+fn finish_norm(dp_sq: f32, tp: TpCtx<'_>) -> f32 {
+    let mut sq = vec![dp_sq];
+    if let Some((comm, _)) = tp {
+        comm.all_reduce_sum(&mut sq);
+    }
+    sq[0].max(0.0).sqrt()
+}
+
+/// Clip `grads` in place against `clip` given the pre-computed `norm`;
+/// the scale multiply is elementwise, so clipping a full buffer and
+/// clipping its shards produce bitwise-identical elements.
+fn apply_clip(grads: &mut [f32], clip: f32, norm: f32) {
     if clip > 0.0 && norm > clip {
         let scale = clip / (norm + 1e-6);
         grads.iter_mut().for_each(|g| *g *= scale);
     }
+}
+
+/// DDP clip: every rank holds the full (bit-identical) reduced gradient,
+/// so the DP partials are computed locally — per DP-partition span, folded
+/// in rank order — reproducing exactly what the sharded stages assemble
+/// over the wire.  Returns the pre-clip norm.
+fn ddp_clip(dp: usize, grads: &mut [f32], clip: f32, tp: TpCtx<'_>) -> f32 {
+    let mut total = 0.0f32;
+    for (lo, hi) in chunk_bounds(grads.len(), dp) {
+        total += span_sq(grads, lo, hi, tp);
+    }
+    let norm = finish_norm(total, tp);
+    apply_clip(grads, clip, norm);
     norm
 }
 
@@ -62,21 +228,21 @@ fn tp_clip(grads: &mut [f32], clip: f32, comm: &TpComm, span: (usize, usize)) ->
 pub enum DistOptimizer {
     /// Replicated optimizer: all-reduce grads, every rank steps everything.
     Ddp(Adam),
-    /// ZeRO-1: reduce-scatter, step own shard, all-gather params.
-    Zero1(Zero1Optimizer),
+    /// ZeRO stages 1–3: shard owner of one flat parameter range.
+    Sharded(ShardedOptimizer),
 }
 
 impl DistOptimizer {
     /// `algo` selects the collective algorithm for the *small* syncs
-    /// (the 1-float grad-norm combine) — the engine threads its
+    /// (the grad-norm slot exchange) — the engine threads its
     /// `EngineConfig::collective_algo` (default `Ring`) through here.
     /// `dtype` is the working-parameter dtype: `Bf16` keeps fp32 master
     /// weights inside Adam (full masters for DDP, shard-only masters
-    /// under ZeRO-1 — the paper's 4-bytes/param master term divided by
+    /// under stages 1+ — the paper's 4-bytes/param master term divided by
     /// `dp`) and re-quantizes the working copy after every step; it is
-    /// also the ZeRO-1 parameter all-gather wire dtype.
+    /// also the parameter all-gather wire dtype.
     pub fn new(
-        zero1: bool,
+        stage: ShardingStage,
         cfg: AdamConfig,
         n_params: usize,
         dp_rank: usize,
@@ -84,18 +250,19 @@ impl DistOptimizer {
         algo: Algo,
         dtype: Dtype,
     ) -> Self {
-        if zero1 {
-            DistOptimizer::Zero1(Zero1Optimizer::new(cfg, n_params, dp_rank, dp, algo, dtype))
-        } else {
-            DistOptimizer::Ddp(Adam::new_mixed(cfg, n_params, dtype))
+        match stage {
+            ShardingStage::Ddp => DistOptimizer::Ddp(Adam::new_mixed(cfg, n_params, dtype)),
+            _ => DistOptimizer::Sharded(ShardedOptimizer::new(
+                stage, cfg, n_params, dp_rank, dp, algo, dtype,
+            )),
         }
     }
 
     /// Synchronise `grads` across `group` (mean) and update `params`.
     /// `grads` is consumed as scratch (it holds the averaged gradient for
-    /// Ddp, and is untouched past the shard for Zero1).  With `tp` set,
-    /// the clip norm is combined across the tensor-parallel group
-    /// (replicated span counted once) via a 1-float subgroup all-reduce.
+    /// Ddp, and is untouched past the shard for the sharded stages).
+    /// With `tp` set, the clip norm is combined across the tensor-parallel
+    /// group (replicated span counted once).
     pub fn step(
         &mut self,
         group: &Arc<Group>,
@@ -110,24 +277,19 @@ impl DistOptimizer {
             DistOptimizer::Ddp(adam) => {
                 group.all_reduce_sum(rank, grads, Algo::Ring);
                 grads.iter_mut().for_each(|g| *g /= dp);
-                let norm = match tp {
-                    None => clip_grad_norm(grads, adam.cfg.grad_clip),
-                    Some((comm, span)) => tp_clip(grads, adam.cfg.grad_clip, comm, span),
-                };
+                let norm = ddp_clip(group.len(), grads, adam.cfg.grad_clip, tp);
                 adam.step(params, grads, lr_scale);
                 norm
             }
-            DistOptimizer::Zero1(z) => z.step(group, rank, params, grads, lr_scale, tp),
+            DistOptimizer::Sharded(z) => z.step(group, rank, params, grads, lr_scale, tp),
         }
     }
 
     /// Optimizer step over gradients that are **already DP-mean-reduced**
-    /// (the engine's bucketed nonblocking all-reduce drains into `grads`
-    /// before calling this).  Only the tiny syncs remain: the TP-global
-    /// clip-norm combine and (ZeRO-1) the per-shard norm combine + the
-    /// updated-parameter all-gather.  Every DP rank holds bit-identical
-    /// `grads` here (rank-order bucket reduction), so DDP ranks step in
-    /// lockstep without further communication.
+    /// (the engine's overlapped sync drains into them before calling
+    /// this).  Buffer shapes follow the stage: DDP/stage-1 take the full
+    /// reduced buffer; stages 2/3 take this rank's reduce-scattered
+    /// shard, and stage 3 additionally takes the sharded `params`.
     pub fn step_reduced(
         &mut self,
         group: &Arc<Group>,
@@ -139,14 +301,11 @@ impl DistOptimizer {
     ) -> f32 {
         match self {
             DistOptimizer::Ddp(adam) => {
-                let norm = match tp {
-                    None => clip_grad_norm(grads, adam.cfg.grad_clip),
-                    Some((comm, span)) => tp_clip(grads, adam.cfg.grad_clip, comm, span),
-                };
+                let norm = ddp_clip(group.len(), grads, adam.cfg.grad_clip, tp);
                 adam.step(params, grads, lr_scale);
                 norm
             }
-            DistOptimizer::Zero1(z) => z.step_reduced(group, rank, params, grads, lr_scale, tp),
+            DistOptimizer::Sharded(z) => z.step_reduced(group, rank, params, grads, lr_scale, tp),
         }
     }
 
@@ -154,16 +313,17 @@ impl DistOptimizer {
     pub fn state_bytes(&self) -> usize {
         match self {
             DistOptimizer::Ddp(a) => a.state_bytes(),
-            DistOptimizer::Zero1(z) => z.adam.state_bytes(),
+            DistOptimizer::Sharded(z) => z.adam.state_bytes(),
         }
     }
 
     /// Checkpoint this rank's optimizer state (full for DDP, shard-only
-    /// under ZeRO-1 — DeepSpeed's per-rank layout).
+    /// under stages 1+ — DeepSpeed's per-rank layout, identical across
+    /// stages 1–3, which is what makes 1 ↔ 2 resumes trivial).
     pub fn export_state(&self) -> (Vec<f32>, u64) {
         match self {
             DistOptimizer::Ddp(a) => a.export_state(),
-            DistOptimizer::Zero1(z) => z.adam.export_state(),
+            DistOptimizer::Sharded(z) => z.adam.export_state(),
         }
     }
 
@@ -171,18 +331,22 @@ impl DistOptimizer {
     pub fn import_state(&mut self, data: &[f32], t: u64) {
         match self {
             DistOptimizer::Ddp(a) => a.import_state(data, t),
-            DistOptimizer::Zero1(z) => z.adam.import_state(data, t),
+            DistOptimizer::Sharded(z) => z.adam.import_state(data, t),
         }
     }
 }
 
-/// The ZeRO-1 shard owner for one flat parameter buffer.
-pub struct Zero1Optimizer {
+/// The stage-1/2/3 shard owner for one flat parameter buffer.
+pub struct ShardedOptimizer {
     pub adam: Adam,
+    /// Which state lives sharded (never [`ShardingStage::Ddp`]).
+    pub stage: ShardingStage,
     pub dp_rank: usize,
     pub dp: usize,
+    /// FULL (unsharded) parameter count of the buffer this optimizer
+    /// owns a shard of.
     pub n_params: usize,
-    /// Collective algorithm for the 1-float grad-norm combine.
+    /// Collective algorithm for the grad-norm slot exchange.
     pub algo: Algo,
     /// Working-parameter dtype — also the updated-parameter all-gather
     /// wire dtype (bf16 params pack two-per-lane; lossless, since Adam
@@ -190,8 +354,9 @@ pub struct Zero1Optimizer {
     pub dtype: Dtype,
 }
 
-impl Zero1Optimizer {
+impl ShardedOptimizer {
     pub fn new(
+        stage: ShardingStage,
         cfg: AdamConfig,
         n_params: usize,
         dp_rank: usize,
@@ -200,14 +365,26 @@ impl Zero1Optimizer {
         dtype: Dtype,
     ) -> Self {
         assert!(dp_rank < dp);
+        assert!(stage.shards_optimizer(), "sharded optimizer needs stage >= 1");
         let (lo, hi) = chunk_bounds(n_params, dp)[dp_rank];
-        Self { adam: Adam::new_mixed(cfg, hi - lo, dtype), dp_rank, dp, n_params, algo, dtype }
+        Self {
+            adam: Adam::new_mixed(cfg, hi - lo, dtype),
+            stage,
+            dp_rank,
+            dp,
+            n_params,
+            algo,
+            dtype,
+        }
     }
 
+    /// This rank's flat parameter range `[lo, hi)` of the full buffer.
     pub fn shard_bounds(&self) -> (usize, usize) {
         chunk_bounds(self.n_params, self.dp)[self.dp_rank]
     }
 
+    /// Classic entry point: `grads` holds the rank-local (unreduced)
+    /// gradient; reduce-scatter my shard, mean, then the shared tail.
     pub fn step(
         &mut self,
         group: &Arc<Group>,
@@ -217,20 +394,31 @@ impl Zero1Optimizer {
         lr_scale: f32,
         tp: TpCtx<'_>,
     ) -> f32 {
-        assert_eq!(params.len(), self.n_params);
+        assert_eq!(grads.len(), self.n_params);
         assert_eq!(group.len(), self.dp);
         let dp = self.dp as f32;
 
         // reduce-scatter: my shard of the summed gradient
         let mut shard = group.reduce_scatter_sum(rank, grads);
         shard.iter_mut().for_each(|g| *g /= dp);
-        self.clip_step_gather(group, rank, params, &mut shard, lr_scale, tp)
+        let (slo, shi) = self.shard_bounds();
+        if self.stage.shards_params() {
+            assert_eq!(params.len(), shi - slo, "stage-3 step takes sharded params");
+            self.clip_step(group, rank, params, &mut shard, lr_scale, tp)
+        } else {
+            assert_eq!(params.len(), self.n_params);
+            let norm =
+                self.clip_step(group, rank, &mut params[slo..shi], &mut shard, lr_scale, tp);
+            self.gather_params(group, rank, params);
+            norm
+        }
     }
 
-    /// ZeRO-1 step over already-DP-mean-reduced gradients: slice my
-    /// shard out of the full buffer (identical to the reduce-scatter
-    /// result — rank-order sums are elementwise, so any sub-span of the
-    /// bucketed all-reduce equals the scattered shard bit for bit).
+    /// Step over already-DP-mean-reduced gradients.  Stage 1 receives the
+    /// full reduced buffer and slices its shard (any sub-span of the
+    /// rank-order bucketed all-reduce equals the scattered shard bit for
+    /// bit); stages 2/3 receive the reduce-scattered shard directly —
+    /// the rank never materialised anything more.
     pub fn step_reduced(
         &mut self,
         group: &Arc<Group>,
@@ -240,61 +428,86 @@ impl Zero1Optimizer {
         lr_scale: f32,
         tp: TpCtx<'_>,
     ) -> f32 {
-        assert_eq!(params.len(), self.n_params);
-        assert_eq!(grads.len(), self.n_params);
         assert_eq!(group.len(), self.dp);
         let (slo, shi) = self.shard_bounds();
-        self.clip_step_gather(group, rank, params, &mut grads[slo..shi], lr_scale, tp)
+        match self.stage {
+            ShardingStage::OptimizerStates => {
+                assert_eq!(params.len(), self.n_params);
+                assert_eq!(grads.len(), self.n_params);
+                // split disjoint slices of two distinct buffers
+                let norm = self.clip_step(
+                    group,
+                    rank,
+                    &mut params[slo..shi],
+                    &mut grads[slo..shi],
+                    lr_scale,
+                    tp,
+                );
+                self.gather_params(group, rank, params);
+                norm
+            }
+            ShardingStage::Gradients => {
+                assert_eq!(params.len(), self.n_params);
+                assert_eq!(grads.len(), shi - slo, "stage-2 step takes the grad shard");
+                let norm =
+                    self.clip_step(group, rank, &mut params[slo..shi], grads, lr_scale, tp);
+                self.gather_params(group, rank, params);
+                norm
+            }
+            ShardingStage::Parameters => {
+                assert_eq!(params.len(), shi - slo, "stage-3 step takes sharded params");
+                assert_eq!(grads.len(), shi - slo, "stage-3 step takes the grad shard");
+                self.clip_step(group, rank, params, grads, lr_scale, tp)
+            }
+            ShardingStage::Ddp => unreachable!("stage 0 is DistOptimizer::Ddp"),
+        }
     }
 
-    /// Shared tail of both entry points, from this rank's mean-reduced
-    /// gradient shard onward: combine shard norms with a tiny all-reduce
-    /// (1 float, like DeepSpeed) — first across DP shards, then (under
-    /// TP) across the tensor group, discounting this DP shard's overlap
-    /// with the replicated span so the cross-shard sum counts it once —
-    /// clip, Adam this shard only, and all-gather the updated params.
-    fn clip_step_gather(
+    /// Shared tail of every entry point, from this rank's mean-reduced
+    /// gradient shard onward: the deterministic norm recipe ([`shard_sq`]
+    /// partial, slot-exchanged and folded in rank order, 1-float TP
+    /// combine), clip, Adam this shard only.  `param_shard` is this
+    /// rank's parameter range (a slice of the full buffer under stages
+    /// 1/2, the whole sharded vector under stage 3).
+    fn clip_step(
         &mut self,
         group: &Arc<Group>,
         rank: usize,
-        params: &mut [f32],
+        param_shard: &mut [f32],
         shard: &mut [f32],
         lr_scale: f32,
         tp: TpCtx<'_>,
     ) -> f32 {
         let (slo, shi) = self.shard_bounds();
         assert_eq!(shard.len(), shi - slo);
-        let local_sq: f32 = match tp {
-            None => shard.iter().map(|&g| g * g).sum(),
+        assert_eq!(param_shard.len(), shi - slo);
+        let partial = match tp {
+            None => shard_sq(shard, (0, 0), 1),
             Some((comm, (rlo, rhi))) => {
                 let lo = rlo.clamp(slo, shi) - slo;
                 let hi = rhi.clamp(slo, shi) - slo;
-                tp_partial_sq(shard, (lo, hi), comm.tp())
+                shard_sq(shard, (lo, hi), comm.tp())
             }
         };
-        let mut sq = vec![local_sq];
-        group.all_reduce_sum(rank, &mut sq, self.algo);
-        if let Some((comm, _)) = tp {
-            comm.all_reduce_sum(&mut sq);
-        }
-        let norm = sq[0].max(0.0).sqrt();
-        let clip = self.adam.cfg.grad_clip;
-        if clip > 0.0 && norm > clip {
-            let scale = clip / (norm + 1e-6);
-            shard.iter_mut().for_each(|g| *g *= scale);
-        }
+        let dp_sq = dp_combine_sq(group, rank, self.algo, partial);
+        let norm = finish_norm(dp_sq, tp);
+        apply_clip(shard, self.adam.cfg.grad_clip, norm);
 
         // Adam on my shard only (mixed precision: on the shard's fp32
         // masters, re-quantized into the working copy)
-        self.adam.step(&mut params[slo..shi], shard, lr_scale);
+        self.adam.step(param_shard, shard, lr_scale);
+        norm
+    }
 
-        // all-gather the updated parameters at the working dtype (bf16
-        // shards ride packed u16 lanes — half the wire bytes, counted by
-        // the group's ag_payload_bytes; the RS+AG wire accounting's
-        // second half)
+    /// All-gather the updated parameters at the working dtype (stages
+    /// 1/2; bf16 shards ride packed u16 lanes — half the wire bytes,
+    /// counted by the group's `ag_payload_bytes`).  Stage 3 never calls
+    /// this: its parameters stay sharded and are gathered on demand
+    /// around each use instead.
+    fn gather_params(&self, group: &Arc<Group>, rank: usize, params: &mut [f32]) {
+        let (slo, shi) = self.shard_bounds();
         let my = params[slo..shi].to_vec();
         group.all_gather_dtype(rank, &my, params, self.dtype);
-        norm
     }
 }
 
@@ -304,23 +517,45 @@ mod tests {
     use std::thread;
 
     /// Drive `steps` optimizer steps on `dp` ranks; rank-local grads are
-    /// deterministic functions of (rank, step).  Returns rank 0's params.
-    fn run(dp: usize, zero1: bool, steps: usize, n: usize) -> Vec<f32> {
+    /// deterministic functions of (rank, step).  Returns rank 0's FULL
+    /// parameter vector (stage 3 ranks gather their shards for the
+    /// comparison).
+    fn run(dp: usize, stage: ShardingStage, steps: usize, n: usize) -> Vec<f32> {
         let group = Group::new(dp);
         let handles: Vec<_> = (0..dp)
             .map(|rank| {
                 let g = group.clone();
                 thread::spawn(move || {
-                    let mut params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
-                    let mut opt =
-                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring, Dtype::F32);
+                    let full: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
+                    let mut params = if stage.shards_params() {
+                        let (lo, hi) = chunk_bounds(n, dp)[rank];
+                        full[lo..hi].to_vec()
+                    } else {
+                        full
+                    };
+                    let mut opt = DistOptimizer::new(
+                        stage,
+                        AdamConfig::default(),
+                        n,
+                        rank,
+                        dp,
+                        Algo::Ring,
+                        Dtype::F32,
+                    );
                     for step in 0..steps {
                         let mut grads: Vec<f32> = (0..n)
                             .map(|i| ((i + rank * 13 + step * 7) as f32 * 0.1).sin())
                             .collect();
                         opt.step(&g, rank, &mut params, &mut grads, 1.0, None);
                     }
-                    params
+                    if stage.shards_params() {
+                        // assemble the full vector for cross-stage checks
+                        let mut out = vec![0.0f32; n];
+                        g.all_gather(rank, &params, &mut out);
+                        out
+                    } else {
+                        params
+                    }
                 })
             })
             .collect();
@@ -333,10 +568,57 @@ mod tests {
     }
 
     #[test]
-    fn zero1_matches_ddp_trajectory() {
-        // THE ZeRO-1 invariant: identical parameter trajectory to DDP
-        let ddp = run(4, false, 5, 37);
-        let z1 = run(4, true, 5, 37);
+    fn stage_ladder_parses_and_orders() {
+        assert_eq!(ShardingStage::parse("0"), Some(ShardingStage::Ddp));
+        assert_eq!(ShardingStage::parse("zero2"), Some(ShardingStage::Gradients));
+        assert_eq!(ShardingStage::parse("4"), None);
+        for i in 0..4 {
+            let s = ShardingStage::from_index(i).unwrap();
+            assert_eq!(s.index(), i);
+            assert_eq!(ShardingStage::parse(s.name()), Some(s));
+            assert_eq!(format!("{s}"), i.to_string());
+        }
+        assert!(ShardingStage::from_index(4).is_none());
+        // each stage includes the previous
+        assert!(!ShardingStage::Ddp.shards_optimizer());
+        assert!(ShardingStage::OptimizerStates.shards_optimizer());
+        assert!(!ShardingStage::OptimizerStates.shards_grads());
+        assert!(ShardingStage::Gradients.shards_optimizer());
+        assert!(ShardingStage::Gradients.shards_grads());
+        assert!(!ShardingStage::Gradients.shards_params());
+        assert!(ShardingStage::Parameters.shards_grads());
+        assert!(ShardingStage::Parameters.shards_params());
+    }
+
+    #[test]
+    fn resume_compat_is_identity_plus_the_1_2_pair() {
+        use ShardingStage::*;
+        for s in [Ddp, OptimizerStates, Gradients, Parameters] {
+            assert!(s.resume_compatible(s));
+        }
+        assert!(OptimizerStates.resume_compatible(Gradients));
+        assert!(Gradients.resume_compatible(OptimizerStates));
+        assert!(!Ddp.resume_compatible(OptimizerStates));
+        assert!(!OptimizerStates.resume_compatible(Ddp));
+        assert!(!Parameters.resume_compatible(Gradients));
+        assert!(!Gradients.resume_compatible(Parameters));
+        assert!(!Parameters.resume_compatible(Ddp));
+    }
+
+    #[test]
+    fn every_stage_matches_ddp_trajectory() {
+        // the ladder invariant on the classic path: the sharded stages
+        // share one rank-order reduce-scatter dataflow, so they agree
+        // BIT FOR BIT among themselves; classic DDP reduces through the
+        // ring (different fp association), so it is tracked within
+        // tolerance.  The engine's step_reduced path is bitwise across
+        // ALL stages — see step_reduced_matches_ddp_bitwise_across_stages.
+        let ddp = run(4, ShardingStage::Ddp, 5, 37);
+        let z1 = run(4, ShardingStage::OptimizerStates, 5, 37);
+        let z2 = run(4, ShardingStage::Gradients, 5, 37);
+        let z3 = run(4, ShardingStage::Parameters, 5, 37);
+        assert_eq!(z1, z2, "stage 1 vs 2 must be bitwise");
+        assert_eq!(z1, z3, "stage 1 vs 3 must be bitwise");
         for (a, b) in ddp.iter().zip(&z1) {
             assert!((a - b).abs() < 2e-5, "{a} vs {b}");
         }
@@ -346,12 +628,35 @@ mod tests {
     fn zero1_state_is_sharded() {
         let n = 100;
         let dp = 4;
-        let z = Zero1Optimizer::new(AdamConfig::default(), n, 1, dp, Algo::Ring, Dtype::F32);
+        let z = ShardedOptimizer::new(
+            ShardingStage::OptimizerStates,
+            AdamConfig::default(),
+            n,
+            1,
+            dp,
+            Algo::Ring,
+            Dtype::F32,
+        );
         assert_eq!(z.adam.len(), 25);
         // DDP holds full state
-        let d = DistOptimizer::new(false, AdamConfig::default(), n, 0, dp, Algo::Ring, Dtype::F32);
-        let z = DistOptimizer::new(true, AdamConfig::default(), n, 0, dp, Algo::Ring, Dtype::F32);
-        assert_eq!(d.state_bytes(), 4 * z.state_bytes());
+        let d = DistOptimizer::new(
+            ShardingStage::Ddp,
+            AdamConfig::default(),
+            n,
+            0,
+            dp,
+            Algo::Ring,
+            Dtype::F32,
+        );
+        for stage in [
+            ShardingStage::OptimizerStates,
+            ShardingStage::Gradients,
+            ShardingStage::Parameters,
+        ] {
+            let z =
+                DistOptimizer::new(stage, AdamConfig::default(), n, 0, dp, Algo::Ring, Dtype::F32);
+            assert_eq!(d.state_bytes(), 4 * z.state_bytes(), "stage {stage}");
+        }
     }
 
     #[test]
@@ -360,7 +665,15 @@ mod tests {
         let dp = 4;
         let mut covered = 0;
         for r in 0..dp {
-            let z = Zero1Optimizer::new(AdamConfig::default(), n, r, dp, Algo::Ring, Dtype::F32);
+            let z = ShardedOptimizer::new(
+                ShardingStage::Gradients,
+                AdamConfig::default(),
+                n,
+                r,
+                dp,
+                Algo::Ring,
+                Dtype::F32,
+            );
             let (lo, hi) = z.shard_bounds();
             covered += hi - lo;
         }
@@ -381,8 +694,15 @@ mod tests {
                 thread::spawn(move || {
                     let comm = TpComm::new(sub, rank);
                     let dp_group = Group::new(1);
-                    let mut opt =
-                        DistOptimizer::new(false, AdamConfig::default(), 4, 0, 1, Algo::Ring, Dtype::F32);
+                    let mut opt = DistOptimizer::new(
+                        ShardingStage::Ddp,
+                        AdamConfig::default(),
+                        4,
+                        0,
+                        1,
+                        Algo::Ring,
+                        Dtype::F32,
+                    );
                     let mut params = vec![0.0f32; 4];
                     // unique elements differ per shard; [2..4) replicated
                     let mut grads = if rank == 0 {
@@ -403,26 +723,44 @@ mod tests {
     }
 
     #[test]
-    fn single_rank_zero1_is_plain_adam() {
-        let z1 = run(1, true, 3, 16);
-        let ddp = run(1, false, 3, 16);
-        for (a, b) in z1.iter().zip(&ddp) {
-            assert!((a - b).abs() < 1e-6);
+    fn single_rank_sharded_is_plain_adam() {
+        let ddp = run(1, ShardingStage::Ddp, 3, 16);
+        for stage in [
+            ShardingStage::OptimizerStates,
+            ShardingStage::Gradients,
+            ShardingStage::Parameters,
+        ] {
+            let z = run(1, stage, 3, 16);
+            assert_eq!(z, ddp, "stage {stage} at dp=1 must be plain Adam");
         }
     }
 
     /// Like [`run`] but through [`DistOptimizer::step_reduced`]: every
     /// rank is handed the already-mean-reduced gradient (rank-order sum
-    /// / dp, what the engine's bucketed all-reduce drains).
-    fn run_reduced(dp: usize, zero1: bool, steps: usize, n: usize) -> Vec<f32> {
+    /// / dp, what the engine's bucketed sync drains) — the full buffer
+    /// for stages 0/1, the partition shard for stages 2/3.
+    fn run_reduced(dp: usize, stage: ShardingStage, steps: usize, n: usize) -> Vec<f32> {
         let group = Group::new(dp);
         let handles: Vec<_> = (0..dp)
             .map(|rank| {
                 let g = group.clone();
                 thread::spawn(move || {
-                    let mut params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
-                    let mut opt =
-                        DistOptimizer::new(zero1, AdamConfig::default(), n, rank, dp, Algo::Ring, Dtype::F32);
+                    let full: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).cos()).collect();
+                    let (lo, hi) = chunk_bounds(n, dp)[rank];
+                    let mut params = if stage.shards_params() {
+                        full[lo..hi].to_vec()
+                    } else {
+                        full
+                    };
+                    let mut opt = DistOptimizer::new(
+                        stage,
+                        AdamConfig::default(),
+                        n,
+                        rank,
+                        dp,
+                        Algo::Ring,
+                        Dtype::F32,
+                    );
                     for step in 0..steps {
                         // rank-order mean over every rank's gradient
                         let mut grads = vec![0.0f32; n];
@@ -432,9 +770,20 @@ mod tests {
                             }
                         }
                         grads.iter_mut().for_each(|x| *x /= dp as f32);
-                        opt.step_reduced(&g, rank, &mut params, &mut grads, 1.0, None);
+                        let mut buf = if stage.shards_grads() && dp > 1 {
+                            grads[lo..hi].to_vec()
+                        } else {
+                            grads
+                        };
+                        opt.step_reduced(&g, rank, &mut params, &mut buf, 1.0, None);
                     }
-                    params
+                    if stage.shards_params() {
+                        let mut out = vec![0.0f32; n];
+                        g.all_gather(rank, &params, &mut out);
+                        out
+                    } else {
+                        params
+                    }
                 })
             })
             .collect();
@@ -446,31 +795,54 @@ mod tests {
     }
 
     #[test]
-    fn step_reduced_matches_step_ddp_and_zero1() {
-        // the overlapped-sync optimizer path must walk the same
-        // trajectory as the classic sync-inside-step path (up to the
-        // all-reduce association order, hence the small tolerance)
-        for zero1 in [false, true] {
-            let classic = run(4, zero1, 5, 37);
-            let reduced = run_reduced(4, zero1, 5, 37);
+    fn step_reduced_matches_ddp_bitwise_across_stages() {
+        // the overlapped-sync optimizer path: full-buffer DDP vs sharded
+        // grads (2/3) vs sharded params (3) — all bitwise equal, since
+        // the reduced inputs are elementwise identical and the norm
+        // recipe is shared
+        let ddp = run_reduced(4, ShardingStage::Ddp, 5, 37);
+        for stage in [
+            ShardingStage::OptimizerStates,
+            ShardingStage::Gradients,
+            ShardingStage::Parameters,
+        ] {
+            let z = run_reduced(4, stage, 5, 37);
+            assert_eq!(ddp, z, "stage {stage} reduced path diverged");
+        }
+    }
+
+    #[test]
+    fn step_reduced_matches_step_classic() {
+        // the classic sync-inside-step path must walk the same trajectory
+        // as the reduced path (up to the all-reduce association order of
+        // the classic DDP ring, hence the small tolerance)
+        for stage in [ShardingStage::Ddp, ShardingStage::OptimizerStates] {
+            let classic = run(4, stage, 5, 37);
+            let reduced = run_reduced(4, stage, 5, 37);
             for (a, b) in classic.iter().zip(&reduced) {
-                assert!((a - b).abs() < 2e-5, "zero1={zero1}: {a} vs {b}");
+                assert!((a - b).abs() < 2e-5, "stage {stage}: {a} vs {b}");
             }
         }
     }
 
     /// Like [`run`] but under the bf16 working dtype: params start on the
     /// bf16 grid, grads are bf16-quantized per-microbatch values.
-    fn run_mixed(dp: usize, zero1: bool, steps: usize, n: usize) -> Vec<f32> {
+    fn run_mixed(dp: usize, stage: ShardingStage, steps: usize, n: usize) -> Vec<f32> {
         let group = Group::new(dp);
         let handles: Vec<_> = (0..dp)
             .map(|rank| {
                 let g = group.clone();
                 thread::spawn(move || {
-                    let mut params: Vec<f32> =
+                    let full: Vec<f32> =
                         (0..n).map(|i| Dtype::Bf16.quantize((i as f32 * 0.01).cos())).collect();
+                    let mut params = if stage.shards_params() {
+                        let (lo, hi) = chunk_bounds(n, dp)[rank];
+                        full[lo..hi].to_vec()
+                    } else {
+                        full
+                    };
                     let mut opt = DistOptimizer::new(
-                        zero1,
+                        stage,
                         AdamConfig::default(),
                         n,
                         rank,
@@ -487,7 +859,13 @@ mod tests {
                             .collect();
                         opt.step(&g, rank, &mut params, &mut grads, 1.0, None);
                     }
-                    params
+                    if stage.shards_params() {
+                        let mut out = vec![0.0f32; n];
+                        g.all_gather(rank, &params, &mut out);
+                        out
+                    } else {
+                        params
+                    }
                 })
             })
             .collect();
@@ -499,31 +877,45 @@ mod tests {
     }
 
     #[test]
-    fn bf16_zero1_matches_bf16_ddp_and_stays_on_grid() {
-        // the ZeRO-1 ≡ DDP invariant survives mixed precision: sharded
-        // masters + packed parameter all-gather walk the DDP trajectory
-        // (up to the norm-combine association order, which the bf16 grid
-        // can amplify to one quantum)
-        let ddp = run_mixed(4, false, 5, 37);
-        let z1 = run_mixed(4, true, 5, 37);
+    fn bf16_stages_match_bf16_ddp_and_stay_on_grid() {
+        // the ladder invariant survives mixed precision: sharded masters
+        // + packed parameter all-gathers keep the sharded stages bitwise
+        // identical among themselves (rank-order dataflow, lossless
+        // packed gathers of grid values) and tracking bf16 DDP within a
+        // quantum (the classic DDP ring's association order differs)
+        let ddp = run_mixed(4, ShardingStage::Ddp, 5, 37);
+        let z1 = run_mixed(4, ShardingStage::OptimizerStates, 5, 37);
+        let z2 = run_mixed(4, ShardingStage::Gradients, 5, 37);
+        let z3 = run_mixed(4, ShardingStage::Parameters, 5, 37);
+        assert_eq!(z1, z2, "bf16 stage 1 vs 2 must be bitwise");
+        assert_eq!(z1, z3, "bf16 stage 1 vs 3 must be bitwise");
         for (i, (a, b)) in ddp.iter().zip(&z1).enumerate() {
             assert!((a - b).abs() <= 0.008 * a.abs().max(1.0), "param {i}: {a} vs {b}");
-            assert_eq!(a.to_bits(), Dtype::Bf16.quantize(*a).to_bits(), "ddp[{i}] off grid");
             assert_eq!(b.to_bits(), Dtype::Bf16.quantize(*b).to_bits(), "z1[{i}] off grid");
         }
+        for (i, a) in ddp.iter().enumerate() {
+            assert_eq!(a.to_bits(), Dtype::Bf16.quantize(*a).to_bits(), "param {i} off grid");
+        }
         // mixed-precision state accounting: masters add 4 bytes/param,
-        // sharded 1/dp under ZeRO-1 (after one step materialises them)
-        let z = Zero1Optimizer::new(AdamConfig::default(), 100, 0, 4, Algo::Ring, Dtype::Bf16);
+        // sharded 1/dp (after one step materialises them)
+        let z = ShardedOptimizer::new(
+            ShardingStage::OptimizerStates,
+            AdamConfig::default(),
+            100,
+            0,
+            4,
+            Algo::Ring,
+            Dtype::Bf16,
+        );
         assert_eq!(z.adam.state_bytes(), 3 * 25 * 4);
     }
 
     #[test]
-    fn step_reduced_zero1_shard_slice_equals_scatter() {
-        // the ZeRO-1 reduced path slices its shard out of the full
-        // buffer; single rank degenerates to plain Adam — and the shard
-        // slice of a rank-order sum is bitwise the scattered shard
-        let a = run_reduced(1, true, 3, 16);
-        let b = run(1, false, 3, 16);
+    fn step_reduced_shard_slice_equals_scatter() {
+        // single rank degenerates to plain Adam on every stage, and the
+        // shard slice of a rank-order sum is bitwise the scattered shard
+        let a = run_reduced(1, ShardingStage::Gradients, 3, 16);
+        let b = run(1, ShardingStage::Ddp, 3, 16);
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-6);
         }

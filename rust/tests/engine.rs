@@ -22,6 +22,7 @@ use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
 use frontier_llm::optim::AdamConfig;
 use frontier_llm::perf::{builtin_tp_ar_floats_per_microbatch, builtin_tp_grad_sync_floats_per_step};
+use frontier_llm::zero::ShardingStage;
 
 /// Artifact root, or `None` (skip) when artifacts are absent.
 fn artifacts_root() -> Option<PathBuf> {
@@ -45,7 +46,7 @@ fn cfg(bundle: &str, dp: usize, m: u32, steps: u32, zero1: bool, sched: Schedule
         steps,
         adam: AdamConfig::default(),
         lr_schedule: None,
-        zero1,
+        zero_stage: if zero1 { ShardingStage::OptimizerStates } else { ShardingStage::Ddp },
         seed: 42,
         log_every: 0,
         checkpoint_dir: None,
@@ -568,7 +569,7 @@ fn checkpoint_resume_continues_trajectory() {
         steps,
         adam: AdamConfig::default(),
         lr_schedule: None,
-        zero1: true,
+        zero_stage: ShardingStage::OptimizerStates,
         seed: 42,
         log_every: 0,
         checkpoint_dir: Some(dir.clone()),

@@ -16,6 +16,7 @@ use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
 use frontier_llm::perf::{dp_overlap_fraction, PerfModel};
 use frontier_llm::runtime::BuiltinSpec;
+use frontier_llm::zero::ShardingStage;
 
 /// 20-step run with the overlap knobs under test; `grad_bucket_floats`
 /// is small enough that every tiny stage splits into many buckets.
@@ -35,7 +36,7 @@ fn run(
         schedule: sched,
         microbatches: m,
         steps: 20,
-        zero1,
+        zero_stage: if zero1 { ShardingStage::OptimizerStates } else { ShardingStage::Ddp },
         overlap_grad_sync: overlap,
         grad_bucket_floats: 64,
         seed: 42,

@@ -29,6 +29,7 @@ use frontier_llm::perf::{
 };
 use frontier_llm::precision::Dtype;
 use frontier_llm::runtime::BuiltinSpec;
+use frontier_llm::zero::ShardingStage;
 
 /// Stated bf16-vs-fp32 trajectory tolerance (relative): bf16 keeps f32's
 /// exponent range but only ~2.4 decimal digits, and the drift compounds
@@ -53,7 +54,7 @@ fn cfg(
         schedule: sched,
         microbatches: m,
         steps,
-        zero1,
+        zero_stage: if zero1 { ShardingStage::OptimizerStates } else { ShardingStage::Ddp },
         precision,
         seed: 42,
         ..Default::default()

@@ -1,0 +1,555 @@
+//! Engine-level tests of the staged sharded-DP subsystem (ZeRO-2/3):
+//! true reduce-scatter gradient dataflow, on-demand parameter gathering,
+//! packed p2p activations, and the RS/AG wire contracts.
+//!
+//! The locks, mirroring the issue's acceptance criteria:
+//!
+//! * **Trajectory equivalence** — 20-step loss AND grad-norm
+//!   trajectories of stages 2 and 3 equal stage 0 (DDP) **bitwise** at
+//!   fp32, at dp ∈ {2, 4} × tp ∈ {1, 2} × pp ∈ {1, 2}; under bf16 the
+//!   stages stay bitwise-equal to bf16 DDP (same rank-order reductions,
+//!   lossless packed gathers) and track fp32 within the PR-4 tolerance.
+//! * **RS/AG wire, pinned EXACTLY** — the reduce-scatter bucket payload
+//!   equals the stage-0 all-reduce payload (`params × dtype` per step:
+//!   sharding changes residency, not volume); the stage-1/2 updated-
+//!   parameter all-gather and ZeRO-3's per-use gathers are pinned
+//!   against the analytic `perf` terms; bf16 is exactly half of fp32
+//!   everywhere.
+//! * **Packed p2p** — boundary activations ride the wire dtype; the
+//!   measured `pp_p2p_payload_bytes` is pinned EXACTLY against the
+//!   analytic PP p2p term and halves under bf16 without moving the
+//!   trajectory (grid values pack losslessly).
+//! * **Checkpoint resume** — stage-N save → stage-N resume continues
+//!   the straight run; the layout-identical 1 ↔ 2 pair cross-resumes;
+//!   stage mismatches touching 0 or 3 are rejected with a clear error.
+//! * **Residency** — ZeRO-3's measured gather high-water mark stays
+//!   within the 2-layer gather-use-drop bound, far below the worker's
+//!   model share.
+
+use std::path::PathBuf;
+
+use frontier_llm::config::ScheduleKind;
+use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
+use frontier_llm::perf::{
+    builtin_pp_p2p_floats_per_step, builtin_zero3_ag_floats_per_step, dp_grad_payload_bytes,
+    zero1_allgather_payload_bytes,
+};
+use frontier_llm::precision::Dtype;
+use frontier_llm::runtime::BuiltinSpec;
+use frontier_llm::zero::ShardingStage;
+
+const S0: ShardingStage = ShardingStage::Ddp;
+const S1: ShardingStage = ShardingStage::OptimizerStates;
+const S2: ShardingStage = ShardingStage::Gradients;
+const S3: ShardingStage = ShardingStage::Parameters;
+
+#[allow(clippy::too_many_arguments)]
+fn cfg(
+    bundle: &str,
+    tp: usize,
+    dp: usize,
+    m: u32,
+    steps: u32,
+    stage: ShardingStage,
+    sched: ScheduleKind,
+    precision: Dtype,
+) -> EngineConfig {
+    EngineConfig {
+        bundle: bundle.into(),
+        dp,
+        tp,
+        schedule: sched,
+        microbatches: m,
+        steps,
+        zero_stage: stage,
+        precision,
+        // small buckets so every stage splits into many RS/AR rounds
+        grad_bucket_floats: 128,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    bundle: &str,
+    tp: usize,
+    dp: usize,
+    m: u32,
+    steps: u32,
+    stage: ShardingStage,
+    sched: ScheduleKind,
+    precision: Dtype,
+) -> TrainReport {
+    train(&cfg(bundle, tp, dp, m, steps, stage, sched, precision))
+        .expect("training must succeed")
+}
+
+fn losses(r: &TrainReport) -> Vec<f32> {
+    r.logs.iter().map(|l| l.loss).collect()
+}
+
+fn grad_norms(r: &TrainReport) -> Vec<f32> {
+    r.logs.iter().map(|l| l.grad_norm).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * x.abs().max(1.0),
+            "{what}: step {i}: {x} vs {y}"
+        );
+    }
+}
+
+// =========================================================================
+// THE acceptance grid: stages 2/3 ≡ DDP bitwise at fp32,
+// dp ∈ {2, 4} × tp ∈ {1, 2} × pp ∈ {1, 2}, 20 steps
+// =========================================================================
+
+#[test]
+fn stages_match_ddp_bitwise_fp32_20_steps_grid() {
+    // pp = 2 runs the 2-stage bundle as a real pipeline; pp = 1 folds it
+    // onto one worker via v = 2 chunking — both shapes per (dp, tp)
+    let shapes: &[(ScheduleKind, &str)] = &[
+        (ScheduleKind::OneF1B, "pp2"),
+        (ScheduleKind::Interleaved1F1B { v: 2 }, "pp1(v2)"),
+    ];
+    for &dp in &[2usize, 4] {
+        for &tp in &[1usize, 2] {
+            for &(sched, pshape) in shapes {
+                let ddp = run("builtin:tiny-s2-mb2", tp, dp, 2, 20, S0, sched, Dtype::F32);
+                for stage in [S1, S2, S3] {
+                    let z =
+                        run("builtin:tiny-s2-mb2", tp, dp, 2, 20, stage, sched, Dtype::F32);
+                    let label = format!("dp{dp} tp{tp} {pshape} stage {stage}");
+                    assert_eq!(losses(&ddp), losses(&z), "{label}: losses must be bitwise");
+                    assert_eq!(
+                        grad_norms(&ddp),
+                        grad_norms(&z),
+                        "{label}: grad norms must be bitwise"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bf16_stages_match_bf16_ddp_bitwise_and_track_fp32() {
+    // the rank-order reductions and lossless packed gathers keep the
+    // whole ladder bitwise-equal at bf16 too; fp32 is tracked within the
+    // PR-4 tolerance (0.08 over 20 steps)
+    for &tp in &[1usize, 2] {
+        let fp32 = run("builtin:tiny-s2-mb2", tp, 2, 2, 20, S0, ScheduleKind::OneF1B, Dtype::F32);
+        let ddp = run("builtin:tiny-s2-mb2", tp, 2, 2, 20, S0, ScheduleKind::OneF1B, Dtype::Bf16);
+        for stage in [S2, S3] {
+            let z =
+                run("builtin:tiny-s2-mb2", tp, 2, 2, 20, stage, ScheduleKind::OneF1B, Dtype::Bf16);
+            assert_eq!(
+                losses(&ddp),
+                losses(&z),
+                "tp{tp} stage {stage}: bf16 ladder must stay bitwise"
+            );
+            assert_close(&losses(&fp32), &losses(&z), 0.08, &format!("tp{tp} {stage} vs fp32"));
+            assert_eq!(z.steps_skipped, 0);
+        }
+    }
+}
+
+#[test]
+fn stage3_overlapped_equals_sequential_bitwise() {
+    // the PR-3 overlap invariant survives the RS + on-demand-gather
+    // dataflow: deposits reduce in rank order whenever they land
+    for stage in [S2, S3] {
+        let mk = |overlap: bool| {
+            let mut c = cfg(
+                "builtin:tiny-s4-mb2",
+                1,
+                2,
+                4,
+                10,
+                stage,
+                ScheduleKind::Interleaved1F1B { v: 2 },
+                Dtype::F32,
+            );
+            c.overlap_grad_sync = overlap;
+            train(&c).expect("training must succeed")
+        };
+        let overlapped = mk(true);
+        let sequential = mk(false);
+        assert_eq!(
+            losses(&overlapped),
+            losses(&sequential),
+            "stage {stage}: overlapped ≡ sequential must be bitwise"
+        );
+        assert_eq!(grad_norms(&overlapped), grad_norms(&sequential));
+    }
+}
+
+#[test]
+fn stage3_loss_descends_and_is_deterministic() {
+    let mut c = cfg("builtin:tiny-s2-mb2", 1, 2, 4, 8, S3, ScheduleKind::OneF1B, Dtype::F32);
+    c.adam.lr = 2e-2;
+    let a = train(&c).unwrap();
+    let b = train(&c).unwrap();
+    assert_eq!(losses(&a), losses(&b), "stage-3 engine must be deterministic");
+    assert!(
+        a.final_loss() < a.initial_loss(),
+        "stage-3 training must learn: {:?}",
+        losses(&a)
+    );
+    assert!(a.logs.iter().all(|l| l.loss.is_finite() && l.grad_norm.is_finite()));
+}
+
+// =========================================================================
+// RS/AG wire contracts, pinned EXACTLY against the perf terms
+// =========================================================================
+
+#[test]
+fn stage2_rs_payload_equals_ddp_reduce_volume() {
+    // sharding the reduced gradient changes who materialises it, not the
+    // wire volume: the partition-aligned RS buckets move exactly the
+    // stage-0 payload, and the updated-parameter AG matches stage 1's
+    let spec = BuiltinSpec::parse("builtin:tiny-s2-mb2").unwrap();
+    let total = spec.total_params() as u64;
+    let steps = 4u32;
+    for dp in [2usize, 4] {
+        for (precision, width) in [(Dtype::F32, 4u64), (Dtype::Bf16, 2u64)] {
+            let r = run(
+                "builtin:tiny-s2-mb2",
+                1,
+                dp,
+                2,
+                steps,
+                S2,
+                ScheduleKind::OneF1B,
+                precision,
+            );
+            assert_eq!(
+                r.dp_bucket_payload_bytes,
+                steps as u64 * dp_grad_payload_bytes(total, width),
+                "dp={dp} {}: RS reduce half",
+                precision.name()
+            );
+            assert_eq!(
+                r.dp_param_ag_bytes,
+                steps as u64 * zero1_allgather_payload_bytes(total, width),
+                "dp={dp} {}: updated-param AG half",
+                precision.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn stage3_ag_payload_matches_on_demand_gather_term() {
+    // ZeRO-3 gathers per USE, not per step: the analytic per-use term,
+    // summed over global stages, pins the measured AG payload exactly —
+    // and bf16 packs it to exactly half
+    let spec = BuiltinSpec::parse("builtin:tiny-s2-mb2").unwrap();
+    let stage_params: Vec<u64> =
+        (0..spec.n_stages).map(|g| spec.stage_params(g) as u64).collect();
+    let (m, steps) = (2u32, 4u32);
+    let floats = builtin_zero3_ag_floats_per_step(&stage_params, m as u64);
+    for dp in [2usize, 4] {
+        let fp32 =
+            run("builtin:tiny-s2-mb2", 1, dp, m, steps, S3, ScheduleKind::OneF1B, Dtype::F32);
+        let bf16 =
+            run("builtin:tiny-s2-mb2", 1, dp, m, steps, S3, ScheduleKind::OneF1B, Dtype::Bf16);
+        assert_eq!(
+            fp32.dp_param_ag_bytes,
+            steps as u64 * 4 * floats,
+            "dp={dp}: fp32 on-demand AG pin"
+        );
+        assert_eq!(
+            bf16.dp_param_ag_bytes,
+            steps as u64 * 2 * floats,
+            "dp={dp}: bf16 on-demand AG pin"
+        );
+        assert_eq!(2 * bf16.dp_param_ag_bytes, fp32.dp_param_ag_bytes, "exactly half");
+        // the gradient reduce half is unchanged from every other stage
+        assert_eq!(
+            fp32.dp_bucket_payload_bytes,
+            steps as u64 * dp_grad_payload_bytes(spec.total_params() as u64, 4),
+            "dp={dp}: stage-3 RS volume"
+        );
+    }
+    // the checkpoint save's out-of-band full-param assembly must not
+    // advance the on-demand counter — the pin holds with saving enabled
+    let dir = resume_dir("z3pin");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut c = cfg("builtin:tiny-s2-mb2", 1, 2, m, steps, S3, ScheduleKind::OneF1B, Dtype::F32);
+    c.checkpoint_dir = Some(dir.clone());
+    let r = train(&c).unwrap();
+    assert_eq!(
+        r.dp_param_ag_bytes,
+        steps as u64 * 4 * floats,
+        "checkpoint gathers must stay uncounted"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stage3_fused_single_stage_gathers_backward_only() {
+    // k = 1 folds forward into backward: m gathers per step, not 2m
+    let spec = BuiltinSpec::parse("builtin:tiny-s1-mb2").unwrap();
+    let stage_params = [spec.stage_params(0) as u64];
+    let (m, steps) = (2u32, 3u32);
+    let r = run("builtin:tiny-s1-mb2", 1, 2, m, steps, S3, ScheduleKind::OneF1B, Dtype::F32);
+    assert_eq!(
+        r.dp_param_ag_bytes,
+        steps as u64 * 4 * builtin_zero3_ag_floats_per_step(&stage_params, m as u64),
+        "fused single-stage AG pin"
+    );
+}
+
+// =========================================================================
+// packed p2p activations, pinned EXACTLY and bitwise-neutral
+// =========================================================================
+
+#[test]
+fn p2p_payload_pinned_and_halves_under_bf16() {
+    // tiny: tokens = mbs × seq = 16, hidden = 16; 2-stage pipeline
+    let (tokens, hidden, k) = (16u64, 16u64, 2u64);
+    let (m, steps) = (2u32, 3u32);
+    let floats = builtin_pp_p2p_floats_per_step(k, 2, m as u64, tokens, hidden);
+    for dp in [1usize, 2] {
+        let fp32 =
+            run("builtin:tiny-s2-mb2", 1, dp, m, steps, S0, ScheduleKind::OneF1B, Dtype::F32);
+        let bf16 =
+            run("builtin:tiny-s2-mb2", 1, dp, m, steps, S0, ScheduleKind::OneF1B, Dtype::Bf16);
+        assert_eq!(
+            fp32.pp_p2p_payload_bytes,
+            steps as u64 * dp as u64 * 4 * floats,
+            "dp={dp}: fp32 p2p pin"
+        );
+        assert_eq!(
+            bf16.pp_p2p_payload_bytes,
+            steps as u64 * dp as u64 * 2 * floats,
+            "dp={dp}: bf16 p2p pin"
+        );
+        assert_eq!(2 * bf16.pp_p2p_payload_bytes, fp32.pp_p2p_payload_bytes);
+    }
+    // v-chunked boundaries still cross whenever pp > 1: s4 at v=2 is a
+    // 2-worker pipeline with 3 crossing boundaries
+    let r = run(
+        "builtin:tiny-s4-mb2",
+        1,
+        1,
+        4,
+        2,
+        S0,
+        ScheduleKind::Interleaved1F1B { v: 2 },
+        Dtype::F32,
+    );
+    let want = 2 * 4 * builtin_pp_p2p_floats_per_step(4, 2, 4, tokens, hidden);
+    assert_eq!(r.pp_p2p_payload_bytes, want, "v-chunked p2p pin");
+    // pp = 1 moves nothing across the wire
+    let r = run(
+        "builtin:tiny-s4-mb2",
+        1,
+        1,
+        4,
+        2,
+        S0,
+        ScheduleKind::Interleaved1F1B { v: 4 },
+        Dtype::F32,
+    );
+    assert_eq!(r.pp_p2p_payload_bytes, 0, "single-worker boundaries are local");
+}
+
+#[test]
+fn packed_p2p_does_not_move_the_bf16_trajectory() {
+    // boundary payloads are grid values, so packing is lossless: the
+    // multi-worker (packed-wire) run equals the single-worker (local,
+    // never-packed) chunking of the same model bitwise
+    let piped = run("builtin:tiny-s4-mb2", 1, 1, 4, 10, S0, ScheduleKind::OneF1B, Dtype::Bf16);
+    let local = run(
+        "builtin:tiny-s4-mb2",
+        1,
+        1,
+        4,
+        10,
+        S0,
+        ScheduleKind::Interleaved1F1B { v: 4 },
+        Dtype::Bf16,
+    );
+    assert_eq!(piped.world_size, 4);
+    assert_eq!(local.world_size, 1);
+    // cross-shape comparison: schedule order reshuffles fp association,
+    // which the bf16 grid can amplify — hence the wider tolerance (the
+    // bitwise packing pins live in the same-shape ladder tests above)
+    assert_close(&losses(&piped), &losses(&local), 0.02, "packed p2p vs local");
+}
+
+// =========================================================================
+// checkpoint resume across the stage ladder
+// =========================================================================
+
+fn resume_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fllm-zs-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn stage_n_save_resumes_stage_n() {
+    // 6 straight steps == 3 + checkpoint + 3, per stage
+    for stage in [S1, S2, S3] {
+        let dir = resume_dir(&format!("same{}", stage.index()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let straight = run("builtin:tiny-s2-mb2", 1, 2, 2, 6, stage, ScheduleKind::OneF1B, Dtype::F32);
+        let mk = |steps: u32, resume: bool| {
+            let mut c =
+                cfg("builtin:tiny-s2-mb2", 1, 2, 2, steps, stage, ScheduleKind::OneF1B, Dtype::F32);
+            c.checkpoint_dir = Some(dir.clone());
+            c.resume = resume;
+            c
+        };
+        let first = train(&mk(3, false)).unwrap();
+        let second = train(&mk(3, true)).unwrap();
+        assert_eq!(second.logs[0].step, 3);
+        let mut combined = losses(&first);
+        combined.extend(losses(&second));
+        assert_close(
+            &losses(&straight),
+            &combined,
+            1e-4,
+            &format!("stage {stage} resume vs straight"),
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn stage1_and_stage2_cross_resume() {
+    // the 1 <-> 2 pair shares the on-disk layout (full params, 1/dp
+    // optimizer shards), so a stage-1 checkpoint resumes as stage 2 and
+    // continues the (bitwise-shared) trajectory
+    let dir = resume_dir("cross12");
+    let _ = std::fs::remove_dir_all(&dir);
+    let straight = run("builtin:tiny-s2-mb2", 1, 2, 2, 6, S2, ScheduleKind::OneF1B, Dtype::F32);
+    let mk = |steps: u32, stage: ShardingStage, resume: bool| {
+        let mut c =
+            cfg("builtin:tiny-s2-mb2", 1, 2, 2, steps, stage, ScheduleKind::OneF1B, Dtype::F32);
+        c.checkpoint_dir = Some(dir.clone());
+        c.resume = resume;
+        c
+    };
+    let first = train(&mk(3, S1, false)).unwrap();
+    let second = train(&mk(3, S2, true)).unwrap();
+    assert_eq!(second.logs[0].step, 3);
+    let mut combined = losses(&first);
+    combined.extend(losses(&second));
+    assert_close(&losses(&straight), &combined, 1e-4, "1 -> 2 reshard resume");
+    // and back: the stage-2 checkpoint written above resumes as stage 1
+    let third = train(&mk(2, S1, true)).unwrap();
+    assert_eq!(third.logs[0].step, 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stage_mismatches_touching_0_or_3_rejected() {
+    let cases: &[(ShardingStage, ShardingStage)] =
+        &[(S0, S1), (S1, S0), (S3, S2), (S2, S3), (S3, S0), (S0, S3)];
+    for &(save, resume) in cases {
+        let dir = resume_dir(&format!("rej{}{}", save.index(), resume.index()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mk = |stage: ShardingStage, do_resume: bool| {
+            let mut c =
+                cfg("builtin:tiny-s2-mb2", 1, 2, 2, 2, stage, ScheduleKind::OneF1B, Dtype::F32);
+            c.checkpoint_dir = Some(dir.clone());
+            c.resume = do_resume;
+            c
+        };
+        train(&mk(save, false)).unwrap();
+        let err = train(&mk(resume, true)).unwrap_err().to_string();
+        assert!(
+            err.contains("sharding stage"),
+            "{} -> {}: wanted a stage-compat error, got {err}",
+            save.index(),
+            resume.index()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+// =========================================================================
+// ZeRO-3 residency: gather-use-drop keeps peak params per-layer
+// =========================================================================
+
+#[test]
+fn stage3_gather_residency_is_per_layer_not_per_model() {
+    // one worker hosts ALL 4 chunks (v = 4): without gather-use-drop the
+    // full-parameter residency would be the whole model; with it the
+    // measured high-water mark is bounded by 2 gathered chunks (current
+    // + one prefetched) — the mem model's transient term
+    let spec = BuiltinSpec::parse("builtin:tiny-s4-mb2").unwrap();
+    let max_stage = (0..spec.n_stages).map(|g| spec.stage_params(g)).max().unwrap() as u64;
+    let total = spec.total_params() as u64;
+    let r = run(
+        "builtin:tiny-s4-mb2",
+        1,
+        2,
+        4,
+        3,
+        S3,
+        ScheduleKind::Interleaved1F1B { v: 4 },
+        Dtype::F32,
+    );
+    let peak = r.zero3_peak_gathered_floats;
+    assert!(peak > 0, "stage 3 must gather");
+    assert!(
+        peak <= 2 * max_stage,
+        "peak {peak} exceeds the 2-layer gather-use-drop bound {}",
+        2 * max_stage
+    );
+    assert!(
+        peak < total,
+        "peak {peak} must stay below the full model's {total} params"
+    );
+    // stages 0-2 never run the on-demand gather machinery
+    let ddp = run("builtin:tiny-s4-mb2", 1, 2, 4, 2, S2, ScheduleKind::OneF1B, Dtype::F32);
+    assert_eq!(ddp.zero3_peak_gathered_floats, 0);
+    // and the optimizer shard really is 1/dp-sized: stage 3 at dp=2
+    // holds half the DDP state
+    let s0 = run("builtin:tiny-s4-mb2", 1, 2, 4, 2, S0, ScheduleKind::OneF1B, Dtype::F32);
+    assert!(
+        // slack covers the ceil() of odd per-chunk splits
+        2 * r.opt_state_bytes_per_rank <= s0.opt_state_bytes_per_rank + 64,
+        "sharded optimizer state {} vs DDP {}",
+        r.opt_state_bytes_per_rank,
+        s0.opt_state_bytes_per_rank
+    );
+}
+
+// =========================================================================
+// feature-gated zero-matrix sweep (CI: `cargo test --features zero-matrix`)
+// =========================================================================
+
+#[cfg(feature = "zero-matrix")]
+mod zero_matrix {
+    use super::*;
+
+    #[test]
+    fn zero_matrix_smokes() {
+        // stage ∈ {0,1,2,3} × precision ∈ {fp32, bf16} 5-step smokes on
+        // the full miniature grid (tp2 × pp2 × dp2), each pinned to its
+        // precision-matched DDP reference
+        for precision in [Dtype::F32, Dtype::Bf16] {
+            let reference =
+                run("builtin:tiny-s2-mb2", 2, 2, 2, 5, S0, ScheduleKind::OneF1B, precision);
+            assert!(reference.final_loss().is_finite());
+            for stage in [S1, S2, S3] {
+                let r = run("builtin:tiny-s2-mb2", 2, 2, 2, 5, stage, ScheduleKind::OneF1B, precision);
+                assert_eq!(r.world_size, 8);
+                assert_eq!(
+                    losses(&reference),
+                    losses(&r),
+                    "{} stage {stage} must match stage-0 bitwise",
+                    precision.name()
+                );
+            }
+        }
+    }
+}
