@@ -67,6 +67,17 @@ fn main() -> anyhow::Result<()> {
             }
         },
         overlap_grad_sync: !args.flag("no-overlap"),
+        // --nodes N packs the world onto N simulated Frontier nodes and
+        // runs the sharded-DP collectives hierarchically (two-tier);
+        // --grad-wire int8 quantizes the inter-node gradient hop
+        nodes: args.opt("nodes", 0u32).map_err(anyhow::Error::msg)?,
+        grad_wire: match args.get("grad-wire") {
+            Some(s) => Some(frontier_llm::precision::GradWire::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("--grad-wire must be fp32|bf16|int8, got {s:?}")
+            })?),
+            None => None,
+        },
+        zero3_prefetch: args.opt("zero3-prefetch", 1usize).map_err(anyhow::Error::msg)?,
         seed: args.opt("seed", 1234).map_err(anyhow::Error::msg)?,
         log_every: args.opt("log-every", 10).map_err(anyhow::Error::msg)?,
         checkpoint_dir: args.get("checkpoint").map(Into::into),
@@ -137,6 +148,25 @@ fn main() -> anyhow::Result<()> {
             report.dp_sync_raw_s() * 1e3,
             report.dp_sync_exposed_s * 1e3,
             report.dp_overlap_fraction() * 100.0
+        );
+    }
+    let tiered = report.dp_bucket_intra_bytes
+        + report.dp_bucket_inter_bytes
+        + report.dp_param_ag_intra_bytes
+        + report.dp_param_ag_inter_bytes
+        + report.pp_p2p_intra_bytes
+        + report.pp_p2p_inter_bytes;
+    if tiered > 0 {
+        println!(
+            "hier tiers        : grad sync {:.1} KB intra / {:.1} KB inter ({} wire), \
+             param AG {:.1} KB intra / {:.1} KB inter, pp p2p {:.1} KB intra / {:.1} KB inter",
+            report.dp_bucket_intra_bytes as f64 / 1e3,
+            report.dp_bucket_inter_bytes as f64 / 1e3,
+            cfg.effective_grad_wire().name(),
+            report.dp_param_ag_intra_bytes as f64 / 1e3,
+            report.dp_param_ag_inter_bytes as f64 / 1e3,
+            report.pp_p2p_intra_bytes as f64 / 1e3,
+            report.pp_p2p_inter_bytes as f64 / 1e3,
         );
     }
     println!("loss              : {first:.4} -> {tail_mean:.4} (tail-10 mean)");

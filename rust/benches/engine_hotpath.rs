@@ -20,11 +20,11 @@ use bench_util::{bench, header, record_meta, write_report};
 use std::sync::Arc;
 use std::thread;
 
-use frontier_llm::collectives::{chunk_bounds, Algo, Group};
+use frontier_llm::collectives::{chunk_bounds, Algo, Group, NodeMap};
 use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train_with_bundle, EngineConfig};
 use frontier_llm::optim::{clip_grad_norm, Adam, AdamConfig};
-use frontier_llm::precision::Dtype;
+use frontier_llm::precision::{Dtype, GradWire};
 use frontier_llm::runtime::kernels;
 use frontier_llm::runtime::{Bundle, BuiltinSpec, BuiltinStage, Runtime};
 use frontier_llm::schedule;
@@ -144,6 +144,88 @@ fn bench_bucketed(n_ranks: usize, len: usize, n_buckets: u64, label: &str) {
     });
 }
 
+/// Packed node placement for a bench group: first `ceil(n / nodes)`
+/// ranks on node 0, and so on — the same shape `EngineConfig::nodes`
+/// induces through `Machine`.
+fn packed(n: usize, nodes: usize) -> NodeMap {
+    let per = n.div_ceil(nodes);
+    let assignment: Vec<usize> = (0..n).map(|r| r / per).collect();
+    NodeMap::new(&assignment)
+}
+
+/// Two-tier partition-aligned reduce-scatter (ZeRO-2/3 grad sync over
+/// the hierarchical path), optionally on the int8 inter-node wire.
+fn bench_reduce_scatter_hier(
+    n_ranks: usize,
+    nodes: usize,
+    len: usize,
+    grad_wire: GradWire,
+    label: &str,
+) {
+    let group = Group::new_with_nodes(n_ranks, Some(packed(n_ranks, nodes)));
+    let mut round = 0u64;
+    bench(label, 2, 20, || {
+        round += 1;
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let bounds = chunk_bounds(len, g.len());
+                    let started: Vec<_> = bounds
+                        .iter()
+                        .enumerate()
+                        .map(|(owner, &(lo, hi))| {
+                            g.start_reduce_scatter_hier(
+                                rank,
+                                (round << 8) | owner as u64,
+                                vec![1.0f32; hi - lo],
+                                owner,
+                                Dtype::F32,
+                                grad_wire,
+                            )
+                        })
+                        .collect();
+                    for h in started {
+                        std::hint::black_box(h.wait());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+/// Two-tier primary parameter all-gather (ZeRO-3's hierarchical
+/// on-demand gather).
+fn bench_all_gather_hier(n_ranks: usize, nodes: usize, total: usize, label: &str) {
+    let group = Group::new_with_nodes(n_ranks, Some(packed(n_ranks, nodes)));
+    let mut round = 0u64;
+    bench(label, 2, 20, || {
+        round += 1;
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let (lo, hi) = chunk_bounds(total, g.len())[rank];
+                    let h = g.start_all_gather_hier(
+                        rank,
+                        round,
+                        Arc::new(vec![1.0f32; hi - lo]),
+                        total,
+                        Dtype::F32,
+                    );
+                    std::hint::black_box(h.wait()[0]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
 fn fill(seed: usize, len: usize) -> Vec<f32> {
     (0..len).map(|i| ((seed * 31 + i) as f32 * 0.05).sin()).collect()
 }
@@ -242,6 +324,23 @@ fn main() {
     bench_reduce_scatter(4, ar_len, &format!("collectives::reduce_scatter_4x{sz}"));
     bench_all_gather(4, ar_len, &format!("collectives::param_all_gather_4x{sz}"));
 
+    header("collectives: hierarchical (2-node) ZeRO primitives, flat counterparts above");
+    bench_reduce_scatter_hier(
+        4,
+        2,
+        ar_len,
+        GradWire::F32,
+        &format!("collectives::hier_reduce_scatter_4x{sz}_n2"),
+    );
+    bench_reduce_scatter_hier(
+        4,
+        2,
+        ar_len,
+        GradWire::Int8,
+        &format!("collectives::hier_reduce_scatter_4x{sz}_n2_int8"),
+    );
+    bench_all_gather_hier(4, 2, ar_len, &format!("collectives::hier_param_all_gather_4x{sz}_n2"));
+
     header("optimizer: Adam step + grad clip");
     let n = if smoke { 1 << 16 } else { 4 << 20 };
     let nm = if smoke { "64K" } else { "4M" };
@@ -329,6 +428,57 @@ fn main() {
             ..Default::default()
         };
         bench(label, 1, 5, || {
+            std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
+        });
+    }
+
+    header("end-to-end engine: hierarchical DP (2 nodes) + quantized grad wire");
+    for (label, stage, wire) in [
+        ("engine::train_dp2_zero2_hier_n2", ShardingStage::Gradients, None),
+        ("engine::train_dp2_zero3_hier_n2", ShardingStage::Parameters, None),
+        ("engine::train_dp2_zero2_hier_n2_int8", ShardingStage::Gradients, Some(GradWire::Int8)),
+    ] {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s4-mb2".into(),
+            dp: 2,
+            schedule: ScheduleKind::Interleaved1F1B { v: 2 },
+            microbatches: 4,
+            steps: 3,
+            zero_stage: stage,
+            grad_bucket_floats: 256,
+            nodes: 2,
+            grad_wire: wire,
+            ..Default::default()
+        };
+        bench(label, 1, 5, || {
+            std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
+        });
+    }
+
+    header("end-to-end engine: zero3 prefetch depth, residency vs exposure");
+    for prefetch in [0usize, 1, 3] {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s4-mb2".into(),
+            dp: 2,
+            schedule: ScheduleKind::Interleaved1F1B { v: 2 },
+            microbatches: 4,
+            steps: 3,
+            zero_stage: ShardingStage::Parameters,
+            grad_bucket_floats: 256,
+            zero3_prefetch: prefetch,
+            ..Default::default()
+        };
+        // the residency half of the trade-off: peak gathered floats at
+        // this lookahead depth (the (N+1)-chunk transient), recorded
+        // next to the timing so BENCH_engine.json carries the measured
+        // residency-vs-exposure line in one run
+        let peak = frontier_llm::coordinator::train(&cfg).unwrap().zero3_peak_gathered_floats;
+        record_meta(
+            &format!("zero3_prefetch{prefetch}_peak_gathered_floats"),
+            &peak.to_string(),
+        );
+        println!("  prefetch {prefetch}: peak gathered floats {peak}");
+        bench(&format!("engine::train_dp2_zero3_prefetch{prefetch}"), 1, 5, || {
             std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
         });
     }

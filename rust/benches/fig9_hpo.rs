@@ -49,6 +49,7 @@ fn main() {
             nnodes: 16,
             interleave: 1,
             bf16: true,
+            zero3_prefetch: 1,
         };
         std::hint::black_box(hpo::evaluate_point(&perf, &p));
     });

@@ -38,7 +38,101 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use crate::precision::{pack_bf16, unpack_bf16, Dtype};
+use crate::precision::{pack_bf16, unpack_bf16, Dtype, GradWire};
+use crate::topology::{GpuId, Machine};
+
+/// Node placement of a communicator's ranks: which Frontier node each
+/// group rank lives on, with nodes numbered in first-appearance order
+/// (so the map is invariant under global node renaming and works for DP
+/// groups that stride across nodes — the tp-innermost layouts).
+///
+/// The **representative** of a node is its lowest group rank; the
+/// hierarchical collectives route every inter-node exchange through
+/// representatives only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeMap {
+    /// `node[rank]` = node index of that group rank (first-appearance
+    /// numbering, dense `0..n_nodes`).
+    node: Vec<usize>,
+    n_nodes: usize,
+}
+
+impl NodeMap {
+    /// Build from an explicit per-rank node assignment (any labels;
+    /// renumbered densely in first-appearance order).
+    pub fn new(assignment: &[usize]) -> Self {
+        assert!(!assignment.is_empty(), "node map needs at least one rank");
+        let mut seen: Vec<usize> = Vec::new();
+        let node = assignment
+            .iter()
+            .map(|&a| match seen.iter().position(|&s| s == a) {
+                Some(i) => i,
+                None => {
+                    seen.push(a);
+                    seen.len() - 1
+                }
+            })
+            .collect();
+        Self { node, n_nodes: seen.len() }
+    }
+
+    /// Derive from the machine topology and the group's GPU (GCD) ids —
+    /// `Machine::node_of` per member, in group-rank order.
+    pub fn from_gpus(machine: &Machine, gpus: &[GpuId]) -> Self {
+        let assignment: Vec<usize> =
+            gpus.iter().map(|&g| machine.node_of(g) as usize).collect();
+        Self::new(&assignment)
+    }
+
+    /// All `n` ranks co-resident on one node (the flat/degenerate map).
+    pub fn flat(n: usize) -> Self {
+        assert!(n >= 1);
+        Self { node: vec![0; n], n_nodes: 1 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.node.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node.is_empty()
+    }
+
+    /// Number of distinct nodes the group spans.
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Node index of a group rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node[rank]
+    }
+
+    /// Group ranks resident on `node`, ascending.
+    pub fn members_of(&self, node: usize) -> Vec<usize> {
+        (0..self.node.len()).filter(|&r| self.node[r] == node).collect()
+    }
+
+    /// The node's representative: its lowest group rank.
+    pub fn representative(&self, node: usize) -> usize {
+        self.node
+            .iter()
+            .position(|&nd| nd == node)
+            .expect("node index out of range")
+    }
+
+    /// Is this rank its node's representative?
+    pub fn is_representative(&self, rank: usize) -> bool {
+        self.representative(self.node[rank]) == rank
+    }
+
+    /// Number of nodes holding more than one rank (the nodes whose
+    /// node-local gathers actually move intra-node bytes; single-member
+    /// nodes assemble immediately).
+    pub fn n_multi_nodes(&self) -> usize {
+        (0..self.n_nodes).filter(|&nd| self.node.iter().filter(|&&x| x == nd).count() > 1).count()
+    }
+}
 
 /// Zero-copy message payload: every mailbox hop and nonblocking-bucket
 /// deposit moves an `Arc`, never a deep copy.  Fan-out paths (a deposit
@@ -136,11 +230,17 @@ struct NbRound {
     len: usize,
     /// Wire dtype every rank of the round must agree on.
     wire: Dtype,
+    /// Hierarchical round marker: the inter-node grad wire (`None` for
+    /// flat rounds).  Every rank of one round must agree.
+    hier_wire: Option<GradWire>,
 }
 
 /// A communicator over `n` ranks (one per worker thread).
 pub struct Group {
     n: usize,
+    /// Node placement of the ranks (None = topology-blind legacy group;
+    /// hierarchical entry points then treat all ranks as co-resident).
+    nodes: Option<NodeMap>,
     state: Mutex<ExchangeState>,
     cv: Condvar,
     /// `mail[to][from]`: FIFO channel from `from` to `to`.
@@ -152,6 +252,11 @@ pub struct Group {
     /// parameter gathers), in their own tag namespace.
     ag: Mutex<HashMap<u64, AgRound>>,
     ag_cv: Condvar,
+    /// In-flight **node-local** all-gather rounds (ZeRO++-style secondary
+    /// parameter gathers), keyed by (node, tag) — per-node rounds among
+    /// that node's members only.
+    agn: Mutex<HashMap<(usize, u64), AgRound>>,
+    agn_cv: Condvar,
     pub bytes_moved: AtomicU64,
     pub rounds: AtomicU64,
     /// Nonblocking bucket rounds completed.
@@ -183,16 +288,56 @@ pub struct Group {
     /// Engine-maintained timing of *exposed* nonblocking grad-sync work
     /// (post-backward launches plus drain waits), nanoseconds.
     pub nb_exposed_ns: AtomicU64,
+    /// Per-tier split of the hierarchical bucket rounds' wire traffic:
+    /// bytes crossing **intra-node** links (each non-representative's
+    /// contribution up to its representative, plus each reduced payload
+    /// delivered back down), at the storage wire width.  Zero on flat
+    /// rounds — the legacy counters above advance identically either way,
+    /// so every pre-hierarchy pin is untouched.
+    pub nb_intra_bytes: AtomicU64,
+    /// Per-tier split of the hierarchical bucket rounds: bytes entering
+    /// the **inter-node** exchange — each node's combined partial crosses
+    /// the Slingshot tier exactly once, at the grad-wire width (`k ×
+    /// grad_wire.payload_bytes(len)` per round; zero when the group sits
+    /// on one node).
+    pub nb_inter_bytes: AtomicU64,
+    /// Intra-node bytes of hierarchical all-gather rounds: each
+    /// non-representative's shard up (storage wire) plus the assembled
+    /// buffer back down to each non-representative, plus the ZeRO++
+    /// node-local secondary gathers (one `total`-sized assembly per
+    /// multi-member node round).
+    pub ag_intra_bytes: AtomicU64,
+    /// Inter-node bytes of hierarchical all-gather rounds: each node's
+    /// combined shard crosses the Slingshot tier once — `total × wire`
+    /// per round when the group spans nodes (parameter gathers keep the
+    /// storage wire; the quantized grad wire is gradient-only).
+    pub ag_inter_bytes: AtomicU64,
+    /// Engine-maintained per-tier split of the pipeline p2p payload
+    /// (classified by the sender from the src/dest node placement).
+    pub pp_intra_bytes: AtomicU64,
+    /// Engine-maintained inter-node half of the pipeline p2p payload.
+    pub pp_inter_bytes: AtomicU64,
 }
 
 impl Group {
     pub fn new(n: usize) -> Arc<Self> {
+        Self::new_with_nodes(n, None)
+    }
+
+    /// Communicator with an explicit node placement — the topology-aware
+    /// constructor the engine uses when `--nodes` is set.  `nodes` must
+    /// cover exactly `n` ranks.
+    pub fn new_with_nodes(n: usize, nodes: Option<NodeMap>) -> Arc<Self> {
         assert!(n >= 1);
+        if let Some(map) = &nodes {
+            assert_eq!(map.len(), n, "node map must cover every rank");
+        }
         let mail = (0..n)
             .map(|_| (0..n).map(|_| Mailbox::new()).collect())
             .collect();
         Arc::new(Self {
             n,
+            nodes,
             state: Mutex::new(ExchangeState {
                 deposits: vec![None; n],
                 ..Default::default()
@@ -203,6 +348,8 @@ impl Group {
             nb_cv: Condvar::new(),
             ag: Mutex::new(HashMap::new()),
             ag_cv: Condvar::new(),
+            agn: Mutex::new(HashMap::new()),
+            agn_cv: Condvar::new(),
             bytes_moved: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
             nb_rounds: AtomicU64::new(0),
@@ -212,7 +359,24 @@ impl Group {
             pp_payload_bytes: AtomicU64::new(0),
             nb_hidden_ns: AtomicU64::new(0),
             nb_exposed_ns: AtomicU64::new(0),
+            nb_intra_bytes: AtomicU64::new(0),
+            nb_inter_bytes: AtomicU64::new(0),
+            ag_intra_bytes: AtomicU64::new(0),
+            ag_inter_bytes: AtomicU64::new(0),
+            pp_intra_bytes: AtomicU64::new(0),
+            pp_inter_bytes: AtomicU64::new(0),
         })
+    }
+
+    /// The node placement this group was built with, if any.
+    pub fn node_map(&self) -> Option<&NodeMap> {
+        self.nodes.as_ref()
+    }
+
+    /// Effective node map for the hierarchical entry points: the
+    /// configured placement, or everyone-on-one-node when absent.
+    fn hier_map(&self) -> NodeMap {
+        self.nodes.clone().unwrap_or_else(|| NodeMap::flat(self.n))
     }
 
     pub fn len(&self) -> usize {
@@ -522,6 +686,10 @@ impl Group {
             round.len,
             round.wire
         );
+        assert!(
+            round.hier_wire.is_none(),
+            "bucket {tag:#x}: flat deposit from rank {rank} into a hierarchical round"
+        );
         round.deposits[rank] = Some(deposit);
         round.arrived += 1;
         if round.arrived == self.n {
@@ -592,6 +760,248 @@ impl Group {
         }
     }
 
+    // -----------------------------------------------------------------
+    // Hierarchical (two-tier) collectives.  Phase 1 reduces intra-node
+    // among co-resident ranks, phase 2 runs the inter-node exchange over
+    // exactly one representative per node (the node's lowest group
+    // rank), phase 3 broadcasts/scatters back intra-node.  In this
+    // shared-memory simulator the three phases execute as one deposit
+    // round; what the hierarchy changes is (a) the per-tier byte
+    // accounting below, and (b) the value transformation of the
+    // inter-node hop: when the grad wire re-quantizes relative to the
+    // storage wire (int8 always; bf16 over f32 storage), each node's
+    // rank-order partial is round-tripped through the inter-node
+    // encoding before the node-order fold.  When it does not — fp32 over
+    // fp32, bf16 over bf16, or a single node — the two-tier fold
+    // collapses to exactly the flat rank-order sum, **bitwise** (f32
+    // addition is non-associative, so this is a design invariant, not an
+    // accident: the value-preserving inter hop lets the fold stay flat).
+    //
+    // Per-tier byte conventions (mirrored EXACTLY by the analytic
+    // `perf::hier_*` contract functions):
+    // * intra = payloads crossing intra-node links at the storage wire
+    //   width: each non-representative's contribution up, plus each
+    //   result payload delivered back down to a rank that needs it
+    //   (all-reduce: all `n-k` non-representatives; reduce-scatter: the
+    //   owner iff it is not a representative);
+    // * inter = each node's combined partial entering the inter-node
+    //   exchange once, at the grad-wire width — `k ×
+    //   grad_wire.payload_bytes(len)`; zero when the group spans one
+    //   node.
+    // -----------------------------------------------------------------
+
+    /// Hierarchical [`Group::start_all_reduce_dtype`]: two-tier fold
+    /// with an optional quantized inter-node grad wire.  Bitwise equal
+    /// to the flat round whenever `grad_wire` does not re-quantize over
+    /// `wire` (property-tested in `tests/props.rs`).
+    pub fn start_all_reduce_hier(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        data: Vec<f32>,
+        wire: Dtype,
+        grad_wire: GradWire,
+    ) -> ReduceHandle {
+        let map = self.hier_map();
+        let (n, k) = (self.n as u64, map.n_nodes() as u64);
+        self.start_hier_round(rank, tag, data, wire, grad_wire, 2 * (n - k))
+    }
+
+    /// Hierarchical [`Group::start_reduce_scatter_dtype`]: the intra
+    /// tier reduces each node's contributions to its representative and
+    /// delivers the reduced span to `owner` only, so the down-phase
+    /// costs one payload iff the owner is not itself a representative.
+    pub fn start_reduce_scatter_hier(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        data: Vec<f32>,
+        owner: usize,
+        wire: Dtype,
+        grad_wire: GradWire,
+    ) -> ScatterHandle {
+        assert!(owner < self.n, "bucket owner {owner} out of range");
+        let map = self.hier_map();
+        let (n, k) = (self.n as u64, map.n_nodes() as u64);
+        let down = u64::from(!map.is_representative(owner));
+        ScatterHandle {
+            owner: rank == owner,
+            inner: self.start_hier_round(rank, tag, data, wire, grad_wire, (n - k) + down),
+        }
+    }
+
+    /// Shared deposit/fold machinery of the hierarchical bucket rounds.
+    /// `intra_payloads` is the round's tier-1/3 payload count (each of
+    /// size `len × wire`), fixed by the caller's collective shape.
+    fn start_hier_round(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        mut data: Vec<f32>,
+        wire: Dtype,
+        grad_wire: GradWire,
+        intra_payloads: u64,
+    ) -> ReduceHandle {
+        assert!(rank < self.n);
+        let len = data.len();
+        if self.n == 1 {
+            wire.quantize_slice(&mut data);
+            return ReduceHandle { group: self.clone(), tag, immediate: Some(data) };
+        }
+        let map = self.hier_map();
+        let k = map.n_nodes();
+        let deposit: Payload = match wire {
+            Dtype::F32 => Arc::new(data),
+            Dtype::Bf16 => Arc::new(pack_bf16(&data)),
+        };
+        self.bytes_moved.fetch_add(4 * deposit.len() as u64, Ordering::Relaxed);
+        let mut nb = self.nb.lock().unwrap();
+        let round = nb.entry(tag).or_insert_with(|| NbRound {
+            deposits: vec![None; self.n],
+            len,
+            wire,
+            hier_wire: Some(grad_wire),
+            ..Default::default()
+        });
+        assert!(round.result.is_none(), "bucket tag {tag:#x} reused before fully drained");
+        assert!(round.deposits[rank].is_none(), "rank {rank} double deposit on bucket {tag:#x}");
+        assert!(
+            round.len == len && round.wire == wire && round.hier_wire == Some(grad_wire),
+            "hier bucket {tag:#x}: rank {rank} deposited {len}×{:?}/{:?} into a {}×{:?}/{:?} round",
+            wire,
+            grad_wire,
+            round.len,
+            round.wire,
+            round.hier_wire
+        );
+        round.deposits[rank] = Some(deposit);
+        round.arrived += 1;
+        if round.arrived == self.n {
+            let deps: Vec<Payload> = round
+                .deposits
+                .iter()
+                .map(|d| d.as_ref().expect("deposited").clone())
+                .collect();
+            drop(nb);
+            let sum = hier_fold(&deps, len, wire, grad_wire, &map);
+            let mut nb = self.nb.lock().unwrap();
+            nb.get_mut(&tag).expect("in-flight round").result = Some(Arc::new(sum));
+            self.nb_rounds.fetch_add(1, Ordering::Relaxed);
+            self.nb_payload_bytes
+                .fetch_add(wire.bytes() * len as u64, Ordering::Relaxed);
+            self.nb_intra_bytes
+                .fetch_add(wire.bytes() * len as u64 * intra_payloads, Ordering::Relaxed);
+            if k > 1 {
+                self.nb_inter_bytes
+                    .fetch_add(k as u64 * grad_wire.payload_bytes(len as u64), Ordering::Relaxed);
+            }
+            self.nb_cv.notify_all();
+        }
+        ReduceHandle { group: self.clone(), tag, immediate: None }
+    }
+
+    /// Hierarchical [`Group::start_all_gather_shared`] (the ZeRO-3
+    /// **primary** parameter gather): assembly is pure placement, so the
+    /// result is bit-identical to the flat gather; what changes is the
+    /// per-tier accounting — non-representative shards ride the intra
+    /// tier up, each node's combined shard crosses the inter tier once
+    /// (`total × wire` summed over nodes), and the assembled buffer
+    /// rides back down to each non-representative.  Parameter gathers
+    /// keep the storage wire: the quantized grad wire is gradient-only.
+    pub fn start_all_gather_hier(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        shard: Payload,
+        total: usize,
+        wire: Dtype,
+    ) -> GatherHandle {
+        self.start_all_gather_inner(rank, tag, shard, total, wire, true)
+    }
+
+    /// Node-local **secondary** all-gather (ZeRO++-style hpZ): a round
+    /// among this rank's node members only, assembling the full
+    /// `total`-element buffer from the node's secondary partition
+    /// (`chunk_bounds(total, node_size)` spans, member-position order).
+    /// All traffic is intra-node (`total × wire` per multi-member node
+    /// round; a lone member's shard IS the buffer — immediate, free).
+    /// Tags live in a per-node namespace: co-resident ranks must agree,
+    /// different nodes never collide.
+    pub fn start_all_gather_node(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        shard: Payload,
+        total: usize,
+        wire: Dtype,
+    ) -> NodeGatherHandle {
+        assert!(rank < self.n);
+        let map = self.hier_map();
+        let node = map.node_of(rank);
+        let members = map.members_of(node);
+        let l = members.len();
+        let pos = members.iter().position(|&m| m == rank).expect("member");
+        let bounds = chunk_bounds(total, l);
+        let (lo, hi) = bounds[pos];
+        assert_eq!(shard.len(), hi - lo, "secondary shard size mismatch for rank {rank}");
+        if l == 1 {
+            return NodeGatherHandle {
+                group: self.clone(),
+                key: (node, tag),
+                participants: 1,
+                immediate: Some(shard),
+            };
+        }
+        let deposit: Payload = match wire {
+            Dtype::F32 => shard,
+            Dtype::Bf16 => Arc::new(pack_bf16(&shard)),
+        };
+        self.bytes_moved.fetch_add(4 * deposit.len() as u64, Ordering::Relaxed);
+        let key = (node, tag);
+        let mut agn = self.agn.lock().unwrap();
+        let round = agn.entry(key).or_insert_with(|| AgRound {
+            deposits: vec![None; l],
+            total,
+            wire,
+            ..Default::default()
+        });
+        assert!(round.result.is_none(), "node gather tag {tag:#x} reused before fully drained");
+        assert!(
+            round.deposits[pos].is_none(),
+            "rank {rank} double deposit on node gather {tag:#x}"
+        );
+        assert!(
+            round.total == total && round.wire == wire,
+            "node gather {tag:#x}: rank {rank} deposited into a {}×{:?} round as {total}×{wire:?}",
+            round.total,
+            round.wire
+        );
+        round.deposits[pos] = Some(deposit);
+        round.arrived += 1;
+        if round.arrived == l {
+            let deps: Vec<Payload> = round
+                .deposits
+                .iter()
+                .map(|d| d.as_ref().expect("deposited").clone())
+                .collect();
+            drop(agn);
+            let mut out = vec![0.0f32; total];
+            for (p, contrib) in deps.iter().enumerate() {
+                let (lo, hi) = bounds[p];
+                match wire {
+                    Dtype::F32 => out[lo..hi].copy_from_slice(contrib),
+                    Dtype::Bf16 => out[lo..hi].copy_from_slice(&unpack_bf16(contrib, hi - lo)),
+                }
+            }
+            let mut agn = self.agn.lock().unwrap();
+            agn.get_mut(&key).expect("in-flight node gather").result = Some(Arc::new(out));
+            self.ag_intra_bytes
+                .fetch_add(wire.bytes() * total as u64, Ordering::Relaxed);
+            self.agn_cv.notify_all();
+        }
+        NodeGatherHandle { group: self.clone(), key, participants: l, immediate: None }
+    }
+
     /// Nonblocking all-gather, deposit phase (ZeRO-3's prefetchable
     /// on-demand parameter gather).  `shard` must be this rank's
     /// [`chunk_bounds`] slice of a `total`-element buffer; deposits are
@@ -625,6 +1035,18 @@ impl Group {
         shard: Payload,
         total: usize,
         wire: Dtype,
+    ) -> GatherHandle {
+        self.start_all_gather_inner(rank, tag, shard, total, wire, false)
+    }
+
+    fn start_all_gather_inner(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        shard: Payload,
+        total: usize,
+        wire: Dtype,
+        hier: bool,
     ) -> GatherHandle {
         assert!(rank < self.n);
         let bounds = chunk_bounds(total, self.n);
@@ -674,6 +1096,23 @@ impl Group {
             ag.get_mut(&tag).expect("in-flight gather").result = Some(Arc::new(out));
             self.ag_payload_bytes
                 .fetch_add(wire.bytes() * total as u64, Ordering::Relaxed);
+            if hier {
+                // intra: non-representative shards up + full buffer back
+                // down to each non-representative; inter: each node's
+                // combined shard crosses once (Σ node shards = total)
+                let map = self.hier_map();
+                let (n, k) = (self.n as u64, map.n_nodes() as u64);
+                let up: u64 = (0..self.n)
+                    .filter(|&r| !map.is_representative(r))
+                    .map(|r| (bounds[r].1 - bounds[r].0) as u64)
+                    .sum();
+                self.ag_intra_bytes
+                    .fetch_add(wire.bytes() * (up + (n - k) * total as u64), Ordering::Relaxed);
+                if k > 1 {
+                    self.ag_inter_bytes
+                        .fetch_add(wire.bytes() * total as u64, Ordering::Relaxed);
+                }
+            }
             self.ag_cv.notify_all();
         }
         GatherHandle { group: self.clone(), tag, immediate: None }
@@ -804,6 +1243,100 @@ impl GatherHandle {
             ag = self.group.ag_cv.wait(ag).unwrap();
         }
     }
+}
+
+/// Handle on one in-flight node-local secondary all-gather (see
+/// [`Group::start_all_gather_node`]).
+#[must_use = "an unredeemed node gather deadlocks the node's other ranks"]
+pub struct NodeGatherHandle {
+    group: Arc<Group>,
+    key: (usize, u64),
+    participants: usize,
+    /// Single-member nodes gather to the deposit itself.
+    immediate: Option<Payload>,
+}
+
+impl NodeGatherHandle {
+    /// Block until every node member has deposited, then return an owned
+    /// copy of the assembled buffer.
+    pub fn wait(self) -> Vec<f32> {
+        match Arc::try_unwrap(self.wait_shared()) {
+            Ok(v) => v,
+            Err(shared) => shared.as_slice().to_vec(),
+        }
+    }
+
+    /// Zero-copy redeem of the node-assembled buffer; retires the round
+    /// (freeing the tag within the node) once every member has redeemed.
+    pub fn wait_shared(self) -> Payload {
+        if let Some(data) = self.immediate {
+            return data;
+        }
+        let n = self.participants;
+        let mut agn = self.group.agn.lock().unwrap();
+        loop {
+            let round = agn.get_mut(&self.key).expect("node gather round vanished");
+            if round.result.is_some() {
+                round.taken += 1;
+                let result = round.result.as_ref().expect("result set").clone();
+                if round.taken == n {
+                    agn.remove(&self.key);
+                }
+                return result;
+            }
+            agn = self.group.agn_cv.wait(agn).unwrap();
+        }
+    }
+}
+
+/// The hierarchical rounds' fold.  Value-preserving inter hops (and
+/// single-node maps) collapse to the flat global rank-order sum —
+/// bitwise identical to [`Group::start_all_reduce_dtype`]'s fold.  A
+/// re-quantizing grad wire folds each node's members in rank order,
+/// round-trips the node partial through the inter-node encoding, then
+/// folds the partials in node-index order — deterministic at any deposit
+/// arrival order.
+fn hier_fold(
+    deps: &[Payload],
+    len: usize,
+    wire: Dtype,
+    grad_wire: GradWire,
+    map: &NodeMap,
+) -> Vec<f32> {
+    let add = |sum: &mut [f32], contrib: &Payload| match wire {
+        Dtype::F32 => {
+            debug_assert_eq!(contrib.len(), len);
+            for (x, &c) in sum.iter_mut().zip(contrib.iter()) {
+                *x += c;
+            }
+        }
+        Dtype::Bf16 => {
+            let unpacked = unpack_bf16(contrib, len);
+            for (x, &c) in sum.iter_mut().zip(unpacked.iter()) {
+                *x += c;
+            }
+        }
+    };
+    let k = map.n_nodes();
+    if k == 1 || !grad_wire.requantizes_over(wire) {
+        let mut sum = vec![0.0f32; len];
+        for contrib in deps {
+            add(&mut sum, contrib);
+        }
+        return sum;
+    }
+    let mut total = vec![0.0f32; len];
+    for node in 0..k {
+        let mut partial = vec![0.0f32; len];
+        for r in map.members_of(node) {
+            add(&mut partial, &deps[r]);
+        }
+        grad_wire.roundtrip_slice(&mut partial);
+        for (x, &p) in total.iter_mut().zip(partial.iter()) {
+            *x += p;
+        }
+    }
+    total
 }
 
 /// A collective communicator over a *subset* of a parent [`Group`]'s
@@ -1739,5 +2272,294 @@ mod tests {
         }
         // one f32 round (4·len) + one bf16 round (2·len)
         assert_eq!(group.ag_payload_bytes.load(Ordering::Relaxed), 6 * len as u64);
+    }
+
+    // ------------------------- hierarchical -------------------------
+
+    fn run_ranks_nodes<F>(n: usize, map: NodeMap, f: F) -> Arc<Group>
+    where
+        F: Fn(usize, Arc<Group>) + Send + Sync + 'static,
+    {
+        let group = Group::new_with_nodes(n, Some(map));
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let g = group.clone();
+                let f = f.clone();
+                thread::spawn(move || f(r, g))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        group
+    }
+
+    #[test]
+    fn node_map_first_appearance_numbering() {
+        let m = NodeMap::new(&[5, 5, 2, 5, 2]);
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.n_nodes(), 2);
+        assert_eq!((0..5).map(|r| m.node_of(r)).collect::<Vec<_>>(), vec![0, 0, 1, 0, 1]);
+        assert_eq!(m.members_of(0), vec![0, 1, 3]);
+        assert_eq!(m.members_of(1), vec![2, 4]);
+        assert_eq!(m.representative(0), 0);
+        assert_eq!(m.representative(1), 2);
+        assert!(m.is_representative(0) && m.is_representative(2));
+        assert!(!m.is_representative(1) && !m.is_representative(3) && !m.is_representative(4));
+        assert_eq!(m.n_multi_nodes(), 2);
+        // strided assignment (the tp-innermost DP group shape)
+        let s = NodeMap::new(&[0, 1, 0, 1]);
+        assert_eq!(s.members_of(0), vec![0, 2]);
+        assert_eq!(s.members_of(1), vec![1, 3]);
+        assert_eq!(s.n_multi_nodes(), 2);
+        let flat = NodeMap::flat(4);
+        assert_eq!(flat.n_nodes(), 1);
+        assert_eq!(flat.n_multi_nodes(), 1);
+        let machine = Machine::new(2);
+        let g = NodeMap::from_gpus(&machine, &[2, 10, 3, 11]);
+        assert_eq!((0..4).map(|r| g.node_of(r)).collect::<Vec<_>>(), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn hier_allreduce_bitwise_flat_when_value_preserving() {
+        // fp32 wire over fp32 storage never re-quantizes: the two-tier
+        // fold must equal the flat rank-order sum BITWISE
+        for (n, nodes) in [(4usize, vec![0, 0, 1, 1]), (6, vec![0, 1, 2, 0, 1, 2]), (3, vec![0, 1, 2])]
+        {
+            let len = 41;
+            let want = expected_sum(n, len);
+            let g = run_ranks_nodes(n, NodeMap::new(&nodes), move |rank, g| {
+                let h =
+                    g.start_all_reduce_hier(rank, 0xA1, test_data(rank, len), Dtype::F32, GradWire::F32);
+                let got = h.wait();
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} i={i}");
+                }
+            });
+            // legacy counters advance exactly as a flat round would
+            assert_eq!(g.nb_rounds.load(Ordering::Relaxed), 1);
+            assert_eq!(g.nb_payload_bytes.load(Ordering::Relaxed), 4 * len as u64);
+        }
+    }
+
+    #[test]
+    fn hier_bf16_over_bf16_matches_flat_grid_sum() {
+        // bf16 grad wire over bf16 storage: value-preserving → the flat
+        // quantized rank-order sum, bitwise
+        let n = 4;
+        let len = 37;
+        let want = quantized_rank_order_sum(n, len);
+        run_ranks_nodes(n, NodeMap::new(&[0, 0, 1, 1]), move |rank, g| {
+            let h = g.start_all_reduce_hier(rank, 7, test_data(rank, len), Dtype::Bf16, GradWire::Bf16);
+            let got = h.wait();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn hier_tier_counters_allreduce() {
+        // n=4 over k=2 nodes, fp32 storage, int8 grad wire:
+        // intra = 2·(n-k) payloads × 4·len; inter = k × int8(len)
+        let n = 4usize;
+        let len = 256usize;
+        let g = run_ranks_nodes(n, NodeMap::new(&[0, 0, 1, 1]), move |rank, g| {
+            g.start_all_reduce_hier(rank, 1, vec![1.0f32; len], Dtype::F32, GradWire::Int8)
+                .wait();
+        });
+        assert_eq!(
+            g.nb_intra_bytes.load(Ordering::Relaxed),
+            2 * 2 * 4 * len as u64
+        );
+        assert_eq!(
+            g.nb_inter_bytes.load(Ordering::Relaxed),
+            2 * GradWire::Int8.payload_bytes(len as u64)
+        );
+        // int8 inter ≤ 1/4 + scale overhead of the fp32 wire
+        assert!(
+            g.nb_inter_bytes.load(Ordering::Relaxed) as f64
+                <= 2.0 * 4.0 * len as f64 * (0.25 + 1.0 / 128.0)
+        );
+    }
+
+    #[test]
+    fn hier_single_node_is_all_intra_and_bitwise_flat_even_at_int8() {
+        // one node → no inter hop → the int8 wire never engages: bitwise
+        // flat, inter counter zero
+        let n = 3;
+        let len = 29;
+        let want = expected_sum(n, len);
+        let g = run_ranks_nodes(n, NodeMap::flat(n), move |rank, g| {
+            let h = g.start_all_reduce_hier(rank, 9, test_data(rank, len), Dtype::F32, GradWire::Int8);
+            let got = h.wait();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "i={i}");
+            }
+        });
+        assert_eq!(g.nb_inter_bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(g.nb_intra_bytes.load(Ordering::Relaxed), 2 * 2 * 4 * len as u64);
+    }
+
+    #[test]
+    fn hier_int8_fold_matches_mirror_and_is_deterministic() {
+        // node partials in rank order, int8 round-trip per partial, fold
+        // in node order — mirrored serially here
+        let n = 5usize;
+        let len = 200usize;
+        let nodes = vec![0usize, 1, 0, 1, 0];
+        let map = NodeMap::new(&nodes);
+        let mut want = vec![0.0f32; len];
+        for node in 0..map.n_nodes() {
+            let mut partial = vec![0.0f32; len];
+            for r in map.members_of(node) {
+                for (x, v) in partial.iter_mut().zip(test_data(r, len)) {
+                    *x += v;
+                }
+            }
+            GradWire::Int8.roundtrip_slice(&mut partial);
+            for (x, &p) in want.iter_mut().zip(partial.iter()) {
+                *x += p;
+            }
+        }
+        for trial in 0..3 {
+            let want = want.clone();
+            let nodes = nodes.clone();
+            run_ranks_nodes(n, NodeMap::new(&nodes), move |rank, g| {
+                // stagger deposit order across trials/ranks
+                if (rank + trial) % 2 == 0 {
+                    std::thread::yield_now();
+                }
+                let h =
+                    g.start_all_reduce_hier(rank, 3, test_data(rank, len), Dtype::F32, GradWire::Int8);
+                let got = h.wait();
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "trial={trial} i={i}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn hier_reduce_scatter_counters_depend_on_owner_placement() {
+        // owner 0 is node 0's representative (no down payload); owner 1
+        // is not (one down payload)
+        let n = 4usize;
+        let len = 64usize;
+        for (owner, extra_down) in [(0usize, 0u64), (1, 1)] {
+            let g = run_ranks_nodes(n, NodeMap::new(&[0, 0, 1, 1]), move |rank, g| {
+                let h = g.start_reduce_scatter_hier(
+                    rank,
+                    5,
+                    vec![1.0f32; len],
+                    owner,
+                    Dtype::F32,
+                    GradWire::Bf16,
+                );
+                let got = h.wait();
+                assert_eq!(got.is_some(), rank == owner);
+            });
+            assert_eq!(
+                g.nb_intra_bytes.load(Ordering::Relaxed),
+                (2 + extra_down) * 4 * len as u64,
+                "owner={owner}"
+            );
+            assert_eq!(
+                g.nb_inter_bytes.load(Ordering::Relaxed),
+                2 * GradWire::Bf16.payload_bytes(len as u64)
+            );
+        }
+    }
+
+    #[test]
+    fn hier_rs_value_preserving_matches_flat_shards_bitwise() {
+        let n = 4usize;
+        let len = 39usize;
+        let want = expected_sum(n, len);
+        run_ranks_nodes(n, NodeMap::new(&[0, 1, 0, 1]), move |rank, g| {
+            let bounds = chunk_bounds(len, n);
+            let data = test_data(rank, len);
+            let handles: Vec<_> = bounds
+                .iter()
+                .enumerate()
+                .map(|(owner, &(lo, hi))| {
+                    (
+                        owner,
+                        lo,
+                        g.start_reduce_scatter_hier(
+                            rank,
+                            0xD0 + owner as u64,
+                            data[lo..hi].to_vec(),
+                            owner,
+                            Dtype::F32,
+                            GradWire::F32,
+                        ),
+                    )
+                })
+                .collect();
+            for (owner, lo, h) in handles {
+                if let Some(shard) = h.wait() {
+                    assert_eq!(owner, rank);
+                    for (i, v) in shard.iter().enumerate() {
+                        assert_eq!(v.to_bits(), want[lo + i].to_bits(), "owner={owner} i={i}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn hier_all_gather_assembles_and_splits_tiers() {
+        // n=3 over nodes [0,0,1]: rank 1 is the only non-representative;
+        // intra = span(1)·w up + (n-k)·total·w down; inter = total·w
+        let n = 3usize;
+        let total = 31usize;
+        let g = run_ranks_nodes(n, NodeMap::new(&[0, 0, 1]), move |rank, g| {
+            let bounds = chunk_bounds(total, n);
+            let (lo, hi) = bounds[rank];
+            let shard: Vec<f32> = test_data(rank, hi - lo);
+            let h = g.start_all_gather_hier(rank, 2, Arc::new(shard), total, Dtype::F32);
+            let full = h.wait();
+            for r in 0..n {
+                let (lo, hi) = bounds[r];
+                assert_eq!(&full[lo..hi], test_data(r, hi - lo).as_slice(), "span {r}");
+            }
+        });
+        let bounds = chunk_bounds(total, n);
+        let span1 = (bounds[1].1 - bounds[1].0) as u64;
+        assert_eq!(
+            g.ag_intra_bytes.load(Ordering::Relaxed),
+            4 * (span1 + total as u64)
+        );
+        assert_eq!(g.ag_inter_bytes.load(Ordering::Relaxed), 4 * total as u64);
+        // legacy logical counter advances exactly like a flat gather
+        assert_eq!(g.ag_payload_bytes.load(Ordering::Relaxed), 4 * total as u64);
+    }
+
+    #[test]
+    fn node_gather_assembles_from_secondary_shards() {
+        // nodes [0,0,1]: ranks 0/1 hold halves of the node-0 secondary
+        // partition; rank 2 is alone, so its shard IS the buffer
+        let n = 3usize;
+        let total = 20usize;
+        let truth: Vec<f32> = (0..total).map(|i| i as f32 * 0.5).collect();
+        let truth2 = truth.clone();
+        let g = run_ranks_nodes(n, NodeMap::new(&[0, 0, 1]), move |rank, g| {
+            let map = g.node_map().unwrap().clone();
+            let members = map.members_of(map.node_of(rank));
+            let pos = members.iter().position(|&m| m == rank).unwrap();
+            let bounds = chunk_bounds(total, members.len());
+            let (lo, hi) = bounds[pos];
+            let shard: Payload = Arc::new(truth2[lo..hi].to_vec());
+            let h = g.start_all_gather_node(rank, 4, shard, total, Dtype::F32);
+            let full = h.wait();
+            assert_eq!(full, truth2, "rank {rank}");
+        });
+        // one multi-member node round (node 0); node 1 was immediate
+        assert_eq!(g.ag_intra_bytes.load(Ordering::Relaxed), 4 * total as u64);
+        assert_eq!(g.ag_inter_bytes.load(Ordering::Relaxed), 0);
+        // secondary gathers do NOT advance the primary logical counter
+        assert_eq!(g.ag_payload_bytes.load(Ordering::Relaxed), 0);
     }
 }

@@ -161,6 +161,45 @@ impl CommModel {
         }
     }
 
+    /// Price a two-tier hierarchical collective from its per-tier byte
+    /// volumes (the engine's `*_intra_bytes` / `*_inter_bytes` counters,
+    /// or the matching `perf::hier_*` analytic terms).  The intra tier
+    /// rides the slowest `Machine::link` between co-resident members of
+    /// the group (`IntraNode` when no two members share a node); the
+    /// inter tier rides Slingshot.  A tier with zero bytes never
+    /// launches and costs nothing — which is exactly how the int8 grad
+    /// wire's ~4x inter-byte cut turns into wall-clock on multi-node DP
+    /// groups.
+    pub fn tiered_time(&self, group: &[GpuId], intra_bytes: u64, inter_bytes: u64) -> f64 {
+        let mut t = 0.0;
+        if intra_bytes > 0 {
+            let mut link = LinkKind::IntraCard;
+            let mut co_resident = false;
+            for (i, &a) in group.iter().enumerate() {
+                for &b in &group[i + 1..] {
+                    if self.machine.node_of(a) == self.machine.node_of(b) {
+                        co_resident = true;
+                        let l = self.machine.link(a, b);
+                        if l < link {
+                            link = l;
+                        }
+                    }
+                }
+            }
+            let link = if co_resident { link } else { LinkKind::IntraNode };
+            t += self.launch_overhead
+                + link.latency()
+                + intra_bytes as f64 / (link.bandwidth() * self.ring_efficiency);
+        }
+        if inter_bytes > 0 {
+            let link = LinkKind::InterNode;
+            t += self.launch_overhead
+                + link.latency()
+                + inter_bytes as f64 / (link.bandwidth() * self.ring_efficiency);
+        }
+        t
+    }
+
     fn worst_link(&self, group: &[GpuId]) -> LinkKind {
         let mut worst = LinkKind::IntraCard;
         for (i, &a) in group.iter().enumerate() {
@@ -251,6 +290,28 @@ mod tests {
         let flat = c.ring_allreduce(&g, bytes);
         let hier = c.hierarchical_allreduce(&g, bytes);
         assert!(hier < flat, "hier={hier} flat={flat}");
+    }
+
+    #[test]
+    fn tiered_time_prices_tiers_by_link_class() {
+        let c = model(2);
+        // 4 ranks on 2 nodes, 2 per node (packed): gpus 0,1 | 8,9
+        let g = [0u32, 1, 8, 9];
+        let bytes = 64 << 20;
+        // inter bytes are ~4x more expensive per byte than intra bytes
+        let intra_only = c.tiered_time(&g, bytes, 0);
+        let inter_only = c.tiered_time(&g, 0, bytes);
+        assert!(inter_only > 3.0 * intra_only, "inter={inter_only} intra={intra_only}");
+        // zero-byte tiers never launch
+        assert_eq!(c.tiered_time(&g, 0, 0), 0.0);
+        // shrinking the inter tier (the int8 wire) shrinks the total
+        let fp32 = c.tiered_time(&g, bytes, bytes);
+        let int8 = c.tiered_time(&g, bytes, bytes / 4);
+        assert!(int8 < fp32);
+        // a one-rank-per-node group prices its intra tier on the default
+        // in-node fabric rather than panicking on an empty link set
+        let spread = c.tiered_time(&[0, 8], bytes, 0);
+        assert!(spread > 0.0);
     }
 
     #[test]

@@ -96,6 +96,12 @@ pub struct ParallelConfig {
     pub checkpoint_activations: bool,
     pub precision: Precision,
     pub schedule: ScheduleKind,
+    /// ZeRO-3 gather lookahead depth: how many future parameter chunks
+    /// the engine keeps in flight beyond the one in use (§II.D's
+    /// gather-use-drop lifecycle).  The transient residency bound is
+    /// `(zero3_prefetch + 1)` chunks; 0 means fully synchronous gathers.
+    /// Ignored unless `zero_stage` shards parameters.
+    pub zero3_prefetch: u32,
 }
 
 impl Default for ParallelConfig {
@@ -111,6 +117,7 @@ impl Default for ParallelConfig {
             checkpoint_activations: true,
             precision: Precision::Fp16,
             schedule: ScheduleKind::OneF1B,
+            zero3_prefetch: 1,
         }
     }
 }
@@ -229,6 +236,11 @@ impl ParallelConfig {
     }
     pub fn with_flash(mut self, f: bool) -> Self {
         self.flash_attention = f;
+        self
+    }
+    /// ZeRO-3 gather lookahead depth (`(n + 1)`-chunk transient residency).
+    pub fn with_zero3_prefetch(mut self, n: u32) -> Self {
+        self.zero3_prefetch = n;
         self
     }
 }

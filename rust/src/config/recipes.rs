@@ -47,6 +47,7 @@ pub fn recipe_175b() -> Recipe {
             checkpoint_activations: true,
             precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
+            zero3_prefetch: 1,
         },
     }
 }
@@ -67,6 +68,7 @@ pub fn recipe_1t() -> Recipe {
             checkpoint_activations: true,
             precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
+            zero3_prefetch: 1,
         },
     }
 }
@@ -87,6 +89,7 @@ pub fn recipe_22b() -> Recipe {
             checkpoint_activations: true,
             precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
+            zero3_prefetch: 1,
         },
     }
 }

@@ -58,13 +58,14 @@ use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::collectives::{Algo, Group, SubGroup};
+use crate::collectives::{Algo, Group, NodeMap, SubGroup};
 use crate::config::ScheduleKind;
 use crate::metrics::StepTimer;
 use crate::optim::{AdamConfig, LrSchedule};
-use crate::precision::{CastPolicy, Dtype};
+use crate::precision::{CastPolicy, Dtype, GradWire};
 use crate::runtime::{Bundle, BuiltinSpec, Runtime, StageBackend};
 use crate::schedule;
+use crate::topology::{packed_gpu_of, Machine, GPUS_PER_NODE};
 use crate::zero::ShardingStage;
 
 /// Engine configuration for one training run.
@@ -123,6 +124,29 @@ pub struct EngineConfig {
     /// Consecutive overflow-free steps before the scale doubles
     /// (0 = static scale, the default).
     pub loss_scale_growth_interval: u32,
+    /// Number of Frontier nodes the world is packed onto (CLI `--nodes`).
+    /// `0` keeps the legacy flat collectives (no topology attached).
+    /// With `nodes >= 1` ranks take the packed placement
+    /// (`topology::packed_gpu_of`), DP groups get node maps derived from
+    /// their members' GCD ids, and every sharded collective runs the
+    /// hierarchical two-tier path — bitwise-identical to flat under a
+    /// value-preserving grad wire, with per-tier byte counters split into
+    /// `*_intra_bytes` / `*_inter_bytes`.
+    pub nodes: u32,
+    /// Wire format of the *inter-node* hop of hierarchical gradient
+    /// collectives (CLI `--grad-wire {fp32,bf16,int8}`).  `None` derives
+    /// the wire from `precision` (fp32 -> fp32, bf16 -> bf16), which
+    /// never re-quantizes and so keeps hierarchical ≡ flat bitwise.
+    /// `Int8` swaps in the blockwise-scaled quantized wire (per-128-block
+    /// f32 scale + i8 codes, deterministic RNE) — ~4x fewer inter-node
+    /// bytes at a bounded, deterministic rounding cost.  Requires
+    /// `nodes >= 1`.
+    pub grad_wire: Option<GradWire>,
+    /// ZeRO-3 gather lookahead depth (CLI `--zero3-prefetch`): how many
+    /// *future* parameter uses each rank keeps in flight beyond the one
+    /// it is redeeming.  The residency bound is `(N+1)` gathered chunks;
+    /// `1` reproduces the PR-5 gather-use-drop pipeline exactly.
+    pub zero3_prefetch: usize,
     pub seed: u64,
     /// Print a progress line every `log_every` steps (0 = silent).
     pub log_every: u32,
@@ -153,12 +177,28 @@ impl Default for EngineConfig {
             precision: Dtype::F32,
             loss_scale_init: 1.0,
             loss_scale_growth_interval: 0,
+            nodes: 0,
+            grad_wire: None,
+            zero3_prefetch: 1,
             seed: 1234,
             log_every: 0,
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume: false,
         }
+    }
+}
+
+impl EngineConfig {
+    /// The grad wire the run actually uses on the inter-node hop:
+    /// explicit `--grad-wire`, else derived from the storage precision.
+    pub fn effective_grad_wire(&self) -> GradWire {
+        self.grad_wire.unwrap_or(GradWire::for_dtype(self.precision))
+    }
+
+    /// Hierarchical (topology-aware) collectives enabled?
+    pub fn hier(&self) -> bool {
+        self.nodes >= 1
     }
 }
 
@@ -224,13 +264,37 @@ pub struct TrainReport {
     /// dtype) — pinned EXACTLY against `perf`'s PP p2p term; exactly
     /// halves under the packed-bf16 activation wire.
     pub pp_p2p_payload_bytes: u64,
+    /// Per-tier split of the DP gradient-sync payload under hierarchical
+    /// collectives (`nodes >= 1`): bytes crossing *intra-node* links
+    /// (phase-1 reduce up to the node representative + phase-3 fan back
+    /// out) at the storage wire width.  0 in flat mode.
+    pub dp_bucket_intra_bytes: u64,
+    /// Bytes crossing the *inter-node* tier (one combined partial per
+    /// node entering the exchange) at the grad-wire width — the counter
+    /// the int8 wire shrinks ~4x.  0 in flat mode or on one node.
+    pub dp_bucket_inter_bytes: u64,
+    /// Per-tier split of the parameter all-gather payload (stage-1/2
+    /// post-step gathers + ZeRO-3 on-demand gathers, including the
+    /// node-local secondary-partition gathers that replace inter-node
+    /// traffic after first touch).  0 in flat mode.
+    pub dp_param_ag_intra_bytes: u64,
+    /// Inter-node tier of the parameter all-gathers (representatives
+    /// exchanging the assembled buffer).  0 in flat mode or on one node.
+    pub dp_param_ag_inter_bytes: u64,
+    /// Per-tier split of the pipeline p2p payload: boundary tensors
+    /// between workers co-resident on a node.  0 in flat mode.
+    pub pp_p2p_intra_bytes: u64,
+    /// Boundary tensors crossing nodes (adjacent pipeline stages placed
+    /// on different nodes under packed placement).  0 in flat mode.
+    pub pp_p2p_inter_bytes: u64,
     /// Sharding stage the run executed at.
     pub zero_stage: ShardingStage,
     /// ZeRO-3 gather-use-drop residency: the high-water mark of
     /// full-parameter floats any single rank held gathered at once
-    /// (current op + one prefetch) — the engine-measured bound the mem
-    /// model's per-layer transient term is validated against.  0 unless
-    /// stage 3 ran with dp > 1.
+    /// (current op + up to `zero3_prefetch` lookahead gathers, so at
+    /// most `(N+1)` chunks) — the engine-measured bound the mem model's
+    /// per-layer transient term is validated against.  0 unless stage 3
+    /// ran with dp > 1.
     pub zero3_peak_gathered_floats: u64,
     /// Resident optimizer-state bytes on the heaviest rank (Adam moments
     /// + fp32 masters; shard-sized under stages 1+) — the measured
@@ -364,6 +428,24 @@ pub fn train_with_bundle(
     }
     let world_size = pp * dp * tp;
 
+    if let Some(wire) = cfg.grad_wire {
+        anyhow::ensure!(
+            cfg.nodes >= 1 || wire == GradWire::for_dtype(cfg.precision),
+            "--grad-wire {} only shapes the inter-node hop of hierarchical \
+             collectives — pass --nodes N (>= 1) to enable them",
+            wire.name()
+        );
+    }
+    if cfg.hier() {
+        let per_node = (world_size as u32).div_ceil(cfg.nodes);
+        anyhow::ensure!(
+            per_node <= GPUS_PER_NODE,
+            "world {world_size} packed onto {} nodes needs {per_node} GCDs per node \
+             (a Frontier node has {GPUS_PER_NODE})",
+            cfg.nodes
+        );
+    }
+
     let sched = schedule::build(cfg.schedule, pp as u32, cfg.microbatches);
     sched.validate().map_err(|e| anyhow!("invalid schedule: {e}"))?;
     let sched = Arc::new(sched);
@@ -419,7 +501,25 @@ pub fn train_with_bundle(
             SubGroup::new(&world, (base..base + tp).collect(), cell as u64)
         })
         .collect();
-    let dp_groups: Vec<Arc<Group>> = (0..pp * tp).map(|_| Group::new(dp)).collect();
+    // under `--nodes N` each DP group carries the node map of its
+    // members' GCDs (packed placement, tp-innermost ranks — DP groups
+    // stride by `tp`, so the map handles node-interleaved members)
+    let machine = cfg.hier().then(|| Machine::new(cfg.nodes));
+    let dp_groups: Vec<Arc<Group>> = (0..pp * tp)
+        .map(|row| {
+            let nodes = machine.as_ref().map(|m| {
+                let (pp_rank, tp_rank) = (row / tp, row % tp);
+                let gpus: Vec<_> = (0..dp)
+                    .map(|d| {
+                        let rank = (pp_rank * dp + d) * tp + tp_rank;
+                        packed_gpu_of(world_size as u32, cfg.nodes, rank as u32)
+                    })
+                    .collect();
+                NodeMap::from_gpus(m, &gpus)
+            });
+            Group::new_with_nodes(dp, nodes)
+        })
+        .collect();
 
     // per-step report: (step, loss, grad norm, loss scale, skipped)
     let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32, f32, bool)>();
@@ -545,6 +645,15 @@ pub fn train_with_bundle(
         .max()
         .unwrap_or(0);
     let pp_p2p_payload_bytes = world.pp_payload_bytes.load(Ordering::Relaxed);
+    let sum_dp = |f: fn(&Group) -> &AtomicU64| {
+        dp_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
+    };
+    let dp_bucket_intra_bytes = sum_dp(|g| &g.nb_intra_bytes);
+    let dp_bucket_inter_bytes = sum_dp(|g| &g.nb_inter_bytes);
+    let dp_param_ag_intra_bytes = sum_dp(|g| &g.ag_intra_bytes);
+    let dp_param_ag_inter_bytes = sum_dp(|g| &g.ag_inter_bytes);
+    let pp_p2p_intra_bytes = world.pp_intra_bytes.load(Ordering::Relaxed);
+    let pp_p2p_inter_bytes = world.pp_inter_bytes.load(Ordering::Relaxed);
     Ok(TrainReport {
         world_size,
         total_params: bundle.meta.model.total_params,
@@ -560,6 +669,12 @@ pub fn train_with_bundle(
         dp_bucket_payload_bytes,
         dp_param_ag_bytes,
         pp_p2p_payload_bytes,
+        dp_bucket_intra_bytes,
+        dp_bucket_inter_bytes,
+        dp_param_ag_intra_bytes,
+        dp_param_ag_inter_bytes,
+        pp_p2p_intra_bytes,
+        pp_p2p_inter_bytes,
         zero_stage: cfg.zero_stage,
         zero3_peak_gathered_floats,
         opt_state_bytes_per_rank: opt_state_bytes.load(Ordering::Relaxed),

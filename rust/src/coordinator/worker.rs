@@ -36,12 +36,14 @@
 //! **ZeRO-3 parameter lifecycle** (stage 3): each rank stores only its
 //! flat parameter shard of every hosted chunk.  Around each op that
 //! needs parameters, the full vector is assembled by a nonblocking DP
-//! all-gather — launched one param-using op ahead (prefetch), redeemed
-//! zero-copy as the op's parameter view, and dropped right after the op
-//! — so peak full-parameter residency is ~2 gathered chunks, never the
-//! worker's whole model share (`ag_peak_floats` records the high-water
-//! mark the mem tests validate).  The optimizer then steps the shard in
-//! place; no post-step gather exists.
+//! all-gather — launched `--zero3-prefetch` param-using ops ahead,
+//! redeemed zero-copy as the op's parameter view, and dropped right
+//! after the op — so peak full-parameter residency is `(N+1)` gathered
+//! chunks, never the worker's whole model share (`ag_peak_floats`
+//! records the high-water mark the mem tests validate).  The optimizer
+//! then steps the shard in place; no post-step gather exists.  Under
+//! `--nodes` the gathers split into an inter-node primary on first
+//! touch plus node-local secondary gathers after (ZeRO++ hpZ).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -51,12 +53,13 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::collectives::{
-    chunk_bounds, GatherHandle, Group, ReduceHandle, ScatterHandle, SubGroup, TpComm,
+    chunk_bounds, GatherHandle, Group, Payload, ReduceHandle, ScatterHandle, SubGroup, TpComm,
 };
 use crate::data::BatchStream;
-use crate::precision::{pack_bf16, unpack_bf16, Dtype, LossScaler};
+use crate::precision::{pack_bf16, unpack_bf16, Dtype, GradWire, LossScaler};
 use crate::runtime::{Bundle, ParamsHandle, Runtime, StageExecutables};
 use crate::schedule::{Op, Schedule};
+use crate::topology::packed_gpu_of;
 use crate::zero::DistOptimizer;
 
 use super::{checkpoint, EngineConfig};
@@ -147,6 +150,7 @@ fn launch_grad_buckets(
     grads: &[f32],
     bucket_floats: usize,
     wire: Dtype,
+    hier: Option<GradWire>,
 ) -> Vec<(usize, usize, ReduceHandle)> {
     let bucket = bucket_floats.max(1);
     assert!(chunk < (1 << 8), "chunk {chunk} overflows the bucket-tag field");
@@ -160,11 +164,13 @@ fn launch_grad_buckets(
     while lo < grads.len() {
         let hi = (lo + bucket).min(grads.len());
         let tag = ((step as u64) << 32) | ((chunk as u64) << 24) | out.len() as u64;
-        out.push((
-            lo,
-            hi,
-            group.start_all_reduce_dtype(rank, tag, grads[lo..hi].to_vec(), wire),
-        ));
+        let h = match hier {
+            Some(gw) => {
+                group.start_all_reduce_hier(rank, tag, grads[lo..hi].to_vec(), wire, gw)
+            }
+            None => group.start_all_reduce_dtype(rank, tag, grads[lo..hi].to_vec(), wire),
+        };
+        out.push((lo, hi, h));
         lo = hi;
     }
     out
@@ -183,6 +189,7 @@ fn launch_rs_buckets(
     grads: &[f32],
     bucket_floats: usize,
     wire: Dtype,
+    hier: Option<GradWire>,
 ) -> Vec<(usize, usize, ScatterHandle)> {
     let bucket = bucket_floats.max(1);
     assert!(chunk < (1 << 8), "chunk {chunk} overflows the bucket-tag field");
@@ -198,11 +205,20 @@ fn launch_rs_buckets(
         while lo < ohi {
             let hi = (lo + bucket).min(ohi);
             let tag = ((step as u64) << 32) | ((chunk as u64) << 24) | out.len() as u64;
-            out.push((
-                lo,
-                hi,
-                group.start_reduce_scatter_dtype(rank, tag, grads[lo..hi].to_vec(), owner, wire),
-            ));
+            let h = match hier {
+                Some(gw) => group.start_reduce_scatter_hier(
+                    rank,
+                    tag,
+                    grads[lo..hi].to_vec(),
+                    owner,
+                    wire,
+                    gw,
+                ),
+                None => {
+                    group.start_reduce_scatter_dtype(rank, tag, grads[lo..hi].to_vec(), owner, wire)
+                }
+            };
+            out.push((lo, hi, h));
             lo = hi;
         }
     }
@@ -231,6 +247,9 @@ fn finalize_and_launch(
         return ChunkSync::AllReduce(Vec::new());
     }
     let t0 = Instant::now();
+    // topology-aware runs route every bucket through the two-tier path,
+    // the configured grad wire shaping only the inter-node hop
+    let hier = ctx.cfg.hier().then(|| ctx.cfg.effective_grad_wire());
     let sync = if ctx.cfg.zero_stage.shards_grads() {
         ChunkSync::ReduceScatter(launch_rs_buckets(
             &ctx.dp_group,
@@ -240,6 +259,7 @@ fn finalize_and_launch(
             grads,
             ctx.cfg.grad_bucket_floats,
             ctx.cfg.precision,
+            hier,
         ))
     } else {
         ChunkSync::AllReduce(launch_grad_buckets(
@@ -250,6 +270,7 @@ fn finalize_and_launch(
             grads,
             ctx.cfg.grad_bucket_floats,
             ctx.cfg.precision,
+            hier,
         ))
     };
     let counter = if hidden { &ctx.dp_group.nb_hidden_ns } else { &ctx.dp_group.nb_exposed_ns };
@@ -291,11 +312,25 @@ struct LocalChannels {
 /// Wire-cast a boundary activation/gradient for a cross-worker p2p send:
 /// bf16 packs the (grid-constrained) values two per lane — half the
 /// bytes, bit-lossless on unpack.  Counts the send's logical payload
-/// (`elements × wire width`) into the world group's `pp_payload_bytes`.
-fn p2p_pack(ctx: &WorkerCtx, data: Vec<f32>) -> Vec<f32> {
-    ctx.world
-        .pp_payload_bytes
-        .fetch_add(ctx.cfg.precision.bytes() * data.len() as u64, Ordering::Relaxed);
+/// (`elements × wire width`) into the world group's `pp_payload_bytes`;
+/// under `--nodes` the same bytes are additionally classified per tier
+/// (`pp_intra_bytes` / `pp_inter_bytes`) by the packed placement of the
+/// two endpoints.
+fn p2p_pack(ctx: &WorkerCtx, dest_rank: usize, data: Vec<f32>) -> Vec<f32> {
+    let bytes = ctx.cfg.precision.bytes() * data.len() as u64;
+    ctx.world.pp_payload_bytes.fetch_add(bytes, Ordering::Relaxed);
+    if ctx.cfg.hier() {
+        let world = (ctx.pp * ctx.dp * ctx.tp) as u32;
+        let src = packed_gpu_of(world, ctx.cfg.nodes, ctx.world_rank() as u32);
+        let dst = packed_gpu_of(world, ctx.cfg.nodes, dest_rank as u32);
+        let tier = if src / crate::topology::GPUS_PER_NODE == dst / crate::topology::GPUS_PER_NODE
+        {
+            &ctx.world.pp_intra_bytes
+        } else {
+            &ctx.world.pp_inter_bytes
+        };
+        tier.fetch_add(bytes, Ordering::Relaxed);
+    }
     match ctx.cfg.precision {
         Dtype::F32 => data,
         Dtype::Bf16 => pack_bf16(&data),
@@ -322,13 +357,9 @@ fn send_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, y: 
     if dest_rank == ctx.pp_rank {
         local.acts.insert((dest_chunk, mb), y);
     } else {
-        let payload = p2p_pack(ctx, y);
-        ctx.world.send_tagged(
-            ctx.world_rank(),
-            ctx.world_rank_of(dest_rank),
-            tag(TAG_FWD, dest_chunk, mb),
-            payload,
-        );
+        let dest = ctx.world_rank_of(dest_rank);
+        let payload = p2p_pack(ctx, dest, y);
+        ctx.world.send_tagged(ctx.world_rank(), dest, tag(TAG_FWD, dest_chunk, mb), payload);
     }
 }
 
@@ -356,13 +387,9 @@ fn send_grad(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, gx
     if dest_rank == ctx.pp_rank {
         local.grads.insert((dest_chunk, mb), gx);
     } else {
-        let payload = p2p_pack(ctx, gx);
-        ctx.world.send_tagged(
-            ctx.world_rank(),
-            ctx.world_rank_of(dest_rank),
-            tag(TAG_BWD, dest_chunk, mb),
-            payload,
-        );
+        let dest = ctx.world_rank_of(dest_rank);
+        let payload = p2p_pack(ctx, dest, gx);
+        ctx.world.send_tagged(ctx.world_rank(), dest, tag(TAG_BWD, dest_chunk, mb), payload);
     }
 }
 
@@ -409,37 +436,63 @@ fn gather_tag(step: u32, dir: u64, chunk: usize, mb: u64) -> u64 {
 }
 
 /// The ZeRO-3 gather-use-drop driver for one step's op stream: walks the
-/// per-step plan of param-using ops, keeps at most ONE prefetched gather
-/// in flight beyond the op being executed, and tracks the full-parameter
-/// float residency high-water mark (gathered buffers count from launch —
-/// the assembled buffer may exist any time after — until release).
+/// per-step plan of param-using ops, keeps at most `--zero3-prefetch`
+/// gathers in flight beyond the op being executed (the residency bound
+/// is `(N+1)` gathered chunks), and tracks the full-parameter float
+/// residency high-water mark (gathered buffers count from launch — the
+/// assembled buffer may exist any time after — until release).
+///
+/// Under `--nodes` the gather tier splits ZeRO++-hpZ style: a chunk's
+/// FIRST param use each step runs the hierarchical (inter-node) primary
+/// all-gather, and the redeeming rank slices its node-local **secondary
+/// partition** out of the assembled buffer; every LATER use that step is
+/// served by a node-local gather over the secondary shards — zero
+/// inter-node bytes after first touch.  Secondary shards persist for the
+/// step only (the optimizer rewrites the primaries at the step boundary).
 struct Zero3Gathers {
     plan: Vec<GatherPlanEntry>,
+    /// `primary[i]`: plan entry `i` is its chunk's first use of the step
+    /// (always `true` in flat mode — every gather is a full DP gather).
+    primary: Vec<bool>,
     next_launch: usize,
     next_use: usize,
-    pending: VecDeque<GatherHandle>,
+    /// One slot per launched plan entry: `Some` holds a primary gather's
+    /// handle; `None` marks a secondary (node-served) entry, redeemed
+    /// synchronously at acquire time.
+    pending: VecDeque<Option<GatherHandle>>,
+    /// Node-local secondary parameter shard per chunk (hier mode only).
+    secondary: Vec<Option<Payload>>,
     live_floats: u64,
     peak_floats: u64,
 }
 
 impl Zero3Gathers {
-    fn new(plan: Vec<GatherPlanEntry>) -> Self {
+    fn new(plan: Vec<GatherPlanEntry>, v: usize, hier: bool) -> Self {
+        let mut seen = vec![false; v];
+        let primary = plan
+            .iter()
+            .map(|&(c, _, _)| !hier || !std::mem::replace(&mut seen[c], true))
+            .collect();
         Self {
             plan,
+            primary,
             next_launch: 0,
             next_use: 0,
             pending: VecDeque::new(),
+            secondary: vec![None; v],
             live_floats: 0,
             peak_floats: 0,
         }
     }
 
     /// Reset the per-step cursors (the plan itself is step-invariant;
-    /// only the tags fold the step index).
+    /// only the tags fold the step index) and drop the stale secondary
+    /// shards — the optimizer just rewrote the primary partitions.
     fn begin_step(&mut self) {
         debug_assert!(self.pending.is_empty(), "gathers leaked across steps");
         self.next_launch = 0;
         self.next_use = 0;
+        self.secondary.iter_mut().for_each(|s| *s = None);
     }
 
     fn launch_through(
@@ -452,25 +505,41 @@ impl Zero3Gathers {
     ) {
         while self.next_launch < self.plan.len() && self.next_launch <= upto {
             let (c, dir, mb) = self.plan[self.next_launch];
-            // the f32 deposit is the shard Arc itself — no copy (bf16
-            // packs, which is itself the wire cast)
-            let h = ctx.dp_group.start_all_gather_shared(
-                ctx.dp_rank,
-                gather_tag(step, dir, c, mb),
-                params[c].clone(),
-                full_len[c],
-                ctx.cfg.precision,
-            );
-            self.pending.push_back(h);
-            self.live_floats += full_len[c] as u64;
-            self.peak_floats = self.peak_floats.max(self.live_floats);
+            if self.primary[self.next_launch] {
+                // the f32 deposit is the shard Arc itself — no copy (bf16
+                // packs, which is itself the wire cast)
+                let tag = gather_tag(step, dir, c, mb);
+                let h = if ctx.cfg.hier() {
+                    ctx.dp_group.start_all_gather_hier(
+                        ctx.dp_rank,
+                        tag,
+                        params[c].clone(),
+                        full_len[c],
+                        ctx.cfg.precision,
+                    )
+                } else {
+                    ctx.dp_group.start_all_gather_shared(
+                        ctx.dp_rank,
+                        tag,
+                        params[c].clone(),
+                        full_len[c],
+                        ctx.cfg.precision,
+                    )
+                };
+                self.pending.push_back(Some(h));
+                self.live_floats += full_len[c] as u64;
+                self.peak_floats = self.peak_floats.max(self.live_floats);
+            } else {
+                self.pending.push_back(None);
+            }
             self.next_launch += 1;
         }
     }
 
     /// Full parameter view for the next param-using op (must be chunk
-    /// `c`): launches up through the NEXT plan entry (the one-ahead
-    /// prefetch) and redeems this op's gather zero-copy.
+    /// `c`): launches up through the next `--zero3-prefetch` plan
+    /// entries and redeems this op's gather zero-copy (primary) or runs
+    /// the node-local secondary gather (hier, after first touch).
     fn acquire(
         &mut self,
         ctx: &WorkerCtx,
@@ -482,10 +551,46 @@ impl Zero3Gathers {
         // hard assert: a plan/loop divergence here would hand the op
         // another chunk's parameters — fail loudly in release too
         assert_eq!(self.plan[self.next_use].0, c, "gather plan out of sync");
-        self.launch_through(ctx, params, full_len, step, self.next_use + 1);
-        let h = self.pending.pop_front().expect("gather launched before use");
+        let (_, dir, mb) = self.plan[self.next_use];
+        self.launch_through(ctx, params, full_len, step, self.next_use + ctx.cfg.zero3_prefetch);
+        let slot = self.pending.pop_front().expect("gather launched before use");
         self.next_use += 1;
-        h.wait_shared()
+        match slot {
+            Some(h) => {
+                let full = h.wait_shared();
+                if ctx.cfg.hier() {
+                    // hpZ first touch: persist this rank's slice of the
+                    // node-local secondary partition
+                    let map = ctx.dp_group.node_map().expect("hier groups carry node maps");
+                    let members = map.members_of(map.node_of(ctx.dp_rank));
+                    self.secondary[c] = Some(if members.len() > 1 {
+                        let pos = members.iter().position(|&r| r == ctx.dp_rank).unwrap();
+                        let (lo, hi) = chunk_bounds(full_len[c], members.len())[pos];
+                        Arc::new(full[lo..hi].to_vec())
+                    } else {
+                        full.clone()
+                    });
+                }
+                full
+            }
+            None => {
+                // served intra-node from the secondary partition; the
+                // assembled buffer is transient like any gathered view
+                let shard =
+                    self.secondary[c].clone().expect("secondary shard set by first touch");
+                self.live_floats += full_len[c] as u64;
+                self.peak_floats = self.peak_floats.max(self.live_floats);
+                ctx.dp_group
+                    .start_all_gather_node(
+                        ctx.dp_rank,
+                        gather_tag(step, dir, c, mb),
+                        shard,
+                        full_len[c],
+                        ctx.cfg.precision,
+                    )
+                    .wait_shared()
+            }
+        }
     }
 
     /// Drop accounting for a gathered buffer after its op retires.
@@ -671,7 +776,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                 op_uses_params(op, single, g, k).then_some((c, dir, op.mb() as u64))
             })
             .collect();
-        Zero3Gathers::new(plan)
+        Zero3Gathers::new(plan, ctx.v, ctx.cfg.hier())
     });
 
     // fast-forward the data stream past already-trained steps

@@ -36,6 +36,13 @@ pub struct Point {
     /// The dimension is still explicit in [`FEATURES`] / [`Point::features`]
     /// and [`Point::to_config`] honours `bf16 = false`.
     pub bf16: bool,
+    /// ZeRO-3 gather lookahead depth (`(N + 1)`-chunk transient
+    /// residency).  Sampling pins this to 1 — the engine's historical
+    /// depth — with no extra RNG draw, keeping the sampler stream and the
+    /// calibrated Fig 9/10 behaviour bit-stable; explicit points span
+    /// [`ZERO3_PREFETCH_CHOICES`], and [`Point::features`] /
+    /// [`Point::to_config`] honour any depth.
+    pub zero3_prefetch: u32,
 }
 
 pub const PP_CHOICES: [u32; 6] = [1, 2, 4, 8, 12, 16];
@@ -44,9 +51,10 @@ pub const MBS_RANGE: (u32, u32) = (4, 20);
 pub const GAS_CHOICES: [u32; 2] = [5, 10];
 pub const NNODES_CHOICES: [u32; 2] = [12, 16];
 pub const INTERLEAVE_CHOICES: [u32; 3] = [1, 2, 4];
+pub const ZERO3_PREFETCH_CHOICES: [u32; 3] = [1, 2, 4];
 
 /// Feature names in SHAP/reporting order (paper Fig 10 uses `p:` prefixes).
-pub const FEATURES: [&str; 8] = [
+pub const FEATURES: [&str; 9] = [
     "p:mbs",
     "p:tp",
     "p:pp",
@@ -55,6 +63,7 @@ pub const FEATURES: [&str; 8] = [
     "p:gas",
     "p:interleave",
     "p:bf16",
+    "p:zero3_prefetch",
 ];
 
 impl Point {
@@ -81,6 +90,7 @@ impl Point {
                 interleave: INTERLEAVE_CHOICES
                     [rng.below(INTERLEAVE_CHOICES.len() as u64) as usize],
                 bf16: true,
+                zero3_prefetch: 1,
             };
             if p.gas % p.pp != 0 {
                 p.interleave = 1;
@@ -96,9 +106,9 @@ impl Point {
         self.nnodes * GPUS_PER_NODE
     }
 
-    /// Normalised feature vector in [0,1]^8 (surrogate + SHAP input),
+    /// Normalised feature vector in [0,1]^9 (surrogate + SHAP input),
     /// ordered as [`FEATURES`].
-    pub fn features(&self) -> [f64; 8] {
+    pub fn features(&self) -> [f64; 9] {
         let norm = |v: f64, lo: f64, hi: f64| (v - lo) / (hi - lo);
         [
             norm(self.mbs as f64, MBS_RANGE.0 as f64, MBS_RANGE.1 as f64),
@@ -112,6 +122,7 @@ impl Point {
             norm(self.gas as f64, 5.0, 10.0),
             norm((self.interleave as f64).log2(), 0.0, 2.0),
             if self.bf16 { 1.0 } else { 0.0 },
+            norm((self.zero3_prefetch.max(1) as f64).log2(), 0.0, 2.0),
         ]
     }
 
@@ -147,6 +158,7 @@ impl Point {
                 checkpoint_activations: true,
                 precision: if self.bf16 { Precision::Bf16 } else { Precision::Fp32 },
                 schedule,
+                zero3_prefetch: self.zero3_prefetch,
             },
         ))
     }
@@ -196,6 +208,7 @@ mod tests {
             nnodes: 16,
             interleave: 1,
             bf16: true,
+            zero3_prefetch: 1,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.dp, 2);
@@ -215,6 +228,7 @@ mod tests {
             nnodes: 16,
             interleave: 2,
             bf16: true,
+            zero3_prefetch: 1,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.schedule, ScheduleKind::Interleaved1F1B { v: 2 });
@@ -235,6 +249,7 @@ mod tests {
             nnodes: 16,
             interleave: 1,
             bf16: false,
+            zero3_prefetch: 1,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.precision, Precision::Fp32);
@@ -257,6 +272,7 @@ mod tests {
             nnodes: 16,
             interleave: 1,
             bf16: true,
+            zero3_prefetch: 1,
         };
         assert_eq!(p.features()[4], 0.0);
         p.zero_stage = ShardingStage::OptimizerStates;
@@ -267,6 +283,37 @@ mod tests {
         assert_eq!(cfg.zero_stage, ShardingStage::Parameters);
         assert_eq!(p.features()[4], 3.0);
         assert_eq!(FEATURES[4], "p:zero_stage");
+    }
+
+    #[test]
+    fn zero3_prefetch_dimension_round_trips() {
+        let mut p = Point {
+            pp: 2,
+            tp: 2,
+            mbs: 4,
+            gas: 10,
+            zero_stage: ShardingStage::Parameters,
+            nnodes: 16,
+            interleave: 1,
+            bf16: true,
+            zero3_prefetch: 1,
+        };
+        // the pinned sampling depth sits at the feature-axis origin,
+        // reproducing the pre-dimension surrogate input bit for bit
+        assert_eq!(p.features()[8], 0.0);
+        assert_eq!(FEATURES[8], "p:zero3_prefetch");
+        for n in ZERO3_PREFETCH_CHOICES {
+            p.zero3_prefetch = n;
+            let (_, cfg) = p.to_config().unwrap();
+            assert_eq!(cfg.zero3_prefetch, n);
+            assert!((0.0..=1.0).contains(&p.features()[8]));
+        }
+        assert_eq!(p.features()[8], 1.0); // depth 4 = axis top
+        // sampling never draws the dimension: the stream stays bit-stable
+        let mut rng = Rng64::new(7);
+        for _ in 0..50 {
+            assert_eq!(Point::sample(&mut rng).zero3_prefetch, 1);
+        }
     }
 
     #[test]
@@ -281,6 +328,7 @@ mod tests {
             nnodes: 12,
             interleave: 1,
             bf16: true,
+            zero3_prefetch: 1,
         };
         assert!(p.to_config().is_err());
     }

@@ -39,6 +39,7 @@ COMMANDS:
            [--zero-stage 0|1|2|3] [--gpipe | --interleave V]
            [--no-overlap] [--bucket-floats N] [--collective-algo ring|naive]
            [--precision fp32|bf16] [--loss-scale S] [--loss-scale-growth N]
+           [--nodes N] [--grad-wire fp32|bf16|int8] [--zero3-prefetch N]
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
 
@@ -67,7 +68,20 @@ COMMANDS:
   in the optimizer (sharded under --zero-stage 1+), halves every collective
   payload (packed-u16 wire), and arms the dynamic loss scaler:
   --loss-scale sets the initial (power-of-two) scale, --loss-scale-growth
-  the clean-step interval before it doubles (0 = static).  Quickstart:
+  the clean-step interval before it doubles (0 = static).
+
+  --nodes N places the world packed onto N Frontier nodes (8 GCDs each)
+  and switches every sharded DP collective to the two-tier hierarchical
+  path: intra-node reduce, inter-node exchange over one representative
+  per node, intra-node fan-out — bitwise-identical trajectories to the
+  flat path at fp32 and on the bf16 grid.  The report then splits every
+  payload counter by tier.  --grad-wire picks the inter-node gradient
+  wire format (default: the precision's native width); int8 sends
+  blockwise-scaled 8-bit payloads (f32 scale per 128-float block) on the
+  inter-node hop only.  --zero3-prefetch N widens the ZeRO-3 gather
+  lookahead to N chunks ((N+1)-chunk peak residency; default 1).
+
+  Quickstart:
 
     frontier train --bundle builtin:tiny-s4-mb2 --tp 2 --dp 2 --steps 20
     frontier train --bundle builtin:tiny-s4-mb2 --precision bf16 --dp 2 --steps 20
@@ -437,6 +451,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_dir: args.get("checkpoint").map(Into::into),
         checkpoint_every: args.opt("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
         resume: args.flag("resume"),
+        nodes: args.opt("nodes", 0u32).map_err(anyhow::Error::msg)?,
+        grad_wire: match args.get("grad-wire") {
+            Some(s) => Some(frontier_llm::precision::GradWire::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("--grad-wire must be fp32|bf16|int8, got {s:?}")
+            })?),
+            None => None,
+        },
+        zero3_prefetch: args.opt("zero3-prefetch", 1usize).map_err(anyhow::Error::msg)?,
     };
     let report = train(&cfg)?;
     println!(
@@ -499,6 +521,27 @@ fn cmd_train(args: &Args) -> Result<()> {
             report.dp_sync_raw_s() * 1e3,
             report.dp_sync_exposed_s * 1e3,
             report.dp_overlap_fraction() * 100.0
+        );
+    }
+    let tiered = report.dp_bucket_intra_bytes
+        + report.dp_bucket_inter_bytes
+        + report.dp_param_ag_intra_bytes
+        + report.dp_param_ag_inter_bytes
+        + report.pp_p2p_intra_bytes
+        + report.pp_p2p_inter_bytes;
+    if tiered > 0 {
+        let kb = |b: u64| b as f64 / 1e3;
+        println!(
+            "  hier tiers: grad sync {:.1} KB intra / {:.1} KB inter ({} wire), \
+             param AG {:.1} KB intra / {:.1} KB inter, \
+             pp p2p {:.1} KB intra / {:.1} KB inter",
+            kb(report.dp_bucket_intra_bytes),
+            kb(report.dp_bucket_inter_bytes),
+            cfg.effective_grad_wire().name(),
+            kb(report.dp_param_ag_intra_bytes),
+            kb(report.dp_param_ag_inter_bytes),
+            kb(report.pp_p2p_intra_bytes),
+            kb(report.pp_p2p_inter_bytes)
         );
     }
     Ok(())

@@ -13,9 +13,9 @@
 //! states) under stages 1+, gradients under stages 2+, and the working
 //! parameters themselves under stage 3 — which then also charges the
 //! transient gather buffer of the engine's gather-use-drop lifecycle
-//! (two layers' full parameters: current + one prefetched; validated
-//! against the engine-measured `zero3_peak_gathered_floats` high-water
-//! mark).  Activation memory follows the checkpointing model: one stored
+//! (`(zero3_prefetch + 1)` layers' full parameters: current + the
+//! prefetch window; validated against the engine-measured
+//! `zero3_peak_gathered_floats` high-water mark).  Activation memory follows the checkpointing model: one stored
 //! layer input per layer per in-flight micro-batch plus one layer's live
 //! working set — multiplied by the schedule's peak in-flight count, which
 //! is why GPipe at large `m` OOMs where 1F1B survives.
@@ -175,8 +175,9 @@ pub fn per_gpu_acct(model: &ModelSpec, cfg: &ParallelConfig, acct: Accounting) -
             bytes
         }
     };
-    // ZeRO-3 gather-use-drop transient: two layers' full (working-width)
-    // parameters live at once — current + one prefetched
+    // ZeRO-3 gather-use-drop transient: `(zero3_prefetch + 1)` layers'
+    // full (working-width) parameters live at once — current + the
+    // prefetch window (two layers at the default depth of 1)
     let gather = if stage.shards_params() && cfg.dp > 1 {
         zero3_gather_transient_bytes(model, cfg)
     } else {
@@ -246,13 +247,14 @@ pub fn fits(model: &ModelSpec, cfg: &ParallelConfig) -> bool {
 const WORKING_PARAM_BYTES: u64 = 2;
 
 /// Transient full-parameter residency of ZeRO-3's gather-use-drop
-/// lifecycle: at most TWO layers' gathered working-width parameters are
-/// live at once — the layer in use plus the one prefetched gather — the
-/// bound the engine's measured `zero3_peak_gathered_floats` high-water
-/// mark validates (its per-chunk granularity is this model's per-layer
-/// granularity).
+/// lifecycle: at most `(zero3_prefetch + 1)` layers' gathered
+/// working-width parameters are live at once — the layer in use plus up
+/// to `N` prefetched gathers in flight — the bound the engine's measured
+/// `zero3_peak_gathered_floats` high-water mark validates (its per-chunk
+/// granularity is this model's per-layer granularity).  The default
+/// prefetch depth of 1 reproduces the historical two-layer bound.
 pub fn zero3_gather_transient_bytes(model: &ModelSpec, cfg: &ParallelConfig) -> u64 {
-    2 * (model.layer_params() / cfg.tp as u64) * WORKING_PARAM_BYTES
+    (cfg.zero3_prefetch as u64 + 1) * (model.layer_params() / cfg.tp as u64) * WORKING_PARAM_BYTES
 }
 
 #[cfg(test)]
@@ -390,6 +392,33 @@ mod tests {
         assert_eq!(s2.grads, full.grads / dp as u64);
         assert_eq!(s2.params, full.params);
         assert_eq!(s2.optimizer, full.optimizer / dp as u64);
+    }
+
+    #[test]
+    fn zero3_prefetch_scales_the_gather_transient() {
+        use crate::zero::ShardingStage;
+        let m = lookup("175b").unwrap();
+        let cfg = ParallelConfig::default()
+            .with_tp(8)
+            .with_pp(8)
+            .with_dp(16)
+            .with_gbs(64)
+            .with_zero_stage(ShardingStage::Parameters);
+        // the default depth of 1 reproduces the historical 2-layer bound
+        let one_layer = (m.layer_params() / 8) * WORKING_PARAM_BYTES;
+        assert_eq!(zero3_gather_transient_bytes(&m, &cfg), 2 * one_layer);
+        // (N + 1)-chunk residency: linear in the prefetch window
+        for n in [0u32, 2, 3, 7] {
+            let deep = cfg.clone().with_zero3_prefetch(n);
+            assert_eq!(
+                zero3_gather_transient_bytes(&m, &deep),
+                (n as u64 + 1) * one_layer
+            );
+        }
+        // the per-GPU footprint charges exactly that transient
+        let b1 = per_gpu_acct(&m, &cfg, Accounting::Mixed16);
+        let b3 = per_gpu_acct(&m, &cfg.clone().with_zero3_prefetch(3), Accounting::Mixed16);
+        assert_eq!(b3.params - b1.params, 2 * one_layer);
     }
 
     #[test]

@@ -18,11 +18,13 @@
 
 pub mod sim;
 
+use crate::collectives::chunk_bounds;
 use crate::comm::CommModel;
 use crate::config::{ModelSpec, ParallelConfig};
 use crate::mem;
 use crate::parallel::RankLayout;
-use crate::topology::{Machine, HBM_BW, PEAK_FP16_FLOPS};
+use crate::precision::GradWire;
+use crate::topology::{packed_gpu_of, GpuId, Machine, HBM_BW, PEAK_FP16_FLOPS};
 
 // ---------------------------------------------------------------------------
 // The TP communication contract (§II.B), shared between the analytic
@@ -166,6 +168,226 @@ pub fn builtin_pp_p2p_floats_per_step(
         return 0;
     }
     2 * m * (n_stages - 1) * tokens * hidden
+}
+
+// ---------------------------------------------------------------------------
+// The hierarchical (two-tier) wire contract.  These functions mirror the
+// engine's per-tier byte counters EXACTLY — same bucket splitting, same
+// representative convention (first group rank on each node), same
+// per-bucket int8 block overhead — so `TrainReport::*_intra_bytes` /
+// `*_inter_bytes` equal `steps ×` these, summed over the grid's DP
+// groups.  All take the DP group's per-rank node assignment (raw node
+// ids under the packed placement; only the partition shape matters).
+// ---------------------------------------------------------------------------
+
+/// Node assignment of one DP group under the engine's packed placement:
+/// member `d`'s world rank is `(pp_rank·dp + d)·tp + tp_rank` (Megatron
+/// order, TP innermost) and its node is that of `packed_gpu_of`.  This
+/// is the exact map `coordinator::train_with_bundle` attaches to the
+/// group — different (pp, tp) rows can land different shapes, so tier
+/// contracts must be composed per row.
+pub fn packed_dp_group_nodes(
+    pp_rank: usize,
+    tp_rank: usize,
+    pp: usize,
+    dp: usize,
+    tp: usize,
+    nodes: u32,
+) -> Vec<u32> {
+    let world = (pp * dp * tp) as u32;
+    let machine = Machine::new(nodes);
+    (0..dp)
+        .map(|d| {
+            let rank = ((pp_rank * dp + d) * tp + tp_rank) as u32;
+            machine.node_of(packed_gpu_of(world, nodes, rank))
+        })
+        .collect()
+}
+
+/// (n ranks, k distinct nodes, per-rank is-representative flags): the
+/// shared shape every tier term derives from.  A rank represents its
+/// node iff it is the FIRST group rank on that node — the same
+/// convention `collectives::NodeMap::representative` uses.
+fn hier_shape(node_of: &[u32]) -> (u64, u64, Vec<bool>) {
+    let mut seen: Vec<u32> = Vec::new();
+    let reps: Vec<bool> = node_of
+        .iter()
+        .map(|&nd| {
+            if seen.contains(&nd) {
+                false
+            } else {
+                seen.push(nd);
+                true
+            }
+        })
+        .collect();
+    (node_of.len() as u64, seen.len() as u64, reps)
+}
+
+/// Grad-wire payload of one span split into engine-sized buckets — the
+/// int8 wire's 4-byte-per-128-block scale overhead applies PER BUCKET,
+/// exactly as `launch_grad_buckets`/`launch_rs_buckets` quantize each
+/// bucket independently.
+fn bucketed_wire_bytes(len: u64, bucket: u64, grad_wire: GradWire) -> u64 {
+    let bucket = bucket.max(1);
+    let mut sum = 0;
+    let mut lo = 0;
+    while lo < len {
+        let l = bucket.min(len - lo);
+        sum += grad_wire.payload_bytes(l);
+        lo += l;
+    }
+    sum
+}
+
+/// Per-tier bytes of ONE chunk's hierarchical all-reduce gradient sync
+/// (sharding stages 0/1): each of the `⌈len/bucket⌉` buckets counts
+/// `2(n−k)` intra-node payloads at the storage wire width (non-reps up,
+/// results back down) and, when the group spans nodes, `k` inter-node
+/// payloads at the grad-wire width.  Returns `(intra, inter)`.
+pub fn hier_ar_tier_bytes(
+    len: u64,
+    bucket_floats: u64,
+    node_of: &[u32],
+    wire_bytes: u64,
+    grad_wire: GradWire,
+) -> (u64, u64) {
+    let (n, k, _) = hier_shape(node_of);
+    if n <= 1 {
+        return (0, 0);
+    }
+    let intra = wire_bytes * len * 2 * (n - k);
+    let inter =
+        if k > 1 { k * bucketed_wire_bytes(len, bucket_floats, grad_wire) } else { 0 };
+    (intra, inter)
+}
+
+/// Per-tier bytes of ONE chunk's hierarchical partition-aligned
+/// reduce-scatter sync (stages 2/3): buckets split along the DP
+/// partition first (`chunk_bounds`), and each owner's span counts
+/// `(n−k)` intra payloads up plus one more down when the owner is not
+/// its node's representative.  Returns `(intra, inter)`.
+pub fn hier_rs_tier_bytes(
+    len: u64,
+    bucket_floats: u64,
+    node_of: &[u32],
+    wire_bytes: u64,
+    grad_wire: GradWire,
+) -> (u64, u64) {
+    let (n, k, reps) = hier_shape(node_of);
+    if n <= 1 {
+        return (0, 0);
+    }
+    let bounds = chunk_bounds(len as usize, n as usize);
+    let mut intra = 0;
+    let mut inter = 0;
+    for (owner, &(lo, hi)) in bounds.iter().enumerate() {
+        let span = (hi - lo) as u64;
+        let down = u64::from(!reps[owner]);
+        intra += wire_bytes * span * ((n - k) + down);
+        if k > 1 {
+            inter += k * bucketed_wire_bytes(span, bucket_floats, grad_wire);
+        }
+    }
+    (intra, inter)
+}
+
+/// Per-tier bytes of ONE primary hierarchical parameter all-gather of a
+/// `total`-element buffer: every non-representative's shard crosses the
+/// intra tier up, the representatives exchange the assembled buffer
+/// over the inter tier (`wire × total` when the group spans nodes), and
+/// the full buffer fans back down to each of the `n−k` non-reps.
+/// Parameter gathers always ride the storage wire (the grad wire shapes
+/// gradients only).  Returns `(intra, inter)`.
+pub fn hier_ag_tier_bytes(total: u64, node_of: &[u32], wire_bytes: u64) -> (u64, u64) {
+    let (n, k, reps) = hier_shape(node_of);
+    if n <= 1 {
+        return (0, 0);
+    }
+    let bounds = chunk_bounds(total as usize, n as usize);
+    let up: u64 = bounds
+        .iter()
+        .zip(&reps)
+        .filter(|(_, &rep)| !rep)
+        .map(|(&(lo, hi), _)| (hi - lo) as u64)
+        .sum();
+    let intra = wire_bytes * (up + (n - k) * total);
+    let inter = if k > 1 { wire_bytes * total } else { 0 };
+    (intra, inter)
+}
+
+/// Intra-tier bytes of ONE node-local secondary gather (ZeRO++ hpZ:
+/// every stage-3 use after a chunk's per-step first touch): each node
+/// with 2+ co-resident members reassembles the full buffer from its
+/// secondary partition — `wire × total` per such node; lone members
+/// already hold the whole buffer and move nothing.  The inter tier is
+/// zero by construction.
+pub fn hier_node_ag_intra_bytes(total: u64, node_of: &[u32], wire_bytes: u64) -> u64 {
+    let mut seen: Vec<(u32, u64)> = Vec::new();
+    for &nd in node_of {
+        match seen.iter_mut().find(|(n, _)| *n == nd) {
+            Some((_, c)) => *c += 1,
+            None => seen.push((nd, 1)),
+        }
+    }
+    let multi = seen.iter().filter(|&&(_, c)| c > 1).count() as u64;
+    multi * wire_bytes * total
+}
+
+/// Per-step, per-DP-group tier bytes of the hierarchical DP gradient
+/// sync over this group's hosted chunks: AR buckets under stages 0/1,
+/// partition-aligned RS buckets under stages 2/3.  Returns
+/// `(intra, inter)` — the EXACT per-step increment of the group's
+/// `nb_intra_bytes` / `nb_inter_bytes`.
+pub fn hier_grad_sync_tier_bytes(
+    chunk_params: &[u64],
+    bucket_floats: u64,
+    node_of: &[u32],
+    wire_bytes: u64,
+    grad_wire: GradWire,
+    sharded_grads: bool,
+) -> (u64, u64) {
+    let mut intra = 0;
+    let mut inter = 0;
+    for &p in chunk_params {
+        let (i, e) = if sharded_grads {
+            hier_rs_tier_bytes(p, bucket_floats, node_of, wire_bytes, grad_wire)
+        } else {
+            hier_ar_tier_bytes(p, bucket_floats, node_of, wire_bytes, grad_wire)
+        };
+        intra += i;
+        inter += e;
+    }
+    (intra, inter)
+}
+
+/// Per-step tier bytes of the ZeRO-3 on-demand gathers under the
+/// hierarchical path, for a single-pp-row grid (every stage's gathers
+/// run on DP groups of the given shape): each stage's FIRST param use
+/// per step is a primary (inter-node) gather; its remaining
+/// `fwd + m − 1` uses are node-local secondary gathers (use counts
+/// mirror [`builtin_zero3_ag_floats_per_step`] exactly).  Returns
+/// `(intra, inter)`.
+pub fn builtin_zero3_hier_ag_tier_bytes(
+    stage_params: &[u64],
+    m: u64,
+    node_of: &[u32],
+    wire_bytes: u64,
+) -> (u64, u64) {
+    let k = stage_params.len();
+    let mut intra = 0;
+    let mut inter = 0;
+    for (g, &p) in stage_params.iter().enumerate() {
+        let fwd = if k == 1 || g == k - 1 { 0 } else { m };
+        let uses = fwd + m;
+        if uses == 0 {
+            continue;
+        }
+        let (i, e) = hier_ag_tier_bytes(p, node_of, wire_bytes);
+        intra += i + (uses - 1) * hier_node_ag_intra_bytes(p, node_of, wire_bytes);
+        inter += e;
+    }
+    (intra, inter)
 }
 
 // ---------------------------------------------------------------------------
@@ -316,6 +538,22 @@ impl PerfModel {
     /// a raw sync time — the engine-facing half of the overlap contract.
     pub fn dp_exposed_comm_time(&self, raw_s: f64) -> f64 {
         raw_s * (1.0 - self.dp_overlap)
+    }
+
+    /// Exposed DP sync time of a topology-aware (hierarchical) run,
+    /// priced per tier from the engine's `*_intra_bytes`/`*_inter_bytes`
+    /// counters (or the matching `hier_*` contract terms) through
+    /// [`CommModel::tiered_time`] — the `Machine::link`-driven per-tier
+    /// bandwidth terms.  The overlap fraction applies to the whole sync,
+    /// exactly as in the flat path.
+    pub fn hier_dp_comm_time(
+        &self,
+        comm: &CommModel,
+        gpu_group: &[GpuId],
+        intra_bytes: u64,
+        inter_bytes: u64,
+    ) -> f64 {
+        self.dp_exposed_comm_time(comm.tiered_time(gpu_group, intra_bytes, inter_bytes))
     }
 
     /// Per-micro-batch, per-GPU forward compute+TP-comm time for one stage
@@ -736,6 +974,101 @@ mod tests {
         assert_eq!(pm().with_dp_overlap(7.0).dp_overlap, 1.0);
         // the default stays the calibrated paper assumption
         assert_eq!(pm().dp_overlap, DEFAULT_DP_OVERLAP);
+    }
+
+    #[test]
+    fn hier_tier_contract_composition() {
+        // 4 ranks over 2 nodes, reps at group ranks 0 and 2
+        let nodes = [0u32, 0, 1, 1];
+        // AR: intra = w·len·2(n−k); inter = k·gw(len) bucketed
+        let (i, e) = hier_ar_tier_bytes(1000, 256, &nodes, 4, GradWire::F32);
+        assert_eq!(i, 4 * 1000 * 2 * 2);
+        assert_eq!(e, 2 * 4 * 1000);
+        // one node → all intra, no inter hop at any grad wire
+        let flat = [0u32, 0, 0, 0];
+        let (i, e) = hier_ar_tier_bytes(1000, 256, &flat, 4, GradWire::Int8);
+        assert_eq!((i, e), (4 * 1000 * 2 * 3, 0));
+        // singleton group moves nothing
+        assert_eq!(hier_ar_tier_bytes(1000, 256, &[7], 4, GradWire::F32), (0, 0));
+        // int8 inter bytes: per-bucket block overhead — 1000 floats in
+        // 256-float buckets = 3×(256 + 4·2) + (232 + 4·2) per node copy
+        let (_, e8) = hier_ar_tier_bytes(1000, 256, &nodes, 4, GradWire::Int8);
+        assert_eq!(e8, 2 * (3 * (256 + 8) + (232 + 8)));
+        // exactly 1/4 of the fp32 wire + 4 bytes per 128-block of scale
+        // (k nodes × 8 blocks across the 4 buckets) — the acceptance
+        // criterion's "1/4 + scale-overhead" stated as an identity
+        assert_eq!(e8, e / 4 + 4 * 2 * 8);
+
+        // RS: owner spans of 1000 over 4 ranks are 250 each; owners 1
+        // and 3 are non-reps (one extra down payload)
+        let (i, e) = hier_rs_tier_bytes(1000, 256, &nodes, 4, GradWire::Bf16);
+        assert_eq!(i, 4 * 250 * ((2 + 0) + (2 + 1) + (2 + 0) + (2 + 1)));
+        assert_eq!(e, 2 * 2 * 1000);
+
+        // primary AG: non-rep shards up + (n−k)·total down; reps swap
+        // the assembled buffer once over the wire
+        let (i, e) = hier_ag_tier_bytes(1000, &nodes, 4);
+        assert_eq!(i, 4 * (2 * 250 + 2 * 1000));
+        assert_eq!(e, 4 * 1000);
+        // secondary node gather: w·total per multi-member node
+        assert_eq!(hier_node_ag_intra_bytes(1000, &nodes, 4), 2 * 4 * 1000);
+        assert_eq!(hier_node_ag_intra_bytes(1000, &[0, 1], 4), 0); // lone members
+        assert_eq!(hier_node_ag_intra_bytes(1000, &[0, 0, 1], 4), 4 * 1000);
+
+        // step-level composition sums chunks under the right shape
+        let (ai, ae) =
+            hier_grad_sync_tier_bytes(&[1000, 500], 256, &nodes, 4, GradWire::F32, false);
+        let (a1, e1) = hier_ar_tier_bytes(1000, 256, &nodes, 4, GradWire::F32);
+        let (a2, e2) = hier_ar_tier_bytes(500, 256, &nodes, 4, GradWire::F32);
+        assert_eq!((ai, ae), (a1 + a2, e1 + e2));
+        // z3: first touch primary + (uses−1) secondary per stage; uses
+        // mirror builtin_zero3_ag_floats_per_step (mid 2m, head m)
+        let (zi, ze) = builtin_zero3_hier_ag_tier_bytes(&[100, 60], 3, &nodes, 4);
+        let (p1, q1) = hier_ag_tier_bytes(100, &nodes, 4);
+        let (p2, q2) = hier_ag_tier_bytes(60, &nodes, 4);
+        let s1 = hier_node_ag_intra_bytes(100, &nodes, 4);
+        let s2 = hier_node_ag_intra_bytes(60, &nodes, 4);
+        assert_eq!(zi, p1 + 5 * s1 + p2 + 2 * s2);
+        assert_eq!(ze, q1 + q2);
+    }
+
+    #[test]
+    fn packed_dp_group_nodes_match_engine_placement() {
+        // pp=3 × dp=2 × tp=1 over 2 nodes (per_node = 3): the middle pp
+        // row's DP group straddles the node boundary, the outer rows
+        // stay node-local — exactly the asymmetry per-row composition
+        // must handle
+        assert_eq!(packed_dp_group_nodes(0, 0, 3, 2, 1, 2), vec![0, 0]);
+        assert_eq!(packed_dp_group_nodes(1, 0, 3, 2, 1, 2), vec![0, 1]);
+        assert_eq!(packed_dp_group_nodes(2, 0, 3, 2, 1, 2), vec![1, 1]);
+        // tp-innermost stride: dp=4 × tp=2 over 2 nodes (per_node = 4)
+        assert_eq!(packed_dp_group_nodes(0, 0, 1, 4, 2, 2), vec![0, 0, 1, 1]);
+        assert_eq!(packed_dp_group_nodes(0, 1, 1, 4, 2, 2), vec![0, 0, 1, 1]);
+        // one node → all co-resident
+        assert_eq!(packed_dp_group_nodes(0, 0, 1, 4, 1, 1), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn hier_tier_pricing_rewards_int8_wire() {
+        // per-tier pricing through Machine::link: cutting inter bytes 4x
+        // (the int8 wire) must cut the priced DP time on a 2-node group,
+        // and the inter tier must dominate at equal bytes
+        let comm = CommModel::new(Machine::new(2));
+        let group: Vec<GpuId> = vec![0, 1, 8, 9];
+        let m = pm().with_dp_overlap(0.0);
+        let nodes = [0u32, 0, 1, 1];
+        let p = 1u64 << 22;
+        let (i32b, e32b) = hier_ar_tier_bytes(p, 1 << 15, &nodes, 4, GradWire::F32);
+        let (i8b, e8b) = hier_ar_tier_bytes(p, 1 << 15, &nodes, 4, GradWire::Int8);
+        assert_eq!(i32b, i8b, "the grad wire shapes only the inter hop");
+        let t32 = m.hier_dp_comm_time(&comm, &group, i32b, e32b);
+        let t8 = m.hier_dp_comm_time(&comm, &group, i8b, e8b);
+        assert!(t8 < t32, "int8 {t8} !< fp32 {t32}");
+        assert!(
+            m.hier_dp_comm_time(&comm, &group, 0, e32b)
+                > m.hier_dp_comm_time(&comm, &group, i32b, 0),
+            "inter bytes must out-cost the same intra volume"
+        );
     }
 
     #[test]

@@ -188,6 +188,154 @@ impl CastPolicy {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The quantized gradient wire (ZeRO++-style blockwise int8), used by the
+// hierarchical collectives' inter-node phase only.
+// ---------------------------------------------------------------------------
+
+/// Block length of the int8 gradient wire: one f32 scale per
+/// `INT8_BLOCK` values (the ZeRO++ qgZ granularity).
+pub const INT8_BLOCK: usize = 128;
+
+/// Wire format of the gradient reduction's **inter-node** phase.  The
+/// intra-node phases always move the storage dtype (the cheap fabric
+/// doesn't need compression); only the Slingshot hop — the Fig-5
+/// bottleneck — gets the optional narrower encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GradWire {
+    /// Full-width f32 payload: 4 bytes/value.
+    #[default]
+    F32,
+    /// Packed bf16 payload: 2 bytes/value.
+    Bf16,
+    /// Blockwise-scaled int8: 1 byte/value plus one f32 scale per
+    /// [`INT8_BLOCK`] values (`n + 4·ceil(n/128)` bytes total).
+    Int8,
+}
+
+impl GradWire {
+    /// CLI / manifest name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GradWire::F32 => "fp32",
+            GradWire::Bf16 => "bf16",
+            GradWire::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI / manifest name.
+    pub fn parse(s: &str) -> Option<GradWire> {
+        match s {
+            "fp32" | "f32" => Some(GradWire::F32),
+            "bf16" => Some(GradWire::Bf16),
+            "int8" => Some(GradWire::Int8),
+            _ => None,
+        }
+    }
+
+    /// The wire matching a storage dtype exactly (the default when no
+    /// `--grad-wire` override is given): fp32 storage keeps an fp32 wire,
+    /// bf16 storage a bf16 wire.
+    pub fn for_dtype(dt: Dtype) -> GradWire {
+        match dt {
+            Dtype::F32 => GradWire::F32,
+            Dtype::Bf16 => GradWire::Bf16,
+        }
+    }
+
+    /// Bytes a payload of `n` values occupies on this wire.
+    pub fn payload_bytes(&self, n: u64) -> u64 {
+        match self {
+            GradWire::F32 => 4 * n,
+            GradWire::Bf16 => 2 * n,
+            GradWire::Int8 => n + 4 * n.div_ceil(INT8_BLOCK as u64),
+        }
+    }
+
+    /// Does sending values already on `storage`'s grid over this wire
+    /// re-quantize them?  When `false`, the hierarchical inter-node hop
+    /// is value-preserving and the two-tier reduction can keep the flat
+    /// rank-order fold bit for bit.
+    pub fn requantizes_over(&self, storage: Dtype) -> bool {
+        match self {
+            GradWire::F32 => false,
+            GradWire::Bf16 => storage == Dtype::F32,
+            GradWire::Int8 => true,
+        }
+    }
+
+    /// In-place wire round-trip (encode + decode): identity for f32, the
+    /// bf16 grid for bf16, blockwise int8 quantize→dequantize for int8.
+    /// This is what a value experiences crossing the inter-node hop.
+    pub fn roundtrip_slice(&self, xs: &mut [f32]) {
+        match self {
+            GradWire::F32 => {}
+            GradWire::Bf16 => Dtype::Bf16.quantize_slice(xs),
+            GradWire::Int8 => int8_roundtrip_slice(xs),
+        }
+    }
+}
+
+/// Round to nearest integer, ties to even — the IEEE default mode,
+/// implemented manually (`f32::round_ties_even` needs a newer toolchain
+/// than this crate's MSRV).  Deterministic: pure function of the input
+/// bit pattern, no ambient rounding-mode dependence.
+pub fn round_ties_even(x: f32) -> f32 {
+    let t = x.trunc();
+    let frac = x - t;
+    if frac.abs() == 0.5 {
+        // tie: pick the even neighbour of the two candidates t, t±1
+        if (t as i64) % 2 == 0 {
+            t
+        } else {
+            t + frac.signum()
+        }
+    } else {
+        x.round()
+    }
+}
+
+/// Blockwise int8 quantization: per [`INT8_BLOCK`] values, `scale =
+/// max_abs / 127` and `code = RNE(x / scale)` clamped to ±127 (an
+/// all-zero block gets scale 0 and zero codes).  Deterministic —
+/// elementwise within each block, no data-dependent ordering.  Non-finite
+/// inputs poison their block's scale, so overflow survives the wire as
+/// non-finite dequantized values (the loss-scaler's skip logic still
+/// fires).
+pub fn quantize_int8(xs: &[f32]) -> (Vec<f32>, Vec<i8>) {
+    let mut scales = Vec::with_capacity(xs.len().div_ceil(INT8_BLOCK));
+    let mut codes = Vec::with_capacity(xs.len());
+    for block in xs.chunks(INT8_BLOCK) {
+        let max_abs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if max_abs == 0.0 { 0.0 } else { max_abs / 127.0 };
+        scales.push(scale);
+        for &x in block {
+            let code = if scale == 0.0 { 0.0 } else { round_ties_even(x / scale) };
+            codes.push(code.clamp(-127.0, 127.0) as i8);
+        }
+    }
+    (scales, codes)
+}
+
+/// Inverse of [`quantize_int8`]: `x̂ = code · scale` per block.
+pub fn dequantize_int8(scales: &[f32], codes: &[i8]) -> Vec<f32> {
+    assert_eq!(scales.len(), codes.len().div_ceil(INT8_BLOCK), "scale count mismatch");
+    codes
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| c as f32 * scales[i / INT8_BLOCK])
+        .collect()
+}
+
+/// In-place int8 wire round-trip.  Per-value error is bounded by half a
+/// quantization step: `|x - x̂| ≤ max_abs(block) / 254`.
+pub fn int8_roundtrip_slice(xs: &mut [f32]) {
+    let (scales, codes) = quantize_int8(xs);
+    for (i, x) in xs.iter_mut().enumerate() {
+        *x = codes[i] as f32 * scales[i / INT8_BLOCK];
+    }
+}
+
 /// Dynamic loss scaler (DeepSpeed/Apex semantics): gradients are scaled
 /// by `scale` during backward; a non-finite gradient anywhere in the
 /// world skips the optimizer step and halves the scale, and
@@ -373,6 +521,131 @@ mod tests {
         assert!(CastPolicy::fp32().is_fp32());
         assert!(!CastPolicy::bf16().is_fp32());
         assert_eq!(CastPolicy::for_dtype(Dtype::Bf16), CastPolicy::bf16());
+    }
+
+    #[test]
+    fn round_ties_even_matches_ieee() {
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(3.5), 4.0);
+        assert_eq!(round_ties_even(-2.5), -2.0);
+        assert_eq!(round_ties_even(-3.5), -4.0);
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(-0.5), -0.0);
+        assert_eq!(round_ties_even(2.4), 2.0);
+        assert_eq!(round_ties_even(2.6), 3.0);
+        assert_eq!(round_ties_even(126.5), 126.0);
+        assert_eq!(round_ties_even(-127.0), -127.0);
+    }
+
+    #[test]
+    fn grad_wire_names_and_bytes() {
+        assert_eq!(GradWire::parse("fp32"), Some(GradWire::F32));
+        assert_eq!(GradWire::parse("f32"), Some(GradWire::F32));
+        assert_eq!(GradWire::parse("bf16"), Some(GradWire::Bf16));
+        assert_eq!(GradWire::parse("int8"), Some(GradWire::Int8));
+        assert_eq!(GradWire::parse("fp16"), None);
+        assert_eq!(GradWire::Int8.name(), "int8");
+        assert_eq!(GradWire::for_dtype(Dtype::F32), GradWire::F32);
+        assert_eq!(GradWire::for_dtype(Dtype::Bf16), GradWire::Bf16);
+        // payload bytes: 4n / 2n / n + one f32 scale per 128-block
+        assert_eq!(GradWire::F32.payload_bytes(1000), 4000);
+        assert_eq!(GradWire::Bf16.payload_bytes(1000), 2000);
+        assert_eq!(GradWire::Int8.payload_bytes(1000), 1000 + 4 * 8);
+        assert_eq!(GradWire::Int8.payload_bytes(128), 128 + 4);
+        assert_eq!(GradWire::Int8.payload_bytes(129), 129 + 8);
+        assert_eq!(GradWire::Int8.payload_bytes(0), 0);
+        // the acceptance bound: int8 inter-node bytes ≤ 1/4 + scale
+        // overhead (1/128) of the fp32 wire
+        for n in [128u64, 1000, 1 << 15] {
+            let int8 = GradWire::Int8.payload_bytes(n) as f64;
+            let fp32 = GradWire::F32.payload_bytes(n) as f64;
+            assert!(int8 <= fp32 * (0.25 + 1.0 / 128.0) + 4.0, "n={n}");
+        }
+    }
+
+    #[test]
+    fn grad_wire_requantization_table() {
+        assert!(!GradWire::F32.requantizes_over(Dtype::F32));
+        assert!(!GradWire::F32.requantizes_over(Dtype::Bf16));
+        assert!(GradWire::Bf16.requantizes_over(Dtype::F32));
+        assert!(!GradWire::Bf16.requantizes_over(Dtype::Bf16));
+        assert!(GradWire::Int8.requantizes_over(Dtype::F32));
+        assert!(GradWire::Int8.requantizes_over(Dtype::Bf16));
+    }
+
+    #[test]
+    fn int8_round_trip_error_bound() {
+        let mut rng = Rng64::new(99);
+        for n in [1usize, 5, 127, 128, 129, 384, 1000] {
+            let xs: Vec<f32> = (0..n)
+                .map(|i| {
+                    let mag = 10.0f64.powi((i % 9) as i32 - 4);
+                    (rng.normal() * mag) as f32
+                })
+                .collect();
+            let (scales, codes) = quantize_int8(&xs);
+            assert_eq!(scales.len(), n.div_ceil(INT8_BLOCK));
+            assert_eq!(codes.len(), n);
+            let back = dequantize_int8(&scales, &codes);
+            for (b, block) in xs.chunks(INT8_BLOCK).enumerate() {
+                let max_abs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                for (j, &x) in block.iter().enumerate() {
+                    let err = (back[b * INT8_BLOCK + j] - x).abs();
+                    assert!(
+                        err <= max_abs / 254.0 + f32::EPSILON * max_abs,
+                        "n={n} block={b} j={j}: err {err} vs bound {}",
+                        max_abs / 254.0
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_deterministic_and_idempotent() {
+        let mut rng = Rng64::new(7);
+        let xs: Vec<f32> = (0..500).map(|_| (rng.normal() * 2.0) as f32).collect();
+        // pure function: two invocations agree bitwise
+        let (s1, c1) = quantize_int8(&xs);
+        let (s2, c2) = quantize_int8(&xs);
+        assert_eq!(s1.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                   s2.iter().map(|s| s.to_bits()).collect::<Vec<_>>());
+        assert_eq!(c1, c2);
+        // round-trip is idempotent: a dequantized block re-quantizes to
+        // itself (its max_abs is a representable multiple of the scale)
+        let mut once = xs.clone();
+        int8_roundtrip_slice(&mut once);
+        let mut twice = once.clone();
+        int8_roundtrip_slice(&mut twice);
+        for (a, b) in once.iter().zip(&twice) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn int8_zero_block_and_overflow_poisoning() {
+        // an all-zero block round-trips to exact zeros with scale 0
+        let mut zeros = vec![0.0f32; 200];
+        int8_roundtrip_slice(&mut zeros);
+        assert!(zeros.iter().all(|&z| z == 0.0));
+        // a non-finite gradient poisons its block: the dequantized values
+        // stay non-finite, so the overflow skip logic still fires
+        let mut xs = vec![1.0f32; INT8_BLOCK];
+        xs[17] = f32::INFINITY;
+        int8_roundtrip_slice(&mut xs);
+        assert!(xs.iter().any(|x| !x.is_finite()), "overflow must survive the wire");
+    }
+
+    #[test]
+    fn int8_extremes_hit_full_code_range() {
+        // the block max quantizes to ±127 exactly and survives unscathed
+        let mut xs = vec![0.5f32; INT8_BLOCK];
+        xs[0] = 3.0;
+        xs[1] = -3.0;
+        let (scales, codes) = quantize_int8(&xs);
+        assert_eq!(codes[0], 127);
+        assert_eq!(codes[1], -127);
+        assert_eq!(codes[0] as f32 * scales[0], 3.0);
     }
 
     #[test]

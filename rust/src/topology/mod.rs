@@ -147,6 +147,27 @@ impl Machine {
             .any(|w| self.node_of(w[0]) != self.node_of(w[1]))
     }
 
+    /// Partition a GPU group by node, preserving the group's own order
+    /// both across sub-groups (first-appearance node order) and within
+    /// each sub-group.  Correct for *strided* groups — a tp-innermost DP
+    /// group visits GCD `tp`-strides that can interleave across nodes, so
+    /// contiguous chunking would assign wrong node sets.
+    pub fn node_groups(&self, gpus: &[GpuId]) -> Vec<Vec<GpuId>> {
+        let mut order: Vec<u32> = Vec::new();
+        let mut out: Vec<Vec<GpuId>> = Vec::new();
+        for &g in gpus {
+            let node = self.node_of(g);
+            match order.iter().position(|&n| n == node) {
+                Some(i) => out[i].push(g),
+                None => {
+                    order.push(node);
+                    out.push(vec![g]);
+                }
+            }
+        }
+        out
+    }
+
     /// Pairwise bandwidth matrix in GB/s for the first `n` GPUs
     /// (regenerates the Fig 5 view; used by `examples/paper_tables.rs`).
     pub fn bandwidth_matrix(&self, n: u32) -> Vec<Vec<f64>> {
@@ -168,9 +189,25 @@ impl Machine {
     }
 }
 
+/// Packed placement of a `world`-rank job onto `n_nodes` nodes: ranks are
+/// split into `ceil(world / n_nodes)`-sized contiguous blocks, one block
+/// per node, each block occupying the node's lowest GCDs.  This is the
+/// engine's placement when `--nodes` is given; it keeps TP groups (which
+/// are consecutive ranks) node-local whenever `tp` divides the block size.
+pub fn packed_gpu_of(world: u32, n_nodes: u32, rank: u32) -> GpuId {
+    assert!(n_nodes >= 1 && rank < world);
+    let per_node = world.div_ceil(n_nodes);
+    assert!(
+        per_node <= GPUS_PER_NODE,
+        "world {world} over {n_nodes} nodes needs {per_node} GCDs per node (max {GPUS_PER_NODE})"
+    );
+    (rank / per_node) * GPUS_PER_NODE + rank % per_node
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::RankLayout;
 
     #[test]
     fn link_hierarchy_matches_fig5() {
@@ -204,6 +241,90 @@ mod tests {
         assert_eq!(Machine::for_gpus(1024).n_nodes, 128);
         assert_eq!(Machine::for_gpus(3072).n_nodes, 384);
         assert_eq!(Machine::for_gpus(3).n_nodes, 1);
+    }
+
+    #[test]
+    fn node_groups_preserve_order_and_split_strided_groups() {
+        let m = Machine::new(2);
+        // tp=2-strided DP group interleaving two nodes
+        let g = m.node_groups(&[0, 2, 8, 10, 4]);
+        assert_eq!(g, vec![vec![0, 2, 4], vec![8, 10]]);
+        // node order follows first appearance, not node index
+        let g = m.node_groups(&[9, 1, 11, 3]);
+        assert_eq!(g, vec![vec![9, 11], vec![1, 3]]);
+        assert_eq!(m.node_groups(&[5]), vec![vec![5]]);
+        assert!(m.node_groups(&[]).is_empty());
+    }
+
+    #[test]
+    fn packed_placement_fills_nodes_low_gcds_first() {
+        // 8 ranks over 2 nodes: 4 per node, occupying GCDs 0-3 of each
+        let got: Vec<GpuId> = (0..8).map(|r| packed_gpu_of(8, 2, r)).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        // full nodes reduce to the identity placement
+        assert!((0..16).all(|r| packed_gpu_of(16, 2, r) == r));
+        // uneven split: ceil(6/4)=2 per node
+        let got: Vec<GpuId> = (0..6).map(|r| packed_gpu_of(6, 4, r)).collect();
+        assert_eq!(got, vec![0, 1, 8, 9, 16, 17]);
+    }
+
+    #[test]
+    #[should_panic(expected = "GCDs per node")]
+    fn packed_placement_rejects_oversubscribed_nodes() {
+        packed_gpu_of(32, 2, 0);
+    }
+
+    #[test]
+    fn dp_groups_striding_across_nodes_map_to_correct_node_sets() {
+        // Satellite: enumerate node_of per rank over a pp×dp×tp grid under
+        // packed placement and check every DP group's node partition from
+        // first principles.  tp-innermost layouts make DP groups stride by
+        // `tp`, so their members interleave across nodes whenever the
+        // group spans one.
+        for (tp, pp, dp, nodes) in [
+            (1u32, 1u32, 8u32, 2u32),
+            (2, 1, 8, 2),
+            (2, 1, 4, 2),
+            (4, 1, 4, 2),
+            (2, 2, 4, 2),
+            (8, 1, 2, 2),
+            (4, 2, 2, 2),
+            (2, 2, 2, 1),
+            (2, 4, 2, 4),
+        ] {
+            let l = RankLayout::new(tp, pp, dp);
+            let world = l.world_size();
+            let m = Machine::new(nodes);
+            let per_node = world.div_ceil(nodes);
+            // ground truth: packed placement puts rank r on node r/per_node
+            for r in 0..world {
+                assert_eq!(
+                    m.node_of(packed_gpu_of(world, nodes, r)),
+                    r / per_node,
+                    "tp={tp} pp={pp} dp={dp} nodes={nodes} rank={r}"
+                );
+            }
+            for g in l.all_dp_groups() {
+                let gpus: Vec<GpuId> =
+                    g.iter().map(|&r| packed_gpu_of(world, nodes, r)).collect();
+                let parts = m.node_groups(&gpus);
+                // partition: covers the group, order-preserving, node-pure
+                assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), gpus.len());
+                for part in &parts {
+                    let n0 = m.node_of(part[0]);
+                    assert!(part.iter().all(|&x| m.node_of(x) == n0));
+                }
+                // one part per distinct node visited by the group
+                let mut distinct: Vec<u32> = gpus.iter().map(|&x| m.node_of(x)).collect();
+                distinct.sort_unstable();
+                distinct.dedup();
+                assert_eq!(parts.len(), distinct.len(), "tp={tp} pp={pp} dp={dp}");
+                // members expected on node (rank/per_node) really are there
+                for (&r, &gpu) in g.iter().zip(&gpus) {
+                    assert_eq!(m.node_of(gpu), r / per_node);
+                }
+            }
+        }
     }
 
     #[test]

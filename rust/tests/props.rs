@@ -7,14 +7,17 @@
 use std::sync::Arc;
 use std::thread;
 
-use frontier_llm::collectives::{chunk_bounds, Algo, Group, SubGroup};
+use frontier_llm::collectives::{chunk_bounds, Algo, Group, NodeMap, SubGroup};
 use frontier_llm::config::{lookup, ParallelConfig, ScheduleKind};
 use frontier_llm::data::Rng64;
 use frontier_llm::hpo::space::Point;
 use frontier_llm::hpo::surrogate::Gp;
 use frontier_llm::parallel::RankLayout;
 use frontier_llm::perf::PerfModel;
-use frontier_llm::precision::{pack_bf16, unpack_bf16, Dtype, LossScaler};
+use frontier_llm::precision::{
+    dequantize_int8, pack_bf16, quantize_int8, unpack_bf16, Dtype, GradWire, LossScaler,
+    INT8_BLOCK,
+};
 use frontier_llm::schedule;
 use frontier_llm::util::json::{escape, Json};
 
@@ -581,6 +584,278 @@ fn prop_packed_subgroup_allreduce_equals_quantized_rank_order_sum() {
                     want[i].to_bits(),
                     "case {case} tp {tp} rank {rank} i {i}"
                 );
+            }
+        }
+    }
+}
+
+/// Random node assignment for `n` ranks over at most `max_nodes` nodes
+/// (dense renumbering happens inside [`NodeMap::new`]).
+fn random_nodes(rng: &mut Rng64, n: usize, max_nodes: usize) -> Vec<usize> {
+    (0..n).map(|_| rng.below(max_nodes as u64) as usize).collect()
+}
+
+#[test]
+fn prop_hier_allreduce_matches_flat_bitwise() {
+    // THE hierarchical invariant: for a value-preserving inter-node wire
+    // (fp32 over fp32 storage, bf16 over bf16 storage) the two-tier fold
+    // collapses to exactly the flat rank-order sum — BITWISE, across
+    // every group size 2–8, node count 1–4 and random placement
+    let mut rng = Rng64::new(1201);
+    for case in 0..24u64 {
+        let n = 2 + rng.below(7) as usize; // 2..8
+        let nodes = 1 + rng.below(4) as usize; // 1..4
+        let len = 1 + rng.below(300) as usize;
+        let wire = if rng.below(2) == 0 { Dtype::F32 } else { Dtype::Bf16 };
+        let assignment = random_nodes(&mut rng, n, nodes);
+        let seed = rng.next_u64();
+        let flat = Group::new(n);
+        let hier = Group::new_with_nodes(n, Some(NodeMap::new(&assignment)));
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let f = flat.clone();
+                let h = hier.clone();
+                thread::spawn(move || {
+                    let mut local = Rng64::new(seed ^ (rank as u64 + 11) * 0xA5);
+                    let data: Vec<f32> = (0..len).map(|_| local.normal() as f32).collect();
+                    let want = f.start_all_reduce_dtype(rank, case, data.clone(), wire).wait();
+                    let got = h
+                        .start_all_reduce_hier(rank, case, data, wire, GradWire::for_dtype(wire))
+                        .wait();
+                    (want, got)
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (want, got) = h.join().unwrap();
+            for i in 0..len {
+                assert_eq!(
+                    want[i].to_bits(),
+                    got[i].to_bits(),
+                    "case {case} n={n} nodes={nodes} {wire:?} {assignment:?} rank {rank} i {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hier_reduce_scatter_matches_flat_bitwise() {
+    // same invariant for the ZeRO-2/3 gradient dataflow: the owner's
+    // redeemed shard under the two-tier round is bit-for-bit the flat
+    // partition-aligned reduce-scatter's, for random owners/placements
+    let mut rng = Rng64::new(1307);
+    for case in 0..24u64 {
+        let n = 2 + rng.below(7) as usize;
+        let nodes = 1 + rng.below(4) as usize;
+        let len = 1 + rng.below(300) as usize;
+        let owner = rng.below(n as u64) as usize;
+        let wire = if rng.below(2) == 0 { Dtype::F32 } else { Dtype::Bf16 };
+        let assignment = random_nodes(&mut rng, n, nodes);
+        let seed = rng.next_u64();
+        let flat = Group::new(n);
+        let hier = Group::new_with_nodes(n, Some(NodeMap::new(&assignment)));
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let f = flat.clone();
+                let h = hier.clone();
+                thread::spawn(move || {
+                    let mut local = Rng64::new(seed ^ (rank as u64 + 5) * 0xC3);
+                    let data: Vec<f32> = (0..len).map(|_| local.normal() as f32).collect();
+                    let want =
+                        f.start_reduce_scatter_dtype(rank, case, data.clone(), owner, wire).wait();
+                    let got = h
+                        .start_reduce_scatter_hier(
+                            rank,
+                            case,
+                            data,
+                            owner,
+                            wire,
+                            GradWire::for_dtype(wire),
+                        )
+                        .wait();
+                    (want, got)
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (want, got) = h.join().unwrap();
+            assert_eq!(
+                want.is_some(),
+                rank == owner,
+                "case {case}: only the owner materialises a shard"
+            );
+            assert_eq!(got.is_some(), rank == owner);
+            if let (Some(w), Some(g)) = (want, got) {
+                for i in 0..len {
+                    assert_eq!(
+                        w[i].to_bits(),
+                        g[i].to_bits(),
+                        "case {case} n={n} nodes={nodes} owner={owner} {assignment:?} i {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hier_allgather_matches_flat_bitwise() {
+    // gather assembly is pure placement, so hier ≡ flat bitwise always —
+    // including under bf16 wire-casting of the shards
+    let mut rng = Rng64::new(1409);
+    for case in 0..16u64 {
+        let n = 2 + rng.below(7) as usize;
+        let nodes = 1 + rng.below(4) as usize;
+        let total = n + rng.below(300) as usize;
+        let wire = if rng.below(2) == 0 { Dtype::F32 } else { Dtype::Bf16 };
+        let assignment = random_nodes(&mut rng, n, nodes);
+        let seed = rng.next_u64();
+        let flat = Group::new(n);
+        let hier = Group::new_with_nodes(n, Some(NodeMap::new(&assignment)));
+        let bounds = chunk_bounds(total, n);
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let f = flat.clone();
+                let h = hier.clone();
+                let (lo, hi) = bounds[rank];
+                thread::spawn(move || {
+                    let mut local = Rng64::new(seed ^ (rank as u64 + 9) * 0xE1);
+                    let shard: Arc<Vec<f32>> =
+                        Arc::new((lo..hi).map(|_| local.normal() as f32).collect());
+                    let want =
+                        f.start_all_gather_shared(rank, case, shard.clone(), total, wire).wait();
+                    let got = h.start_all_gather_hier(rank, case, shard, total, wire).wait();
+                    (want, got)
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let (want, got) = h.join().unwrap();
+            for i in 0..total {
+                assert_eq!(
+                    want[i].to_bits(),
+                    got[i].to_bits(),
+                    "case {case} n={n} nodes={nodes} {wire:?} rank {rank} i {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hier_int8_wire_deterministic_and_bounded() {
+    // the int8 inter-node wire always re-quantizes, so hier ≠ flat — but
+    // the fold must be (a) identical across repeated trials regardless of
+    // deposit arrival order (rank-order determinism), and (b) within the
+    // blockwise quantization error of the flat sum: each node partial
+    // round-trips through one int8 encoding, so the node-order fold of k
+    // partials drifts at most k × (block max-abs / 254) per lane
+    let mut rng = Rng64::new(1511);
+    for case in 0..10u64 {
+        let n = 2 + rng.below(7) as usize;
+        let nodes = 2 + rng.below(3) as usize; // ≥ 2: force the inter hop
+        let len = 1 + rng.below(400) as usize;
+        let assignment = random_nodes(&mut rng, n, nodes);
+        let seed = rng.next_u64();
+        let trial = |reversed: bool, tag: u64| -> Vec<Vec<f32>> {
+            let hier = Group::new_with_nodes(n, Some(NodeMap::new(&assignment)));
+            let order: Vec<usize> =
+                if reversed { (0..n).rev().collect() } else { (0..n).collect() };
+            let handles: Vec<_> = order
+                .into_iter()
+                .map(|rank| {
+                    let h = hier.clone();
+                    thread::spawn(move || {
+                        let mut local = Rng64::new(seed ^ (rank as u64 + 13) * 0xF7);
+                        let data: Vec<f32> =
+                            (0..len).map(|_| local.normal() as f32).collect();
+                        let out = h
+                            .start_all_reduce_hier(rank, tag, data, Dtype::F32, GradWire::Int8)
+                            .wait();
+                        (rank, out)
+                    })
+                })
+                .collect();
+            let mut by_rank = vec![Vec::new(); n];
+            for h in handles {
+                let (rank, out) = h.join().unwrap();
+                by_rank[rank] = out;
+            }
+            by_rank
+        };
+        let a = trial(false, case);
+        let b = trial(true, case); // reversed spawn order: different arrivals
+        for rank in 0..n {
+            for i in 0..len {
+                assert_eq!(
+                    a[rank][i].to_bits(),
+                    b[rank][i].to_bits(),
+                    "case {case} rank {rank} i {i}: int8 fold must not depend on arrival order"
+                );
+            }
+        }
+        // error bound vs the flat rank-order f32 sum
+        let mut flat_sum = vec![0.0f32; len];
+        let mut node_max = vec![vec![0.0f32; len.div_ceil(INT8_BLOCK)]; nodes];
+        for rank in 0..n {
+            let mut local = Rng64::new(seed ^ (rank as u64 + 13) * 0xF7);
+            for i in 0..len {
+                let x = local.normal() as f32;
+                flat_sum[i] += x;
+                let m = &mut node_max[assignment[rank]][i / INT8_BLOCK];
+                // per-node partials are ≤ sum of member |x| blockwise
+                *m += x.abs();
+            }
+        }
+        for i in 0..len {
+            let bound: f32 =
+                (0..nodes).map(|nd| node_max[nd][i / INT8_BLOCK] / 253.0).sum();
+            assert!(
+                (a[0][i] - flat_sum[i]).abs() <= bound,
+                "case {case} i {i}: {} vs {} exceeds the blockwise bound {bound}",
+                a[0][i],
+                flat_sum[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_int8_blockwise_roundtrip_error_bound() {
+    // per 128-float block with scale = max|x| / 127 and RNE codes, the
+    // round-trip error is at most scale / 2 = max|x| / 254 per element
+    // (≤ /253 here for float slack), the encoding is deterministic, and
+    // zero blocks survive exactly
+    let mut rng = Rng64::new(1613);
+    for case in 0..100 {
+        let len = 1 + rng.below(1000) as usize;
+        let xs: Vec<f32> = (0..len)
+            .map(|i| {
+                let mag = 10.0f64.powi((i % 13) as i32 - 6);
+                (rng.normal() * mag) as f32
+            })
+            .collect();
+        let (scales, codes) = quantize_int8(&xs);
+        assert_eq!(scales.len(), len.div_ceil(INT8_BLOCK), "case {case}: one scale per block");
+        assert_eq!(codes.len(), len);
+        let (s2, c2) = quantize_int8(&xs);
+        assert_eq!(scales, s2, "case {case}: deterministic scales");
+        assert_eq!(codes, c2, "case {case}: deterministic codes");
+        let back = dequantize_int8(&scales, &codes);
+        assert_eq!(back.len(), len);
+        for (b, block) in xs.chunks(INT8_BLOCK).enumerate() {
+            let max_abs = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (j, &x) in block.iter().enumerate() {
+                let xhat = back[b * INT8_BLOCK + j];
+                if max_abs == 0.0 {
+                    assert_eq!(xhat, 0.0, "case {case} block {b}: zero block");
+                } else {
+                    assert!(
+                        (x - xhat).abs() <= max_abs / 253.0,
+                        "case {case} block {b} j {j}: |{x} - {xhat}| > {max_abs}/253"
+                    );
+                }
             }
         }
     }
