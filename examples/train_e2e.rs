@@ -83,6 +83,16 @@ fn main() -> anyhow::Result<()> {
         checkpoint_dir: args.get("checkpoint").map(Into::into),
         checkpoint_every: args.opt("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
         resume: args.flag("resume"),
+        // elastic knobs: `--fault kill@STEP:RANK` (or `join@STEP`) injects
+        // a deterministic fault; bounded collective waits surface the dead
+        // peer and the run recovers at dp∓1 from the last checkpoint
+        comm_timeout_ms: args.opt("comm-timeout-ms", 10_000u64).map_err(anyhow::Error::msg)?,
+        fault: match args.get("fault") {
+            Some(s) => Some(frontier_llm::coordinator::FaultSpec::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("--fault must be kill@<step>:<rank> or join@<step>, got {s:?}")
+            })?),
+            None => None,
+        },
         ..Default::default()
     };
 
@@ -167,6 +177,13 @@ fn main() -> anyhow::Result<()> {
             report.dp_param_ag_inter_bytes as f64 / 1e3,
             report.pp_p2p_intra_bytes as f64 / 1e3,
             report.pp_p2p_inter_bytes as f64 / 1e3,
+        );
+    }
+    if report.recovery_events > 0 {
+        println!(
+            "elastic           : {} recovery event(s), {} step(s) lost and recomputed, \
+             finished on {} GCDs",
+            report.recovery_events, report.lost_steps, report.world_size
         );
     }
     println!("loss              : {first:.4} -> {tail_mean:.4} (tail-10 mean)");

@@ -35,11 +35,80 @@
 //! term.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::panic_any;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::precision::{pack_bf16, unpack_bf16, Dtype, GradWire};
 use crate::topology::{GpuId, Machine};
+
+/// A deadline-bounded collective wait expired: some peer never showed up.
+///
+/// Raised (via `panic_any`, unwinding the worker thread) by every wait
+/// site of a [`Group`] whose communication timeout is armed
+/// ([`Group::set_comm_timeout`]) — mailbox receives, the barrier/exchange
+/// round, and the nonblocking all-reduce / reduce-scatter / all-gather
+/// handles.  The coordinator harvests the payload at `join` time and
+/// either reports the diagnostic or triggers an elastic reconfiguration.
+/// With the timeout disarmed (the default — unit tests, library use) the
+/// waits stay unbounded and bit-identical to the pre-elastic engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeerLost {
+    /// The missing peer's group rank, when the wait site can name one
+    /// (p2p receives and deposit rounds can; a drain wait cannot).
+    pub rank: Option<usize>,
+    /// Tag of the stuck round / message.
+    pub tag: u64,
+    /// Which wait site expired.
+    pub what: &'static str,
+    /// The configured deadline that expired, in milliseconds.
+    pub waited_ms: u64,
+}
+
+impl std::fmt::Display for PeerLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.rank {
+            Some(r) => write!(
+                f,
+                "collective timeout after {} ms in {}: peer rank {} never arrived (tag {:#x})",
+                self.waited_ms, self.what, r, self.tag
+            ),
+            None => write!(
+                f,
+                "collective timeout after {} ms in {} (tag {:#x}): a peer never arrived",
+                self.waited_ms, self.what, self.tag
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PeerLost {}
+
+/// One `Condvar` wait step of a deadline-bounded loop: unbounded when no
+/// deadline is armed (bit-identical to the legacy engine), otherwise a
+/// `wait_timeout` that, once the deadline passes, asks `diagnose` to name
+/// the missing peer, releases the lock, and unwinds with the [`PeerLost`]
+/// payload instead of hanging forever.
+fn wait_bounded<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    deadline: Option<(Instant, u64)>,
+    diagnose: impl FnOnce(&T, u64) -> PeerLost,
+) -> MutexGuard<'a, T> {
+    match deadline {
+        None => cv.wait(guard).unwrap(),
+        Some((at, ms)) => {
+            let now = Instant::now();
+            if now >= at {
+                let lost = diagnose(&guard, ms);
+                drop(guard); // don't poison the lock for surviving peers
+                panic_any(lost);
+            }
+            cv.wait_timeout(guard, at - now).unwrap().0
+        }
+    }
+}
 
 /// Node placement of a communicator's ranks: which Frontier node each
 /// group rank lives on, with nodes numbered in first-appearance order
@@ -187,13 +256,20 @@ impl Mailbox {
     }
 
     /// Pop the oldest message whose tag matches (FIFO within a tag).
-    fn recv(&self, tag: u64) -> Payload {
+    /// `from` is the sender rank, named in the diagnostic should the
+    /// deadline expire before a matching message arrives.
+    fn recv(&self, tag: u64, from: usize, deadline: Option<(Instant, u64)>) -> Payload {
         let mut q = self.queue.lock().unwrap();
         loop {
             if let Some(pos) = q.iter().position(|(t, _)| *t == tag) {
                 return q.remove(pos).unwrap().1;
             }
-            q = self.cv.wait(q).unwrap();
+            q = wait_bounded(&self.cv, q, deadline, |_, ms| PeerLost {
+                rank: Some(from),
+                tag,
+                what: "p2p recv",
+                waited_ms: ms,
+            });
         }
     }
 }
@@ -317,6 +393,10 @@ pub struct Group {
     pub pp_intra_bytes: AtomicU64,
     /// Engine-maintained inter-node half of the pipeline p2p payload.
     pub pp_inter_bytes: AtomicU64,
+    /// Deadline (milliseconds) for every collective wait on this group;
+    /// 0 (the default) keeps the legacy unbounded waits.  See
+    /// [`Group::set_comm_timeout`].
+    comm_timeout_ms: AtomicU64,
 }
 
 impl Group {
@@ -365,7 +445,29 @@ impl Group {
             ag_inter_bytes: AtomicU64::new(0),
             pp_intra_bytes: AtomicU64::new(0),
             pp_inter_bytes: AtomicU64::new(0),
+            comm_timeout_ms: AtomicU64::new(0),
         })
+    }
+
+    /// Arm (or, with 0, disarm) the group's communication deadline: every
+    /// wait — mailbox recv, barrier/exchange, nonblocking round redeems —
+    /// becomes bounded, unwinding with a [`PeerLost`] diagnostic naming
+    /// the missing peer rank and tag instead of hanging forever on a dead
+    /// rank.  Disarmed by default so library users and the pre-elastic
+    /// test suite see bit-identical behavior.
+    pub fn set_comm_timeout(&self, ms: u64) {
+        self.comm_timeout_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Configured communication timeout in milliseconds (0 = unbounded).
+    pub fn comm_timeout_ms(&self) -> u64 {
+        self.comm_timeout_ms.load(Ordering::Relaxed)
+    }
+
+    /// The deadline a wait starting *now* must meet, if armed.
+    fn comm_deadline(&self) -> Option<(Instant, u64)> {
+        let ms = self.comm_timeout_ms.load(Ordering::Relaxed);
+        (ms > 0).then(|| (Instant::now() + Duration::from_millis(ms), ms))
     }
 
     /// The node placement this group was built with, if any.
@@ -394,10 +496,16 @@ impl Group {
             return vec![Arc::new(data)];
         }
         self.bytes_moved.fetch_add(4 * data.len() as u64, Ordering::Relaxed);
+        let deadline = self.comm_deadline();
         let mut s = self.state.lock().unwrap();
         // wait for the previous round to fully drain before depositing
         while s.ready {
-            s = self.cv.wait(s).unwrap();
+            s = wait_bounded(&self.cv, s, deadline, |_, ms| PeerLost {
+                rank: None,
+                tag: TAG_ANY,
+                what: "barrier/exchange drain",
+                waited_ms: ms,
+            });
         }
         let my_gen = s.gen;
         debug_assert!(s.deposits[rank].is_none(), "rank {rank} double deposit");
@@ -408,7 +516,12 @@ impl Group {
             self.cv.notify_all();
         }
         while !(s.ready && s.gen == my_gen) {
-            s = self.cv.wait(s).unwrap();
+            s = wait_bounded(&self.cv, s, deadline, |st: &ExchangeState, ms| PeerLost {
+                rank: st.deposits.iter().position(|d| d.is_none()),
+                tag: TAG_ANY,
+                what: "barrier/exchange",
+                waited_ms: ms,
+            });
         }
         let snap: Vec<Arc<Vec<f32>>> =
             s.deposits.iter().map(|d| d.as_ref().unwrap().clone()).collect();
@@ -470,7 +583,7 @@ impl Group {
     /// consumers — e.g. the ring reduce step — skip even the unwrap).
     pub fn recv_shared(&self, to: usize, from: usize, tag: u64) -> Payload {
         assert!(from < self.n && to < self.n && from != to);
-        self.mail[to][from].recv(tag)
+        self.mail[to][from].recv(tag, from, self.comm_deadline())
     }
 
     /// In-place sum all-reduce.  Deterministic: reduction is always in
@@ -1150,6 +1263,8 @@ impl ReduceHandle {
             return Arc::new(data);
         }
         let n = self.group.n;
+        let deadline = self.group.comm_deadline();
+        let tag = self.tag;
         let mut nb = self.group.nb.lock().unwrap();
         loop {
             let round = nb.get_mut(&self.tag).expect("bucket round vanished");
@@ -1161,7 +1276,14 @@ impl ReduceHandle {
                 }
                 return result;
             }
-            nb = self.group.nb_cv.wait(nb).unwrap();
+            nb = wait_bounded(&self.group.nb_cv, nb, deadline, |m, ms| PeerLost {
+                rank: m
+                    .get(&tag)
+                    .and_then(|r| r.deposits.iter().position(|d| d.is_none())),
+                tag,
+                what: "nonblocking all-reduce",
+                waited_ms: ms,
+            });
         }
     }
 }
@@ -1229,6 +1351,8 @@ impl GatherHandle {
             return data;
         }
         let n = self.group.n;
+        let deadline = self.group.comm_deadline();
+        let tag = self.tag;
         let mut ag = self.group.ag.lock().unwrap();
         loop {
             let round = ag.get_mut(&self.tag).expect("gather round vanished");
@@ -1240,7 +1364,14 @@ impl GatherHandle {
                 }
                 return result;
             }
-            ag = self.group.ag_cv.wait(ag).unwrap();
+            ag = wait_bounded(&self.group.ag_cv, ag, deadline, |m, ms| PeerLost {
+                rank: m
+                    .get(&tag)
+                    .and_then(|r| r.deposits.iter().position(|d| d.is_none())),
+                tag,
+                what: "nonblocking all-gather",
+                waited_ms: ms,
+            });
         }
     }
 }
@@ -1273,6 +1404,8 @@ impl NodeGatherHandle {
             return data;
         }
         let n = self.participants;
+        let deadline = self.group.comm_deadline();
+        let key = self.key;
         let mut agn = self.group.agn.lock().unwrap();
         loop {
             let round = agn.get_mut(&self.key).expect("node gather round vanished");
@@ -1284,7 +1417,15 @@ impl NodeGatherHandle {
                 }
                 return result;
             }
-            agn = self.group.agn_cv.wait(agn).unwrap();
+            agn = wait_bounded(&self.group.agn_cv, agn, deadline, |m, ms| PeerLost {
+                // rank here is the missing *member position* within the node
+                rank: m
+                    .get(&key)
+                    .and_then(|r| r.deposits.iter().position(|d| d.is_none())),
+                tag: key.1,
+                what: "node-local all-gather",
+                waited_ms: ms,
+            });
         }
     }
 }

@@ -31,6 +31,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::collectives::chunk_bounds;
 use crate::util::json::Json;
 
 const MAGIC: u32 = 0x46_4C_4C_4D; // "FLLM"
@@ -57,13 +58,26 @@ pub struct Manifest {
     /// run continues the exact scale schedule.
     pub loss_scale: f32,
     pub scale_good_steps: u32,
+    /// Effective inter-node gradient wire the run used ("fp32" / "bf16" /
+    /// "int8").  int8 re-quantizes, so resuming under a different wire
+    /// silently changes the trajectory — mismatches are rejected.  Legacy
+    /// manifests (no field) derive the wire from their precision, which
+    /// is exactly what `EngineConfig::effective_grad_wire` does for runs
+    /// that never passed `--grad-wire`.
+    pub grad_wire: String,
+    /// Node count the run was packed onto (0 = flat legacy collectives;
+    /// legacy manifests default to 1).  Recorded so tier-split payload
+    /// counters can be interpreted after a placement change — never a
+    /// resume blocker, since placement does not affect values.
+    pub nodes: u32,
 }
 
 impl Manifest {
     pub fn to_json(&self) -> String {
         format!(
             "{{\"step\": {}, \"bundle\": {}, \"stages\": {}, \"tp\": {}, \"dp\": {}, \
-             \"zero_stage\": {}, \"precision\": {}, \"loss_scale\": {}, \"scale_good_steps\": {}}}",
+             \"zero_stage\": {}, \"precision\": {}, \"loss_scale\": {}, \"scale_good_steps\": {}, \
+             \"grad_wire\": {}, \"nodes\": {}}}",
             self.step,
             crate::util::json::escape(&self.bundle),
             self.stages,
@@ -72,7 +86,9 @@ impl Manifest {
             self.zero_stage,
             crate::util::json::escape(&self.precision),
             self.loss_scale,
-            self.scale_good_steps
+            self.scale_good_steps,
+            crate::util::json::escape(&self.grad_wire),
+            self.nodes
         )
     }
 
@@ -106,7 +122,66 @@ impl Manifest {
             precision: j.str_field("precision").unwrap_or_else(|_| "fp32".to_string()),
             loss_scale: j.f64_field("loss_scale").unwrap_or(1.0) as f32,
             scale_good_steps: j.u64_field("scale_good_steps").unwrap_or(0) as u32,
+            // pre-hierarchical manifests never quantized the wire: the
+            // effective wire was the precision's native width (fp32 for
+            // fp32 runs — the back-compat default — bf16 for bf16 runs)
+            grad_wire: j.str_field("grad_wire").unwrap_or_else(|_| {
+                j.str_field("precision").unwrap_or_else(|_| "fp32".to_string())
+            }),
+            nodes: j.u64_field("nodes").unwrap_or(1) as u32,
         })
+    }
+
+    /// Validate this manifest against a resuming run's shape.  Bundle,
+    /// global stage count, tp, precision, and grad wire must match — a
+    /// mismatch there cannot be re-assembled and is rejected hard.  `dp`
+    /// deliberately does NOT appear: the optimizer shards are
+    /// re-partitioned on load (`reslice_opt_state`), so any dp resumes
+    /// any dp — the elastic dp±1 reconfiguration path.  The sharding
+    /// stage ladder has its own compatibility rule
+    /// (`ShardingStage::resume_compatible`), checked by the coordinator.
+    pub fn validate_resume(
+        &self,
+        bundle: &str,
+        stages: u32,
+        tp: u32,
+        precision: &str,
+        grad_wire: &str,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.bundle == bundle && self.stages == stages,
+            "checkpoint bundle mismatch: {:?} at {} global stages vs this run's {:?} at {} — \
+             parameter files cannot be re-assembled across bundles; re-train to produce a \
+             new checkpoint",
+            self.bundle,
+            self.stages,
+            bundle,
+            stages
+        );
+        anyhow::ensure!(
+            self.tp == tp,
+            "checkpoint tensor-parallel degree {} does not match this run's {} — parameter \
+             files are keyed by tp rank and tensor shards do not re-slice; re-train to \
+             produce a new checkpoint (dp, by contrast, re-partitions on resume)",
+            self.tp,
+            tp
+        );
+        anyhow::ensure!(
+            self.precision == precision,
+            "checkpoint precision {:?} does not match this run's {:?} — the parameter \
+             grid and optimizer-state layout both change with precision",
+            self.precision,
+            precision
+        );
+        anyhow::ensure!(
+            self.grad_wire == grad_wire,
+            "checkpoint gradient wire {:?} does not match this run's effective wire {:?} — \
+             a re-quantizing wire (int8) changes the trajectory, so resuming across wire \
+             formats would silently fork the run; pass a matching --grad-wire/--nodes",
+            self.grad_wire,
+            grad_wire
+        );
+        Ok(())
     }
 
     pub fn save(&self, dir: &Path) -> Result<()> {
@@ -171,6 +246,74 @@ pub fn opt_path(dir: &Path, stage: usize, tp_rank: usize, dp_rank: usize) -> Pat
     dir.join(format!("stage{stage}.tp{tp_rank}.dp{dp_rank}.opt.bin"))
 }
 
+/// Re-partition a stage's **sharded** optimizer state (ZeRO stages 1-3)
+/// from a checkpoint written at `old_dp` ranks onto `new_dp` ranks:
+/// read every old rank's shard file, reassemble the full per-component
+/// vectors (Adam `m ++ v`, plus the fp32 masters under bf16 — the
+/// component count is derived from the shard sizes, so both layouts
+/// re-slice through the same path), and return exactly the state
+/// `import_state` expects for `new_dp`'s rank `dp_rank` partition of an
+/// `n_params`-element stage.
+///
+/// The old shards are `chunk_bounds(n_params, old_dp)` spans — contiguous
+/// and ascending — so the reassembly is pure placement: the resliced
+/// state is bitwise the state a run checkpointed at `new_dp` would have
+/// written, which is what keeps post-recovery trajectories bitwise
+/// identical to fresh runs at the new world.
+pub fn reslice_opt_state(
+    dir: &Path,
+    stage: usize,
+    tp_rank: usize,
+    old_dp: usize,
+    new_dp: usize,
+    dp_rank: usize,
+    n_params: usize,
+) -> Result<(Vec<f32>, u64)> {
+    let old_bounds = chunk_bounds(n_params, old_dp);
+    let mut shards: Vec<Vec<f32>> = Vec::with_capacity(old_dp);
+    let mut comp: Option<usize> = None;
+    let mut t = 0u64;
+    for r in 0..old_dp {
+        let (s, aux) = read_f32(&opt_path(dir, stage, tp_rank, r))?;
+        let (lo, hi) = old_bounds[r];
+        let len = hi - lo;
+        if len > 0 {
+            anyhow::ensure!(
+                s.len() % len == 0 && (2..=3).contains(&(s.len() / len)),
+                "optimizer shard {stage}.tp{tp_rank}.dp{r} holds {} floats for a \
+                 {len}-element partition — expected 2 (m ++ v) or 3 (+ masters) components",
+                s.len()
+            );
+            let c = s.len() / len;
+            anyhow::ensure!(
+                comp.map_or(true, |c0| c0 == c),
+                "optimizer shards disagree on component count (rank {r}: {c} vs {:?})",
+                comp
+            );
+            comp = Some(c);
+        } else {
+            anyhow::ensure!(s.is_empty(), "empty partition carries optimizer state");
+        }
+        t = t.max(aux);
+        shards.push(s);
+    }
+    let comp = comp.unwrap_or(2);
+    let mut full = vec![vec![0.0f32; n_params]; comp];
+    for (r, s) in shards.iter().enumerate() {
+        let (lo, hi) = old_bounds[r];
+        let len = hi - lo;
+        for (k, component) in full.iter_mut().enumerate() {
+            component[lo..hi].copy_from_slice(&s[k * len..(k + 1) * len]);
+        }
+    }
+    let (nlo, nhi) = chunk_bounds(n_params, new_dp)[dp_rank];
+    let mut out = Vec::with_capacity(comp * (nhi - nlo));
+    for component in &full {
+        out.extend_from_slice(&component[nlo..nhi]);
+    }
+    Ok((out, t))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +343,8 @@ mod tests {
                 precision: "bf16".into(),
                 loss_scale: 2048.0,
                 scale_good_steps: 7,
+                grad_wire: "int8".into(),
+                nodes: 2,
             };
             let back = Manifest::from_json(&m.to_json()).unwrap();
             assert_eq!(m, back);
@@ -220,9 +365,86 @@ mod tests {
         assert_eq!(m.loss_scale, 1.0);
         assert_eq!(m.scale_good_steps, 0);
         assert_eq!(m.zero_stage, 0);
+        // pre-hierarchical manifests ran a flat fp32 wire on one node
+        assert_eq!(m.grad_wire, "fp32");
+        assert_eq!(m.nodes, 1);
         let legacy_z1 = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"stages\": 2, \
                          \"tp\": 1, \"dp\": 2, \"zero1\": true}";
         assert_eq!(Manifest::from_json(legacy_z1).unwrap().zero_stage, 1);
+    }
+
+    #[test]
+    fn legacy_grad_wire_follows_precision() {
+        // a pre-hierarchical bf16 manifest trained with a bf16 wire; defaulting
+        // its grad_wire to fp32 would spuriously reject every legacy bf16 resume
+        let legacy = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"stages\": 2, \
+                      \"tp\": 1, \"dp\": 1, \"zero1\": false, \"precision\": \"bf16\"}";
+        let m = Manifest::from_json(legacy).unwrap();
+        assert_eq!(m.grad_wire, "bf16");
+        assert_eq!(m.nodes, 1);
+    }
+
+    #[test]
+    fn validate_resume_rejects_shape_not_dp() {
+        let m = Manifest {
+            step: 4,
+            bundle: "tiny-s2-mb2".into(),
+            stages: 2,
+            tp: 2,
+            dp: 3,
+            zero_stage: 1,
+            precision: "bf16".into(),
+            loss_scale: 1024.0,
+            scale_good_steps: 2,
+            grad_wire: "bf16".into(),
+            nodes: 1,
+        };
+        // dp deliberately absent: any dp re-partitions on resume
+        m.validate_resume("tiny-s2-mb2", 2, 2, "bf16", "bf16").unwrap();
+        let tp_err = m
+            .validate_resume("tiny-s2-mb2", 2, 4, "bf16", "bf16")
+            .unwrap_err()
+            .to_string();
+        assert!(tp_err.contains("re-partitions"), "{tp_err}");
+        assert!(m.validate_resume("other", 2, 2, "bf16", "bf16").is_err());
+        assert!(m.validate_resume("tiny-s2-mb2", 3, 2, "bf16", "bf16").is_err());
+        assert!(m.validate_resume("tiny-s2-mb2", 2, 2, "fp32", "bf16").is_err());
+        let wire_err = m
+            .validate_resume("tiny-s2-mb2", 2, 2, "bf16", "int8")
+            .unwrap_err()
+            .to_string();
+        assert!(wire_err.contains("grad-wire"), "{wire_err}");
+    }
+
+    #[test]
+    fn reslice_opt_state_round_trips() {
+        let dir = std::env::temp_dir().join(format!("fllm-reslice-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let n = 13usize;
+        for comp in [2usize, 3] {
+            // write a dp=3 checkpoint of a comp-component state vector
+            let full: Vec<Vec<f32>> = (0..comp)
+                .map(|k| (0..n).map(|i| (k * 100 + i) as f32 + 0.5).collect())
+                .collect();
+            for (r, &(lo, hi)) in chunk_bounds(n, 3).iter().enumerate() {
+                let mut shard = Vec::new();
+                for component in &full {
+                    shard.extend_from_slice(&component[lo..hi]);
+                }
+                write_f32(&opt_path(&dir, 1, 0, r), &shard, 9).unwrap();
+            }
+            // reslice onto dp=2 and check each new rank sees exactly its partition
+            for (r, &(lo, hi)) in chunk_bounds(n, 2).iter().enumerate() {
+                let (s, t) = reslice_opt_state(&dir, 1, 0, 3, 2, r, n).unwrap();
+                assert_eq!(t, 9);
+                let mut want = Vec::new();
+                for component in &full {
+                    want.extend_from_slice(&component[lo..hi]);
+                }
+                assert_eq!(s, want, "comp={comp} rank={r}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

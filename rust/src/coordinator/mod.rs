@@ -51,6 +51,7 @@
 pub mod checkpoint;
 pub mod worker;
 
+use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -58,7 +59,7 @@ use std::thread;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::collectives::{Algo, Group, NodeMap, SubGroup};
+use crate::collectives::{Algo, Group, NodeMap, PeerLost, SubGroup};
 use crate::config::ScheduleKind;
 use crate::metrics::StepTimer;
 use crate::optim::{AdamConfig, LrSchedule};
@@ -67,6 +68,54 @@ use crate::runtime::{Bundle, BuiltinSpec, Runtime, StageBackend};
 use crate::schedule;
 use crate::topology::{packed_gpu_of, Machine, GPUS_PER_NODE};
 use crate::zero::ShardingStage;
+
+/// Deterministic fault injection (CLI `--fault`): reproduce the failure
+/// modes the paper's 1024+-GCD runs hit in production, on demand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    /// `kill@<step>:<rank>` — world rank `rank` dies at the top of step
+    /// `step`, before any collective of that step.  Its peers hit the
+    /// comm deadline (`PeerLost`), the coordinator stops the world at the
+    /// last completed checkpoint, and a dp−1 world resumes from it.
+    Kill { step: u32, rank: usize },
+    /// `join@<step>` — a planned capacity increase: the run checkpoints
+    /// at `step` and a dp+1 world resumes from that manifest.
+    Join { step: u32 },
+}
+
+impl FaultSpec {
+    /// Parse the CLI grammar: `kill@<step>:<rank>` or `join@<step>`.
+    pub fn parse(s: &str) -> Option<Self> {
+        if let Some(rest) = s.strip_prefix("kill@") {
+            let (step, rank) = rest.split_once(':')?;
+            return Some(FaultSpec::Kill { step: step.parse().ok()?, rank: rank.parse().ok()? });
+        }
+        if let Some(rest) = s.strip_prefix("join@") {
+            return Some(FaultSpec::Join { step: rest.parse().ok()? });
+        }
+        None
+    }
+}
+
+/// The typed error a fault-killed worker dies with — the coordinator
+/// downcasts it to tell an injected kill from a real worker failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KilledByFault {
+    pub step: u32,
+    pub rank: usize,
+}
+
+impl fmt::Display for KilledByFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "fault injection killed world rank {} at the top of step {}",
+            self.rank, self.step
+        )
+    }
+}
+
+impl std::error::Error for KilledByFault {}
 
 /// Engine configuration for one training run.
 #[derive(Debug, Clone)]
@@ -156,6 +205,17 @@ pub struct EngineConfig {
     pub checkpoint_every: u32,
     /// Resume from `checkpoint_dir` (params + optimizer + data cursor).
     pub resume: bool,
+    /// Deadline on every collective wait (p2p recv, barrier, nonblocking
+    /// all-reduce / all-gather drains), in milliseconds.  `0` leaves the
+    /// waits unbounded — the unit-test default, where a slow CI machine
+    /// must not fail a correct run.  The CLI arms 10 s by default, so a
+    /// dead peer surfaces as a diagnostic [`PeerLost`] (rank + tag)
+    /// instead of a silent permanent hang.  A scheduled `kill` fault
+    /// arms a 5 s deadline even at 0: recovery starts from a timeout.
+    pub comm_timeout_ms: u64,
+    /// Deterministic fault injection (`--fault kill@S:R` / `join@S`);
+    /// `None` (default) injects nothing.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for EngineConfig {
@@ -185,6 +245,8 @@ impl Default for EngineConfig {
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume: false,
+            comm_timeout_ms: 0,
+            fault: None,
         }
     }
 }
@@ -306,6 +368,15 @@ pub struct TrainReport {
     pub final_loss_scale: f32,
     /// Optimizer steps skipped by the dynamic loss scaler.
     pub steps_skipped: u64,
+    /// Elastic reconfigurations the run survived: each fault recovery
+    /// (dp−1 restart from the last manifest) or planned join (dp+1)
+    /// counts once.  0 on an undisturbed run.
+    pub recovery_events: u64,
+    /// Optimizer steps whose results were discarded by a fault recovery
+    /// — steps the failed world completed beyond its last checkpoint,
+    /// recomputed by the shrunken world.  The measured bounded-loss cost
+    /// of a failure (≤ `checkpoint_every` by construction).
+    pub lost_steps: u64,
 }
 
 impl TrainReport {
@@ -426,8 +497,6 @@ pub fn train_with_bundle(
             cfg.microbatches
         );
     }
-    let world_size = pp * dp * tp;
-
     if let Some(wire) = cfg.grad_wire {
         anyhow::ensure!(
             cfg.nodes >= 1 || wire == GradWire::for_dtype(cfg.precision),
@@ -436,7 +505,317 @@ pub fn train_with_bundle(
             wire.name()
         );
     }
+    // the per-node packing bound is checked inside run_world: dp (and so
+    // the world size) changes across elastic legs
+
+    let sched = schedule::build(cfg.schedule, pp as u32, cfg.microbatches);
+    sched.validate().map_err(|e| anyhow!("invalid schedule: {e}"))?;
+    let sched = Arc::new(sched);
+
+    // ---- elastic outer loop -----------------------------------------------
+    // Each iteration runs one *world* (a full set of worker threads at the
+    // current dp).  On a fault — the injected kill, or a peer lost to a
+    // collective deadline — the world stops at its last manifest and a new
+    // one launches at dp−1, re-partitioning the optimizer shards on load;
+    // a planned `join@N` splits the run at N and grows to dp+1.  Recovery
+    // is literally "a fresh run at the new world resuming from the
+    // checkpoint" — the same code path — which is what makes the
+    // post-recovery trajectory bitwise identical to one
+    // (`tests/elastic.rs` locks the full stage × precision grid).
+    let mut attempt = cfg.clone();
+    let mut resume = resolve_resume(&attempt, n_stages)?;
+    let total_target = resume.start_step + cfg.steps;
+    let opt_state_bytes = Arc::new(AtomicU64::new(0));
+    let mut logs: Vec<StepLog> = Vec::new();
+    let mut counters = Counters::default();
+    let mut recovery_events = 0u64;
+    let mut lost_steps = 0u64;
+    let world_size = loop {
+        // a planned join splits the leg so it checkpoints exactly at N
+        let pending_join = match attempt.fault {
+            Some(FaultSpec::Join { step }) if resume.start_step < step && step < total_target => {
+                anyhow::ensure!(
+                    attempt.checkpoint_dir.is_some(),
+                    "--fault join@{step} needs --checkpoint DIR: the grown world picks \
+                     its state up from the manifest"
+                );
+                Some(step)
+            }
+            _ => None,
+        };
+        attempt.steps = pending_join.unwrap_or(total_target) - resume.start_step;
+        let run = run_world(&attempt, &rt, &bundle, &sched, pp, v, &resume, &opt_state_bytes)?;
+        counters.add(&run.c);
+        match run.failure {
+            None => {
+                logs.extend(run.logs);
+                match pending_join {
+                    Some(_) => {
+                        // grow: dp+1 resumes from the leg-final checkpoint
+                        recovery_events += 1;
+                        attempt.dp += 1;
+                        attempt.fault = None;
+                        attempt.resume = true;
+                        resume = resolve_resume(&attempt, n_stages)?;
+                    }
+                    None => break run.world_size,
+                }
+            }
+            Some(failure) => {
+                // without an injected fault this is a real failure: surface
+                // the diagnostic instead of silently shrinking the world
+                if attempt.fault.is_none() {
+                    return Err(failure.into_error());
+                }
+                anyhow::ensure!(
+                    attempt.dp > 1,
+                    "{failure} at dp=1 — no surviving data-parallel replica to shrink onto"
+                );
+                recovery_events += 1;
+                attempt.dp -= 1;
+                attempt.fault = None;
+                attempt.resume = attempt
+                    .checkpoint_dir
+                    .as_deref()
+                    .is_some_and(|d| checkpoint::Manifest::load(d).is_ok());
+                resume = if attempt.resume {
+                    resolve_resume(&attempt, n_stages)?
+                } else {
+                    // the fault hit before any checkpoint was written: the
+                    // shrunken world restarts the run from scratch
+                    ResumePoint {
+                        start_step: 0,
+                        loss_scale: cfg.loss_scale_init,
+                        scale_good: 0,
+                        ckpt_dp: attempt.dp,
+                    }
+                };
+                // steps the failed leg completed beyond the recovery point
+                // are recomputed by the new world — the fault's step cost
+                let (kept, lost): (Vec<_>, Vec<_>) =
+                    run.logs.into_iter().partition(|l| l.step < resume.start_step);
+                lost_steps += lost.len() as u64;
+                logs.extend(kept);
+            }
+        }
+    };
+
+    let tokens_per_step =
+        bundle.meta.tokens_per_microbatch * cfg.microbatches as u64 * attempt.dp as u64;
+    let mut timer = StepTimer::new();
+    for l in &logs {
+        timer.record(l.step_time_s);
+    }
+    let mean_step = timer.mean_after_warmup(1.min(logs.len().saturating_sub(1)));
+    let steps_skipped = logs.iter().filter(|l| l.skipped).count() as u64;
+    let final_loss_scale = logs.last().map(|l| l.loss_scale).unwrap_or(resume.loss_scale);
+    Ok(TrainReport {
+        world_size,
+        total_params: bundle.meta.model.total_params,
+        tokens_per_step,
+        mean_step_time_s: mean_step,
+        tokens_per_sec: tokens_per_step as f64 / mean_step,
+        comm_bytes: counters.comm_bytes,
+        tp_ar_bytes: counters.tp_ar_bytes,
+        tp_ar_rounds: counters.tp_ar_rounds,
+        dp_sync_hidden_s: counters.dp_sync_hidden_ns as f64 / 1e9,
+        dp_sync_exposed_s: counters.dp_sync_exposed_ns as f64 / 1e9,
+        dp_bucket_rounds: counters.dp_bucket_rounds,
+        dp_bucket_payload_bytes: counters.dp_bucket_payload_bytes,
+        dp_param_ag_bytes: counters.dp_param_ag_bytes,
+        pp_p2p_payload_bytes: counters.pp_p2p_payload_bytes,
+        dp_bucket_intra_bytes: counters.dp_bucket_intra_bytes,
+        dp_bucket_inter_bytes: counters.dp_bucket_inter_bytes,
+        dp_param_ag_intra_bytes: counters.dp_param_ag_intra_bytes,
+        dp_param_ag_inter_bytes: counters.dp_param_ag_inter_bytes,
+        pp_p2p_intra_bytes: counters.pp_p2p_intra_bytes,
+        pp_p2p_inter_bytes: counters.pp_p2p_inter_bytes,
+        zero_stage: cfg.zero_stage,
+        zero3_peak_gathered_floats: counters.zero3_peak_gathered_floats,
+        opt_state_bytes_per_rank: opt_state_bytes.load(Ordering::Relaxed),
+        precision: cfg.precision,
+        final_loss_scale,
+        steps_skipped,
+        recovery_events,
+        lost_steps,
+        logs,
+    })
+}
+
+/// Where a world (re)starts: the first step index, the loss-scaler state,
+/// and the dp the checkpoint on disk was written at (when it differs from
+/// the attempt's dp, the workers re-partition the optimizer shards on
+/// load — the elastic dp±1 path).
+#[derive(Debug, Clone, Copy)]
+struct ResumePoint {
+    start_step: u32,
+    loss_scale: f32,
+    scale_good: u32,
+    ckpt_dp: usize,
+}
+
+/// Validate the manifest against this run's shape and pick up the step /
+/// loss-scaler / checkpoint-dp state where it left off.  Global stages,
+/// not worker ranks — re-chunked and re-partitioned resumes are legal.
+fn resolve_resume(cfg: &EngineConfig, n_stages: usize) -> Result<ResumePoint> {
+    if !cfg.resume {
+        return Ok(ResumePoint {
+            start_step: 0,
+            loss_scale: cfg.loss_scale_init,
+            scale_good: 0,
+            ckpt_dp: cfg.dp,
+        });
+    }
+    let dir = cfg
+        .checkpoint_dir
+        .as_ref()
+        .ok_or_else(|| anyhow!("--resume requires a checkpoint dir"))?;
+    let manifest = checkpoint::Manifest::load(dir)?;
+    manifest.validate_resume(
+        &cfg.bundle,
+        n_stages as u32,
+        cfg.tp as u32,
+        cfg.precision.name(),
+        cfg.effective_grad_wire().name(),
+    )?;
+    let ckpt_stage = ShardingStage::from_index(manifest.zero_stage)
+        .ok_or_else(|| anyhow!("manifest carries unknown zero_stage {}", manifest.zero_stage))?;
+    anyhow::ensure!(
+        ckpt_stage.resume_compatible(cfg.zero_stage),
+        "checkpoint sharding stage {} cannot resume as stage {}: only the identical \
+         stage, or the reshard-compatible 1 <-> 2 pair (same 1/dp optimizer-shard \
+         layout, full on-disk params), round-trips — stages 0 and 3 change the \
+         optimizer-state or parameter residency layout",
+        ckpt_stage.index(),
+        cfg.zero_stage.index()
+    );
+    anyhow::ensure!(manifest.dp >= 1, "manifest records dp=0");
+    Ok(ResumePoint {
+        start_step: manifest.step,
+        loss_scale: manifest.loss_scale,
+        scale_good: manifest.scale_good_steps,
+        ckpt_dp: manifest.dp as usize,
+    })
+}
+
+/// Why a world stopped early.
+#[derive(Debug)]
+enum RunFailure {
+    /// The injected `kill@step:rank` fired.
+    Killed(KilledByFault),
+    /// A collective wait hit its deadline — a peer is gone.
+    Lost(PeerLost),
+}
+
+impl fmt::Display for RunFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RunFailure::Killed(k) => k.fmt(f),
+            RunFailure::Lost(l) => l.fmt(f),
+        }
+    }
+}
+
+impl RunFailure {
+    fn into_error(self) -> anyhow::Error {
+        match self {
+            RunFailure::Killed(k) => anyhow::Error::new(k),
+            RunFailure::Lost(l) => anyhow::Error::new(l).context(
+                "collective wait timed out: a peer is gone and the run has no \
+                 fault/recovery plan (pass --fault, or fix the hang)",
+            ),
+        }
+    }
+}
+
+/// Byte/round/time counters harvested from one world's collective groups;
+/// legs of an elastic run sum (peaks take the max).
+#[derive(Debug, Default, Clone, Copy)]
+struct Counters {
+    comm_bytes: u64,
+    tp_ar_bytes: u64,
+    tp_ar_rounds: u64,
+    dp_sync_hidden_ns: u64,
+    dp_sync_exposed_ns: u64,
+    dp_bucket_rounds: u64,
+    dp_bucket_payload_bytes: u64,
+    dp_param_ag_bytes: u64,
+    pp_p2p_payload_bytes: u64,
+    dp_bucket_intra_bytes: u64,
+    dp_bucket_inter_bytes: u64,
+    dp_param_ag_intra_bytes: u64,
+    dp_param_ag_inter_bytes: u64,
+    pp_p2p_intra_bytes: u64,
+    pp_p2p_inter_bytes: u64,
+    zero3_peak_gathered_floats: u64,
+}
+
+impl Counters {
+    fn add(&mut self, o: &Counters) {
+        self.comm_bytes += o.comm_bytes;
+        self.tp_ar_bytes += o.tp_ar_bytes;
+        self.tp_ar_rounds += o.tp_ar_rounds;
+        self.dp_sync_hidden_ns += o.dp_sync_hidden_ns;
+        self.dp_sync_exposed_ns += o.dp_sync_exposed_ns;
+        self.dp_bucket_rounds += o.dp_bucket_rounds;
+        self.dp_bucket_payload_bytes += o.dp_bucket_payload_bytes;
+        self.dp_param_ag_bytes += o.dp_param_ag_bytes;
+        self.pp_p2p_payload_bytes += o.pp_p2p_payload_bytes;
+        self.dp_bucket_intra_bytes += o.dp_bucket_intra_bytes;
+        self.dp_bucket_inter_bytes += o.dp_bucket_inter_bytes;
+        self.dp_param_ag_intra_bytes += o.dp_param_ag_intra_bytes;
+        self.dp_param_ag_inter_bytes += o.dp_param_ag_inter_bytes;
+        self.pp_p2p_intra_bytes += o.pp_p2p_intra_bytes;
+        self.pp_p2p_inter_bytes += o.pp_p2p_inter_bytes;
+        self.zero3_peak_gathered_floats =
+            self.zero3_peak_gathered_floats.max(o.zero3_peak_gathered_floats);
+    }
+}
+
+/// One world: spawned, run to completion or first fault, harvested.
+struct WorldRun {
+    logs: Vec<StepLog>,
+    world_size: usize,
+    /// `None` on a clean leg; the distinguished fault otherwise.  Real
+    /// worker errors (I/O, asserts) propagate as `Err` instead.
+    failure: Option<RunFailure>,
+    c: Counters,
+}
+
+/// Suppress the default panic printout for [`PeerLost`] panics: they are
+/// the *expected* way a worker abandons a collective when a peer dies,
+/// and the coordinator harvests them from the join handles.  Every other
+/// panic keeps the previous hook's behavior.
+fn install_peer_lost_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<PeerLost>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Spawn and run one full world at `cfg.dp`, harvesting logs, counters,
+/// and the distinguished fault (if any) from the worker joins.
+#[allow(clippy::too_many_arguments)]
+fn run_world(
+    cfg: &EngineConfig,
+    rt: &Arc<Runtime>,
+    bundle: &Arc<Bundle>,
+    sched: &Arc<schedule::Schedule>,
+    pp: usize,
+    v: usize,
+    resume: &ResumePoint,
+    opt_state_bytes: &Arc<AtomicU64>,
+) -> Result<WorldRun> {
+    let dp = cfg.dp;
+    let tp = cfg.tp;
+    let world_size = pp * dp * tp;
     if cfg.hier() {
+        // dp changes across elastic legs, so the packing check is per world
         let per_node = (world_size as u32).div_ceil(cfg.nodes);
         anyhow::ensure!(
             per_node <= GPUS_PER_NODE,
@@ -445,49 +824,6 @@ pub fn train_with_bundle(
             cfg.nodes
         );
     }
-
-    let sched = schedule::build(cfg.schedule, pp as u32, cfg.microbatches);
-    sched.validate().map_err(|e| anyhow!("invalid schedule: {e}"))?;
-    let sched = Arc::new(sched);
-
-    // checkpoint resume: validate the manifest against this run's shape
-    // (global stages, not worker ranks — re-chunked resumes are legal)
-    // and pick up the loss-scaler state where the checkpoint left it
-    let (start_step, start_loss_scale, start_scale_good) = if cfg.resume {
-        let dir = cfg
-            .checkpoint_dir
-            .as_ref()
-            .ok_or_else(|| anyhow!("--resume requires a checkpoint dir"))?;
-        let manifest = checkpoint::Manifest::load(dir)?;
-        anyhow::ensure!(
-            manifest.bundle == cfg.bundle
-                && manifest.stages == n_stages as u32
-                && manifest.tp == tp as u32
-                && manifest.dp == dp as u32,
-            "checkpoint shape mismatch: {manifest:?} vs current run"
-        );
-        let ckpt_stage = ShardingStage::from_index(manifest.zero_stage)
-            .ok_or_else(|| anyhow!("manifest carries unknown zero_stage {}", manifest.zero_stage))?;
-        anyhow::ensure!(
-            ckpt_stage.resume_compatible(cfg.zero_stage),
-            "checkpoint sharding stage {} cannot resume as stage {}: only the identical \
-             stage, or the reshard-compatible 1 <-> 2 pair (same 1/dp optimizer-shard \
-             layout, full on-disk params), round-trips — stages 0 and 3 change the \
-             optimizer-state or parameter residency layout",
-            ckpt_stage.index(),
-            cfg.zero_stage.index()
-        );
-        anyhow::ensure!(
-            manifest.precision == cfg.precision.name(),
-            "checkpoint precision {:?} does not match this run's {:?} — the parameter \
-             grid and optimizer-state layout both change with precision",
-            manifest.precision,
-            cfg.precision.name()
-        );
-        (manifest.step, manifest.loss_scale, manifest.scale_good_steps)
-    } else {
-        (0, cfg.loss_scale_init, 0)
-    };
 
     // world group: tagged p2p mailboxes between workers.  Megatron rank
     // order, TP innermost: rank = (pp_rank * dp + dp_rank) * tp + tp_rank.
@@ -521,11 +857,28 @@ pub fn train_with_bundle(
         })
         .collect();
 
+    // arm the deadline on every wait a dead peer could strand: either the
+    // explicit --comm-timeout-ms, or a defensive default when a kill is
+    // scheduled (the killed rank's peers MUST time out to start recovery).
+    // TP subgroup traffic rides the world mailboxes, so bounding the world
+    // and DP groups covers every collective in the engine path.
+    let timeout_ms = if cfg.comm_timeout_ms > 0 {
+        cfg.comm_timeout_ms
+    } else if matches!(cfg.fault, Some(FaultSpec::Kill { .. })) {
+        5_000
+    } else {
+        0
+    };
+    if timeout_ms > 0 {
+        install_peer_lost_hook();
+        world.set_comm_timeout(timeout_ms);
+        for g in &dp_groups {
+            g.set_comm_timeout(timeout_ms);
+        }
+    }
+
     // per-step report: (step, loss, grad norm, loss scale, skipped)
     let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32, f32, bool)>();
-
-    // measured per-rank optimizer residency (max over workers)
-    let opt_state_bytes = Arc::new(AtomicU64::new(0));
 
     let mut handles = Vec::with_capacity(world_size);
     for pp_rank in 0..pp {
@@ -546,9 +899,10 @@ pub fn train_with_bundle(
                     dp,
                     tp,
                     v,
-                    start_step,
-                    start_loss_scale,
-                    start_scale_good,
+                    start_step: resume.start_step,
+                    start_loss_scale: resume.loss_scale,
+                    start_scale_good: resume.scale_good,
+                    ckpt_dp: resume.ckpt_dp,
                     opt_state_bytes: opt_state_bytes.clone(),
                     loss_tx: if pp_rank == pp - 1 && dp_rank == 0 && tp_rank == 0 {
                         Some(loss_tx.clone())
@@ -567,22 +921,16 @@ pub fn train_with_bundle(
     }
     drop(loss_tx);
 
-    // leader: collect per-step losses as they stream in
-    let mut timer = StepTimer::new();
+    // leader: collect per-step losses as they stream in.  The channel
+    // closes when the reporting worker exits — cleanly, by injected kill,
+    // or by PeerLost panic — so this loop can never outlive a fault.
     let mut logs: Vec<StepLog> = Vec::with_capacity(cfg.steps as usize);
     let start = std::time::Instant::now();
     let mut last = 0.0f64;
-    let mut steps_skipped = 0u64;
-    let mut final_loss_scale = start_loss_scale;
     while let Ok((step, loss, grad_norm, loss_scale, skipped)) = loss_rx.recv() {
         let now = start.elapsed().as_secs_f64();
         let dt = now - last;
         last = now;
-        timer.record(dt);
-        if skipped {
-            steps_skipped += 1;
-        }
-        final_loss_scale = loss_scale;
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
             let skip_note = if skipped { "  [overflow: step skipped]" } else { "" };
             println!(
@@ -592,95 +940,59 @@ pub fn train_with_bundle(
         logs.push(StepLog { step, loss, grad_norm, step_time_s: dt, loss_scale, skipped });
     }
 
+    // harvest every join before deciding the outcome: an injected kill
+    // outranks the secondary PeerLost panics it causes in the survivors,
+    // and any *real* worker error outranks both
+    let mut failure: Option<RunFailure> = None;
+    let mut hard: Option<anyhow::Error> = None;
     for h in handles {
-        h.join()
-            .map_err(|_| anyhow!("worker panicked"))?
-            .context("worker failed")?;
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => match e.downcast::<KilledByFault>() {
+                Ok(k) => failure = Some(RunFailure::Killed(k)),
+                Err(e) => hard = hard.or(Some(e.context("worker failed"))),
+            },
+            Err(payload) => match payload.downcast::<PeerLost>() {
+                Ok(l) => {
+                    if failure.is_none() {
+                        failure = Some(RunFailure::Lost(*l));
+                    }
+                }
+                Err(_) => hard = hard.or(Some(anyhow!("worker panicked"))),
+            },
+        }
+    }
+    if let Some(e) = hard {
+        return Err(e);
     }
 
-    let tokens_per_step =
-        bundle.meta.tokens_per_microbatch * cfg.microbatches as u64 * dp as u64;
-    let mean_step = timer.mean_after_warmup(1.min(logs.len().saturating_sub(1)));
     // TP subgroup ring traffic flows through the world mailboxes, so
     // world.bytes_moved already includes its wire bytes; the subgroup
     // counters track the logical all-reduce payload separately.
-    let comm_bytes = world.bytes_moved.load(Ordering::Relaxed)
-        + dp_groups
-            .iter()
-            .map(|g| g.bytes_moved.load(Ordering::Relaxed))
-            .sum::<u64>();
-    let tp_ar_bytes = tp_groups
-        .iter()
-        .map(|g| g.ar_bytes.load(Ordering::Relaxed))
-        .sum::<u64>();
-    let tp_ar_rounds = tp_groups
-        .iter()
-        .map(|g| g.ar_rounds.load(Ordering::Relaxed))
-        .sum::<u64>();
-    let dp_sync_hidden_s = dp_groups
-        .iter()
-        .map(|g| g.nb_hidden_ns.load(Ordering::Relaxed))
-        .sum::<u64>() as f64
-        / 1e9;
-    let dp_sync_exposed_s = dp_groups
-        .iter()
-        .map(|g| g.nb_exposed_ns.load(Ordering::Relaxed))
-        .sum::<u64>() as f64
-        / 1e9;
-    let dp_bucket_rounds = dp_groups
-        .iter()
-        .map(|g| g.nb_rounds.load(Ordering::Relaxed))
-        .sum::<u64>();
-    let dp_bucket_payload_bytes = dp_groups
-        .iter()
-        .map(|g| g.nb_payload_bytes.load(Ordering::Relaxed))
-        .sum::<u64>();
-    let dp_param_ag_bytes = dp_groups
-        .iter()
-        .map(|g| g.ag_payload_bytes.load(Ordering::Relaxed))
-        .sum::<u64>();
-    let zero3_peak_gathered_floats = dp_groups
-        .iter()
-        .map(|g| g.ag_peak_floats.load(Ordering::Relaxed))
-        .max()
-        .unwrap_or(0);
-    let pp_p2p_payload_bytes = world.pp_payload_bytes.load(Ordering::Relaxed);
     let sum_dp = |f: fn(&Group) -> &AtomicU64| {
         dp_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
     };
-    let dp_bucket_intra_bytes = sum_dp(|g| &g.nb_intra_bytes);
-    let dp_bucket_inter_bytes = sum_dp(|g| &g.nb_inter_bytes);
-    let dp_param_ag_intra_bytes = sum_dp(|g| &g.ag_intra_bytes);
-    let dp_param_ag_inter_bytes = sum_dp(|g| &g.ag_inter_bytes);
-    let pp_p2p_intra_bytes = world.pp_intra_bytes.load(Ordering::Relaxed);
-    let pp_p2p_inter_bytes = world.pp_inter_bytes.load(Ordering::Relaxed);
-    Ok(TrainReport {
-        world_size,
-        total_params: bundle.meta.model.total_params,
-        tokens_per_step,
-        mean_step_time_s: mean_step,
-        tokens_per_sec: tokens_per_step as f64 / mean_step,
-        comm_bytes,
-        tp_ar_bytes,
-        tp_ar_rounds,
-        dp_sync_hidden_s,
-        dp_sync_exposed_s,
-        dp_bucket_rounds,
-        dp_bucket_payload_bytes,
-        dp_param_ag_bytes,
-        pp_p2p_payload_bytes,
-        dp_bucket_intra_bytes,
-        dp_bucket_inter_bytes,
-        dp_param_ag_intra_bytes,
-        dp_param_ag_inter_bytes,
-        pp_p2p_intra_bytes,
-        pp_p2p_inter_bytes,
-        zero_stage: cfg.zero_stage,
-        zero3_peak_gathered_floats,
-        opt_state_bytes_per_rank: opt_state_bytes.load(Ordering::Relaxed),
-        precision: cfg.precision,
-        final_loss_scale,
-        steps_skipped,
-        logs,
-    })
+    let c = Counters {
+        comm_bytes: world.bytes_moved.load(Ordering::Relaxed) + sum_dp(|g| &g.bytes_moved),
+        tp_ar_bytes: tp_groups.iter().map(|g| g.ar_bytes.load(Ordering::Relaxed)).sum(),
+        tp_ar_rounds: tp_groups.iter().map(|g| g.ar_rounds.load(Ordering::Relaxed)).sum(),
+        dp_sync_hidden_ns: sum_dp(|g| &g.nb_hidden_ns),
+        dp_sync_exposed_ns: sum_dp(|g| &g.nb_exposed_ns),
+        dp_bucket_rounds: sum_dp(|g| &g.nb_rounds),
+        dp_bucket_payload_bytes: sum_dp(|g| &g.nb_payload_bytes),
+        dp_param_ag_bytes: sum_dp(|g| &g.ag_payload_bytes),
+        pp_p2p_payload_bytes: world.pp_payload_bytes.load(Ordering::Relaxed),
+        dp_bucket_intra_bytes: sum_dp(|g| &g.nb_intra_bytes),
+        dp_bucket_inter_bytes: sum_dp(|g| &g.nb_inter_bytes),
+        dp_param_ag_intra_bytes: sum_dp(|g| &g.ag_intra_bytes),
+        dp_param_ag_inter_bytes: sum_dp(|g| &g.ag_inter_bytes),
+        pp_p2p_intra_bytes: world.pp_intra_bytes.load(Ordering::Relaxed),
+        pp_p2p_inter_bytes: world.pp_inter_bytes.load(Ordering::Relaxed),
+        zero3_peak_gathered_floats: dp_groups
+            .iter()
+            .map(|g| g.ag_peak_floats.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0),
+    };
+    Ok(WorldRun { logs, world_size, failure, c })
 }

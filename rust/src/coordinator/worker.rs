@@ -62,7 +62,7 @@ use crate::schedule::{Op, Schedule};
 use crate::topology::packed_gpu_of;
 use crate::zero::DistOptimizer;
 
-use super::{checkpoint, EngineConfig};
+use super::{checkpoint, EngineConfig, FaultSpec, KilledByFault};
 
 /// Everything a worker needs; handed over at spawn.
 pub struct WorkerCtx {
@@ -90,6 +90,11 @@ pub struct WorkerCtx {
     /// resume, `cfg.loss_scale_init` otherwise).
     pub start_loss_scale: f32,
     pub start_scale_good: u32,
+    /// dp the checkpoint being resumed was written at (== `dp` when not
+    /// resuming).  When it differs, the resume path re-partitions the
+    /// optimizer shards across the new dp (`checkpoint::reslice_opt_state`)
+    /// — the elastic dp±1 reconfiguration.
+    pub ckpt_dp: usize,
     /// Per-rank resident optimizer-state bytes, reported back to the
     /// leader (max over workers) — the measured shard-bytes figure the
     /// examples print.
@@ -717,12 +722,26 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             } else {
                 p
             });
-            let (state, t) = checkpoint::read_f32(&checkpoint::opt_path(
-                dir,
-                g,
-                ctx.tp_rank,
-                ctx.dp_rank,
-            ))?;
+            // optimizer state: same-dp resumes read this rank's own shard
+            // file back; a dp change re-partitions.  Stage 0 keeps FULL
+            // identical state on every rank, so any rank count resumes
+            // from dp-rank 0's file; stages 1+ reassemble the old shards
+            // and re-slice onto the new 1/dp partition.
+            let (state, t) = if ctx.ckpt_dp == ctx.dp {
+                checkpoint::read_f32(&checkpoint::opt_path(dir, g, ctx.tp_rank, ctx.dp_rank))?
+            } else if !ctx.cfg.zero_stage.shards_optimizer() {
+                checkpoint::read_f32(&checkpoint::opt_path(dir, g, ctx.tp_rank, 0))?
+            } else {
+                checkpoint::reslice_opt_state(
+                    dir,
+                    g,
+                    ctx.tp_rank,
+                    ctx.ckpt_dp,
+                    ctx.dp,
+                    ctx.dp_rank,
+                    full_len[c],
+                )?
+            };
             opts[c].import_state(&state, t);
         }
     }
@@ -788,6 +807,16 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
 
     for rel_step in 0..ctx.cfg.steps {
         let step = ctx.start_step + rel_step;
+        // deterministic fault injection: die at the top of the step,
+        // before any collective — the step boundary is the only point
+        // where a death can never tear a checkpoint (saves are barrier-
+        // bracketed at the END of a step).  Peers hit the comm deadline
+        // (PeerLost) and the coordinator shrinks the world.
+        if let Some(FaultSpec::Kill { step: ks, rank }) = ctx.cfg.fault {
+            if step == ks && ctx.world_rank() == rank {
+                return Err(anyhow::Error::new(KilledByFault { step: ks, rank }));
+            }
+        }
         for g in grad_accum.iter_mut() {
             g.iter_mut().for_each(|x| *x = 0.0);
         }
@@ -1118,6 +1147,8 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         precision: ctx.cfg.precision.name().to_string(),
                         loss_scale: scaler.scale(),
                         scale_good_steps: scaler.good_steps(),
+                        grad_wire: ctx.cfg.effective_grad_wire().name().to_string(),
+                        nodes: ctx.cfg.nodes,
                     }
                     .save(dir)?;
                 }

@@ -13,7 +13,7 @@
 use anyhow::Result;
 
 use frontier_llm::config::{self, ParallelConfig, ScheduleKind};
-use frontier_llm::coordinator::{train, EngineConfig};
+use frontier_llm::coordinator::{train, EngineConfig, FaultSpec};
 use frontier_llm::hpo;
 use frontier_llm::mem;
 use frontier_llm::metrics::weak_scaling_efficiency;
@@ -42,6 +42,7 @@ COMMANDS:
            [--nodes N] [--grad-wire fp32|bf16|int8] [--zero3-prefetch N]
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
+           [--comm-timeout-ms MS] [--fault kill@STEP:RANK|join@STEP]
 
   --tp N shards every builtin stage across N tensor-parallel worker
   threads (Megatron column/row-parallel linears, vocab-parallel embed and
@@ -81,10 +82,23 @@ COMMANDS:
   inter-node hop only.  --zero3-prefetch N widens the ZeRO-3 gather
   lookahead to N chunks ((N+1)-chunk peak residency; default 1).
 
+  The engine is elastic: every collective wait carries a deadline
+  (--comm-timeout-ms, default 10000; 0 disables), so a dead worker
+  surfaces as a diagnostic PeerLost error instead of a silent hang —
+  and with checkpointing enabled the run recovers by restarting at dp-1
+  from the last manifest (optimizer shards re-partition on load; the
+  post-recovery trajectory is bitwise a fresh run at the new dp).
+  --fault injects failures deterministically: kill@STEP:RANK kills one
+  world rank at the top of that step, join@STEP grows the world to dp+1
+  at a planned step.  The report counts recovery events and lost
+  (recomputed) steps.
+
   Quickstart:
 
     frontier train --bundle builtin:tiny-s4-mb2 --tp 2 --dp 2 --steps 20
     frontier train --bundle builtin:tiny-s4-mb2 --precision bf16 --dp 2 --steps 20
+    frontier train --bundle builtin:tiny-s2-mb2 --dp 2 --steps 8 \\
+        --checkpoint /tmp/ck --checkpoint-every 2 --fault kill@3:1
 ";
 
 /// `--zero-stage {0..3}` with `--zero1` as the deprecated stage-1 alias
@@ -459,6 +473,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             None => None,
         },
         zero3_prefetch: args.opt("zero3-prefetch", 1usize).map_err(anyhow::Error::msg)?,
+        comm_timeout_ms: args.opt("comm-timeout-ms", 10_000u64).map_err(anyhow::Error::msg)?,
+        fault: match args.get("fault") {
+            Some(s) => Some(FaultSpec::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("--fault must be kill@<step>:<rank> or join@<step>, got {s:?}")
+            })?),
+            None => None,
+        },
     };
     let report = train(&cfg)?;
     println!(
@@ -513,6 +534,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             "  TP: {} all-reduce rounds, {:.1} MB reduced payload",
             report.tp_ar_rounds,
             report.tp_ar_bytes as f64 / 1e6
+        );
+    }
+    if report.recovery_events > 0 {
+        println!(
+            "  elastic: {} recovery event(s), {} step(s) lost and recomputed, \
+             finished on {} workers",
+            report.recovery_events, report.lost_steps, report.world_size
         );
     }
     if report.dp_sync_raw_s() > 0.0 {
