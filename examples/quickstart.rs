@@ -144,9 +144,12 @@ fn main() -> anyhow::Result<()> {
     // ---- 2.75 elastic: kill a worker mid-run, recover at dp − 1 ----
     // `kill@3:1` takes world rank 1 down at the top of step 3; bounded
     // collective waits surface the loss (PeerLost) instead of hanging,
-    // and the coordinator restarts from the last checkpoint at dp = 1,
-    // re-partitioning the ZeRO optimizer shards — at most
-    // `checkpoint_every` steps are recomputed
+    // and the coordinator restarts from the last *committed* checkpoint
+    // generation at dp = 1, re-partitioning the ZeRO optimizer shards —
+    // at most `checkpoint_every` steps are recomputed.  Saves here run
+    // asynchronously: each rank snapshots its state at the barrier and a
+    // background saver thread persists + atomically commits gen-<step>/
+    // while training continues (same bytes as sync saves, bitwise)
     println!("== same model with a mid-run worker kill (elastic recovery) ==");
     let ckpt = std::env::temp_dir().join(format!("fllm-quickstart-ckpt-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&ckpt);
@@ -161,19 +164,24 @@ fn main() -> anyhow::Result<()> {
         log_every: 5,
         checkpoint_dir: Some(ckpt.clone()),
         checkpoint_every: 2,
-        fault: FaultSpec::parse("kill@3:1"),
+        async_checkpoint: true,
+        faults: FaultSpec::parse_list("kill@3:1").expect("static fault list parses"),
         comm_timeout_ms: 2000,
         ..Default::default()
     })?;
     std::fs::remove_dir_all(&ckpt).ok();
     println!(
         "loss {:.3} -> {:.3}: {} recovery event(s), {} step(s) lost and recomputed, \
-         finished on {} GCDs\n",
+         finished on {} GCDs",
         elastic_report.initial_loss(),
         elastic_report.final_loss(),
         elastic_report.recovery_events,
         elastic_report.lost_steps,
         elastic_report.world_size,
+    );
+    println!(
+        "ckpt saves: {:.2} ms exposed to the step loop, {:.2} ms hidden on the saver thread\n",
+        elastic_report.ckpt_save_exposed_ms, elastic_report.ckpt_save_hidden_ms,
     );
     assert_eq!(elastic_report.recovery_events, 1, "the injected kill must trigger recovery");
     assert!(elastic_report.final_loss() < elastic_report.initial_loss());

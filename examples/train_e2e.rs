@@ -83,15 +83,19 @@ fn main() -> anyhow::Result<()> {
         checkpoint_dir: args.get("checkpoint").map(Into::into),
         checkpoint_every: args.opt("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
         resume: args.flag("resume"),
-        // elastic knobs: `--fault kill@STEP:RANK` (or `join@STEP`) injects
-        // a deterministic fault; bounded collective waits surface the dead
-        // peer and the run recovers at dp∓1 from the last checkpoint
+        // crash-consistent checkpointing: --async-checkpoint persists on a
+        // background saver thread; --ckpt-keep retains a generation chain
+        async_checkpoint: args.flag("async-checkpoint"),
+        ckpt_keep: args.opt("ckpt-keep", 2usize).map_err(anyhow::Error::msg)?,
+        // elastic knobs: `--fault kill@STEP:RANK,...` injects deterministic
+        // faults (kill / join / ckpt-crash / write-fail); bounded collective
+        // waits surface the dead peer and the run recovers at dp∓1 from the
+        // last committed checkpoint generation
         comm_timeout_ms: args.opt("comm-timeout-ms", 10_000u64).map_err(anyhow::Error::msg)?,
-        fault: match args.get("fault") {
-            Some(s) => Some(frontier_llm::coordinator::FaultSpec::parse(s).ok_or_else(|| {
-                anyhow::anyhow!("--fault must be kill@<step>:<rank> or join@<step>, got {s:?}")
-            })?),
-            None => None,
+        faults: match args.get("fault") {
+            Some(s) => frontier_llm::coordinator::FaultSpec::parse_list(s)
+                .map_err(anyhow::Error::msg)?,
+            None => Vec::new(),
         },
         ..Default::default()
     };
@@ -158,6 +162,12 @@ fn main() -> anyhow::Result<()> {
             report.dp_sync_raw_s() * 1e3,
             report.dp_sync_exposed_s * 1e3,
             report.dp_overlap_fraction() * 100.0
+        );
+    }
+    if report.ckpt_save_raw_ms() > 0.0 {
+        println!(
+            "ckpt save         : {:.1} ms exposed, {:.1} ms hidden (saver thread)",
+            report.ckpt_save_exposed_ms, report.ckpt_save_hidden_ms
         );
     }
     let tiered = report.dp_bucket_intra_bytes

@@ -5,8 +5,9 @@
 //! (the ≥3× kernel contract at d=256), collectives (ring vs naive vs
 //! nonblocking-bucketed all-reduce at gradient-buffer sizes), the
 //! sharded Adam step, schedule generation, overlapped-vs-sequential DP
-//! gradient sync through the engine, and a short end-to-end training
-//! run over the AOT artifacts.
+//! gradient sync through the engine, the sync-vs-async checkpoint save
+//! path (exposed save time must shrink under --async-checkpoint), and a
+//! short end-to-end training run over the AOT artifacts.
 //!
 //! Every section lands in `BENCH_engine.json` (via `bench_util`), so
 //! the kernel baseline (`kernel::*_naive`) and the blocked numbers are
@@ -482,6 +483,52 @@ fn main() {
             std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
         });
     }
+
+    header("end-to-end engine: checkpoint save path, sync vs async (dp=2, every step)");
+    // the crash-consistency acceptance number: with --async-checkpoint
+    // the step loop only pays the barrier + in-memory snapshot, while
+    // the writes drain on the saver thread — exposed save time must be
+    // strictly below the sync path's (which pays the whole write inline)
+    let ckpt_root = std::env::temp_dir().join(format!("fllm-hotpath-ckpt-{}", std::process::id()));
+    let mut ckpt_exposed = [0.0f64; 2];
+    for (i, (label, key, async_ckpt)) in [
+        ("engine::train_dp2_ckpt_sync", "sync", false),
+        ("engine::train_dp2_ckpt_async", "async", true),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let dir = ckpt_root.join(key);
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-s4-mb2".into(),
+            dp: 2,
+            schedule: ScheduleKind::Interleaved1F1B { v: 2 },
+            microbatches: 4,
+            steps: 3,
+            checkpoint_dir: Some(dir.clone()),
+            checkpoint_every: 1,
+            async_checkpoint: async_ckpt,
+            ..Default::default()
+        };
+        let (mut exposed_acc, mut hidden_acc, mut runs) = (0.0f64, 0.0f64, 0u32);
+        bench(label, 1, 5, || {
+            let _ = std::fs::remove_dir_all(&dir);
+            let r = frontier_llm::coordinator::train(&cfg).unwrap();
+            exposed_acc += r.ckpt_save_exposed_ms;
+            hidden_acc += r.ckpt_save_hidden_ms;
+            runs += 1;
+            std::hint::black_box(r.final_loss());
+        });
+        ckpt_exposed[i] = exposed_acc / runs as f64;
+        record_meta(&format!("ckpt_{key}_exposed_ms"), &format!("{:.3}", ckpt_exposed[i]));
+        record_meta(&format!("ckpt_{key}_hidden_ms"), &format!("{:.3}", hidden_acc / runs as f64));
+    }
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+    println!(
+        "[ckpt exposed save time per run: sync {:.2} ms vs async {:.2} ms \
+         (contract: async < sync)]",
+        ckpt_exposed[0], ckpt_exposed[1]
+    );
 
     header("end-to-end engine: tensor-parallel builtin (tp2 x pp4)");
     {

@@ -1,16 +1,29 @@
-//! Training checkpoints: save/restore parameters + optimizer state.
+//! Training checkpoints: crash-consistent save/restore of parameters +
+//! optimizer state, with generation directories and an async save path.
 //!
 //! Format — one file per **(global stage, tp rank)**, written by that
 //! shard's dp-rank-0 worker; DP replicas hold identical parameters so one
 //! copy suffices, and under ZeRO stages 1+ each DP rank persists only its
-//! own optimizer shard, matching DeepSpeed's per-rank checkpoint layout:
+//! own optimizer shard, matching DeepSpeed's per-rank checkpoint layout.
+//! Each save lands in its own **generation** directory:
 //!
 //! ```text
 //! ckpt-dir/
-//!   MANIFEST.json                 # step, bundle, world shape
-//!   stage<g>.tp<t>.params.bin     # f32 LE: flat (sharded) param vector
-//!   stage<g>.tp<t>.dp<r>.opt.bin  # f32 LE: adam m ++ adam v (+ step count)
+//!   gen-<step>.tmp/                 # staging: files land here first
+//!   gen-<step>/                     # committed generation (atomic rename)
+//!     MANIFEST.json                 # step, bundle, world shape, file list
+//!     stage<g>.tp<t>.params.bin     # f32 LE: flat (sharded) param vector
+//!     stage<g>.tp<t>.dp<r>.opt.bin  # f32 LE: adam m ++ adam v (+ step count)
 //! ```
+//!
+//! Crash consistency: every `.bin` carries a CRC32 of its payload in the
+//! header, the manifest lists every file with its size + checksum, all
+//! writes go through temp-file + atomic rename, and the commit itself is
+//! one `rename(gen-<step>.tmp, gen-<step>)` — a kill at any instant
+//! leaves either the previous committed generation or a fully-verified
+//! new one.  `latest_committed` scans generations newest-first and falls
+//! back past torn staging dirs and corrupt files; `prune_generations`
+//! keeps the newest `--ckpt-keep` chain.
 //!
 //! Keying by *global* stage (not worker rank) means a run can resume
 //! under a different pipeline chunking (`v`) of the same bundle; keying
@@ -23,19 +36,70 @@
 //! vector — ZeRO-3 runs assemble it with a blocking DP all-gather at
 //! save time and re-slice their shard on resume.
 //!
-//! Binary payloads are little-endian f32 with an 16-byte header
-//! (magic, version, element count, adam step).
+//! Binary payloads are little-endian f32 with a 28-byte header
+//! (magic, version, element count, adam step, payload CRC32).  Version-1
+//! files (24-byte header, no CRC) still read for back-compat.
 
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::FaultSpec;
 use crate::collectives::chunk_bounds;
 use crate::util::json::Json;
 
 const MAGIC: u32 = 0x46_4C_4C_4D; // "FLLM"
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) — table-driven, no deps
+// ---------------------------------------------------------------------
+
+fn crc32_table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC32 of a byte slice (IEEE; matches zlib's `crc32`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------
+
+/// One checkpoint file as recorded by the manifest: name, on-disk size,
+/// and the CRC32 of its f32 payload (the same value the file's own
+/// header carries) — `verify_generation` re-derives both before a
+/// generation is trusted for resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileEntry {
+    pub name: String,
+    pub bytes: u64,
+    pub crc32: u32,
+}
 
 /// Checkpoint metadata (MANIFEST.json).
 #[derive(Debug, Clone, PartialEq)]
@@ -70,14 +134,31 @@ pub struct Manifest {
     /// counters can be interpreted after a placement change — never a
     /// resume blocker, since placement does not affect values.
     pub nodes: u32,
+    /// Every data file in this generation with size + payload CRC32;
+    /// filled by `commit_generation`.  Legacy (pre-generation) manifests
+    /// parse to an empty list, which verifies vacuously.
+    pub files: Vec<FileEntry>,
 }
 
 impl Manifest {
     pub fn to_json(&self) -> String {
+        let files = self
+            .files
+            .iter()
+            .map(|f| {
+                format!(
+                    "{{\"name\": {}, \"bytes\": {}, \"crc32\": {}}}",
+                    crate::util::json::escape(&f.name),
+                    f.bytes,
+                    f.crc32
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
         format!(
             "{{\"step\": {}, \"bundle\": {}, \"stages\": {}, \"tp\": {}, \"dp\": {}, \
              \"zero_stage\": {}, \"precision\": {}, \"loss_scale\": {}, \"scale_good_steps\": {}, \
-             \"grad_wire\": {}, \"nodes\": {}}}",
+             \"grad_wire\": {}, \"nodes\": {}, \"files\": [{}]}}",
             self.step,
             crate::util::json::escape(&self.bundle),
             self.stages,
@@ -88,7 +169,8 @@ impl Manifest {
             self.loss_scale,
             self.scale_good_steps,
             crate::util::json::escape(&self.grad_wire),
-            self.nodes
+            self.nodes,
+            files
         )
     }
 
@@ -106,6 +188,20 @@ impl Manifest {
                 ))
             }
             Err(e) => return Err(anyhow!("{e}")),
+        };
+        let files = match j.get("files").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|f| {
+                    Ok(FileEntry {
+                        name: f.str_field("name").map_err(|e| anyhow!("{e}"))?,
+                        bytes: f.u64_field("bytes").map_err(|e| anyhow!("{e}"))?,
+                        crc32: f.u64_field("crc32").map_err(|e| anyhow!("{e}"))? as u32,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+            // legacy flat-dir manifests predate the file list
+            None => Vec::new(),
         };
         Ok(Self {
             step: j.u64_field("step").map_err(|e| anyhow!("{e}"))? as u32,
@@ -129,6 +225,7 @@ impl Manifest {
                 j.str_field("precision").unwrap_or_else(|_| "fp32".to_string())
             }),
             nodes: j.u64_field("nodes").unwrap_or(1) as u32,
+            files,
         })
     }
 
@@ -184,10 +281,14 @@ impl Manifest {
         Ok(())
     }
 
+    /// Write MANIFEST.json atomically: temp file in the same directory,
+    /// then rename — a crash mid-write never truncates a live manifest.
     pub fn save(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
-        std::fs::write(dir.join("MANIFEST.json"), self.to_json())
-            .context("writing checkpoint manifest")
+        let tmp = dir.join("MANIFEST.json.tmp");
+        std::fs::write(&tmp, self.to_json()).context("writing checkpoint manifest")?;
+        std::fs::rename(&tmp, dir.join("MANIFEST.json"))
+            .context("committing checkpoint manifest")
     }
 
     pub fn load(dir: &Path) -> Result<Self> {
@@ -198,23 +299,46 @@ impl Manifest {
     }
 }
 
-/// Write an f32 buffer with header; `aux` carries e.g. the Adam step count.
+// ---------------------------------------------------------------------
+// Binary f32 files (v2: checksummed header, atomic rename)
+// ---------------------------------------------------------------------
+
+/// Write an f32 buffer with header; `aux` carries e.g. the Adam step
+/// count.  The payload CRC32 goes in the header, and the write is temp
+/// file + atomic rename — a live checkpoint file is never truncated in
+/// place, and a crash mid-write leaves at worst a stray `.tmp`.
 pub fn write_f32(path: &Path, data: &[f32], aux: u64) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(&MAGIC.to_le_bytes())?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(data.len() as u64).to_le_bytes())?;
-    f.write_all(&aux.to_le_bytes())?;
+    let mut payload = Vec::with_capacity(data.len() * 4);
     for v in data {
-        f.write_all(&v.to_le_bytes())?;
+        payload.extend_from_slice(&v.to_le_bytes());
     }
-    Ok(())
+    let crc = crc32(&payload);
+    let tmp = tmp_name(path);
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(&MAGIC.to_le_bytes())?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(data.len() as u64).to_le_bytes())?;
+        f.write_all(&aux.to_le_bytes())?;
+        f.write_all(&crc.to_le_bytes())?;
+        f.write_all(&payload)?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("committing {path:?}"))
 }
 
-/// Read an f32 buffer; returns (data, aux).
+fn tmp_name(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Read an f32 buffer; returns (data, aux).  Version-2 files verify the
+/// payload CRC32 against the header; version-1 files (pre-CRC) read
+/// without the check for back-compat.
 pub fn read_f32(path: &Path) -> Result<(Vec<f32>, u64)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
@@ -223,14 +347,28 @@ pub fn read_f32(path: &Path) -> Result<(Vec<f32>, u64)> {
     f.read_exact(&mut h)?;
     anyhow::ensure!(u32::from_le_bytes(h) == MAGIC, "bad checkpoint magic");
     f.read_exact(&mut h)?;
-    anyhow::ensure!(u32::from_le_bytes(h) == VERSION, "unsupported version");
+    let version = u32::from_le_bytes(h);
+    anyhow::ensure!(version == 1 || version == VERSION, "unsupported version {version}");
     let mut h8 = [0u8; 8];
     f.read_exact(&mut h8)?;
     let n = u64::from_le_bytes(h8) as usize;
     f.read_exact(&mut h8)?;
     let aux = u64::from_le_bytes(h8);
+    let want_crc = if version >= 2 {
+        f.read_exact(&mut h)?;
+        Some(u32::from_le_bytes(h))
+    } else {
+        None
+    };
     let mut bytes = vec![0u8; n * 4];
     f.read_exact(&mut bytes)?;
+    if let Some(want) = want_crc {
+        let got = crc32(&bytes);
+        anyhow::ensure!(
+            got == want,
+            "checkpoint payload corrupt in {path:?}: crc32 {got:#010x} != header {want:#010x}"
+        );
+    }
     let data = bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -238,13 +376,379 @@ pub fn read_f32(path: &Path) -> Result<(Vec<f32>, u64)> {
     Ok((data, aux))
 }
 
+/// Header-level inspection of a checkpoint file: size consistency plus
+/// the payload CRC32 recomputed from the bytes on disk.  For v2 files
+/// the recomputed CRC must match the header's; truncation, bit-flips,
+/// and torn writes all surface here.
+fn inspect_file(path: &Path) -> Result<FileEntry> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(bytes.len() >= 24, "checkpoint file {path:?} truncated (no header)");
+    anyhow::ensure!(
+        u32::from_le_bytes(bytes[0..4].try_into().unwrap()) == MAGIC,
+        "bad checkpoint magic in {path:?}"
+    );
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    anyhow::ensure!(version == 1 || version == VERSION, "unsupported version {version}");
+    let n = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let header = if version >= 2 { 28 } else { 24 };
+    anyhow::ensure!(
+        bytes.len() == header + n * 4,
+        "checkpoint file {path:?} holds {} bytes, header promises {}",
+        bytes.len(),
+        header + n * 4
+    );
+    let crc = crc32(&bytes[header..]);
+    if version >= 2 {
+        let want = u32::from_le_bytes(bytes[24..28].try_into().unwrap());
+        anyhow::ensure!(
+            crc == want,
+            "checkpoint payload corrupt in {path:?}: crc32 {crc:#010x} != header {want:#010x}"
+        );
+    }
+    Ok(FileEntry {
+        name: path.file_name().unwrap_or_default().to_string_lossy().into_owned(),
+        bytes: bytes.len() as u64,
+        crc32: crc,
+    })
+}
+
+pub fn params_file_name(stage: usize, tp_rank: usize) -> String {
+    format!("stage{stage}.tp{tp_rank}.params.bin")
+}
+
+pub fn opt_file_name(stage: usize, tp_rank: usize, dp_rank: usize) -> String {
+    format!("stage{stage}.tp{tp_rank}.dp{dp_rank}.opt.bin")
+}
+
 pub fn params_path(dir: &Path, stage: usize, tp_rank: usize) -> PathBuf {
-    dir.join(format!("stage{stage}.tp{tp_rank}.params.bin"))
+    dir.join(params_file_name(stage, tp_rank))
 }
 
 pub fn opt_path(dir: &Path, stage: usize, tp_rank: usize, dp_rank: usize) -> PathBuf {
-    dir.join(format!("stage{stage}.tp{tp_rank}.dp{dp_rank}.opt.bin"))
+    dir.join(opt_file_name(stage, tp_rank, dp_rank))
 }
+
+// ---------------------------------------------------------------------
+// Generations: staging, commit, scan, prune
+// ---------------------------------------------------------------------
+
+/// Committed generation directory for the checkpoint at `step`.
+pub fn gen_dir(root: &Path, step: u32) -> PathBuf {
+    root.join(format!("gen-{step}"))
+}
+
+/// Staging directory a generation is assembled in before the atomic
+/// commit rename.  A crash mid-save leaves this behind; it is never
+/// eligible for resume and is cleaned up by `prune_generations`.
+pub fn staging_dir(root: &Path, step: u32) -> PathBuf {
+    root.join(format!("gen-{step}.tmp"))
+}
+
+fn gen_step(name: &str) -> Option<u32> {
+    name.strip_prefix("gen-").and_then(|s| s.parse().ok())
+}
+
+fn staging_step(name: &str) -> Option<u32> {
+    name.strip_prefix("gen-")?.strip_suffix(".tmp").and_then(|s| s.parse().ok())
+}
+
+/// Inspect every `.bin` in a staging directory, building the verified
+/// file list the manifest commits — sorted by name so the manifest (and
+/// therefore the committed bytes) is deterministic across save paths.
+fn scan_file_entries(dir: &Path) -> Result<Vec<FileEntry>> {
+    let mut entries = Vec::new();
+    for e in std::fs::read_dir(dir).with_context(|| format!("scanning staging {dir:?}"))? {
+        let e = e?;
+        let name = e.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".bin") {
+            entries.push(inspect_file(&e.path())?);
+        }
+    }
+    entries.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(entries)
+}
+
+/// Commit a staged generation: scan the staging dir into the manifest's
+/// file list (size + CRC32 per file), write the manifest into staging
+/// (itself atomically), then promote the whole directory with a single
+/// rename.  Any crash before the rename leaves only a `.tmp` staging
+/// dir; any crash after leaves a fully-verified committed generation.
+pub fn commit_generation(root: &Path, step: u32, mut manifest: Manifest) -> Result<()> {
+    let staging = staging_dir(root, step);
+    manifest.files = scan_file_entries(&staging)?;
+    anyhow::ensure!(
+        !manifest.files.is_empty(),
+        "refusing to commit empty checkpoint generation {staging:?}"
+    );
+    manifest.save(&staging)?;
+    let dest = gen_dir(root, step);
+    if dest.exists() {
+        // a re-save of the same step (recovery re-walking a leg): the
+        // old committed generation is replaced, never truncated in place
+        std::fs::remove_dir_all(&dest)?;
+    }
+    std::fs::rename(&staging, &dest)
+        .with_context(|| format!("committing checkpoint generation {dest:?}"))
+}
+
+/// Verify a committed generation against its manifest: every listed
+/// file must exist with the recorded size and a matching recomputed
+/// payload CRC32.  Legacy manifests (empty file list) verify vacuously.
+pub fn verify_generation(dir: &Path, manifest: &Manifest) -> Result<()> {
+    for want in &manifest.files {
+        let got = inspect_file(&dir.join(&want.name))?;
+        anyhow::ensure!(
+            got.bytes == want.bytes && got.crc32 == want.crc32,
+            "checkpoint file {} in {dir:?} does not match its manifest entry \
+             ({} bytes crc {:#010x} vs recorded {} bytes crc {:#010x})",
+            want.name,
+            got.bytes,
+            got.crc32,
+            want.bytes,
+            want.crc32
+        );
+    }
+    Ok(())
+}
+
+/// A resolved, verified checkpoint: the directory files load from plus
+/// its manifest.
+#[derive(Debug, Clone)]
+pub struct ResolvedCkpt {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+/// Scan `root` for the newest **committed** generation whose manifest
+/// parses and whose every file verifies (size + CRC32).  Torn staging
+/// dirs (`gen-N.tmp`) are never candidates; a corrupt newest generation
+/// falls back to the next one down the chain.  A legacy flat-layout
+/// checkpoint (MANIFEST.json at the root, no generation dirs) is
+/// accepted last so pre-generation checkpoints keep resuming.
+pub fn latest_committed(root: &Path) -> Result<Option<ResolvedCkpt>> {
+    if !root.is_dir() {
+        return Ok(None);
+    }
+    let mut gens: Vec<(u32, PathBuf)> = Vec::new();
+    for e in std::fs::read_dir(root)? {
+        let e = e?;
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(step) = gen_step(&name) {
+            if e.path().is_dir() {
+                gens.push((step, e.path()));
+            }
+        }
+    }
+    gens.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, dir) in &gens {
+        let ok = Manifest::load(dir).and_then(|m| {
+            verify_generation(dir, &m)?;
+            Ok(m)
+        });
+        match ok {
+            Ok(manifest) => return Ok(Some(ResolvedCkpt { dir: dir.clone(), manifest })),
+            Err(_) => continue, // torn or corrupt: fall back down the chain
+        }
+    }
+    if root.join("MANIFEST.json").is_file() {
+        let manifest = Manifest::load(root)?;
+        verify_generation(root, &manifest)?;
+        return Ok(Some(ResolvedCkpt { dir: root.to_path_buf(), manifest }));
+    }
+    Ok(None)
+}
+
+/// Retire old generations, keeping the newest `keep` committed ones
+/// (minimum 1), and sweep stale staging dirs older than the newest
+/// committed generation (a staging dir newer than every committed one
+/// may still be in flight and is left alone).
+pub fn prune_generations(root: &Path, keep: usize) -> Result<()> {
+    let keep = keep.max(1);
+    let mut committed: Vec<(u32, PathBuf)> = Vec::new();
+    let mut staged: Vec<(u32, PathBuf)> = Vec::new();
+    for e in std::fs::read_dir(root)? {
+        let e = e?;
+        if !e.path().is_dir() {
+            continue;
+        }
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(step) = staging_step(&name) {
+            staged.push((step, e.path()));
+        } else if let Some(step) = gen_step(&name) {
+            committed.push((step, e.path()));
+        }
+    }
+    committed.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, dir) in committed.iter().skip(keep) {
+        std::fs::remove_dir_all(dir).with_context(|| format!("pruning {dir:?}"))?;
+    }
+    if let Some(&(newest, _)) = committed.first() {
+        for (step, dir) in &staged {
+            if *step <= newest {
+                std::fs::remove_dir_all(dir).with_context(|| format!("sweeping {dir:?}"))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Save context: retrying writes, fault injection, hidden/exposed timers
+// ---------------------------------------------------------------------
+
+const WRITE_ATTEMPTS: u32 = 5;
+
+struct WriteFailSlot {
+    step: u32,
+    rank: usize,
+    left: AtomicU32,
+}
+
+/// Shared per-run save state: the checkpoint root, retention policy,
+/// injected write-failure budget, and the hidden/exposed save timers
+/// (classified like the PR-3 `dp_overlap` pair: *exposed* time stalls
+/// the step loop — the barrier + snapshot on the async path, the whole
+/// write on the sync path — while *hidden* time drains on the saver
+/// thread behind training).
+pub struct SaveCtx {
+    pub root: PathBuf,
+    pub keep: usize,
+    pub world_size: usize,
+    pub exposed_ns: AtomicU64,
+    pub hidden_ns: AtomicU64,
+    write_fails: Vec<WriteFailSlot>,
+}
+
+impl SaveCtx {
+    pub fn new(root: PathBuf, keep: usize, world_size: usize, faults: &[FaultSpec]) -> Self {
+        let write_fails = faults
+            .iter()
+            .filter_map(|f| match *f {
+                FaultSpec::WriteFail { step, rank, count } => {
+                    Some(WriteFailSlot { step, rank, left: AtomicU32::new(count) })
+                }
+                _ => None,
+            })
+            .collect();
+        Self {
+            root,
+            keep,
+            world_size,
+            exposed_ns: AtomicU64::new(0),
+            hidden_ns: AtomicU64::new(0),
+            write_fails,
+        }
+    }
+
+    /// Consume one injected failure if a `write-fail@step:rank` budget
+    /// covers this write attempt.
+    fn inject_write_fail(&self, ckpt_step: u32, world_rank: usize) -> bool {
+        self.write_fails.iter().any(|s| {
+            s.step == ckpt_step
+                && s.rank == world_rank
+                && s.left
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                    .is_ok()
+        })
+    }
+
+    /// Write one checkpoint file with bounded retry + exponential
+    /// backoff on transient failures (injected or real).  Exhausting
+    /// the retry budget is a hard error — the save cannot be trusted.
+    pub fn write_file(
+        &self,
+        ckpt_step: u32,
+        world_rank: usize,
+        path: &Path,
+        data: &[f32],
+        aux: u64,
+    ) -> Result<()> {
+        let mut last_err = None;
+        for attempt in 0..WRITE_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1 << (attempt - 1)));
+            }
+            if self.inject_write_fail(ckpt_step, world_rank) {
+                last_err = Some(anyhow!(
+                    "injected transient write failure (write-fail@{ckpt_step}:{world_rank})"
+                ));
+                continue;
+            }
+            match write_f32(path, data, aux) {
+                Ok(()) => return Ok(()),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap()).with_context(|| {
+            format!("checkpoint write {path:?} failed after {WRITE_ATTEMPTS} attempts")
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Async saver: snapshot hand-off channel + background persist thread
+// ---------------------------------------------------------------------
+
+/// One rank's in-memory snapshot of a checkpoint step, handed to the
+/// saver thread at the checkpoint barrier.  The tensors are `Arc`
+/// clones of the live parameter storage — the optimizer's
+/// `Arc::make_mut` copy-on-write means subsequent steps cannot leak
+/// into the snapshot (this is what makes async ≡ sync bitwise).
+pub struct SavePart {
+    /// Manifest step of the generation this part belongs to (`step + 1`).
+    pub step: u32,
+    pub world_rank: usize,
+    /// (file name, payload, aux) triples this rank persists.
+    pub files: Vec<(String, Arc<Vec<f32>>, u64)>,
+    /// The (pp0, dp0, tp0) leader's part carries the manifest skeleton;
+    /// the saver fills its file list at commit time.
+    pub manifest: Option<Manifest>,
+}
+
+/// Background saver loop: drain snapshot parts, persist each rank's
+/// files into the generation's staging dir (with retry/backoff through
+/// `SaveCtx::write_file`), and commit + prune once all `world_size`
+/// parts of a step have landed.  Steps left incomplete when the channel
+/// closes (a rank died mid-save) stay as torn staging dirs — exactly
+/// the state `latest_committed` skips.  Time spent here is *hidden*
+/// save time.  Any error tears the run down as a hard failure when the
+/// coordinator joins this thread.
+pub fn run_saver(ctx: Arc<SaveCtx>, rx: Receiver<SavePart>) -> Result<()> {
+    let mut arrived: BTreeMap<u32, usize> = BTreeMap::new();
+    let mut manifests: HashMap<u32, Manifest> = HashMap::new();
+    let mut started: HashSet<u32> = HashSet::new();
+    for part in rx {
+        let t0 = std::time::Instant::now();
+        let staging = staging_dir(&ctx.root, part.step);
+        if started.insert(part.step) {
+            // stale staging from a previous torn save of this step
+            let _ = std::fs::remove_dir_all(&staging);
+        }
+        std::fs::create_dir_all(&staging)?;
+        for (name, data, aux) in &part.files {
+            ctx.write_file(part.step, part.world_rank, &staging.join(name), data, *aux)?;
+        }
+        if let Some(m) = part.manifest {
+            manifests.insert(part.step, m);
+        }
+        let seen = arrived.entry(part.step).or_insert(0);
+        *seen += 1;
+        if *seen == ctx.world_size {
+            let manifest = manifests
+                .remove(&part.step)
+                .ok_or_else(|| anyhow!("checkpoint step {} has no manifest part", part.step))?;
+            commit_generation(&ctx.root, part.step, manifest)?;
+            prune_generations(&ctx.root, ctx.keep)?;
+            arrived.remove(&part.step);
+        }
+        ctx.hidden_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Optimizer-shard re-partitioning (elastic dp±1)
+// ---------------------------------------------------------------------
 
 /// Re-partition a stage's **sharded** optimizer state (ZeRO stages 1-3)
 /// from a checkpoint written at `old_dp` ranks onto `new_dp` ranks:
@@ -318,6 +822,30 @@ pub fn reslice_opt_state(
 mod tests {
     use super::*;
 
+    fn manifest(step: u32) -> Manifest {
+        Manifest {
+            step,
+            bundle: "tiny-s2-mb2".into(),
+            stages: 2,
+            tp: 1,
+            dp: 1,
+            zero_stage: 1,
+            precision: "fp32".into(),
+            loss_scale: 1.0,
+            scale_good_steps: 0,
+            grad_wire: "fp32".into(),
+            nodes: 1,
+            files: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_vector() {
+        // the canonical zlib/IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
     #[test]
     fn f32_round_trip() {
         let dir = std::env::temp_dir().join(format!("fllm-ckpt-{}", std::process::id()));
@@ -327,6 +855,52 @@ mod tests {
         let (back, aux) = read_f32(&path).unwrap();
         assert_eq!(back, data);
         assert_eq!(aux, 42);
+        // the atomic write leaves no temp file behind
+        assert!(!tmp_name(&path).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn payload_bit_flip_detected() {
+        let dir = std::env::temp_dir().join(format!("fllm-crc-{}", std::process::id()));
+        let path = dir.join("x.bin");
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        write_f32(&path, &data, 7).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[40] ^= 0x10; // flip one payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_f32(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+        assert!(inspect_file(&path).is_err());
+        // truncation is a size mismatch at inspect and a read error
+        write_f32(&path, &data, 7).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(read_f32(&path).is_err());
+        assert!(inspect_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_v1_files_still_read() {
+        // a pre-CRC (version 1) file: 24-byte header, no checksum
+        let dir = std::env::temp_dir().join(format!("fllm-v1-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.bin");
+        let data = [1.5f32, -2.5, 3.25];
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&9u64.to_le_bytes());
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let (back, aux) = read_f32(&path).unwrap();
+        assert_eq!(back, data);
+        assert_eq!(aux, 9);
+        assert!(inspect_file(&path).is_ok());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -345,6 +919,14 @@ mod tests {
                 scale_good_steps: 7,
                 grad_wire: "int8".into(),
                 nodes: 2,
+                files: vec![
+                    FileEntry {
+                        name: "stage0.tp0.params.bin".into(),
+                        bytes: 412,
+                        crc32: 0xDEAD_BEEF,
+                    },
+                    FileEntry { name: "stage0.tp0.dp0.opt.bin".into(), bytes: 92, crc32: 7 },
+                ],
             };
             let back = Manifest::from_json(&m.to_json()).unwrap();
             assert_eq!(m, back);
@@ -368,6 +950,8 @@ mod tests {
         // pre-hierarchical manifests ran a flat fp32 wire on one node
         assert_eq!(m.grad_wire, "fp32");
         assert_eq!(m.nodes, 1);
+        // pre-generation manifests carry no file list: verify is vacuous
+        assert!(m.files.is_empty());
         let legacy_z1 = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"stages\": 2, \
                          \"tp\": 1, \"dp\": 2, \"zero1\": true}";
         assert_eq!(Manifest::from_json(legacy_z1).unwrap().zero_stage, 1);
@@ -398,6 +982,7 @@ mod tests {
             scale_good_steps: 2,
             grad_wire: "bf16".into(),
             nodes: 1,
+            files: Vec::new(),
         };
         // dp deliberately absent: any dp re-partitions on resume
         m.validate_resume("tiny-s2-mb2", 2, 2, "bf16", "bf16").unwrap();
@@ -460,6 +1045,8 @@ mod tests {
         let dir = Path::new("/tmp/x");
         assert!(params_path(dir, 3, 1).ends_with("stage3.tp1.params.bin"));
         assert!(opt_path(dir, 3, 1, 2).ends_with("stage3.tp1.dp2.opt.bin"));
+        assert!(gen_dir(dir, 12).ends_with("gen-12"));
+        assert!(staging_dir(dir, 12).ends_with("gen-12.tmp"));
     }
 
     #[test]
@@ -470,5 +1057,82 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(read_f32(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn stage_generation(root: &Path, step: u32, seed: f32) {
+        let staging = staging_dir(root, step);
+        write_f32(&params_path(&staging, 0, 0), &[seed, seed + 1.0], step as u64).unwrap();
+        write_f32(&opt_path(&staging, 0, 0, 0), &[seed * 2.0; 4], step as u64).unwrap();
+    }
+
+    #[test]
+    fn commit_is_atomic_and_latest_falls_back_past_torn_state() {
+        let root = std::env::temp_dir().join(format!("fllm-gen-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        // two committed generations plus a torn (never-committed) staging dir
+        for step in [2u32, 4] {
+            stage_generation(&root, step, step as f32);
+            commit_generation(&root, step, manifest(step)).unwrap();
+            assert!(!staging_dir(&root, step).exists());
+        }
+        stage_generation(&root, 6, 6.0); // torn: no commit
+        let got = latest_committed(&root).unwrap().unwrap();
+        assert_eq!(got.manifest.step, 4);
+        assert!(got.dir.ends_with("gen-4"));
+        assert_eq!(got.manifest.files.len(), 2, "commit records every .bin");
+
+        // corrupt the newest committed generation -> falls back to gen-2
+        let victim = params_path(&gen_dir(&root, 4), 0, 0);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        let got = latest_committed(&root).unwrap().unwrap();
+        assert_eq!(got.manifest.step, 2);
+
+        // delete a listed file entirely -> same fallback
+        std::fs::remove_file(&victim).unwrap();
+        assert_eq!(latest_committed(&root).unwrap().unwrap().manifest.step, 2);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn prune_keeps_the_newest_chain_and_sweeps_stale_staging() {
+        let root = std::env::temp_dir().join(format!("fllm-prune-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for step in [1u32, 2, 3, 4] {
+            stage_generation(&root, step, step as f32);
+            commit_generation(&root, step, manifest(step)).unwrap();
+        }
+        stage_generation(&root, 3, 3.0); // stale torn staging below the newest
+        stage_generation(&root, 9, 9.0); // in-flight staging above it
+        prune_generations(&root, 2).unwrap();
+        assert!(!gen_dir(&root, 1).exists());
+        assert!(!gen_dir(&root, 2).exists());
+        assert!(gen_dir(&root, 3).exists());
+        assert!(gen_dir(&root, 4).exists());
+        assert!(!staging_dir(&root, 3).exists(), "stale staging swept");
+        assert!(staging_dir(&root, 9).exists(), "in-flight staging kept");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn write_fail_budget_retries_then_exhausts() {
+        let root = std::env::temp_dir().join(format!("fllm-wf-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let faults = [FaultSpec::WriteFail { step: 5, rank: 0, count: 2 }];
+        let ctx = SaveCtx::new(root.clone(), 2, 1, &faults);
+        // two injected failures burn two attempts; the third succeeds
+        ctx.write_file(5, 0, &root.join("a.bin"), &[1.0, 2.0], 0).unwrap();
+        assert_eq!(read_f32(&root.join("a.bin")).unwrap().0, vec![1.0, 2.0]);
+        // a budget bigger than the retry limit is a hard error
+        let faults = [FaultSpec::WriteFail { step: 5, rank: 0, count: 99 }];
+        let ctx = SaveCtx::new(root.clone(), 2, 1, &faults);
+        let err = ctx.write_file(5, 0, &root.join("b.bin"), &[1.0], 0).unwrap_err().to_string();
+        assert!(err.contains("failed after"), "{err}");
+        // other (step, rank) writes are untouched by the budget
+        ctx.write_file(6, 0, &root.join("c.bin"), &[3.0], 0).unwrap();
+        std::fs::remove_dir_all(&root).ok();
     }
 }

@@ -81,10 +81,22 @@ pub enum FaultSpec {
     /// `join@<step>` — a planned capacity increase: the run checkpoints
     /// at `step` and a dp+1 world resumes from that manifest.
     Join { step: u32 },
+    /// `ckpt-crash@<step>:<rank>` — world rank `rank` dies *inside* the
+    /// save that would commit generation `step` (after some of its files
+    /// are staged, before the commit).  The torn staging dir is never
+    /// eligible for resume, so recovery restarts from the last
+    /// *committed* generation — the crash-consistency contract.
+    CkptCrash { step: u32, rank: usize },
+    /// `write-fail@<step>:<rank>:<count>` — the first `count` checkpoint
+    /// write attempts of generation `step` on world rank `rank` fail
+    /// transiently.  The save path's bounded retry-with-backoff absorbs
+    /// budgets under the retry limit; bigger budgets become hard errors.
+    WriteFail { step: u32, rank: usize, count: u32 },
 }
 
 impl FaultSpec {
-    /// Parse the CLI grammar: `kill@<step>:<rank>` or `join@<step>`.
+    /// Parse one fault: `kill@<step>:<rank>`, `join@<step>`,
+    /// `ckpt-crash@<step>:<rank>`, or `write-fail@<step>:<rank>:<count>`.
     pub fn parse(s: &str) -> Option<Self> {
         if let Some(rest) = s.strip_prefix("kill@") {
             let (step, rank) = rest.split_once(':')?;
@@ -93,7 +105,72 @@ impl FaultSpec {
         if let Some(rest) = s.strip_prefix("join@") {
             return Some(FaultSpec::Join { step: rest.parse().ok()? });
         }
+        if let Some(rest) = s.strip_prefix("ckpt-crash@") {
+            let (step, rank) = rest.split_once(':')?;
+            return Some(FaultSpec::CkptCrash {
+                step: step.parse().ok()?,
+                rank: rank.parse().ok()?,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("write-fail@") {
+            let mut it = rest.split(':');
+            let (step, rank, count) = (it.next()?, it.next()?, it.next()?);
+            if it.next().is_some() {
+                return None;
+            }
+            return Some(FaultSpec::WriteFail {
+                step: step.parse().ok()?,
+                rank: rank.parse().ok()?,
+                count: count.parse().ok()?,
+            });
+        }
         None
+    }
+
+    /// Parse the full CLI grammar: a comma-separated fault list, e.g.
+    /// `kill@5:1,ckpt-crash@8:0`.  Malformed items and duplicate steps
+    /// (two faults scheduled at the same step would race recovery
+    /// nondeterministically) are rejected with a targeted message.
+    pub fn parse_list(s: &str) -> Result<Vec<Self>, String> {
+        let mut out: Vec<FaultSpec> = Vec::new();
+        for item in s.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                return Err(format!("empty fault in list {s:?}"));
+            }
+            let f = Self::parse(item).ok_or_else(|| {
+                format!(
+                    "malformed fault {item:?}: expected kill@<step>:<rank>, join@<step>, \
+                     ckpt-crash@<step>:<rank>, or write-fail@<step>:<rank>:<count>"
+                )
+            })?;
+            if out.iter().any(|o| o.step() == f.step()) {
+                return Err(format!(
+                    "duplicate fault step {}: two faults at the same step would race \
+                     recovery nondeterministically",
+                    f.step()
+                ));
+            }
+            out.push(f);
+        }
+        Ok(out)
+    }
+
+    /// The step this fault fires at (kill/join: the training step;
+    /// ckpt-crash/write-fail: the checkpoint generation's step).
+    pub fn step(&self) -> u32 {
+        match *self {
+            FaultSpec::Kill { step, .. }
+            | FaultSpec::Join { step }
+            | FaultSpec::CkptCrash { step, .. }
+            | FaultSpec::WriteFail { step, .. } => step,
+        }
+    }
+
+    /// Does this fault take a rank down (requiring timeout-driven
+    /// recovery in its peers)?
+    pub fn is_killing(&self) -> bool {
+        matches!(self, FaultSpec::Kill { .. } | FaultSpec::CkptCrash { .. })
     }
 }
 
@@ -205,6 +282,16 @@ pub struct EngineConfig {
     pub checkpoint_every: u32,
     /// Resume from `checkpoint_dir` (params + optimizer + data cursor).
     pub resume: bool,
+    /// Persist checkpoints on a background saver thread: at the save
+    /// barrier each rank snapshots its state in memory (Arc clones — the
+    /// optimizer's copy-on-write keeps the snapshot isolated) and the
+    /// step loop resumes immediately while I/O drains.  Saved bytes and
+    /// trajectories are bitwise identical to sync saves.
+    pub async_checkpoint: bool,
+    /// Committed checkpoint generations to retain (`--ckpt-keep N`,
+    /// minimum 1): a chain of last-good fallbacks for corrupt or torn
+    /// newest generations.
+    pub ckpt_keep: usize,
     /// Deadline on every collective wait (p2p recv, barrier, nonblocking
     /// all-reduce / all-gather drains), in milliseconds.  `0` leaves the
     /// waits unbounded — the unit-test default, where a slow CI machine
@@ -213,9 +300,10 @@ pub struct EngineConfig {
     /// instead of a silent permanent hang.  A scheduled `kill` fault
     /// arms a 5 s deadline even at 0: recovery starts from a timeout.
     pub comm_timeout_ms: u64,
-    /// Deterministic fault injection (`--fault kill@S:R` / `join@S`);
-    /// `None` (default) injects nothing.
-    pub fault: Option<FaultSpec>,
+    /// Deterministic fault injection (`--fault kill@S:R,join@S,...` —
+    /// a comma-separated list, at most one fault per step); empty
+    /// (default) injects nothing.
+    pub faults: Vec<FaultSpec>,
 }
 
 impl Default for EngineConfig {
@@ -245,8 +333,10 @@ impl Default for EngineConfig {
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume: false,
+            async_checkpoint: false,
+            ckpt_keep: 2,
             comm_timeout_ms: 0,
-            fault: None,
+            faults: Vec::new(),
         }
     }
 }
@@ -377,6 +467,15 @@ pub struct TrainReport {
     /// recomputed by the shrunken world.  The measured bounded-loss cost
     /// of a failure (≤ `checkpoint_every` by construction).
     pub lost_steps: u64,
+    /// Checkpoint-save milliseconds *hidden* behind training — the saver
+    /// thread's persist + commit time under `--async-checkpoint`
+    /// (classified like the `dp_sync_hidden_s` overlap timer).  0 on the
+    /// sync path, where every write is on the critical path.
+    pub ckpt_save_hidden_ms: f64,
+    /// Checkpoint-save milliseconds *exposed* on the step loop's critical
+    /// path: the whole barrier+write+commit on the sync path; only the
+    /// barrier + in-memory snapshot hand-off on the async path.
+    pub ckpt_save_exposed_ms: f64,
 }
 
 impl TrainReport {
@@ -398,6 +497,11 @@ impl TrainReport {
     /// comm term with (see [`crate::perf::dp_overlap_fraction`]).
     pub fn dp_overlap_fraction(&self) -> f64 {
         crate::perf::dp_overlap_fraction(self.dp_sync_raw_s(), self.dp_sync_exposed_s)
+    }
+
+    /// Raw (total) checkpoint-save milliseconds: hidden + exposed.
+    pub fn ckpt_save_raw_ms(&self) -> f64 {
+        self.ckpt_save_hidden_ms + self.ckpt_save_exposed_ms
     }
 }
 
@@ -532,17 +636,24 @@ pub fn train_with_bundle(
     let mut lost_steps = 0u64;
     let world_size = loop {
         // a planned join splits the leg so it checkpoints exactly at N
-        let pending_join = match attempt.fault {
-            Some(FaultSpec::Join { step }) if resume.start_step < step && step < total_target => {
-                anyhow::ensure!(
-                    attempt.checkpoint_dir.is_some(),
-                    "--fault join@{step} needs --checkpoint DIR: the grown world picks \
-                     its state up from the manifest"
-                );
-                Some(step)
-            }
-            _ => None,
-        };
+        // (the earliest pending join when several are scheduled)
+        let pending_join = attempt
+            .faults
+            .iter()
+            .filter_map(|f| match *f {
+                FaultSpec::Join { step } if resume.start_step < step && step < total_target => {
+                    Some(step)
+                }
+                _ => None,
+            })
+            .min();
+        if let Some(step) = pending_join {
+            anyhow::ensure!(
+                attempt.checkpoint_dir.is_some(),
+                "--fault join@{step} needs --checkpoint DIR: the grown world picks \
+                 its state up from the manifest"
+            );
+        }
         attempt.steps = pending_join.unwrap_or(total_target) - resume.start_step;
         let run = run_world(&attempt, &rt, &bundle, &sched, pp, v, &resume, &opt_state_bytes)?;
         counters.add(&run.c);
@@ -550,11 +661,11 @@ pub fn train_with_bundle(
             None => {
                 logs.extend(run.logs);
                 match pending_join {
-                    Some(_) => {
+                    Some(join_step) => {
                         // grow: dp+1 resumes from the leg-final checkpoint
                         recovery_events += 1;
                         attempt.dp += 1;
-                        attempt.fault = None;
+                        attempt.faults.retain(|f| *f != FaultSpec::Join { step: join_step });
                         attempt.resume = true;
                         resume = resolve_resume(&attempt, n_stages)?;
                     }
@@ -562,9 +673,9 @@ pub fn train_with_bundle(
                 }
             }
             Some(failure) => {
-                // without an injected fault this is a real failure: surface
-                // the diagnostic instead of silently shrinking the world
-                if attempt.fault.is_none() {
+                // without an injected killing fault this is a real failure:
+                // surface the diagnostic instead of silently shrinking
+                if !attempt.faults.iter().any(FaultSpec::is_killing) {
                     return Err(failure.into_error());
                 }
                 anyhow::ensure!(
@@ -573,21 +684,30 @@ pub fn train_with_bundle(
                 );
                 recovery_events += 1;
                 attempt.dp -= 1;
-                attempt.fault = None;
+                // the fired fault is spent; faults scheduled for later
+                // steps stay armed for the recovered world
+                match &failure {
+                    RunFailure::Killed(k) => {
+                        let fired = k.step;
+                        attempt.faults.retain(|f| f.step() > fired);
+                    }
+                    RunFailure::Lost(_) => attempt.faults.clear(),
+                }
                 attempt.resume = attempt
                     .checkpoint_dir
                     .as_deref()
-                    .is_some_and(|d| checkpoint::Manifest::load(d).is_ok());
+                    .is_some_and(|d| matches!(checkpoint::latest_committed(d), Ok(Some(_))));
                 resume = if attempt.resume {
                     resolve_resume(&attempt, n_stages)?
                 } else {
-                    // the fault hit before any checkpoint was written: the
-                    // shrunken world restarts the run from scratch
+                    // the fault hit before any checkpoint was committed:
+                    // the shrunken world restarts the run from scratch
                     ResumePoint {
                         start_step: 0,
                         loss_scale: cfg.loss_scale_init,
                         scale_good: 0,
                         ckpt_dp: attempt.dp,
+                        dir: None,
                     }
                 };
                 // steps the failed leg completed beyond the recovery point
@@ -638,20 +758,26 @@ pub fn train_with_bundle(
         steps_skipped,
         recovery_events,
         lost_steps,
+        ckpt_save_hidden_ms: counters.ckpt_hidden_ns as f64 / 1e6,
+        ckpt_save_exposed_ms: counters.ckpt_exposed_ns as f64 / 1e6,
         logs,
     })
 }
 
 /// Where a world (re)starts: the first step index, the loss-scaler state,
-/// and the dp the checkpoint on disk was written at (when it differs from
+/// the dp the checkpoint on disk was written at (when it differs from
 /// the attempt's dp, the workers re-partition the optimizer shards on
-/// load — the elastic dp±1 path).
-#[derive(Debug, Clone, Copy)]
+/// load — the elastic dp±1 path), and the verified generation directory
+/// the files load from.
+#[derive(Debug, Clone)]
 struct ResumePoint {
     start_step: u32,
     loss_scale: f32,
     scale_good: u32,
     ckpt_dp: usize,
+    /// The committed generation directory (or legacy flat dir) resume
+    /// files load from; `None` on a fresh start.
+    dir: Option<PathBuf>,
 }
 
 /// Validate the manifest against this run's shape and pick up the step /
@@ -664,13 +790,16 @@ fn resolve_resume(cfg: &EngineConfig, n_stages: usize) -> Result<ResumePoint> {
             loss_scale: cfg.loss_scale_init,
             scale_good: 0,
             ckpt_dp: cfg.dp,
+            dir: None,
         });
     }
-    let dir = cfg
+    let root = cfg
         .checkpoint_dir
         .as_ref()
         .ok_or_else(|| anyhow!("--resume requires a checkpoint dir"))?;
-    let manifest = checkpoint::Manifest::load(dir)?;
+    let resolved = checkpoint::latest_committed(root)?
+        .ok_or_else(|| anyhow!("no committed checkpoint generation in {root:?}"))?;
+    let (dir, manifest) = (resolved.dir, resolved.manifest);
     manifest.validate_resume(
         &cfg.bundle,
         n_stages as u32,
@@ -695,6 +824,7 @@ fn resolve_resume(cfg: &EngineConfig, n_stages: usize) -> Result<ResumePoint> {
         loss_scale: manifest.loss_scale,
         scale_good: manifest.scale_good_steps,
         ckpt_dp: manifest.dp as usize,
+        dir: Some(dir),
     })
 }
 
@@ -748,6 +878,8 @@ struct Counters {
     pp_p2p_intra_bytes: u64,
     pp_p2p_inter_bytes: u64,
     zero3_peak_gathered_floats: u64,
+    ckpt_hidden_ns: u64,
+    ckpt_exposed_ns: u64,
 }
 
 impl Counters {
@@ -769,6 +901,8 @@ impl Counters {
         self.pp_p2p_inter_bytes += o.pp_p2p_inter_bytes;
         self.zero3_peak_gathered_floats =
             self.zero3_peak_gathered_floats.max(o.zero3_peak_gathered_floats);
+        self.ckpt_hidden_ns += o.ckpt_hidden_ns;
+        self.ckpt_exposed_ns += o.ckpt_exposed_ns;
     }
 }
 
@@ -864,7 +998,7 @@ fn run_world(
     // and DP groups covers every collective in the engine path.
     let timeout_ms = if cfg.comm_timeout_ms > 0 {
         cfg.comm_timeout_ms
-    } else if matches!(cfg.fault, Some(FaultSpec::Kill { .. })) {
+    } else if cfg.faults.iter().any(FaultSpec::is_killing) {
         5_000
     } else {
         0
@@ -879,6 +1013,26 @@ fn run_world(
 
     // per-step report: (step, loss, grad norm, loss scale, skipped)
     let (loss_tx, loss_rx) = mpsc::channel::<(u32, f32, f32, f32, bool)>();
+
+    // checkpoint save context: hidden/exposed timers + the retrying
+    // writer (with any injected write-fail budget).  Under
+    // `--async-checkpoint` a background saver thread drains the ranks'
+    // in-memory snapshots and commits generations off the critical path.
+    let save_ctx = cfg.checkpoint_dir.as_ref().map(|root| {
+        Arc::new(checkpoint::SaveCtx::new(root.clone(), cfg.ckpt_keep, world_size, &cfg.faults))
+    });
+    let (save_tx, saver_handle) = match (&save_ctx, cfg.async_checkpoint) {
+        (Some(ctx), true) => {
+            let (tx, rx) = mpsc::channel::<checkpoint::SavePart>();
+            let ctx = ctx.clone();
+            let h = thread::Builder::new()
+                .name("ckpt-saver".into())
+                .spawn(move || checkpoint::run_saver(ctx, rx))
+                .context("spawning checkpoint saver")?;
+            (Some(tx), Some(h))
+        }
+        _ => (None, None),
+    };
 
     let mut handles = Vec::with_capacity(world_size);
     for pp_rank in 0..pp {
@@ -903,6 +1057,9 @@ fn run_world(
                     start_loss_scale: resume.loss_scale,
                     start_scale_good: resume.scale_good,
                     ckpt_dp: resume.ckpt_dp,
+                    ckpt_from: resume.dir.clone(),
+                    save: save_ctx.clone(),
+                    save_tx: save_tx.clone(),
                     opt_state_bytes: opt_state_bytes.clone(),
                     loss_tx: if pp_rank == pp - 1 && dp_rank == 0 && tp_rank == 0 {
                         Some(loss_tx.clone())
@@ -920,6 +1077,7 @@ fn run_world(
         }
     }
     drop(loss_tx);
+    drop(save_tx); // the workers hold the only live snapshot senders
 
     // leader: collect per-step losses as they stream in.  The channel
     // closes when the reporting worker exits — cleanly, by injected kill,
@@ -962,6 +1120,17 @@ fn run_world(
             },
         }
     }
+    // the saver's channel closed with the last worker; join it and
+    // harvest its errors (retry budget exhausted, commit failure) as
+    // hard failures — they are the root cause of any dependent worker
+    // error ("saver thread died"), so they take precedence
+    if let Some(h) = saver_handle {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e.context("checkpoint saver failed")),
+            Err(_) => return Err(anyhow!("checkpoint saver panicked")),
+        }
+    }
     if let Some(e) = hard {
         return Err(e);
     }
@@ -993,6 +1162,8 @@ fn run_world(
             .map(|g| g.ag_peak_floats.load(Ordering::Relaxed))
             .max()
             .unwrap_or(0),
+        ckpt_hidden_ns: save_ctx.as_ref().map_or(0, |s| s.hidden_ns.load(Ordering::Relaxed)),
+        ckpt_exposed_ns: save_ctx.as_ref().map_or(0, |s| s.exposed_ns.load(Ordering::Relaxed)),
     };
     Ok(WorldRun { logs, world_size, failure, c })
 }

@@ -95,6 +95,15 @@ pub struct WorkerCtx {
     /// optimizer shards across the new dp (`checkpoint::reslice_opt_state`)
     /// — the elastic dp±1 reconfiguration.
     pub ckpt_dp: usize,
+    /// The verified committed generation directory resume files load
+    /// from (`None` when not resuming).
+    pub ckpt_from: Option<std::path::PathBuf>,
+    /// Shared save state (timers, retrying writer, injected write-fail
+    /// budget) when `checkpoint_dir` is set.
+    pub save: Option<Arc<checkpoint::SaveCtx>>,
+    /// Snapshot hand-off to the background saver thread under
+    /// `--async-checkpoint`; `None` puts saves inline on the sync path.
+    pub save_tx: Option<mpsc::Sender<checkpoint::SavePart>>,
     /// Per-rank resident optimizer-state bytes, reported back to the
     /// leader (max over workers) — the measured shard-bytes figure the
     /// examples print.
@@ -707,7 +716,9 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
 
     // ---- checkpoint resume: params (shared) + this rank's opt state ----
     if ctx.cfg.resume {
-        let dir = ctx.cfg.checkpoint_dir.as_ref().expect("validated by leader");
+        // the coordinator resolved (and verified) the newest committed
+        // generation; every rank loads from that same directory
+        let dir = ctx.ckpt_from.as_ref().expect("resolved by leader");
         for c in 0..ctx.v {
             let g = ctx.global(c);
             let (p, _) =
@@ -812,9 +823,11 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // where a death can never tear a checkpoint (saves are barrier-
         // bracketed at the END of a step).  Peers hit the comm deadline
         // (PeerLost) and the coordinator shrinks the world.
-        if let Some(FaultSpec::Kill { step: ks, rank }) = ctx.cfg.fault {
-            if step == ks && ctx.world_rank() == rank {
-                return Err(anyhow::Error::new(KilledByFault { step: ks, rank }));
+        for f in &ctx.cfg.faults {
+            if let FaultSpec::Kill { step: ks, rank } = *f {
+                if step == ks && ctx.world_rank() == rank {
+                    return Err(anyhow::Error::new(KilledByFault { step: ks, rank }));
+                }
             }
         }
         for g in grad_accum.iter_mut() {
@@ -1089,19 +1102,37 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             grad_norm_sq.sqrt()
         };
 
-        // periodic checkpoint: every rank persists its own pieces after a
-        // world barrier (so all stages are at the same step).  Files are
-        // keyed (global stage, tp rank): each tensor shard's dp-rank-0
-        // worker writes that shard's params — assembled by a blocking DP
-        // all-gather under ZeRO-3, so the on-disk format is stage-
-        // independent for stages 0-2 resumes of each other's shape class;
-        // every rank writes its own optimizer state; pp0/dp0/tp0 writes
-        // the manifest.
+        // periodic checkpoint: every rank snapshots its own pieces after
+        // a world barrier (so all stages are at the same step).  Files
+        // are keyed (global stage, tp rank): each tensor shard's
+        // dp-rank-0 worker carries that shard's params — assembled by a
+        // blocking DP all-gather under ZeRO-3, so the on-disk format is
+        // stage-independent for stages 0-2 resumes of each other's shape
+        // class; every rank carries its own optimizer state; pp0/dp0/tp0
+        // carries the manifest.  The snapshot is Arc clones of the live
+        // parameter storage — the optimizer's `Arc::make_mut` copy-on-
+        // write means later steps never leak into it, which is what
+        // keeps the async path bitwise identical to sync.  Sync saves
+        // write the snapshot to the generation's staging dir inline and
+        // the leader commits it (one atomic rename) after a second
+        // barrier; async saves hand the snapshot to the saver thread and
+        // resume the step loop immediately.
         let every = ctx.cfg.checkpoint_every;
         let last_step = rel_step + 1 == ctx.cfg.steps;
-        if let Some(dir) = ctx.cfg.checkpoint_dir.as_ref() {
+        if let Some(save) = ctx.save.clone() {
             if (every > 0 && (rel_step + 1) % every == 0) || last_step {
+                let t0 = Instant::now();
+                let ckpt_step = step + 1;
+                let staging = checkpoint::staging_dir(&save.root, ckpt_step);
+                let leader = ctx.pp_rank == 0 && ctx.dp_rank == 0 && ctx.tp_rank == 0;
+                if leader && ctx.save_tx.is_none() {
+                    // sync path: sweep any stale torn staging for this
+                    // step before peers write (the barrier below orders
+                    // this ahead of every staging write)
+                    let _ = std::fs::remove_dir_all(&staging);
+                }
                 ctx.world.barrier(ctx.world_rank());
+                let mut files: Vec<(String, Arc<Vec<f32>>, u64)> = Vec::new();
                 for c in 0..ctx.v {
                     let g = ctx.global(c);
                     if z3_flow {
@@ -1115,43 +1146,104 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                             ctx.cfg.precision,
                         );
                         if ctx.dp_rank == 0 {
-                            checkpoint::write_f32(
-                                &checkpoint::params_path(dir, g, ctx.tp_rank),
-                                &full,
-                                (step + 1) as u64,
-                            )?;
+                            files.push((
+                                checkpoint::params_file_name(g, ctx.tp_rank),
+                                Arc::new(full),
+                                ckpt_step as u64,
+                            ));
                         }
                     } else if ctx.dp_rank == 0 {
-                        checkpoint::write_f32(
-                            &checkpoint::params_path(dir, g, ctx.tp_rank),
-                            &params[c],
-                            (step + 1) as u64,
-                        )?;
+                        files.push((
+                            checkpoint::params_file_name(g, ctx.tp_rank),
+                            params[c].clone(),
+                            ckpt_step as u64,
+                        ));
                     }
                     let (state, t) = opts[c].export_state();
-                    checkpoint::write_f32(
-                        &checkpoint::opt_path(dir, g, ctx.tp_rank, ctx.dp_rank),
-                        &state,
+                    files.push((
+                        checkpoint::opt_file_name(g, ctx.tp_rank, ctx.dp_rank),
+                        Arc::new(state),
                         t,
-                    )?;
+                    ));
                 }
-                ctx.world.barrier(ctx.world_rank());
-                if ctx.pp_rank == 0 && ctx.dp_rank == 0 && ctx.tp_rank == 0 {
-                    checkpoint::Manifest {
-                        step: step + 1,
-                        bundle: ctx.cfg.bundle.clone(),
-                        stages: ctx.k() as u32,
-                        tp: ctx.tp as u32,
-                        dp: ctx.dp as u32,
-                        zero_stage: ctx.cfg.zero_stage.index(),
-                        precision: ctx.cfg.precision.name().to_string(),
-                        loss_scale: scaler.scale(),
-                        scale_good_steps: scaler.good_steps(),
-                        grad_wire: ctx.cfg.effective_grad_wire().name().to_string(),
-                        nodes: ctx.cfg.nodes,
+                let manifest = leader.then(|| checkpoint::Manifest {
+                    step: ckpt_step,
+                    bundle: ctx.cfg.bundle.clone(),
+                    stages: ctx.k() as u32,
+                    tp: ctx.tp as u32,
+                    dp: ctx.dp as u32,
+                    zero_stage: ctx.cfg.zero_stage.index(),
+                    precision: ctx.cfg.precision.name().to_string(),
+                    loss_scale: scaler.scale(),
+                    scale_good_steps: scaler.good_steps(),
+                    grad_wire: ctx.cfg.effective_grad_wire().name().to_string(),
+                    nodes: ctx.cfg.nodes,
+                    files: Vec::new(),
+                });
+                // ckpt-crash@<gen>:<rank>: die *inside* this save — the
+                // generation can never commit, so recovery must fall
+                // back to the last committed one
+                let crash = ctx.cfg.faults.iter().any(|f| {
+                    matches!(*f, FaultSpec::CkptCrash { step: cs, rank }
+                        if cs == ckpt_step && rank == ctx.world_rank())
+                });
+                match &ctx.save_tx {
+                    Some(tx) => {
+                        if crash {
+                            // die at the hand-off: this rank's part never
+                            // reaches the saver, the step's staging stays
+                            // torn, and the commit count never fills
+                            return Err(anyhow::Error::new(KilledByFault {
+                                step: ckpt_step,
+                                rank: ctx.world_rank(),
+                            }));
+                        }
+                        tx.send(checkpoint::SavePart {
+                            step: ckpt_step,
+                            world_rank: ctx.world_rank(),
+                            files,
+                            manifest,
+                        })
+                        .map_err(|_| anyhow!("checkpoint saver thread died"))?;
                     }
-                    .save(dir)?;
+                    None => {
+                        if crash {
+                            // die mid-write: stage all but the last file,
+                            // leaving a genuinely torn staging dir, and
+                            // never reach the commit barrier
+                            for (name, data, aux) in
+                                files.iter().take(files.len().saturating_sub(1))
+                            {
+                                save.write_file(
+                                    ckpt_step,
+                                    ctx.world_rank(),
+                                    &staging.join(name),
+                                    data,
+                                    *aux,
+                                )?;
+                            }
+                            return Err(anyhow::Error::new(KilledByFault {
+                                step: ckpt_step,
+                                rank: ctx.world_rank(),
+                            }));
+                        }
+                        for (name, data, aux) in &files {
+                            save.write_file(
+                                ckpt_step,
+                                ctx.world_rank(),
+                                &staging.join(name),
+                                data,
+                                *aux,
+                            )?;
+                        }
+                        ctx.world.barrier(ctx.world_rank());
+                        if let Some(m) = manifest {
+                            checkpoint::commit_generation(&save.root, ckpt_step, m)?;
+                            checkpoint::prune_generations(&save.root, save.keep)?;
+                        }
+                    }
                 }
+                save.exposed_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             }
         }
 

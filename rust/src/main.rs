@@ -42,7 +42,8 @@ COMMANDS:
            [--nodes N] [--grad-wire fp32|bf16|int8] [--zero3-prefetch N]
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
-           [--comm-timeout-ms MS] [--fault kill@STEP:RANK|join@STEP]
+           [--async-checkpoint] [--ckpt-keep N] [--comm-timeout-ms MS]
+           [--fault kill@S:R|join@S|ckpt-crash@S:R|write-fail@S:R:N[,...]]
 
   --tp N shards every builtin stage across N tensor-parallel worker
   threads (Megatron column/row-parallel linears, vocab-parallel embed and
@@ -88,10 +89,25 @@ COMMANDS:
   and with checkpointing enabled the run recovers by restarting at dp-1
   from the last manifest (optimizer shards re-partition on load; the
   post-recovery trajectory is bitwise a fresh run at the new dp).
-  --fault injects failures deterministically: kill@STEP:RANK kills one
-  world rank at the top of that step, join@STEP grows the world to dp+1
-  at a planned step.  The report counts recovery events and lost
-  (recomputed) steps.
+  --fault injects failures deterministically and accepts a comma-
+  separated list (one fault per step): kill@STEP:RANK kills one world
+  rank at the top of that step, join@STEP grows the world to dp+1 at a
+  planned step, ckpt-crash@STEP:RANK kills a rank mid-save (leaving a
+  torn staging directory the next load must fall back past), and
+  write-fail@STEP:RANK:COUNT makes that rank's first COUNT checkpoint
+  writes at that step fail transiently (absorbed by retry-with-
+  backoff).  The report counts recovery events and lost (recomputed)
+  steps.
+
+  Checkpoints are crash-consistent generations: each save stages into
+  gen-<step>.tmp/, every file carries a CRC32 header, the manifest
+  lists per-file size+checksum, and commit is one atomic rename to
+  gen-<step>/.  Load picks the newest generation that verifies and
+  falls back past torn or corrupt ones; --ckpt-keep N (default 2)
+  retains a chain of N committed generations.  --async-checkpoint
+  snapshots params/opt state at the barrier and persists on a
+  background saver thread so the step loop resumes immediately —
+  saved bytes and trajectories stay bitwise-identical to sync saves.
 
   Quickstart:
 
@@ -465,6 +481,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_dir: args.get("checkpoint").map(Into::into),
         checkpoint_every: args.opt("checkpoint-every", 0).map_err(anyhow::Error::msg)?,
         resume: args.flag("resume"),
+        async_checkpoint: args.flag("async-checkpoint"),
+        ckpt_keep: args.opt("ckpt-keep", 2usize).map_err(anyhow::Error::msg)?,
         nodes: args.opt("nodes", 0u32).map_err(anyhow::Error::msg)?,
         grad_wire: match args.get("grad-wire") {
             Some(s) => Some(frontier_llm::precision::GradWire::parse(s).ok_or_else(|| {
@@ -474,11 +492,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
         zero3_prefetch: args.opt("zero3-prefetch", 1usize).map_err(anyhow::Error::msg)?,
         comm_timeout_ms: args.opt("comm-timeout-ms", 10_000u64).map_err(anyhow::Error::msg)?,
-        fault: match args.get("fault") {
-            Some(s) => Some(FaultSpec::parse(s).ok_or_else(|| {
-                anyhow::anyhow!("--fault must be kill@<step>:<rank> or join@<step>, got {s:?}")
-            })?),
-            None => None,
+        faults: match args.get("fault") {
+            Some(s) => FaultSpec::parse_list(s).map_err(anyhow::Error::msg)?,
+            None => Vec::new(),
         },
     };
     let report = train(&cfg)?;
@@ -549,6 +565,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             report.dp_sync_raw_s() * 1e3,
             report.dp_sync_exposed_s * 1e3,
             report.dp_overlap_fraction() * 100.0
+        );
+    }
+    if report.ckpt_save_raw_ms() > 0.0 {
+        println!(
+            "  ckpt save: {:.1} ms exposed, {:.1} ms hidden on the saver thread",
+            report.ckpt_save_exposed_ms, report.ckpt_save_hidden_ms
         );
     }
     let tiered = report.dp_bucket_intra_bytes

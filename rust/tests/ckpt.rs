@@ -1,0 +1,394 @@
+//! Crash-consistent checkpointing tests: generation directories,
+//! checksummed atomic commits, last-good fallback, and the async save
+//! path that overlaps training.
+//!
+//! The locks, mirroring the issue's acceptance criteria:
+//!
+//! * **Generations** — saves land in `gen-<step>/` via a staged write +
+//!   one atomic rename; `--ckpt-keep N` retains a chain and prunes the
+//!   rest; resume scans for the newest *committed* generation.
+//! * **Crash during save** — `--fault ckpt-crash@g:r` kills rank `r`
+//!   inside the save of generation `g` on both save paths; the torn
+//!   staging dir is never eligible and recovery resumes **bitwise
+//!   identically** from the last committed generation.
+//! * **Corruption fallback** — truncating or bit-flipping any file class
+//!   (params / optimizer / manifest) of the newest generation makes the
+//!   scan fall back to the previous one, again bitwise.
+//! * **Async ≡ sync** — `--async-checkpoint` persists on a background
+//!   saver thread; the training trajectory AND the committed bytes are
+//!   bitwise identical to sync saves.
+//! * **Write retry** — `--fault write-fail@g:r:n` injects transient
+//!   write failures; n below the retry budget is invisible bitwise,
+//!   exhausting the budget is a hard error naming the failed file.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use frontier_llm::config::ScheduleKind;
+use frontier_llm::coordinator::checkpoint::{gen_dir, latest_committed};
+use frontier_llm::coordinator::{train, EngineConfig, FaultSpec, TrainReport};
+use frontier_llm::precision::Dtype;
+use frontier_llm::zero::ShardingStage;
+
+const S1: ShardingStage = ShardingStage::OptimizerStates;
+
+/// Generous next to a sub-millisecond step, tiny next to a hang: the
+/// survivors of a mid-save crash stall this long, once, then recover.
+const TIMEOUT_MS: u64 = 2000;
+
+fn cfg(dp: usize, steps: u32) -> EngineConfig {
+    EngineConfig {
+        bundle: "builtin:tiny-s2-mb2".into(),
+        dp,
+        tp: 1,
+        schedule: ScheduleKind::OneF1B,
+        microbatches: 2,
+        steps,
+        zero_stage: S1,
+        precision: Dtype::F32,
+        grad_bucket_floats: 128,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fllm-ckpt-{tag}-{}", std::process::id()))
+}
+
+/// Bitwise view of a trajectory: step index, loss, grad-norm and
+/// loss-scale bits, skip flag.
+fn traj(r: &TrainReport) -> Vec<(u32, u32, u32, u32, bool)> {
+    r.logs
+        .iter()
+        .map(|l| {
+            (l.step, l.loss.to_bits(), l.grad_norm.to_bits(), l.loss_scale.to_bits(), l.skipped)
+        })
+        .collect()
+}
+
+fn dir_names(dir: &Path) -> BTreeSet<String> {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect()
+}
+
+/// Assert two committed generation directories hold byte-identical
+/// files (MANIFEST.json included).
+fn assert_dirs_bitwise_equal(a: &Path, b: &Path, tag: &str) {
+    let names = dir_names(a);
+    assert_eq!(names, dir_names(b), "{tag}: {a:?} and {b:?} hold the same file set");
+    for name in names {
+        assert_eq!(
+            std::fs::read(a.join(&name)).unwrap(),
+            std::fs::read(b.join(&name)).unwrap(),
+            "{tag}: {name} must be byte-identical across {a:?} and {b:?}"
+        );
+    }
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap() {
+        let e = e.unwrap();
+        let to = dst.join(e.file_name());
+        if e.path().is_dir() {
+            copy_dir(&e.path(), &to);
+        } else {
+            std::fs::copy(e.path(), &to).unwrap();
+        }
+    }
+}
+
+// =========================================================================
+// Generations: commit chain, retention, resume scan
+// =========================================================================
+
+#[test]
+fn saves_commit_a_generation_chain_and_keep_prunes_it() {
+    let dir = tmp("chain");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut c = cfg(2, 8);
+    c.checkpoint_dir = Some(dir.clone());
+    c.checkpoint_every = 2;
+    c.ckpt_keep = 3;
+    train(&c).expect("checkpointed run succeeds");
+
+    // saves at manifest steps 2, 4, 6, 8; keep = 3 retires gen-2
+    let names = dir_names(&dir);
+    assert!(!names.contains("gen-2"), "oldest generation pruned, got {names:?}");
+    for g in ["gen-4", "gen-6", "gen-8"] {
+        assert!(names.contains(g), "{g} must survive --ckpt-keep 3, got {names:?}");
+    }
+    assert!(
+        names.iter().all(|n| !n.ends_with(".tmp")),
+        "no staging dirs survive a clean run, got {names:?}"
+    );
+
+    let got = latest_committed(&dir).unwrap().expect("a committed generation exists");
+    assert_eq!(got.dir, gen_dir(&dir, 8), "resume scan picks the newest generation");
+    assert_eq!(got.manifest.step, 8);
+    assert!(
+        !got.manifest.files.is_empty(),
+        "the committed manifest lists every file with size + crc32"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// =========================================================================
+// Async ≡ sync: bitwise trajectory AND bitwise committed bytes
+// =========================================================================
+
+#[test]
+fn async_saves_match_sync_bitwise_on_disk_and_in_trajectory() {
+    let dir_s = tmp("eq-sync");
+    let dir_a = tmp("eq-async");
+    let _ = std::fs::remove_dir_all(&dir_s);
+    let _ = std::fs::remove_dir_all(&dir_a);
+
+    let mut s = cfg(2, 4);
+    s.checkpoint_dir = Some(dir_s.clone());
+    s.checkpoint_every = 2;
+    let s = train(&s).expect("sync-checkpointed run succeeds");
+
+    let mut a = cfg(2, 4);
+    a.checkpoint_dir = Some(dir_a.clone());
+    a.checkpoint_every = 2;
+    a.async_checkpoint = true;
+    let a = train(&a).expect("async-checkpointed run succeeds");
+
+    assert_eq!(traj(&a), traj(&s), "the saver thread must not perturb the trajectory");
+    // both runs keep the default 2-generation chain: compare every byte
+    assert_eq!(dir_names(&dir_a), dir_names(&dir_s));
+    for g in [2u32, 4] {
+        assert_dirs_bitwise_equal(&gen_dir(&dir_a, g), &gen_dir(&dir_s, g), "async-vs-sync");
+    }
+    // timer classification: sync persists inline (all exposed), async
+    // drains the writes on the saver thread (hidden time appears)
+    assert!(s.ckpt_save_exposed_ms > 0.0, "sync saves expose their write time");
+    assert_eq!(s.ckpt_save_hidden_ms, 0.0, "sync saves have no saver thread to hide on");
+    assert!(a.ckpt_save_hidden_ms > 0.0, "async saves drain on the saver thread");
+
+    std::fs::remove_dir_all(&dir_s).ok();
+    std::fs::remove_dir_all(&dir_a).ok();
+}
+
+// =========================================================================
+// ckpt-crash: a rank dies inside the save; the torn generation never
+// commits and recovery resumes bitwise from the last committed one
+// =========================================================================
+
+/// Three runs (the elastic P/A/B scheme, crash-during-save edition):
+///
+/// * **P** — dp = 2 for 2 steps; its step-2 generation is the state any
+///   fresh smaller world would resume from.
+/// * **A** — dp = 2 for 6 steps, rank 1 killed *inside* the save of
+///   generation 4 (end of step 3).  gen-4 stays a torn staging dir, so
+///   recovery falls back to committed gen-2 at dp = 1 and recomputes
+///   from step 2.
+/// * **B** — a fresh dp = 1 run resuming from P's checkpoint for the
+///   remaining 4 steps.
+///
+/// Locks: A ≡ P bitwise before the crash, A ≡ B bitwise after recovery.
+fn ckpt_crash_scheme(async_ckpt: bool, lost: u64, tag: &str) {
+    let dir_p = tmp(&format!("{tag}-p"));
+    let dir_a = tmp(&format!("{tag}-a"));
+    let _ = std::fs::remove_dir_all(&dir_p);
+    let _ = std::fs::remove_dir_all(&dir_a);
+
+    let mut p = cfg(2, 2);
+    p.checkpoint_dir = Some(dir_p.clone());
+    p.checkpoint_every = 2;
+    p.async_checkpoint = async_ckpt;
+    let p = train(&p).expect("straight run must succeed");
+
+    let mut a = cfg(2, 6);
+    a.checkpoint_dir = Some(dir_a.clone());
+    a.checkpoint_every = 2;
+    a.async_checkpoint = async_ckpt;
+    a.faults = FaultSpec::parse_list("ckpt-crash@4:1").unwrap();
+    a.comm_timeout_ms = TIMEOUT_MS;
+    let a = train(&a).expect("the crashed save must recover, not error");
+
+    assert_eq!(a.recovery_events, 1, "{tag}: one crash, one recovery");
+    // sync: the head rank blocks at the commit barrier before reporting
+    // step 3, so only logged step 2 is recomputed; async: the hand-off
+    // never blocks the head, step 3 is logged and recomputed too
+    assert_eq!(a.lost_steps, lost, "{tag}: steps past the gen-2 fallback are recomputed");
+    assert_eq!(a.world_size, 2, "{tag}: the run finishes on the shrunken world (pp2 x dp1)");
+    assert_eq!(
+        a.logs.iter().map(|l| l.step).collect::<Vec<_>>(),
+        (0..6).collect::<Vec<_>>(),
+        "{tag}: the stitched log covers every step exactly once"
+    );
+
+    let mut b = cfg(1, 4);
+    b.checkpoint_dir = Some(dir_p.clone());
+    b.resume = true;
+    let b = train(&b).expect("fresh run at the smaller world must succeed");
+
+    assert_eq!(traj(&a)[..2], traj(&p)[..], "{tag}: pre-crash leg ≡ straight dp = 2 run");
+    assert_eq!(
+        traj(&a)[2..],
+        traj(&b)[..],
+        "{tag}: post-recovery trajectory ≡ fresh dp = 1 resume from gen-2, bitwise"
+    );
+
+    std::fs::remove_dir_all(&dir_p).ok();
+    std::fs::remove_dir_all(&dir_a).ok();
+}
+
+#[test]
+fn ckpt_crash_sync_falls_back_to_last_committed_generation() {
+    ckpt_crash_scheme(false, 1, "crash-sync");
+}
+
+#[test]
+fn ckpt_crash_async_falls_back_to_last_committed_generation() {
+    ckpt_crash_scheme(true, 2, "crash-async");
+}
+
+// =========================================================================
+// Corruption fallback: every file class, truncated and bit-flipped
+// =========================================================================
+
+#[test]
+fn corruption_of_the_newest_generation_falls_back_to_last_good() {
+    let pristine = tmp("corrupt-src");
+    let _ = std::fs::remove_dir_all(&pristine);
+    let mut c = cfg(2, 4);
+    c.checkpoint_dir = Some(pristine.clone());
+    c.checkpoint_every = 2;
+    c.ckpt_keep = 4;
+    train(&c).expect("setup run succeeds");
+    assert_eq!(
+        latest_committed(&pristine).unwrap().unwrap().dir,
+        gen_dir(&pristine, 4),
+        "pristine chain resolves to gen-4"
+    );
+
+    // the reference: what a resume from gen-2 alone produces
+    let reference = {
+        let root = tmp("corrupt-ref");
+        let _ = std::fs::remove_dir_all(&root);
+        copy_dir(&pristine, &root);
+        std::fs::remove_dir_all(gen_dir(&root, 4)).unwrap();
+        let mut r = cfg(2, 2);
+        r.checkpoint_dir = Some(root.clone());
+        r.resume = true;
+        let r = train(&r).expect("reference resume from gen-2 succeeds");
+        std::fs::remove_dir_all(&root).ok();
+        traj(&r)
+    };
+
+    fn pick(root: &Path, suffix: &str) -> PathBuf {
+        let gen = gen_dir(root, 4);
+        let mut names: Vec<String> = dir_names(&gen)
+            .into_iter()
+            .filter(|n| n.ends_with(suffix))
+            .collect();
+        names.sort();
+        gen.join(names.first().unwrap_or_else(|| panic!("no {suffix} file in {gen:?}")))
+    }
+    fn truncate(p: PathBuf) {
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+    }
+    fn bit_flip(p: PathBuf) {
+        let mut bytes = std::fs::read(&p).unwrap();
+        *bytes.last_mut().unwrap() ^= 0x01; // payload byte: CRC32 must catch it
+        std::fs::write(&p, &bytes).unwrap();
+    }
+
+    type Corrupt<'a> = (&'a str, fn(&Path));
+    let matrix: Vec<Corrupt> = vec![
+        ("params-truncated", |r| truncate(pick(r, ".params.bin"))),
+        ("params-bit-flip", |r| bit_flip(pick(r, ".params.bin"))),
+        ("opt-truncated", |r| truncate(pick(r, ".opt.bin"))),
+        ("opt-bit-flip", |r| bit_flip(pick(r, ".opt.bin"))),
+        ("manifest-truncated", |r| truncate(pick(r, "MANIFEST.json"))),
+        ("manifest-missing", |r| {
+            std::fs::remove_file(gen_dir(r, 4).join("MANIFEST.json")).unwrap()
+        }),
+    ];
+    for (tag, corrupt) in matrix {
+        let root = tmp(&format!("corrupt-{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        copy_dir(&pristine, &root);
+        corrupt(&root);
+        let resolved = latest_committed(&root).unwrap().expect("gen-2 still resolves");
+        assert_eq!(resolved.dir, gen_dir(&root, 2), "{tag}: the scan skips corrupt gen-4");
+        let mut r = cfg(2, 2);
+        r.checkpoint_dir = Some(root.clone());
+        r.resume = true;
+        let r = train(&r).unwrap_or_else(|e| panic!("{tag}: fallback resume failed: {e:#}"));
+        assert_eq!(
+            traj(&r),
+            reference,
+            "{tag}: resume past the corrupt generation ≡ resume from gen-2, bitwise"
+        );
+        std::fs::remove_dir_all(&root).ok();
+    }
+    std::fs::remove_dir_all(&pristine).ok();
+}
+
+// =========================================================================
+// write-fail: transient failures retry invisibly, exhaustion is hard
+// =========================================================================
+
+#[test]
+fn transient_write_failures_retry_bitwise_invisibly_on_both_paths() {
+    let dir_n = tmp("wf-none");
+    let _ = std::fs::remove_dir_all(&dir_n);
+    let mut n = cfg(2, 4);
+    n.checkpoint_dir = Some(dir_n.clone());
+    n.checkpoint_every = 2;
+    let n = train(&n).expect("fault-free run succeeds");
+
+    for (tag, async_ckpt) in [("wf-sync", false), ("wf-async", true)] {
+        let dir_f = tmp(tag);
+        let _ = std::fs::remove_dir_all(&dir_f);
+        let mut f = cfg(2, 4);
+        f.checkpoint_dir = Some(dir_f.clone());
+        f.checkpoint_every = 2;
+        f.async_checkpoint = async_ckpt;
+        // 3 failures fit inside the 5-attempt retry budget: invisible
+        f.faults = FaultSpec::parse_list("write-fail@2:0:3").unwrap();
+        let f = train(&f).expect("retried writes must not surface");
+        assert_eq!(f.recovery_events, 0, "{tag}: a retried write is not a recovery");
+        assert_eq!(traj(&f), traj(&n), "{tag}: retries are invisible to the trajectory");
+        for g in [2u32, 4] {
+            assert_dirs_bitwise_equal(&gen_dir(&dir_f, g), &gen_dir(&dir_n, g), tag);
+        }
+        std::fs::remove_dir_all(&dir_f).ok();
+    }
+    std::fs::remove_dir_all(&dir_n).ok();
+}
+
+#[test]
+fn exhausting_the_write_retry_budget_is_a_hard_error() {
+    for (tag, async_ckpt) in [("wx-sync", false), ("wx-async", true)] {
+        let dir = tmp(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = cfg(2, 4);
+        c.checkpoint_dir = Some(dir.clone());
+        c.checkpoint_every = 2;
+        c.async_checkpoint = async_ckpt;
+        // a 20-failure budget outlasts the 5 write attempts
+        c.faults = FaultSpec::parse_list("write-fail@2:0:20").unwrap();
+        // no rank is killed, so nothing auto-arms the bounded waits; the
+        // sync path's survivors sit at the commit barrier until then
+        c.comm_timeout_ms = TIMEOUT_MS;
+        let err = match train(&c) {
+            Ok(_) => panic!("{tag}: an untrustable save must tear down, not succeed"),
+            Err(e) => e,
+        };
+        let chain = format!("{err:#}");
+        assert!(
+            chain.contains("failed after"),
+            "{tag}: the error names the exhausted retry budget: {chain}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

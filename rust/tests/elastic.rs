@@ -130,9 +130,58 @@ fn zero_timeout_means_unbounded_and_is_the_default() {
 fn fault_spec_parses_the_cli_grammar() {
     assert_eq!(FaultSpec::parse("kill@3:1"), Some(FaultSpec::Kill { step: 3, rank: 1 }));
     assert_eq!(FaultSpec::parse("join@5"), Some(FaultSpec::Join { step: 5 }));
-    for bad in ["kill@3", "kill@x:1", "kill@3:", "kill@:1", "join@", "join@x", "restart@2", ""] {
+    assert_eq!(
+        FaultSpec::parse("ckpt-crash@4:0"),
+        Some(FaultSpec::CkptCrash { step: 4, rank: 0 })
+    );
+    assert_eq!(
+        FaultSpec::parse("write-fail@6:1:3"),
+        Some(FaultSpec::WriteFail { step: 6, rank: 1, count: 3 })
+    );
+    for bad in [
+        "kill@3",
+        "kill@x:1",
+        "kill@3:",
+        "kill@:1",
+        "kill@3:1:2",
+        "join@",
+        "join@x",
+        "restart@2",
+        "",
+        "ckpt-crash@4",
+        "ckpt-crash@4:0:1",
+        "write-fail@6:1",
+        "write-fail@6:1:x",
+    ] {
         assert_eq!(FaultSpec::parse(bad), None, "{bad:?} must be rejected");
     }
+}
+
+#[test]
+fn fault_list_parses_commas_and_rejects_duplicate_steps() {
+    assert_eq!(
+        FaultSpec::parse_list("kill@5:1,ckpt-crash@8:0"),
+        Ok(vec![
+            FaultSpec::Kill { step: 5, rank: 1 },
+            FaultSpec::CkptCrash { step: 8, rank: 0 },
+        ])
+    );
+    // whitespace around items is tolerated
+    assert_eq!(
+        FaultSpec::parse_list(" join@2 , write-fail@4:0:2 "),
+        Ok(vec![
+            FaultSpec::Join { step: 2 },
+            FaultSpec::WriteFail { step: 4, rank: 0, count: 2 },
+        ])
+    );
+    // malformed items and empty list entries are errors, not silently dropped
+    assert!(FaultSpec::parse_list("kill@3:1,bogus@2").is_err());
+    assert!(FaultSpec::parse_list("kill@3:1,,join@5").is_err());
+    assert!(FaultSpec::parse_list("").is_err());
+    // two faults at the same step would race nondeterministically: rejected
+    let dup = FaultSpec::parse_list("kill@3:1,ckpt-crash@3:0");
+    assert!(dup.as_ref().is_err(), "duplicate step must be rejected, got {dup:?}");
+    assert!(dup.unwrap_err().contains("duplicate"), "the error names the duplication");
 }
 
 // =========================================================================
@@ -205,7 +254,7 @@ fn kill_recovery_scheme(stage: ShardingStage, precision: Dtype, d: usize, tag: &
     let mut a = cfg(d, 6, stage, precision);
     a.checkpoint_dir = Some(dir_a.clone());
     a.checkpoint_every = 2;
-    a.fault = FaultSpec::parse("kill@3:1");
+    a.faults = FaultSpec::parse_list("kill@3:1").unwrap();
     a.comm_timeout_ms = TIMEOUT_MS;
     let a = train(&a).expect("the faulted run must recover, not error");
 
@@ -249,7 +298,7 @@ fn kill_recovery_is_deterministic_across_reruns() {
             let mut a = cfg(3, 6, S1, Dtype::F32);
             a.checkpoint_dir = Some(dir.clone());
             a.checkpoint_every = 2;
-            a.fault = FaultSpec::parse("kill@3:1");
+            a.faults = FaultSpec::parse_list("kill@3:1").unwrap();
             a.comm_timeout_ms = TIMEOUT_MS;
             let r = train(&a).expect("faulted run must recover");
             std::fs::remove_dir_all(&dir).ok();
@@ -267,7 +316,7 @@ fn kill_without_a_checkpoint_restarts_from_scratch() {
     // no --checkpoint: the shrunken world has no manifest to resume from,
     // so it restarts the run from step 0 — every completed step is lost
     let mut a = cfg(2, 3, S1, Dtype::F32);
-    a.fault = FaultSpec::parse("kill@1:1");
+    a.faults = FaultSpec::parse_list("kill@1:1").unwrap();
     a.comm_timeout_ms = TIMEOUT_MS;
     let a = train(&a).expect("recovery without a checkpoint restarts from scratch");
     assert_eq!(a.recovery_events, 1);
@@ -292,7 +341,7 @@ fn planned_join_grows_the_world_and_matches_save_then_resume() {
     let mut j = cfg(2, 4, S1, Dtype::F32);
     j.checkpoint_dir = Some(dir_j.clone());
     j.checkpoint_every = 2;
-    j.fault = FaultSpec::parse("join@2");
+    j.faults = FaultSpec::parse_list("join@2").unwrap();
     let j = train(&j).expect("planned join must succeed");
     assert_eq!(j.recovery_events, 1, "a join is a recovery event");
     assert_eq!(j.lost_steps, 0, "a planned join recomputes nothing");
@@ -318,7 +367,7 @@ fn planned_join_grows_the_world_and_matches_save_then_resume() {
 #[test]
 fn join_without_a_checkpoint_dir_is_rejected() {
     let mut j = cfg(2, 4, S1, Dtype::F32);
-    j.fault = FaultSpec::parse("join@2");
+    j.faults = FaultSpec::parse_list("join@2").unwrap();
     let err = train(&j).expect_err("join needs a manifest for the grown world");
     assert!(err.to_string().contains("--checkpoint"), "unexpected error: {err:#}");
 }
