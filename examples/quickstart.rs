@@ -186,6 +186,37 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(elastic_report.recovery_events, 1, "the injected kill must trigger recovery");
     assert!(elastic_report.final_loss() < elastic_report.initial_loss());
 
+    // ---- 2.9 expert-parallel: a MoE bundle routed over all_to_all ----
+    // `-moe4k2` gives every stage block 4 expert MLPs behind a
+    // deterministic top-2 gate; `ep: 2` shards the expert *compute* over
+    // pairs of DP replicas through the dtype-packed all_to_all (expert
+    // parameters stay DP-replicated, so the trajectory is bitwise the
+    // ep = 1 run at fp32 — swap `ep: 1` in to check)
+    println!("== 4-expert top-2 MoE, expert-parallel over 2 replicas ==");
+    let moe_report = train(&EngineConfig {
+        bundle: "builtin:tiny-moe4k2-s2-mb2".into(),
+        dp: 2,
+        ep: 2,
+        schedule: ScheduleKind::OneF1B,
+        microbatches: 4,
+        steps: 15,
+        zero_stage: ShardingStage::OptimizerStates,
+        adam: AdamConfig { lr: 2e-2, ..Default::default() },
+        log_every: 5,
+        ..Default::default()
+    })?;
+    println!(
+        "loss {:.3} -> {:.3}; a2a wire: {} rounds, {:.1} KB routed payload, \
+         {} token(s) dropped at capacity (cf 1.25)\n",
+        moe_report.initial_loss(),
+        moe_report.final_loss(),
+        moe_report.moe_a2a_rounds,
+        moe_report.moe_a2a_payload_bytes as f64 / 1e3,
+        moe_report.moe_dropped_tokens,
+    );
+    assert!(moe_report.moe_a2a_rounds > 0, "ep = 2 must route over the wire");
+    assert!(moe_report.final_loss() < moe_report.initial_loss());
+
     // ---- 3. the paper's 175B recipe through the performance model ----
     println!("== paper Table V, 175B recipe on simulated Frontier ==");
     let r = recipe_175b();

@@ -11,7 +11,8 @@
 //! stands in for Frontier here, so large runs are budgeted in steps.
 //!
 //!   cargo run --release --offline --example train_e2e -- \
-//!       [--steps N] [--dp N] [--microbatches N] [--large] [--zero-stage 0|1|2|3]
+//!       [--steps N] [--dp N] [--microbatches N] [--large] [--zero-stage 0|1|2|3] \
+//!       [--bundle builtin:tiny-moe4k2-s2-mb2 --ep N --capacity-factor F]
 
 use frontier_llm::config::ScheduleKind;
 use frontier_llm::coordinator::{train, EngineConfig};
@@ -46,6 +47,12 @@ fn main() -> anyhow::Result<()> {
             .opt("loss-scale-growth", 0u32)
             .map_err(anyhow::Error::msg)?,
         tp: args.opt("tp", 1).map_err(anyhow::Error::msg)?,
+        // expert parallelism (builtin:*-moe* bundles): --ep N shards the
+        // expert compute over blocks of N consecutive DP replicas through
+        // the deterministic all_to_all; --capacity-factor bounds each
+        // expert's per-microbatch token slots (GShard default 1.25)
+        ep: args.opt("ep", 1).map_err(anyhow::Error::msg)?,
+        capacity_factor: args.opt("capacity-factor", 1.25f32).map_err(anyhow::Error::msg)?,
         schedule: ScheduleKind::OneF1B,
         microbatches,
         steps,
@@ -187,6 +194,17 @@ fn main() -> anyhow::Result<()> {
             report.dp_param_ag_inter_bytes as f64 / 1e3,
             report.pp_p2p_intra_bytes as f64 / 1e3,
             report.pp_p2p_inter_bytes as f64 / 1e3,
+        );
+    }
+    if report.moe_a2a_rounds > 0 || report.moe_dropped_tokens > 0 {
+        println!(
+            "moe a2a wire      : {} rounds, {:.1} KB routed payload \
+             ({:.1} KB intra / {:.1} KB inter), {} token(s) dropped at capacity",
+            report.moe_a2a_rounds,
+            report.moe_a2a_payload_bytes as f64 / 1e3,
+            report.moe_a2a_intra_bytes as f64 / 1e3,
+            report.moe_a2a_inter_bytes as f64 / 1e3,
+            report.moe_dropped_tokens,
         );
     }
     if report.recovery_events > 0 {

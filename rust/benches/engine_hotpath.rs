@@ -227,6 +227,31 @@ fn bench_all_gather_hier(n_ranks: usize, nodes: usize, total: usize, label: &str
     });
 }
 
+/// Deterministic dtype-packed all-to-all: every rank deposits one part
+/// per destination and redeems its receive set — the MoE dispatch (and,
+/// mirrored, combine) wire.  `part_len` is the per-destination element
+/// count, so one round moves `n² × part_len` elements group-wide.
+fn bench_all_to_all(n_ranks: usize, part_len: usize, wire: Dtype, label: &str) {
+    let group = Group::new(n_ranks);
+    let mut round = 0u64;
+    bench(label, 2, 20, || {
+        round += 1;
+        let handles: Vec<_> = (0..n_ranks)
+            .map(|rank| {
+                let g: Arc<Group> = group.clone();
+                thread::spawn(move || {
+                    let parts: Vec<Vec<f32>> =
+                        (0..g.len()).map(|dst| vec![(rank + dst) as f32; part_len]).collect();
+                    std::hint::black_box(g.all_to_all(rank, round, parts, wire));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
 fn fill(seed: usize, len: usize) -> Vec<f32> {
     (0..len).map(|i| ((seed * 31 + i) as f32 * 0.05).sin()).collect()
 }
@@ -285,6 +310,9 @@ fn bench_builtin_block(iters: u32) {
         seq: 64,
         mbs: 4,
         n_stages: 3,
+        experts: 1,
+        topk: 1,
+        moe: false,
     };
     let st = BuiltinStage::dense(spec, 1); // middle stage: pure block
     let comm = frontier_llm::collectives::TpComm::solo();
@@ -341,6 +369,15 @@ fn main() {
         &format!("collectives::hier_reduce_scatter_4x{sz}_n2_int8"),
     );
     bench_all_gather_hier(4, 2, ar_len, &format!("collectives::hier_param_all_gather_4x{sz}_n2"));
+
+    header("collectives: expert-parallel all-to-all (MoE dispatch/combine wire)");
+    // per-destination parts sized like a routed expert buffer; the bf16
+    // row rides the packed-u16 wire (half the bytes through the mailbox)
+    let a2a_part = if smoke { 1 << 12 } else { 1 << 16 };
+    let a2a_sz = if smoke { "16KB" } else { "256KB" };
+    bench_all_to_all(4, a2a_part, Dtype::F32, &format!("collectives::all_to_all_4x{a2a_sz}"));
+    bench_all_to_all(4, a2a_part, Dtype::Bf16, &format!("collectives::all_to_all_4x{a2a_sz}_bf16"));
+    bench_all_to_all(2, a2a_part, Dtype::F32, &format!("collectives::all_to_all_2x{a2a_sz}"));
 
     header("optimizer: Adam step + grad clip");
     let n = if smoke { 1 << 16 } else { 4 << 20 };
@@ -542,6 +579,32 @@ fn main() {
             ..Default::default()
         };
         bench("engine::train_builtin_tp2_pp4", 1, 5, || {
+            std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
+        });
+    }
+
+    header("end-to-end engine: MoE stages (4 experts, top-2), local vs expert-parallel");
+    for (label, ep) in [
+        // ep=1 computes every expert locally (no wire); ep=2 shards the
+        // expert FLOPs over the a2a — the pair is the routed-wire cost
+        ("engine::train_moe4k2_ep1", 1usize),
+        ("engine::train_moe4k2_ep2", 2usize),
+    ] {
+        let cfg = EngineConfig {
+            bundle: "builtin:tiny-moe4k2-s2-mb2".into(),
+            dp: 2,
+            ep,
+            schedule: ScheduleKind::OneF1B,
+            microbatches: 4,
+            steps: 3,
+            ..Default::default()
+        };
+        let report = frontier_llm::coordinator::train(&cfg).unwrap();
+        record_meta(
+            &format!("moe_ep{ep}_a2a_payload_bytes"),
+            &report.moe_a2a_payload_bytes.to_string(),
+        );
+        bench(label, 1, 5, || {
             std::hint::black_box(frontier_llm::coordinator::train(&cfg).unwrap());
         });
     }

@@ -50,6 +50,7 @@ fn main() {
             interleave: 1,
             bf16: true,
             zero3_prefetch: 1,
+            experts: 1,
         };
         std::hint::black_box(hpo::evaluate_point(&perf, &p));
     });

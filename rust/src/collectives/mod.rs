@@ -311,6 +311,28 @@ struct NbRound {
     hier_wire: Option<GradWire>,
 }
 
+/// One in-flight nonblocking all-to-all round (see
+/// [`Group::start_all_to_all_dtype`]): every rank deposits `n` wire-cast
+/// parts (one per destination), and whichever rank's deposit completes
+/// the round assembles each destination's receive set — its part from
+/// every source, in source-rank order.  Pure placement, no reduction, so
+/// the result is exact at any arrival order.
+#[derive(Default)]
+struct A2aRound {
+    /// `deposits[src]` = src's per-destination parts (wire-packed).
+    deposits: Vec<Option<Vec<Payload>>>,
+    arrived: usize,
+    /// `results[dst][src]` = unpacked f32 part from src to dst, produced
+    /// by the completing depositor.
+    results: Option<Vec<Vec<Payload>>>,
+    taken: usize,
+    /// Unpacked element counts, `lens[src][dst]` (each source chooses its
+    /// own part shapes; destinations learn them from the result).
+    lens: Vec<Vec<usize>>,
+    /// Wire dtype every rank of the round must agree on.
+    wire: Dtype,
+}
+
 /// A communicator over `n` ranks (one per worker thread).
 pub struct Group {
     n: usize,
@@ -333,6 +355,10 @@ pub struct Group {
     /// that node's members only.
     agn: Mutex<HashMap<(usize, u64), AgRound>>,
     agn_cv: Condvar,
+    /// In-flight nonblocking all-to-all rounds (the MoE token dispatch /
+    /// combine exchanges), in their own tag namespace.
+    a2a: Mutex<HashMap<u64, A2aRound>>,
+    a2a_cv: Condvar,
     pub bytes_moved: AtomicU64,
     pub rounds: AtomicU64,
     /// Nonblocking bucket rounds completed.
@@ -393,6 +419,20 @@ pub struct Group {
     pub pp_intra_bytes: AtomicU64,
     /// Engine-maintained inter-node half of the pipeline p2p payload.
     pub pp_inter_bytes: AtomicU64,
+    /// All-to-all rounds completed (once per round, by the completing
+    /// depositor).
+    pub a2a_rounds: AtomicU64,
+    /// Logical payload bytes of completed all-to-all rounds — the sum of
+    /// every (src, dst) part's element count **including** each rank's
+    /// self part, × wire-dtype width, counted once per round.  The MoE
+    /// perf a2a term is pinned EXACTLY against this.
+    pub a2a_payload_bytes: AtomicU64,
+    /// Per-tier split of the all-to-all payload: bytes of src ≠ dst parts
+    /// whose endpoints are co-resident (by the group's [`NodeMap`]).
+    /// Stays zero on topology-blind groups, like the other tier splits.
+    pub a2a_intra_bytes: AtomicU64,
+    /// Inter-node half of the src ≠ dst all-to-all payload.
+    pub a2a_inter_bytes: AtomicU64,
     /// Deadline (milliseconds) for every collective wait on this group;
     /// 0 (the default) keeps the legacy unbounded waits.  See
     /// [`Group::set_comm_timeout`].
@@ -430,6 +470,8 @@ impl Group {
             ag_cv: Condvar::new(),
             agn: Mutex::new(HashMap::new()),
             agn_cv: Condvar::new(),
+            a2a: Mutex::new(HashMap::new()),
+            a2a_cv: Condvar::new(),
             bytes_moved: AtomicU64::new(0),
             rounds: AtomicU64::new(0),
             nb_rounds: AtomicU64::new(0),
@@ -445,6 +487,10 @@ impl Group {
             ag_inter_bytes: AtomicU64::new(0),
             pp_intra_bytes: AtomicU64::new(0),
             pp_inter_bytes: AtomicU64::new(0),
+            a2a_rounds: AtomicU64::new(0),
+            a2a_payload_bytes: AtomicU64::new(0),
+            a2a_intra_bytes: AtomicU64::new(0),
+            a2a_inter_bytes: AtomicU64::new(0),
             comm_timeout_ms: AtomicU64::new(0),
         })
     }
@@ -1230,6 +1276,139 @@ impl Group {
         }
         GatherHandle { group: self.clone(), tag, immediate: None }
     }
+
+    /// Nonblocking **all-to-all**: rank `r` deposits `n` parts —
+    /// `parts[d]` goes to destination `d` (the self part included) — and
+    /// [`AllToAllHandle::wait`] returns this rank's receive set: its part
+    /// from every source, **in source-rank order**, regardless of deposit
+    /// arrival order.  Pure placement (no reduction), so the exchange is
+    /// deterministic by construction; a `Bf16` wire packs every part
+    /// (self parts too, so the value transformation is rank-count
+    /// invariant) and the completing depositor unpacks on assembly.
+    ///
+    /// Part shapes are per-source free: each source picks its own part
+    /// lengths (empty parts are fine) and destinations learn them from
+    /// the received vectors.  Tags live in their own namespace and are
+    /// single-use until every rank has redeemed, like the bucket rounds.
+    ///
+    /// Counters: `a2a_rounds` and `a2a_payload_bytes` (every part of
+    /// every rank, × wire width) advance once per round;
+    /// `a2a_intra_bytes`/`a2a_inter_bytes` split the src ≠ dst parts by
+    /// the group's node placement (zero on topology-blind groups).  This
+    /// is the MoE dispatch/combine wire (see `moe`).
+    pub fn start_all_to_all_dtype(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        parts: Vec<Vec<f32>>,
+        wire: Dtype,
+    ) -> AllToAllHandle {
+        assert!(rank < self.n);
+        assert_eq!(parts.len(), self.n, "all-to-all needs one part per destination");
+        if self.n == 1 {
+            // single rank: the receive set is the wire-cast self part
+            let mut part = parts.into_iter().next().expect("one part");
+            wire.quantize_slice(&mut part);
+            return AllToAllHandle {
+                group: self.clone(),
+                rank,
+                tag,
+                immediate: Some(vec![part]),
+            };
+        }
+        let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let deposit: Vec<Payload> = parts
+            .into_iter()
+            .map(|p| match wire {
+                Dtype::F32 => Arc::new(p),
+                Dtype::Bf16 => Arc::new(pack_bf16(&p)),
+            })
+            .collect();
+        let packed: u64 = deposit.iter().map(|p| p.len() as u64).sum();
+        self.bytes_moved.fetch_add(4 * packed, Ordering::Relaxed);
+        let handle = AllToAllHandle { group: self.clone(), rank, tag, immediate: None };
+        let mut a2a = self.a2a.lock().unwrap();
+        let round = a2a.entry(tag).or_insert_with(|| A2aRound {
+            deposits: vec![None; self.n],
+            lens: vec![Vec::new(); self.n],
+            wire,
+            ..Default::default()
+        });
+        assert!(round.results.is_none(), "all-to-all tag {tag:#x} reused before fully drained");
+        assert!(
+            round.deposits[rank].is_none(),
+            "rank {rank} double deposit on all-to-all {tag:#x}"
+        );
+        assert!(
+            round.wire == wire,
+            "all-to-all {tag:#x}: rank {rank} deposited {wire:?} into a {:?} round",
+            round.wire
+        );
+        round.deposits[rank] = Some(deposit);
+        round.lens[rank] = lens;
+        round.arrived += 1;
+        if round.arrived == self.n {
+            // this deposit completes the round: assemble NOW, outside the
+            // lock, so concurrent rounds keep flowing and the unpack cost
+            // lands on this rank's timeline instead of in anyone's wait()
+            let deps: Vec<Vec<Payload>> = round
+                .deposits
+                .iter()
+                .map(|d| d.as_ref().expect("deposited").clone())
+                .collect();
+            let lens = round.lens.clone();
+            drop(a2a);
+            let results: Vec<Vec<Payload>> = (0..self.n)
+                .map(|dst| {
+                    (0..self.n)
+                        .map(|src| match wire {
+                            Dtype::F32 => deps[src][dst].clone(),
+                            Dtype::Bf16 => {
+                                Arc::new(unpack_bf16(&deps[src][dst], lens[src][dst]))
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let total: u64 = lens.iter().flatten().map(|&l| l as u64).sum();
+            let (mut intra, mut inter) = (0u64, 0u64);
+            if let Some(map) = &self.nodes {
+                for src in 0..self.n {
+                    for dst in 0..self.n {
+                        if src == dst {
+                            continue;
+                        }
+                        let b = wire.bytes() * lens[src][dst] as u64;
+                        if map.node_of(src) == map.node_of(dst) {
+                            intra += b;
+                        } else {
+                            inter += b;
+                        }
+                    }
+                }
+            }
+            let mut a2a = self.a2a.lock().unwrap();
+            a2a.get_mut(&tag).expect("in-flight round").results = Some(results);
+            self.a2a_rounds.fetch_add(1, Ordering::Relaxed);
+            self.a2a_payload_bytes.fetch_add(wire.bytes() * total, Ordering::Relaxed);
+            self.a2a_intra_bytes.fetch_add(intra, Ordering::Relaxed);
+            self.a2a_inter_bytes.fetch_add(inter, Ordering::Relaxed);
+            self.a2a_cv.notify_all();
+        }
+        handle
+    }
+
+    /// Blocking [`Group::start_all_to_all_dtype`]: deposit, wait, return
+    /// this rank's parts from every source in source-rank order.
+    pub fn all_to_all(
+        self: &Arc<Self>,
+        rank: usize,
+        tag: u64,
+        parts: Vec<Vec<f32>>,
+        wire: Dtype,
+    ) -> Vec<Vec<f32>> {
+        self.start_all_to_all_dtype(rank, tag, parts, wire).wait()
+    }
 }
 
 /// Handle on one in-flight nonblocking bucket round (see
@@ -1370,6 +1549,65 @@ impl GatherHandle {
                     .and_then(|r| r.deposits.iter().position(|d| d.is_none())),
                 tag,
                 what: "nonblocking all-gather",
+                waited_ms: ms,
+            });
+        }
+    }
+}
+
+/// Handle on one in-flight all-to-all round (see
+/// [`Group::start_all_to_all_dtype`]).
+#[must_use = "an unredeemed all-to-all deadlocks the round's other ranks"]
+pub struct AllToAllHandle {
+    group: Arc<Group>,
+    rank: usize,
+    tag: u64,
+    /// Single-rank groups exchange the wire-cast self part.
+    immediate: Option<Vec<Vec<f32>>>,
+}
+
+impl AllToAllHandle {
+    /// Block until every rank has deposited, then return an owned copy of
+    /// this rank's receive set — one part per source, in source-rank
+    /// order.  Prefer [`AllToAllHandle::wait_shared`] when borrows
+    /// suffice.
+    pub fn wait(self) -> Vec<Vec<f32>> {
+        self.wait_shared()
+            .into_iter()
+            .map(|p| match Arc::try_unwrap(p) {
+                Ok(v) => v,
+                Err(shared) => shared.as_slice().to_vec(),
+            })
+            .collect()
+    }
+
+    /// Zero-copy redeem: the shared per-source parts themselves.
+    /// Redeeming also retires the round once every rank has done so
+    /// (freeing the tag for reuse).
+    pub fn wait_shared(self) -> Vec<Payload> {
+        if let Some(parts) = self.immediate {
+            return parts.into_iter().map(Arc::new).collect();
+        }
+        let n = self.group.n;
+        let deadline = self.group.comm_deadline();
+        let tag = self.tag;
+        let mut a2a = self.group.a2a.lock().unwrap();
+        loop {
+            let round = a2a.get_mut(&self.tag).expect("all-to-all round vanished");
+            if round.results.is_some() {
+                let mine = round.results.as_ref().expect("results set")[self.rank].clone();
+                round.taken += 1;
+                if round.taken == n {
+                    a2a.remove(&self.tag);
+                }
+                return mine;
+            }
+            a2a = wait_bounded(&self.group.a2a_cv, a2a, deadline, |m, ms| PeerLost {
+                rank: m
+                    .get(&tag)
+                    .and_then(|r| r.deposits.iter().position(|d| d.is_none())),
+                tag,
+                what: "nonblocking all-to-all",
                 waited_ms: ms,
             });
         }
@@ -2702,5 +2940,151 @@ mod tests {
         assert_eq!(g.ag_inter_bytes.load(Ordering::Relaxed), 0);
         // secondary gathers do NOT advance the primary logical counter
         assert_eq!(g.ag_payload_bytes.load(Ordering::Relaxed), 0);
+    }
+
+    /// rank r's part for destination d in the a2a tests.
+    fn a2a_part(rank: usize, dst: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| ((rank * 131 + dst * 17 + i) as f32 * 0.07).cos()).collect()
+    }
+
+    #[test]
+    fn all_to_all_routes_parts_in_source_order() {
+        for n in [1usize, 2, 3, 4] {
+            let len = 33usize;
+            run_ranks(n, move |rank, g| {
+                let parts: Vec<Vec<f32>> = (0..n).map(|d| a2a_part(rank, d, len)).collect();
+                let got = g.all_to_all(rank, 7, parts, Dtype::F32);
+                assert_eq!(got.len(), n);
+                for src in 0..n {
+                    assert_eq!(got[src], a2a_part(src, rank, len), "src {src} -> dst {rank}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn all_to_all_round_trip_is_identity() {
+        // a2a, then a2a of the received parts back to their sources,
+        // reproduces every rank's original parts exactly
+        for n in [2usize, 3, 4] {
+            let len = 21usize;
+            run_ranks(n, move |rank, g| {
+                let parts: Vec<Vec<f32>> = (0..n).map(|d| a2a_part(rank, d, len)).collect();
+                let fwd = g.all_to_all(rank, 11, parts.clone(), Dtype::F32);
+                let back = g.all_to_all(rank, 12, fwd, Dtype::F32);
+                assert_eq!(back, parts, "rank {rank}: a2a ∘ a2a must be identity");
+            });
+        }
+    }
+
+    #[test]
+    fn all_to_all_is_deterministic_across_arrival_orders() {
+        // jitter the deposit order across repeats; the routed parts (pure
+        // placement, assembled in source-rank order) never change
+        let n = 4usize;
+        let len = 17usize;
+        for round in 0..6u64 {
+            run_ranks(n, move |rank, g| {
+                thread::sleep(Duration::from_micros(((rank as u64 * 7 + round * 13) % 5) * 200));
+                let parts: Vec<Vec<f32>> = (0..n).map(|d| a2a_part(rank, d, len)).collect();
+                let got = g.all_to_all(rank, 100 + round, parts, Dtype::F32);
+                for src in 0..n {
+                    assert_eq!(got[src], a2a_part(src, rank, len));
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn all_to_all_ragged_and_empty_parts() {
+        // each (src, dst) pair has its own length; empty parts are legal
+        let n = 3usize;
+        run_ranks(n, move |rank, g| {
+            let parts: Vec<Vec<f32>> =
+                (0..n).map(|d| a2a_part(rank, d, (rank * n + d) % 4)).collect();
+            let got = g.all_to_all(rank, 21, parts, Dtype::F32);
+            for src in 0..n {
+                assert_eq!(got[src], a2a_part(src, rank, (src * n + rank) % 4));
+            }
+        });
+    }
+
+    #[test]
+    fn all_to_all_bf16_wire_matches_quantized_f32() {
+        // a Bf16-wire exchange ≡ quantize every part to the bf16 grid,
+        // then exchange over the f32 wire (pack/unpack is value-exact on
+        // grid points) — including the self part
+        let n = 3usize;
+        let len = 40usize;
+        run_ranks(n, move |rank, g| {
+            let parts: Vec<Vec<f32>> = (0..n).map(|d| a2a_part(rank, d, len)).collect();
+            let quantized: Vec<Vec<f32>> = parts
+                .iter()
+                .map(|p| {
+                    let mut q = p.clone();
+                    Dtype::Bf16.quantize_slice(&mut q);
+                    q
+                })
+                .collect();
+            let via_bf16 = g.all_to_all(rank, 31, parts, Dtype::Bf16);
+            let via_f32 = g.all_to_all(rank, 32, quantized, Dtype::F32);
+            assert_eq!(via_bf16, via_f32, "rank {rank}");
+        });
+    }
+
+    #[test]
+    fn all_to_all_counters_count_all_parts_once_per_round() {
+        let n = 4usize;
+        let len = 10usize;
+        let group = Group::new(n);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let g = group.clone();
+                thread::spawn(move || {
+                    let parts: Vec<Vec<f32>> = (0..n).map(|d| a2a_part(r, d, len)).collect();
+                    let _ = g.all_to_all(r, 41, parts, Dtype::F32);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(group.a2a_rounds.load(Ordering::Relaxed), 1);
+        // every (src, dst) part including self parts, once per round
+        assert_eq!(
+            group.a2a_payload_bytes.load(Ordering::Relaxed),
+            4 * (n * n * len) as u64
+        );
+        // topology-blind group: tier splits stay zero
+        assert_eq!(group.a2a_intra_bytes.load(Ordering::Relaxed), 0);
+        assert_eq!(group.a2a_inter_bytes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn all_to_all_tier_split_follows_node_map() {
+        // nodes [0,0,1,1]: of the 12 src≠dst pairs, 4 are intra-node
+        // (0↔1, 2↔3) and 8 cross the inter tier
+        let n = 4usize;
+        let len = 10usize;
+        let g = run_ranks_nodes(n, NodeMap::new(&[0, 0, 1, 1]), move |rank, g| {
+            let parts: Vec<Vec<f32>> = (0..n).map(|d| a2a_part(rank, d, len)).collect();
+            let got = g.all_to_all(rank, 51, parts, Dtype::F32);
+            for src in 0..n {
+                assert_eq!(got[src], a2a_part(src, rank, len));
+            }
+        });
+        let part_bytes = 4 * len as u64;
+        assert_eq!(g.a2a_payload_bytes.load(Ordering::Relaxed), part_bytes * (n * n) as u64);
+        assert_eq!(g.a2a_intra_bytes.load(Ordering::Relaxed), part_bytes * 4);
+        assert_eq!(g.a2a_inter_bytes.load(Ordering::Relaxed), part_bytes * 8);
+        // bf16 wire halves every tier's bytes
+        let g2 = run_ranks_nodes(n, NodeMap::new(&[0, 0, 1, 1]), move |rank, g| {
+            let parts: Vec<Vec<f32>> = (0..n).map(|d| a2a_part(rank, d, len)).collect();
+            let _ = g.all_to_all(rank, 52, parts, Dtype::Bf16);
+        });
+        let half = 2 * len as u64;
+        assert_eq!(g2.a2a_payload_bytes.load(Ordering::Relaxed), half * (n * n) as u64);
+        assert_eq!(g2.a2a_intra_bytes.load(Ordering::Relaxed), half * 4);
+        assert_eq!(g2.a2a_inter_bytes.load(Ordering::Relaxed), half * 8);
     }
 }

@@ -7,7 +7,7 @@ pub mod recipes;
 
 pub use model::{exec_zoo, lookup, paper_zoo, ModelSpec};
 pub use parallel::{ParallelConfig, Precision, ScheduleKind};
-pub use recipes::{fig11_recipes, recipe_175b, recipe_1t, recipe_22b, Recipe};
+pub use recipes::{fig11_recipes, recipe_175b, recipe_175b_moe, recipe_1t, recipe_22b, Recipe};
 // The sharding-stage ladder lives in `zero` (the engine subsystem); re-export
 // it here so strategy-level callers name it next to ParallelConfig.
 pub use crate::zero::ShardingStage;

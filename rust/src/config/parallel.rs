@@ -102,6 +102,26 @@ pub struct ParallelConfig {
     /// `(zero3_prefetch + 1)` chunks; 0 means fully synchronous gathers.
     /// Ignored unless `zero_stage` shards parameters.
     pub zero3_prefetch: u32,
+    /// MoE expert count per block (1 = dense, no gate).  Experts multiply
+    /// the FFN parameter budget without multiplying per-token FLOPs: each
+    /// token computes through `moe_topk` experts only.
+    pub experts: u32,
+    /// Experts each token routes to (top-k gating).  Must not exceed
+    /// `experts`; ignored (forced 1) for dense models.
+    pub moe_topk: u32,
+    /// Expert-parallel group size: EP groups are blocks of `ep`
+    /// consecutive DP replicas per (pp, tp) cell, each owning
+    /// `experts / ep` experts and exchanging tokens over a deterministic
+    /// `all_to_all`.  Expert *parameters* stay DP-replicated (the ZeRO
+    /// ladder and the optimizer see the same flat vector at any ep), so
+    /// trajectories are ep-invariant.  Requires `ep | dp` and
+    /// `ep | experts`; 1 = no token exchange, every rank runs all experts.
+    pub ep: u32,
+    /// GShard-style expert capacity factor: each expert accepts
+    /// `ceil(cf * tokens * topk / experts)` tokens per micro-batch
+    /// (clamped to `tokens`); overflow tokens are dropped from the MoE
+    /// branch (the residual path still carries them).
+    pub capacity_factor: f32,
 }
 
 impl Default for ParallelConfig {
@@ -118,6 +138,10 @@ impl Default for ParallelConfig {
             precision: Precision::Fp16,
             schedule: ScheduleKind::OneF1B,
             zero3_prefetch: 1,
+            experts: 1,
+            moe_topk: 1,
+            ep: 1,
+            capacity_factor: 1.25,
         }
     }
 }
@@ -169,6 +193,33 @@ impl ParallelConfig {
                     self.pp
                 ));
             }
+        }
+        if self.experts == 0 || self.moe_topk == 0 || self.ep == 0 {
+            return Err("experts, moe_topk and ep must be >= 1".into());
+        }
+        if self.moe_topk > self.experts {
+            return Err(format!(
+                "moe_topk {} exceeds experts {}",
+                self.moe_topk, self.experts
+            ));
+        }
+        if self.experts % self.ep != 0 {
+            return Err(format!(
+                "experts {} not divisible by ep {} (every EP rank owns experts/ep whole experts)",
+                self.experts, self.ep
+            ));
+        }
+        if self.dp % self.ep != 0 {
+            return Err(format!(
+                "dp {} not divisible by ep {} (EP groups are blocks of ep consecutive DP replicas)",
+                self.dp, self.ep
+            ));
+        }
+        if !(self.capacity_factor.is_finite() && self.capacity_factor > 0.0) {
+            return Err(format!(
+                "capacity_factor must be finite and positive, got {}",
+                self.capacity_factor
+            ));
         }
         Ok(())
     }
@@ -243,6 +294,23 @@ impl ParallelConfig {
         self.zero3_prefetch = n;
         self
     }
+    /// Top-k MoE layers: `experts` expert copies of each FFN, each token
+    /// routed to `topk` of them.  `experts = 1` stays dense (no gate).
+    pub fn with_moe(mut self, experts: u32, topk: u32) -> Self {
+        self.experts = experts;
+        self.moe_topk = topk;
+        self
+    }
+    /// Expert-parallel group size (blocks of `ep` consecutive DP replicas).
+    pub fn with_ep(mut self, ep: u32) -> Self {
+        self.ep = ep;
+        self
+    }
+    /// GShard capacity factor for the per-expert token buffers.
+    pub fn with_capacity_factor(mut self, cf: f32) -> Self {
+        self.capacity_factor = cf;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -299,6 +367,47 @@ mod tests {
         assert!(!c.tp_divides(12290, 51200));
         assert!(!c.tp_divides(12288, 51201));
         assert!(ParallelConfig::default().with_tp(1).tp_divides(7, 13));
+    }
+
+    #[test]
+    fn moe_axis_validation() {
+        // dense default: the MoE axes sit at their identity values
+        let d = ParallelConfig::default();
+        assert_eq!((d.experts, d.moe_topk, d.ep), (1, 1, 1));
+        d.validate().unwrap();
+        // well-formed MoE: 8 experts, top-2, ep=2 over dp=4
+        ParallelConfig::default()
+            .with_dp(4)
+            .with_gbs(4)
+            .with_moe(8, 2)
+            .with_ep(2)
+            .validate()
+            .unwrap();
+        // topk may not exceed experts
+        assert!(ParallelConfig::default().with_moe(4, 5).validate().is_err());
+        // ep must divide experts
+        assert!(ParallelConfig::default()
+            .with_dp(4)
+            .with_gbs(4)
+            .with_moe(6, 2)
+            .with_ep(4)
+            .validate()
+            .is_err());
+        // ep must divide dp
+        assert!(ParallelConfig::default()
+            .with_dp(3)
+            .with_gbs(3)
+            .with_moe(4, 1)
+            .with_ep(2)
+            .validate()
+            .is_err());
+        // zero / non-finite knobs rejected
+        assert!(ParallelConfig::default().with_moe(0, 1).validate().is_err());
+        assert!(ParallelConfig::default().with_capacity_factor(0.0).validate().is_err());
+        assert!(ParallelConfig::default()
+            .with_capacity_factor(f32::INFINITY)
+            .validate()
+            .is_err());
     }
 
     #[test]

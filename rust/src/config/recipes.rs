@@ -48,6 +48,10 @@ pub fn recipe_175b() -> Recipe {
             precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
             zero3_prefetch: 1,
+            experts: 1,
+            moe_topk: 1,
+            ep: 1,
+            capacity_factor: 1.25,
         },
     }
 }
@@ -69,6 +73,10 @@ pub fn recipe_1t() -> Recipe {
             precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
             zero3_prefetch: 1,
+            experts: 1,
+            moe_topk: 1,
+            ep: 1,
+            capacity_factor: 1.25,
         },
     }
 }
@@ -90,8 +98,24 @@ pub fn recipe_22b() -> Recipe {
             precision: Precision::Bf16,
             schedule: ScheduleKind::OneF1B,
             zero3_prefetch: 1,
+            experts: 1,
+            moe_topk: 1,
+            ep: 1,
+            capacity_factor: 1.25,
         },
     }
+}
+
+/// Sparse-expert variant of the Table V 175B recipe: the same tp4 pp16
+/// dp16 grid with 8 top-2 experts per FFN and the expert exchange run at
+/// ep=4 (4 EP groups of 4 consecutive DP replicas per (pp, tp) cell).
+/// Expert parameters stay DP-replicated, so the optimizer/ZeRO-1 setup
+/// is untouched and the trajectory is ep-invariant; only the token
+/// routing traffic (`all_to_all`) changes with ep.
+pub fn recipe_175b_moe() -> Recipe {
+    let mut r = recipe_175b();
+    r.parallel = r.parallel.with_moe(8, 2).with_ep(4);
+    r
 }
 
 /// All three Fig 11 recipes in paper order.
@@ -114,6 +138,24 @@ mod tests {
             r.parallel.validate().expect("recipe must be well-formed");
             assert!(r.parallel.pipeline_saturated(), "{}", r.model.name);
         }
+    }
+
+    #[test]
+    fn moe_recipe_variant() {
+        let r = recipe_175b_moe();
+        r.parallel.validate().expect("moe recipe must be well-formed");
+        assert_eq!((r.parallel.experts, r.parallel.moe_topk, r.parallel.ep), (8, 2, 4));
+        // same grid and GPU count as the dense recipe — MoE changes the
+        // parameter budget and routing traffic, not the decomposition
+        let dense = recipe_175b();
+        assert_eq!(r.gpus(), dense.gpus());
+        assert_eq!(
+            (r.parallel.tp, r.parallel.pp, r.parallel.dp),
+            (dense.parallel.tp, dense.parallel.pp, dense.parallel.dp)
+        );
+        // ep divides both dp and experts by construction
+        assert_eq!(r.parallel.dp % r.parallel.ep, 0);
+        assert_eq!(r.parallel.experts % r.parallel.ep, 0);
     }
 
     #[test]

@@ -111,6 +111,20 @@ pub struct Manifest {
     pub stages: u32,
     pub tp: u32,
     pub dp: u32,
+    /// Expert count of the bundle's MoE stages (1 = dense).  Part of the
+    /// checkpoint's identity: parameter files carry one segment per
+    /// expert plus the gate, so resuming under a different expert shape
+    /// hard-rejects.  Legacy manifests default to 1.
+    pub experts: u32,
+    /// Routed experts per token (top-k); 1 for dense and legacy
+    /// manifests.  A top-k change alters the routing (and so the
+    /// trajectory) silently — mismatches are rejected with `experts`.
+    pub moe_topk: u32,
+    /// Effective expert-parallel width the writing world ran at.
+    /// Informational only — trajectories are ep-invariant, so any valid
+    /// ep resumes any other; recorded so the tier-split a2a counters can
+    /// be interpreted after the fact.  Legacy manifests default to 1.
+    pub ep: u32,
     /// ZeRO sharding stage (0..=3) the checkpoint was written at; legacy
     /// manifests carried a `zero1` bool, parsed as stage 0/1.
     pub zero_stage: u32,
@@ -157,6 +171,7 @@ impl Manifest {
             .join(", ");
         format!(
             "{{\"step\": {}, \"bundle\": {}, \"stages\": {}, \"tp\": {}, \"dp\": {}, \
+             \"experts\": {}, \"moe_topk\": {}, \"ep\": {}, \
              \"zero_stage\": {}, \"precision\": {}, \"loss_scale\": {}, \"scale_good_steps\": {}, \
              \"grad_wire\": {}, \"nodes\": {}, \"files\": [{}]}}",
             self.step,
@@ -164,6 +179,9 @@ impl Manifest {
             self.stages,
             self.tp,
             self.dp,
+            self.experts,
+            self.moe_topk,
+            self.ep,
             self.zero_stage,
             crate::util::json::escape(&self.precision),
             self.loss_scale,
@@ -209,6 +227,10 @@ impl Manifest {
             stages,
             tp: j.u64_field("tp").map_err(|e| anyhow!("{e}"))? as u32,
             dp: j.u64_field("dp").map_err(|e| anyhow!("{e}"))? as u32,
+            // pre-MoE manifests are all dense: one expert, top-1, ep 1
+            experts: j.u64_field("experts").unwrap_or(1) as u32,
+            moe_topk: j.u64_field("moe_topk").unwrap_or(1) as u32,
+            ep: j.u64_field("ep").unwrap_or(1) as u32,
             zero_stage: match j.u64_field("zero_stage") {
                 Ok(s) => s as u32,
                 // pre-staged manifests carried a zero1 bool: stage 0 or 1
@@ -244,7 +266,24 @@ impl Manifest {
         tp: u32,
         precision: &str,
         grad_wire: &str,
+        experts: u32,
+        moe_topk: u32,
     ) -> Result<()> {
+        // the expert-config check runs FIRST: a `-moe` shape change also
+        // changes the bundle string, and the targeted message beats the
+        // generic bundle-mismatch one
+        anyhow::ensure!(
+            self.experts == experts && self.moe_topk == moe_topk,
+            "checkpoint expert config (experts={}, topk={}) does not match this run's \
+             (experts={}, topk={}) — parameter files carry one segment per expert plus \
+             the gate, so a different expert shape cannot be re-assembled; re-train to \
+             produce a new checkpoint (ep, by contrast, re-routes freely: trajectories \
+             are ep-invariant)",
+            self.experts,
+            self.moe_topk,
+            experts,
+            moe_topk
+        );
         anyhow::ensure!(
             self.bundle == bundle && self.stages == stages,
             "checkpoint bundle mismatch: {:?} at {} global stages vs this run's {:?} at {} — \
@@ -829,6 +868,9 @@ mod tests {
             stages: 2,
             tp: 1,
             dp: 1,
+            experts: 1,
+            moe_topk: 1,
+            ep: 1,
             zero_stage: 1,
             precision: "fp32".into(),
             loss_scale: 1.0,
@@ -909,10 +951,13 @@ mod tests {
         for stage in 0..4u32 {
             let m = Manifest {
                 step: 17,
-                bundle: "tiny-s2-mb2".into(),
+                bundle: "tiny-moe8k2-s2-mb2".into(),
                 stages: 2,
                 tp: 4,
                 dp: 3,
+                experts: 8,
+                moe_topk: 2,
+                ep: 4,
                 zero_stage: stage,
                 precision: "bf16".into(),
                 loss_scale: 2048.0,
@@ -952,6 +997,8 @@ mod tests {
         assert_eq!(m.nodes, 1);
         // pre-generation manifests carry no file list: verify is vacuous
         assert!(m.files.is_empty());
+        // pre-MoE manifests are dense: one expert, top-1, ep 1
+        assert_eq!((m.experts, m.moe_topk, m.ep), (1, 1, 1));
         let legacy_z1 = "{\"step\": 3, \"bundle\": \"tiny-s2-mb2\", \"stages\": 2, \
                          \"tp\": 1, \"dp\": 2, \"zero1\": true}";
         assert_eq!(Manifest::from_json(legacy_z1).unwrap().zero_stage, 1);
@@ -976,6 +1023,9 @@ mod tests {
             stages: 2,
             tp: 2,
             dp: 3,
+            experts: 1,
+            moe_topk: 1,
+            ep: 1,
             zero_stage: 1,
             precision: "bf16".into(),
             loss_scale: 1024.0,
@@ -985,20 +1035,44 @@ mod tests {
             files: Vec::new(),
         };
         // dp deliberately absent: any dp re-partitions on resume
-        m.validate_resume("tiny-s2-mb2", 2, 2, "bf16", "bf16").unwrap();
+        m.validate_resume("tiny-s2-mb2", 2, 2, "bf16", "bf16", 1, 1).unwrap();
         let tp_err = m
-            .validate_resume("tiny-s2-mb2", 2, 4, "bf16", "bf16")
+            .validate_resume("tiny-s2-mb2", 2, 4, "bf16", "bf16", 1, 1)
             .unwrap_err()
             .to_string();
         assert!(tp_err.contains("re-partitions"), "{tp_err}");
-        assert!(m.validate_resume("other", 2, 2, "bf16", "bf16").is_err());
-        assert!(m.validate_resume("tiny-s2-mb2", 3, 2, "bf16", "bf16").is_err());
-        assert!(m.validate_resume("tiny-s2-mb2", 2, 2, "fp32", "bf16").is_err());
+        assert!(m.validate_resume("other", 2, 2, "bf16", "bf16", 1, 1).is_err());
+        assert!(m.validate_resume("tiny-s2-mb2", 3, 2, "bf16", "bf16", 1, 1).is_err());
+        assert!(m.validate_resume("tiny-s2-mb2", 2, 2, "fp32", "bf16", 1, 1).is_err());
         let wire_err = m
-            .validate_resume("tiny-s2-mb2", 2, 2, "bf16", "int8")
+            .validate_resume("tiny-s2-mb2", 2, 2, "bf16", "int8", 1, 1)
             .unwrap_err()
             .to_string();
         assert!(wire_err.contains("grad-wire"), "{wire_err}");
+    }
+
+    #[test]
+    fn validate_resume_rejects_expert_config_mismatch_with_a_targeted_error() {
+        let m = Manifest { experts: 4, moe_topk: 2, ep: 2, ..manifest(4) };
+        // matching expert config resumes at ANY ep (trajectories are
+        // ep-invariant, so ep never blocks)
+        m.validate_resume("tiny-s2-mb2", 2, 1, "fp32", "fp32", 4, 2).unwrap();
+        // experts mismatch: targeted message, ahead of the bundle check
+        let err = m
+            .validate_resume("tiny-s2-mb2", 2, 1, "fp32", "fp32", 8, 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expert config"), "{err}");
+        assert!(err.contains("experts=4"), "{err}");
+        // top-k mismatch rejects the same way
+        let err = m
+            .validate_resume("tiny-s2-mb2", 2, 1, "fp32", "fp32", 4, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("topk=2"), "{err}");
+        // a dense checkpoint refuses a MoE resume (and vice versa)
+        let dense = manifest(4);
+        assert!(dense.validate_resume("tiny-s2-mb2", 2, 1, "fp32", "fp32", 4, 1).is_err());
     }
 
     #[test]

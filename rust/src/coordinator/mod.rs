@@ -208,6 +208,25 @@ pub struct EngineConfig {
     /// Tensor-parallel shards per pipeline worker (builtin bundles only;
     /// the AOT artifacts are compiled tensor-dense).
     pub tp: usize,
+    /// Expert-parallel group size for `builtin:*-moe*` bundles: each
+    /// (pp, tp) cell's DP replicas split into blocks of `ep` consecutive
+    /// ranks that shard the expert *compute* `ep` ways (rank `r` of a
+    /// block owns experts `[r·E/ep, (r+1)·E/ep)`) and exchange routed
+    /// tokens through the deterministic `all_to_all`.  Expert
+    /// *parameters* stay DP-replicated — the optimizer, ZeRO sharding
+    /// and checkpoints see the identical flat vector at any `ep` — so
+    /// `ep` changes only where expert FLOPs run and what crosses the
+    /// wire; trajectories are ep-invariant (bitwise at fp32).  Requires
+    /// `experts % ep == 0` and `ep | dp`; an elastic leg whose shrunken
+    /// dp breaks divisibility falls back to `ep = 1` for that world.
+    pub ep: usize,
+    /// MoE capacity factor: each expert accepts at most
+    /// `ceil(cf · tokens · topk / experts)` tokens per micro-batch
+    /// (clamped to `tokens`); overflow tokens lose that expert's combine
+    /// contribution (dropped) and count into
+    /// `TrainReport::moe_dropped_tokens`.  1.25 is the GShard default;
+    /// ignored by dense bundles.
+    pub capacity_factor: f32,
     pub schedule: ScheduleKind,
     /// Micro-batches per replica per step (gradient-accumulation steps).
     pub microbatches: u32,
@@ -313,6 +332,8 @@ impl Default for EngineConfig {
             bundle: String::from("tiny-s2-mb2"),
             dp: 1,
             tp: 1,
+            ep: 1,
+            capacity_factor: 1.25,
             schedule: ScheduleKind::OneF1B,
             microbatches: 2,
             steps: 10,
@@ -439,6 +460,29 @@ pub struct TrainReport {
     /// Boundary tensors crossing nodes (adjacent pipeline stages placed
     /// on different nodes under packed placement).  0 in flat mode.
     pub pp_p2p_inter_bytes: u64,
+    /// Expert-parallel `all_to_all` rounds completed across every EP
+    /// group over the run (dispatch and combine count separately) —
+    /// pinned EXACTLY against `perf::moe_a2a_rounds_per_step` by the MoE
+    /// tests.  0 on dense runs and at `ep = 1` (routing stays
+    /// rank-local, no wire).
+    pub moe_a2a_rounds: u64,
+    /// Logical `all_to_all` payload bytes (Σ part elements × wire dtype
+    /// over every src→dst pair including self, once per round) — pinned
+    /// EXACTLY against the analytic `perf::moe_a2a_payload_bytes` term;
+    /// exactly halves under the packed-bf16 wire.
+    pub moe_a2a_payload_bytes: u64,
+    /// Per-tier split of the a2a payload under `--nodes` (src ≠ dst
+    /// pairs only, classified by the packed placement of the two
+    /// endpoints).  0 in flat mode.
+    pub moe_a2a_intra_bytes: u64,
+    /// Inter-node tier of the a2a payload.  0 in flat mode or when the
+    /// EP group sits on one node.
+    pub moe_a2a_inter_bytes: u64,
+    /// Tokens dropped at expert capacity across the run, summed over DP
+    /// replicas, hosted chunks and micro-batches (charged once per
+    /// scheduled block forward by each cell's tp=0 shard; backward
+    /// recomputes never double-count).
+    pub moe_dropped_tokens: u64,
     /// Sharding stage the run executed at.
     pub zero_stage: ShardingStage,
     /// ZeRO-3 gather-use-drop residency: the high-water mark of
@@ -515,8 +559,11 @@ pub fn train(cfg: &EngineConfig) -> Result<TrainReport> {
                 cfg.bundle
             )
         })?;
-        let bundle =
-            Arc::new(Bundle::builtin_with_policy(&spec, CastPolicy::for_dtype(cfg.precision)));
+        let bundle = Arc::new(Bundle::builtin_with(
+            &spec,
+            CastPolicy::for_dtype(cfg.precision),
+            cfg.capacity_factor,
+        ));
         return train_with_bundle(cfg, Runtime::null(), bundle);
     }
     anyhow::ensure!(
@@ -584,6 +631,44 @@ pub fn train_with_bundle(
             "tp {tp} must divide hidden {} and vocab {}",
             spec.hidden,
             spec.vocab
+        );
+    }
+    anyhow::ensure!(cfg.ep >= 1, "ep must be >= 1");
+    anyhow::ensure!(
+        cfg.capacity_factor.is_finite() && cfg.capacity_factor > 0.0,
+        "--capacity-factor must be positive and finite"
+    );
+    if cfg.ep > 1 {
+        // expert parallelism routes tokens between the builtin MoE
+        // stages; fail fast with the divisibility contract spelled out
+        anyhow::ensure!(
+            cfg.bundle.starts_with("builtin:"),
+            "expert parallelism (ep = {}) requires a builtin:*-moe* bundle — \
+             AOT artifact stages are compiled dense",
+            cfg.ep
+        );
+        let spec = BuiltinSpec::parse(&cfg.bundle)
+            .ok_or_else(|| anyhow!("malformed builtin bundle {:?}", cfg.bundle))?;
+        anyhow::ensure!(
+            spec.moe,
+            "expert parallelism (ep = {}) needs a MoE bundle \
+             (builtin:*-moe<E>[k<K>]-*); {:?} is dense",
+            cfg.ep,
+            cfg.bundle
+        );
+        anyhow::ensure!(
+            spec.experts % cfg.ep == 0,
+            "ep {} must divide the bundle's expert count {}: every EP rank owns \
+             experts/ep whole experts",
+            cfg.ep,
+            spec.experts
+        );
+        anyhow::ensure!(
+            cfg.dp % cfg.ep == 0,
+            "ep {} must divide dp {}: EP groups are blocks of ep consecutive \
+             DP replicas",
+            cfg.ep,
+            cfg.dp
         );
     }
 
@@ -750,6 +835,11 @@ pub fn train_with_bundle(
         dp_param_ag_inter_bytes: counters.dp_param_ag_inter_bytes,
         pp_p2p_intra_bytes: counters.pp_p2p_intra_bytes,
         pp_p2p_inter_bytes: counters.pp_p2p_inter_bytes,
+        moe_a2a_rounds: counters.moe_a2a_rounds,
+        moe_a2a_payload_bytes: counters.moe_a2a_payload_bytes,
+        moe_a2a_intra_bytes: counters.moe_a2a_intra_bytes,
+        moe_a2a_inter_bytes: counters.moe_a2a_inter_bytes,
+        moe_dropped_tokens: counters.moe_dropped_tokens,
         zero_stage: cfg.zero_stage,
         zero3_peak_gathered_floats: counters.zero3_peak_gathered_floats,
         opt_state_bytes_per_rank: opt_state_bytes.load(Ordering::Relaxed),
@@ -800,12 +890,15 @@ fn resolve_resume(cfg: &EngineConfig, n_stages: usize) -> Result<ResumePoint> {
     let resolved = checkpoint::latest_committed(root)?
         .ok_or_else(|| anyhow!("no committed checkpoint generation in {root:?}"))?;
     let (dir, manifest) = (resolved.dir, resolved.manifest);
+    let spec = BuiltinSpec::parse(&cfg.bundle);
     manifest.validate_resume(
         &cfg.bundle,
         n_stages as u32,
         cfg.tp as u32,
         cfg.precision.name(),
         cfg.effective_grad_wire().name(),
+        spec.as_ref().map_or(1, |s| s.experts as u32),
+        spec.as_ref().map_or(1, |s| s.topk as u32),
     )?;
     let ckpt_stage = ShardingStage::from_index(manifest.zero_stage)
         .ok_or_else(|| anyhow!("manifest carries unknown zero_stage {}", manifest.zero_stage))?;
@@ -877,6 +970,11 @@ struct Counters {
     dp_param_ag_inter_bytes: u64,
     pp_p2p_intra_bytes: u64,
     pp_p2p_inter_bytes: u64,
+    moe_a2a_rounds: u64,
+    moe_a2a_payload_bytes: u64,
+    moe_a2a_intra_bytes: u64,
+    moe_a2a_inter_bytes: u64,
+    moe_dropped_tokens: u64,
     zero3_peak_gathered_floats: u64,
     ckpt_hidden_ns: u64,
     ckpt_exposed_ns: u64,
@@ -899,6 +997,11 @@ impl Counters {
         self.dp_param_ag_inter_bytes += o.dp_param_ag_inter_bytes;
         self.pp_p2p_intra_bytes += o.pp_p2p_intra_bytes;
         self.pp_p2p_inter_bytes += o.pp_p2p_inter_bytes;
+        self.moe_a2a_rounds += o.moe_a2a_rounds;
+        self.moe_a2a_payload_bytes += o.moe_a2a_payload_bytes;
+        self.moe_a2a_intra_bytes += o.moe_a2a_intra_bytes;
+        self.moe_a2a_inter_bytes += o.moe_a2a_inter_bytes;
+        self.moe_dropped_tokens += o.moe_dropped_tokens;
         self.zero3_peak_gathered_floats =
             self.zero3_peak_gathered_floats.max(o.zero3_peak_gathered_floats);
         self.ckpt_hidden_ns += o.ckpt_hidden_ns;
@@ -991,6 +1094,36 @@ fn run_world(
         })
         .collect();
 
+    // expert-parallel groups: blocks of `ep` *consecutive* DP replicas
+    // per (pp, tp) cell, carrying the token-routing all_to_all.  An
+    // elastic leg whose shrunken dp broke the divisibility falls back to
+    // ep = 1 (routing stays rank-local) — numerically free, because
+    // trajectories are ep-invariant by construction.
+    let ep = if cfg.ep > 1 && dp % cfg.ep == 0 { cfg.ep } else { 1 };
+    let ep_groups: Vec<Arc<Group>> = if ep > 1 {
+        let blocks = dp / ep;
+        (0..pp * tp * blocks)
+            .map(|i| {
+                let (cell, block) = (i / blocks, i % blocks);
+                let (pp_rank, tp_rank) = (cell / tp, cell % tp);
+                let nodes = machine.as_ref().map(|m| {
+                    let gpus: Vec<_> = (0..ep)
+                        .map(|e| {
+                            let rank = (pp_rank * dp + block * ep + e) * tp + tp_rank;
+                            packed_gpu_of(world_size as u32, cfg.nodes, rank as u32)
+                        })
+                        .collect();
+                    NodeMap::from_gpus(m, &gpus)
+                });
+                Group::new_with_nodes(ep, nodes)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    // world-shared dropped-token counter, charged by tp=0 shards
+    let moe_dropped = Arc::new(AtomicU64::new(0));
+
     // arm the deadline on every wait a dead peer could strand: either the
     // explicit --comm-timeout-ms, or a defensive default when a kill is
     // scheduled (the killed rank's peers MUST time out to start recovery).
@@ -1007,6 +1140,9 @@ fn run_world(
         install_peer_lost_hook();
         world.set_comm_timeout(timeout_ms);
         for g in &dp_groups {
+            g.set_comm_timeout(timeout_ms);
+        }
+        for g in &ep_groups {
             g.set_comm_timeout(timeout_ms);
         }
     }
@@ -1046,6 +1182,12 @@ fn run_world(
                     world: world.clone(),
                     tp_group: tp_groups[pp_rank * dp + dp_rank].clone(),
                     dp_group: dp_groups[pp_rank * tp + tp_rank].clone(),
+                    ep_group: (ep > 1).then(|| {
+                        let i = (pp_rank * tp + tp_rank) * (dp / ep) + dp_rank / ep;
+                        ep_groups[i].clone()
+                    }),
+                    ep_rank: dp_rank % ep,
+                    moe_dropped: moe_dropped.clone(),
                     pp_rank,
                     dp_rank,
                     tp_rank,
@@ -1141,8 +1283,13 @@ fn run_world(
     let sum_dp = |f: fn(&Group) -> &AtomicU64| {
         dp_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
     };
+    let sum_ep = |f: fn(&Group) -> &AtomicU64| {
+        ep_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
+    };
     let c = Counters {
-        comm_bytes: world.bytes_moved.load(Ordering::Relaxed) + sum_dp(|g| &g.bytes_moved),
+        comm_bytes: world.bytes_moved.load(Ordering::Relaxed)
+            + sum_dp(|g| &g.bytes_moved)
+            + sum_ep(|g| &g.bytes_moved),
         tp_ar_bytes: tp_groups.iter().map(|g| g.ar_bytes.load(Ordering::Relaxed)).sum(),
         tp_ar_rounds: tp_groups.iter().map(|g| g.ar_rounds.load(Ordering::Relaxed)).sum(),
         dp_sync_hidden_ns: sum_dp(|g| &g.nb_hidden_ns),
@@ -1157,6 +1304,11 @@ fn run_world(
         dp_param_ag_inter_bytes: sum_dp(|g| &g.ag_inter_bytes),
         pp_p2p_intra_bytes: world.pp_intra_bytes.load(Ordering::Relaxed),
         pp_p2p_inter_bytes: world.pp_inter_bytes.load(Ordering::Relaxed),
+        moe_a2a_rounds: sum_ep(|g| &g.a2a_rounds),
+        moe_a2a_payload_bytes: sum_ep(|g| &g.a2a_payload_bytes),
+        moe_a2a_intra_bytes: sum_ep(|g| &g.a2a_intra_bytes),
+        moe_a2a_inter_bytes: sum_ep(|g| &g.a2a_inter_bytes),
+        moe_dropped_tokens: moe_dropped.load(Ordering::Relaxed),
         zero3_peak_gathered_floats: dp_groups
             .iter()
             .map(|g| g.ag_peak_floats.load(Ordering::Relaxed))

@@ -56,8 +56,9 @@ use crate::collectives::{
     chunk_bounds, GatherHandle, Group, Payload, ReduceHandle, ScatterHandle, SubGroup, TpComm,
 };
 use crate::data::BatchStream;
+use crate::moe::{MoeA2a, MoeFwdCtx};
 use crate::precision::{pack_bf16, unpack_bf16, Dtype, GradWire, LossScaler};
-use crate::runtime::{Bundle, ParamsHandle, Runtime, StageExecutables};
+use crate::runtime::{Bundle, BuiltinSpec, ParamsHandle, Runtime, StageExecutables};
 use crate::schedule::{Op, Schedule};
 use crate::topology::packed_gpu_of;
 use crate::zero::DistOptimizer;
@@ -74,6 +75,17 @@ pub struct WorkerCtx {
     /// This worker's tensor-parallel subgroup (its pp×dp cell).
     pub tp_group: Arc<SubGroup>,
     pub dp_group: Arc<Group>,
+    /// Expert-parallel group — this worker's block of `ep` consecutive
+    /// DP replicas at its (pp, tp) cell, carrying the token-routing
+    /// `all_to_all`.  `None` on dense runs, at `ep = 1`, or on an
+    /// elastic leg whose dp broke the divisibility (rank-local routing).
+    pub ep_group: Option<Arc<Group>>,
+    /// Rank within `ep_group` (`dp_rank % ep`; 0 when `None`).
+    pub ep_rank: usize,
+    /// World-shared dropped-token counter: each (pp, dp) cell's tp=0
+    /// shard charges its MoE capacity drops once per scheduled block
+    /// forward (TP shards route identically — one count per cell).
+    pub moe_dropped: Arc<AtomicU64>,
     pub pp_rank: usize,
     pub dp_rank: usize,
     pub tp_rank: usize,
@@ -115,6 +127,27 @@ pub struct WorkerCtx {
 
 const TAG_FWD: u64 = 1;
 const TAG_BWD: u64 = 2;
+
+/// Per-op MoE forward context: the a2a routing handle (tag base folds
+/// `(step, chunk, mb)` — 32/16/15 bits; bit 0 is reserved for the
+/// dispatch/combine phase inside the stage), the activation wire dtype,
+/// and the dropped-token counter (tp=0 shard only, so each (pp, dp)
+/// cell charges drops exactly once per scheduled forward).  EP-group
+/// members are DP replicas at the same pp_rank running the identical
+/// instruction stream, so the per-op tags line up across the group —
+/// including the fused forwards inside `bwd_last`/`bwd_single`.
+fn moe_fwd_ctx<'a>(ctx: &'a WorkerCtx, step: u32, c: usize, mb: usize) -> MoeFwdCtx<'a> {
+    assert!(c < (1 << 16) && mb < (1 << 15), "moe a2a tag field overflow");
+    MoeFwdCtx {
+        a2a: ctx.ep_group.as_ref().map(|g| MoeA2a {
+            group: g,
+            ep_rank: ctx.ep_rank,
+            tag_base: ((step as u64) << 32) | ((c as u64) << 16) | ((mb as u64) << 1),
+        }),
+        wire: ctx.cfg.precision,
+        dropped: (ctx.tp_rank == 0).then(|| &*ctx.moe_dropped),
+    }
+}
 
 fn tag(direction: u64, chunk: usize, mb: usize) -> u64 {
     (direction << 48) | ((chunk as u64) << 24) | mb as u64
@@ -895,7 +928,14 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     let mb = mb as usize;
                     if g == 0 {
                         let tokens = stash_tok[mb].as_ref().unwrap();
-                        let y = stage.fwd_first(&ctx.rt, pbuf, &comm, tokens, dims)?;
+                        let y = stage.fwd_first_ctx(
+                            &ctx.rt,
+                            pbuf,
+                            &comm,
+                            tokens,
+                            dims,
+                            &moe_fwd_ctx(&ctx, step, c, mb),
+                        )?;
                         send_act(&ctx, &mut local, g, mb, y);
                     } else if g == k - 1 {
                         // head chunk: stash the incoming activation; the
@@ -904,7 +944,14 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         stash_x[c][mb] = Some(x);
                     } else {
                         let x = recv_act(&ctx, &mut local, g, mb);
-                        let y = stage.fwd_mid(&ctx.rt, pbuf, &comm, &x, dims)?;
+                        let y = stage.fwd_mid_ctx(
+                            &ctx.rt,
+                            pbuf,
+                            &comm,
+                            &x,
+                            dims,
+                            &moe_fwd_ctx(&ctx, step, c, mb),
+                        )?;
                         stash_x[c][mb] = Some(x);
                         send_act(&ctx, &mut local, g, mb, y);
                     }
@@ -915,8 +962,15 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         // fused fwd+bwd: (flat, tokens, targets) -> (gflat, loss)
                         let tokens = stash_tok[mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let (mut gp, loss) =
-                            stage.bwd_single(&ctx.rt, pbuf, &comm, &tokens, &targets, dims)?;
+                        let (mut gp, loss) = stage.bwd_single_ctx(
+                            &ctx.rt,
+                            pbuf,
+                            &comm,
+                            &tokens,
+                            &targets,
+                            dims,
+                            &moe_fwd_ctx(&ctx, step, c, mb),
+                        )?;
                         if scale != 1.0 {
                             gp.iter_mut().for_each(|x| *x *= scale);
                         }
@@ -925,8 +979,15 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     } else if g == k - 1 {
                         let x = stash_x[c][mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let (mut gp, mut gx, loss) =
-                            stage.bwd_last(&ctx.rt, pbuf, &comm, &x, &targets, dims)?;
+                        let (mut gp, mut gx, loss) = stage.bwd_last_ctx(
+                            &ctx.rt,
+                            pbuf,
+                            &comm,
+                            &x,
+                            &targets,
+                            dims,
+                            &moe_fwd_ctx(&ctx, step, c, mb),
+                        )?;
                         // loss scaling enters at the source: the head
                         // stage's own grads and the gradient it sends
                         // upstream (everything upstream scales through
@@ -1166,12 +1227,21 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         t,
                     ));
                 }
+                // the expert *configuration* (experts, topk) is part of
+                // the checkpoint's identity — a resume under a different
+                // expert shape hard-rejects; ep is recorded as the
+                // world's effective routing width (informational: the
+                // trajectory is ep-invariant, so any valid ep resumes)
+                let moe_spec = BuiltinSpec::parse(&ctx.cfg.bundle);
                 let manifest = leader.then(|| checkpoint::Manifest {
                     step: ckpt_step,
                     bundle: ctx.cfg.bundle.clone(),
                     stages: ctx.k() as u32,
                     tp: ctx.tp as u32,
                     dp: ctx.dp as u32,
+                    experts: moe_spec.as_ref().map_or(1, |s| s.experts as u32),
+                    moe_topk: moe_spec.as_ref().map_or(1, |s| s.topk as u32),
+                    ep: ctx.ep_group.as_ref().map_or(1, |g| g.len() as u32),
                     zero_stage: ctx.cfg.zero_stage.index(),
                     precision: ctx.cfg.precision.name().to_string(),
                     loss_scale: scaler.scale(),

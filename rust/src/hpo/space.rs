@@ -43,6 +43,13 @@ pub struct Point {
     /// [`ZERO3_PREFETCH_CHOICES`], and [`Point::features`] /
     /// [`Point::to_config`] honour any depth.
     pub zero3_prefetch: u32,
+    /// MoE expert count per FFN (1 = dense).  Sampling pins this to 1
+    /// with no extra RNG draw — the paper's Table IV search was dense,
+    /// and the pin keeps the sampler stream and the calibrated Fig 9/10
+    /// behaviour bit-stable.  Explicit points span [`EXPERTS_CHOICES`];
+    /// the dense pin sits at the feature-axis origin (0.0), so legacy
+    /// surrogate inputs are reproduced bit for bit.
+    pub experts: u32,
 }
 
 pub const PP_CHOICES: [u32; 6] = [1, 2, 4, 8, 12, 16];
@@ -52,9 +59,11 @@ pub const GAS_CHOICES: [u32; 2] = [5, 10];
 pub const NNODES_CHOICES: [u32; 2] = [12, 16];
 pub const INTERLEAVE_CHOICES: [u32; 3] = [1, 2, 4];
 pub const ZERO3_PREFETCH_CHOICES: [u32; 3] = [1, 2, 4];
+pub const EXPERTS_CHOICES: [u32; 4] = [1, 2, 4, 8];
 
-/// Feature names in SHAP/reporting order (paper Fig 10 uses `p:` prefixes).
-pub const FEATURES: [&str; 9] = [
+/// Feature names in SHAP/reporting order (paper Fig 10 uses `p:` prefixes;
+/// the `e:` prefix marks the expert axis added on top of Table IV).
+pub const FEATURES: [&str; 10] = [
     "p:mbs",
     "p:tp",
     "p:pp",
@@ -64,6 +73,7 @@ pub const FEATURES: [&str; 9] = [
     "p:interleave",
     "p:bf16",
     "p:zero3_prefetch",
+    "e:experts",
 ];
 
 impl Point {
@@ -91,6 +101,7 @@ impl Point {
                     [rng.below(INTERLEAVE_CHOICES.len() as u64) as usize],
                 bf16: true,
                 zero3_prefetch: 1,
+                experts: 1,
             };
             if p.gas % p.pp != 0 {
                 p.interleave = 1;
@@ -106,9 +117,9 @@ impl Point {
         self.nnodes * GPUS_PER_NODE
     }
 
-    /// Normalised feature vector in [0,1]^9 (surrogate + SHAP input),
+    /// Normalised feature vector in [0,1]^10 (surrogate + SHAP input),
     /// ordered as [`FEATURES`].
-    pub fn features(&self) -> [f64; 9] {
+    pub fn features(&self) -> [f64; 10] {
         let norm = |v: f64, lo: f64, hi: f64| (v - lo) / (hi - lo);
         [
             norm(self.mbs as f64, MBS_RANGE.0 as f64, MBS_RANGE.1 as f64),
@@ -123,6 +134,8 @@ impl Point {
             norm((self.interleave as f64).log2(), 0.0, 2.0),
             if self.bf16 { 1.0 } else { 0.0 },
             norm((self.zero3_prefetch.max(1) as f64).log2(), 0.0, 2.0),
+            // dense (experts = 1) sits exactly at the origin: log2(1) = 0
+            norm((self.experts.max(1) as f64).log2(), 0.0, 3.0),
         ]
     }
 
@@ -159,6 +172,12 @@ impl Point {
                 precision: if self.bf16 { Precision::Bf16 } else { Precision::Fp32 },
                 schedule,
                 zero3_prefetch: self.zero3_prefetch,
+                experts: self.experts,
+                // the expert axis evaluates canonical GShard-style top-2
+                // routing (top-1 when only one expert exists)
+                moe_topk: self.experts.min(2),
+                ep: 1,
+                capacity_factor: 1.25,
             },
         ))
     }
@@ -209,6 +228,7 @@ mod tests {
             interleave: 1,
             bf16: true,
             zero3_prefetch: 1,
+            experts: 1,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.dp, 2);
@@ -229,6 +249,7 @@ mod tests {
             interleave: 2,
             bf16: true,
             zero3_prefetch: 1,
+            experts: 1,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.schedule, ScheduleKind::Interleaved1F1B { v: 2 });
@@ -250,6 +271,7 @@ mod tests {
             interleave: 1,
             bf16: false,
             zero3_prefetch: 1,
+            experts: 1,
         };
         let (_, cfg) = p.to_config().unwrap();
         assert_eq!(cfg.precision, Precision::Fp32);
@@ -273,6 +295,7 @@ mod tests {
             interleave: 1,
             bf16: true,
             zero3_prefetch: 1,
+            experts: 1,
         };
         assert_eq!(p.features()[4], 0.0);
         p.zero_stage = ShardingStage::OptimizerStates;
@@ -297,6 +320,7 @@ mod tests {
             interleave: 1,
             bf16: true,
             zero3_prefetch: 1,
+            experts: 1,
         };
         // the pinned sampling depth sits at the feature-axis origin,
         // reproducing the pre-dimension surrogate input bit for bit
@@ -317,6 +341,42 @@ mod tests {
     }
 
     #[test]
+    fn experts_dimension_round_trips() {
+        let mut p = Point {
+            pp: 2,
+            tp: 2,
+            mbs: 4,
+            gas: 10,
+            zero_stage: ShardingStage::OptimizerStates,
+            nnodes: 16,
+            interleave: 1,
+            bf16: true,
+            zero3_prefetch: 1,
+            experts: 1,
+        };
+        // the dense pin sits at the feature-axis origin, reproducing the
+        // pre-dimension surrogate input bit for bit
+        assert_eq!(p.features()[9], 0.0);
+        assert_eq!(FEATURES[9], "e:experts");
+        let (_, cfg) = p.to_config().unwrap();
+        assert_eq!((cfg.experts, cfg.moe_topk), (1, 1));
+        for e in EXPERTS_CHOICES {
+            p.experts = e;
+            let (_, cfg) = p.to_config().unwrap();
+            assert_eq!(cfg.experts, e);
+            assert_eq!(cfg.moe_topk, e.min(2));
+            cfg.validate().unwrap();
+            assert!((0.0..=1.0).contains(&p.features()[9]));
+        }
+        assert_eq!(p.features()[9], 1.0); // 8 experts = axis top
+        // sampling never draws the dimension: the stream stays bit-stable
+        let mut rng = Rng64::new(7);
+        for _ in 0..50 {
+            assert_eq!(Point::sample(&mut rng).experts, 1);
+        }
+    }
+
+    #[test]
     fn untileable_allocations_fail() {
         // 12 nodes = 96 GPUs; tp*pp = 64 does not divide 96
         let p = Point {
@@ -329,6 +389,7 @@ mod tests {
             interleave: 1,
             bf16: true,
             zero3_prefetch: 1,
+            experts: 1,
         };
         assert!(p.to_config().is_err());
     }

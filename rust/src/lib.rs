@@ -34,6 +34,7 @@ pub mod data;
 pub mod hpo;
 pub mod mem;
 pub mod metrics;
+pub mod moe;
 pub mod optim;
 pub mod parallel;
 pub mod perf;

@@ -43,6 +43,7 @@ COMMANDS:
            [--lr F] [--seed N] [--log-every N]
            [--checkpoint DIR] [--checkpoint-every N] [--resume]
            [--async-checkpoint] [--ckpt-keep N] [--comm-timeout-ms MS]
+           [--experts N] [--moe-topk K] [--capacity-factor F] [--ep N]
            [--fault kill@S:R|join@S|ckpt-crash@S:R|write-fail@S:R:N[,...]]
 
   --tp N shards every builtin stage across N tensor-parallel worker
@@ -98,6 +99,20 @@ COMMANDS:
   writes at that step fail transiently (absorbed by retry-with-
   backoff).  The report counts recovery events and lost (recomputed)
   steps.
+
+  --experts N turns every builtin stage block into a top-k MoE layer
+  (N expert FFN copies behind a deterministic softmax gate) by rewriting
+  the bundle name to its -moeNkK variant; --moe-topk K picks the experts
+  per token (default 2, clamped to N) and --capacity-factor F sizes the
+  per-expert token buffers (GShard ceil(F·tokens·k/N), default 1.25;
+  overflow tokens are dropped from the expert branch and counted in the
+  report).  --ep N shards the experts over blocks of N consecutive DP
+  replicas; tokens reach remote experts through a deterministic
+  dtype-packed all_to_all (dispatch + combine per MoE block), N must
+  divide both --dp and --experts, and expert PARAMETERS stay
+  DP-replicated — so the loss trajectory is bitwise identical at any ep
+  (fp32) and the ZeRO/checkpoint machinery is untouched.  --experts 1
+  is bitwise the dense model.
 
   Checkpoints are crash-consistent generations: each save stages into
   gen-<step>.tmp/, every file carries a CRC32 header, the manifest
@@ -433,11 +448,38 @@ fn cmd_hpo(evals: u32, seed: u64) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let bundle = {
+        let mut b = args.opt_str("bundle", "tiny-s2-mb2");
+        let experts: u32 = args.opt("experts", 1).map_err(anyhow::Error::msg)?;
+        if experts > 1 {
+            // rewrite the bundle to its MoE variant: tiny-s4-mb2 ->
+            // tiny-moe<E>k<K>-s4-mb2 (builtin bundles only)
+            anyhow::ensure!(
+                b.starts_with("builtin:"),
+                "--experts needs a builtin: bundle, got {b:?}"
+            );
+            anyhow::ensure!(
+                !b.contains("-moe"),
+                "bundle {b:?} already names an expert count; drop --experts"
+            );
+            let topk: u32 = args.opt("moe-topk", 2).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(
+                topk >= 1 && topk <= experts,
+                "--moe-topk must be in 1..=experts ({experts}), got {topk}"
+            );
+            b = b.replacen("-s", &format!("-moe{experts}k{topk}-s"), 1);
+        } else if args.get("moe-topk").is_some() {
+            anyhow::bail!("--moe-topk needs --experts N with N > 1");
+        }
+        b
+    };
     let cfg = EngineConfig {
         artifacts_root: args.opt_str("artifacts", "artifacts").into(),
-        bundle: args.opt_str("bundle", "tiny-s2-mb2"),
+        bundle,
         dp: args.opt("dp", 1).map_err(anyhow::Error::msg)?,
         tp: args.opt("tp", 1).map_err(anyhow::Error::msg)?,
+        ep: args.opt("ep", 1).map_err(anyhow::Error::msg)?,
+        capacity_factor: args.opt("capacity-factor", 1.25f32).map_err(anyhow::Error::msg)?,
         schedule: {
             let v: u32 = args.opt("interleave", 1).map_err(anyhow::Error::msg)?;
             anyhow::ensure!(v >= 1, "--interleave must be >= 1");
@@ -550,6 +592,17 @@ fn cmd_train(args: &Args) -> Result<()> {
             "  TP: {} all-reduce rounds, {:.1} MB reduced payload",
             report.tp_ar_rounds,
             report.tp_ar_bytes as f64 / 1e6
+        );
+    }
+    if report.moe_a2a_rounds > 0 || report.moe_dropped_tokens > 0 {
+        println!(
+            "  MoE a2a: {} rounds, {:.1} KB routed payload \
+             ({:.1} KB intra / {:.1} KB inter), {} token(s) dropped at capacity",
+            report.moe_a2a_rounds,
+            report.moe_a2a_payload_bytes as f64 / 1e3,
+            report.moe_a2a_intra_bytes as f64 / 1e3,
+            report.moe_a2a_inter_bytes as f64 / 1e3,
+            report.moe_dropped_tokens
         );
     }
     if report.recovery_events > 0 {

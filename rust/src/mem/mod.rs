@@ -163,7 +163,17 @@ pub fn per_gpu_acct(model: &ModelSpec, cfg: &ParallelConfig, acct: Accounting) -
     let last_layers = spans.last().unwrap().1 - spans.last().unwrap().0;
     let n_last =
         (model.head_params() + last_layers as u64 * model.layer_params()) / cfg.tp as u64;
-    let n_local = n_stage.max(n_last).max(n_total / (cfg.tp as u64 * cfg.pp as u64));
+    let mut n_local = n_stage.max(n_last).max(n_total / (cfg.tp as u64 * cfg.pp as u64));
+    if cfg.experts > 1 {
+        // MoE: (E−1) extra FFN copies per hosted layer (TP-sharded like
+        // the dense FFN) plus the TP-replicated d×E gate.  Expert params
+        // are DP-replicated, so they ride the same ZeRO shard arithmetic
+        // as the dense ones below.
+        let ffn = 8 * model.hidden * model.hidden;
+        n_local += stage0_layers as u64
+            * ((cfg.experts as u64 - 1) * ffn / cfg.tp as u64
+                + model.hidden * cfg.experts as u64);
+    }
 
     // per-stage `1/dp` sharding of one state class (no-op at dp = 1,
     // where a rank's partition is the whole buffer)
@@ -232,9 +242,30 @@ pub fn per_gpu_acct(model: &ModelSpec, cfg: &ParallelConfig, acct: Accounting) -
         // no checkpointing: the full working set of every layer is stored
         layer_working_set(model, cfg) * chunk0_layers as u64
     };
-    let activations = inflight * stored + layer_working_set(model, cfg);
+    let activations =
+        inflight * stored + layer_working_set(model, cfg) + moe_transient_bytes(model, cfg);
 
     MemoryBreakdown { params, grads, optimizer, activations, overhead: FRAMEWORK_OVERHEAD }
+}
+
+/// Transient buffer bytes of one MoE block's capacity-padded routing:
+/// every expert's input and output buffer is materialised to capacity
+/// (`E × cap × d` each, at working precision) around the dispatch/
+/// combine exchange — the same buffers whether the exchange is local
+/// (ep = 1) or an `all_to_all` (the wire moves them, it does not add
+/// residency).  Zero for dense models.
+pub fn moe_transient_bytes(model: &ModelSpec, cfg: &ParallelConfig) -> u64 {
+    if cfg.experts <= 1 {
+        return 0;
+    }
+    let tokens = (cfg.mbs as u64 * model.seq) as usize;
+    let cap = crate::moe::capacity(
+        tokens,
+        cfg.moe_topk as usize,
+        cfg.experts as usize,
+        cfg.capacity_factor,
+    ) as u64;
+    2 * cfg.experts as u64 * cap * model.hidden * cfg.precision.bytes()
 }
 
 /// Does the configuration fit in MI250X HBM?  (Fig 9's OOM failures.)
@@ -419,6 +450,33 @@ mod tests {
         let b1 = per_gpu_acct(&m, &cfg, Accounting::Mixed16);
         let b3 = per_gpu_acct(&m, &cfg.clone().with_zero3_prefetch(3), Accounting::Mixed16);
         assert_eq!(b3.params - b1.params, 2 * one_layer);
+    }
+
+    #[test]
+    fn moe_charges_expert_params_and_routing_buffers() {
+        let m = lookup("22b").unwrap();
+        let base = ParallelConfig::default().with_tp(2).with_pp(4).with_gbs(32);
+        let dense = per_gpu(&m, &base);
+        // the E = 1 top-1 identity point is bitwise the dense footprint
+        assert_eq!(per_gpu(&m, &base.clone().with_moe(1, 1)), dense);
+        assert_eq!(moe_transient_bytes(&m, &base), 0);
+        let moe_cfg = base.clone().with_moe(8, 2);
+        let moe = per_gpu(&m, &moe_cfg);
+        // 7 extra FFN copies per layer dominate the parameter budget
+        assert!(moe.params > 5 * dense.params, "{} !> 5×{}", moe.params, dense.params);
+        assert!(moe.grads > dense.grads);
+        assert!(moe.optimizer > dense.optimizer);
+        // the capacity-padded routing buffers land in the activation term
+        let t = moe_transient_bytes(&m, &moe_cfg);
+        assert!(t > 0);
+        assert_eq!(moe.activations, dense.activations + t);
+        // transient = 2 · E · cap · d · prec at the working precision
+        let tokens = (moe_cfg.mbs as u64 * m.seq) as usize;
+        let cap = crate::moe::capacity(tokens, 2, 8, moe_cfg.capacity_factor) as u64;
+        assert_eq!(t, 2 * 8 * cap * m.hidden * moe_cfg.precision.bytes());
+        // ZeRO still shards the widened state: stage 1 shrinks the total
+        let z = per_gpu(&m, &moe_cfg.clone().with_dp(4).with_gbs(32).with_zero1(true));
+        assert!(z.optimizer < moe.optimizer);
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Mixture-of-experts primitives: the deterministic top-k softmax gate,
+//! capacity/dispatch planning, and the expert-parallel wire context.
+//!
+//! The heavy lifting (expert GEMMs, the gate matmul) stays in
+//! `runtime::builtin`, which owns the parameters; this module holds the
+//! pure, backend-free pieces so they can be validated in isolation:
+//!
+//! * **Gate** — per-token top-k selection over `E` logits with *stable
+//!   tie-breaking* (higher logit wins; on exact ties the lower expert
+//!   index wins), then a softmax renormalized over the selected set.
+//!   `k = 1` yields probability exactly `1.0` (`exp(0)/exp(0)`), the
+//!   identity the single-expert ≡ dense bitwise contract rides on.
+//!   The backward is the renormalized-softmax Jacobian, finite-diff
+//!   validated in the tests below.
+//! * **Capacity** — every expert owns `cap = min(⌈cf·T·k/E⌉, T)` slots
+//!   per microbatch; assignments beyond an expert's capacity are
+//!   **dropped in token order** (deterministic, data-local, so the plan
+//!   is identical at every `ep` — the invariant that keeps ep>1 on the
+//!   ep=1 trajectory bitwise at fp32).  The `min(·, T)` clamp matters
+//!   beyond economy: at `E = 1` it makes the expert buffer exactly the
+//!   token buffer, so the TP all-reduce chunking (ring fold order is
+//!   length-dependent) matches the dense path bit for bit.
+//! * **[`MoeFwdCtx`]** — what a forward pass needs to go expert-parallel:
+//!   the per-(pp, tp)-row EP communicator and this rank's coordinates in
+//!   it, the wire dtype, and the engine's dropped-token counter.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+
+use crate::collectives::Group;
+use crate::precision::Dtype;
+
+/// Per-expert slot budget for one microbatch of `tokens` tokens:
+/// `min(⌈capacity_factor · tokens · topk / experts⌉, tokens)`, at least 1.
+/// The clamp to `tokens` is exact semantics, not just economy — no
+/// expert can receive more than every token once — and it pins the
+/// `E = 1` buffer length to the dense activation length (see module
+/// docs).  Mirrored EXACTLY by `perf::moe_capacity`.
+pub fn capacity(tokens: usize, topk: usize, experts: usize, capacity_factor: f32) -> usize {
+    assert!(experts >= 1 && topk >= 1 && capacity_factor > 0.0);
+    let raw = (capacity_factor as f64 * (tokens * topk) as f64 / experts as f64).ceil();
+    (raw as usize).min(tokens).max(1)
+}
+
+/// Which EP-group rank owns expert `e` when `experts` are sharded over
+/// `ep` ranks in contiguous blocks of `experts / ep`.
+pub fn owner_of(e: usize, experts: usize, ep: usize) -> usize {
+    debug_assert!(ep >= 1 && experts % ep == 0 && e < experts);
+    e / (experts / ep)
+}
+
+/// The gate's per-token selection: `k` `(expert, prob)` pairs per token,
+/// flattened — entry `t * k + j` is token `t`'s `j`-th pick, in
+/// **descending-logit order** (ties broken toward the lower expert
+/// index, so the layout is fully deterministic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopK {
+    /// Selected expert index per (token, pick), `t * k + j`.
+    pub expert: Vec<usize>,
+    /// Renormalized softmax probability per (token, pick); the `k`
+    /// entries of one token sum to 1 (exactly 1.0 at `k = 1`).
+    pub prob: Vec<f32>,
+}
+
+/// Deterministic top-k softmax gate over row-major `logits` (`t × e`).
+///
+/// Selection: `k` repeated strict-max scans, each preferring the lowest
+/// index among exact ties — no sort, no hash, no RNG, so the result is
+/// a pure function of the logit bits.  Probabilities: softmax over the
+/// selected logits only (max-subtracted), i.e. the "renormalized top-k"
+/// gate of the MoE literature.
+pub fn top_k_select(logits: &[f32], t: usize, e: usize, k: usize) -> TopK {
+    assert!(k >= 1 && k <= e, "topk {k} must be in 1..={e}");
+    assert_eq!(logits.len(), t * e);
+    let mut expert = Vec::with_capacity(t * k);
+    let mut prob = Vec::with_capacity(t * k);
+    let mut picked = vec![false; e];
+    for row in logits.chunks_exact(e) {
+        picked.iter_mut().for_each(|p| *p = false);
+        for _ in 0..k {
+            let mut best = usize::MAX;
+            for (j, &l) in row.iter().enumerate() {
+                if !picked[j] && (best == usize::MAX || l > row[best]) {
+                    best = j;
+                }
+            }
+            picked[best] = true;
+            expert.push(best);
+        }
+        // renormalized softmax over this token's k selected logits
+        let sel = &expert[expert.len() - k..];
+        let m = sel.iter().map(|&j| row[j]).fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = sel.iter().map(|&j| (row[j] - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        prob.extend(exps.iter().map(|&x| x / z));
+    }
+    TopK { expert, prob }
+}
+
+/// Backward of [`top_k_select`]'s probabilities: given the upstream
+/// gradient `coeff[t * k + j] = ∂L/∂prob(t, j)`, return `∂L/∂logits`
+/// (`t × e`, zero outside each token's selected set).  For one token
+/// with selected probabilities `p` the renormalized-softmax Jacobian
+/// gives `∂L/∂l_j = p_j · (c_j − Σ_j' p_j' c_j')`.
+pub fn gate_backward(sel: &TopK, coeff: &[f32], t: usize, e: usize, k: usize) -> Vec<f32> {
+    assert_eq!(sel.expert.len(), t * k);
+    assert_eq!(coeff.len(), t * k);
+    let mut dlogits = vec![0.0f32; t * e];
+    for token in 0..t {
+        let lo = token * k;
+        let dot: f32 = (0..k).map(|j| sel.prob[lo + j] * coeff[lo + j]).sum();
+        for j in 0..k {
+            dlogits[token * e + sel.expert[lo + j]] =
+                sel.prob[lo + j] * (coeff[lo + j] - dot);
+        }
+    }
+    dlogits
+}
+
+/// The capacity-bounded dispatch plan for one microbatch: which (token,
+/// pick) lands in which expert slot, and how many assignments fell off
+/// the end of a full expert.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchPlan {
+    /// Per expert: `(token, slot, prob)` triples, slots dense from 0 in
+    /// token order (the order assignments arrived).
+    pub slots: Vec<Vec<(usize, usize, f32)>>,
+    /// Assignments dropped because their expert was at capacity.
+    pub dropped: u64,
+}
+
+/// Assign every `(token, pick)` of `sel` to an expert slot, **in token
+/// order** (then pick order within a token), dropping assignments once
+/// an expert's `cap` slots are full.  Deterministic and purely local to
+/// the token batch, so every EP replica of the same tokens builds the
+/// same plan.
+pub fn plan_dispatch(sel: &TopK, t: usize, k: usize, experts: usize, cap: usize) -> DispatchPlan {
+    assert_eq!(sel.expert.len(), t * k);
+    let mut slots: Vec<Vec<(usize, usize, f32)>> = vec![Vec::new(); experts];
+    let mut dropped = 0u64;
+    for token in 0..t {
+        for j in 0..k {
+            let e = sel.expert[token * k + j];
+            let p = sel.prob[token * k + j];
+            if slots[e].len() < cap {
+                let slot = slots[e].len();
+                slots[e].push((token, slot, p));
+            } else {
+                dropped += 1;
+            }
+        }
+    }
+    DispatchPlan { slots, dropped }
+}
+
+/// The expert-parallel wire of one forward call: the EP communicator
+/// (one [`Group`] per (pp, tp) row, `ep` consecutive DP ranks), this
+/// rank's coordinate in it, and the base tag for its two all-to-all
+/// phases (bit 0 free: 0 = dispatch, 1 = combine).
+pub struct MoeA2a<'a> {
+    pub group: &'a Arc<Group>,
+    pub ep_rank: usize,
+    /// Tag with bit 0 clear; the stage uses `tag_base` for the dispatch
+    /// round and `tag_base | 1` for the combine round.
+    pub tag_base: u64,
+}
+
+/// Everything a builtin MoE stage needs from the engine to run one
+/// forward: the optional EP wire (None ⇒ compute all experts locally,
+/// the `ep = 1` path), the activation wire dtype for the a2a payloads,
+/// and the engine's dropped-assignment counter (None on recompute paths
+/// and non-zero `tp_rank`s, so each drop is counted exactly once).
+pub struct MoeFwdCtx<'a> {
+    pub a2a: Option<MoeA2a<'a>>,
+    pub wire: Dtype,
+    pub dropped: Option<&'a AtomicU64>,
+}
+
+impl MoeFwdCtx<'_> {
+    /// A fully local context: no EP wire, f32 payloads, no drop counter.
+    /// What the backward recompute and the library tests use.
+    pub const LOCAL: MoeFwdCtx<'static> =
+        MoeFwdCtx { a2a: None, wire: Dtype::F32, dropped: None };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_for(t: usize, e: usize) -> Vec<f32> {
+        (0..t * e).map(|i| ((i * 37 % 19) as f32 * 0.21).sin()).collect()
+    }
+
+    #[test]
+    fn capacity_formula() {
+        // cf=1.25, T=16, k=2, E=4 -> ceil(10) = 10
+        assert_eq!(capacity(16, 2, 4, 1.25), 10);
+        // exact division, cf=1: T=16, k=1, E=4 -> 4
+        assert_eq!(capacity(16, 1, 4, 1.0), 4);
+        // E=1 clamps to T regardless of cf (dense-equivalence contract)
+        assert_eq!(capacity(16, 1, 1, 1.25), 16);
+        assert_eq!(capacity(16, 1, 1, 4.0), 16);
+        // never zero
+        assert_eq!(capacity(3, 1, 8, 0.5), 1);
+    }
+
+    #[test]
+    fn top1_single_expert_prob_is_exactly_one() {
+        let t = 5;
+        let sel = top_k_select(&logits_for(t, 1), t, 1, 1);
+        assert!(sel.expert.iter().all(|&e| e == 0));
+        assert!(sel.prob.iter().all(|&p| p == 1.0), "exp(0)/exp(0) must be exactly 1.0");
+    }
+
+    #[test]
+    fn topk_orders_by_logit_then_index() {
+        // distinct logits: picks in descending-logit order
+        let sel = top_k_select(&[0.1, 0.9, 0.5, 0.3], 1, 4, 3);
+        assert_eq!(sel.expert, vec![1, 2, 3]);
+        assert!(sel.prob[0] > sel.prob[1] && sel.prob[1] > sel.prob[2]);
+        let s: f32 = sel.prob.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ties_break_toward_lower_expert_index() {
+        // all-equal logits: selection must be 0, 1, ..., k-1 with equal probs
+        let e = 5;
+        let sel = top_k_select(&vec![0.25f32; e], 1, e, 3);
+        assert_eq!(sel.expert, vec![0, 1, 2]);
+        assert!(sel.prob.iter().all(|&p| (p - 1.0 / 3.0).abs() < 1e-6));
+        // a tie among a subset: equal maxima at 1 and 3 -> 1 first
+        let sel = top_k_select(&[0.0, 0.7, 0.2, 0.7], 1, 4, 2);
+        assert_eq!(sel.expert, vec![1, 3]);
+        assert_eq!(sel.prob[0], sel.prob[1]);
+    }
+
+    #[test]
+    fn gate_backward_finite_diff() {
+        let (t, e, k) = (4usize, 6usize, 3usize);
+        let logits = logits_for(t, e);
+        // fixed coefficients standing in for dL/dprob
+        let coeff: Vec<f32> = (0..t * k).map(|i| ((i + 3) as f32 * 0.31).cos()).collect();
+        let loss = |l: &[f32]| -> f64 {
+            let sel = top_k_select(l, t, e, k);
+            sel.prob
+                .iter()
+                .zip(coeff.iter())
+                .map(|(&p, &c)| p as f64 * c as f64)
+                .sum()
+        };
+        let sel = top_k_select(&logits, t, e, k);
+        let analytic = gate_backward(&sel, &coeff, t, e, k);
+        let eps = 1e-3f32;
+        for i in 0..t * e {
+            let mut up = logits.clone();
+            up[i] += eps;
+            let mut dn = logits.clone();
+            dn[i] -= eps;
+            let numeric = (loss(&up) - loss(&dn)) / (2.0 * eps as f64);
+            assert!(
+                (analytic[i] as f64 - numeric).abs() < 2e-3,
+                "dlogits[{i}]: analytic {} vs numeric {numeric}",
+                analytic[i]
+            );
+        }
+    }
+
+    #[test]
+    fn plan_fills_slots_in_token_order_and_drops_overflow() {
+        // 4 tokens, k=1, all picking expert 0, cap 3 -> token 3 dropped
+        let sel = TopK {
+            expert: vec![0, 0, 0, 0],
+            prob: vec![1.0, 1.0, 1.0, 1.0],
+        };
+        let plan = plan_dispatch(&sel, 4, 1, 2, 3);
+        assert_eq!(plan.slots[0], vec![(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)]);
+        assert!(plan.slots[1].is_empty());
+        assert_eq!(plan.dropped, 1);
+    }
+
+    #[test]
+    fn owner_blocks_are_contiguous() {
+        assert_eq!(owner_of(0, 8, 4), 0);
+        assert_eq!(owner_of(1, 8, 4), 0);
+        assert_eq!(owner_of(2, 8, 4), 1);
+        assert_eq!(owner_of(7, 8, 4), 3);
+        assert_eq!(owner_of(5, 8, 1), 0);
+    }
+}

@@ -391,6 +391,115 @@ pub fn builtin_zero3_hier_ag_tier_bytes(
 }
 
 // ---------------------------------------------------------------------------
+// The MoE expert-parallel wire contract.  These functions mirror the
+// engine's `Group::a2a_*` counters EXACTLY: one round per dispatch and
+// one per combine of every scheduled MoE block forward (including the
+// fused forwards inside `bwd_last`/`bwd_single`; backward recomputes
+// stay local), payload counted once per round over ALL `ep²` (src, dst)
+// parts including each rank's self part, and the tier split classifying
+// only the src ≠ dst parts by the EP group's `NodeMap`.  At `ep == 1`
+// no EP group exists — the engine takes the all-local path and every
+// counter stays zero, so every function here returns 0 for `ep <= 1`.
+// ---------------------------------------------------------------------------
+
+/// Per-expert token capacity per micro-batch — the EXACT mirror of
+/// `moe::capacity`: `ceil(cf · tokens · topk / experts)`, clamped to
+/// `[1, tokens]` (at `experts == 1` the clamp lands on `tokens`, which
+/// is what makes a top-1 single-expert MoE bitwise-dense).
+pub fn moe_capacity(tokens: u64, topk: u64, experts: u64, capacity_factor: f32) -> u64 {
+    let raw =
+        (capacity_factor as f64 * (tokens * topk) as f64 / experts as f64).ceil();
+    (raw as u64).min(tokens).max(1)
+}
+
+/// All-to-all rounds per step summed over every EP group of the grid:
+/// each of the `n_stages` stage chunks runs one dispatch + one combine
+/// round per micro-batch, in each of the `tp × (dp / ep)` EP-group
+/// columns.  Engine pin: `TrainReport::moe_a2a_rounds == steps ×` this.
+pub fn moe_a2a_rounds_per_step(n_stages: u64, m: u64, tp: u64, dp: u64, ep: u64) -> u64 {
+    if ep <= 1 {
+        return 0;
+    }
+    tp * (dp / ep) * n_stages * 2 * m
+}
+
+/// Payload bytes of ONE all-to-all round: `ep²` parts (self included) of
+/// `(experts / ep) · cap · hidden` elements each at the wire width —
+/// i.e. `ep · experts · cap · hidden · wire_bytes`.  Engine pin:
+/// `TrainReport::moe_a2a_payload_bytes ==
+/// steps × moe_a2a_rounds_per_step(..) ×` this `/ (steps × rounds)` —
+/// rounds are homogeneous, so payload = rounds × this.
+pub fn moe_a2a_payload_bytes_per_round(
+    ep: u64,
+    experts: u64,
+    cap: u64,
+    hidden: u64,
+    wire_bytes: u64,
+) -> u64 {
+    if ep <= 1 {
+        return 0;
+    }
+    ep * experts * cap * hidden * wire_bytes
+}
+
+/// Per-step `(intra, inter)` tier bytes of the MoE all-to-all under the
+/// engine's packed placement: EP group member `e` of block `b` at cell
+/// `(pp_rank, tp_rank)` is world rank `(pp_rank·dp + b·ep + e)·tp +
+/// tp_rank`, and each ordered src ≠ dst pair moves one
+/// `(experts/ep)·cap·hidden`-element part per round, classified by node
+/// co-residency.  Topology-blind runs (`nodes == 0`) keep both tiers
+/// zero, exactly like the engine counters.  Engine pin:
+/// `TrainReport::moe_a2a_{intra,inter}_bytes == steps ×` this.
+pub fn moe_a2a_tier_bytes_per_step(
+    n_stages: u64,
+    m: u64,
+    pp: usize,
+    tp: usize,
+    dp: usize,
+    ep: usize,
+    experts: u64,
+    cap: u64,
+    hidden: u64,
+    wire_bytes: u64,
+    nodes: u32,
+) -> (u64, u64) {
+    if ep <= 1 || nodes == 0 {
+        return (0, 0);
+    }
+    let world = (pp * dp * tp) as u32;
+    let machine = Machine::new(nodes);
+    let part = (experts / ep as u64) * cap * hidden * wire_bytes;
+    // chunks hosted per pipeline worker × (dispatch + combine) per mb
+    let rounds_per_group = 2 * m * (n_stages / pp as u64);
+    let (mut intra, mut inter) = (0u64, 0u64);
+    for pp_rank in 0..pp {
+        for tp_rank in 0..tp {
+            for block in 0..dp / ep {
+                let node: Vec<u32> = (0..ep)
+                    .map(|e| {
+                        let rank = ((pp_rank * dp + block * ep + e) * tp + tp_rank) as u32;
+                        machine.node_of(packed_gpu_of(world, nodes, rank))
+                    })
+                    .collect();
+                for i in 0..ep {
+                    for j in 0..ep {
+                        if i == j {
+                            continue;
+                        }
+                        if node[i] == node[j] {
+                            intra += part;
+                        } else {
+                            inter += part;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (intra * rounds_per_group, inter * rounds_per_group)
+}
+
+// ---------------------------------------------------------------------------
 // The DP overlap contract (§IV: DeepSpeed hides the gradient all-reduce
 // under backward), shared between the analytic model and the engine's
 // measured hidden/exposed gradient-sync timers.
@@ -579,7 +688,7 @@ impl PerfModel {
         // quadratic attention term 2·2·d·s per token (QK^T and PV)
         let n_layer = model.layer_params() as f64 / cfg.tp as f64;
         let quad = 4.0 * d as f64 * s as f64 / cfg.tp as f64; // per token
-        let fwd_flops_layer = 2.0 * n_layer * tokens + quad * tokens;
+        let mut fwd_flops_layer = 2.0 * n_layer * tokens + quad * tokens;
 
         // attention block share of layer time; without FA the block runs
         // `no_flash_attn_penalty` slower (memory-bound softmax paths)
@@ -591,6 +700,24 @@ impl PerfModel {
         } else {
             1.0 + attn_share * (self.kernel.no_flash_attn_penalty - 1.0)
         };
+
+        // MoE layers: the capacity-padded expert buffers push `E · cap`
+        // token slots through the FFN GEMMs instead of `tokens` (the
+        // engine computes every expert's buffer to capacity), plus the
+        // TP-replicated `d × E` gate matmul.  Dense (experts = 1) adds
+        // exactly nothing, keeping the calibrated figures bit-stable.
+        if cfg.experts > 1 {
+            let e = cfg.experts as f64;
+            let cap = moe_capacity(
+                b * s,
+                cfg.moe_topk as u64,
+                cfg.experts as u64,
+                cfg.capacity_factor,
+            ) as f64;
+            let ffn_params = 8.0 * (d * d) as f64 / cfg.tp as f64;
+            fwd_flops_layer += 2.0 * ffn_params * (e * cap - tokens).max(0.0)
+                + 2.0 * d as f64 * e * tokens;
+        }
 
         let t_fwd_layer = fwd_flops_layer / rate * flash_mult + self.kernel.layer_overhead;
 
@@ -682,7 +809,16 @@ impl PerfModel {
         // precision, same dtype convention as the TP term above (the
         // sharded stages' RS+AG pair moves the same volume inside
         // dp_grad_sync — ZeRO's equal-wire-volume argument) ----
-        let n_local = model.total_params() / (cfg.tp as u64 * cfg.pp as u64);
+        let mut n_local = model.total_params() / (cfg.tp as u64 * cfg.pp as u64);
+        if cfg.experts > 1 {
+            // (E−1) extra FFN copies per layer (TP/PP-sharded like the
+            // dense FFN) plus the TP-replicated d×E gate per layer
+            let ffn = 8 * model.hidden * model.hidden;
+            n_local += (cfg.experts as u64 - 1) * ffn * model.n_layers as u64
+                / (cfg.tp as u64 * cfg.pp as u64)
+                + model.hidden * cfg.experts as u64 * model.n_layers as u64
+                    / cfg.pp as u64;
+        }
         let grad_bytes = dp_grad_payload_bytes(n_local, cfg.precision.bytes());
         let dp_group = layout.dp_group(0);
         let gpu_group: Vec<u32> = dp_group.iter().map(|&r| layout.gpu_of(r)).collect();
@@ -1068,6 +1204,69 @@ mod tests {
             m.hier_dp_comm_time(&comm, &group, 0, e32b)
                 > m.hier_dp_comm_time(&comm, &group, i32b, 0),
             "inter bytes must out-cost the same intra volume"
+        );
+    }
+
+    #[test]
+    fn moe_wire_contract_composition() {
+        // capacity mirrors moe::capacity bit for bit
+        assert_eq!(moe_capacity(16, 2, 8, 1.25), 5); // ceil(1.25·32/8)
+        assert_eq!(moe_capacity(16, 1, 1, 1.25), 16); // clamps to tokens at E=1
+        assert_eq!(moe_capacity(4, 1, 8, 1.0), 1); // floor clamp
+        for (t, k, e, cf) in [(16, 2, 8, 1.25f32), (32, 1, 4, 1.0), (7, 3, 4, 2.0)] {
+            assert_eq!(
+                moe_capacity(t as u64, k as u64, e as u64, cf),
+                crate::moe::capacity(t, k, e, cf) as u64
+            );
+        }
+        // rounds: dispatch + combine per (chunk, mb) in each of the
+        // tp × (dp/ep) EP-group columns; identically zero at ep = 1
+        assert_eq!(moe_a2a_rounds_per_step(2, 3, 2, 4, 2), 2 * 2 * 2 * 2 * 3);
+        assert_eq!(moe_a2a_rounds_per_step(2, 3, 2, 4, 1), 0);
+        // payload/round: ep² parts of (E/ep)·cap·d elements incl. self
+        assert_eq!(moe_a2a_payload_bytes_per_round(2, 4, 5, 8, 4), 2 * 4 * 5 * 8 * 4);
+        assert_eq!(moe_a2a_payload_bytes_per_round(1, 4, 5, 8, 4), 0);
+        // bf16 wire halves the round payload exactly
+        assert_eq!(
+            moe_a2a_payload_bytes_per_round(2, 4, 5, 8, 2) * 2,
+            moe_a2a_payload_bytes_per_round(2, 4, 5, 8, 4)
+        );
+        // tiers: 4 ranks packed on 2 nodes → group nodes [0,0,1,1], so 4
+        // of the 12 src≠dst pairs are intra and 8 inter, every round
+        let (i, e) = moe_a2a_tier_bytes_per_step(2, 3, 1, 1, 4, 4, 4, 5, 8, 4, 2);
+        let part = 1 * 5 * 8 * 4u64;
+        let rounds = 2 * 3 * 2u64;
+        assert_eq!((i, e), (4 * part * rounds, 8 * part * rounds));
+        // tier sum + self parts == the full payload accounting
+        let payload =
+            moe_a2a_rounds_per_step(2, 3, 1, 4, 4) * moe_a2a_payload_bytes_per_round(4, 4, 5, 8, 4);
+        assert_eq!(i + e + 4 * part * rounds, payload);
+        // topology-blind and ep = 1 keep both tiers zero
+        assert_eq!(moe_a2a_tier_bytes_per_step(2, 3, 1, 1, 4, 4, 4, 5, 8, 4, 0), (0, 0));
+        assert_eq!(moe_a2a_tier_bytes_per_step(2, 3, 1, 1, 4, 1, 4, 5, 8, 4, 2), (0, 0));
+    }
+
+    #[test]
+    fn moe_pricing_charges_experts() {
+        // sparse experts cost step time (routed FFN compute + gate) and
+        // the dense identity point prices exactly like a dense run
+        let m = lookup("22b").unwrap();
+        let dense = ParallelConfig::default().with_tp(2).with_pp(8).with_gbs(32);
+        let b_dense = pm().evaluate(&m, &dense).unwrap();
+        let b_id = pm().evaluate(&m, &dense.clone().with_moe(1, 1)).unwrap();
+        assert_eq!(b_dense.t_step, b_id.t_step, "E=1 top-1 must price dense");
+        let b_moe = pm()
+            .evaluate(&m, &dense.clone().with_moe(8, 2).with_ep(1))
+            .unwrap();
+        assert!(
+            b_moe.t_compute > b_dense.t_compute,
+            "8 top-2 experts must add routed FFN compute: {} !> {}",
+            b_moe.t_compute,
+            b_dense.t_compute
+        );
+        assert!(
+            b_moe.t_dp_comm >= b_dense.t_dp_comm,
+            "expert params widen the DP sync"
         );
     }
 

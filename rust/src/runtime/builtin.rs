@@ -44,8 +44,11 @@
 //! reduces it across the TP group before the optimizer step (see
 //! [`BuiltinStage::replicated_span`]).
 
+use std::sync::atomic::Ordering;
+
 use crate::collectives::TpComm;
 use crate::data::Rng64;
+use crate::moe::{self, MoeFwdCtx};
 use crate::precision::{CastPolicy, Dtype};
 use crate::runtime::kernels;
 
@@ -87,11 +90,23 @@ pub struct BuiltinSpec {
     pub mbs: usize,
     /// Global stages (= model blocks; one MLP block per stage).
     pub n_stages: usize,
+    /// Experts per block (1 for the dense family).
+    pub experts: usize,
+    /// Gate picks per token (`topk <= experts`).
+    pub topk: usize,
+    /// Whether the block runs the MoE gate/dispatch/combine path.  A
+    /// `-moe1` bundle sets this with `experts = 1`: same parameters as
+    /// the dense block (no gate segment), but routed through the
+    /// capacity-buffer machinery — the bitwise dense-equivalence probe.
+    pub moe: bool,
 }
 
 impl BuiltinSpec {
-    /// Parse an engine bundle name of the form `builtin:<model>-s<K>-mb<B>`
-    /// (e.g. `builtin:tiny-s4-mb2`).  Returns `None` for artifact bundles.
+    /// Parse an engine bundle name of the form
+    /// `builtin:<model>[-moe<E>[k<K>]]-s<S>-mb<B>` (e.g.
+    /// `builtin:tiny-s4-mb2`, `builtin:mini-moe4k2-s2-mb2`).  Returns
+    /// `None` for artifact bundles and malformed MoE suffixes
+    /// (`E = 0`, `K = 0`, `K > E`).
     pub fn parse(bundle: &str) -> Option<Self> {
         let rest = bundle.strip_prefix("builtin:")?;
         let (model, rest) = rest.split_once("-s")?;
@@ -101,21 +116,51 @@ impl BuiltinSpec {
         if n_stages == 0 || mbs == 0 {
             return None;
         }
-        let (vocab, hidden, seq) = match model {
+        let (base, experts, topk, moe) = match model.split_once("-moe") {
+            Some((base, moe_spec)) => {
+                let (e, k): (usize, usize) = match moe_spec.split_once('k') {
+                    Some((e, k)) => (e.parse().ok()?, k.parse().ok()?),
+                    None => (moe_spec.parse().ok()?, 1),
+                };
+                if e == 0 || k == 0 || k > e {
+                    return None;
+                }
+                (base, e, k, true)
+            }
+            None => (model, 1, 1, false),
+        };
+        let (vocab, hidden, seq) = match base {
             "tiny" => (64, 16, 8),
             "mini" => (128, 32, 16),
             _ => return None,
         };
-        Some(Self { name: model.to_string(), vocab, hidden, seq, mbs, n_stages })
+        Some(Self { name: model.to_string(), vocab, hidden, seq, mbs, n_stages, experts, topk, moe })
     }
 
     pub fn embed_params(&self) -> usize {
         self.vocab * self.hidden
     }
 
-    /// One block: W1 (d×d) + b1 (d) + W2 (d×d) + b2 (d).
+    /// Gate parameters of one block: the d×E router weight + E bias,
+    /// present only when `experts > 1` — the single-expert MoE block is
+    /// parameter-identical to the dense block (its top-1-of-1 gate is
+    /// the constant 1.0 and needs no weights), which keeps the
+    /// optimizer's grad-norm span partitioning — and therefore the whole
+    /// fp32 trajectory — bitwise dense-equal.
+    pub fn gate_params(&self) -> usize {
+        if self.experts > 1 {
+            self.hidden * self.experts + self.experts
+        } else {
+            0
+        }
+    }
+
+    /// One block: per expert W1 (d×d) + b1 (d) + W2 (d×d), one shared
+    /// replicated b2 (d), plus the gate.  `experts = 1` reduces to the
+    /// dense 2d² + 2d.
     pub fn layer_params(&self) -> usize {
-        2 * self.hidden * self.hidden + 2 * self.hidden
+        let d = self.hidden;
+        self.experts * (2 * d * d + d) + d + self.gate_params()
     }
 
     pub fn head_params(&self) -> usize {
@@ -150,12 +195,14 @@ impl BuiltinSpec {
         (self.vocab / tp) * self.hidden
     }
 
-    /// Block parameters held by one shard: W1 cols + b1 slice + W2 rows +
-    /// the replicated b2.
+    /// Block parameters held by one shard: per expert W1 cols + b1 slice
+    /// + W2 rows, plus the replicated b2 and the replicated gate (every
+    /// TP rank holds the full router, like the head statistics the gate
+    /// feeds are tiny and its output drives shard-identical routing).
     pub fn shard_layer_params(&self, tp: usize) -> usize {
         let d = self.hidden;
         let f = d / tp;
-        d * f + f + f * d + d
+        self.experts * (d * f + f + f * d) + d + self.gate_params()
     }
 
     /// Head parameters held by one shard: (d × vocab/tp) + vocab/tp.
@@ -195,6 +242,11 @@ pub struct BuiltinStage {
     /// runs every GEMM bf16-in/f32-accumulate; the collective wire dtype
     /// is carried by the [`TpComm`] the engine hands each call.
     pub policy: CastPolicy,
+    /// MoE expert capacity factor: each expert accepts at most
+    /// `min(ceil(cf·T·k/E), T)` tokens per micro-batch, the rest of its
+    /// assignments are dropped (their gate probability contributes a
+    /// zero output).  Ignored by dense blocks.
+    pub capacity_factor: f32,
 }
 
 /// Per-component init streams keyed by (run seed, global component id) so
@@ -204,11 +256,16 @@ fn component_rng(seed: u64, salt: u64) -> Rng64 {
 }
 
 /// Offsets of the shard-local parameter segments in the flat vector.
+/// `w1`/`b1`/`w2` are expert 0's segments (advance by
+/// [`BuiltinStage::expert_stride`] per expert); `gw`/`gb` collapse onto
+/// `hw` when there is no gate (`experts = 1`).
 struct Lay {
     w1: usize,
     b1: usize,
     w2: usize,
     b2: usize,
+    gw: usize,
+    gb: usize,
     hw: usize,
     hb: usize,
 }
@@ -216,20 +273,27 @@ struct Lay {
 impl BuiltinStage {
     /// Dense (tp = 1) stage.
     pub fn dense(spec: BuiltinSpec, stage: usize) -> Self {
-        Self { spec, stage, tp: 1, tp_rank: 0, policy: CastPolicy::fp32() }
+        Self { spec, stage, tp: 1, tp_rank: 0, policy: CastPolicy::fp32(), capacity_factor: 1.25 }
     }
 
     /// TP shard `tp_rank`/`tp` of a stage.
     pub fn sharded(spec: BuiltinSpec, stage: usize, tp: usize, tp_rank: usize) -> Self {
         assert!(spec.tp_ok(tp), "tp {tp} does not slice hidden/vocab");
         assert!(tp_rank < tp);
-        Self { spec, stage, tp, tp_rank, policy: CastPolicy::fp32() }
+        Self { spec, stage, tp, tp_rank, policy: CastPolicy::fp32(), capacity_factor: 1.25 }
     }
 
     /// The same stage under a different cast policy (builder-style; the
     /// engine sets the bundle-wide policy once at construction).
     pub fn with_policy(mut self, policy: CastPolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// The same stage under a different MoE capacity factor.
+    pub fn with_capacity_factor(mut self, cf: f32) -> Self {
+        assert!(cf > 0.0, "capacity factor must be positive");
+        self.capacity_factor = cf;
         self
     }
 
@@ -273,25 +337,45 @@ impl BuiltinStage {
         self.spec.shard_stage_params(self.stage, self.tp)
     }
 
-    /// Span of the TP-replicated parameters (the row-parallel bias b2) in
-    /// this shard's flat vector — what the engine mean-reduces across the
-    /// TP group before the optimizer step.
+    /// Span of the TP-replicated parameters — the row-parallel bias b2
+    /// plus (when present) the gate weight and bias — in this shard's
+    /// flat vector: what the engine mean-reduces across the TP group
+    /// before the optimizer step.  Gate gradients are shard-identical by
+    /// construction (functions of the full `x`, the all-reduced expert
+    /// outputs and the full `dy`), like b2's.
     pub fn replicated_span(&self) -> (usize, usize) {
         let l = self.lay();
-        (l.b2, l.b2 + self.d())
+        (l.b2, l.hw)
+    }
+
+    /// Shard parameters of one expert: W1 columns + b1 slice + W2 rows.
+    fn expert_stride(&self) -> usize {
+        let d = self.d();
+        let f = self.f();
+        d * f + f + f * d
+    }
+
+    /// `(w1, b1, w2)` offsets of expert `ex`'s segments.
+    fn expert_off(&self, ex: usize) -> (usize, usize, usize) {
+        let l = self.lay();
+        let s = ex * self.expert_stride();
+        (l.w1 + s, l.b1 + s, l.w2 + s)
     }
 
     fn lay(&self) -> Lay {
         let d = self.d();
         let f = self.f();
+        let e = self.spec.experts;
         let embed = if self.has_embed() { self.vs() * d } else { 0 };
         let w1 = embed;
         let b1 = w1 + d * f;
         let w2 = b1 + f;
-        let b2 = w2 + f * d;
-        let hw = b2 + d;
+        let b2 = embed + e * (d * f + f + f * d);
+        let gw = b2 + d;
+        let gb = gw + if e > 1 { d * e } else { 0 };
+        let hw = gb + if e > 1 { e } else { 0 };
         let hb = hw + if self.has_head() { d * self.vs() } else { 0 };
-        Lay { w1, b1, w2, b2, hw, hb }
+        Lay { w1, b1, w2, b2, gw, gb, hw, hb }
     }
 
     /// Deterministic, partition- and shard-invariant init of this shard's
@@ -309,18 +393,30 @@ impl BuiltinStage {
             let dense: Vec<f32> = (0..v * d).map(|_| (rng.normal() * 0.5) as f32).collect();
             out.extend_from_slice(&dense[self.vlo() * d..(self.vlo() + vs) * d]);
         }
-        let mut rng = component_rng(seed, 0x1A7E5 + self.stage as u64);
-        let w1: Vec<f32> = (0..d * d).map(|_| (rng.normal() * scale) as f32).collect();
-        let w2: Vec<f32> = (0..d * d).map(|_| (rng.normal() * scale) as f32).collect();
-        // column shard of W1: every input row i, cols [flo, flo + f)
-        for i in 0..d {
-            let row = i * d + self.flo();
-            out.extend_from_slice(&w1[row..row + f]);
+        // per-expert streams keyed by (layer, expert); expert 0 shares the
+        // dense layer's stream, so `-moe1` inits bit-equal to dense
+        for ex in 0..self.spec.experts {
+            let salt = 0x1A7E5 + self.stage as u64 + ((ex as u64) << 20);
+            let mut rng = component_rng(seed, salt);
+            let w1: Vec<f32> = (0..d * d).map(|_| (rng.normal() * scale) as f32).collect();
+            let w2: Vec<f32> = (0..d * d).map(|_| (rng.normal() * scale) as f32).collect();
+            // column shard of W1: every input row i, cols [flo, flo + f)
+            for i in 0..d {
+                let row = i * d + self.flo();
+                out.extend_from_slice(&w1[row..row + f]);
+            }
+            out.extend(std::iter::repeat(0.0f32).take(f)); // b1 shard
+            // row shard of W2: rows [flo, flo + f), all d cols
+            out.extend_from_slice(&w2[self.flo() * d..(self.flo() + f) * d]);
         }
-        out.extend(std::iter::repeat(0.0f32).take(f)); // b1 shard
-        // row shard of W2: rows [flo, flo + f), all d cols
-        out.extend_from_slice(&w2[self.flo() * d..(self.flo() + f) * d]);
         out.extend(std::iter::repeat(0.0f32).take(d)); // b2 (replicated)
+        if self.spec.experts > 1 {
+            let e = self.spec.experts;
+            let mut rng = component_rng(seed, 0x6A7E_0000 + self.stage as u64);
+            // gate weight d×E + zero bias, fully replicated on every shard
+            out.extend((0..d * e).map(|_| (rng.normal() * scale) as f32));
+            out.extend(std::iter::repeat(0.0f32).take(e));
+        }
         if self.has_head() {
             let mut rng = component_rng(seed, 0xD_EAD);
             let dense: Vec<f32> = (0..d * v).map(|_| (rng.normal() * scale) as f32).collect();
@@ -374,13 +470,14 @@ impl BuiltinStage {
         }
     }
 
-    /// Column-parallel first linear + tanh: `h_r = tanh(x W1_r + b1_r)`,
-    /// T × f.  Shard-local (no communication); blocked GEMM kernel.
-    fn first_linear(&self, params: &[f32], x: &[f32]) -> Vec<f32> {
+    /// Column-parallel first linear + tanh of expert `ex`:
+    /// `h_r = tanh(x W1_r + b1_r)`, rows × f.  Shard-local (no
+    /// communication); blocked GEMM kernel.
+    fn expert_h(&self, params: &[f32], ex: usize, x: &[f32]) -> Vec<f32> {
         let d = self.d();
         let f = self.f();
-        let l = self.lay();
-        let (w1, b1) = (&params[l.w1..l.w1 + d * f], &params[l.b1..l.b1 + f]);
+        let (o_w1, o_b1, _) = self.expert_off(ex);
+        let (w1, b1) = (&params[o_w1..o_w1 + d * f], &params[o_b1..o_b1 + f]);
         let t_count = x.len() / d;
         let mut h = vec![0.0f32; t_count * f];
         for t in 0..t_count {
@@ -396,24 +493,46 @@ impl BuiltinStage {
         h
     }
 
-    /// Row-parallel second linear: `y = all_reduce(h_r W2_r) + b2`,
-    /// T × d.  One all-reduce (the Megatron forward `g`).
-    fn second_linear(&self, comm: &TpComm, params: &[f32], h: &[f32]) -> Vec<f32> {
+    /// Dense first linear = expert 0's.
+    fn first_linear(&self, params: &[f32], x: &[f32]) -> Vec<f32> {
+        self.expert_h(params, 0, x)
+    }
+
+    /// Row-parallel second linear of expert `ex` WITHOUT the bias and
+    /// activation cast: `all_reduce(h_r W2_r)`, rows × d (the Megatron
+    /// forward `g`, one all-reduce).  The MoE combine mixes these raw
+    /// outputs gate-weighted, then b2 and the cast land once on the
+    /// mixture — for the dense block that is [`Self::second_linear`].
+    fn expert_out(&self, comm: &TpComm, params: &[f32], ex: usize, h: &[f32]) -> Vec<f32> {
         let d = self.d();
         let f = self.f();
-        let l = self.lay();
-        let (w2, b2) = (&params[l.w2..l.w2 + f * d], &params[l.b2..l.b2 + d]);
+        let (_, _, o_w2) = self.expert_off(ex);
+        let w2 = &params[o_w2..o_w2 + f * d];
         let t_count = h.len() / f;
         let mut y = vec![0.0f32; t_count * d];
         mm(self.policy.activation, &mut y, h, w2, t_count, f, d);
         comm.all_reduce_sum(&mut y);
-        for t in 0..t_count {
-            for (o, &bv) in y[t * d..(t + 1) * d].iter_mut().zip(b2) {
+        y
+    }
+
+    /// Add the replicated bias b2 and apply the block-output activation
+    /// cast in place.
+    fn add_b2_and_cast(&self, params: &[f32], y: &mut [f32]) {
+        let d = self.d();
+        let l = self.lay();
+        let b2 = &params[l.b2..l.b2 + d];
+        for row in y.chunks_exact_mut(d) {
+            for (o, &bv) in row.iter_mut().zip(b2) {
                 *o += bv;
             }
         }
-        // activation storage cast on the block output
-        self.policy.activation.quantize_slice(&mut y);
+        self.policy.activation.quantize_slice(y);
+    }
+
+    /// Dense second linear: expert 0's all-reduced output + b2 + cast.
+    fn second_linear(&self, comm: &TpComm, params: &[f32], h: &[f32]) -> Vec<f32> {
+        let mut y = self.expert_out(comm, params, 0, h);
+        self.add_b2_and_cast(params, &mut y);
         y
     }
 
@@ -422,6 +541,159 @@ impl BuiltinStage {
     fn block_fwd(&self, comm: &TpComm, params: &[f32], x: &[f32]) -> Vec<f32> {
         let h = self.first_linear(params, x);
         self.second_linear(comm, params, &h)
+    }
+
+    /// Gate logits `x·Wg + bg` (T × E).  The gate is TP-replicated, so
+    /// every shard computes identical logits with no communication;
+    /// logits stay f32 like the head's — the top-k softmax is the
+    /// numerically fragile path.
+    fn gate_logits(&self, params: &[f32], x: &[f32]) -> Vec<f32> {
+        let d = self.d();
+        let e = self.spec.experts;
+        let l = self.lay();
+        let (gw, gb) = (&params[l.gw..l.gw + d * e], &params[l.gb..l.gb + e]);
+        let t_count = x.len() / d;
+        let mut logits = vec![0.0f32; t_count * e];
+        for t in 0..t_count {
+            logits[t * e..(t + 1) * e].copy_from_slice(gb);
+        }
+        mm(self.policy.activation, &mut logits, x, gw, t_count, d, e);
+        logits
+    }
+
+    /// The forward routing decision, recomputed identically by the
+    /// backward: trivial (everything to expert 0 with probability 1.0)
+    /// for the single-expert block, top-k over the gate logits otherwise.
+    fn route(&self, params: &[f32], x: &[f32]) -> moe::TopK {
+        let e = self.spec.experts;
+        let t_count = x.len() / self.d();
+        if e == 1 {
+            moe::TopK { expert: vec![0; t_count], prob: vec![1.0; t_count] }
+        } else {
+            moe::top_k_select(&self.gate_logits(params, x), t_count, e, self.spec.topk)
+        }
+    }
+
+    /// Run every expert's MLP over its capacity buffer and return the
+    /// TP-all-reduced raw outputs, expert-indexed.  Without expert
+    /// parallelism every expert runs locally.  With it (`ctx.a2a`, an EP
+    /// group of `ep > 1` data-parallel peers) each rank ships buffers to
+    /// the expert owners over one `all_to_all`, computes its `E/ep` owned
+    /// experts for every source rank — all-reducing each (expert, source)
+    /// buffer separately, so the TP all-reduce count, sizes and chunking
+    /// match `ep = 1` exactly — and a second `all_to_all` returns the
+    /// outputs to their sources.  Parameters are DP-replicated, so any
+    /// rank can stand in for any expert and fp32 results are bitwise
+    /// ep-invariant.
+    fn expert_outputs(
+        &self,
+        comm: &TpComm,
+        params: &[f32],
+        bufs: Vec<Vec<f32>>,
+        cap: usize,
+        ctx: &MoeFwdCtx,
+    ) -> Vec<Vec<f32>> {
+        let d = self.d();
+        let e = self.spec.experts;
+        let a2a = match &ctx.a2a {
+            Some(a) if a.group.len() > 1 => a,
+            _ => {
+                return bufs
+                    .iter()
+                    .enumerate()
+                    .map(|(ex, b)| {
+                        let h = self.expert_h(params, ex, b);
+                        self.expert_out(comm, params, ex, &h)
+                    })
+                    .collect();
+            }
+        };
+        let ep = a2a.group.len();
+        assert_eq!(e % ep, 0, "experts {e} not divisible by ep {ep}");
+        let per = e / ep;
+        let me = a2a.ep_rank;
+        // dispatch: parts[dst] = the dst-owned expert buffers, expert-major
+        let parts: Vec<Vec<f32>> = (0..ep)
+            .map(|dst| {
+                let mut p = Vec::with_capacity(per * cap * d);
+                for eo in 0..per {
+                    p.extend_from_slice(&bufs[dst * per + eo]);
+                }
+                p
+            })
+            .collect();
+        let recv = a2a.group.all_to_all(me, a2a.tag_base, parts, ctx.wire);
+        // compute owned experts for every source rank's tokens
+        let rets: Vec<Vec<f32>> = (0..ep)
+            .map(|src| {
+                let mut r = Vec::with_capacity(per * cap * d);
+                for eo in 0..per {
+                    let ex = me * per + eo;
+                    let buf = &recv[src][eo * cap * d..(eo + 1) * cap * d];
+                    let h = self.expert_h(params, ex, buf);
+                    r.extend_from_slice(&self.expert_out(comm, params, ex, &h));
+                }
+                r
+            })
+            .collect();
+        // combine: outputs come back from each owner, expert-major
+        let back = a2a.group.all_to_all(me, a2a.tag_base | 1, rets, ctx.wire);
+        (0..e)
+            .map(|ex| back[ex / per][(ex % per) * cap * d..(ex % per + 1) * cap * d].to_vec())
+            .collect()
+    }
+
+    /// MoE block forward: gate -> capacity-bounded dispatch -> expert
+    /// MLPs (one TP all-reduce each) -> gate-weighted combine -> b2 +
+    /// cast.  With `experts = 1` every step degenerates to the dense
+    /// block bitwise: the capacity clamp makes the buffer exactly the
+    /// token batch, the route probability is exactly 1.0, and the
+    /// combine accumulates `0.0 + 1.0·v` (the kernels never produce
+    /// -0.0, so this is the identity).
+    fn block_fwd_moe(&self, comm: &TpComm, params: &[f32], x: &[f32], ctx: &MoeFwdCtx) -> Vec<f32> {
+        let d = self.d();
+        let e = self.spec.experts;
+        let k = self.spec.topk;
+        let t_count = x.len() / d;
+        let sel = self.route(params, x);
+        let cap = moe::capacity(t_count, k, e, self.capacity_factor);
+        let plan = moe::plan_dispatch(&sel, t_count, k, e, cap);
+        if let Some(ctr) = ctx.dropped {
+            ctr.fetch_add(plan.dropped, Ordering::Relaxed);
+        }
+        // capacity-padded per-expert input buffers (cap × d each)
+        let bufs: Vec<Vec<f32>> = (0..e)
+            .map(|ex| {
+                let mut b = vec![0.0f32; cap * d];
+                for &(tok, slot, _) in &plan.slots[ex] {
+                    b[slot * d..(slot + 1) * d].copy_from_slice(&x[tok * d..(tok + 1) * d]);
+                }
+                b
+            })
+            .collect();
+        let outs = self.expert_outputs(comm, params, bufs, cap, ctx);
+        // gate-weighted combine, experts ascending then slots in token
+        // order — one fixed association order at every ep
+        let mut y = vec![0.0f32; t_count * d];
+        for (ex, out) in outs.iter().enumerate() {
+            for &(tok, slot, p) in &plan.slots[ex] {
+                let row = &out[slot * d..(slot + 1) * d];
+                for (o, &v) in y[tok * d..(tok + 1) * d].iter_mut().zip(row) {
+                    *o += p * v;
+                }
+            }
+        }
+        self.add_b2_and_cast(params, &mut y);
+        y
+    }
+
+    /// Forward dispatch on the block kind.
+    fn block_fwd_any(&self, comm: &TpComm, params: &[f32], x: &[f32], ctx: &MoeFwdCtx) -> Vec<f32> {
+        if self.spec.moe {
+            self.block_fwd_moe(comm, params, x, ctx)
+        } else {
+            self.block_fwd(comm, params, x)
+        }
     }
 
     /// Block backward given the stage input `x` and upstream grad `dy`
@@ -458,6 +730,118 @@ impl BuiltinStage {
         // gradient-activation cast on the dx handed upstream
         act.quantize_slice(&mut dx);
         dx
+    }
+
+    /// MoE block backward — entirely local (checkpointing semantics, no
+    /// all-to-all): recomputes the routing, capacity buffers and hidden
+    /// activations, backprops every expert, and closes the gate path with
+    /// coefficients `c[t,j] = dy_t · out_e` from the recomputed (and
+    /// TP-all-reduced, like the forward's) expert outputs.  Dropped
+    /// assignments contributed nothing forward, so their coefficient is
+    /// exactly the correct 0.  With `experts = 1` the gate path vanishes
+    /// and every step matches [`Self::block_bwd`] bitwise.
+    fn block_bwd_moe(
+        &self,
+        comm: &TpComm,
+        params: &[f32],
+        g: &mut [f32],
+        x: &[f32],
+        dy: &[f32],
+    ) -> Vec<f32> {
+        let d = self.d();
+        let f = self.f();
+        let e = self.spec.experts;
+        let k = self.spec.topk;
+        let l = self.lay();
+        let act = self.policy.activation;
+        let t_count = x.len() / d;
+        let sel = self.route(params, x);
+        let cap = moe::capacity(t_count, k, e, self.capacity_factor);
+        let plan = moe::plan_dispatch(&sel, t_count, k, e, cap);
+        // b2 grad first (replicated bias of the mixture, dy already full)
+        kernels::col_sum_acc(&mut g[l.b2..l.b2 + d], dy, t_count, d);
+        let mut coeff = vec![0.0f32; t_count * k];
+        let mut dx = vec![0.0f32; x.len()];
+        for ex in 0..e {
+            let (o_w1, o_b1, o_w2) = self.expert_off(ex);
+            let w1 = &params[o_w1..o_w1 + d * f];
+            let w2 = &params[o_w2..o_w2 + f * d];
+            // recompute the capacity buffer; the upstream grad of this
+            // expert's raw output is the gate-scaled dy of each slot
+            let mut buf = vec![0.0f32; cap * d];
+            let mut dout = vec![0.0f32; cap * d];
+            for &(tok, slot, p) in &plan.slots[ex] {
+                buf[slot * d..(slot + 1) * d].copy_from_slice(&x[tok * d..(tok + 1) * d]);
+                let src = &dy[tok * d..(tok + 1) * d];
+                for (o, &v) in dout[slot * d..(slot + 1) * d].iter_mut().zip(src) {
+                    *o += p * v;
+                }
+            }
+            let h = self.expert_h(params, ex, &buf);
+            if e > 1 {
+                // gate coefficients need the forward's raw expert output
+                let out = self.expert_out(comm, params, ex, &h);
+                for &(tok, slot, _) in &plan.slots[ex] {
+                    let j = sel.expert[tok * k..(tok + 1) * k]
+                        .iter()
+                        .position(|&se| se == ex)
+                        .expect("routed expert present in its token's selection");
+                    let mut c = 0.0f32;
+                    let row = &out[slot * d..(slot + 1) * d];
+                    for (a, b) in dy[tok * d..(tok + 1) * d].iter().zip(row) {
+                        c += a * b;
+                    }
+                    coeff[tok * k + j] = c;
+                }
+            }
+            // dW2 += h_rᵀ dout ;  dh_r = dout W2_rᵀ
+            mm_at(act, &mut g[o_w2..o_w2 + f * d], &h, &dout, cap, f, d);
+            let mut dh = vec![0.0f32; cap * f];
+            mm_bt(act, &mut dh, &dout, w2, cap, f, d);
+            for (dp, &hv) in dh.iter_mut().zip(&h) {
+                *dp *= 1.0 - hv * hv;
+            }
+            act.quantize_slice(&mut dh);
+            kernels::col_sum_acc(&mut g[o_b1..o_b1 + f], &dh, cap, f);
+            // dW1 += bufᵀ dpre ;  dbuf = dpre W1_rᵀ
+            mm_at(act, &mut g[o_w1..o_w1 + d * f], &buf, &dh, cap, d, f);
+            let mut dbuf = vec![0.0f32; cap * d];
+            mm_bt(act, &mut dbuf, &dh, w1, cap, d, f);
+            // scatter slot grads back to their tokens (dout already
+            // carried the gate probability; dropped tokens get nothing)
+            for &(tok, slot, _) in &plan.slots[ex] {
+                let row = &dbuf[slot * d..(slot + 1) * d];
+                for (o, &v) in dx[tok * d..(tok + 1) * d].iter_mut().zip(row) {
+                    *o += v;
+                }
+            }
+        }
+        if e > 1 {
+            let dlogits = moe::gate_backward(&sel, &coeff, t_count, e, k);
+            kernels::col_sum_acc(&mut g[l.gb..l.gb + e], &dlogits, t_count, e);
+            mm_at(act, &mut g[l.gw..l.gw + d * e], x, &dlogits, t_count, d, e);
+            // dx += dlogits Wgᵀ (the gate reads the block input too)
+            mm_bt(act, &mut dx, &dlogits, &params[l.gw..l.gw + d * e], t_count, d, e);
+        }
+        comm.all_reduce_sum(&mut dx);
+        act.quantize_slice(&mut dx);
+        dx
+    }
+
+    /// Backward dispatch on the block kind.
+    fn block_bwd_any(
+        &self,
+        comm: &TpComm,
+        params: &[f32],
+        g: &mut [f32],
+        x: &[f32],
+        dy: &[f32],
+    ) -> Vec<f32> {
+        if self.spec.moe {
+            self.block_bwd_moe(comm, params, g, x, dy)
+        } else {
+            self.block_bwd(comm, params, g, x, dy)
+        }
     }
 
     /// Vocab-parallel softmax-xent head: loss + gradient into the block
@@ -540,16 +924,40 @@ impl BuiltinStage {
     }
 
     // ---- the stage entry points the worker drives ----
+    //
+    // Every entry point that runs a *scheduled* block forward (fwd_first,
+    // fwd_mid, and the fused forwards inside bwd_last / bwd_single) has a
+    // `_ctx` variant carrying the MoE wiring: the expert-parallel a2a
+    // group, wire dtype, and the dropped-assignment counter.  The plain
+    // names keep their legacy signatures and run expert-local
+    // ([`MoeFwdCtx::LOCAL`]).  Backward recomputes are always local and
+    // never count drops — only the scheduled forward charges them.
 
     /// First-stage forward: tokens -> activation.
     pub fn fwd_first(&self, comm: &TpComm, params: &[f32], tokens: &[i32]) -> Vec<f32> {
+        self.fwd_first_ctx(comm, params, tokens, &MoeFwdCtx::LOCAL)
+    }
+
+    /// First-stage forward with MoE wiring.
+    pub fn fwd_first_ctx(
+        &self,
+        comm: &TpComm,
+        params: &[f32],
+        tokens: &[i32],
+        ctx: &MoeFwdCtx,
+    ) -> Vec<f32> {
         let x = self.embed(comm, params, tokens);
-        self.block_fwd(comm, params, &x)
+        self.block_fwd_any(comm, params, &x, ctx)
     }
 
     /// Middle-stage forward: activation -> activation.
     pub fn fwd_mid(&self, comm: &TpComm, params: &[f32], x: &[f32]) -> Vec<f32> {
-        self.block_fwd(comm, params, x)
+        self.fwd_mid_ctx(comm, params, x, &MoeFwdCtx::LOCAL)
+    }
+
+    /// Middle-stage forward with MoE wiring.
+    pub fn fwd_mid_ctx(&self, comm: &TpComm, params: &[f32], x: &[f32], ctx: &MoeFwdCtx) -> Vec<f32> {
+        self.block_fwd_any(comm, params, x, ctx)
     }
 
     /// Last-stage backward: (stage input, targets) -> (gparams, gx, loss).
@@ -560,10 +968,24 @@ impl BuiltinStage {
         x: &[f32],
         targets: &[i32],
     ) -> (Vec<f32>, Vec<f32>, f32) {
+        self.bwd_last_ctx(comm, params, x, targets, &MoeFwdCtx::LOCAL)
+    }
+
+    /// Last-stage backward with MoE wiring for the fused block forward
+    /// (the last stage's only scheduled forward — it dispatches over the
+    /// a2a group and charges drops; the backward recompute stays local).
+    pub fn bwd_last_ctx(
+        &self,
+        comm: &TpComm,
+        params: &[f32],
+        x: &[f32],
+        targets: &[i32],
+        ctx: &MoeFwdCtx,
+    ) -> (Vec<f32>, Vec<f32>, f32) {
         let mut g = vec![0.0f32; params.len()];
-        let y = self.block_fwd(comm, params, x);
+        let y = self.block_fwd_any(comm, params, x, ctx);
         let (dy, loss) = self.head_bwd(comm, params, &mut g, &y, targets);
-        let dx = self.block_bwd(comm, params, &mut g, x, &dy);
+        let dx = self.block_bwd_any(comm, params, &mut g, x, &dy);
         self.policy.grad.quantize_slice(&mut g);
         (g, dx, loss)
     }
@@ -571,7 +993,7 @@ impl BuiltinStage {
     /// Middle-stage backward: (stage input, upstream grad) -> (gparams, gx).
     pub fn bwd_mid(&self, comm: &TpComm, params: &[f32], x: &[f32], gy: &[f32]) -> (Vec<f32>, Vec<f32>) {
         let mut g = vec![0.0f32; params.len()];
-        let dx = self.block_bwd(comm, params, &mut g, x, gy);
+        let dx = self.block_bwd_any(comm, params, &mut g, x, gy);
         self.policy.grad.quantize_slice(&mut g);
         (g, dx)
     }
@@ -580,7 +1002,7 @@ impl BuiltinStage {
     pub fn bwd_first(&self, comm: &TpComm, params: &[f32], tokens: &[i32], gy: &[f32]) -> Vec<f32> {
         let mut g = vec![0.0f32; params.len()];
         let x = self.embed(comm, params, tokens);
-        let dx = self.block_bwd(comm, params, &mut g, &x, gy);
+        let dx = self.block_bwd_any(comm, params, &mut g, &x, gy);
         self.embed_bwd(&mut g, tokens, &dx);
         self.policy.grad.quantize_slice(&mut g);
         g
@@ -595,11 +1017,24 @@ impl BuiltinStage {
         tokens: &[i32],
         targets: &[i32],
     ) -> (Vec<f32>, f32) {
+        self.bwd_single_ctx(comm, params, tokens, targets, &MoeFwdCtx::LOCAL)
+    }
+
+    /// Fused single-stage backward with MoE wiring for the fused block
+    /// forward (see [`Self::bwd_last_ctx`]).
+    pub fn bwd_single_ctx(
+        &self,
+        comm: &TpComm,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        ctx: &MoeFwdCtx,
+    ) -> (Vec<f32>, f32) {
         let mut g = vec![0.0f32; params.len()];
         let x = self.embed(comm, params, tokens);
-        let y = self.block_fwd(comm, params, &x);
+        let y = self.block_fwd_any(comm, params, &x, ctx);
         let (dy, loss) = self.head_bwd(comm, params, &mut g, &y, targets);
-        let dx = self.block_bwd(comm, params, &mut g, &x, &dy);
+        let dx = self.block_bwd_any(comm, params, &mut g, &x, &dy);
         self.embed_bwd(&mut g, tokens, &dx);
         self.policy.grad.quantize_slice(&mut g);
         (g, loss)
@@ -626,21 +1061,27 @@ pub fn extract_shard(spec: &BuiltinSpec, g: usize, tp: usize, tp_rank: usize, de
         out.extend_from_slice(&dense[vlo * d..(vlo + vs) * d]);
         off += v * d;
     }
-    // W1 columns
-    for i in 0..d {
-        let row = off + i * d + flo;
-        out.extend_from_slice(&dense[row..row + f]);
+    for _ex in 0..spec.experts {
+        // W1 columns
+        for i in 0..d {
+            let row = off + i * d + flo;
+            out.extend_from_slice(&dense[row..row + f]);
+        }
+        off += d * d;
+        // b1 slice
+        out.extend_from_slice(&dense[off + flo..off + flo + f]);
+        off += d;
+        // W2 rows
+        out.extend_from_slice(&dense[off + flo * d..off + (flo + f) * d]);
+        off += d * d;
     }
-    off += d * d;
-    // b1 slice
-    out.extend_from_slice(&dense[off + flo..off + flo + f]);
-    off += d;
-    // W2 rows
-    out.extend_from_slice(&dense[off + flo * d..off + (flo + f) * d]);
-    off += d * d;
     // b2 replicated
     out.extend_from_slice(&dense[off..off + d]);
     off += d;
+    // gate replicated (weight + bias)
+    let gate = spec.gate_params();
+    out.extend_from_slice(&dense[off..off + gate]);
+    off += gate;
     if g == spec.n_stages - 1 {
         // head W columns
         for i in 0..d {
@@ -1029,6 +1470,253 @@ mod tests {
         let sp = spec(1);
         let (tokens, targets) = test_tokens(&sp, 3, 1);
         let tp = 4;
+        let sp2 = sp.clone();
+        let results = run_tp(tp, move |r, comm| {
+            let st = BuiltinStage::sharded(sp2.clone(), 0, tp, r);
+            let p = st.init(21);
+            let (g, _) = st.bwd_single(&comm, &p, &tokens, &targets);
+            let (lo, hi) = st.replicated_span();
+            g[lo..hi].to_vec()
+        });
+        for r in 1..tp {
+            for (a, b) in results[0].iter().zip(&results[r]) {
+                assert!((a - b).abs() < 1e-6, "shard {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    // ---- MoE stage family ----
+
+    #[test]
+    fn parse_moe_bundle_names() {
+        let sp = BuiltinSpec::parse("builtin:tiny-moe4k2-s2-mb2").unwrap();
+        assert_eq!((sp.experts, sp.topk, sp.moe), (4, 2, true));
+        assert_eq!((sp.n_stages, sp.hidden), (2, 16));
+        let sp = BuiltinSpec::parse("builtin:mini-moe8-s1-mb2").unwrap();
+        assert_eq!((sp.experts, sp.topk, sp.moe), (8, 1, true));
+        let sp = BuiltinSpec::parse("builtin:tiny-moe1-s1-mb2").unwrap();
+        assert_eq!((sp.experts, sp.topk, sp.moe), (1, 1, true));
+        assert_eq!(sp.gate_params(), 0, "single-expert MoE carries no gate");
+        let dense = BuiltinSpec::parse("builtin:tiny-s1-mb2").unwrap();
+        assert_eq!((dense.experts, dense.topk, dense.moe), (1, 1, false));
+        assert_eq!(sp.total_params(), dense.total_params());
+        // malformed MoE suffixes
+        for bad in [
+            "builtin:tiny-moe0-s1-mb2",
+            "builtin:tiny-moe2k0-s1-mb2",
+            "builtin:tiny-moe2k3-s1-mb2",
+            "builtin:tiny-moek2-s1-mb2",
+            "builtin:nope-moe4-s1-mb2",
+        ] {
+            assert!(BuiltinSpec::parse(bad).is_none(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn moe_param_accounting_and_init() {
+        let sp = BuiltinSpec::parse("builtin:tiny-moe4k2-s2-mb2").unwrap();
+        let d = sp.hidden;
+        assert_eq!(sp.gate_params(), d * 4 + 4);
+        assert_eq!(sp.layer_params(), 4 * (2 * d * d + d) + d + sp.gate_params());
+        let sum: usize = (0..sp.n_stages).map(|g| sp.stage_params(g)).sum();
+        assert_eq!(sum, sp.total_params());
+        for g in 0..sp.n_stages {
+            assert_eq!(stage(&sp, g).init(7).len(), sp.stage_params(g));
+            for tp in [2usize, 4] {
+                let st = BuiltinStage::sharded(sp.clone(), g, tp, tp - 1);
+                assert_eq!(st.init(7).len(), sp.shard_stage_params(g, tp));
+            }
+        }
+        // shard init is the extract_shard slice of the dense init
+        for g in 0..sp.n_stages {
+            let dense = stage(&sp, g).init(42);
+            for tp in [2usize, 4] {
+                for r in 0..tp {
+                    let st = BuiltinStage::sharded(sp.clone(), g, tp, r);
+                    assert_eq!(st.init(42), extract_shard(&sp, g, tp, r, &dense), "g={g} tp={tp} r={r}");
+                }
+            }
+        }
+        // expert 0 shares the dense layer stream; the gate stream is new
+        let dn = BuiltinSpec::parse("builtin:tiny-s2-mb2").unwrap();
+        let pm = stage(&sp, 1).init(42);
+        let pd = stage(&dn, 1).init(42);
+        assert_eq!(&pm[..d * d], &pd[..d * d], "expert 0 W1 = dense W1");
+    }
+
+    #[test]
+    fn moe1_matches_dense_bitwise() {
+        // the `-moe1` bundle routes through capacity buffers, dispatch
+        // plan and gate-weighted combine, yet must reproduce the dense
+        // block BIT FOR BIT on both precisions: init, forward, loss and
+        // every gradient
+        let dn = BuiltinSpec::parse("builtin:tiny-s1-mb2").unwrap();
+        let mo = BuiltinSpec::parse("builtin:tiny-moe1-s1-mb2").unwrap();
+        let (tokens, targets) = test_tokens(&dn, 7, 1);
+        for policy in [CastPolicy::fp32(), CastPolicy::bf16()] {
+            let comm = solo();
+            let sd = stage(&dn, 0).with_policy(policy);
+            let sm = stage(&mo, 0).with_policy(policy);
+            let pd = sd.init(11);
+            let pm = sm.init(11);
+            assert_eq!(bits(&pd), bits(&pm), "init");
+            let yd = sd.fwd_first(&comm, &pd, &tokens);
+            let ym = sm.fwd_first(&comm, &pm, &tokens);
+            assert_eq!(bits(&yd), bits(&ym), "forward");
+            let (gd, ld) = sd.bwd_single(&comm, &pd, &tokens, &targets);
+            let (gm, lm) = sm.bwd_single(&comm, &pm, &tokens, &targets);
+            assert_eq!(ld.to_bits(), lm.to_bits(), "loss");
+            assert_eq!(bits(&gd), bits(&gm), "grads");
+        }
+        // and through the communicating sharded path at fp32
+        let tk = tokens.clone();
+        let tg = targets.clone();
+        let (dn2, mo2) = (dn.clone(), mo.clone());
+        let results = run_tp(2, move |r, comm| {
+            let sd = BuiltinStage::sharded(dn2.clone(), 0, 2, r);
+            let sm = BuiltinStage::sharded(mo2.clone(), 0, 2, r);
+            let pd = sd.init(11);
+            let pm = sm.init(11);
+            let yd = sd.fwd_first(&comm, &pd, &tk);
+            let ym = sm.fwd_first(&comm, &pm, &tk);
+            let (gd, ld) = sd.bwd_single(&comm, &pd, &tk, &tg);
+            let (gm, lm) = sm.bwd_single(&comm, &pm, &tk, &tg);
+            (bits(&yd) == bits(&ym), bits(&gd) == bits(&gm), ld.to_bits() == lm.to_bits())
+        });
+        for (r, ok) in results.iter().enumerate() {
+            assert_eq!(*ok, (true, true, true), "tp=2 shard {r}");
+        }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn moe_gradcheck_dense() {
+        // finite differences through gate -> dispatch -> experts ->
+        // combine on the fused dense path; capacity factor 2.0 keeps
+        // every assignment (cap = T), so the loss is differentiable
+        // everywhere the routing is stable
+        let sp = BuiltinSpec::parse("builtin:tiny-moe4k2-s1-mb2").unwrap();
+        let st = stage(&sp, 0).with_capacity_factor(2.0);
+        let comm = solo();
+        let mut params = st.init(3);
+        let (tokens, targets) = test_tokens(&sp, 7, 1);
+        let (g, _) = st.bwd_single(&comm, &params, &tokens, &targets);
+        let d = sp.hidden;
+        let e = sp.embed_params();
+        let per = 2 * d * d + d;
+        let gate_off = e + 4 * per + d;
+        let eps = 1e-3f32;
+        let mut worst = 0.0f32;
+        for idx in [
+            e + 3,                   // expert 0 W1
+            e + per + d * d + 2,     // expert 1 b1
+            e + 2 * per + d * d + d + 11, // expert 2 W2
+            e + 3 * per + 5,         // expert 3 W1
+            e + 4 * per + 5,         // b2
+            gate_off + 7,            // gate W
+            gate_off + 4 * d + 2,    // gate bias
+            e + sp.layer_params() + 17, // head W
+            params.len() - 1,        // head b
+        ] {
+            let orig = params[idx];
+            params[idx] = orig + eps;
+            let (_, lp) = st.bwd_single(&comm, &params, &tokens, &targets);
+            params[idx] = orig - eps;
+            let (_, lm) = st.bwd_single(&comm, &params, &tokens, &targets);
+            params[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            worst = worst.max((fd - g[idx]).abs());
+        }
+        assert!(worst < 2e-3, "finite-diff mismatch: {worst}");
+    }
+
+    #[test]
+    fn moe_sharded_matches_dense() {
+        // the TP-sharded MoE block (default capacity factor, so real
+        // token drops happen identically on every shard) must track the
+        // dense MoE run within fp association noise
+        let sp = BuiltinSpec::parse("builtin:tiny-moe4k2-s1-mb2").unwrap();
+        let st_dense = stage(&sp, 0);
+        let comm = solo();
+        let pd = st_dense.init(11);
+        let (tokens, targets) = test_tokens(&sp, 5, 2);
+        let y_dense = st_dense.fwd_first(&comm, &pd, &tokens);
+        let (gd, loss_dense) = st_dense.bwd_single(&comm, &pd, &tokens, &targets);
+
+        for tp in [2usize, 4] {
+            let sp2 = sp.clone();
+            let tk = tokens.clone();
+            let tg = targets.clone();
+            let results = run_tp(tp, move |r, comm| {
+                let st = BuiltinStage::sharded(sp2.clone(), 0, tp, r);
+                let p = st.init(11);
+                let y = st.fwd_first(&comm, &p, &tk);
+                let (g, loss) = st.bwd_single(&comm, &p, &tk, &tg);
+                (y, g, loss)
+            });
+            for (r, (y, g, loss)) in results.into_iter().enumerate() {
+                assert!((loss - loss_dense).abs() < 1e-4, "tp={tp} r={r}: loss {loss} vs {loss_dense}");
+                for (a, b) in y.iter().zip(&y_dense) {
+                    assert!((a - b).abs() < 1e-4, "tp={tp} r={r} fwd: {a} vs {b}");
+                }
+                let want = extract_shard(&sp, 0, tp, r, &gd);
+                assert_eq!(g.len(), want.len());
+                for (i, (a, b)) in g.iter().zip(&want).enumerate() {
+                    assert!((a - b).abs() < 1e-4, "tp={tp} r={r} grad[{i}]: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moe_capacity_drops_are_counted() {
+        use std::sync::atomic::AtomicU64;
+        // capacity factor 0.5 with top-1-of-4 caps each expert at 2 of
+        // 16 tokens: at least half the assignments must drop, the
+        // scheduled forward charges them to the counter, and the
+        // backward recompute charges nothing
+        let sp = BuiltinSpec::parse("builtin:tiny-moe4k1-s1-mb2").unwrap();
+        let st = stage(&sp, 0).with_capacity_factor(0.5);
+        let comm = solo();
+        let params = st.init(5);
+        let (tokens, targets) = test_tokens(&sp, 7, 1);
+        let dropped = AtomicU64::new(0);
+        let ctx = MoeFwdCtx { a2a: None, wire: Dtype::F32, dropped: Some(&dropped) };
+        let y = st.fwd_first_ctx(&comm, &params, &tokens, &ctx);
+        assert!(y.iter().all(|v| v.is_finite()));
+        let n1 = dropped.load(Ordering::Relaxed);
+        assert!(n1 >= 8, "cap 2×4 over 16 tokens must drop ≥ 8, got {n1}");
+        // deterministic: the same forward drops the same count
+        st.fwd_first_ctx(&comm, &params, &tokens, &ctx);
+        assert_eq!(dropped.load(Ordering::Relaxed), 2 * n1);
+        // fused bwd charges its forward once; grads stay finite
+        let (g, loss) = st.bwd_single_ctx(&comm, &params, &tokens, &targets, &ctx);
+        assert_eq!(dropped.load(Ordering::Relaxed), 3 * n1);
+        assert!(loss.is_finite());
+        assert!(g.iter().all(|v| v.is_finite()));
+        assert!(g.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn moe_replicated_gate_grads_identical_across_shards() {
+        // the TP grad-sync invariant extends to the gate: every shard
+        // computes the same router gradient before any synchronisation
+        let sp = BuiltinSpec::parse("builtin:tiny-moe4k2-s1-mb2").unwrap();
+        let d = sp.hidden;
+        assert_eq!(
+            {
+                let st = stage(&sp, 0);
+                let (lo, hi) = st.replicated_span();
+                hi - lo
+            },
+            d + d * 4 + 4,
+            "replicated span = b2 + gate W + gate bias"
+        );
+        let (tokens, targets) = test_tokens(&sp, 3, 1);
+        let tp = 2;
         let sp2 = sp.clone();
         let results = run_tp(tp, move |r, comm| {
             let st = BuiltinStage::sharded(sp2.clone(), 0, tp, r);

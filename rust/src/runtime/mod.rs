@@ -28,6 +28,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::collectives::TpComm;
+use crate::moe::MoeFwdCtx;
 use crate::util::json::Json;
 
 pub use builtin::{BuiltinSpec, BuiltinStage};
@@ -365,7 +366,8 @@ impl StageExecutables {
                     st.spec.vocab
                 );
                 let sharded = BuiltinStage::sharded(st.spec.clone(), st.stage, tp, tp_rank)
-                    .with_policy(st.policy);
+                    .with_policy(st.policy)
+                    .with_capacity_factor(st.capacity_factor);
                 let mut meta = self.meta.clone();
                 meta.param_count = sharded.param_count() as u64;
                 Ok(StageExecutables { meta, backend: StageBackend::Builtin(sharded) })
@@ -445,6 +447,15 @@ impl StageExecutables {
         Ok(())
     }
 
+    /// The XLA backend has no MoE stages: reject expert-parallel wiring.
+    fn ensure_local(ctx: &MoeFwdCtx, what: &str) -> Result<()> {
+        anyhow::ensure!(
+            ctx.a2a.is_none(),
+            "{what}: expert parallelism requires the builtin backend"
+        );
+        Ok(())
+    }
+
     /// First-stage forward: tokens -> activation.
     pub fn fwd_first(
         &self,
@@ -454,14 +465,28 @@ impl StageExecutables {
         tokens: &[i32],
         dims: StageDims,
     ) -> Result<Vec<f32>> {
+        self.fwd_first_ctx(rt, p, comm, tokens, dims, &MoeFwdCtx::LOCAL)
+    }
+
+    /// [`Self::fwd_first`] with MoE wiring (builtin backend only).
+    pub fn fwd_first_ctx(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        comm: &TpComm,
+        tokens: &[i32],
+        dims: StageDims,
+        ctx: &MoeFwdCtx,
+    ) -> Result<Vec<f32>> {
         match &self.backend {
             StageBackend::Xla { fwd, .. } => {
                 Self::ensure_dense(comm, "fwd_first")?;
+                Self::ensure_local(ctx, "fwd_first")?;
                 let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
                 let out = fwd.run_b(&[p.xla()?, &tok_buf.0]).context("stage fwd (embed)")?;
                 to_f32(&out[0])
             }
-            StageBackend::Builtin(st) => Ok(st.fwd_first(comm, p.host()?, tokens)),
+            StageBackend::Builtin(st) => Ok(st.fwd_first_ctx(comm, p.host()?, tokens, ctx)),
         }
     }
 
@@ -474,14 +499,28 @@ impl StageExecutables {
         x: &[f32],
         dims: StageDims,
     ) -> Result<Vec<f32>> {
+        self.fwd_mid_ctx(rt, p, comm, x, dims, &MoeFwdCtx::LOCAL)
+    }
+
+    /// [`Self::fwd_mid`] with MoE wiring (builtin backend only).
+    pub fn fwd_mid_ctx(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        comm: &TpComm,
+        x: &[f32],
+        dims: StageDims,
+        ctx: &MoeFwdCtx,
+    ) -> Result<Vec<f32>> {
         match &self.backend {
             StageBackend::Xla { fwd, .. } => {
                 Self::ensure_dense(comm, "fwd_mid")?;
+                Self::ensure_local(ctx, "fwd_mid")?;
                 let x_buf = rt.buf_f32(x, &dims.act())?;
                 let out = fwd.run_b(&[p.xla()?, &x_buf.0]).context("stage fwd")?;
                 to_f32(&out[0])
             }
-            StageBackend::Builtin(st) => Ok(st.fwd_mid(comm, p.host()?, x)),
+            StageBackend::Builtin(st) => Ok(st.fwd_mid_ctx(comm, p.host()?, x, ctx)),
         }
     }
 
@@ -495,9 +534,24 @@ impl StageExecutables {
         targets: &[i32],
         dims: StageDims,
     ) -> Result<(Vec<f32>, f32)> {
+        self.bwd_single_ctx(rt, p, comm, tokens, targets, dims, &MoeFwdCtx::LOCAL)
+    }
+
+    /// [`Self::bwd_single`] with MoE wiring for the fused forward.
+    pub fn bwd_single_ctx(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        comm: &TpComm,
+        tokens: &[i32],
+        targets: &[i32],
+        dims: StageDims,
+        ctx: &MoeFwdCtx,
+    ) -> Result<(Vec<f32>, f32)> {
         match &self.backend {
             StageBackend::Xla { bwd, .. } => {
                 Self::ensure_dense(comm, "bwd_single")?;
+                Self::ensure_local(ctx, "bwd_single")?;
                 let tok_buf = rt.buf_i32(tokens, &dims.tok())?;
                 let tgt_buf = rt.buf_i32(targets, &dims.tok())?;
                 let out = bwd
@@ -505,7 +559,9 @@ impl StageExecutables {
                     .context("single-stage bwd")?;
                 Ok((to_f32(&out[0])?, scalar_f32(&out[1])?))
             }
-            StageBackend::Builtin(st) => Ok(st.bwd_single(comm, p.host()?, tokens, targets)),
+            StageBackend::Builtin(st) => {
+                Ok(st.bwd_single_ctx(comm, p.host()?, tokens, targets, ctx))
+            }
         }
     }
 
@@ -519,9 +575,24 @@ impl StageExecutables {
         targets: &[i32],
         dims: StageDims,
     ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        self.bwd_last_ctx(rt, p, comm, x, targets, dims, &MoeFwdCtx::LOCAL)
+    }
+
+    /// [`Self::bwd_last`] with MoE wiring for the fused forward.
+    pub fn bwd_last_ctx(
+        &self,
+        rt: &Runtime,
+        p: &ParamsHandle,
+        comm: &TpComm,
+        x: &[f32],
+        targets: &[i32],
+        dims: StageDims,
+        ctx: &MoeFwdCtx,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
         match &self.backend {
             StageBackend::Xla { bwd, .. } => {
                 Self::ensure_dense(comm, "bwd_last")?;
+                Self::ensure_local(ctx, "bwd_last")?;
                 let x_buf = rt.buf_f32(x, &dims.act())?;
                 let tgt_buf = rt.buf_i32(targets, &dims.tok())?;
                 let out = bwd
@@ -529,7 +600,7 @@ impl StageExecutables {
                     .context("last-stage bwd")?;
                 Ok((to_f32(&out[0])?, to_f32(&out[1])?, scalar_f32(&out[2])?))
             }
-            StageBackend::Builtin(st) => Ok(st.bwd_last(comm, p.host()?, x, targets)),
+            StageBackend::Builtin(st) => Ok(st.bwd_last_ctx(comm, p.host()?, x, targets, ctx)),
         }
     }
 
@@ -626,6 +697,17 @@ impl Bundle {
         spec: &BuiltinSpec,
         policy: crate::precision::CastPolicy,
     ) -> Self {
+        Self::builtin_with(spec, policy, 1.25)
+    }
+
+    /// Builtin bundle under an explicit cast policy AND MoE capacity
+    /// factor (the engine's `--capacity-factor`; ignored by dense
+    /// bundles).
+    pub fn builtin_with(
+        spec: &BuiltinSpec,
+        policy: crate::precision::CastPolicy,
+        capacity_factor: f32,
+    ) -> Self {
         let meta = BundleMeta::for_builtin(spec);
         let stages = meta
             .stages
@@ -633,7 +715,9 @@ impl Bundle {
             .map(|sm| StageExecutables {
                 meta: sm.clone(),
                 backend: StageBackend::Builtin(
-                    BuiltinStage::dense(spec.clone(), sm.index as usize).with_policy(policy),
+                    BuiltinStage::dense(spec.clone(), sm.index as usize)
+                        .with_policy(policy)
+                        .with_capacity_factor(capacity_factor),
                 ),
             })
             .collect();

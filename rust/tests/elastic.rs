@@ -373,6 +373,104 @@ fn join_without_a_checkpoint_dir_is_rejected() {
 }
 
 // =========================================================================
+// Expert parallelism under faults: the shrunken world re-slices the
+// (expert-carrying) optimizer shards and falls back to ep = 1 when the
+// new dp breaks divisibility — trajectories are ep-invariant, so the
+// recovery still lands bitwise on the fresh-run reference
+// =========================================================================
+
+fn moe_cfg(dp: usize, ep: usize, steps: u32, stage: ShardingStage) -> EngineConfig {
+    EngineConfig {
+        bundle: "builtin:tiny-moe4k2-s2-mb2".into(),
+        dp,
+        ep,
+        tp: 1,
+        schedule: ScheduleKind::OneF1B,
+        microbatches: 2,
+        steps,
+        zero_stage: stage,
+        precision: Dtype::F32,
+        grad_bucket_floats: 128,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn moe_kill_recovery_falls_back_to_ep1_and_matches_the_fresh_run() {
+    // dp = 4 at ep = 2; the kill shrinks to dp = 3, which ep = 2 does
+    // not divide, so the recovered world routes locally (ep = 1).  The
+    // expert parameters ride the same flat vector as everything else, so
+    // the dp 4 → 3 optimizer-shard re-slice needs no MoE-specific path.
+    let dir_p = tmp("moe-p");
+    let dir_a = tmp("moe-a");
+    let _ = std::fs::remove_dir_all(&dir_p);
+    let _ = std::fs::remove_dir_all(&dir_a);
+
+    let mut p = moe_cfg(4, 2, 2, S2);
+    p.checkpoint_dir = Some(dir_p.clone());
+    p.checkpoint_every = 2;
+    let p = train(&p).expect("straight MoE run must succeed");
+    assert!(p.moe_a2a_rounds > 0, "ep = 2 must hit the a2a wire");
+
+    let mut a = moe_cfg(4, 2, 6, S2);
+    a.checkpoint_dir = Some(dir_a.clone());
+    a.checkpoint_every = 2;
+    a.faults = FaultSpec::parse_list("kill@3:1").unwrap();
+    a.comm_timeout_ms = TIMEOUT_MS;
+    let a = train(&a).expect("the faulted MoE run must recover");
+    assert_eq!(a.recovery_events, 1);
+    assert_eq!(a.world_size, 2 * 3, "the run finishes on the shrunken world");
+
+    // the fresh reference at the smaller world: dp = 3 forces ep = 1
+    let mut b = moe_cfg(3, 1, 4, S2);
+    b.checkpoint_dir = Some(dir_p.clone());
+    b.resume = true;
+    let b = train(&b).expect("fresh dp = 3 run must resume the ep = 2 checkpoint");
+
+    assert_eq!(traj(&a)[..2], traj(&p)[..], "pre-kill leg ≡ straight ep = 2 run");
+    assert_eq!(
+        traj(&a)[2..],
+        traj(&b)[..],
+        "post-recovery (ep fallback) ≡ fresh ep = 1 resume, bitwise"
+    );
+
+    std::fs::remove_dir_all(&dir_p).ok();
+    std::fs::remove_dir_all(&dir_a).ok();
+}
+
+#[test]
+fn moe_resume_rejects_expert_config_mismatch() {
+    let dir = tmp("moe-rej");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut save = moe_cfg(2, 1, 2, S1);
+    save.checkpoint_dir = Some(dir.clone());
+    save.checkpoint_every = 2;
+    train(&save).expect("saving run must succeed");
+
+    let resume_as = |bundle: &str| {
+        let mut c = moe_cfg(2, 1, 2, S1);
+        c.bundle = bundle.into();
+        c.checkpoint_dir = Some(dir.clone());
+        c.resume = true;
+        train(&c).expect_err("a different expert shape must hard-reject").to_string()
+    };
+    // more experts: parameter files cannot be re-assembled
+    let err = resume_as("builtin:tiny-moe8k2-s2-mb2");
+    assert!(err.contains("expert config"), "{err}");
+    assert!(err.contains("experts=4"), "the error names the saved shape: {err}");
+    // a top-k change alters routing silently: rejected the same way
+    let err = resume_as("builtin:tiny-moe4k1-s2-mb2");
+    assert!(err.contains("topk=2"), "{err}");
+    // dense resume of an MoE checkpoint: the targeted expert-config
+    // message beats the generic bundle mismatch
+    let err = resume_as("builtin:tiny-s2-mb2");
+    assert!(err.contains("expert config"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// =========================================================================
 // The full grid: kill@3 × stage ∈ {0,1,2,3} × {fp32, bf16} × dp ∈ {2,3,4}
 // (CI: `cargo test --features fault-matrix --test elastic elastic_matrix`)
 // =========================================================================

@@ -1,0 +1,428 @@
+//! Engine-level tests of the expert-parallel subsystem: the MoE stage
+//! family (`builtin:*-moe<E>k<K>-*`), the deterministic `all_to_all`
+//! dispatch/combine wire, and its composition with tp × pp × dp × zero.
+//!
+//! The locks, mirroring the issue's acceptance criteria:
+//!
+//! * **Single-expert ≡ dense** — the `-moe1` (top-1) bundle carries no
+//!   gate and routes every token to its one expert at full capacity, so
+//!   its 20-step trajectory equals the dense bundle's **bitwise**, at
+//!   fp32 AND bf16, across tp — same parameter count, same flat vector.
+//! * **ep-invariance** — `ep ∈ {2, 4}` equals `ep = 1` **bitwise** at
+//!   fp32 on the dp × tp × zero-stage grid: the capacity-bounded
+//!   dispatch plan is data-local (identical at every ep), and the fp32
+//!   a2a wire is value-preserving, so sharding expert *compute* moves
+//!   FLOPs and bytes but never the trajectory.
+//! * **a2a wire, pinned EXACTLY** — `moe_a2a_rounds` and
+//!   `moe_a2a_payload_bytes` equal the analytic `perf::moe_a2a_*` terms
+//!   exactly (payload halves exactly under the packed-bf16 wire); under
+//!   `--nodes` the intra/inter tier split is pinned against
+//!   `perf::moe_a2a_tier_bytes_per_step`, and the two tiers plus the
+//!   self parts reassemble the full payload.
+//! * **Capacity/drop accounting** — a tight capacity factor drops
+//!   assignments deterministically and identically at every ep; a
+//!   generous one (cap = tokens) drops nothing.
+//! * **CLI** — `--experts/--moe-topk` rewrite the builtin bundle name
+//!   and train end to end; misuse dies with a targeted error.
+//!
+//! The full ep ∈ {1,2,4} × zero-stage ∈ {0,2,3} × {fp32, bf16} grid
+//! rides behind `--features moe-matrix` (CI).
+
+use std::process::Command;
+
+use frontier_llm::config::ScheduleKind;
+use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
+use frontier_llm::moe;
+use frontier_llm::perf::{
+    moe_a2a_payload_bytes_per_round, moe_a2a_rounds_per_step, moe_a2a_tier_bytes_per_step,
+};
+use frontier_llm::precision::Dtype;
+use frontier_llm::runtime::BuiltinSpec;
+use frontier_llm::zero::ShardingStage;
+
+const S0: ShardingStage = ShardingStage::Ddp;
+const S2: ShardingStage = ShardingStage::Gradients;
+const S3: ShardingStage = ShardingStage::Parameters;
+
+/// The workhorse shapes: `tiny` (d = 16, seq = 8) as a 2-stage pipeline,
+/// dense vs 4-expert top-2.  tokens per micro-batch = mbs × seq = 16.
+const DENSE: &str = "builtin:tiny-s2-mb2";
+const MOE1: &str = "builtin:tiny-moe1k1-s2-mb2";
+const MOE4: &str = "builtin:tiny-moe4k2-s2-mb2";
+const TOKENS: usize = 16;
+const HIDDEN: u64 = 16;
+const EXPERTS: usize = 4;
+const TOPK: usize = 2;
+
+#[allow(clippy::too_many_arguments)]
+fn cfg(
+    bundle: &str,
+    tp: usize,
+    dp: usize,
+    ep: usize,
+    m: u32,
+    steps: u32,
+    stage: ShardingStage,
+    precision: Dtype,
+) -> EngineConfig {
+    EngineConfig {
+        bundle: bundle.into(),
+        dp,
+        tp,
+        ep,
+        schedule: ScheduleKind::OneF1B,
+        microbatches: m,
+        steps,
+        zero_stage: stage,
+        precision,
+        grad_bucket_floats: 128,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    bundle: &str,
+    tp: usize,
+    dp: usize,
+    ep: usize,
+    m: u32,
+    steps: u32,
+    stage: ShardingStage,
+    precision: Dtype,
+) -> TrainReport {
+    train(&cfg(bundle, tp, dp, ep, m, steps, stage, precision)).expect("training must succeed")
+}
+
+/// Bitwise view of a trajectory: step index, loss and grad-norm bits.
+fn traj(r: &TrainReport) -> Vec<(u32, u32, u32)> {
+    r.logs.iter().map(|l| (l.step, l.loss.to_bits(), l.grad_norm.to_bits())).collect()
+}
+
+fn losses(r: &TrainReport) -> Vec<f32> {
+    r.logs.iter().map(|l| l.loss).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * x.abs().max(1.0),
+            "{what}: step {i}: {x} vs {y}"
+        );
+    }
+}
+
+// =========================================================================
+// Single-expert MoE ≡ dense, bitwise — the contract the whole family
+// is anchored to (no gate params at E = 1, capacity clamped to tokens)
+// =========================================================================
+
+#[test]
+fn moe1_top1_matches_dense_bitwise_at_fp32_and_bf16() {
+    // the -moe1 block is the dense block: same parameter count (no gate),
+    // same flat vector, so even the grad-norm span partitioning agrees
+    let dense_spec = BuiltinSpec::parse(DENSE).unwrap();
+    let moe1_spec = BuiltinSpec::parse(MOE1).unwrap();
+    assert_eq!(moe1_spec.total_params(), dense_spec.total_params());
+    for precision in [Dtype::F32, Dtype::Bf16] {
+        for &tp in &[1usize, 2] {
+            let dense = run(DENSE, tp, 2, 1, 2, 20, S0, precision);
+            let moe1 = run(MOE1, tp, 2, 1, 2, 20, S0, precision);
+            assert_eq!(
+                traj(&dense),
+                traj(&moe1),
+                "tp{tp} {}: -moe1 top-1 must equal dense bitwise",
+                precision.name()
+            );
+            // single-expert routing is local arithmetic: no wire, no drops
+            assert_eq!(moe1.moe_a2a_rounds, 0);
+            assert_eq!(moe1.moe_a2a_payload_bytes, 0);
+            assert_eq!(moe1.moe_dropped_tokens, 0);
+        }
+    }
+    // and the dense engine never touches any MoE counter
+    let dense = run(DENSE, 1, 2, 1, 2, 2, S0, Dtype::F32);
+    assert_eq!(
+        (dense.moe_a2a_rounds, dense.moe_a2a_payload_bytes, dense.moe_dropped_tokens),
+        (0, 0, 0)
+    );
+}
+
+// =========================================================================
+// THE acceptance grid: ep ∈ {2, 4} ≡ ep = 1 bitwise at fp32,
+// dp = 4 × tp ∈ {1, 2} × stage ∈ {0, 3}, 20 steps
+// =========================================================================
+
+#[test]
+fn ep_is_trajectory_invariant_bitwise_at_fp32() {
+    for &tp in &[1usize, 2] {
+        for stage in [S0, S3] {
+            let local = run(MOE4, tp, 4, 1, 2, 20, stage, Dtype::F32);
+            assert!(
+                local.final_loss() < local.initial_loss(),
+                "tp{tp} {stage}: the MoE model must learn: {:?}",
+                losses(&local)
+            );
+            for ep in [2usize, 4] {
+                let sharded = run(MOE4, tp, 4, ep, 2, 20, stage, Dtype::F32);
+                let label = format!("tp{tp} stage {stage} ep{ep}");
+                assert_eq!(
+                    traj(&local),
+                    traj(&sharded),
+                    "{label}: expert sharding must not move the fp32 trajectory"
+                );
+                // the data-local dispatch plan is identical at every ep
+                assert_eq!(
+                    local.moe_dropped_tokens, sharded.moe_dropped_tokens,
+                    "{label}: drop accounting must be ep-invariant"
+                );
+                assert!(sharded.moe_a2a_rounds > 0, "{label}: ep > 1 must hit the wire");
+            }
+        }
+    }
+}
+
+#[test]
+fn ep_runs_are_deterministic_across_reruns() {
+    let a = run(MOE4, 1, 4, 2, 2, 10, S2, Dtype::F32);
+    let b = run(MOE4, 1, 4, 2, 2, 10, S2, Dtype::F32);
+    assert_eq!(traj(&a), traj(&b), "the a2a engine must be deterministic");
+    assert_eq!(a.moe_a2a_payload_bytes, b.moe_a2a_payload_bytes);
+    assert_eq!(a.moe_dropped_tokens, b.moe_dropped_tokens);
+}
+
+// =========================================================================
+// a2a wire contracts, pinned EXACTLY against the perf terms
+// =========================================================================
+
+#[test]
+fn a2a_rounds_and_payload_pinned_exactly() {
+    let (n_stages, m, steps, dp) = (2u64, 2u64, 3u32, 4usize);
+    let cap = moe::capacity(TOKENS, TOPK, EXPERTS, 1.25) as u64;
+    assert_eq!(cap, 10, "tiny cap: ceil(1.25 * 16 * 2 / 4)");
+    for ep in [2usize, 4] {
+        let rounds = moe_a2a_rounds_per_step(n_stages, m, 1, dp as u64, ep as u64);
+        for (precision, width) in [(Dtype::F32, 4u64), (Dtype::Bf16, 2u64)] {
+            let r = run(MOE4, 1, dp, ep, m as u32, steps, S0, precision);
+            let label = format!("ep{ep} {}", precision.name());
+            assert_eq!(
+                r.moe_a2a_rounds,
+                steps as u64 * rounds,
+                "{label}: dispatch + combine per chunk per micro-batch per EP column"
+            );
+            assert_eq!(
+                r.moe_a2a_payload_bytes,
+                r.moe_a2a_rounds
+                    * moe_a2a_payload_bytes_per_round(ep as u64, EXPERTS as u64, cap, HIDDEN, width),
+                "{label}: ep² parts of (E/ep)·cap·d elements at the wire width"
+            );
+            // flat mode (nodes = 0): no topology, no tier split
+            assert_eq!((r.moe_a2a_intra_bytes, r.moe_a2a_inter_bytes), (0, 0), "{label}");
+        }
+    }
+    // one literal guard against formula + engine co-drift:
+    // tp·(dp/ep)·n_stages·2·m = 1·2·2·2·2
+    assert_eq!(moe_a2a_rounds_per_step(2, 2, 1, 4, 2), 16);
+    // and the packed-bf16 wire halves the payload exactly
+    let fp32 = run(MOE4, 1, 2, 2, 2, 2, S0, Dtype::F32);
+    let bf16 = run(MOE4, 1, 2, 2, 2, 2, S0, Dtype::Bf16);
+    assert_eq!(2 * bf16.moe_a2a_payload_bytes, fp32.moe_a2a_payload_bytes);
+}
+
+#[test]
+fn a2a_tier_split_pinned_under_packed_placement() {
+    // pp2 × dp4 × tp1 = 8 ranks on 4 nodes (2 per node): each pp row's
+    // EP group spans ranks {4p .. 4p+3} = nodes {2p, 2p, 2p+1, 2p+1} —
+    // of its 12 src≠dst pairs, 4 stay on-node and 8 cross
+    let (n_stages, m, steps, dp, ep, nodes) = (2u64, 2u64, 2u32, 4usize, 4usize, 4u32);
+    let cap = moe::capacity(TOKENS, TOPK, EXPERTS, 1.25) as u64;
+    let mut c = cfg(MOE4, 1, dp, ep, m as u32, steps, S2, Dtype::F32);
+    c.nodes = nodes;
+    let r = train(&c).expect("hierarchical MoE run must succeed");
+    let (intra, inter) = moe_a2a_tier_bytes_per_step(
+        n_stages, m, 2, 1, dp, ep, EXPERTS as u64, cap, HIDDEN, 4, nodes,
+    );
+    assert!(intra > 0 && inter > 0, "the placement must split both ways");
+    assert_eq!(r.moe_a2a_intra_bytes, steps as u64 * intra, "intra-node tier pin");
+    assert_eq!(r.moe_a2a_inter_bytes, steps as u64 * inter, "inter-node tier pin");
+    // the two tiers plus the ep self parts reassemble the full payload
+    let part = (EXPERTS / ep) as u64 * cap * HIDDEN * 4;
+    let self_bytes = r.moe_a2a_rounds * ep as u64 * part;
+    assert_eq!(
+        r.moe_a2a_intra_bytes + r.moe_a2a_inter_bytes + self_bytes,
+        r.moe_a2a_payload_bytes,
+        "tier split + self parts == total payload"
+    );
+    // topology is accounting only: the fp32 wire is value-preserving, so
+    // the hierarchical trajectory equals the flat one bitwise
+    let flat = run(MOE4, 1, dp, ep, m as u32, steps, S2, Dtype::F32);
+    assert_eq!(traj(&flat), traj(&r), "hier ≡ flat at fp32");
+}
+
+// =========================================================================
+// Capacity factor and token-drop accounting
+// =========================================================================
+
+#[test]
+fn tight_capacity_drops_tokens_deterministically_and_ep_invariantly() {
+    // cf = 0.5: cap = ceil(0.5·16·2/4) = 4 slots per expert — the 32
+    // assignments of a micro-batch cannot fit in 16 slots, so at least
+    // 16 drop per scheduled block forward, at ANY ep
+    let mk = |ep: usize, cf: f32| {
+        let mut c = cfg(MOE4, 1, 2, ep, 2, 3, S0, Dtype::F32);
+        c.capacity_factor = cf;
+        train(&c).expect("training must survive drops")
+    };
+    let tight = mk(1, 0.5);
+    assert!(tight.moe_dropped_tokens > 0, "cf 0.5 must overflow capacity");
+    let tight_ep2 = mk(2, 0.5);
+    assert_eq!(
+        tight.moe_dropped_tokens, tight_ep2.moe_dropped_tokens,
+        "the dispatch plan (and its drops) is data-local: identical at every ep"
+    );
+    assert_eq!(traj(&tight), traj(&tight_ep2), "dropped routing stays ep-invariant");
+    // the tightened capacity also shows up on the wire, pinned exactly
+    let cap = moe::capacity(TOKENS, TOPK, EXPERTS, 0.5) as u64;
+    assert_eq!(cap, 4);
+    assert_eq!(
+        tight_ep2.moe_a2a_payload_bytes,
+        tight_ep2.moe_a2a_rounds
+            * moe_a2a_payload_bytes_per_round(2, EXPERTS as u64, cap, HIDDEN, 4),
+        "payload pin at cf = 0.5"
+    );
+    // cf = 2.0 clamps cap to tokens: no expert can overflow (each token
+    // picks an expert at most once), so nothing drops
+    let roomy = mk(2, 2.0);
+    assert_eq!(roomy.moe_dropped_tokens, 0, "cap = tokens cannot drop");
+}
+
+// =========================================================================
+// Shape validation: the divisibility contracts fail fast and name terms
+// =========================================================================
+
+#[test]
+fn ep_misconfigurations_are_rejected_with_targeted_errors() {
+    // ep must divide the expert count
+    let err = train(&cfg(MOE4, 1, 3, 3, 2, 1, S0, Dtype::F32)).unwrap_err().to_string();
+    assert!(err.contains("must divide the bundle's expert count"), "{err}");
+    // ep must divide dp
+    let err = train(&cfg(MOE4, 1, 3, 2, 2, 1, S0, Dtype::F32)).unwrap_err().to_string();
+    assert!(err.contains("EP groups are blocks"), "{err}");
+    // ep > 1 needs a MoE bundle
+    let err = train(&cfg(DENSE, 1, 2, 2, 2, 1, S0, Dtype::F32)).unwrap_err().to_string();
+    assert!(err.contains("needs a MoE bundle"), "{err}");
+    // malformed expert grammar never parses
+    assert!(BuiltinSpec::parse("builtin:tiny-moe0k1-s2-mb2").is_none());
+    assert!(BuiltinSpec::parse("builtin:tiny-moe4k5-s2-mb2").is_none());
+}
+
+// =========================================================================
+// CLI: --experts/--moe-topk rewrite the bundle and train end to end
+// =========================================================================
+
+#[test]
+fn cli_experts_flag_trains_and_reports_the_a2a_wire() {
+    let out = Command::new(env!("CARGO_BIN_EXE_frontier"))
+        .args([
+            "train", "--bundle", DENSE, "--experts", "4", "--moe-topk", "2", "--ep", "2",
+            "--dp", "2", "--steps", "2", "--microbatches", "2", "--log-every", "0",
+        ])
+        .output()
+        .expect("the frontier binary must launch");
+    assert!(
+        out.status.success(),
+        "CLI MoE smoke failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("MoE a2a"), "the report must print the a2a wire:\n{stdout}");
+}
+
+#[test]
+fn cli_expert_misuse_dies_with_targeted_errors() {
+    let run_cli = |extra: &[&str]| {
+        let out = Command::new(env!("CARGO_BIN_EXE_frontier"))
+            .args(["train", "--bundle", DENSE, "--dp", "1", "--steps", "1"])
+            .args(extra)
+            .output()
+            .expect("the frontier binary must launch");
+        assert!(!out.status.success(), "{extra:?} must be rejected");
+        String::from_utf8_lossy(&out.stderr).into_owned()
+    };
+    let err = run_cli(&["--moe-topk", "2"]);
+    assert!(err.contains("--moe-topk needs --experts"), "{err}");
+    let err = run_cli(&["--experts", "4", "--moe-topk", "5"]);
+    assert!(err.contains("1..=experts"), "{err}");
+}
+
+// =========================================================================
+// The full grid: ep ∈ {1,2,4} × stage ∈ {0,2,3} × {fp32, bf16}
+// (CI: `cargo test --features moe-matrix --test moe moe_matrix`)
+// =========================================================================
+
+#[cfg(feature = "moe-matrix")]
+mod moe_matrix {
+    use super::*;
+
+    /// fp32: every (ep, stage) cell equals its ep = 1 reference bitwise.
+    /// bf16: the packed a2a wire quantizes the combine inputs and the
+    /// backward's local recompute re-rounds, so ep > 1 tracks ep = 1
+    /// within a tolerance instead (the fp32 cells carry the bitwise
+    /// contract; the wire-byte pins above stay exact at both widths).
+    fn matrix_cell(stage: ShardingStage, precision: Dtype) {
+        let reference = run(MOE4, 1, 4, 1, 2, 10, stage, precision);
+        assert!(reference.final_loss().is_finite());
+        for ep in [2usize, 4] {
+            let r = run(MOE4, 1, 4, ep, 2, 10, stage, precision);
+            let label = format!("stage {stage} ep{ep} {}", precision.name());
+            match precision {
+                Dtype::F32 => assert_eq!(
+                    traj(&reference),
+                    traj(&r),
+                    "{label}: must match ep = 1 bitwise"
+                ),
+                Dtype::Bf16 => {
+                    assert_close(&losses(&reference), &losses(&r), 0.05, &label);
+                    assert_eq!(r.steps_skipped, 0, "{label}");
+                }
+            }
+            assert_eq!(
+                r.moe_a2a_rounds,
+                10 * moe_a2a_rounds_per_step(2, 2, 1, 4, ep as u64),
+                "{label}: rounds pin holds across the matrix"
+            );
+        }
+    }
+
+    #[test]
+    fn moe_matrix_s0_fp32() {
+        matrix_cell(S0, Dtype::F32);
+    }
+
+    #[test]
+    fn moe_matrix_s2_fp32() {
+        matrix_cell(S2, Dtype::F32);
+    }
+
+    #[test]
+    fn moe_matrix_s3_fp32() {
+        matrix_cell(S3, Dtype::F32);
+    }
+
+    #[test]
+    fn moe_matrix_s0_bf16() {
+        matrix_cell(S0, Dtype::Bf16);
+    }
+
+    #[test]
+    fn moe_matrix_s2_bf16() {
+        matrix_cell(S2, Dtype::Bf16);
+    }
+
+    #[test]
+    fn moe_matrix_s3_bf16() {
+        matrix_cell(S3, Dtype::Bf16);
+    }
+}
