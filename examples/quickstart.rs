@@ -41,45 +41,15 @@ fn main() -> anyhow::Result<()> {
         log_every: 5,
         ..Default::default()
     })?;
-    println!(
-        "loss {:.3} -> {:.3} over {} steps on {} simulated GCDs ({:.0} tokens/s)",
-        report.initial_loss(),
-        report.final_loss(),
-        report.logs.len(),
-        report.world_size,
-        report.tokens_per_sec,
-    );
-    // DP gradient sync overlaps with backward by default (bucketed
-    // nonblocking all-reduce; knobs: `overlap_grad_sync`,
-    // `grad_bucket_floats`, `collective_algo` on EngineConfig) — the
-    // engine measures how much of it stayed hidden:
-    println!(
-        "DP sync {:.2} ms raw, {:.2} ms exposed -> {:.0}% overlapped with backward",
-        report.dp_sync_raw_s() * 1e3,
-        report.dp_sync_exposed_s * 1e3,
-        report.dp_overlap_fraction() * 100.0,
-    );
-    // active dtype + loss scale + measured wire bytes (set
-    // `precision: Dtype::Bf16` on EngineConfig for the mixed-precision
-    // engine: bf16 storage, fp32 masters, half-width collectives)
-    println!(
-        "precision {}: loss scale {}, {:.1} KB grad-bucket payload, {:.1} KB total collective traffic",
-        report.precision.name(),
-        report.final_loss_scale,
-        report.dp_bucket_payload_bytes as f64 / 1e3,
-        report.comm_bytes as f64 / 1e3,
-    );
-    // the active sharding stage and this run's measured shard bytes
-    // (set `zero_stage: ShardingStage::Gradients` / `::Parameters` on
-    // EngineConfig for the ZeRO-2/3 reduce-scatter + on-demand-gather
-    // dataflow — same loss trajectory, sharded residency)
-    println!(
-        "zero stage {} ({}): {:.1} KB optimizer state/rank, {:.1} KB param all-gather payload\n",
-        report.zero_stage.index(),
-        report.zero_stage.name(),
-        report.opt_state_bytes_per_rank as f64 / 1e3,
-        report.dp_param_ag_bytes as f64 / 1e3,
-    );
+    // one shared summary block renders the run (the `train` CLI and
+    // `train_e2e` print the same `TrainReport::render_summary`): loss,
+    // throughput, measured dp-overlap, precision/loss-scale state, and
+    // the ZeRO wire/residency counters.  Knobs behind those lines:
+    // `overlap_grad_sync`/`grad_bucket_floats`/`collective_algo` (DP
+    // sync), `precision: Dtype::Bf16` (mixed precision), `zero_stage:
+    // ShardingStage::Gradients`/`::Parameters` (ZeRO-2/3 dataflow).
+    print!("{}", report.render_summary());
+    println!();
     assert!(report.final_loss() < report.initial_loss(), "loss must decrease");
 
     // ---- 2. the same run, tensor-parallel (§II.B executed for real) ----

@@ -104,6 +104,11 @@ fn main() -> anyhow::Result<()> {
                 .map_err(anyhow::Error::msg)?,
             None => Vec::new(),
         },
+        // observability: --trace-out writes the merged Chrome trace,
+        // --metrics-jsonl streams one JSON object per logged step; either
+        // flag also arms the measured-vs-predicted audit table below
+        trace_out: args.get("trace-out").map(Into::into),
+        metrics_jsonl: args.get("metrics-jsonl").map(Into::into),
         ..Default::default()
     };
 
@@ -132,88 +137,63 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let tail_mean = last_k.iter().sum::<f32>() / last_k.len() as f32;
     println!("\n=== E2E SUMMARY ===");
-    println!("model params      : {}", report.total_params);
-    println!("world             : {} simulated GCDs", report.world_size);
-    println!("tokens/step       : {}", report.tokens_per_step);
-    println!("mean step time    : {:.3} s", report.mean_step_time_s);
-    println!("throughput        : {:.0} tokens/s", report.tokens_per_sec);
-    println!("collective traffic: {:.1} MB", report.comm_bytes as f64 / 1e6);
-    println!(
-        "precision         : {} (loss scale {}, {} skipped steps)",
-        report.precision.name(),
-        report.final_loss_scale,
-        report.steps_skipped
-    );
-    println!(
-        "dp wire           : {:.1} KB grad buckets + {:.1} KB param all-gather",
-        report.dp_bucket_payload_bytes as f64 / 1e3,
-        report.dp_param_ag_bytes as f64 / 1e3
-    );
-    println!(
-        "zero stage        : {} ({}); {:.1} KB optimizer state/rank{}",
-        report.zero_stage.index(),
-        report.zero_stage.name(),
-        report.opt_state_bytes_per_rank as f64 / 1e3,
-        if report.zero3_peak_gathered_floats > 0 {
-            format!(
-                ", peak gathered params {:.1} KB",
-                4.0 * report.zero3_peak_gathered_floats as f64 / 1e3
-            )
-        } else {
-            String::new()
-        }
-    );
-    if report.dp_sync_raw_s() > 0.0 {
-        println!(
-            "dp sync           : {:.1} ms raw, {:.1} ms exposed ({:.0}% overlapped)",
-            report.dp_sync_raw_s() * 1e3,
-            report.dp_sync_exposed_s * 1e3,
-            report.dp_overlap_fraction() * 100.0
+    print!("{}", report.render_summary());
+
+    // ---- divergence audit: span-measured vs PerfModel-predicted ----
+    // The predicted column prices Frontier MI250X hardware while the
+    // measured column is this host's CPU simulation, so absolute ms
+    // differ by construction; the audit is about which terms dominate
+    // and whether the dimensionless fractions (dp overlap, pipeline
+    // bubble) agree between the trace and the engine/analytic forms.
+    if let Some(ts) = &report.trace_summary {
+        use frontier_llm::config::{ModelSpec, ParallelConfig};
+        use frontier_llm::perf::PerfModel;
+        use frontier_llm::runtime::builtin::BuiltinSpec;
+        let (predicted, analytic_bubble) = match BuiltinSpec::parse(&cfg.bundle) {
+            Some(b) => {
+                let v = cfg.schedule.chunks();
+                let pcfg = ParallelConfig {
+                    tp: cfg.tp as u32,
+                    pp: b.n_stages as u32 / v,
+                    dp: cfg.dp as u32,
+                    mbs: b.mbs as u32,
+                    gbs: b.mbs as u32 * cfg.microbatches * cfg.dp as u32,
+                    zero_stage: cfg.zero_stage,
+                    schedule: cfg.schedule,
+                    experts: b.experts as u32,
+                    moe_topk: b.topk as u32,
+                    ep: cfg.ep as u32,
+                    capacity_factor: cfg.capacity_factor,
+                    ..ParallelConfig::default()
+                };
+                let model = ModelSpec::new(
+                    &b.name,
+                    b.n_stages as u32,
+                    b.hidden as u64,
+                    1,
+                    b.vocab as u64,
+                    b.seq as u64,
+                );
+                let bubble =
+                    pcfg.validate().is_ok().then(|| pcfg.bubble_fraction());
+                let bd = PerfModel::new()
+                    .with_dp_overlap(report.dp_overlap_fraction())
+                    .evaluate(&model, &pcfg)
+                    .ok();
+                (bd, bubble)
+            }
+            None => (None, None),
+        };
+        println!("\n=== TRACE AUDIT (measured vs predicted) ===");
+        let rows = frontier_llm::trace::audit(
+            ts,
+            predicted.as_ref(),
+            analytic_bubble,
+            Some(report.dp_overlap_fraction()),
         );
+        print!("{}", frontier_llm::trace::render_audit(&rows));
     }
-    if report.ckpt_save_raw_ms() > 0.0 {
-        println!(
-            "ckpt save         : {:.1} ms exposed, {:.1} ms hidden (saver thread)",
-            report.ckpt_save_exposed_ms, report.ckpt_save_hidden_ms
-        );
-    }
-    let tiered = report.dp_bucket_intra_bytes
-        + report.dp_bucket_inter_bytes
-        + report.dp_param_ag_intra_bytes
-        + report.dp_param_ag_inter_bytes
-        + report.pp_p2p_intra_bytes
-        + report.pp_p2p_inter_bytes;
-    if tiered > 0 {
-        println!(
-            "hier tiers        : grad sync {:.1} KB intra / {:.1} KB inter ({} wire), \
-             param AG {:.1} KB intra / {:.1} KB inter, pp p2p {:.1} KB intra / {:.1} KB inter",
-            report.dp_bucket_intra_bytes as f64 / 1e3,
-            report.dp_bucket_inter_bytes as f64 / 1e3,
-            cfg.effective_grad_wire().name(),
-            report.dp_param_ag_intra_bytes as f64 / 1e3,
-            report.dp_param_ag_inter_bytes as f64 / 1e3,
-            report.pp_p2p_intra_bytes as f64 / 1e3,
-            report.pp_p2p_inter_bytes as f64 / 1e3,
-        );
-    }
-    if report.moe_a2a_rounds > 0 || report.moe_dropped_tokens > 0 {
-        println!(
-            "moe a2a wire      : {} rounds, {:.1} KB routed payload \
-             ({:.1} KB intra / {:.1} KB inter), {} token(s) dropped at capacity",
-            report.moe_a2a_rounds,
-            report.moe_a2a_payload_bytes as f64 / 1e3,
-            report.moe_a2a_intra_bytes as f64 / 1e3,
-            report.moe_a2a_inter_bytes as f64 / 1e3,
-            report.moe_dropped_tokens,
-        );
-    }
-    if report.recovery_events > 0 {
-        println!(
-            "elastic           : {} recovery event(s), {} step(s) lost and recomputed, \
-             finished on {} GCDs",
-            report.recovery_events, report.lost_steps, report.world_size
-        );
-    }
+
     println!("loss              : {first:.4} -> {tail_mean:.4} (tail-10 mean)");
     println!("loss curve        : {out}");
     assert!(

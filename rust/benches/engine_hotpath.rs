@@ -609,6 +609,46 @@ fn main() {
         });
     }
 
+    header("end-to-end engine: tracer overhead, traced vs untraced (dp=2, v=2)");
+    // the zero-overhead-when-off contract, measured: the traced run
+    // records every span AND writes the merged Chrome trace + per-step
+    // JSONL each iteration, and must still land within 3% of the
+    // untraced wall time; the traced run's summary also stamps the
+    // audit's dimensionless terms (dp overlap, bubble fraction) into
+    // BENCH_engine.json meta next to the engine's own numbers
+    let trace_root =
+        std::env::temp_dir().join(format!("fllm-hotpath-trace-{}", std::process::id()));
+    let untraced_cfg = EngineConfig {
+        bundle: "builtin:tiny-s4-mb2".into(),
+        dp: 2,
+        schedule: ScheduleKind::Interleaved1F1B { v: 2 },
+        microbatches: 4,
+        steps: 3,
+        grad_bucket_floats: 256,
+        ..Default::default()
+    };
+    let traced_cfg = EngineConfig {
+        trace_out: Some(trace_root.join("trace.json")),
+        metrics_jsonl: Some(trace_root.join("metrics.jsonl")),
+        ..untraced_cfg.clone()
+    };
+    let untraced = bench("engine::train_dp2_untraced", 1, 5, || {
+        std::hint::black_box(frontier_llm::coordinator::train(&untraced_cfg).unwrap());
+    });
+    let mut traced_report = None;
+    let traced = bench("engine::train_dp2_traced", 1, 5, || {
+        traced_report = Some(frontier_llm::coordinator::train(&traced_cfg).unwrap());
+    });
+    let tracer_overhead_pct = 100.0 * (traced.mean_s / untraced.mean_s - 1.0);
+    record_meta("tracer_overhead_pct", &format!("{tracer_overhead_pct:.2}"));
+    if let Some(ts) = traced_report.as_ref().and_then(|r| r.trace_summary.as_ref()) {
+        record_meta("trace_dp_overlap", &format!("{:.4}", ts.dp_overlap));
+        record_meta("trace_bubble_fraction", &format!("{:.4}", ts.bubble_fraction));
+        record_meta("trace_max_busy_over_wall", &format!("{:.4}", ts.max_busy_over_wall));
+    }
+    let _ = std::fs::remove_dir_all(&trace_root);
+    println!("[tracer overhead: {tracer_overhead_pct:.2}% (contract: < 3%)]");
+
     header("end-to-end engine: tiny GPT artifacts, 2-stage pipeline x dp2");
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Runtime::cpu() {

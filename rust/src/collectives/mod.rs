@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 
 use crate::precision::{pack_bf16, unpack_bf16, Dtype, GradWire};
 use crate::topology::{GpuId, Machine};
+use crate::trace::{self, Category};
 
 /// A deadline-bounded collective wait expired: some peer never showed up.
 ///
@@ -1407,6 +1408,7 @@ impl Group {
         parts: Vec<Vec<f32>>,
         wire: Dtype,
     ) -> Vec<Vec<f32>> {
+        let _s = trace::span(Category::MoeA2a, "all_to_all");
         self.start_all_to_all_dtype(rank, tag, parts, wire).wait()
     }
 }
@@ -1441,6 +1443,8 @@ impl ReduceHandle {
         if let Some(data) = self.immediate {
             return Arc::new(data);
         }
+        // tags inherit from the enclosing span (the drain's chunk lane)
+        let _s = trace::span(Category::DpSync, "reduce_wait");
         let n = self.group.n;
         let deadline = self.group.comm_deadline();
         let tag = self.tag;
@@ -1529,6 +1533,7 @@ impl GatherHandle {
         if let Some(data) = self.immediate {
             return data;
         }
+        let _s = trace::span(Category::ZeroGather, "gather_wait");
         let n = self.group.n;
         let deadline = self.group.comm_deadline();
         let tag = self.tag;
@@ -1588,6 +1593,7 @@ impl AllToAllHandle {
         if let Some(parts) = self.immediate {
             return parts.into_iter().map(Arc::new).collect();
         }
+        let _s = trace::span(Category::MoeA2a, "a2a_wait");
         let n = self.group.n;
         let deadline = self.group.comm_deadline();
         let tag = self.tag;
@@ -1641,6 +1647,7 @@ impl NodeGatherHandle {
         if let Some(data) = self.immediate {
             return data;
         }
+        let _s = trace::span(Category::ZeroGather, "node_gather_wait");
         let n = self.participants;
         let deadline = self.group.comm_deadline();
         let key = self.key;
@@ -1980,10 +1987,13 @@ impl TpComm {
     }
 
     pub fn all_reduce_sum(&self, buf: &mut [f32]) {
+        // solo communicators skip the span too: nothing moves at tp = 1
+        let _s = (self.group.len() > 1).then(|| trace::span(Category::TpComm, "tp_allreduce"));
         self.group.all_reduce_sum_cfg(self.rank, buf, self.algo, self.wire);
     }
 
     pub fn all_reduce_max(&self, buf: &mut [f32]) {
+        let _s = (self.group.len() > 1).then(|| trace::span(Category::TpComm, "tp_allreduce_max"));
         self.group.all_reduce_max_cfg(self.rank, buf, self.algo, self.wire);
     }
 }

@@ -67,6 +67,7 @@ use crate::precision::{CastPolicy, Dtype, GradWire};
 use crate::runtime::{Bundle, BuiltinSpec, Runtime, StageBackend};
 use crate::schedule;
 use crate::topology::{packed_gpu_of, Machine, GPUS_PER_NODE};
+use crate::trace::{self, CounterSet};
 use crate::zero::ShardingStage;
 
 /// Deterministic fault injection (CLI `--fault`): reproduce the failure
@@ -323,6 +324,16 @@ pub struct EngineConfig {
     /// a comma-separated list, at most one fault per step); empty
     /// (default) injects nothing.
     pub faults: Vec<FaultSpec>,
+    /// Write the merged per-rank span timeline here as Chrome Trace
+    /// Event Format JSON after the run (CLI `--trace-out`; one `pid`
+    /// per worker rank, one `tid` per chunk slot — loads in Perfetto).
+    /// `None` (default) records nothing: every instrumentation site is
+    /// a thread-local no-op and the trajectory is bitwise identical.
+    pub trace_out: Option<PathBuf>,
+    /// Stream one self-describing JSON object per step here (CLI
+    /// `--metrics-jsonl`): loss/scale/wall time, per-category trace
+    /// milliseconds, and the per-step delta of every engine counter.
+    pub metrics_jsonl: Option<PathBuf>,
 }
 
 impl Default for EngineConfig {
@@ -358,6 +369,8 @@ impl Default for EngineConfig {
             ckpt_keep: 2,
             comm_timeout_ms: 0,
             faults: Vec::new(),
+            trace_out: None,
+            metrics_jsonl: None,
         }
     }
 }
@@ -372,6 +385,11 @@ impl EngineConfig {
     /// Hierarchical (topology-aware) collectives enabled?
     pub fn hier(&self) -> bool {
         self.nodes >= 1
+    }
+
+    /// Does this run record spans / stream metrics (either export set)?
+    pub fn trace_enabled(&self) -> bool {
+        self.trace_out.is_some() || self.metrics_jsonl.is_some()
     }
 }
 
@@ -520,6 +538,14 @@ pub struct TrainReport {
     /// path: the whole barrier+write+commit on the sync path; only the
     /// barrier + in-memory snapshot hand-off on the async path.
     pub ckpt_save_exposed_ms: f64,
+    /// Aggregated span-timeline summary when the run traced
+    /// (`--trace-out` / `--metrics-jsonl`); `None` on untraced runs.
+    /// Feeds `trace::audit` and the trace block of `render_summary`.
+    pub trace_summary: Option<trace::Summary>,
+    /// Effective gradient wire dtype of the run's inter-node hop
+    /// ([`EngineConfig::effective_grad_wire`]) — recorded so the summary
+    /// renders without the config in hand.
+    pub grad_wire: GradWire,
 }
 
 impl TrainReport {
@@ -546,6 +572,164 @@ impl TrainReport {
     /// Raw (total) checkpoint-save milliseconds: hidden + exposed.
     pub fn ckpt_save_raw_ms(&self) -> f64 {
         self.ckpt_save_hidden_ms + self.ckpt_save_exposed_ms
+    }
+
+    /// The run summary every driver prints (`train`, `quickstart`,
+    /// `train_e2e` all render this one block — the counters print once,
+    /// here, instead of being hand-rolled three times).  Optional lines
+    /// appear only when their subsystem ran; a trace block is appended
+    /// when the run recorded spans.
+    pub fn render_summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let kb = |b: u64| b as f64 / 1e3;
+        writeln!(
+            s,
+            "trained {} params on {} workers: loss {:.4} -> {:.4}",
+            self.total_params,
+            self.world_size,
+            self.initial_loss(),
+            self.final_loss()
+        )
+        .unwrap();
+        writeln!(s, "tokens/step       : {}", self.tokens_per_step).unwrap();
+        writeln!(s, "mean step time    : {:.3} s", self.mean_step_time_s).unwrap();
+        writeln!(s, "throughput        : {:.0} tokens/s", self.tokens_per_sec).unwrap();
+        writeln!(s, "collective traffic: {:.1} MB", self.comm_bytes as f64 / 1e6).unwrap();
+        writeln!(
+            s,
+            "precision         : {} (loss scale {}, {} skipped steps)",
+            self.precision.name(),
+            self.final_loss_scale,
+            self.steps_skipped
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "dp wire           : {:.1} KB grad buckets ({} rounds) + {:.1} KB param all-gather",
+            kb(self.dp_bucket_payload_bytes),
+            self.dp_bucket_rounds,
+            kb(self.dp_param_ag_bytes)
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "zero stage        : {} ({}); {:.1} KB optimizer state/rank{}",
+            self.zero_stage.index(),
+            self.zero_stage.name(),
+            kb(self.opt_state_bytes_per_rank),
+            if self.zero3_peak_gathered_floats > 0 {
+                format!(
+                    ", peak gathered params {:.1} KB (gather-use-drop)",
+                    4.0 * self.zero3_peak_gathered_floats as f64 / 1e3
+                )
+            } else {
+                String::new()
+            }
+        )
+        .unwrap();
+        if self.pp_p2p_payload_bytes > 0 {
+            writeln!(
+                s,
+                "pp p2p wire       : {:.1} KB boundary activation payload ({} wire)",
+                kb(self.pp_p2p_payload_bytes),
+                self.precision.name()
+            )
+            .unwrap();
+        }
+        if self.tp_ar_rounds > 0 {
+            writeln!(
+                s,
+                "tp all-reduce     : {} rounds, {:.1} MB reduced payload",
+                self.tp_ar_rounds,
+                self.tp_ar_bytes as f64 / 1e6
+            )
+            .unwrap();
+        }
+        if self.moe_a2a_rounds > 0 || self.moe_dropped_tokens > 0 {
+            writeln!(
+                s,
+                "moe a2a wire      : {} rounds, {:.1} KB routed payload \
+                 ({:.1} KB intra / {:.1} KB inter), {} token(s) dropped at capacity",
+                self.moe_a2a_rounds,
+                kb(self.moe_a2a_payload_bytes),
+                kb(self.moe_a2a_intra_bytes),
+                kb(self.moe_a2a_inter_bytes),
+                self.moe_dropped_tokens
+            )
+            .unwrap();
+        }
+        let tiered = self.dp_bucket_intra_bytes
+            + self.dp_bucket_inter_bytes
+            + self.dp_param_ag_intra_bytes
+            + self.dp_param_ag_inter_bytes
+            + self.pp_p2p_intra_bytes
+            + self.pp_p2p_inter_bytes;
+        if tiered > 0 {
+            writeln!(
+                s,
+                "hier tiers        : grad sync {:.1} KB intra / {:.1} KB inter ({} wire), \
+                 param AG {:.1} KB intra / {:.1} KB inter, \
+                 pp p2p {:.1} KB intra / {:.1} KB inter",
+                kb(self.dp_bucket_intra_bytes),
+                kb(self.dp_bucket_inter_bytes),
+                self.grad_wire.name(),
+                kb(self.dp_param_ag_intra_bytes),
+                kb(self.dp_param_ag_inter_bytes),
+                kb(self.pp_p2p_intra_bytes),
+                kb(self.pp_p2p_inter_bytes)
+            )
+            .unwrap();
+        }
+        if self.dp_sync_raw_s() > 0.0 {
+            writeln!(
+                s,
+                "dp sync           : {:.1} ms raw, {:.1} ms exposed ({:.0}% overlapped)",
+                self.dp_sync_raw_s() * 1e3,
+                self.dp_sync_exposed_s * 1e3,
+                self.dp_overlap_fraction() * 100.0
+            )
+            .unwrap();
+        }
+        if self.ckpt_save_raw_ms() > 0.0 {
+            writeln!(
+                s,
+                "ckpt save         : {:.1} ms exposed, {:.1} ms hidden (saver thread)",
+                self.ckpt_save_exposed_ms, self.ckpt_save_hidden_ms
+            )
+            .unwrap();
+        }
+        if self.recovery_events > 0 {
+            writeln!(
+                s,
+                "elastic           : {} recovery event(s), {} step(s) lost and recomputed, \
+                 finished on {} workers",
+                self.recovery_events, self.lost_steps, self.world_size
+            )
+            .unwrap();
+        }
+        if let Some(t) = &self.trace_summary {
+            writeln!(
+                s,
+                "trace             : {} spans over {} ranks x {} steps; \
+                 dp overlap {:.0}%, pp bubble {:.1}%, accounting {:.3}x wall",
+                t.events, t.ranks, t.steps, t.dp_overlap * 100.0,
+                t.bubble_fraction * 100.0, t.max_busy_over_wall
+            )
+            .unwrap();
+            let mut cats = String::new();
+            for cat in trace::RECORDED {
+                let ms = t.ms_per_rank_step(cat);
+                if ms > 0.0 {
+                    if !cats.is_empty() {
+                        cats.push_str(", ");
+                    }
+                    write!(cats, "{} {:.2}", cat.name(), ms).unwrap();
+                }
+            }
+            writeln!(s, "trace ms/step/rank: {cats}").unwrap();
+        }
+        s
     }
 }
 
@@ -716,7 +900,12 @@ pub fn train_with_bundle(
     let total_target = resume.start_step + cfg.steps;
     let opt_state_bytes = Arc::new(AtomicU64::new(0));
     let mut logs: Vec<StepLog> = Vec::new();
-    let mut counters = Counters::default();
+    let mut counters = CounterSet::default();
+    // the registry outlives every elastic leg: worker threads of each
+    // world flush their span buffers into it on exit, and the leader
+    // harvests per-step counter snapshots through it
+    let registry = cfg.trace_enabled().then(trace::Registry::new);
+    let mut step_counters: Vec<CounterSet> = Vec::new();
     let mut recovery_events = 0u64;
     let mut lost_steps = 0u64;
     let world_size = loop {
@@ -740,11 +929,23 @@ pub fn train_with_bundle(
             );
         }
         attempt.steps = pending_join.unwrap_or(total_target) - resume.start_step;
-        let run = run_world(&attempt, &rt, &bundle, &sched, pp, v, &resume, &opt_state_bytes)?;
+        let run = run_world(
+            &attempt,
+            &rt,
+            &bundle,
+            &sched,
+            pp,
+            v,
+            &resume,
+            &opt_state_bytes,
+            registry.as_ref(),
+            counters,
+        )?;
         counters.add(&run.c);
         match run.failure {
             None => {
                 logs.extend(run.logs);
+                step_counters.extend(run.step_counters);
                 match pending_join {
                     Some(join_step) => {
                         // grow: dp+1 resumes from the leg-final checkpoint
@@ -797,12 +998,51 @@ pub fn train_with_bundle(
                 };
                 // steps the failed leg completed beyond the recovery point
                 // are recomputed by the new world — the fault's step cost
-                let (kept, lost): (Vec<_>, Vec<_>) =
-                    run.logs.into_iter().partition(|l| l.step < resume.start_step);
-                lost_steps += lost.len() as u64;
-                logs.extend(kept);
+                // (counter snapshots stay zipped with the kept logs)
+                let total = run.logs.len();
+                let mut kept = 0usize;
+                for (i, l) in run.logs.into_iter().enumerate() {
+                    if l.step < resume.start_step {
+                        if let Some(sc) = run.step_counters.get(i) {
+                            step_counters.push(*sc);
+                        }
+                        logs.push(l);
+                        kept += 1;
+                    }
+                }
+                lost_steps += (total - kept) as u64;
             }
         }
+    };
+
+    // ---- trace export -----------------------------------------------------
+    // Merge every rank's span buffer (all elastic legs flushed into the
+    // one registry) into the Chrome trace, and difference the per-step
+    // counter snapshots into the JSONL stream.
+    let trace_summary = match &registry {
+        Some(reg) => {
+            if let Some(path) = &cfg.trace_out {
+                reg.write_chrome_trace(path)
+                    .with_context(|| format!("writing chrome trace to {path:?}"))?;
+            }
+            if let Some(path) = &cfg.metrics_jsonl {
+                let metas: Vec<trace::StepMeta> = logs
+                    .iter()
+                    .map(|l| trace::StepMeta {
+                        step: l.step,
+                        loss: l.loss,
+                        grad_norm: l.grad_norm,
+                        loss_scale: l.loss_scale,
+                        skipped: l.skipped,
+                        step_time_s: l.step_time_s,
+                    })
+                    .collect();
+                reg.write_metrics_jsonl(path, &metas, &step_counters, &counters)
+                    .with_context(|| format!("writing metrics jsonl to {path:?}"))?;
+            }
+            Some(reg.summarize())
+        }
+        None => None,
     };
 
     let tokens_per_step =
@@ -850,6 +1090,8 @@ pub fn train_with_bundle(
         lost_steps,
         ckpt_save_hidden_ms: counters.ckpt_hidden_ns as f64 / 1e6,
         ckpt_save_exposed_ms: counters.ckpt_exposed_ns as f64 / 1e6,
+        trace_summary,
+        grad_wire: cfg.effective_grad_wire(),
         logs,
     })
 }
@@ -951,72 +1193,21 @@ impl RunFailure {
     }
 }
 
-/// Byte/round/time counters harvested from one world's collective groups;
-/// legs of an elastic run sum (peaks take the max).
-#[derive(Debug, Default, Clone, Copy)]
-struct Counters {
-    comm_bytes: u64,
-    tp_ar_bytes: u64,
-    tp_ar_rounds: u64,
-    dp_sync_hidden_ns: u64,
-    dp_sync_exposed_ns: u64,
-    dp_bucket_rounds: u64,
-    dp_bucket_payload_bytes: u64,
-    dp_param_ag_bytes: u64,
-    pp_p2p_payload_bytes: u64,
-    dp_bucket_intra_bytes: u64,
-    dp_bucket_inter_bytes: u64,
-    dp_param_ag_intra_bytes: u64,
-    dp_param_ag_inter_bytes: u64,
-    pp_p2p_intra_bytes: u64,
-    pp_p2p_inter_bytes: u64,
-    moe_a2a_rounds: u64,
-    moe_a2a_payload_bytes: u64,
-    moe_a2a_intra_bytes: u64,
-    moe_a2a_inter_bytes: u64,
-    moe_dropped_tokens: u64,
-    zero3_peak_gathered_floats: u64,
-    ckpt_hidden_ns: u64,
-    ckpt_exposed_ns: u64,
-}
-
-impl Counters {
-    fn add(&mut self, o: &Counters) {
-        self.comm_bytes += o.comm_bytes;
-        self.tp_ar_bytes += o.tp_ar_bytes;
-        self.tp_ar_rounds += o.tp_ar_rounds;
-        self.dp_sync_hidden_ns += o.dp_sync_hidden_ns;
-        self.dp_sync_exposed_ns += o.dp_sync_exposed_ns;
-        self.dp_bucket_rounds += o.dp_bucket_rounds;
-        self.dp_bucket_payload_bytes += o.dp_bucket_payload_bytes;
-        self.dp_param_ag_bytes += o.dp_param_ag_bytes;
-        self.pp_p2p_payload_bytes += o.pp_p2p_payload_bytes;
-        self.dp_bucket_intra_bytes += o.dp_bucket_intra_bytes;
-        self.dp_bucket_inter_bytes += o.dp_bucket_inter_bytes;
-        self.dp_param_ag_intra_bytes += o.dp_param_ag_intra_bytes;
-        self.dp_param_ag_inter_bytes += o.dp_param_ag_inter_bytes;
-        self.pp_p2p_intra_bytes += o.pp_p2p_intra_bytes;
-        self.pp_p2p_inter_bytes += o.pp_p2p_inter_bytes;
-        self.moe_a2a_rounds += o.moe_a2a_rounds;
-        self.moe_a2a_payload_bytes += o.moe_a2a_payload_bytes;
-        self.moe_a2a_intra_bytes += o.moe_a2a_intra_bytes;
-        self.moe_a2a_inter_bytes += o.moe_a2a_inter_bytes;
-        self.moe_dropped_tokens += o.moe_dropped_tokens;
-        self.zero3_peak_gathered_floats =
-            self.zero3_peak_gathered_floats.max(o.zero3_peak_gathered_floats);
-        self.ckpt_hidden_ns += o.ckpt_hidden_ns;
-        self.ckpt_exposed_ns += o.ckpt_exposed_ns;
-    }
-}
-
 /// One world: spawned, run to completion or first fault, harvested.
+/// Counters live in [`trace::CounterSet`] — the registry-owned snapshot
+/// type `TrainReport` totals and the JSONL stream difference per step.
 struct WorldRun {
     logs: Vec<StepLog>,
     world_size: usize,
     /// `None` on a clean leg; the distinguished fault otherwise.  Real
     /// worker errors (I/O, asserts) propagate as `Err` instead.
     failure: Option<RunFailure>,
-    c: Counters,
+    c: CounterSet,
+    /// When tracing: one *absolute* counter snapshot per entry of
+    /// `logs`, harvested by the leader right after logging the step
+    /// (includes the `base` totals of earlier elastic legs, so legs
+    /// concatenate without re-basing).  Empty when tracing is off.
+    step_counters: Vec<CounterSet>,
 }
 
 /// Suppress the default panic printout for [`PeerLost`] panics: they are
@@ -1036,7 +1227,10 @@ fn install_peer_lost_hook() {
 }
 
 /// Spawn and run one full world at `cfg.dp`, harvesting logs, counters,
-/// and the distinguished fault (if any) from the worker joins.
+/// and the distinguished fault (if any) from the worker joins.  With a
+/// `registry` the workers record spans into it and the leader snapshots
+/// the counters after every logged step (`base` re-bases the snapshots
+/// onto the totals of earlier elastic legs).
 #[allow(clippy::too_many_arguments)]
 fn run_world(
     cfg: &EngineConfig,
@@ -1047,6 +1241,8 @@ fn run_world(
     v: usize,
     resume: &ResumePoint,
     opt_state_bytes: &Arc<AtomicU64>,
+    registry: Option<&Arc<trace::Registry>>,
+    base: CounterSet,
 ) -> Result<WorldRun> {
     let dp = cfg.dp;
     let tp = cfg.tp;
@@ -1208,6 +1404,7 @@ fn run_world(
                     } else {
                         None
                     },
+                    trace: registry.cloned(),
                 };
                 handles.push(
                     thread::Builder::new()
@@ -1221,10 +1418,55 @@ fn run_world(
     drop(loss_tx);
     drop(save_tx); // the workers hold the only live snapshot senders
 
+    // counter harvest (relaxed atomics — exact once the workers have
+    // joined; mid-run reads are the leader's per-step snapshots, whose
+    // tail drift the JSONL writer closes against the final totals).
+    // TP subgroup ring traffic flows through the world mailboxes, so
+    // world.bytes_moved already includes its wire bytes; the subgroup
+    // counters track the logical all-reduce payload separately.
+    let sum_dp = |f: fn(&Group) -> &AtomicU64| {
+        dp_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
+    };
+    let sum_ep = |f: fn(&Group) -> &AtomicU64| {
+        ep_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
+    };
+    let harvest = || CounterSet {
+        comm_bytes: world.bytes_moved.load(Ordering::Relaxed)
+            + sum_dp(|g| &g.bytes_moved)
+            + sum_ep(|g| &g.bytes_moved),
+        tp_ar_bytes: tp_groups.iter().map(|g| g.ar_bytes.load(Ordering::Relaxed)).sum(),
+        tp_ar_rounds: tp_groups.iter().map(|g| g.ar_rounds.load(Ordering::Relaxed)).sum(),
+        dp_sync_hidden_ns: sum_dp(|g| &g.nb_hidden_ns),
+        dp_sync_exposed_ns: sum_dp(|g| &g.nb_exposed_ns),
+        dp_bucket_rounds: sum_dp(|g| &g.nb_rounds),
+        dp_bucket_payload_bytes: sum_dp(|g| &g.nb_payload_bytes),
+        dp_param_ag_bytes: sum_dp(|g| &g.ag_payload_bytes),
+        pp_p2p_payload_bytes: world.pp_payload_bytes.load(Ordering::Relaxed),
+        dp_bucket_intra_bytes: sum_dp(|g| &g.nb_intra_bytes),
+        dp_bucket_inter_bytes: sum_dp(|g| &g.nb_inter_bytes),
+        dp_param_ag_intra_bytes: sum_dp(|g| &g.ag_intra_bytes),
+        dp_param_ag_inter_bytes: sum_dp(|g| &g.ag_inter_bytes),
+        pp_p2p_intra_bytes: world.pp_intra_bytes.load(Ordering::Relaxed),
+        pp_p2p_inter_bytes: world.pp_inter_bytes.load(Ordering::Relaxed),
+        moe_a2a_rounds: sum_ep(|g| &g.a2a_rounds),
+        moe_a2a_payload_bytes: sum_ep(|g| &g.a2a_payload_bytes),
+        moe_a2a_intra_bytes: sum_ep(|g| &g.a2a_intra_bytes),
+        moe_a2a_inter_bytes: sum_ep(|g| &g.a2a_inter_bytes),
+        moe_dropped_tokens: moe_dropped.load(Ordering::Relaxed),
+        zero3_peak_gathered_floats: dp_groups
+            .iter()
+            .map(|g| g.ag_peak_floats.load(Ordering::Relaxed))
+            .max()
+            .unwrap_or(0),
+        ckpt_hidden_ns: save_ctx.as_ref().map_or(0, |s| s.hidden_ns.load(Ordering::Relaxed)),
+        ckpt_exposed_ns: save_ctx.as_ref().map_or(0, |s| s.exposed_ns.load(Ordering::Relaxed)),
+    };
+
     // leader: collect per-step losses as they stream in.  The channel
     // closes when the reporting worker exits — cleanly, by injected kill,
     // or by PeerLost panic — so this loop can never outlive a fault.
     let mut logs: Vec<StepLog> = Vec::with_capacity(cfg.steps as usize);
+    let mut step_counters: Vec<CounterSet> = Vec::new();
     let start = std::time::Instant::now();
     let mut last = 0.0f64;
     while let Ok((step, loss, grad_norm, loss_scale, skipped)) = loss_rx.recv() {
@@ -1238,6 +1480,11 @@ fn run_world(
             );
         }
         logs.push(StepLog { step, loss, grad_norm, step_time_s: dt, loss_scale, skipped });
+        if registry.is_some() {
+            let mut snap = harvest();
+            snap.add(&base);
+            step_counters.push(snap);
+        }
     }
 
     // harvest every join before deciding the outcome: an injected kill
@@ -1277,45 +1524,6 @@ fn run_world(
         return Err(e);
     }
 
-    // TP subgroup ring traffic flows through the world mailboxes, so
-    // world.bytes_moved already includes its wire bytes; the subgroup
-    // counters track the logical all-reduce payload separately.
-    let sum_dp = |f: fn(&Group) -> &AtomicU64| {
-        dp_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
-    };
-    let sum_ep = |f: fn(&Group) -> &AtomicU64| {
-        ep_groups.iter().map(|g| f(g).load(Ordering::Relaxed)).sum::<u64>()
-    };
-    let c = Counters {
-        comm_bytes: world.bytes_moved.load(Ordering::Relaxed)
-            + sum_dp(|g| &g.bytes_moved)
-            + sum_ep(|g| &g.bytes_moved),
-        tp_ar_bytes: tp_groups.iter().map(|g| g.ar_bytes.load(Ordering::Relaxed)).sum(),
-        tp_ar_rounds: tp_groups.iter().map(|g| g.ar_rounds.load(Ordering::Relaxed)).sum(),
-        dp_sync_hidden_ns: sum_dp(|g| &g.nb_hidden_ns),
-        dp_sync_exposed_ns: sum_dp(|g| &g.nb_exposed_ns),
-        dp_bucket_rounds: sum_dp(|g| &g.nb_rounds),
-        dp_bucket_payload_bytes: sum_dp(|g| &g.nb_payload_bytes),
-        dp_param_ag_bytes: sum_dp(|g| &g.ag_payload_bytes),
-        pp_p2p_payload_bytes: world.pp_payload_bytes.load(Ordering::Relaxed),
-        dp_bucket_intra_bytes: sum_dp(|g| &g.nb_intra_bytes),
-        dp_bucket_inter_bytes: sum_dp(|g| &g.nb_inter_bytes),
-        dp_param_ag_intra_bytes: sum_dp(|g| &g.ag_intra_bytes),
-        dp_param_ag_inter_bytes: sum_dp(|g| &g.ag_inter_bytes),
-        pp_p2p_intra_bytes: world.pp_intra_bytes.load(Ordering::Relaxed),
-        pp_p2p_inter_bytes: world.pp_inter_bytes.load(Ordering::Relaxed),
-        moe_a2a_rounds: sum_ep(|g| &g.a2a_rounds),
-        moe_a2a_payload_bytes: sum_ep(|g| &g.a2a_payload_bytes),
-        moe_a2a_intra_bytes: sum_ep(|g| &g.a2a_intra_bytes),
-        moe_a2a_inter_bytes: sum_ep(|g| &g.a2a_inter_bytes),
-        moe_dropped_tokens: moe_dropped.load(Ordering::Relaxed),
-        zero3_peak_gathered_floats: dp_groups
-            .iter()
-            .map(|g| g.ag_peak_floats.load(Ordering::Relaxed))
-            .max()
-            .unwrap_or(0),
-        ckpt_hidden_ns: save_ctx.as_ref().map_or(0, |s| s.hidden_ns.load(Ordering::Relaxed)),
-        ckpt_exposed_ns: save_ctx.as_ref().map_or(0, |s| s.exposed_ns.load(Ordering::Relaxed)),
-    };
-    Ok(WorldRun { logs, world_size, failure, c })
+    let c = harvest();
+    Ok(WorldRun { logs, world_size, failure, c, step_counters })
 }

@@ -61,6 +61,7 @@ use crate::precision::{pack_bf16, unpack_bf16, Dtype, GradWire, LossScaler};
 use crate::runtime::{Bundle, BuiltinSpec, ParamsHandle, Runtime, StageExecutables};
 use crate::schedule::{Op, Schedule};
 use crate::topology::packed_gpu_of;
+use crate::trace::{self, Category};
 use crate::zero::DistOptimizer;
 
 use super::{checkpoint, EngineConfig, FaultSpec, KilledByFault};
@@ -123,6 +124,9 @@ pub struct WorkerCtx {
     /// Only the (last-rank, dp=0, tp=0) worker reports losses:
     /// (step, loss, grad norm, post-update loss scale, skipped).
     pub loss_tx: Option<mpsc::Sender<(u32, f32, f32, f32, bool)>>,
+    /// Span registry when the run traces (`--trace-out` /
+    /// `--metrics-jsonl`); `None` keeps every span site a no-op.
+    pub trace: Option<Arc<trace::Registry>>,
 }
 
 const TAG_FWD: u64 = 1;
@@ -293,6 +297,15 @@ fn finalize_and_launch(
     if ctx.dp == 1 {
         return ChunkSync::AllReduce(Vec::new());
     }
+    // the op names are load-bearing: trace::Registry::summarize
+    // classifies dp overlap from them (hidden launches vs exposed
+    // launches + drains), cross-checked against the timers below
+    let _s = trace::span_cm(
+        Category::DpSync,
+        if hidden { "dp_launch_hidden" } else { "dp_launch_exposed" },
+        c as u32,
+        trace::TAG_NONE,
+    );
     let t0 = Instant::now();
     // topology-aware runs route every bucket through the two-tier path,
     // the configured grad wire shaping only the inter-node hop
@@ -404,6 +417,7 @@ fn send_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, y: 
     if dest_rank == ctx.pp_rank {
         local.acts.insert((dest_chunk, mb), y);
     } else {
+        let _s = trace::span_cm(Category::PpP2p, "send_act", dest_chunk as u32, mb as u32);
         let dest = ctx.world_rank_of(dest_rank);
         let payload = p2p_pack(ctx, dest, y);
         ctx.world.send_tagged(ctx.world_rank(), dest, tag(TAG_FWD, dest_chunk, mb), payload);
@@ -417,6 +431,9 @@ fn recv_act(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize) -> 
     if src_rank == ctx.pp_rank {
         local.acts.remove(&(chunk, mb)).expect("local activation present")
     } else {
+        // recv_* spans are the pipeline-stall signal: their self time is
+        // the measured bubble numerator in trace::Registry::summarize
+        let _s = trace::span_cm(Category::PpP2p, "recv_act", chunk as u32, mb as u32);
         let raw = ctx.world.recv_tagged(
             ctx.world_rank(),
             ctx.world_rank_of(src_rank),
@@ -434,6 +451,7 @@ fn send_grad(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize, gx
     if dest_rank == ctx.pp_rank {
         local.grads.insert((dest_chunk, mb), gx);
     } else {
+        let _s = trace::span_cm(Category::PpP2p, "send_grad", dest_chunk as u32, mb as u32);
         let dest = ctx.world_rank_of(dest_rank);
         let payload = p2p_pack(ctx, dest, gx);
         ctx.world.send_tagged(ctx.world_rank(), dest, tag(TAG_BWD, dest_chunk, mb), payload);
@@ -447,6 +465,7 @@ fn recv_grad(ctx: &WorkerCtx, local: &mut LocalChannels, g: usize, mb: usize) ->
     if src_rank == ctx.pp_rank {
         local.grads.remove(&(chunk, mb)).expect("local gradient present")
     } else {
+        let _s = trace::span_cm(Category::PpP2p, "recv_grad", chunk as u32, mb as u32);
         let raw = ctx.world.recv_tagged(
             ctx.world_rank(),
             ctx.world_rank_of(src_rank),
@@ -648,6 +667,10 @@ impl Zero3Gathers {
 
 /// Worker main loop.
 pub fn run(ctx: WorkerCtx) -> Result<()> {
+    // RAII tracer install: spans recorded anywhere on this thread land in
+    // the registry; the guard flushes the buffer on every exit path
+    // (clean return, Err, injected-kill, PeerLost unwind)
+    let _trace = ctx.trace.as_ref().map(|r| r.install(ctx.world_rank()));
     let meta = &ctx.bundle.meta;
     let k = ctx.k();
     let single = k == 1;
@@ -851,6 +874,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
 
     for rel_step in 0..ctx.cfg.steps {
         let step = ctx.start_step + rel_step;
+        trace::step_mark(step);
         // deterministic fault injection: die at the top of the step,
         // before any collective — the step boundary is the only point
         // where a death can never tear a checkpoint (saves are barrier-
@@ -917,8 +941,16 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             let gathered_view: ParamsHandle;
             let pbuf: &ParamsHandle = match z3.as_mut() {
                 Some(z) if uses_params => {
-                    gathered_view =
-                        ParamsHandle::Host(z.acquire(&ctx, &params, &full_len, step, c));
+                    let full = {
+                        let _s = trace::span_cm(
+                            Category::ZeroGather,
+                            "z3_acquire",
+                            c as u32,
+                            op.mb(),
+                        );
+                        z.acquire(&ctx, &params, &full_len, step, c)
+                    };
+                    gathered_view = ParamsHandle::Host(full);
                     &gathered_view
                 }
                 _ => &handles[c],
@@ -928,14 +960,18 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     let mb = mb as usize;
                     if g == 0 {
                         let tokens = stash_tok[mb].as_ref().unwrap();
-                        let y = stage.fwd_first_ctx(
-                            &ctx.rt,
-                            pbuf,
-                            &comm,
-                            tokens,
-                            dims,
-                            &moe_fwd_ctx(&ctx, step, c, mb),
-                        )?;
+                        let y = {
+                            let _s =
+                                trace::span_cm(Category::Compute, "fwd_first", c as u32, mb as u32);
+                            stage.fwd_first_ctx(
+                                &ctx.rt,
+                                pbuf,
+                                &comm,
+                                tokens,
+                                dims,
+                                &moe_fwd_ctx(&ctx, step, c, mb),
+                            )?
+                        };
                         send_act(&ctx, &mut local, g, mb, y);
                     } else if g == k - 1 {
                         // head chunk: stash the incoming activation; the
@@ -944,14 +980,18 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         stash_x[c][mb] = Some(x);
                     } else {
                         let x = recv_act(&ctx, &mut local, g, mb);
-                        let y = stage.fwd_mid_ctx(
-                            &ctx.rt,
-                            pbuf,
-                            &comm,
-                            &x,
-                            dims,
-                            &moe_fwd_ctx(&ctx, step, c, mb),
-                        )?;
+                        let y = {
+                            let _s =
+                                trace::span_cm(Category::Compute, "fwd_mid", c as u32, mb as u32);
+                            stage.fwd_mid_ctx(
+                                &ctx.rt,
+                                pbuf,
+                                &comm,
+                                &x,
+                                dims,
+                                &moe_fwd_ctx(&ctx, step, c, mb),
+                            )?
+                        };
                         stash_x[c][mb] = Some(x);
                         send_act(&ctx, &mut local, g, mb, y);
                     }
@@ -962,15 +1002,23 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                         // fused fwd+bwd: (flat, tokens, targets) -> (gflat, loss)
                         let tokens = stash_tok[mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let (mut gp, loss) = stage.bwd_single_ctx(
-                            &ctx.rt,
-                            pbuf,
-                            &comm,
-                            &tokens,
-                            &targets,
-                            dims,
-                            &moe_fwd_ctx(&ctx, step, c, mb),
-                        )?;
+                        let (mut gp, loss) = {
+                            let _s = trace::span_cm(
+                                Category::Compute,
+                                "bwd_single",
+                                c as u32,
+                                mb as u32,
+                            );
+                            stage.bwd_single_ctx(
+                                &ctx.rt,
+                                pbuf,
+                                &comm,
+                                &tokens,
+                                &targets,
+                                dims,
+                                &moe_fwd_ctx(&ctx, step, c, mb),
+                            )?
+                        };
                         if scale != 1.0 {
                             gp.iter_mut().for_each(|x| *x *= scale);
                         }
@@ -979,15 +1027,19 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     } else if g == k - 1 {
                         let x = stash_x[c][mb].take().unwrap();
                         let targets = stash_tgt[mb].take().unwrap();
-                        let (mut gp, mut gx, loss) = stage.bwd_last_ctx(
-                            &ctx.rt,
-                            pbuf,
-                            &comm,
-                            &x,
-                            &targets,
-                            dims,
-                            &moe_fwd_ctx(&ctx, step, c, mb),
-                        )?;
+                        let (mut gp, mut gx, loss) = {
+                            let _s =
+                                trace::span_cm(Category::Compute, "bwd_last", c as u32, mb as u32);
+                            stage.bwd_last_ctx(
+                                &ctx.rt,
+                                pbuf,
+                                &comm,
+                                &x,
+                                &targets,
+                                dims,
+                                &moe_fwd_ctx(&ctx, step, c, mb),
+                            )?
+                        };
                         // loss scaling enters at the source: the head
                         // stage's own grads and the gradient it sends
                         // upstream (everything upstream scales through
@@ -1002,12 +1054,20 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                     } else if g == 0 {
                         let gy = recv_grad(&ctx, &mut local, g, mb);
                         let tokens = stash_tok[mb].take().unwrap();
-                        let gp = stage.bwd_first(&ctx.rt, pbuf, &comm, &tokens, &gy, dims)?;
+                        let gp = {
+                            let _s =
+                                trace::span_cm(Category::Compute, "bwd_first", c as u32, mb as u32);
+                            stage.bwd_first(&ctx.rt, pbuf, &comm, &tokens, &gy, dims)?
+                        };
                         accumulate(&mut grad_accum[c], &gp);
                     } else {
                         let gy = recv_grad(&ctx, &mut local, g, mb);
                         let x = stash_x[c][mb].take().unwrap();
-                        let (gp, gx) = stage.bwd_mid(&ctx.rt, pbuf, &comm, &x, &gy, dims)?;
+                        let (gp, gx) = {
+                            let _s =
+                                trace::span_cm(Category::Compute, "bwd_mid", c as u32, mb as u32);
+                            stage.bwd_mid(&ctx.rt, pbuf, &comm, &x, &gy, dims)?
+                        };
                         accumulate(&mut grad_accum[c], &gp);
                         send_grad(&ctx, &mut local, g, mb, gx);
                     }
@@ -1075,6 +1135,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
             .unwrap_or(1.0);
         for c in 0..ctx.v {
             if ctx.dp > 1 {
+                let _s = trace::span_cm(Category::DpSync, "dp_drain", c as u32, trace::TAG_NONE);
                 let inv_dp = 1.0 / ctx.dp as f32;
                 let t0 = Instant::now();
                 match &mut syncs[c] {
@@ -1123,8 +1184,11 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
                 grad_accum.iter().any(|g| g.iter().any(|x| !x.is_finite()))
             };
             let mut flag = vec![if local_overflow { 1.0f32 } else { 0.0 }];
-            ctx.world
-                .all_reduce_sum(ctx.world_rank(), &mut flag, ctx.cfg.collective_algo);
+            {
+                let _s = trace::span(Category::DpSync, "scaler_agree");
+                ctx.world
+                    .all_reduce_sum(ctx.world_rank(), &mut flag, ctx.cfg.collective_algo);
+            }
             skipped = scaler.update(flag[0] > 0.0);
             if !skipped && scale != 1.0 {
                 let inv = 1.0 / scale;
@@ -1182,6 +1246,7 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         let last_step = rel_step + 1 == ctx.cfg.steps;
         if let Some(save) = ctx.save.clone() {
             if (every > 0 && (rel_step + 1) % every == 0) || last_step {
+                let _s = trace::span(Category::Checkpoint, "ckpt_save");
                 let t0 = Instant::now();
                 let ckpt_step = step + 1;
                 let staging = checkpoint::staging_dir(&save.root, ckpt_step);
@@ -1320,8 +1385,11 @@ pub fn run(ctx: WorkerCtx) -> Result<()> {
         // loss reporting: mean across micro-batches, then across DP
         if owns_head {
             let mut l = vec![loss_sum * inv_m];
-            ctx.dp_group
-                .all_reduce_sum(ctx.dp_rank, &mut l, ctx.cfg.collective_algo);
+            {
+                let _s = trace::span(Category::DpSync, "loss_allreduce");
+                ctx.dp_group
+                    .all_reduce_sum(ctx.dp_rank, &mut l, ctx.cfg.collective_algo);
+            }
             let mean_loss = l[0] / ctx.dp as f32;
             if let Some(tx) = &ctx.loss_tx {
                 tx.send((step, mean_loss, grad_norm, scaler.scale(), skipped))

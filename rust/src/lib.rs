@@ -42,5 +42,6 @@ pub mod precision;
 pub mod runtime;
 pub mod schedule;
 pub mod topology;
+pub mod trace;
 pub mod util;
 pub mod zero;

@@ -45,6 +45,7 @@ COMMANDS:
            [--async-checkpoint] [--ckpt-keep N] [--comm-timeout-ms MS]
            [--experts N] [--moe-topk K] [--capacity-factor F] [--ep N]
            [--fault kill@S:R|join@S|ckpt-crash@S:R|write-fail@S:R:N[,...]]
+           [--trace-out FILE] [--metrics-jsonl FILE]
 
   --tp N shards every builtin stage across N tensor-parallel worker
   threads (Megatron column/row-parallel linears, vocab-parallel embed and
@@ -123,6 +124,16 @@ COMMANDS:
   snapshots params/opt state at the barrier and persists on a
   background saver thread so the step loop resumes immediately —
   saved bytes and trajectories stay bitwise-identical to sync saves.
+
+  --trace-out FILE records per-rank spans (compute, tp/dp/pp/zero/moe
+  collectives, optimizer, checkpoint) and merges them into one Chrome
+  Trace Event Format JSON after training — load it in Perfetto or
+  chrome://tracing (one pid per worker rank, one tid per chunk lane).
+  --metrics-jsonl FILE streams one self-describing JSON object per
+  logged step: loss, grad norm, loss scale, step wall time, per-category
+  trace milliseconds, and the delta of every TrainReport counter.
+  Tracing is observational only: trajectories and all payload counters
+  stay bitwise identical with tracing on or off.
 
   Quickstart:
 
@@ -538,114 +549,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             Some(s) => FaultSpec::parse_list(s).map_err(anyhow::Error::msg)?,
             None => Vec::new(),
         },
+        trace_out: args.get("trace-out").map(Into::into),
+        metrics_jsonl: args.get("metrics-jsonl").map(Into::into),
     };
     let report = train(&cfg)?;
-    println!(
-        "\ntrained {} params on {} workers: loss {:.4} -> {:.4}",
-        report.total_params,
-        report.world_size,
-        report.initial_loss(),
-        report.final_loss()
-    );
-    println!(
-        "  {:.3} s/step, {:.0} tokens/s, {:.1} MB moved through collectives",
-        report.mean_step_time_s,
-        report.tokens_per_sec,
-        report.comm_bytes as f64 / 1e6
-    );
-    println!(
-        "  precision {}: loss scale {} ({} overflow-skipped steps), \
-         {:.1} KB DP grad payload/run{}",
-        report.precision.name(),
-        report.final_loss_scale,
-        report.steps_skipped,
-        report.dp_bucket_payload_bytes as f64 / 1e3,
-        if report.dp_param_ag_bytes > 0 {
-            format!(" + {:.1} KB ZeRO-1 param all-gather", report.dp_param_ag_bytes as f64 / 1e3)
-        } else {
-            String::new()
-        }
-    );
-    println!(
-        "  zero stage {} ({}): {:.1} KB optimizer state/rank{}",
-        report.zero_stage.index(),
-        report.zero_stage.name(),
-        report.opt_state_bytes_per_rank as f64 / 1e3,
-        if report.zero3_peak_gathered_floats > 0 {
-            format!(
-                ", peak gathered params {:.1} KB (gather-use-drop)",
-                4.0 * report.zero3_peak_gathered_floats as f64 / 1e3
-            )
-        } else {
-            String::new()
-        }
-    );
-    if report.pp_p2p_payload_bytes > 0 {
-        println!(
-            "  PP p2p: {:.1} KB boundary activation payload ({} wire)",
-            report.pp_p2p_payload_bytes as f64 / 1e3,
-            report.precision.name()
-        );
-    }
-    if report.tp_ar_rounds > 0 {
-        println!(
-            "  TP: {} all-reduce rounds, {:.1} MB reduced payload",
-            report.tp_ar_rounds,
-            report.tp_ar_bytes as f64 / 1e6
-        );
-    }
-    if report.moe_a2a_rounds > 0 || report.moe_dropped_tokens > 0 {
-        println!(
-            "  MoE a2a: {} rounds, {:.1} KB routed payload \
-             ({:.1} KB intra / {:.1} KB inter), {} token(s) dropped at capacity",
-            report.moe_a2a_rounds,
-            report.moe_a2a_payload_bytes as f64 / 1e3,
-            report.moe_a2a_intra_bytes as f64 / 1e3,
-            report.moe_a2a_inter_bytes as f64 / 1e3,
-            report.moe_dropped_tokens
-        );
-    }
-    if report.recovery_events > 0 {
-        println!(
-            "  elastic: {} recovery event(s), {} step(s) lost and recomputed, \
-             finished on {} workers",
-            report.recovery_events, report.lost_steps, report.world_size
-        );
-    }
-    if report.dp_sync_raw_s() > 0.0 {
-        println!(
-            "  DP sync: {:.1} ms raw, {:.1} ms exposed ({:.0}% overlapped with backward)",
-            report.dp_sync_raw_s() * 1e3,
-            report.dp_sync_exposed_s * 1e3,
-            report.dp_overlap_fraction() * 100.0
-        );
-    }
-    if report.ckpt_save_raw_ms() > 0.0 {
-        println!(
-            "  ckpt save: {:.1} ms exposed, {:.1} ms hidden on the saver thread",
-            report.ckpt_save_exposed_ms, report.ckpt_save_hidden_ms
-        );
-    }
-    let tiered = report.dp_bucket_intra_bytes
-        + report.dp_bucket_inter_bytes
-        + report.dp_param_ag_intra_bytes
-        + report.dp_param_ag_inter_bytes
-        + report.pp_p2p_intra_bytes
-        + report.pp_p2p_inter_bytes;
-    if tiered > 0 {
-        let kb = |b: u64| b as f64 / 1e3;
-        println!(
-            "  hier tiers: grad sync {:.1} KB intra / {:.1} KB inter ({} wire), \
-             param AG {:.1} KB intra / {:.1} KB inter, \
-             pp p2p {:.1} KB intra / {:.1} KB inter",
-            kb(report.dp_bucket_intra_bytes),
-            kb(report.dp_bucket_inter_bytes),
-            cfg.effective_grad_wire().name(),
-            kb(report.dp_param_ag_intra_bytes),
-            kb(report.dp_param_ag_inter_bytes),
-            kb(report.pp_p2p_intra_bytes),
-            kb(report.pp_p2p_inter_bytes)
-        );
-    }
+    println!();
+    print!("{}", report.render_summary());
     Ok(())
 }

@@ -1,7 +1,6 @@
 //! Training metrics: step timing, token/FLOP throughput, scaling
 //! efficiency, and a small CSV logger the examples/benches share.
 
-use std::fmt::Write as _;
 use std::time::Instant;
 
 use crate::topology::PEAK_FP16_FLOPS;
@@ -137,20 +136,41 @@ impl Csv {
         self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        let _ = writeln!(out, "{}", self.header.join(","));
-        for r in &self.rows {
-            let _ = writeln!(out, "{}", r.join(","));
-        }
-        out
-    }
-
     pub fn write(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir)?;
         }
         std::fs::write(path, self.to_string())
+    }
+}
+
+/// RFC-4180 field quoting: fields containing a comma, a double quote or
+/// a newline are wrapped in quotes with embedded quotes doubled; all
+/// other fields (every numeric row) pass through byte-identical.
+fn escape_field(s: &str) -> std::borrow::Cow<'_, str> {
+    if s.contains([',', '"', '\n', '\r']) {
+        std::borrow::Cow::Owned(format!("\"{}\"", s.replace('"', "\"\"")))
+    } else {
+        std::borrow::Cow::Borrowed(s)
+    }
+}
+
+impl std::fmt::Display for Csv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let line = |f: &mut std::fmt::Formatter<'_>, fields: &[String]| {
+            for (i, field) in fields.iter().enumerate() {
+                if i > 0 {
+                    f.write_str(",")?;
+                }
+                f.write_str(&escape_field(field))?;
+            }
+            f.write_str("\n")
+        };
+        line(f, &self.header)?;
+        for r in &self.rows {
+            line(f, r)?;
+        }
+        Ok(())
     }
 }
 
@@ -194,5 +214,20 @@ mod tests {
         let s = c.to_string();
         assert!(s.starts_with("a,b\n"));
         assert!(s.contains("1,2.5"));
+    }
+
+    #[test]
+    fn csv_escapes_delimiters_and_quotes() {
+        let mut c = Csv::new(&["name", "note"]);
+        c.row(&["tp=2,dp=2".to_string(), "said \"go\"".to_string()]);
+        c.row(&["multi\nline".to_string(), "plain".to_string()]);
+        let s = c.to_string();
+        let mut lines = s.split('\n');
+        assert_eq!(lines.next(), Some("name,note"));
+        // comma-bearing and quote-bearing fields are quoted, quotes doubled
+        assert_eq!(lines.next(), Some("\"tp=2,dp=2\",\"said \"\"go\"\"\""));
+        // the embedded newline stays inside one quoted field
+        assert_eq!(lines.next(), Some("\"multi"));
+        assert_eq!(lines.next(), Some("line\",plain"));
     }
 }

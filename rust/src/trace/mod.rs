@@ -1,0 +1,1076 @@
+//! Per-rank span tracing, the unified telemetry registry, and the
+//! measured-vs-model divergence audit (DESIGN.md "Observability").
+//!
+//! The paper's method is measurement-driven: step time is attributed to
+//! compute, TP/DP/PP communication and pipeline bubbles, and the
+//! parallelism hyperparameters are tuned against those measurements
+//! (Figs 6–13).  This module gives the engine the same attribution on a
+//! per-rank timeline:
+//!
+//! * **Spans** — each worker thread installs a thread-local [`Tracer`]
+//!   (pre-allocated event buffer, monotonic clock anchored to one run
+//!   epoch).  Instrumentation sites open scoped [`span`]s categorized by
+//!   [`Category`] and tagged `(step, chunk, mb, op)`; closing a span
+//!   folds its duration into the parent's `child_ns`, so *self time*
+//!   (duration − children) partitions the timeline without
+//!   double-counting nested spans (e.g. a TP all-reduce inside a
+//!   compute op).
+//! * **Registry** — one [`Registry`] per traced run collects every
+//!   rank's buffer at thread exit (the [`TraceGuard`] flushes even when
+//!   a worker unwinds on `PeerLost`), owns the engine-wide counter
+//!   snapshot type [`CounterSet`], and exports:
+//!   - a merged Chrome Trace Event Format JSON (`--trace-out`; one
+//!     `pid` per worker rank, one `tid` per chunk slot — loads in
+//!     Perfetto / `chrome://tracing`),
+//!   - a per-step JSONL metrics stream (`--metrics-jsonl`; loss, scale,
+//!     wall time, per-category ms, and the delta of every `TrainReport`
+//!     payload/residency counter).
+//! * **Audit** — [`audit`] folds the span timeline into the same terms
+//!   `PerfModel` prices and renders a measured-vs-predicted table,
+//!   recomputing `dp_overlap` and the bubble fraction *from the trace*
+//!   so they can be cross-checked against the engine's existing timer
+//!   classification and the analytic `(p-1)/(mv+p-1)`.
+//!
+//! The hard contract, in the house style: tracing on ≡ tracing off
+//! **bitwise** on the loss trajectory and every pinned counter (spans
+//! never touch numerics or add collectives), and span accounting closes
+//! — per (rank, step), Σ category self time ≤ wall time, with the
+//! remainder reported as `idle`.  With tracing off every instrumentation
+//! site is a thread-local `None` check (`tests/trace.rs` +
+//! `engine_hotpath` pin the <3% overhead contract).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::escape;
+
+/// Tag value for "no chunk" / "no microbatch" on a span.
+pub const TAG_NONE: u32 = u32::MAX;
+
+/// Tag value for events recorded before the first `step_mark`.
+pub const STEP_NONE: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------------
+// Categories
+// ---------------------------------------------------------------------------
+
+/// Where a span's self time is charged.  The first eight are recorded by
+/// instrumentation; `Idle` is synthesized per (rank, step) as
+/// `wall − Σ self` when the timeline is aggregated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Category {
+    /// Stage forward/backward execution (builtin kernels or XLA).
+    Compute,
+    /// Tensor-parallel all-reduces inside an op.
+    TpComm,
+    /// DP gradient sync: bucket launches, drains, handle waits, the
+    /// scaler-agreement and loss all-reduces.
+    DpSync,
+    /// Pipeline boundary activation/grad send/recv.
+    PpP2p,
+    /// ZeRO-3 parameter gathers (primary + node-local secondary).
+    ZeroGather,
+    /// MoE expert-parallel all-to-all dispatch/combine.
+    MoeA2a,
+    /// Optimizer step (sharded Adam over reduced grads).
+    Optimizer,
+    /// Checkpoint save path (barrier + snapshot/write).
+    Checkpoint,
+    /// Derived: unattributed wall time within a step.
+    Idle,
+}
+
+/// The recordable categories (everything but the derived `Idle`).
+pub const RECORDED: [Category; 8] = [
+    Category::Compute,
+    Category::TpComm,
+    Category::DpSync,
+    Category::PpP2p,
+    Category::ZeroGather,
+    Category::MoeA2a,
+    Category::Optimizer,
+    Category::Checkpoint,
+];
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Compute => "compute",
+            Category::TpComm => "tp_comm",
+            Category::DpSync => "dp_sync",
+            Category::PpP2p => "pp_p2p",
+            Category::ZeroGather => "zero_gather",
+            Category::MoeA2a => "moe_a2a",
+            Category::Optimizer => "optimizer",
+            Category::Checkpoint => "checkpoint",
+            Category::Idle => "idle",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Category::Compute => 0,
+            Category::TpComm => 1,
+            Category::DpSync => 2,
+            Category::PpP2p => 3,
+            Category::ZeroGather => 4,
+            Category::MoeA2a => 5,
+            Category::Optimizer => 6,
+            Category::Checkpoint => 7,
+            Category::Idle => 8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events + the thread-local tracer
+// ---------------------------------------------------------------------------
+
+/// One closed span on a rank's timeline.  Times are nanoseconds since
+/// the run epoch; `child_ns` is the summed duration of *direct* child
+/// spans, so `(t1 - t0) - child_ns` is this span's self time.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub cat: Category,
+    pub op: &'static str,
+    pub step: u32,
+    pub chunk: u32,
+    pub mb: u32,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    pub child_ns: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct OpenSpan {
+    cat: Category,
+    op: &'static str,
+    step: u32,
+    chunk: u32,
+    mb: u32,
+    t0_ns: u64,
+    child_ns: u64,
+}
+
+/// Per-thread span recorder.  Installed by [`Registry::install`]; every
+/// instrumentation site is inert (one TLS `None` check) when no tracer
+/// is installed.
+#[derive(Debug)]
+struct Tracer {
+    rank: usize,
+    epoch: Instant,
+    events: Vec<Event>,
+    stack: Vec<OpenSpan>,
+    cur_step: u32,
+    /// `(step, start_ns)` boundaries; a step's wall time runs to the
+    /// next mark (or the trace end for the last step).
+    marks: Vec<(u32, u64)>,
+}
+
+impl Tracer {
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+thread_local! {
+    static TRACER: RefCell<Option<Tracer>> = const { RefCell::new(None) };
+}
+
+/// A rank's completed timeline, flushed to the registry at thread exit.
+#[derive(Debug)]
+pub struct RankTrace {
+    pub rank: usize,
+    pub events: Vec<Event>,
+    pub marks: Vec<(u32, u64)>,
+    pub end_ns: u64,
+}
+
+/// RAII span guard: open on construction, closed (recorded) on drop.
+/// Inert when the thread has no tracer installed.
+#[must_use = "a span closes when dropped; binding it to `_` closes it immediately"]
+pub struct Span {
+    active: bool,
+}
+
+/// Open an untagged span (inherits `(chunk, mb)` from the enclosing
+/// span, if any).
+pub fn span(cat: Category, op: &'static str) -> Span {
+    span_cm(cat, op, TAG_NONE, TAG_NONE)
+}
+
+/// Open a span tagged with a chunk slot and microbatch.  `TAG_NONE`
+/// tags inherit from the enclosing span, so a collective wait inside a
+/// compute op lands on the op's chunk lane without extra plumbing.
+pub fn span_cm(cat: Category, op: &'static str, chunk: u32, mb: u32) -> Span {
+    TRACER.with(|t| {
+        let mut slot = t.borrow_mut();
+        let Some(tr) = slot.as_mut() else {
+            return Span { active: false };
+        };
+        let now = tr.now_ns();
+        let (ic, imb) = tr.stack.last().map(|o| (o.chunk, o.mb)).unwrap_or((TAG_NONE, TAG_NONE));
+        tr.stack.push(OpenSpan {
+            cat,
+            op,
+            step: tr.cur_step,
+            chunk: if chunk == TAG_NONE { ic } else { chunk },
+            mb: if mb == TAG_NONE { imb } else { mb },
+            t0_ns: now,
+            child_ns: 0,
+        });
+        Span { active: true }
+    })
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        TRACER.with(|t| {
+            if let Some(tr) = t.borrow_mut().as_mut() {
+                let now = tr.now_ns();
+                let o = tr.stack.pop().expect("span stack underflow");
+                let dur = now.saturating_sub(o.t0_ns);
+                if let Some(parent) = tr.stack.last_mut() {
+                    parent.child_ns += dur;
+                }
+                tr.events.push(Event {
+                    cat: o.cat,
+                    op: o.op,
+                    step: o.step,
+                    chunk: o.chunk,
+                    mb: o.mb,
+                    t0_ns: o.t0_ns,
+                    t1_ns: now,
+                    child_ns: o.child_ns,
+                });
+            }
+        });
+    }
+}
+
+/// Mark the start of a training step on this rank's timeline.  Spans
+/// opened after the mark are tagged with `step`.
+pub fn step_mark(step: u32) {
+    TRACER.with(|t| {
+        if let Some(tr) = t.borrow_mut().as_mut() {
+            let now = tr.now_ns();
+            tr.cur_step = step;
+            tr.marks.push((step, now));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// One per traced run: owns the run epoch, collects every rank's
+/// timeline, and renders the exports.  Created by `train_with_bundle`
+/// when `--trace-out` or `--metrics-jsonl` is set.
+#[derive(Debug)]
+pub struct Registry {
+    epoch: Instant,
+    ranks: Mutex<Vec<RankTrace>>,
+}
+
+/// Uninstalls + flushes the calling thread's tracer on drop — including
+/// panic unwinds (`PeerLost`) and `Err` returns (`KilledByFault`), so a
+/// dying worker's partial timeline still reaches the registry.
+pub struct TraceGuard {
+    reg: Arc<Registry>,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        TRACER.with(|t| {
+            if let Some(mut tr) = t.borrow_mut().take() {
+                let end = tr.now_ns();
+                // close anything left open by an unwinding worker
+                while let Some(o) = tr.stack.pop() {
+                    tr.events.push(Event {
+                        cat: o.cat,
+                        op: o.op,
+                        step: o.step,
+                        chunk: o.chunk,
+                        mb: o.mb,
+                        t0_ns: o.t0_ns,
+                        t1_ns: end,
+                        child_ns: o.child_ns,
+                    });
+                }
+                self.reg.ranks.lock().unwrap().push(RankTrace {
+                    rank: tr.rank,
+                    events: tr.events,
+                    marks: tr.marks,
+                    end_ns: end,
+                });
+            }
+        });
+    }
+}
+
+/// Aggregated timeline statistics (carried on `TrainReport`).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    /// Distinct worker ranks that flushed a timeline.
+    pub ranks: usize,
+    /// Distinct step ids observed across all ranks.
+    pub steps: usize,
+    /// Total recorded events across all ranks.
+    pub events: u64,
+    /// Self-time seconds per recorded category, summed over all ranks
+    /// and steps (index by `Category::index`-order of [`RECORDED`]).
+    pub cat_s: [f64; 8],
+    /// Synthesized idle seconds (Σ per-(rank, step) `wall − busy`).
+    pub idle_s: f64,
+    /// Σ per-(rank, step) wall seconds.
+    pub wall_s: f64,
+    /// Full duration of hidden (launch-classified) DP sync spans.
+    pub dp_hidden_s: f64,
+    /// Full duration of exposed DP sync spans (exposed launches+drains).
+    pub dp_exposed_s: f64,
+    /// `1 − exposed/raw` over the trace's DP launch/drain spans — the
+    /// same classification the engine's `nb_hidden/exposed_ns` timers
+    /// use, recomputed from the timeline.
+    pub dp_overlap: f64,
+    /// PP p2p hidden fraction from the trace (the engine's p2p is
+    /// blocking, so this measures 0 until sends overlap).
+    pub pp_overlap: f64,
+    /// (blocking p2p recv self time + idle) / wall — the measured
+    /// pipeline-bubble fraction, compared against the analytic
+    /// `(p-1)/(mv+p-1)` by the audit.
+    pub bubble_fraction: f64,
+    /// max over (rank, step) of `busy / wall`; the accounting contract
+    /// is `≤ 1.0` within timer jitter (tests pin `< 1.01`).
+    pub max_busy_over_wall: f64,
+}
+
+impl Summary {
+    pub fn seconds(&self, cat: Category) -> f64 {
+        match cat {
+            Category::Idle => self.idle_s,
+            c => self.cat_s[c.index()],
+        }
+    }
+
+    /// Mean self-time milliseconds per rank per step for one category.
+    pub fn ms_per_rank_step(&self, cat: Category) -> f64 {
+        let obs = (self.ranks * self.steps).max(1) as f64;
+        self.seconds(cat) * 1e3 / obs
+    }
+}
+
+/// Per-step aggregate used by the JSONL stream: mean-over-ranks
+/// category milliseconds plus the step's traced wall time.
+#[derive(Debug, Clone, Default)]
+struct StepCats {
+    cat_ns: [u64; 8],
+    busy_ns: u64,
+    wall_ns: u64,
+    obs: u32,
+}
+
+/// Per-step scalars the coordinator feeds the JSONL stream (mirrors
+/// `StepLog` without depending on the coordinator's types).
+#[derive(Debug, Clone, Copy)]
+pub struct StepMeta {
+    pub step: u32,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub loss_scale: f32,
+    pub skipped: bool,
+    pub step_time_s: f64,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { epoch: Instant::now(), ranks: Mutex::new(Vec::new()) })
+    }
+
+    /// Install a tracer on the calling (worker) thread.  The returned
+    /// guard flushes the thread's timeline into the registry on drop.
+    pub fn install(self: &Arc<Self>, rank: usize) -> TraceGuard {
+        TRACER.with(|t| {
+            *t.borrow_mut() = Some(Tracer {
+                rank,
+                epoch: self.epoch,
+                events: Vec::with_capacity(1 << 14),
+                stack: Vec::with_capacity(8),
+                cur_step: STEP_NONE,
+                marks: Vec::new(),
+            });
+        });
+        TraceGuard { reg: Arc::clone(self) }
+    }
+
+    /// Aggregate every flushed timeline into a [`Summary`].  Only spans
+    /// inside a marked step participate in the category/idle accounting
+    /// (pre-step setup shows in the Chrome trace but has no wall
+    /// baseline to close against).
+    pub fn summarize(&self) -> Summary {
+        let ranks = self.ranks.lock().unwrap();
+        let mut cat_s = [0.0f64; 8];
+        let mut steps = std::collections::BTreeSet::new();
+        let mut rank_ids = std::collections::BTreeSet::new();
+        let mut events = 0u64;
+        let (mut wall_ns, mut idle_ns) = (0u64, 0u64);
+        let (mut dp_hidden_ns, mut dp_exposed_ns) = (0u64, 0u64);
+        let mut pp_recv_wait_ns = 0u64;
+        let mut max_busy_over_wall = 0.0f64;
+        for rt in ranks.iter() {
+            rank_ids.insert(rt.rank);
+            events += rt.events.len() as u64;
+            let mut walls: BTreeMap<u32, u64> = BTreeMap::new();
+            for (i, &(s, t0)) in rt.marks.iter().enumerate() {
+                let end = rt.marks.get(i + 1).map(|m| m.1).unwrap_or(rt.end_ns);
+                *walls.entry(s).or_default() += end.saturating_sub(t0);
+                steps.insert(s);
+            }
+            let mut busy: BTreeMap<u32, u64> = BTreeMap::new();
+            for e in &rt.events {
+                let self_ns = e.t1_ns.saturating_sub(e.t0_ns).saturating_sub(e.child_ns);
+                let full_ns = e.t1_ns.saturating_sub(e.t0_ns);
+                match e.op {
+                    "dp_launch_hidden" => dp_hidden_ns += full_ns,
+                    "dp_launch_exposed" | "dp_drain" => dp_exposed_ns += full_ns,
+                    _ => {}
+                }
+                if e.cat == Category::PpP2p && e.op.starts_with("recv_") {
+                    pp_recv_wait_ns += self_ns;
+                }
+                if e.step == STEP_NONE {
+                    continue;
+                }
+                cat_s[e.cat.index()] += self_ns as f64 / 1e9;
+                *busy.entry(e.step).or_default() += self_ns;
+            }
+            for (s, w) in walls {
+                let b = busy.get(&s).copied().unwrap_or(0);
+                wall_ns += w;
+                idle_ns += w.saturating_sub(b);
+                if w > 0 {
+                    max_busy_over_wall = max_busy_over_wall.max(b as f64 / w as f64);
+                }
+            }
+        }
+        let wall_s = wall_ns as f64 / 1e9;
+        let idle_s = idle_ns as f64 / 1e9;
+        let (dp_hidden_s, dp_exposed_s) =
+            (dp_hidden_ns as f64 / 1e9, dp_exposed_ns as f64 / 1e9);
+        let pp_raw_s = cat_s[Category::PpP2p.index()];
+        Summary {
+            ranks: rank_ids.len(),
+            steps: steps.len(),
+            events,
+            cat_s,
+            idle_s,
+            wall_s,
+            dp_hidden_s,
+            dp_exposed_s,
+            dp_overlap: crate::perf::dp_overlap_fraction(
+                dp_hidden_s + dp_exposed_s,
+                dp_exposed_s,
+            ),
+            // the engine's p2p is blocking (every p2p span is exposed),
+            // so hidden ≡ 0 and the fraction collapses to 0 — kept as a
+            // computed quantity so an overlapped p2p path shows up here
+            pp_overlap: crate::perf::dp_overlap_fraction(pp_raw_s, pp_raw_s),
+            bubble_fraction: if wall_ns > 0 {
+                (pp_recv_wait_ns + idle_ns) as f64 / wall_ns as f64
+            } else {
+                0.0
+            },
+            max_busy_over_wall,
+        }
+    }
+
+    fn per_step(&self) -> BTreeMap<u32, StepCats> {
+        let ranks = self.ranks.lock().unwrap();
+        let mut out: BTreeMap<u32, StepCats> = BTreeMap::new();
+        for rt in ranks.iter() {
+            for (i, &(s, t0)) in rt.marks.iter().enumerate() {
+                let end = rt.marks.get(i + 1).map(|m| m.1).unwrap_or(rt.end_ns);
+                let sc = out.entry(s).or_default();
+                sc.wall_ns += end.saturating_sub(t0);
+                sc.obs += 1;
+            }
+            for e in &rt.events {
+                if e.step == STEP_NONE {
+                    continue;
+                }
+                let self_ns = e.t1_ns.saturating_sub(e.t0_ns).saturating_sub(e.child_ns);
+                let sc = out.entry(e.step).or_default();
+                sc.cat_ns[e.cat.index()] += self_ns;
+                sc.busy_ns += self_ns;
+            }
+        }
+        out
+    }
+
+    // -----------------------------------------------------------------
+    // Chrome Trace Event Format export
+    // -----------------------------------------------------------------
+
+    /// Write the merged timeline as Chrome Trace Event Format JSON:
+    /// `pid` = worker world rank, `tid` = chunk slot (+1; lane 0 carries
+    /// untagged/step-level spans), balanced `B`/`E` duration events with
+    /// per-lane monotonic microsecond timestamps.  Loads in Perfetto.
+    pub fn write_chrome_trace(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        let ranks = self.ranks.lock().unwrap();
+        write!(w, "{{\"traceEvents\":[")?;
+        let mut first = true;
+        let mut sep = |w: &mut BufWriter<std::fs::File>| -> std::io::Result<()> {
+            if first {
+                first = false;
+                Ok(())
+            } else {
+                write!(w, ",")
+            }
+        };
+        // lanes per pid, for thread_name metadata
+        let mut lanes: BTreeMap<usize, std::collections::BTreeSet<u32>> = BTreeMap::new();
+        for rt in ranks.iter() {
+            sep(&mut w)?;
+            write!(
+                w,
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\
+                 \"args\":{{\"name\":{}}}}}",
+                rt.rank,
+                escape(&format!("rank {}", rt.rank))
+            )?;
+            // group events by lane, then emit each lane's span family as
+            // balanced nested B/E pairs: sort by (t0 asc, t1 desc) and
+            // close every span that ends before the next one begins
+            let mut by_lane: BTreeMap<u32, Vec<&Event>> = BTreeMap::new();
+            for e in &rt.events {
+                let tid = if e.chunk == TAG_NONE { 0 } else { e.chunk + 1 };
+                by_lane.entry(tid).or_default().push(e);
+            }
+            for (&s, &t) in &rt.marks {
+                sep(&mut w)?;
+                write!(
+                    w,
+                    "{{\"name\":{},\"ph\":\"i\",\"s\":\"t\",\"ts\":{:.3},\
+                     \"pid\":{},\"tid\":0}}",
+                    escape(&format!("step {s}")),
+                    t as f64 / 1e3,
+                    rt.rank
+                )?;
+            }
+            for (tid, mut evs) in by_lane {
+                lanes.entry(rt.rank).or_default().insert(tid);
+                evs.sort_by(|a, b| {
+                    a.t0_ns.cmp(&b.t0_ns).then(b.t1_ns.cmp(&a.t1_ns))
+                });
+                let mut open: Vec<&Event> = Vec::new();
+                let emit_b =
+                    |w: &mut BufWriter<std::fs::File>, e: &Event| -> std::io::Result<()> {
+                        write!(
+                            w,
+                            "{{\"name\":{},\"cat\":{},\"ph\":\"B\",\"ts\":{:.3},\
+                             \"pid\":{},\"tid\":{},\"args\":{{\"step\":{},\"mb\":{}}}}}",
+                            escape(e.op),
+                            escape(e.cat.name()),
+                            e.t0_ns as f64 / 1e3,
+                            rt.rank,
+                            tid,
+                            if e.step == STEP_NONE { -1i64 } else { e.step as i64 },
+                            if e.mb == TAG_NONE { -1i64 } else { e.mb as i64 },
+                        )
+                    };
+                let emit_e =
+                    |w: &mut BufWriter<std::fs::File>, e: &Event| -> std::io::Result<()> {
+                        write!(
+                            w,
+                            "{{\"name\":{},\"ph\":\"E\",\"ts\":{:.3},\"pid\":{},\"tid\":{}}}",
+                            escape(e.op),
+                            e.t1_ns as f64 / 1e3,
+                            rt.rank,
+                            tid
+                        )
+                    };
+                for e in evs {
+                    while let Some(top) = open.last() {
+                        if top.t1_ns <= e.t0_ns {
+                            sep(&mut w)?;
+                            emit_e(&mut w, top)?;
+                            open.pop();
+                        } else {
+                            break;
+                        }
+                    }
+                    sep(&mut w)?;
+                    emit_b(&mut w, e)?;
+                    open.push(e);
+                }
+                while let Some(top) = open.pop() {
+                    sep(&mut w)?;
+                    emit_e(&mut w, top)?;
+                }
+            }
+        }
+        for (pid, tids) in lanes {
+            for tid in tids {
+                sep(&mut w)?;
+                let name =
+                    if tid == 0 { "step".to_string() } else { format!("chunk {}", tid - 1) };
+                write!(
+                    w,
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+                     \"args\":{{\"name\":{}}}}}",
+                    escape(&name)
+                )?;
+            }
+        }
+        write!(w, "],\"displayTimeUnit\":\"ms\"}}")?;
+        w.flush()
+    }
+
+    // -----------------------------------------------------------------
+    // Per-step JSONL metrics export
+    // -----------------------------------------------------------------
+
+    /// Write one self-describing JSON object per step: the step scalars,
+    /// mean-over-ranks per-category milliseconds, and the **delta** of
+    /// every engine counter over the step.  `counters[i]` is the
+    /// absolute [`CounterSet`] snapshot harvested right after
+    /// `steps[i]`; the last step's delta is closed against
+    /// `final_counters` (the post-join harvest), so the column sums
+    /// reproduce `TrainReport`'s totals exactly.
+    pub fn write_metrics_jsonl(
+        &self,
+        path: &Path,
+        steps: &[StepMeta],
+        counters: &[CounterSet],
+        final_counters: &CounterSet,
+    ) -> std::io::Result<()> {
+        assert_eq!(steps.len(), counters.len(), "one counter snapshot per logged step");
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let per_step = self.per_step();
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        let jnum = |x: f64| {
+            if x.is_finite() {
+                format!("{x}")
+            } else {
+                "null".to_string()
+            }
+        };
+        let mut prev = CounterSet::default();
+        for (i, (m, snap)) in steps.iter().zip(counters).enumerate() {
+            // close the final step against the post-join totals so the
+            // telescoped deltas sum to exactly the TrainReport counters
+            // (the leader's snapshot races the tail of async work)
+            let cur = if i + 1 == steps.len() { *final_counters } else { *snap };
+            write!(
+                w,
+                "{{\"step\":{},\"loss\":{},\"grad_norm\":{},\"loss_scale\":{},\
+                 \"skipped\":{},\"step_time_s\":{}",
+                m.step,
+                jnum(m.loss as f64),
+                jnum(m.grad_norm as f64),
+                jnum(m.loss_scale as f64),
+                m.skipped,
+                jnum(m.step_time_s),
+            )?;
+            if let Some(sc) = per_step.get(&m.step) {
+                let obs = sc.obs.max(1) as f64;
+                write!(w, ",\"trace\":{{\"cat_ms\":{{")?;
+                for (k, cat) in RECORDED.iter().enumerate() {
+                    write!(
+                        w,
+                        "{}{}:{}",
+                        if k == 0 { "" } else { "," },
+                        escape(cat.name()),
+                        jnum(sc.cat_ns[cat.index()] as f64 / obs / 1e6)
+                    )?;
+                }
+                let idle_ns = sc.wall_ns.saturating_sub(sc.busy_ns);
+                write!(
+                    w,
+                    ",\"idle\":{}}},\"wall_ms\":{}}}",
+                    jnum(idle_ns as f64 / obs / 1e6),
+                    jnum(sc.wall_ns as f64 / obs / 1e6)
+                )?;
+            }
+            write!(w, ",\"counters\":{{")?;
+            let (names, cur_v, prev_v) = (CounterSet::NAMES, cur.values(), prev.values());
+            for (k, name) in names.iter().enumerate() {
+                // peak residency is a high-water mark, not a flow:
+                // emitted absolute, never differenced
+                let v = if *name == "zero3_peak_gathered_floats" {
+                    cur_v[k]
+                } else {
+                    cur_v[k].saturating_sub(prev_v[k])
+                };
+                write!(w, "{}{}:{}", if k == 0 { "" } else { "," }, escape(name), v)?;
+            }
+            writeln!(w, "}}}}")?;
+            prev = cur;
+        }
+        w.flush()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CounterSet: the engine-wide counter snapshot
+// ---------------------------------------------------------------------------
+
+/// One snapshot of every engine counter the coordinator harvests from
+/// the collectives/checkpoint layers — the single owner of the totals
+/// `TrainReport` reports and the JSONL stream differences per step.
+/// `add` folds legs of an elastic run together (sums; the ZeRO-3 peak
+/// takes the max).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CounterSet {
+    pub comm_bytes: u64,
+    pub tp_ar_bytes: u64,
+    pub tp_ar_rounds: u64,
+    pub dp_bucket_rounds: u64,
+    pub dp_bucket_payload_bytes: u64,
+    pub dp_param_ag_bytes: u64,
+    pub pp_p2p_payload_bytes: u64,
+    pub dp_bucket_intra_bytes: u64,
+    pub dp_bucket_inter_bytes: u64,
+    pub dp_param_ag_intra_bytes: u64,
+    pub dp_param_ag_inter_bytes: u64,
+    pub pp_p2p_intra_bytes: u64,
+    pub pp_p2p_inter_bytes: u64,
+    pub moe_a2a_rounds: u64,
+    pub moe_a2a_payload_bytes: u64,
+    pub moe_a2a_intra_bytes: u64,
+    pub moe_a2a_inter_bytes: u64,
+    pub moe_dropped_tokens: u64,
+    pub zero3_peak_gathered_floats: u64,
+    pub dp_sync_hidden_ns: u64,
+    pub dp_sync_exposed_ns: u64,
+    pub ckpt_hidden_ns: u64,
+    pub ckpt_exposed_ns: u64,
+}
+
+impl CounterSet {
+    /// Field names, in `values()` order (JSONL schema).
+    pub const NAMES: [&'static str; 23] = [
+        "comm_bytes",
+        "tp_ar_bytes",
+        "tp_ar_rounds",
+        "dp_bucket_rounds",
+        "dp_bucket_payload_bytes",
+        "dp_param_ag_bytes",
+        "pp_p2p_payload_bytes",
+        "dp_bucket_intra_bytes",
+        "dp_bucket_inter_bytes",
+        "dp_param_ag_intra_bytes",
+        "dp_param_ag_inter_bytes",
+        "pp_p2p_intra_bytes",
+        "pp_p2p_inter_bytes",
+        "moe_a2a_rounds",
+        "moe_a2a_payload_bytes",
+        "moe_a2a_intra_bytes",
+        "moe_a2a_inter_bytes",
+        "moe_dropped_tokens",
+        "zero3_peak_gathered_floats",
+        "dp_sync_hidden_ns",
+        "dp_sync_exposed_ns",
+        "ckpt_hidden_ns",
+        "ckpt_exposed_ns",
+    ];
+
+    pub fn values(&self) -> [u64; 23] {
+        [
+            self.comm_bytes,
+            self.tp_ar_bytes,
+            self.tp_ar_rounds,
+            self.dp_bucket_rounds,
+            self.dp_bucket_payload_bytes,
+            self.dp_param_ag_bytes,
+            self.pp_p2p_payload_bytes,
+            self.dp_bucket_intra_bytes,
+            self.dp_bucket_inter_bytes,
+            self.dp_param_ag_intra_bytes,
+            self.dp_param_ag_inter_bytes,
+            self.pp_p2p_intra_bytes,
+            self.pp_p2p_inter_bytes,
+            self.moe_a2a_rounds,
+            self.moe_a2a_payload_bytes,
+            self.moe_a2a_intra_bytes,
+            self.moe_a2a_inter_bytes,
+            self.moe_dropped_tokens,
+            self.zero3_peak_gathered_floats,
+            self.dp_sync_hidden_ns,
+            self.dp_sync_exposed_ns,
+            self.ckpt_hidden_ns,
+            self.ckpt_exposed_ns,
+        ]
+    }
+
+    /// Fold another leg's totals in (sums; peak residency takes max).
+    pub fn add(&mut self, o: &CounterSet) {
+        self.comm_bytes += o.comm_bytes;
+        self.tp_ar_bytes += o.tp_ar_bytes;
+        self.tp_ar_rounds += o.tp_ar_rounds;
+        self.dp_bucket_rounds += o.dp_bucket_rounds;
+        self.dp_bucket_payload_bytes += o.dp_bucket_payload_bytes;
+        self.dp_param_ag_bytes += o.dp_param_ag_bytes;
+        self.pp_p2p_payload_bytes += o.pp_p2p_payload_bytes;
+        self.dp_bucket_intra_bytes += o.dp_bucket_intra_bytes;
+        self.dp_bucket_inter_bytes += o.dp_bucket_inter_bytes;
+        self.dp_param_ag_intra_bytes += o.dp_param_ag_intra_bytes;
+        self.dp_param_ag_inter_bytes += o.dp_param_ag_inter_bytes;
+        self.pp_p2p_intra_bytes += o.pp_p2p_intra_bytes;
+        self.pp_p2p_inter_bytes += o.pp_p2p_inter_bytes;
+        self.moe_a2a_rounds += o.moe_a2a_rounds;
+        self.moe_a2a_payload_bytes += o.moe_a2a_payload_bytes;
+        self.moe_a2a_intra_bytes += o.moe_a2a_intra_bytes;
+        self.moe_a2a_inter_bytes += o.moe_a2a_inter_bytes;
+        self.moe_dropped_tokens += o.moe_dropped_tokens;
+        self.zero3_peak_gathered_floats =
+            self.zero3_peak_gathered_floats.max(o.zero3_peak_gathered_floats);
+        self.dp_sync_hidden_ns += o.dp_sync_hidden_ns;
+        self.dp_sync_exposed_ns += o.dp_sync_exposed_ns;
+        self.ckpt_hidden_ns += o.ckpt_hidden_ns;
+        self.ckpt_exposed_ns += o.ckpt_exposed_ns;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Divergence audit: trace-measured vs PerfModel-predicted
+// ---------------------------------------------------------------------------
+
+/// One audit table row.  `measured` comes from the span timeline,
+/// `predicted` from `PerfModel::evaluate` when a model/parallel spec
+/// could be built for the run (`None` otherwise — e.g. non-builtin
+/// bundles, or terms the model has no counterpart for).
+#[derive(Debug, Clone)]
+pub struct AuditRow {
+    pub term: &'static str,
+    pub unit: &'static str,
+    pub measured: f64,
+    pub predicted: Option<f64>,
+    pub note: &'static str,
+}
+
+/// Fold the trace [`Summary`] into the terms `PerfModel` prices.  The
+/// predicted column prices *Frontier MI250X* hardware while the
+/// measured column is this host's CPU simulation — the audit is about
+/// which terms dominate and whether the *fractions* (overlap, bubble)
+/// agree, not about absolute seconds matching.
+pub fn audit(
+    s: &Summary,
+    predicted: Option<&crate::perf::StepBreakdown>,
+    analytic_bubble: Option<f64>,
+    engine_dp_overlap: Option<f64>,
+) -> Vec<AuditRow> {
+    let p = |f: fn(&crate::perf::StepBreakdown) -> f64| predicted.map(|b| f(b) * 1e3);
+    vec![
+        AuditRow {
+            term: "compute",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::Compute),
+            predicted: p(|b| b.t_compute),
+            note: "stage fwd+bwd self time",
+        },
+        AuditRow {
+            term: "tp_comm",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::TpComm),
+            predicted: p(|b| b.t_tp_comm),
+            note: "TP all-reduces inside ops",
+        },
+        AuditRow {
+            term: "pp_p2p",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::PpP2p),
+            predicted: p(|b| b.t_pp_comm),
+            note: "boundary send/recv (blocking)",
+        },
+        AuditRow {
+            term: "dp_exposed",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::DpSync),
+            predicted: p(|b| b.t_dp_comm),
+            note: "grad-sync time not hidden under backward",
+        },
+        AuditRow {
+            term: "zero3_gather",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::ZeroGather),
+            predicted: None,
+            note: "param gather waits (priced inside the model's dp term)",
+        },
+        AuditRow {
+            term: "moe_a2a",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::MoeA2a),
+            predicted: None,
+            note: "expert dispatch/combine wire",
+        },
+        AuditRow {
+            term: "optimizer",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::Optimizer),
+            predicted: p(|b| b.t_optimizer),
+            note: "sharded Adam step",
+        },
+        AuditRow {
+            term: "checkpoint",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::Checkpoint),
+            predicted: None,
+            note: "save barrier + exposed write",
+        },
+        AuditRow {
+            term: "idle",
+            unit: "ms/step/rank",
+            measured: s.ms_per_rank_step(Category::Idle),
+            predicted: None,
+            note: "wall - Σ category self time",
+        },
+        AuditRow {
+            term: "bubble_fraction",
+            unit: "fraction",
+            measured: s.bubble_fraction,
+            predicted: analytic_bubble,
+            note: "(p2p recv wait + idle)/wall vs (p-1)/(mv+p-1)",
+        },
+        AuditRow {
+            term: "dp_overlap",
+            unit: "fraction",
+            measured: s.dp_overlap,
+            predicted: engine_dp_overlap,
+            note: "trace-classified vs engine hidden/exposed timers",
+        },
+        AuditRow {
+            term: "pp_overlap",
+            unit: "fraction",
+            measured: s.pp_overlap,
+            predicted: None,
+            note: "p2p hidden fraction (blocking p2p => 0)",
+        },
+    ]
+}
+
+/// Render the audit as the fixed-width table `train_e2e` prints.
+pub fn render_audit(rows: &[AuditRow]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<16} {:>14} {:>14}  {:<14} note",
+        "term", "measured", "predicted", "unit"
+    );
+    for r in rows {
+        let pred = match r.predicted {
+            Some(v) => format!("{v:.3}"),
+            None => "-".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "{:<16} {:>14.3} {:>14}  {:<14} {}",
+            r.term, r.measured, pred, r.unit, r.note
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_are_inert_without_a_tracer() {
+        // no registry installed on this thread: guards must be no-ops
+        let s = span(Category::Compute, "noop");
+        drop(s);
+        step_mark(0);
+    }
+
+    #[test]
+    fn self_time_excludes_children() {
+        let reg = Registry::new();
+        {
+            let _g = reg.install(0);
+            step_mark(0);
+            {
+                let _outer = span(Category::Compute, "outer");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                {
+                    let _inner = span(Category::TpComm, "inner");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+        }
+        let s = reg.summarize();
+        assert_eq!(s.ranks, 1);
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.events, 2);
+        // compute self time must not include the nested tp span
+        let total = s.seconds(Category::Compute) + s.seconds(Category::TpComm);
+        assert!(s.seconds(Category::TpComm) >= 0.002 - 1e-4);
+        assert!(s.seconds(Category::Compute) < total);
+        assert!(s.max_busy_over_wall <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn tags_inherit_from_enclosing_span() {
+        let reg = Registry::new();
+        {
+            let _g = reg.install(3);
+            step_mark(7);
+            let _outer = span_cm(Category::Compute, "fwd", 2, 1);
+            let _inner = span(Category::TpComm, "ar");
+        }
+        let ranks = reg.ranks.lock().unwrap();
+        let rt = &ranks[0];
+        let inner = rt.events.iter().find(|e| e.op == "ar").unwrap();
+        assert_eq!((inner.chunk, inner.mb, inner.step), (2, 1, 7));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let reg = Registry::new();
+        {
+            let _g = reg.install(0);
+            step_mark(0);
+            let _a = span_cm(Category::Compute, "fwd", 0, 0);
+            let _b = span(Category::TpComm, "ar");
+        }
+        let path = std::env::temp_dir()
+            .join(format!("fllm-trace-unit-{}.json", std::process::id()));
+        reg.write_chrome_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let evs = j.field("traceEvents").unwrap().as_arr().unwrap();
+        let b = evs.iter().filter(|e| e.str_field("ph").unwrap() == "B").count();
+        let e = evs.iter().filter(|e| e.str_field("ph").unwrap() == "E").count();
+        assert_eq!(b, 2);
+        assert_eq!(b, e);
+    }
+
+    #[test]
+    fn counter_set_add_sums_and_maxes() {
+        let mut a = CounterSet { comm_bytes: 10, zero3_peak_gathered_floats: 5, ..Default::default() };
+        let b = CounterSet { comm_bytes: 3, zero3_peak_gathered_floats: 9, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.comm_bytes, 13);
+        assert_eq!(a.zero3_peak_gathered_floats, 9);
+        assert_eq!(CounterSet::NAMES.len(), a.values().len());
+    }
+}

@@ -299,6 +299,7 @@ impl DistOptimizer {
         lr_scale: f32,
         tp: TpCtx<'_>,
     ) -> f32 {
+        let _s = crate::trace::span(crate::trace::Category::Optimizer, "step_reduced");
         match self {
             DistOptimizer::Ddp(adam) => {
                 let norm = ddp_clip(group.len(), grads, adam.cfg.grad_clip, tp);

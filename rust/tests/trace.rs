@@ -1,0 +1,372 @@
+//! Observability contract tests (PR 10).
+//!
+//! The tracing subsystem is **observational only** — the locks:
+//!
+//! * **Tracing on ≡ off, bitwise** — a 20-step dp2 × tp2, ZeRO-3, bf16
+//!   run (and a dp2 × ep2 MoE run) with `--trace-out`/`--metrics-jsonl`
+//!   armed walks the untraced loss/grad-norm/loss-scale trajectory bit
+//!   for bit, and every pinned payload counter is equal.  Spans never
+//!   touch numerics and never add collectives.
+//! * **Chrome trace structural validity** — the merged export parses as
+//!   JSON, `B`/`E` duration events balance per `(pid, tid)` lane with
+//!   non-decreasing timestamps in emission order, and the `pid` set is
+//!   exactly the world's rank set.
+//! * **Span-accounting completeness** — per step and rank,
+//!   Σ category self time + idle closes against the step wall time
+//!   within 1% (`max_busy_over_wall <= 1.01`, Σcat + idle ≈ wall).
+//! * **JSONL stream** — one line per logged step; the per-step counter
+//!   deltas telescope to exactly the `TrainReport` totals; per-line
+//!   scalars round-trip the `StepLog` values.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use frontier_llm::config::ScheduleKind;
+use frontier_llm::coordinator::{train, EngineConfig, TrainReport};
+use frontier_llm::precision::Dtype;
+use frontier_llm::util::json::Json;
+use frontier_llm::zero::ShardingStage;
+
+const DENSE: &str = "builtin:tiny-s2-mb2";
+const MOE4: &str = "builtin:tiny-moe4k2-s2-mb2";
+
+fn cfg(
+    bundle: &str,
+    tp: usize,
+    dp: usize,
+    ep: usize,
+    stage: ShardingStage,
+    precision: Dtype,
+) -> EngineConfig {
+    EngineConfig {
+        bundle: bundle.into(),
+        dp,
+        tp,
+        ep,
+        schedule: ScheduleKind::OneF1B,
+        microbatches: 4,
+        steps: 20,
+        zero_stage: stage,
+        precision,
+        // small buckets so the overlapped DP sync spans several rounds
+        grad_bucket_floats: 128,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+/// Fresh per-test output dir under the system temp root.
+fn out_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fllm-trace-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("temp dir");
+    d
+}
+
+fn loss_bits(r: &TrainReport) -> Vec<u32> {
+    r.logs.iter().map(|l| l.loss.to_bits()).collect()
+}
+
+fn grad_norm_bits(r: &TrainReport) -> Vec<u32> {
+    r.logs.iter().map(|l| l.grad_norm.to_bits()).collect()
+}
+
+fn scale_bits(r: &TrainReport) -> Vec<u32> {
+    r.logs.iter().map(|l| l.loss_scale.to_bits()).collect()
+}
+
+/// Every *pinned* counter: payload/round/residency counters must be
+/// unaffected by tracing (the `*_ns` timing counters may drift — they
+/// measure wall time, which tracing legitimately perturbs within the
+/// overhead budget).
+fn pinned_counters(r: &TrainReport) -> Vec<u64> {
+    vec![
+        r.comm_bytes,
+        r.tp_ar_bytes,
+        r.tp_ar_rounds,
+        r.dp_bucket_rounds,
+        r.dp_bucket_payload_bytes,
+        r.dp_param_ag_bytes,
+        r.pp_p2p_payload_bytes,
+        r.dp_bucket_intra_bytes,
+        r.dp_bucket_inter_bytes,
+        r.dp_param_ag_intra_bytes,
+        r.dp_param_ag_inter_bytes,
+        r.pp_p2p_intra_bytes,
+        r.pp_p2p_inter_bytes,
+        r.moe_a2a_rounds,
+        r.moe_a2a_payload_bytes,
+        r.moe_a2a_intra_bytes,
+        r.moe_a2a_inter_bytes,
+        r.moe_dropped_tokens,
+        r.zero3_peak_gathered_floats,
+    ]
+}
+
+/// Run `base` untraced and traced (both exports armed), assert the
+/// observational-invisibility contract, and hand back the traced report
+/// plus the export paths for structural checks.
+fn run_traced_vs_untraced(base: EngineConfig, tag: &str) -> (TrainReport, PathBuf, PathBuf) {
+    let off = train(&base).expect("untraced run");
+
+    let dir = out_dir(tag);
+    let trace_path = dir.join("trace.json");
+    let jsonl_path = dir.join("metrics.jsonl");
+    let mut traced_cfg = base;
+    traced_cfg.trace_out = Some(trace_path.clone());
+    traced_cfg.metrics_jsonl = Some(jsonl_path.clone());
+    let on = train(&traced_cfg).expect("traced run");
+
+    assert_eq!(loss_bits(&off), loss_bits(&on), "{tag}: losses must be bitwise");
+    assert_eq!(
+        grad_norm_bits(&off),
+        grad_norm_bits(&on),
+        "{tag}: grad norms must be bitwise"
+    );
+    assert_eq!(scale_bits(&off), scale_bits(&on), "{tag}: loss scales must be bitwise");
+    assert_eq!(
+        pinned_counters(&off),
+        pinned_counters(&on),
+        "{tag}: pinned counters must be identical"
+    );
+    assert!(off.trace_summary.is_none(), "{tag}: untraced run must record nothing");
+    let s = on.trace_summary.as_ref().expect("traced run records a summary");
+    assert_eq!(s.ranks, on.world_size, "{tag}: every rank flushes a timeline");
+    assert_eq!(s.steps, 20, "{tag}: every step is marked");
+    (on, trace_path, jsonl_path)
+}
+
+/// Span-accounting completeness: Σ category self time + idle closes
+/// against wall within 1%, and no rank's busy time overruns its wall.
+fn assert_accounting_closes(r: &TrainReport, tag: &str) {
+    let s = r.trace_summary.as_ref().unwrap();
+    assert!(s.wall_s > 0.0, "{tag}: wall must be positive");
+    let cat_total: f64 = s.cat_s.iter().sum();
+    let closed = cat_total + s.idle_s;
+    let err = (closed - s.wall_s).abs() / s.wall_s;
+    assert!(
+        err < 0.01,
+        "{tag}: category+idle must close against wall within 1%: \
+         cats {cat_total:.6}s + idle {:.6}s vs wall {:.6}s (err {err:.4})",
+        s.idle_s,
+        s.wall_s
+    );
+    assert!(
+        s.max_busy_over_wall <= 1.01,
+        "{tag}: busy time must not overrun step wall by >1% (got {:.4})",
+        s.max_busy_over_wall
+    );
+}
+
+/// Structural validation of the Chrome Trace Event Format export.
+fn assert_chrome_trace_valid(path: &PathBuf, world: usize, tag: &str) {
+    let text = std::fs::read_to_string(path).expect("trace file");
+    let root = Json::parse(&text).expect("trace must be valid JSON");
+    let events = root
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "{tag}: trace must contain events");
+
+    let mut pids: BTreeSet<u64> = BTreeSet::new();
+    // per-(pid, tid) lane: open-span depth and last-seen timestamp
+    let mut depth: BTreeMap<(u64, u64), i64> = BTreeMap::new();
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut cats: BTreeSet<String> = BTreeSet::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).expect("every event has ph");
+        if ph != "B" && ph != "E" {
+            continue; // metadata (M) and instants (i) don't nest
+        }
+        let pid = e.get("pid").and_then(|p| p.as_u64()).expect("pid");
+        let tid = e.get("tid").and_then(|t| t.as_u64()).expect("tid");
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("ts");
+        pids.insert(pid);
+        let lane = (pid, tid);
+        let last = last_ts.entry(lane).or_insert(f64::NEG_INFINITY);
+        assert!(
+            ts >= *last,
+            "{tag}: pid {pid} tid {tid}: timestamps must be non-decreasing \
+             ({ts} after {last})"
+        );
+        *last = ts;
+        let d = depth.entry(lane).or_insert(0);
+        *d += if ph == "B" { 1 } else { -1 };
+        assert!(*d >= 0, "{tag}: pid {pid} tid {tid}: E without matching B");
+        if ph == "B" {
+            if let Some(c) = e.get("cat").and_then(|c| c.as_str()) {
+                cats.insert(c.to_string());
+            }
+        }
+    }
+    for (lane, d) in &depth {
+        assert_eq!(*d, 0, "{tag}: lane {lane:?} must close every B with an E");
+    }
+    let expect: BTreeSet<u64> = (0..world as u64).collect();
+    assert_eq!(pids, expect, "{tag}: one pid per worker world rank");
+    for want in ["compute", "dp_sync", "optimizer"] {
+        assert!(cats.contains(want), "{tag}: category {want:?} must appear, got {cats:?}");
+    }
+}
+
+/// JSONL stream: one line per logged step, scalars round-trip, and the
+/// counter deltas telescope to exactly the TrainReport totals.
+fn assert_jsonl_consistent(path: &PathBuf, r: &TrainReport, tag: &str) {
+    let text = std::fs::read_to_string(path).expect("metrics file");
+    let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), r.logs.len(), "{tag}: one JSONL line per logged step");
+
+    let mut sums: BTreeMap<String, u64> = BTreeMap::new();
+    let mut peak = 0u64;
+    for (line, log) in lines.iter().zip(&r.logs) {
+        let v = Json::parse(line).expect("each JSONL line is one JSON object");
+        assert_eq!(
+            v.get("step").and_then(|s| s.as_u64()),
+            Some(log.step as u64),
+            "{tag}: step ids line up"
+        );
+        // f32 -> f64 is exact and the writer prints shortest-roundtrip
+        // f64, so finite scalars compare exactly (non-finite -> null)
+        if log.loss.is_finite() {
+            assert_eq!(
+                v.get("loss").and_then(|l| l.as_f64()),
+                Some(log.loss as f64),
+                "{tag}: loss round-trips"
+            );
+        }
+        assert_eq!(
+            v.get("skipped").and_then(|s| s.as_bool()),
+            Some(log.skipped),
+            "{tag}: skip flag round-trips"
+        );
+        let trace = v.get("trace").expect("per-step trace block");
+        assert!(
+            trace.get("cat_ms").and_then(|c| c.get("compute")).is_some(),
+            "{tag}: cat_ms carries the compute column"
+        );
+        let counters = v.get("counters").expect("per-step counter deltas");
+        if let Json::Obj(map) = counters {
+            for (k, val) in map {
+                let n = val.as_u64().expect("counter values are u64");
+                if k.as_str() == "zero3_peak_gathered_floats" {
+                    peak = peak.max(n); // absolute high-water mark
+                } else {
+                    *sums.entry(k.clone()).or_insert(0) += n;
+                }
+            }
+        } else {
+            panic!("{tag}: counters must be an object");
+        }
+    }
+    // telescoped deltas == TrainReport totals, exactly
+    let total = |k: &str| sums.get(k).copied().unwrap_or(0);
+    assert_eq!(total("comm_bytes"), r.comm_bytes, "{tag}: comm_bytes telescopes");
+    assert_eq!(total("tp_ar_bytes"), r.tp_ar_bytes, "{tag}: tp_ar_bytes telescopes");
+    assert_eq!(total("tp_ar_rounds"), r.tp_ar_rounds, "{tag}: tp_ar_rounds telescopes");
+    assert_eq!(
+        total("dp_bucket_payload_bytes"),
+        r.dp_bucket_payload_bytes,
+        "{tag}: dp bucket payload telescopes"
+    );
+    assert_eq!(
+        total("dp_bucket_rounds"),
+        r.dp_bucket_rounds,
+        "{tag}: dp bucket rounds telescope"
+    );
+    assert_eq!(
+        total("dp_param_ag_bytes"),
+        r.dp_param_ag_bytes,
+        "{tag}: param all-gather bytes telescope"
+    );
+    assert_eq!(
+        total("moe_a2a_payload_bytes"),
+        r.moe_a2a_payload_bytes,
+        "{tag}: moe a2a payload telescopes"
+    );
+    assert_eq!(
+        total("moe_dropped_tokens"),
+        r.moe_dropped_tokens,
+        "{tag}: moe drop counter telescopes"
+    );
+    assert_eq!(
+        peak, r.zero3_peak_gathered_floats,
+        "{tag}: zero3 peak is the max over lines"
+    );
+}
+
+// =========================================================================
+// tracing on ≡ off, bitwise — dense dp2 × tp2, ZeRO-3, bf16
+// =========================================================================
+
+#[test]
+fn tracing_is_observationally_invisible_dense_zero3_bf16() {
+    let (on, trace_path, jsonl_path) = run_traced_vs_untraced(
+        cfg(DENSE, 2, 2, 1, ShardingStage::Parameters, Dtype::Bf16),
+        "dense",
+    );
+    assert_accounting_closes(&on, "dense");
+    assert_chrome_trace_valid(&trace_path, on.world_size, "dense");
+    assert_jsonl_consistent(&jsonl_path, &on, "dense");
+    // zero-3 must surface gather spans, tp2 the all-reduce spans
+    let s = on.trace_summary.as_ref().unwrap();
+    use frontier_llm::trace::Category;
+    assert!(s.seconds(Category::ZeroGather) > 0.0, "zero-3 records gather waits");
+    assert!(s.seconds(Category::TpComm) > 0.0, "tp2 records all-reduce spans");
+    assert!(s.seconds(Category::Compute) > 0.0, "compute dominates somewhere");
+    std::fs::remove_dir_all(trace_path.parent().unwrap()).ok();
+}
+
+// =========================================================================
+// tracing on ≡ off, bitwise — MoE dp2 × ep2 over the a2a wire
+// =========================================================================
+
+#[test]
+fn tracing_is_observationally_invisible_moe_ep2() {
+    let (on, trace_path, jsonl_path) = run_traced_vs_untraced(
+        cfg(MOE4, 1, 2, 2, ShardingStage::OptimizerStates, Dtype::F32),
+        "moe",
+    );
+    assert!(on.moe_a2a_rounds > 0, "ep2 must route tokens over the wire");
+    assert_accounting_closes(&on, "moe");
+    assert_chrome_trace_valid(&trace_path, on.world_size, "moe");
+    assert_jsonl_consistent(&jsonl_path, &on, "moe");
+    let s = on.trace_summary.as_ref().unwrap();
+    assert!(
+        s.seconds(frontier_llm::trace::Category::MoeA2a) > 0.0,
+        "a2a waits must be spanned"
+    );
+    std::fs::remove_dir_all(trace_path.parent().unwrap()).ok();
+}
+
+// =========================================================================
+// trace-derived overlap agrees with the engine's timer classification
+// =========================================================================
+
+#[test]
+fn trace_dp_overlap_matches_engine_classification() {
+    // overlapped run: the launch spans are tagged hidden, so the trace's
+    // dp_overlap and the engine's hidden/exposed-timer fraction measure
+    // the same quantity from independent instrumentation
+    let mut c = cfg(DENSE, 1, 2, 1, ShardingStage::OptimizerStates, Dtype::F32);
+    let dir = out_dir("overlap");
+    c.trace_out = Some(dir.join("trace.json"));
+    let on = train(&c).expect("traced run");
+    let s = on.trace_summary.as_ref().unwrap();
+    let engine = on.dp_overlap_fraction();
+    assert!(
+        (s.dp_overlap - engine).abs() < 0.35,
+        "trace-classified dp overlap ({:.3}) must track the engine's ({engine:.3})",
+        s.dp_overlap
+    );
+
+    // sequential sync: nothing launches hidden, both classifications
+    // must agree that the overlap is exactly zero
+    let mut seq = cfg(DENSE, 1, 2, 1, ShardingStage::OptimizerStates, Dtype::F32);
+    seq.overlap_grad_sync = false;
+    seq.trace_out = Some(dir.join("trace_seq.json"));
+    let off = train(&seq).expect("sequential traced run");
+    let sq = off.trace_summary.as_ref().unwrap();
+    assert_eq!(sq.dp_overlap, 0.0, "sequential sync classifies as fully exposed");
+    assert_eq!(off.dp_overlap_fraction(), 0.0, "engine agrees: nothing hidden");
+    std::fs::remove_dir_all(&dir).ok();
+}
